@@ -1,0 +1,69 @@
+//! Dataflow explorer: how does the hybrid-stationary gain scale with the
+//! number of macros? (The paper's Fig. 4 at 2 macros plus the "further
+//! gains with more macros" observation of §II-B.)
+//!
+//! ```sh
+//! cargo run --release --example dataflow_explorer
+//! ```
+
+use flexspim::dataflow::{Mapper, Policy};
+use flexspim::energy::SystemEnergyModel;
+use flexspim::snn::network::scnn_dvs_gesture;
+
+fn main() {
+    let net = scnn_dvs_gesture();
+    println!(
+        "workload: {} ({} layers, {} kB weights, {} kB membrane state)\n",
+        net.name,
+        net.layers.len(),
+        net.total_weight_bits() / 8192,
+        net.total_vmem_bits() / 8192
+    );
+
+    println!("avoided operand traffic per timestep (bits):");
+    print!("{:>8}", "macros");
+    for p in Policy::ALL {
+        print!("{:>12}", p.label());
+    }
+    println!("{:>10}", "HS gain");
+    for macros in [1usize, 2, 4, 8, 16, 32] {
+        let mapper = Mapper::flexspim(macros);
+        print!("{macros:>8}");
+        let mut ws = 0u64;
+        let mut best = 0u64;
+        for p in Policy::ALL {
+            let m = mapper.map(&net, p);
+            let avoided = m.avoided_traffic_bits(&net);
+            if p == Policy::WsOnly {
+                ws = avoided;
+            }
+            best = best.max(avoided);
+            print!("{avoided:>12}");
+        }
+        println!("{:>9.1} %", 100.0 * (best as f64 / ws.max(1) as f64 - 1.0));
+    }
+
+    // Energy view at 95 % sparsity: what the avoided traffic buys.
+    println!("\nmodeled energy per timestep at 95 % input sparsity (µJ):");
+    print!("{:>8}", "macros");
+    for p in Policy::ALL {
+        print!("{:>12}", p.label());
+    }
+    println!();
+    for macros in [1usize, 2, 4, 8, 16, 32] {
+        let mapper = Mapper::flexspim(macros);
+        let sys = SystemEnergyModel::flexspim(macros);
+        print!("{macros:>8}");
+        for p in Policy::ALL {
+            let m = mapper.map(&net, p);
+            let e = sys.evaluate(&net, &m, 0.95, None).total_pj() * 1e-6;
+            print!("{e:>12.3}");
+        }
+        println!();
+    }
+
+    // Per-layer detail at the paper's 2-macro point.
+    println!("\nper-layer mapping detail (2 macros, HS-min):");
+    let m = Mapper::flexspim(2).map(&net, Policy::HsMin);
+    println!("{}", m.table(&net));
+}

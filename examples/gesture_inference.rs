@@ -1,0 +1,72 @@
+//! End-to-end gesture inference on the full three-layer stack.
+//!
+//! Events (synthetic DVS) → per-timestep spike frames → the AOT-compiled
+//! SCNN running under the PJRT runtime → predictions, with energy and
+//! latency from the calibrated models. Uses trained weights if
+//! `artifacts/weights_trained.bin` exists (run `examples/train_snn` or
+//! `flexspim train` first), otherwise the shipped random-init weights.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example gesture_inference -- [samples-per-class] [seed]
+//! ```
+
+use anyhow::Result;
+use flexspim::coordinator::Coordinator;
+use flexspim::dataflow::Policy;
+use flexspim::events::{GestureClass, GestureGenerator};
+use flexspim::runtime::{artifacts_dir, Runtime, ScnnRunner, WeightFile};
+use flexspim::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let samples: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2);
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(7);
+
+    let rt = Runtime::cpu()?;
+    let dir = artifacts_dir();
+    println!("PJRT platform: {} | artifacts: {}", rt.platform(), dir.display());
+
+    // Prefer trained weights when available.
+    let trained = dir.join("weights_trained.bin");
+    let runner = if trained.exists() {
+        println!("using trained weights: {}", trained.display());
+        let exe = rt.load_hlo(&dir.join("scnn_step.hlo.txt"))?;
+        ScnnRunner::new(exe, WeightFile::load(&trained)?)?
+    } else {
+        println!("using shipped (untrained) weights — accuracy will be chance;");
+        println!("run `cargo run --release --example train_snn` first for a real model");
+        ScnnRunner::load(&rt, &dir)?
+    };
+
+    let mut coord = Coordinator::with_runner(runner, 16, Policy::HsOpt)?;
+
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(seed);
+    let data = gen.dataset(samples, &mut rng);
+    println!("\nrunning {} samples ({} classes × {samples}) ...\n", data.len(), 10);
+
+    let mut confusion = vec![vec![0u32; 10]; 10];
+    let mut total = flexspim::coordinator::RunMetrics::default();
+    for (stream, label) in &data {
+        let r = coord.run_sample(stream, Some(*label))?;
+        confusion[*label][r.prediction] += 1;
+        total.merge(&r.metrics);
+    }
+
+    println!("{}", total.report());
+    println!("confusion matrix (rows = truth):");
+    print!("      ");
+    for c in 0..10 {
+        print!("{c:>4}");
+    }
+    println!();
+    for (label, row) in confusion.iter().enumerate() {
+        print!("{:>5} ", GestureClass::from_label(label).label());
+        for &v in row {
+            print!("{v:>4}");
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Macro microbenchmark: sweep resolutions and operand shapes on the
+//! bit-accurate simulator, reporting cycles, energy and throughput — the
+//! numbers behind Fig. 7(a) and Table I, from the macro's point of view.
+//!
+//! ```sh
+//! cargo run --release --example macro_microbench
+//! ```
+
+use flexspim::cim::ops::OperatingPoint;
+use flexspim::cim::{CimMacro, MacroConfig};
+use flexspim::energy::MacroEnergyModel;
+use flexspim::snn::quant::{max_val, min_val};
+use flexspim::util::rng::Rng;
+
+fn bench_config(w_bits: u32, p_bits: u32, n_c: u32, neurons: usize) -> Option<(f64, f64, u64)> {
+    let cfg = MacroConfig::flexspim(w_bits, p_bits, n_c, 1, neurons);
+    cfg.validate().ok()?;
+    let mut mac = CimMacro::new(cfg).ok()?;
+    let mut rng = Rng::new(99);
+    for n in 0..neurons {
+        mac.load_weight(n, 0, rng.range_i64(min_val(w_bits), max_val(w_bits)));
+        mac.load_vmem(n, rng.range_i64(min_val(p_bits), max_val(p_bits)));
+    }
+    mac.reset_counters();
+    for _ in 0..8 {
+        mac.cim_accumulate(0, None);
+    }
+    let model = MacroEnergyModel::nominal();
+    let c = mac.counters();
+    let pj_per_sop = model.pj_per_sop(c);
+    let op = OperatingPoint::nominal();
+    let gsops = cfg.peak_sops(op.system_clock_hz) / 1e9;
+    Some((pj_per_sop, gsops, c.cim_cycles))
+}
+
+fn main() {
+    println!("== resolution sweep (bit-serial N_C = 1, 256 neurons) ==");
+    println!("{:>6} {:>6} {:>10} {:>10} {:>8}", "w", "p", "pJ/SOP", "GSOPS", "cycles");
+    for (w, p) in [(1u32, 2u32), (2, 4), (4, 8), (6, 11), (8, 16), (12, 24), (16, 32)] {
+        if let Some((pj, gsops, cyc)) = bench_config(w, p, 1, 256) {
+            println!("{w:>6} {p:>6} {pj:>10.3} {gsops:>10.2} {cyc:>8}");
+        }
+    }
+
+    println!("\n== shape sweep (8b/16b, 32 output channels) ==");
+    println!("{:>8} {:>6} {:>10} {:>10}", "shape", "cols", "pJ/SOP", "GSOPS");
+    for n_c in [1u32, 2, 4, 8, 16] {
+        let neurons = (256 / n_c as usize).min(32);
+        if let Some((pj, gsops, _)) = bench_config(8, 16, n_c, neurons) {
+            println!(
+                "{:>5}x{:<2} {:>6} {:>10.3} {:>10.2}",
+                16u32.div_ceil(n_c),
+                n_c,
+                neurons * n_c as usize,
+                pj,
+                gsops
+            );
+        }
+    }
+
+    println!("\n== voltage scaling (8b/16b bit-serial) ==");
+    println!("{:>6} {:>10} {:>10} {:>10}", "vdd", "MHz", "pJ/SOP", "mW");
+    for vdd in [0.9, 1.0, 1.1] {
+        let op = OperatingPoint::at_vdd(vdd);
+        let model = MacroEnergyModel::at_vdd(vdd);
+        let e = model.sop_pj_analytic(8, 16, 1, 256, 256).total_pj();
+        let cfg = MacroConfig::flexspim(8, 16, 1, 1, 256);
+        let sops = cfg.peak_sops(op.system_clock_hz);
+        println!(
+            "{vdd:>6.1} {:>10.1} {e:>10.3} {:>10.2}",
+            op.system_clock_hz / 1e6,
+            sops * e * 1e-12 * 1e3
+        );
+    }
+    println!("\npaper anchors: 1.2-2.5 GSOPS, 5.7-7.2 pJ/SOP, 6.8-17.9 mW");
+}

@@ -1,0 +1,107 @@
+//! End-to-end training driver — the repo's E2E validation run.
+//!
+//! The Rust coordinator drives the AOT-compiled surrogate-gradient train
+//! step (`train_step.hlo.txt`) over synthetic DVS gesture batches, logs
+//! the loss curve, saves the trained weights, and finally evaluates the
+//! *quantized integer* model through the inference path (the
+//! silicon-faithful semantics). Python is nowhere on this path.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example train_snn -- [steps] [lr] [eval-samples]
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::io::Write;
+
+use anyhow::Result;
+use flexspim::coordinator::Coordinator;
+use flexspim::dataflow::Policy;
+use flexspim::events::GestureGenerator;
+use flexspim::runtime::trainer::synth_batch;
+use flexspim::runtime::{artifacts_dir, Runtime, ScnnRunner, TrainRunner};
+use flexspim::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let lr: f32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.01);
+    let eval_samples: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    let rt = Runtime::cpu()?;
+    let dir = artifacts_dir();
+    println!("PJRT platform: {} | artifacts: {}", rt.platform(), dir.display());
+    let mut trainer = TrainRunner::load(&rt, &dir)?;
+
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(2024);
+    let mut loss_log = Vec::with_capacity(steps);
+    let t0 = std::time::Instant::now();
+    println!("training {steps} steps, batch 4 × 16 timesteps, lr {lr} ...");
+    for step in 0..steps {
+        let (frames, labels) = synth_batch(&gen, &mut rng);
+        let m = trainer.step(&frames, &labels, lr)?;
+        loss_log.push((step, m.loss, m.accuracy));
+        if step % 10 == 0 || step + 1 == steps {
+            println!(
+                "step {step:4}  loss {:8.4}  batch-acc {:4.2}  ({:.1} s elapsed)",
+                m.loss,
+                m.accuracy,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+
+    // Persist the loss curve and trained weights.
+    let curve_path = dir.join("train_loss.csv");
+    let mut f = std::fs::File::create(&curve_path)?;
+    writeln!(f, "step,loss,batch_accuracy")?;
+    for (s, l, a) in &loss_log {
+        writeln!(f, "{s},{l},{a}")?;
+    }
+    println!("loss curve -> {}", curve_path.display());
+
+    let wf = trainer.to_weight_file();
+    let wpath = dir.join("weights_trained.bin");
+    save_weight_file(&wf, &wpath)?;
+    println!("trained weights -> {}", wpath.display());
+
+    // Loss must have gone down over the run (early mean vs late mean).
+    let k = (steps / 5).max(1);
+    let early: f32 = loss_log[..k].iter().map(|(_, l, _)| l).sum::<f32>() / k as f32;
+    let late: f32 =
+        loss_log[steps - k..].iter().map(|(_, l, _)| l).sum::<f32>() / k as f32;
+    println!("mean loss: first {k} steps {early:.3} -> last {k} steps {late:.3}");
+
+    // --- Integer-model evaluation through the inference path.
+    println!("\nevaluating quantized integer model ({eval_samples} samples/class) ...");
+    let exe = rt.load_hlo(&dir.join("scnn_step.hlo.txt"))?;
+    let runner = ScnnRunner::new(exe, wf)?;
+    let mut coord = Coordinator::with_runner(runner, 16, Policy::HsOpt)?;
+    let mut eval_rng = Rng::new(777);
+    let data = gen.dataset(eval_samples, &mut eval_rng);
+    let metrics = coord.run_dataset(&data)?;
+    println!("{}", metrics.report());
+    Ok(())
+}
+
+fn save_weight_file(wf: &flexspim::runtime::WeightFile, path: &std::path::Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(b"FSPW")?;
+    f.write_all(&(wf.layers.len() as i32).to_le_bytes())?;
+    for l in &wf.layers {
+        f.write_all(&(l.name.len() as i32).to_le_bytes())?;
+        f.write_all(l.name.as_bytes())?;
+        f.write_all(&(l.w_bits as i32).to_le_bytes())?;
+        f.write_all(&(l.p_bits as i32).to_le_bytes())?;
+        f.write_all(&(l.dims.len() as i32).to_le_bytes())?;
+        for &d in &l.dims {
+            f.write_all(&(d as i32).to_le_bytes())?;
+        }
+        for &v in &l.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,220 @@
+"""AOT compiler: lower the L2 model to HLO-text artifacts for the Rust
+runtime.
+
+HLO *text* is the interchange format (NOT `.serialize()`): jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all under artifacts/):
+  scnn_step.hlo.txt       full-network single-timestep integer inference
+                          (runtime-dynamic quantization parameters)
+  layer_<name>.hlo.txt    per-layer fixed-resolution IF steps (Pallas
+                          full-IF kernels) for the per-layer pipeline
+  train_step.hlo.txt      surrogate-gradient SGD step (B=4, T=16 BPTT)
+  weights.bin             float32 weights (random-init; retrain with
+                          `python -m compile.train` or the Rust e2e driver)
+  golden/*.txt            golden vectors for Rust cross-validation
+
+Python runs only here, at build time; the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+from .kernels import cim_kernel, ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_scnn_step(outdir: str) -> str:
+    """Lower the full-network timestep with dynamic qparams."""
+    n = len(model.LAYERS)
+    args = [spec(model.INPUT_SHAPE), spec((n, 3))]
+    args += [spec(model.weight_shape(k, p)) for (_, k, p, _) in model.LAYERS]
+    args += [spec(model.vmem_shape(k, p)) for (_, k, p, _) in model.LAYERS]
+    lowered = jax.jit(model.scnn_step).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(outdir, "scnn_step.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def export_layer_steps(outdir: str) -> list:
+    """Per-layer fixed-resolution IF steps using the full-IF Pallas
+    kernels (static theta/p_bits baked per layer)."""
+    paths = []
+    for (name, kind, p, (w_bits, p_bits)) in model.LAYERS:
+        theta = max(((1 << (p_bits - 1)) - 1) // 2, 1)
+        if kind == "conv":
+            ic, oc, k, stride, pad, h, w = p
+
+            def step(wt, s, v, *, theta=theta, p_bits=p_bits,
+                     stride=stride, pad=pad):
+                return cim_kernel.if_step_conv(wt, s, v, theta, p_bits,
+                                               stride, pad)
+
+            args = [spec((oc, ic, k, k)), spec((ic, h, w)),
+                    spec(model.vmem_shape(kind, p))]
+        else:
+            i, o = p
+
+            def step(wt, s, v, *, theta=theta, p_bits=p_bits):
+                return cim_kernel.if_step_fc(wt, s, v, theta, p_bits)
+
+            args = [spec((o, i)), spec((i,)), spec((o,))]
+        lowered = jax.jit(step).lower(*args)
+        path = os.path.join(outdir, f"layer_{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        paths.append(path)
+    return paths
+
+
+def export_train_step(outdir: str, batch: int = 4) -> str:
+    """Lower one SGD training step (no donation in the AOT artifact —
+    the Rust driver keeps explicit buffers)."""
+
+    def step(params, momentum, frames, labels, lr):
+        (loss, acc), grads = jax.value_and_grad(
+            train.loss_fn, has_aux=True)(params, frames, labels)
+        beta = 0.9
+        new_m = [beta * m + g for m, g in zip(momentum, grads)]
+        new_p = [p - lr * m for p, m in zip(params, new_m)]
+        return (*new_p, *new_m, loss, acc)
+
+    pspecs = [spec(model.weight_shape(k, p), jnp.float32)
+              for (_, k, p, _) in model.LAYERS]
+    args = [pspecs, pspecs,
+            spec((batch, model.TIMESTEPS, *model.INPUT_SHAPE), jnp.float32),
+            spec((batch,), jnp.int32), spec((), jnp.float32)]
+    lowered = jax.jit(step).lower(*args)
+    path = os.path.join(outdir, "train_step.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return path
+
+
+def export_weights(outdir: str, seed: int = 0) -> str:
+    """Random-init float weights (deterministic); the trained set comes
+    from `compile.train` or the Rust training driver."""
+    path = os.path.join(outdir, "weights.bin")
+    params = model.init_params(seed)
+    train.save_weights(params, path)
+    return path
+
+
+def _write_ints(f, arr):
+    f.write(" ".join(str(int(x)) for x in np.asarray(arr).reshape(-1)))
+    f.write("\n")
+
+
+def export_golden(outdir: str, seed: int = 7) -> list:
+    """Golden vectors: (a) FC IF step cases for the Rust LIF/CIM
+    simulators, (b) a full-network 3-timestep trace for the runtime
+    integration test, (c) the quantization cross-check."""
+    gdir = os.path.join(outdir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    paths = []
+
+    # (a) FC IF step cases across resolutions.
+    path = os.path.join(gdir, "if_step_fc.txt")
+    with open(path, "w") as f:
+        cases = [(4, 9, 5, 8), (5, 10, 3, 17), (8, 16, 16, 16),
+                 (2, 6, 4, 4), (7, 12, 10, 33)]
+        f.write(f"{len(cases)}\n")
+        for (w_bits, p_bits, out_dim, in_dim) in cases:
+            lo, hi = ref.min_val(w_bits), ref.max_val(w_bits)
+            w = rng.integers(lo, hi + 1, (out_dim, in_dim))
+            s = rng.integers(0, 2, in_dim)
+            v = rng.integers(ref.min_val(p_bits), ref.max_val(p_bits) + 1,
+                             out_dim)
+            theta = max(ref.max_val(p_bits) // 2, 1)
+            spk, v2 = ref.if_step_fc(jnp.asarray(w, jnp.int32),
+                                     jnp.asarray(s, jnp.int32),
+                                     jnp.asarray(v, jnp.int32),
+                                     theta, p_bits)
+            f.write(f"{w_bits} {p_bits} {theta} {out_dim} {in_dim}\n")
+            for arr in (w, s, v, spk, v2):
+                _write_ints(f, arr)
+    paths.append(path)
+
+    # (b) Full-network trace: quantized weights from the shipped
+    # weights.bin, 3 timesteps, expected per-layer spike counts.
+    params = model.init_params(0)  # must match export_weights(seed=0)
+    int_ws, qparams = model.quantize_params(params)
+    frame = rng.integers(0, 2, model.INPUT_SHAPE) * (
+        rng.random(model.INPUT_SHAPE) < 0.08)
+    frame = jnp.asarray(frame, jnp.int32)
+    vmems = model.init_vmems()
+    path = os.path.join(gdir, "scnn_trace.txt")
+    with open(path, "w") as f:
+        f.write("3\n")
+        _write_ints(f, qparams)
+        _write_ints(f, frame)
+        for _ in range(3):
+            out = model.scnn_step(frame, qparams, *int_ws, *vmems)
+            spk_out, vmems, counts = out[0], list(out[1:-1]), out[-1]
+            _write_ints(f, spk_out)
+            _write_ints(f, counts)
+    paths.append(path)
+
+    # (c) Quantization cross-check: per-layer scale-derived theta and a
+    # weight checksum, to pin Rust's quantizer to Python's.
+    path = os.path.join(gdir, "quantize_check.txt")
+    with open(path, "w") as f:
+        f.write(f"{len(int_ws)}\n")
+        for wq, (m, half, theta) in zip(int_ws, np.asarray(qparams)):
+            a = np.asarray(wq, np.int64)
+            f.write(f"{m} {half} {theta} {a.sum()} "
+                    f"{np.abs(a).sum()} {a.min()} {a.max()}\n")
+    paths.append(path)
+    return paths
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--skip-train-step", action="store_true",
+                    help="skip the (large) train_step artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    print("lowering scnn_step ...")
+    print("  ", export_scnn_step(args.out))
+    print("lowering per-layer steps ...")
+    for p in export_layer_steps(args.out):
+        print("  ", p)
+    if not args.skip_train_step:
+        print("lowering train_step ...")
+        print("  ", export_train_step(args.out))
+    print("writing weights ...")
+    print("  ", export_weights(args.out))
+    print("writing golden vectors ...")
+    for p in export_golden(args.out):
+        print("  ", p)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

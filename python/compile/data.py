@@ -1,0 +1,109 @@
+"""Synthetic DVS-gesture data for build-time training and tests.
+
+NumPy port of the Rust generator (`rust/src/events/synthetic.rs`): ten
+parametric blob motions + Poisson noise, binned into per-timestep binary
+2-channel frames. The two implementations share the class definitions but
+are *not* bit-identical (independent RNGs); both produce the same
+classification task at the same sparsity band — the property the
+experiments need. See DESIGN.md §Substitutions.
+"""
+
+import numpy as np
+
+WIDTH = HEIGHT = 48
+TIMESTEPS = 16
+NUM_CLASSES = 10
+MOTION_STEPS = 64
+BLOB_RADIUS = 0.10
+EDGE_EVENT_PROB = 0.55
+NOISE_RATE = 2.0  # events / pixel / s
+DURATION_S = 0.1
+
+
+def _centers(cls: int, t: float):
+    """Blob center(s) at normalized time t, per class (mirrors Rust)."""
+    tau = 2 * np.pi
+    osc = np.sin(tau * 3.0 * t)
+    if cls == 0:   # hand clap
+        return [(0.5 - 0.25 * abs(osc), 0.5), (0.5 + 0.25 * abs(osc), 0.5)]
+    if cls == 1:   # right wave
+        return [(0.7 + 0.18 * osc, 0.35)]
+    if cls == 2:   # left wave
+        return [(0.3 + 0.18 * osc, 0.35)]
+    if cls in (3, 4, 5, 6):  # circles: right/left × cw/ccw
+        cx = 0.65 if cls in (3, 4) else 0.35
+        sign = -1.0 if cls in (3, 5) else 1.0
+        a = tau * 2.0 * t
+        return [(cx + 0.18 * np.cos(a), 0.5 + sign * 0.18 * np.sin(a))]
+    if cls == 7:   # arm roll
+        a = tau * t
+        return [(0.5 + 0.3 * np.cos(a), 0.5 + 0.3 * np.sin(a))]
+    if cls == 8:   # air drums
+        return [(0.35, 0.5 + 0.2 * osc), (0.65, 0.5 - 0.2 * osc)]
+    return [(0.5 + 0.15 * osc, 0.6 + 0.15 * osc)]  # air guitar
+
+
+def sample_frames(cls: int, rng: np.random.Generator,
+                  timesteps: int = TIMESTEPS) -> np.ndarray:
+    """One sample: float32[T, 2, H, W] binary frames."""
+    frames = np.zeros((timesteps, 2, HEIGHT, WIDTH), np.float32)
+    steps_per_frame = MOTION_STEPS // timesteps
+    prev = _centers(cls, 0.0)
+    yy, xx = np.mgrid[0:HEIGHT, 0:WIDTH]
+    nx_grid = (xx + 0.5) / WIDTH
+    ny_grid = (yy + 0.5) / HEIGHT
+    for step in range(1, MOTION_STEPS):
+        t = step / MOTION_STEPS
+        frame = min(step // steps_per_frame, timesteps - 1)
+        centers = _centers(cls, t)
+        for ci, (cx, cy) in enumerate(centers):
+            px, py = prev[min(ci, len(prev) - 1)]
+            dx, dy = cx - px, cy - py
+            speed = np.hypot(dx, dy)
+            if speed < 1e-9:
+                continue
+            nx = nx_grid - cx
+            ny = ny_grid - cy
+            d = np.hypot(nx, ny)
+            rim = (d <= BLOB_RADIUS) & (d >= BLOB_RADIUS * 0.55)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                along = np.where(rim, (nx * dx + ny * dy) / (d * speed), 0.0)
+            p_fire = EDGE_EVENT_PROB * np.abs(along) * rim
+            fired = rng.random(p_fire.shape) < p_fire
+            on = fired & (along > 0)
+            off = fired & (along <= 0)
+            frames[frame, 0][on] = 1.0
+            frames[frame, 1][off] = 1.0
+        prev = centers
+    # Background noise.
+    lam = NOISE_RATE * WIDTH * HEIGHT * DURATION_S
+    n_noise = rng.poisson(lam)
+    for _ in range(int(n_noise)):
+        frames[rng.integers(timesteps), rng.integers(2),
+               rng.integers(HEIGHT), rng.integers(WIDTH)] = 1.0
+    return frames
+
+
+def batch(batch_size: int, rng: np.random.Generator,
+          timesteps: int = TIMESTEPS):
+    """(frames float32[B, T, 2, H, W], labels int32[B]) with balanced-ish
+    random classes."""
+    labels = rng.integers(0, NUM_CLASSES, batch_size).astype(np.int32)
+    frames = np.stack([sample_frames(int(c), rng, timesteps) for c in labels])
+    return frames, labels
+
+
+def dataset(per_class: int, rng: np.random.Generator,
+            timesteps: int = TIMESTEPS):
+    """Balanced labeled dataset: (frames [N,T,2,H,W], labels [N])."""
+    frames, labels = [], []
+    for cls in range(NUM_CLASSES):
+        for _ in range(per_class):
+            frames.append(sample_frames(cls, rng, timesteps))
+            labels.append(cls)
+    return np.stack(frames), np.asarray(labels, np.int32)
+
+
+def sparsity(frames: np.ndarray) -> float:
+    """1 − active fraction over all (t, c, y, x) slots."""
+    return 1.0 - float(frames.mean())

@@ -1,0 +1,173 @@
+"""Layer-1 Pallas kernels: the quantized integrate-and-fire hot loop.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's compute
+hot-spot is the bit-serial XNOR/AND-accumulate of the CIM macro. On a
+TPU-shaped target the same insight — *operand layout is a free variable* —
+maps to: arbitrary (w_bits, p_bits) quantization folded into the kernel as
+wrap/threshold constants (resolution flexibility), BlockSpec tiling over
+output neurons ↔ the paper's column-parallel neuron mapping (operand
+shaping), and carrying the membrane state through the kernel so it stays
+resident (output stationarity).
+
+Kernels are lowered with `interpret=True`: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO the Rust
+runtime executes. Correctness target: bit-identical to `ref.py` for every
+shape and bit-width (python/tests/test_kernel.py, hypothesis).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Output-neuron tile: matches an MXU-friendly 128-lane block; on the real
+# chip this corresponds to the group of neurons mapped column-parallel in
+# one macro pass.
+NEURON_TILE = 128
+
+
+def _wrap(v, p_bits: int):
+    """Two's-complement wrap inside the kernel (int32 lanes)."""
+    m = np.int32(1 << p_bits)
+    half = np.int32(1 << (p_bits - 1))
+    return jnp.mod(v + half, m) - half
+
+
+def _if_tile_kernel(w_ref, s_ref, v_ref, spk_ref, v_out_ref, *,
+                    theta: int, p_bits: int):
+    """One output-neuron tile: accumulate + wrap + fire + reset.
+
+    w_ref: int32[TILE, IN]    weight tile (weight-stationary block)
+    s_ref: int32[IN]          input spike vector (broadcast)
+    v_ref: int32[TILE]        membrane potentials in
+    spk_ref / v_out_ref: outputs
+    """
+    acc = jnp.dot(w_ref[...], s_ref[...], preferred_element_type=jnp.int32)
+    v = _wrap(v_ref[...] + acc, p_bits)
+    spk = (v >= theta).astype(jnp.int32)
+    v_out_ref[...] = _wrap(v - spk * theta, p_bits)
+    spk_ref[...] = spk
+
+
+def if_step_fc(weights, spikes, vmem, theta: int, p_bits: int):
+    """Pallas FC IF step, tiled over output neurons.
+
+    Same contract as `ref.if_step_fc`; output dimension is padded to the
+    neuron tile internally (padding neurons carry zero weights and theta
+    can never fire them within one step if theta > 0).
+    """
+    out_dim, in_dim = weights.shape
+    assert spikes.shape == (in_dim,) and vmem.shape == (out_dim,)
+    assert theta > 0
+
+    pad = (-out_dim) % NEURON_TILE
+    if pad:
+        weights = jnp.pad(weights, ((0, pad), (0, 0)))
+        vmem = jnp.pad(vmem, (0, pad))
+    padded = out_dim + pad
+    grid = padded // NEURON_TILE
+
+    kernel = functools.partial(_if_tile_kernel, theta=theta, p_bits=p_bits)
+    spk, v = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((NEURON_TILE, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((in_dim,), lambda i: (0,)),
+            pl.BlockSpec((NEURON_TILE,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((NEURON_TILE,), lambda i: (i,)),
+            pl.BlockSpec((NEURON_TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), jnp.int32),
+            jax.ShapeDtypeStruct((padded,), jnp.int32),
+        ],
+        interpret=True,
+    )(weights, spikes, vmem)
+    return spk[:out_dim], v[:out_dim]
+
+
+def _if_conv_tile_kernel(w_ref, p_ref, v_ref, spk_ref, v_out_ref, *,
+                         theta: int, p_bits: int):
+    """One (output-channel-tile × position-block) conv IF tile.
+
+    w_ref: int32[CTILE, FAN]   weight matrix tile
+    p_ref: int32[FAN, PBLOCK]  im2col patch block
+    v_ref: int32[CTILE, PBLOCK]
+    """
+    acc = jnp.dot(w_ref[...], p_ref[...], preferred_element_type=jnp.int32)
+    v = _wrap(v_ref[...] + acc, p_bits)
+    spk = (v >= theta).astype(jnp.int32)
+    v_out_ref[...] = _wrap(v - spk * theta, p_bits)
+    spk_ref[...] = spk
+
+
+# Position-block: the second tiling axis (output pixels per macro pass).
+POS_BLOCK = 144
+
+
+def if_step_conv(weights, spikes, vmem, theta: int, p_bits: int,
+                 stride: int = 1, pad: int = 1):
+    """Pallas conv IF step via im2col + the tiled matmul kernel.
+
+    Same contract as `ref.if_step_conv`. The im2col unfold happens in jnp
+    (it lowers to cheap gathers/reshapes fused by XLA); the arithmetic
+    hot loop — the part the CIM macro implements — is the Pallas kernel.
+    """
+    from . import ref as _ref
+
+    out_ch, in_ch, k, _ = weights.shape
+    patches, (oh, ow) = _ref.im2col(spikes, k, stride, pad)  # [P, FAN]
+    n_pos = oh * ow
+    fan = in_ch * k * k
+    wmat = weights.reshape(out_ch, fan)
+    vflat = vmem.reshape(out_ch, n_pos)
+
+    # Pad both tile axes.
+    cpad = (-out_ch) % NEURON_TILE
+    ppad = (-n_pos) % POS_BLOCK
+    if cpad:
+        wmat = jnp.pad(wmat, ((0, cpad), (0, 0)))
+        vflat = jnp.pad(vflat, ((0, cpad), (0, 0)))
+    if ppad:
+        patches = jnp.pad(patches, ((0, ppad), (0, 0)))
+        vflat = jnp.pad(vflat, ((0, 0), (0, ppad)))
+    pc = out_ch + cpad
+    pp = n_pos + ppad
+
+    kernel = functools.partial(_if_conv_tile_kernel, theta=theta, p_bits=p_bits)
+    spk, v = pl.pallas_call(
+        kernel,
+        grid=(pc // NEURON_TILE, pp // POS_BLOCK),
+        in_specs=[
+            pl.BlockSpec((NEURON_TILE, fan), lambda i, j: (i, 0)),
+            pl.BlockSpec((fan, POS_BLOCK), lambda i, j: (0, j)),
+            pl.BlockSpec((NEURON_TILE, POS_BLOCK), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((NEURON_TILE, POS_BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((NEURON_TILE, POS_BLOCK), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pc, pp), jnp.int32),
+            jax.ShapeDtypeStruct((pc, pp), jnp.int32),
+        ],
+        interpret=True,
+    )(wmat, patches.T, vflat)
+    spk = spk[:out_ch, :n_pos].reshape(out_ch, oh, ow)
+    v = v[:out_ch, :n_pos].reshape(out_ch, oh, ow)
+    return spk, v
+
+
+def vmem_footprint_bytes(out_tile: int, in_dim: int, pos_block: int = 1) -> int:
+    """Estimated VMEM bytes for one kernel invocation's blocks (weights +
+    patches + state + outputs, int32). Used by the DESIGN.md §Perf roofline
+    estimate — interpret mode gives no real VMEM numbers."""
+    w = out_tile * in_dim
+    p = in_dim * pos_block
+    state = 3 * out_tile * pos_block
+    return 4 * (w + p + state)

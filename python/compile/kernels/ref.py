@@ -1,0 +1,128 @@
+"""Pure-jnp correctness oracle for the FlexSpIM compute path.
+
+Defines the *exact* integer semantics of the quantized integrate-and-fire
+(IF) update that the CIM macro executes bit-serially in silicon (and that
+the Rust simulator `rust/src/cim/macro_unit.rs` reproduces bit-for-bit):
+
+    v    <- wrap(v + W_q @ s, p_bits)        two's-complement wrap
+    spk  <- v >= theta
+    v    <- spk ? v - theta : v              reset by subtraction
+
+All tensors are int32; `wrap` emulates arbitrary-width two's-complement
+arithmetic so any `p_bits` in [1, 31] is exact. The Pallas kernels in
+`cim_kernel.py` must match this oracle on every shape/bit-width (pytest +
+hypothesis), and golden vectors exported from here must match the Rust
+fixed-point LIF (rust/tests/golden_vectors.rs).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def wrap(v, bits: int):
+    """Two's-complement wrap of int32 values into `bits` width."""
+    assert 1 <= bits <= 31, f"bits={bits} unsupported"
+    m = np.int32(1 << bits)
+    half = np.int32(1 << (bits - 1))
+    r = jnp.mod(v + half, m)
+    return r - half
+
+
+def min_val(bits: int) -> int:
+    """Smallest signed value at `bits` width."""
+    return -(1 << (bits - 1))
+
+
+def max_val(bits: int) -> int:
+    """Largest signed value at `bits` width."""
+    return (1 << (bits - 1)) - 1
+
+
+def if_step_fc(weights, spikes, vmem, theta: int, p_bits: int):
+    """One IF timestep of a fully-connected layer.
+
+    Args:
+      weights: int32[out, in] quantized synaptic weights (w_bits-ranged).
+      spikes:  int32[in] binary input spikes (0/1).
+      vmem:    int32[out] membrane potentials (p_bits-ranged).
+      theta:   firing threshold (int).
+      p_bits:  membrane-potential width.
+
+    Returns:
+      (spikes_out int32[out] 0/1, vmem' int32[out])
+    """
+    acc = weights @ spikes
+    v = wrap(vmem + acc, p_bits)
+    spk = (v >= theta).astype(jnp.int32)
+    v = wrap(v - spk * theta, p_bits)
+    return spk, v
+
+
+def if_step_conv(weights, spikes, vmem, theta: int, p_bits: int,
+                 stride: int = 1, pad: int = 1):
+    """One IF timestep of a 2-D convolutional layer.
+
+    Args:
+      weights: int32[out_ch, in_ch, k, k].
+      spikes:  int32[in_ch, h, w] binary input spikes.
+      vmem:    int32[out_ch, oh, ow].
+      theta, p_bits: as in `if_step_fc`.
+
+    Integer convolution is evaluated exactly via float32 lax.conv: all
+    accumulations stay far below 2^24 (fan-in ≤ 864 × |w| ≤ 2^12 for every
+    supported configuration), so the float path is bit-exact.
+
+    Returns:
+      (spikes_out int32[out_ch, oh, ow], vmem')
+    """
+    import jax.lax as lax
+
+    lhs = spikes[None].astype(jnp.float32)        # [1, in_ch, h, w]
+    rhs = weights.astype(jnp.float32)             # [out_ch, in_ch, k, k]
+    acc = lax.conv_general_dilated(
+        lhs, rhs,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0].astype(jnp.int32)                        # [out_ch, oh, ow]
+    v = wrap(vmem + acc, p_bits)
+    spk = (v >= theta).astype(jnp.int32)
+    v = wrap(v - spk * theta, p_bits)
+    return spk, v
+
+
+def im2col(spikes, k: int, stride: int, pad: int):
+    """Unfold int32[in_ch, h, w] into int32[oh*ow, in_ch*k*k] patches.
+
+    This is the layout the CIM controller streams to the macro: each
+    output position becomes one fan-in vector, so every conv layer reduces
+    to the same matvec-style IF update the macro executes. Fan-in order is
+    (dy, dx) fastest within channel-major blocks, matching
+    `weights.reshape(out_ch, in_ch * k * k)`.
+    """
+    c, h, w = spikes.shape
+    x = jnp.pad(spikes, ((0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            patch = x[:, dy:dy + stride * oh:stride, dx:dx + stride * ow:stride]
+            cols.append(patch.reshape(c, -1))     # [c, oh*ow]
+    stacked = jnp.stack(cols, axis=1)             # [c, k*k, oh*ow]
+    return stacked.reshape(c * k * k, -1).T, (oh, ow)
+
+
+def if_step_conv_im2col(weights, spikes, vmem, theta: int, p_bits: int,
+                        stride: int = 1, pad: int = 1):
+    """Conv IF step via im2col + matmul — bit-identical to `if_step_conv`,
+    and the reference for the Pallas conv path (same decomposition)."""
+    out_ch, in_ch, k, _ = weights.shape
+    patches, (oh, ow) = im2col(spikes, k, stride, pad)   # [P, c*k*k]
+    wmat = weights.reshape(out_ch, in_ch * k * k)        # [out_ch, c*k*k]
+    acc = patches @ wmat.T                               # [P, out_ch]
+    acc = acc.T.reshape(out_ch, oh, ow)
+    v = wrap(vmem + acc, p_bits)
+    spk = (v >= theta).astype(jnp.int32)
+    v = wrap(v - spk * theta, p_bits)
+    return spk, v

@@ -1,0 +1,319 @@
+"""Layer-2 JAX model: the paper's six-conv + three-FC spiking CNN.
+
+Mirrors `rust/src/snn/network.rs::scnn_dvs_gesture` exactly: input
+2×48×48 event frames, 10 output classes, per-layer FlexSpIM resolutions.
+
+Two execution paths:
+
+* **Integer inference path** (`scnn_step`): the AOT artifact the Rust
+  coordinator runs per timestep. Quantization parameters (modulus, half,
+  threshold per layer) are *runtime arguments*, mirroring the chip's
+  runtime-reconfigurable operand resolution — one compiled executable
+  serves every resolution in the Fig. 6 sweep. The synaptic accumulation
+  (the op the CIM array performs) runs in the Pallas kernels; the
+  wrap/fire/reset periphery (the PC circuits) is plain XLA.
+
+* **Float surrogate path** (`scnn_step_float`): differentiable version
+  for the surrogate-gradient trainer (train.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .kernels import ref
+from .kernels.cim_kernel import NEURON_TILE, POS_BLOCK
+
+# ---------------------------------------------------------------------------
+# Architecture description (must match rust/src/snn/network.rs).
+
+# (name, kind, params, (w_bits, p_bits))
+#   conv: (in_ch, out_ch, k, stride, pad, in_h, in_w)
+#   fc:   (in_dim, out_dim)
+LAYERS = [
+    ("L1", "conv", (2, 12, 3, 1, 1, 48, 48), (4, 9)),
+    ("L2", "conv", (12, 24, 3, 2, 1, 48, 48), (5, 10)),
+    ("L3", "conv", (24, 24, 3, 1, 1, 24, 24), (5, 10)),
+    ("L4", "conv", (24, 48, 3, 2, 1, 24, 24), (6, 11)),
+    ("L5", "conv", (48, 48, 3, 1, 1, 12, 12), (6, 11)),
+    ("L6", "conv", (48, 96, 3, 2, 1, 12, 12), (7, 12)),
+    ("FC1", "fc", (96 * 6 * 6, 256), (5, 10)),
+    ("FC2", "fc", (256, 128), (5, 10)),
+    ("FC3", "fc", (128, 10), (7, 12)),
+]
+
+TIMESTEPS = 16
+NUM_CLASSES = 10
+INPUT_SHAPE = (2, 48, 48)
+
+
+def conv_out_hw(params):
+    """(oh, ow) of a conv layer spec."""
+    _, _, k, stride, pad, h, w = params
+    return ((h + 2 * pad - k) // stride + 1, (w + 2 * pad - k) // stride + 1)
+
+
+def weight_shape(kind, params):
+    """Weight tensor shape for a layer."""
+    if kind == "conv":
+        ic, oc, k, *_ = params
+        return (oc, ic, k, k)
+    i, o = params
+    return (o, i)
+
+
+def vmem_shape(kind, params):
+    """Membrane tensor shape for a layer."""
+    if kind == "conv":
+        oc = params[1]
+        oh, ow = conv_out_hw(params)
+        return (oc, oh, ow)
+    return (params[1],)
+
+
+INIT_GAIN = 3.0  # keeps spike rates alive through all 9 layers at init
+                 # (He gain √2 starves layers ≥ L4 of spikes — measured
+                 # rates drop to 0 and gradients die; see test_train.py)
+
+
+def init_params(seed: int = 0):
+    """Spiking-aware float32 initialization: `N(0, (g/√fan_in)²)` with a
+    gain tuned so every layer fires at a healthy rate on DVS-sparse input."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for (_, kind, p, _) in LAYERS:
+        key, sub = jax.random.split(key)
+        shape = weight_shape(kind, p)
+        fan_in = int(np.prod(shape[1:]))
+        params.append(jax.random.normal(sub, shape, jnp.float32)
+                      * (INIT_GAIN / np.sqrt(fan_in)))
+    return params
+
+
+def _round_half_away(x):
+    """Round half away from zero — matches Rust's `f32::round`, unlike
+    numpy's banker's rounding; keeps the two quantizers bit-identical."""
+    return jnp.where(x >= 0, jnp.floor(x + 0.5), jnp.ceil(x - 0.5))
+
+
+def quantize_params(params, resolutions=None):
+    """Post-training quantization of float weights.
+
+    Per layer: scale s = max|W| / (2^(w_bits-1) - 1) in float32;
+    W_q = round_half_away(W / s); theta_q = round(1.0 / s) clamped to the
+    p_bits range (the float model's threshold is 1.0). All arithmetic is
+    float32 so the Rust quantizer (rust/src/runtime/weights.rs) produces
+    bit-identical integers. Returns (int_weights, qparams int32[n, 3])
+    where qparams rows are (modulus, half, theta) for the runtime-dynamic
+    wrap — resolution is a *runtime* parameter, like on the chip.
+    """
+    if resolutions is None:
+        resolutions = [r for (_, _, _, r) in LAYERS]
+    int_ws, qrows = [], []
+    for w, (w_bits, p_bits) in zip(params, resolutions):
+        max_q = (1 << (w_bits - 1)) - 1
+        maxabs = jnp.max(jnp.abs(w)).astype(jnp.float32)
+        scale = jnp.maximum(maxabs / np.float32(max(max_q, 1)),
+                            np.float32(1e-12))
+        wq = jnp.clip(_round_half_away(w / scale), -max_q - 1, max_q)
+        int_ws.append(wq.astype(jnp.int32))
+        theta = int(np.clip(np.float32(np.round(1.0 / float(scale))),
+                            1, (1 << (p_bits - 1)) - 1))
+        qrows.append((1 << p_bits, 1 << (p_bits - 1), theta))
+    return int_ws, jnp.asarray(qrows, jnp.int32)
+
+
+def init_vmems():
+    """Zeroed membrane state for all layers."""
+    return [jnp.zeros(vmem_shape(kind, p), jnp.int32) for (_, kind, p, _) in LAYERS]
+
+
+# ---------------------------------------------------------------------------
+# Pallas accumulate kernels (dynamic-resolution variants: the kernel does
+# the CIM-array accumulate; wrap/fire run in XLA with runtime qparams).
+
+
+def _acc_fc_kernel(w_ref, s_ref, out_ref):
+    out_ref[...] = jnp.dot(w_ref[...], s_ref[...],
+                           preferred_element_type=jnp.int32)
+
+
+def pallas_matvec(weights, spikes):
+    """int32[out, in] @ int32[in] via the tiled Pallas kernel."""
+    out_dim, in_dim = weights.shape
+    pad = (-out_dim) % NEURON_TILE
+    if pad:
+        weights = jnp.pad(weights, ((0, pad), (0, 0)))
+    padded = out_dim + pad
+    acc = pl.pallas_call(
+        _acc_fc_kernel,
+        grid=(padded // NEURON_TILE,),
+        in_specs=[
+            pl.BlockSpec((NEURON_TILE, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((in_dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((NEURON_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.int32),
+        interpret=True,
+    )(weights, spikes)
+    return acc[:out_dim]
+
+
+def _acc_mm_kernel(w_ref, p_ref, out_ref):
+    out_ref[...] = jnp.dot(w_ref[...], p_ref[...],
+                           preferred_element_type=jnp.int32)
+
+
+def pallas_matmul(wmat, patches_t):
+    """int32[out, fan] @ int32[fan, P] via the tiled Pallas kernel."""
+    out_ch, fan = wmat.shape
+    _, n_pos = patches_t.shape
+    cpad = (-out_ch) % NEURON_TILE
+    ppad = (-n_pos) % POS_BLOCK
+    if cpad:
+        wmat = jnp.pad(wmat, ((0, cpad), (0, 0)))
+    if ppad:
+        patches_t = jnp.pad(patches_t, ((0, 0), (0, ppad)))
+    pc, pp = out_ch + cpad, n_pos + ppad
+    acc = pl.pallas_call(
+        _acc_mm_kernel,
+        grid=(pc // NEURON_TILE, pp // POS_BLOCK),
+        in_specs=[
+            pl.BlockSpec((NEURON_TILE, fan), lambda i, j: (i, 0)),
+            pl.BlockSpec((fan, POS_BLOCK), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((NEURON_TILE, POS_BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pc, pp), jnp.int32),
+        interpret=True,
+    )(wmat, patches_t)
+    return acc[:out_ch, :n_pos]
+
+
+def _dyn_wrap(v, m, half):
+    """Runtime-modulus two's-complement wrap (m, half are traced i32)."""
+    return jnp.mod(v + half, m) - half
+
+
+def _dyn_fire(v, m, half, theta):
+    spk = (v >= theta).astype(jnp.int32)
+    return spk, _dyn_wrap(v - spk * theta, m, half)
+
+
+# ---------------------------------------------------------------------------
+# Integer inference step (the AOT artifact body).
+
+
+def scnn_step(spikes_in, qparams, *args):
+    """One SNN timestep over the whole network.
+
+    Args:
+      spikes_in: int32[2, 48, 48] binary input frame.
+      qparams:   int32[9, 3] rows of (modulus, half, theta) per layer.
+      *args:     9 int32 weight tensors followed by 9 int32 vmem tensors.
+
+    Returns:
+      (out_spikes int32[10], new vmems ×9, spike_counts int32[9])
+    """
+    n = len(LAYERS)
+    weights, vmems = list(args[:n]), list(args[n:])
+    x = spikes_in
+    new_vmems, counts = [], []
+    for li, (_, kind, p, _) in enumerate(LAYERS):
+        m, half, theta = qparams[li, 0], qparams[li, 1], qparams[li, 2]
+        if kind == "conv":
+            ic, oc, k, stride, pad, h, w = p
+            patches, (oh, ow) = ref.im2col(x, k, stride, pad)
+            wmat = weights[li].reshape(oc, ic * k * k)
+            acc = pallas_matmul(wmat, patches.T).reshape(oc, oh, ow)
+        else:
+            x = x.reshape(-1)
+            acc = pallas_matvec(weights[li], x)
+        v = _dyn_wrap(vmems[li] + acc, m, half)
+        spk, v = _dyn_fire(v, m, half, theta)
+        new_vmems.append(v)
+        counts.append(jnp.sum(spk))
+        x = spk
+    return (x, *new_vmems, jnp.stack(counts))
+
+
+def scnn_step_reference(spikes_in, qparams, weights, vmems):
+    """Pure-jnp oracle for `scnn_step` (no Pallas), for pytest."""
+    x = spikes_in
+    new_vmems, counts = [], []
+    for li, (_, kind, p, _) in enumerate(LAYERS):
+        m, half, theta = (int(qparams[li, 0]), int(qparams[li, 1]),
+                          int(qparams[li, 2]))
+        p_bits = int(np.log2(m))
+        if kind == "conv":
+            _, _, k, stride, pad, _, _ = p
+            spk, v = ref.if_step_conv(weights[li], x, vmems[li], theta,
+                                      p_bits, stride, pad)
+        else:
+            spk, v = ref.if_step_fc(weights[li], x.reshape(-1), vmems[li],
+                                    theta, p_bits)
+        new_vmems.append(v)
+        counts.append(int(jnp.sum(spk)))
+        x = spk
+    return x, new_vmems, counts
+
+
+# ---------------------------------------------------------------------------
+# Float surrogate path (training).
+
+SURROGATE_SLOPE = 4.0
+FLOAT_THETA = 1.0
+FLOAT_LEAK = 1.0  # pure IF (no leak), as in the paper's Fig. 1b
+
+
+@jax.custom_vjp
+def spike_surrogate(v):
+    """Heaviside spike with a fast-sigmoid surrogate gradient."""
+    return (v >= FLOAT_THETA).astype(jnp.float32)
+
+
+def _spike_fwd(v):
+    return spike_surrogate(v), v
+
+
+def _spike_bwd(v, g):
+    # Fast sigmoid derivative centered at theta.
+    x = SURROGATE_SLOPE * (v - FLOAT_THETA)
+    grad = SURROGATE_SLOPE / (1.0 + jnp.abs(x)) ** 2
+    return (g * grad,)
+
+
+spike_surrogate.defvjp(_spike_fwd, _spike_bwd)
+
+
+def scnn_step_float(params, spikes_in, vmems):
+    """Differentiable float IF step (same topology, float semantics)."""
+    import jax.lax as lax
+
+    x = spikes_in.astype(jnp.float32)
+    new_vmems = []
+    for li, (_, kind, p, _) in enumerate(LAYERS):
+        if kind == "conv":
+            _, _, k, stride, pad, _, _ = p
+            acc = lax.conv_general_dilated(
+                x[None], params[li],
+                window_strides=(stride, stride),
+                padding=[(pad, pad), (pad, pad)],
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )[0]
+        else:
+            acc = params[li] @ x.reshape(-1)
+        v = FLOAT_LEAK * vmems[li] + acc
+        spk = spike_surrogate(v)
+        v = v - spk * FLOAT_THETA
+        new_vmems.append(v)
+        x = spk
+    return x, new_vmems
+
+
+def init_vmems_float():
+    """Zeroed float membrane state."""
+    return [jnp.zeros(vmem_shape(kind, p), jnp.float32)
+            for (_, kind, p, _) in LAYERS]

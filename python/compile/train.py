@@ -1,0 +1,167 @@
+"""Surrogate-gradient trainer for the SCNN (build-time Python).
+
+Provides (a) the jittable `train_step` that aot.py lowers to HLO so the
+*Rust* coordinator can drive training end-to-end (examples/train_snn.rs),
+and (b) a convenience CLI (`python -m compile.train`) that trains float
+weights briefly and writes `artifacts/weights.bin` for the inference
+examples.
+
+Readout: logits = Σ_t spikes(FC3) + 0.1 · v_final(FC3) (rate coding with a
+membrane tiebreaker), cross-entropy loss, plain SGD with momentum.
+"""
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+
+def forward_logits(params, frames):
+    """Run T timesteps for one sample; frames float32[T, 2, H, W]."""
+    vmems = model.init_vmems_float()
+    rate = jnp.zeros(model.NUM_CLASSES, jnp.float32)
+    out_v = None
+    for t in range(frames.shape[0]):
+        spk, vmems = model.scnn_step_float(params, frames[t], vmems)
+        rate = rate + spk
+        out_v = vmems[-1]
+    return rate + 0.1 * out_v
+
+
+def loss_fn(params, frames_batch, labels):
+    """Mean cross-entropy over the batch; frames [B, T, 2, H, W]."""
+    logits = jax.vmap(lambda f: forward_logits(params, f))(frames_batch)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32),
+                               axis=1).mean()
+    acc = (jnp.argmax(logits, axis=1) == labels).mean()
+    return nll, acc
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def train_step(params, momentum, frames_batch, labels, lr):
+    """One SGD-with-momentum step. Returns (params', momentum', loss, acc).
+
+    This function is AOT-lowered to `artifacts/train_step.hlo.txt`; the
+    Rust driver supplies batches and the learning rate at runtime.
+    """
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, frames_batch, labels)
+    beta = 0.9
+    new_m = [beta * m + g for m, g in zip(momentum, grads)]
+    new_p = [p - lr * m for p, m in zip(params, new_m)]
+    return new_p, new_m, loss, acc
+
+
+def evaluate_float(params, frames, labels) -> float:
+    """Float-model accuracy on a labeled set."""
+    correct = 0
+    for f, l in zip(frames, labels):
+        logits = forward_logits(params, jnp.asarray(f))
+        correct += int(jnp.argmax(logits)) == int(l)
+    return correct / len(labels)
+
+
+def evaluate_int(params, frames, labels, resolutions=None) -> float:
+    """Quantized integer-model accuracy (the silicon-faithful path)."""
+    int_ws, qparams = model.quantize_params(params, resolutions)
+    correct = 0
+    for f, l in zip(frames, labels):
+        vmems = model.init_vmems()
+        rate = np.zeros(model.NUM_CLASSES, np.int64)
+        for t in range(f.shape[0]):
+            spk_in = jnp.asarray(f[t], jnp.int32)
+            out = model.scnn_step(spk_in, qparams, *int_ws, *vmems)
+            spk_out, vmems = out[0], list(out[1:-1])
+            rate += np.asarray(spk_out)
+        correct += int(np.argmax(rate)) == int(l)
+    return correct / len(labels)
+
+
+def train(steps: int = 60, batch_size: int = 4, lr: float = 0.05,
+          seed: int = 0, log_every: int = 10, progress=print):
+    """Train from scratch; returns (params, loss_history)."""
+    params = model.init_params(seed)
+    momentum = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(seed)
+    history = []
+    for step in range(steps):
+        frames, labels = data.batch(batch_size, rng)
+        params, momentum, loss, acc = train_step(
+            params, momentum, jnp.asarray(frames), jnp.asarray(labels),
+            jnp.float32(lr))
+        history.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            progress(f"step {step:4d}  loss {float(loss):.4f}  "
+                     f"batch-acc {float(acc):.2f}")
+    return params, history
+
+
+def save_weights(params, path: str):
+    """Serialize float32 weights: magic, n_layers, per-layer dims + data.
+
+    Little-endian custom format parsed by rust/src/runtime/weights.rs.
+    """
+    with open(path, "wb") as f:
+        f.write(b"FSPW")
+        f.write(np.int32(len(params)).tobytes())
+        for (name, kind, p, (w_bits, p_bits)), w in zip(model.LAYERS, params):
+            wn = np.asarray(w, np.float32)
+            nb = name.encode()
+            f.write(np.int32(len(nb)).tobytes())
+            f.write(nb)
+            f.write(np.int32(w_bits).tobytes())
+            f.write(np.int32(p_bits).tobytes())
+            f.write(np.int32(wn.ndim).tobytes())
+            for d in wn.shape:
+                f.write(np.int32(d).tobytes())
+            f.write(wn.tobytes())
+
+
+def load_weights(path: str):
+    """Inverse of `save_weights` (for tests)."""
+    import struct
+
+    with open(path, "rb") as f:
+        assert f.read(4) == b"FSPW"
+        (n,) = struct.unpack("<i", f.read(4))
+        params = []
+        for _ in range(n):
+            (ln,) = struct.unpack("<i", f.read(4))
+            f.read(ln)  # name
+            struct.unpack("<ii", f.read(8))  # w_bits, p_bits
+            (nd,) = struct.unpack("<i", f.read(4))
+            shape = struct.unpack(f"<{nd}i", f.read(4 * nd))
+            count = int(np.prod(shape))
+            w = np.frombuffer(f.read(4 * count), np.float32).reshape(shape)
+            params.append(jnp.asarray(w))
+        return params
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts/weights.bin")
+    ap.add_argument("--eval", type=int, default=0,
+                    help="samples/class for post-training int evaluation")
+    args = ap.parse_args()
+
+    params, _ = train(args.steps, args.batch, args.lr, args.seed)
+    save_weights(params, args.out)
+    print(f"wrote {args.out}")
+    if args.eval:
+        rng = np.random.default_rng(123)
+        frames, labels = data.dataset(args.eval, rng)
+        acc = evaluate_int(params, frames, labels)
+        print(f"int accuracy on {len(labels)} samples: {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

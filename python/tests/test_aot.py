@@ -1,0 +1,76 @@
+"""AOT export tests: HLO text artifacts parse and are well-formed."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def entry_param_count(text: str) -> int:
+    """Parameters of the ENTRY computation only (fusions/loops have their
+    own parameter lists)."""
+    count, in_entry = 0, False
+    for line in text.split("\n"):
+        if line.startswith("ENTRY"):
+            in_entry = True
+        elif in_entry and line.startswith("}"):
+            break
+        elif in_entry and "parameter(" in line:
+            count += 1
+    return count
+
+
+class TestHloText:
+    def test_scnn_step_lowering(self, tmp_path):
+        p = aot.export_scnn_step(str(tmp_path))
+        text = open(p).read()
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # 20 parameters: spikes, qparams, 9 weights, 9 vmems.
+        assert entry_param_count(text) == 20
+
+    def test_layer_step_lowering(self, tmp_path):
+        paths = aot.export_layer_steps(str(tmp_path))
+        assert len(paths) == 9
+        for p in paths:
+            text = open(p).read()
+            assert text.startswith("HloModule")
+            assert entry_param_count(text) == 3  # w, spikes, vmem
+
+    def test_golden_files(self, tmp_path):
+        paths = aot.export_golden(str(tmp_path))
+        fc = open(paths[0]).read().split("\n")
+        n_cases = int(fc[0])
+        assert n_cases >= 5
+        # Each case: header + 5 data lines.
+        assert len([l for l in fc if l.strip()]) == 1 + 6 * n_cases
+
+    def test_quantize_check_content(self, tmp_path):
+        paths = aot.export_golden(str(tmp_path))
+        lines = open(paths[2]).read().strip().split("\n")
+        assert int(lines[0]) == len(model.LAYERS)
+        for line in lines[1:]:
+            m, half, theta, *_ = (int(x) for x in line.split())
+            assert m == 2 * half and theta >= 1
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "scnn_step.hlo.txt")),
+                    reason="artifacts not built")
+class TestShippedArtifacts:
+    def test_all_artifacts_present(self):
+        expected = ["scnn_step.hlo.txt", "train_step.hlo.txt", "weights.bin"]
+        expected += [f"layer_{n}.hlo.txt" for (n, *_rest) in model.LAYERS]
+        for e in expected:
+            assert os.path.exists(os.path.join(ARTIFACTS, e)), e
+
+    def test_weights_bin_loads(self):
+        from compile import train as t
+
+        params = t.load_weights(os.path.join(ARTIFACTS, "weights.bin"))
+        assert len(params) == len(model.LAYERS)
+        for p, (_, kind, spec, _) in zip(params, model.LAYERS):
+            assert tuple(p.shape) == model.weight_shape(kind, spec)

@@ -1,0 +1,48 @@
+"""Synthetic gesture data tests: shapes, sparsity band, class structure."""
+
+import numpy as np
+
+from compile import data
+
+
+class TestFrames:
+    def test_shapes_and_binary(self):
+        rng = np.random.default_rng(0)
+        f = data.sample_frames(0, rng)
+        assert f.shape == (16, 2, 48, 48)
+        assert set(np.unique(f)).issubset({0.0, 1.0})
+
+    def test_sparsity_in_paper_band(self):
+        rng = np.random.default_rng(1)
+        for cls in range(data.NUM_CLASSES):
+            f = data.sample_frames(cls, rng)
+            s = data.sparsity(f)
+            assert 0.85 <= s <= 0.995, f"class {cls}: sparsity {s:.4f}"
+
+    def test_nonempty_signal(self):
+        rng = np.random.default_rng(2)
+        for cls in range(data.NUM_CLASSES):
+            f = data.sample_frames(cls, rng)
+            assert f.sum() > 50, f"class {cls} nearly empty"
+
+    def test_left_right_distinct(self):
+        rng = np.random.default_rng(3)
+        def mean_x(cls):
+            f = data.sample_frames(cls, rng)
+            _, _, _, xs = np.nonzero(f)
+            return xs.mean()
+        assert mean_x(1) > mean_x(2) + 5  # right vs left wave
+
+    def test_batch_and_dataset(self):
+        rng = np.random.default_rng(4)
+        frames, labels = data.batch(6, rng)
+        assert frames.shape == (6, 16, 2, 48, 48)
+        assert labels.shape == (6,)
+        frames, labels = data.dataset(2, rng)
+        assert frames.shape[0] == 20
+        assert (np.bincount(labels, minlength=10) == 2).all()
+
+    def test_determinism(self):
+        a = data.sample_frames(5, np.random.default_rng(9))
+        b = data.sample_frames(5, np.random.default_rng(9))
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,141 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+The CORE correctness signal of the compile path: for arbitrary shapes and
+bit-widths (FlexSpIM's resolution flexibility axis), the tiled Pallas
+kernels must be bit-identical to ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cim_kernel as ck
+from compile.kernels import ref
+
+
+def _mk_fc(rng, out_dim, in_dim, w_bits, p_bits):
+    w = rng.integers(ref.min_val(w_bits), ref.max_val(w_bits) + 1,
+                     (out_dim, in_dim))
+    s = rng.integers(0, 2, in_dim)
+    v = rng.integers(ref.min_val(p_bits), ref.max_val(p_bits) + 1, out_dim)
+    return (jnp.asarray(w, jnp.int32), jnp.asarray(s, jnp.int32),
+            jnp.asarray(v, jnp.int32))
+
+
+class TestWrap:
+    def test_wrap_examples(self):
+        assert int(ref.wrap(jnp.int32(128), 8)) == -128
+        assert int(ref.wrap(jnp.int32(-129), 8)) == 127
+        assert int(ref.wrap(jnp.int32(5), 4)) == 5
+        assert int(ref.wrap(jnp.int32(8), 4)) == -8
+
+    @given(st.integers(min_value=1, max_value=20),
+           st.integers(min_value=-(1 << 24), max_value=1 << 24))
+    @settings(max_examples=200, deadline=None)
+    def test_wrap_matches_python_semantics(self, bits, v):
+        m = 1 << bits
+        r = ((v + m // 2) % m) - m // 2
+        assert int(ref.wrap(jnp.int32(v), bits)) == r
+
+    def test_range_helpers(self):
+        assert ref.min_val(8) == -128 and ref.max_val(8) == 127
+        assert ref.min_val(1) == -1 and ref.max_val(1) == 0
+
+
+class TestFcKernel:
+    @given(
+        out_dim=st.integers(1, 200),
+        in_dim=st.integers(1, 96),
+        w_bits=st.integers(1, 8),
+        p_bits=st.integers(2, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_matches_ref(self, out_dim, in_dim, w_bits, p_bits, seed):
+        rng = np.random.default_rng(seed)
+        w, s, v = _mk_fc(rng, out_dim, in_dim, w_bits, p_bits)
+        theta = max(ref.max_val(p_bits) // 2, 1)
+        r_spk, r_v = ref.if_step_fc(w, s, v, theta, p_bits)
+        k_spk, k_v = ck.if_step_fc(w, s, v, theta, p_bits)
+        np.testing.assert_array_equal(np.asarray(r_spk), np.asarray(k_spk))
+        np.testing.assert_array_equal(np.asarray(r_v), np.asarray(k_v))
+
+    def test_tile_boundary_sizes(self):
+        # Exactly at / around the 128-neuron tile boundary.
+        rng = np.random.default_rng(1)
+        for out_dim in (127, 128, 129, 256):
+            w, s, v = _mk_fc(rng, out_dim, 33, 4, 10)
+            r = ref.if_step_fc(w, s, v, 7, 10)
+            k = ck.if_step_fc(w, s, v, 7, 10)
+            np.testing.assert_array_equal(np.asarray(r[0]), np.asarray(k[0]))
+            np.testing.assert_array_equal(np.asarray(r[1]), np.asarray(k[1]))
+
+    def test_state_evolution_over_timesteps(self):
+        rng = np.random.default_rng(2)
+        w, s, v = _mk_fc(rng, 10, 20, 4, 9)
+        rv, kv = v, v
+        for t in range(5):
+            s = jnp.asarray(rng.integers(0, 2, 20), jnp.int32)
+            r_spk, rv = ref.if_step_fc(w, s, rv, 11, 9)
+            k_spk, kv = ck.if_step_fc(w, s, kv, 11, 9)
+            np.testing.assert_array_equal(np.asarray(rv), np.asarray(kv),
+                                          err_msg=f"t={t}")
+
+    def test_wraparound_exercised(self):
+        # Saturating inputs to force wrap at p_bits = 4.
+        w = jnp.full((4, 8), 7, jnp.int32)
+        s = jnp.ones(8, jnp.int32)
+        v = jnp.full(4, 5, jnp.int32)
+        r = ref.if_step_fc(w, s, v, 6, 4)
+        k = ck.if_step_fc(w, s, v, 6, 4)
+        np.testing.assert_array_equal(np.asarray(r[1]), np.asarray(k[1]))
+
+
+class TestConvKernel:
+    @given(
+        in_ch=st.integers(1, 6),
+        out_ch=st.integers(1, 8),
+        h=st.integers(4, 14),
+        stride=st.sampled_from([1, 2]),
+        w_bits=st.integers(2, 7),
+        p_bits=st.integers(4, 14),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, in_ch, out_ch, h, stride, w_bits, p_bits, seed):
+        rng = np.random.default_rng(seed)
+        k = 3
+        w = jnp.asarray(rng.integers(ref.min_val(w_bits),
+                                     ref.max_val(w_bits) + 1,
+                                     (out_ch, in_ch, k, k)), jnp.int32)
+        s = jnp.asarray(rng.integers(0, 2, (in_ch, h, h)), jnp.int32)
+        oh = (h + 2 - k) // stride + 1
+        v = jnp.asarray(rng.integers(ref.min_val(p_bits),
+                                     ref.max_val(p_bits) + 1,
+                                     (out_ch, oh, oh)), jnp.int32)
+        theta = max(ref.max_val(p_bits) // 2, 1)
+        r = ref.if_step_conv(w, s, v, theta, p_bits, stride, 1)
+        kk = ck.if_step_conv(w, s, v, theta, p_bits, stride, 1)
+        np.testing.assert_array_equal(np.asarray(r[0]), np.asarray(kk[0]))
+        np.testing.assert_array_equal(np.asarray(r[1]), np.asarray(kk[1]))
+
+    def test_im2col_reference_agrees_with_lax_conv(self):
+        rng = np.random.default_rng(3)
+        w = jnp.asarray(rng.integers(-4, 5, (5, 3, 3, 3)), jnp.int32)
+        s = jnp.asarray(rng.integers(0, 2, (3, 9, 9)), jnp.int32)
+        v = jnp.zeros((5, 5, 5), jnp.int32)
+        a = ref.if_step_conv(w, s, v, 9, 10, 2, 1)
+        b = ref.if_step_conv_im2col(w, s, v, 9, 10, 2, 1)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+class TestVmemFootprint:
+    def test_footprint_grows_with_tiles(self):
+        small = ck.vmem_footprint_bytes(128, 64)
+        big = ck.vmem_footprint_bytes(128, 1024)
+        assert big > small
+        # The default FC tile at the SCNN's largest fan-in fits in a
+        # 16 MB-class VMEM budget with ample headroom.
+        assert ck.vmem_footprint_bytes(128, 3456, 1) < 4 * 2**20

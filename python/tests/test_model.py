@@ -1,0 +1,142 @@
+"""L2 model tests: topology, quantization, integer step vs reference."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+from compile.kernels import ref
+
+
+class TestTopology:
+    def test_layer_chain_shapes(self):
+        # Output of each layer must feed the next.
+        prev = int(np.prod(model.INPUT_SHAPE))
+        for (name, kind, p, _) in model.LAYERS:
+            if kind == "conv":
+                ic, oc, k, stride, pad, h, w = p
+                assert ic * h * w == prev, name
+                oh, ow = model.conv_out_hw(p)
+                prev = oc * oh * ow
+            else:
+                i, o = p
+                assert i == prev, name
+                prev = o
+        assert prev == model.NUM_CLASSES
+
+    def test_matches_rust_network(self):
+        # Mirror of rust/src/snn/network.rs::scnn_dvs_gesture.
+        assert len(model.LAYERS) == 9
+        assert model.LAYERS[0][2][:2] == (2, 12)
+        assert model.LAYERS[5][2][:2] == (48, 96)
+        assert model.LAYERS[6][2] == (96 * 6 * 6, 256)
+        assert [r for (_, _, _, r) in model.LAYERS] == [
+            (4, 9), (5, 10), (5, 10), (6, 11), (6, 11), (7, 12),
+            (5, 10), (5, 10), (7, 12)]
+
+    def test_param_count(self):
+        params = model.init_params(0)
+        total = sum(int(np.prod(p.shape)) for p in params)
+        # ~1.1 M parameters for the 48×48 SCNN.
+        assert 900_000 < total < 1_300_000
+
+
+class TestQuantization:
+    def test_weights_in_range(self):
+        params = model.init_params(1)
+        int_ws, qparams = model.quantize_params(params)
+        for wq, (_, _, _, (w_bits, p_bits)), row in zip(
+                int_ws, model.LAYERS, np.asarray(qparams)):
+            lo, hi = ref.min_val(w_bits), ref.max_val(w_bits)
+            a = np.asarray(wq)
+            assert a.min() >= lo and a.max() <= hi
+            m, half, theta = row
+            assert m == 1 << p_bits and half == 1 << (p_bits - 1)
+            assert 1 <= theta <= ref.max_val(p_bits)
+
+    def test_half_away_rounding(self):
+        x = jnp.asarray([0.5, 1.5, -0.5, -1.5, 2.4, -2.4], jnp.float32)
+        r = np.asarray(model._round_half_away(x))
+        np.testing.assert_array_equal(r, [1.0, 2.0, -1.0, -2.0, 2.0, -2.0])
+
+    def test_custom_resolutions(self):
+        params = model.init_params(2)
+        res = [(2, 6)] * len(model.LAYERS)
+        int_ws, qparams = model.quantize_params(params, res)
+        for wq in int_ws:
+            a = np.asarray(wq)
+            assert a.min() >= -2 and a.max() <= 1
+        assert all(np.asarray(qparams)[:, 0] == 64)
+
+
+class TestIntegerStep:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        params = model.init_params(3)
+        int_ws, qparams = model.quantize_params(params)
+        rng = np.random.default_rng(5)
+        frame = jnp.asarray(
+            (rng.random(model.INPUT_SHAPE) < 0.08).astype(np.int32))
+        return int_ws, qparams, frame
+
+    def test_pallas_step_matches_reference(self, setup):
+        int_ws, qparams, frame = setup
+        vmems = model.init_vmems()
+        out = model.scnn_step(frame, qparams, *int_ws, *vmems)
+        spk, new_vmems, counts = out[0], list(out[1:-1]), out[-1]
+        r_spk, r_vmems, r_counts = model.scnn_step_reference(
+            frame, np.asarray(qparams), int_ws, vmems)
+        np.testing.assert_array_equal(np.asarray(spk), np.asarray(r_spk))
+        for a, b in zip(new_vmems, r_vmems):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(counts), r_counts)
+
+    def test_multi_timestep_state(self, setup):
+        int_ws, qparams, frame = setup
+        vmems = model.init_vmems()
+        for t in range(3):
+            out = model.scnn_step(frame, qparams, *int_ws, *vmems)
+            vmems = list(out[1:-1])
+        # Membrane state evolves and stays within p_bits ranges.
+        for v, (_, _, _, (_, p_bits)) in zip(vmems, model.LAYERS):
+            a = np.asarray(v)
+            assert a.min() >= ref.min_val(p_bits)
+            assert a.max() <= ref.max_val(p_bits)
+        assert any(np.asarray(v).any() for v in vmems)
+
+    def test_resolution_is_runtime_dynamic(self, setup):
+        # The same compiled step must work at a different resolution by
+        # changing only qparams + weights — the chip's key flexibility.
+        params = model.init_params(3)
+        res = [(3, 8)] * len(model.LAYERS)
+        int_ws, qparams = model.quantize_params(params, res)
+        vmems = model.init_vmems()
+        frame = setup[2]
+        out = model.scnn_step(frame, qparams, *int_ws, *vmems)
+        for v in out[1:-1]:
+            a = np.asarray(v)
+            assert a.min() >= ref.min_val(8) and a.max() <= ref.max_val(8)
+
+
+class TestFloatModel:
+    def test_step_shapes_and_gradients(self):
+        params = model.init_params(4)
+        vmems = model.init_vmems_float()
+        x = jnp.zeros(model.INPUT_SHAPE, jnp.float32).at[0, 20:28, 20:28].set(1.0)
+        spk, vmems = model.scnn_step_float(params, x, vmems)
+        assert spk.shape == (model.NUM_CLASSES,)
+
+        import jax
+
+        def scalar_loss(p):
+            s, vs = model.scnn_step_float(p, x, model.init_vmems_float())
+            return jnp.sum(vs[-1])
+
+        grads = jax.grad(scalar_loss)(params)
+        norms = [float(jnp.abs(g).sum()) for g in grads]
+        assert any(n > 0 for n in norms), "surrogate gradient must flow"
+
+    def test_surrogate_spike_values(self):
+        v = jnp.asarray([0.0, 0.99, 1.0, 5.0], jnp.float32)
+        s = np.asarray(model.spike_surrogate(v))
+        np.testing.assert_array_equal(s, [0.0, 0.0, 1.0, 1.0])

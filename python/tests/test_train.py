@@ -1,0 +1,73 @@
+"""Trainer tests: loss decreases, weights serialize, int eval runs."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model, train
+
+
+class TestTrainStep:
+    def test_loss_decreases_over_short_run(self):
+        # A few steps on a fixed tiny batch must reduce loss (overfit).
+        params = model.init_params(0)
+        momentum = [jnp.zeros_like(p) for p in params]
+        rng = np.random.default_rng(0)
+        frames, labels = data.batch(2, rng, timesteps=4)
+        frames, labels = jnp.asarray(frames), jnp.asarray(labels)
+        first = None
+        loss = None
+        for _ in range(8):
+            params, momentum, loss, _ = train.train_step(
+                params, momentum, frames, labels, jnp.float32(0.1))
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first, f"{float(loss)} !< {first}"
+
+    def test_gradients_change_all_layers(self):
+        import jax
+
+        params = model.init_params(1)
+        rng = np.random.default_rng(1)
+        frames, labels = data.batch(2, rng, timesteps=4)
+        (_, _), grads = jax.value_and_grad(train.loss_fn, has_aux=True)(
+            params, jnp.asarray(frames), jnp.asarray(labels))
+        for g, (name, *_rest) in zip(grads, model.LAYERS):
+            assert float(jnp.abs(g).sum()) > 0, f"dead gradient in {name}"
+
+
+class TestWeightsIo:
+    def test_roundtrip(self, tmp_path):
+        params = model.init_params(2)
+        path = os.path.join(tmp_path, "w.bin")
+        train.save_weights(params, path)
+        loaded = train.load_weights(path)
+        assert len(loaded) == len(params)
+        for a, b in zip(params, loaded):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_format_header(self, tmp_path):
+        params = model.init_params(2)
+        path = os.path.join(tmp_path, "w.bin")
+        train.save_weights(params, path)
+        with open(path, "rb") as f:
+            assert f.read(4) == b"FSPW"
+
+
+class TestIntEvaluation:
+    def test_eval_runs_and_bounded(self):
+        params = model.init_params(3)
+        rng = np.random.default_rng(3)
+        frames, labels = data.dataset(1, rng, timesteps=4)
+        acc = train.evaluate_int(params, frames[:5], labels[:5])
+        assert 0.0 <= acc <= 1.0
+
+    def test_eval_respects_resolutions(self):
+        params = model.init_params(3)
+        rng = np.random.default_rng(3)
+        frames, labels = data.dataset(1, rng, timesteps=2)
+        res = [(2, 6)] * len(model.LAYERS)
+        acc = train.evaluate_int(params, frames[:3], labels[:3], res)
+        assert 0.0 <= acc <= 1.0

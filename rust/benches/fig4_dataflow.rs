@@ -1,0 +1,40 @@
+//! Bench: regenerate Fig. 4 (layer footprints + hybrid-stationarity gain)
+//! and time the mapping search.
+//!
+//! ```sh
+//! cargo bench --bench fig4_dataflow
+//! ```
+
+use flexspim::dataflow::{Mapper, Policy};
+use flexspim::figures::fig4;
+use flexspim::snn::network::scnn_dvs_gesture;
+use flexspim::util::bench::{section, Bench};
+
+fn main() {
+    section("Fig. 4 — reproduction output");
+    let f = fig4::run();
+    println!("{}", fig4::render(&f));
+
+    section("Fig. 4 — mapping-search timing");
+    let net = scnn_dvs_gesture();
+    let b = Bench::default();
+    for macros in [1usize, 2, 16] {
+        let mapper = Mapper::flexspim(macros);
+        for policy in [Policy::WsOnly, Policy::HsMin, Policy::HsOpt] {
+            b.report(&format!("map {policy} @ {macros} macros"), || {
+                mapper.map(&net, policy).avoided_traffic_bits(&net)
+            });
+        }
+    }
+
+    section("Fig. 4 — scaling with macro count (gain vs WS-only)");
+    for macros in [1usize, 2, 4, 8, 16, 32] {
+        let mapper = Mapper::flexspim(macros);
+        let ws = mapper.map(&net, Policy::WsOnly).avoided_traffic_bits(&net);
+        let hs = mapper.map(&net, Policy::HsOpt).avoided_traffic_bits(&net);
+        println!(
+            "{macros:>3} macros: WS-only {ws:>9}  HS-opt {hs:>9}  gain {:+.1} %",
+            100.0 * (hs as f64 / ws.max(1) as f64 - 1.0)
+        );
+    }
+}

@@ -1,0 +1,60 @@
+//! Bench: regenerate Fig. 6 — resolution flexibility vs model footprint —
+//! and time the arbitrary-resolution quantizer.
+//!
+//! The accuracy axis needs the PJRT runtime + trained weights and lives in
+//! `flexspim sweep`; this bench covers the size/quantization axes, which
+//! are what the hardware flexibility enables.
+//!
+//! ```sh
+//! cargo bench --bench fig6_resolution_sweep
+//! ```
+
+use flexspim::figures::fig6;
+use flexspim::runtime::{artifacts_dir, WeightFile};
+use flexspim::snn::network::scnn_dvs_gesture;
+use flexspim::snn::Resolution;
+use flexspim::util::bench::{section, Bench};
+
+fn main() {
+    section("Fig. 6(a) — reproduction output");
+    println!("{}", fig6::render_sizes());
+
+    section("Fig. 6(b) — size axis of the scaling sweep");
+    let base = scnn_dvs_gesture();
+    let base_bits = base.conv_weight_bits();
+    for (label, res) in fig6::scaling_configs() {
+        let net = base.with_resolutions(
+            &res.iter().map(|&(w, p)| Resolution::new(w, p)).collect::<Vec<_>>(),
+        );
+        println!(
+            "  {label:<10} conv {:>8} bits  ({:+.1} % vs base)",
+            net.conv_weight_bits(),
+            100.0 * (net.conv_weight_bits() as f64 / base_bits as f64 - 1.0)
+        );
+    }
+
+    section("quantizer timing (requires artifacts/weights.bin)");
+    let wpath = artifacts_dir().join("weights.bin");
+    if wpath.exists() {
+        let wf = WeightFile::load(&wpath).unwrap();
+        let b = Bench::default();
+        b.report("quantize all layers @ default res", || wf.quantize_default());
+        b.report("quantize all layers @ 3b/8b", || {
+            wf.quantize_at(&[(3, 8); 9])
+        });
+        // Bitwise granularity: every (w, p) in a small grid must work.
+        b.report("quantize grid 2..8 x 6..12 (FC3 only)", || {
+            let l = &wf.layers[8];
+            let mut acc = 0i64;
+            for w in 2..=8u32 {
+                for p in 6..=12u32 {
+                    let (q, _) = l.quantize(w, p);
+                    acc += q[0] as i64;
+                }
+            }
+            acc
+        });
+    } else {
+        println!("  skipped: run `make artifacts` first");
+    }
+}

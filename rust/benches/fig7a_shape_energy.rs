@@ -1,0 +1,52 @@
+//! Bench: regenerate Fig. 7(a) — energy vs resolution linearity and the
+//! shape-dependent energy study — and time the bit-accurate macro
+//! simulator that produces it.
+//!
+//! ```sh
+//! cargo bench --bench fig7a_shape_energy
+//! ```
+
+use flexspim::cim::{CimMacro, MacroConfig};
+use flexspim::figures::fig7;
+use flexspim::util::bench::{section, Bench};
+use flexspim::util::rng::Rng;
+
+fn main() {
+    section("Fig. 7(a) — reproduction output");
+    let a = fig7::run_fig7a();
+    // Render only the 7(a) part here (c/d have their own bench).
+    println!("bits -> pJ/SOP (single-row shapes):");
+    for p in &a.resolution_sweep {
+        println!("  {:>2}b  {:>7.3}", p.bits, p.pj_per_sop);
+    }
+    println!("shape -> pJ/SOP (8b/16b, 32 channels, bit-accurate sim):");
+    for p in &a.shape_sweep {
+        println!("  {:>2}x{:<2} {:>7.3}", p.n_r, p.n_c, p.pj_per_sop);
+    }
+    println!(
+        "row-wise baseline {:.3} pJ/SOP | saving {:.2}x-{:.2}x (paper: up to 4.3x) | variation {:.1} % (paper < 24 %)",
+        a.rowwise_baseline_pj,
+        a.min_saving(),
+        a.max_saving(),
+        100.0 * a.shape_variation()
+    );
+
+    section("macro simulator timing (one cim_accumulate, 32 neurons)");
+    let b = Bench::default();
+    for n_c in [1u32, 2, 4, 8, 16] {
+        let neurons = (256 / n_c as usize).min(32);
+        let cfg = MacroConfig::flexspim(8, 16, n_c, 1, neurons);
+        let mut mac = CimMacro::new(cfg).unwrap();
+        let mut rng = Rng::new(3);
+        for n in 0..neurons {
+            mac.load_weight(n, 0, rng.range_i64(-127, 127));
+        }
+        b.report(&format!("cim_accumulate 8b/16b N_C={n_c}"), || {
+            mac.cim_accumulate(0, None);
+            mac.counters().sops
+        });
+    }
+
+    section("full figure regeneration timing");
+    b.report("fig7a end-to-end", fig7::run_fig7a);
+}

@@ -1,0 +1,49 @@
+//! Bench: regenerate Fig. 7(c)/(d) — many-macro system-level energy gains
+//! vs the [4] and IMPULSE [3] baselines across the sparsity sweep.
+//!
+//! ```sh
+//! cargo bench --bench fig7cd_system_extrapolation
+//! ```
+
+use flexspim::energy::baselines::{fig7c_gain_sweep, fig7d_gain_sweep};
+use flexspim::util::bench::{section, Bench};
+
+fn main() {
+    section("Fig. 7(c) — FlexSpIM (16 macros, HS, optimal res) vs [4]");
+    for (s, g) in fig7c_gain_sweep(&[0.85, 0.88, 0.91, 0.94, 0.97, 0.99]) {
+        println!("  sparsity {s:.2}: gain {:.1} %  (paper: 87-90 %)", 100.0 * g);
+    }
+
+    section("Fig. 7(d) — FlexSpIM (18 macros, 6b/11b) vs IMPULSE [3]");
+    for (s, g) in fig7d_gain_sweep(&[0.85, 0.88, 0.91, 0.94, 0.97, 0.99]) {
+        println!("  sparsity {s:.2}: gain {:.1} %  (paper: 79-86 %)", 100.0 * g);
+    }
+
+    section("macro-count ablation (gain vs [4] at 95 % sparsity)");
+    // DESIGN.md calls out the "more macros -> more stationarity" design
+    // choice; sweep it.
+    for macros in [4usize, 8, 16, 32] {
+        let flex = flexspim::energy::SystemEnergyModel::flexspim(macros);
+        let base = flexspim::energy::baselines::isscc24_system(macros);
+        let flex_net = flexspim::energy::baselines::system_workload();
+        let base_net = flexspim::energy::baselines::system_workload_isscc24();
+        let fm = flexspim::dataflow::Mapper {
+            macro_capacity_bits: flex.cfg.macro_bits,
+            num_macros: macros,
+        }
+        .map(&flex_net, flexspim::dataflow::Policy::HsOpt);
+        let bm = flexspim::dataflow::Mapper {
+            macro_capacity_bits: base.cfg.macro_bits,
+            num_macros: macros,
+        }
+        .map(&base_net, flexspim::dataflow::Policy::WsOnly);
+        let ef = flex.evaluate(&flex_net, &fm, 0.95, None).total_pj();
+        let eb = base.evaluate(&base_net, &bm, 0.95, Some(1)).total_pj();
+        println!("  {macros:>3} macros: gain {:.1} %", 100.0 * (1.0 - ef / eb));
+    }
+
+    section("timing");
+    let b = Bench::default();
+    b.report("fig7c full sweep", || fig7c_gain_sweep(&[0.85, 0.92, 0.99]));
+    b.report("fig7d full sweep", || fig7d_gain_sweep(&[0.85, 0.92, 0.99]));
+}

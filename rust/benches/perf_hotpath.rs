@@ -1,0 +1,88 @@
+//! Perf-tracking bench: the L3 hot paths, measured the same way before
+//! and after each optimization (EXPERIMENTS.md §Perf).
+//!
+//! Hot paths, in order of end-to-end weight:
+//!   1. `CimMacro::cim_accumulate` — the bit-level simulator inner loop
+//!      (dominates `flexspim simulate`, Fig. 7a regeneration, and all
+//!      macro-level studies).
+//!   2. `CimMacro::cim_fire` — comparison + conditional subtract pass.
+//!   3. `Mapper::map` — the HS-opt search (dominates dataflow sweeps).
+//!   4. `SystemEnergyModel::evaluate` — the system extrapolation kernel.
+//!   5. Event generation + encoding — the data path feeding inference.
+//!
+//! ```sh
+//! cargo bench --bench perf_hotpath
+//! ```
+
+use flexspim::cim::{CimMacro, MacroConfig};
+use flexspim::dataflow::{Mapper, Policy};
+use flexspim::energy::SystemEnergyModel;
+use flexspim::events::{encode_frames, GestureClass, GestureGenerator};
+use flexspim::snn::network::scnn_dvs_gesture;
+use flexspim::util::bench::{section, Bench};
+use flexspim::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+
+    section("1+2. CIM macro simulator");
+    for (w, p, n_c, neurons, label) in [
+        (8u32, 16u32, 1u32, 256usize, "8b/16b serial x256"),
+        (8, 16, 4, 64, "8b/16b 4x4 x64"),
+        (4, 9, 3, 85, "4b/9b 3-col x85"),
+        (16, 32, 8, 32, "16b/32b 8-col x32"),
+    ] {
+        let cfg = MacroConfig::flexspim(w, p, n_c, 1, neurons);
+        let mut mac = CimMacro::new(cfg).unwrap();
+        let mut rng = Rng::new(7);
+        for n in 0..neurons {
+            mac.load_weight(
+                n,
+                0,
+                rng.range_i64(
+                    flexspim::snn::quant::min_val(w),
+                    flexspim::snn::quant::max_val(w),
+                ),
+            );
+        }
+        let m = b.report(&format!("accumulate {label}"), || {
+            mac.cim_accumulate(0, None);
+        });
+        println!(
+            "    -> {:.1} ns/SOP, {:.1} ns/bit-op",
+            m.median_s() * 1e9 / neurons as f64,
+            m.median_s() * 1e9 / (neurons as f64 * p as f64)
+        );
+        b.report(&format!("fire       {label}"), || {
+            mac.cim_fire(50);
+        });
+    }
+
+    section("3. dataflow mapping search");
+    let net = scnn_dvs_gesture();
+    for macros in [2usize, 16] {
+        let mapper = Mapper::flexspim(macros);
+        b.report(&format!("HS-opt search @ {macros} macros"), || {
+            mapper.map(&net, Policy::HsOpt).used_bits
+        });
+    }
+
+    section("4. system energy evaluation");
+    let mapping = Mapper::flexspim(16).map(&net, Policy::HsOpt);
+    let sys = SystemEnergyModel::flexspim(16);
+    b.report("evaluate full net @ 95 % sparsity", || {
+        sys.evaluate(&net, &mapping, 0.95, None).total_pj()
+    });
+    b.report("sop_pj best-shape search 8b/16b", || {
+        sys.sop_pj(8, 16, None)
+    });
+
+    section("5. event generation + encoding");
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(11);
+    b.report("generate gesture sample", || {
+        gen.sample(GestureClass::ArmRoll, &mut rng).events.len()
+    });
+    let stream = gen.sample(GestureClass::ArmRoll, &mut Rng::new(5));
+    b.report("encode 16 frames", || encode_frames(&stream, 16).len());
+}

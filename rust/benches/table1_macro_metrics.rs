@@ -1,0 +1,53 @@
+//! Bench: regenerate Table I (macro-level comparison) and time the
+//! simulator at the Table I reference configuration.
+//!
+//! ```sh
+//! cargo bench --bench table1_macro_metrics
+//! ```
+
+use flexspim::cim::ops::OperatingPoint;
+use flexspim::cim::{CimMacro, MacroConfig};
+use flexspim::energy::MacroEnergyModel;
+use flexspim::figures::table1;
+use flexspim::util::bench::{section, Bench};
+use flexspim::util::rng::Rng;
+
+fn main() {
+    section("Table I — reproduction output");
+    println!("{}", table1::render());
+
+    section("reference-configuration simulation timing");
+    // Table I reference point: 8b weights / 16b potentials, bit-serial,
+    // 256 parallel neurons — one full accumulate is 16 row-cycles over
+    // 256 columns = 4096 bit-ops through the PC adders.
+    let cfg = MacroConfig::flexspim(8, 16, 1, 1, 256);
+    let mut mac = CimMacro::new(cfg).unwrap();
+    let mut rng = Rng::new(1);
+    for n in 0..256 {
+        mac.load_weight(n, 0, rng.range_i64(-127, 127));
+    }
+    let b = Bench::default();
+    let m = b.report("cim_accumulate (256 SOPs)", || {
+        mac.cim_accumulate(0, None);
+    });
+    let sim_sops_per_s = 256.0 / m.median_s();
+    let silicon_sops = cfg.peak_sops(OperatingPoint::nominal().system_clock_hz);
+    println!(
+        "simulator speed: {:.2} M SOP/s host  (silicon: {:.2} G SOP/s; slowdown {:.0}x)",
+        sim_sops_per_s / 1e6,
+        silicon_sops / 1e9,
+        silicon_sops / sim_sops_per_s
+    );
+
+    b.report("cim_fire (256 neurons)", || {
+        mac.cim_fire(1000);
+    });
+
+    section("energy-model pricing timing");
+    let model = MacroEnergyModel::nominal();
+    let counters = *mac.counters();
+    b.report("price_pj(ledger)", || model.price_pj(&counters));
+    b.report("sop_pj_analytic 8b/16b", || {
+        model.sop_pj_analytic(8, 16, 1, 256, 256).total_pj()
+    });
+}

@@ -1,0 +1,177 @@
+//! The 6T SRAM bit array.
+//!
+//! Bits are packed row-major into `u64` words so that the two-wordline CIM
+//! read (`AND` on BL, `NOR` on BLB — paper Fig. 2b) can be evaluated 64
+//! columns at a time. The array itself is passive storage; all smarts live
+//! in the peripheral circuits ([`super::pc`]).
+
+/// Dense bit array with row/column addressing.
+#[derive(Debug, Clone)]
+pub struct SramArray {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    bits: Vec<u64>,
+}
+
+impl SramArray {
+    /// Allocate a zeroed array.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0);
+        let words_per_row = cols.div_ceil(64);
+        SramArray { rows, cols, words_per_row, bits: vec![0; rows * words_per_row] }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total capacity in bits.
+    pub fn capacity_bits(&self) -> u64 {
+        (self.rows * self.cols) as u64
+    }
+
+    #[inline]
+    fn index(&self, row: usize, col: usize) -> (usize, u64) {
+        debug_assert!(row < self.rows && col < self.cols, "({row},{col}) oob");
+        (row * self.words_per_row + col / 64, 1u64 << (col % 64))
+    }
+
+    /// Read one bitcell.
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> bool {
+        let (w, m) = self.index(row, col);
+        self.bits[w] & m != 0
+    }
+
+    /// Write one bitcell.
+    #[inline]
+    pub fn set(&mut self, row: usize, col: usize, v: bool) {
+        let (w, m) = self.index(row, col);
+        if v {
+            self.bits[w] |= m;
+        } else {
+            self.bits[w] &= !m;
+        }
+    }
+
+    /// The digital-CIM two-wordline read over a whole row pair (Fig. 2b):
+    /// per column, `bl = A AND B` and `blb = NOT A AND NOT B` (NOR). The
+    /// PC reconstructs `A XOR B = NOT(bl) AND NOT(blb)`.
+    /// Returns packed `(and_words, nor_words)`.
+    pub fn cim_read_pair(&self, row_a: usize, row_b: usize) -> (Vec<u64>, Vec<u64>) {
+        assert!(row_a != row_b, "CIM read requires two distinct wordlines");
+        let a = &self.bits[row_a * self.words_per_row..(row_a + 1) * self.words_per_row];
+        let b = &self.bits[row_b * self.words_per_row..(row_b + 1) * self.words_per_row];
+        let and: Vec<u64> = a.iter().zip(b).map(|(&x, &y)| x & y).collect();
+        let nor: Vec<u64> = a.iter().zip(b).map(|(&x, &y)| !x & !y).collect();
+        (and, nor)
+    }
+
+    /// Packed words of one row (read-only view).
+    pub fn row_words(&self, row: usize) -> &[u64] {
+        &self.bits[row * self.words_per_row..(row + 1) * self.words_per_row]
+    }
+
+    /// Write a full row from packed words (trailing bits beyond `cols`
+    /// are masked off).
+    pub fn write_row_words(&mut self, row: usize, words: &[u64]) {
+        assert_eq!(words.len(), self.words_per_row);
+        let dst = &mut self.bits[row * self.words_per_row..(row + 1) * self.words_per_row];
+        dst.copy_from_slice(words);
+        // Mask unused high bits of the last word for clean equality checks.
+        let used = self.cols % 64;
+        if used != 0 {
+            let last = row * self.words_per_row + self.words_per_row - 1;
+            self.bits[last] &= (1u64 << used) - 1;
+        }
+    }
+
+    /// Clear all bits.
+    pub fn clear(&mut self) {
+        self.bits.fill(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut a = SramArray::new(8, 100);
+        assert!(!a.get(3, 99));
+        a.set(3, 99, true);
+        assert!(a.get(3, 99));
+        a.set(3, 99, false);
+        assert!(!a.get(3, 99));
+    }
+
+    #[test]
+    fn capacity() {
+        let a = SramArray::new(512, 256);
+        assert_eq!(a.capacity_bits(), 131_072); // 16 kB — the paper's macro
+    }
+
+    #[test]
+    fn cim_read_truth_table() {
+        let mut a = SramArray::new(2, 4);
+        // col: 0 -> (0,0), 1 -> (0,1), 2 -> (1,0), 3 -> (1,1)
+        a.set(0, 2, true);
+        a.set(0, 3, true);
+        a.set(1, 1, true);
+        a.set(1, 3, true);
+        let (and, nor) = a.cim_read_pair(0, 1);
+        for col in 0..4 {
+            let x = a.get(0, col);
+            let y = a.get(1, col);
+            assert_eq!(and[0] >> col & 1 == 1, x && y, "AND col {col}");
+            assert_eq!(nor[0] >> col & 1 == 1, !x && !y, "NOR col {col}");
+            // XOR reconstruction used by the PC adder:
+            let xor = (and[0] >> col & 1 == 0) && (nor[0] >> col & 1 == 0);
+            assert_eq!(xor, x ^ y, "XOR col {col}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "two distinct wordlines")]
+    fn same_row_pair_rejected() {
+        let a = SramArray::new(4, 4);
+        a.cim_read_pair(2, 2);
+    }
+
+    #[test]
+    fn row_words_roundtrip_with_masking() {
+        let mut a = SramArray::new(2, 70); // 2 words/row, 6 used bits in word 1
+        a.write_row_words(0, &[u64::MAX, u64::MAX]);
+        assert!(a.get(0, 69));
+        let w = a.row_words(0);
+        assert_eq!(w[1], (1u64 << 6) - 1, "unused bits masked");
+    }
+
+    #[test]
+    fn random_fill_consistency() {
+        let mut rng = Rng::new(1);
+        let mut a = SramArray::new(64, 200);
+        let mut shadow = vec![vec![false; 200]; 64];
+        for _ in 0..5000 {
+            let r = rng.range_usize(0, 63);
+            let c = rng.range_usize(0, 199);
+            let v = rng.chance(0.5);
+            a.set(r, c, v);
+            shadow[r][c] = v;
+        }
+        for r in 0..64 {
+            for c in 0..200 {
+                assert_eq!(a.get(r, c), shadow[r][c]);
+            }
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Energy-event ledger.
+//!
+//! The macro simulator does not compute joules; it counts the discrete
+//! circuit events that the silicon spends energy on. The calibrated model
+//! in [`crate::energy`] converts the ledger into pJ using coefficients
+//! fitted to the paper's measurements (Fig. 7a, Table I). Keeping the two
+//! concerns separate lets the same simulation be re-priced at different
+//! supply voltages (the paper's 0.9–1.1 V range).
+
+/// Counts of energy-bearing events accumulated during simulation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EnergyCounters {
+    /// Internal CIM row-cycles executed (one 5-phase operation each).
+    pub cim_cycles: u64,
+    /// Active-column × cycle products (precharge + SA + adder energy).
+    pub active_col_cycles: u64,
+    /// Standby-column × cycle products (clock/leakage at gated energy).
+    pub standby_col_cycles: u64,
+    /// Wordline-pair activations (row decoder + WL driver).
+    pub wl_activations: u64,
+    /// Sense-amplifier evaluations (two per active column per CIM cycle).
+    pub sa_reads: u64,
+    /// Full-adder evaluations in PCs.
+    pub adder_ops: u64,
+    /// Write-backs of sum bits into the array (phase 5 of Fig. 2c).
+    pub writebacks: u64,
+    /// Carry propagation hops between neighboring PCs.
+    pub carry_hops: u64,
+    /// Emulation-bit (sign-extension) reads replacing array reads.
+    pub eb_reads: u64,
+    /// Comparator evaluations (threshold check).
+    pub compare_ops: u64,
+    /// Bits moved through the macro I/O port (loads, drains, spikes).
+    pub io_bits: u64,
+    /// Plain SRAM bit-writes through the port (operand loading).
+    pub sram_writes: u64,
+    /// Plain SRAM bit-reads through the port (operand draining).
+    pub sram_reads: u64,
+    /// Completed synaptic operations (for throughput/efficiency reporting).
+    pub sops: u64,
+}
+
+impl EnergyCounters {
+    /// Zeroed ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add another ledger into this one.
+    pub fn merge(&mut self, other: &EnergyCounters) {
+        self.cim_cycles += other.cim_cycles;
+        self.active_col_cycles += other.active_col_cycles;
+        self.standby_col_cycles += other.standby_col_cycles;
+        self.wl_activations += other.wl_activations;
+        self.sa_reads += other.sa_reads;
+        self.adder_ops += other.adder_ops;
+        self.writebacks += other.writebacks;
+        self.carry_hops += other.carry_hops;
+        self.eb_reads += other.eb_reads;
+        self.compare_ops += other.compare_ops;
+        self.io_bits += other.io_bits;
+        self.sram_writes += other.sram_writes;
+        self.sram_reads += other.sram_reads;
+        self.sops += other.sops;
+    }
+
+    /// Difference (self - baseline), for measuring a single operation.
+    pub fn delta(&self, baseline: &EnergyCounters) -> EnergyCounters {
+        EnergyCounters {
+            cim_cycles: self.cim_cycles - baseline.cim_cycles,
+            active_col_cycles: self.active_col_cycles - baseline.active_col_cycles,
+            standby_col_cycles: self.standby_col_cycles - baseline.standby_col_cycles,
+            wl_activations: self.wl_activations - baseline.wl_activations,
+            sa_reads: self.sa_reads - baseline.sa_reads,
+            adder_ops: self.adder_ops - baseline.adder_ops,
+            writebacks: self.writebacks - baseline.writebacks,
+            carry_hops: self.carry_hops - baseline.carry_hops,
+            eb_reads: self.eb_reads - baseline.eb_reads,
+            compare_ops: self.compare_ops - baseline.compare_ops,
+            io_bits: self.io_bits - baseline.io_bits,
+            sram_writes: self.sram_writes - baseline.sram_writes,
+            sram_reads: self.sram_reads - baseline.sram_reads,
+            sops: self.sops - baseline.sops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_and_delta_roundtrip() {
+        let mut a = EnergyCounters::new();
+        a.cim_cycles = 10;
+        a.adder_ops = 7;
+        let mut b = EnergyCounters::new();
+        b.cim_cycles = 5;
+        b.adder_ops = 3;
+        b.io_bits = 2;
+        let snapshot = a;
+        a.merge(&b);
+        assert_eq!(a.cim_cycles, 15);
+        assert_eq!(a.adder_ops, 10);
+        assert_eq!(a.io_bits, 2);
+        assert_eq!(a.delta(&snapshot), b);
+    }
+
+    #[test]
+    fn default_is_zero() {
+        let c = EnergyCounters::new();
+        assert_eq!(c.cim_cycles + c.sops + c.io_bits, 0);
+    }
+}

@@ -1,0 +1,784 @@
+//! The FlexSpIM CIM macro: 512×256 6T array + 256 peripheral circuits.
+//!
+//! Layout contract (paper Fig. 3): each resident neuron owns a group of
+//! `N_C` adjacent columns. Within the group, each of its `fan_in` weights
+//! occupies `N_R_w = ceil(w_bits/N_C)` rows and the membrane potential
+//! occupies `N_R_p = ceil(p_bits/N_C)` rows, all using the same ping-pong
+//! bit layout so that weight bit *k* and membrane bit *k* sit in the same
+//! column (the 1-bit adders add aligned bits).
+//!
+//! A synaptic accumulate (`v += w_j`, triggered by an input spike on
+//! synapse *j*) runs `N_R_p` internal row-cycles of the 5-phase operation
+//! (Fig. 2c); weight rows past `N_R_w` are replaced by emulation-bit sign
+//! extension. The threshold step (`cim_fire`) is a bit-serial MSB-first
+//! comparison followed by a conditional reset-by-subtraction pass.
+//!
+//! Every operation updates the [`EnergyCounters`] ledger; the calibrated
+//! model in [`crate::energy`] prices the ledger in joules.
+
+use super::array::SramArray;
+use super::counters::EnergyCounters;
+use super::pc::{Pc, PcMode};
+use super::shape::OperandShape;
+use crate::snn::quant::{bit_of, wrap};
+
+/// Static configuration of a macro instance.
+#[derive(Debug, Clone, Copy)]
+pub struct MacroConfig {
+    /// Array rows (512 in the fabricated chip).
+    pub rows: usize,
+    /// Array columns / PCs (256 in the fabricated chip).
+    pub cols: usize,
+    /// Weight bit-width (arbitrary, ≥1 — contribution #1).
+    pub w_bits: u32,
+    /// Membrane-potential bit-width (arbitrary, ≥1).
+    pub p_bits: u32,
+    /// Columns per operand (`N_C`, contribution #2 — operand shaping).
+    pub n_c: u32,
+    /// Synapses stored per neuron.
+    pub fan_in: usize,
+    /// Parallel neurons resident in the macro.
+    pub neurons: usize,
+}
+
+impl MacroConfig {
+    /// The fabricated chip's array dimensions with a chosen operand config.
+    pub fn flexspim(w_bits: u32, p_bits: u32, n_c: u32, fan_in: usize, neurons: usize) -> Self {
+        MacroConfig { rows: 512, cols: 256, w_bits, p_bits, n_c, fan_in, neurons }
+    }
+
+    /// Weight operand shape.
+    pub fn shape_w(&self) -> OperandShape {
+        OperandShape::new(self.w_bits, self.n_c)
+    }
+
+    /// Membrane-potential operand shape.
+    pub fn shape_p(&self) -> OperandShape {
+        OperandShape::new(self.p_bits, self.n_c)
+    }
+
+    /// Rows used per neuron group.
+    pub fn rows_per_neuron(&self) -> usize {
+        self.fan_in * self.shape_w().n_r() as usize + self.shape_p().n_r() as usize
+    }
+
+    /// Internal row-cycles per synaptic accumulate.
+    pub fn cycles_per_accumulate(&self) -> u64 {
+        self.shape_p().n_r() as u64
+    }
+
+    /// Validate that the configuration fits the array.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.neurons == 0 || self.fan_in == 0 {
+            return Err("need at least one neuron and one synapse".into());
+        }
+        let need_cols = self.neurons * self.n_c as usize;
+        if need_cols > self.cols {
+            return Err(format!(
+                "column overflow: {need_cols} needed, {} available",
+                self.cols
+            ));
+        }
+        let need_rows = self.rows_per_neuron();
+        if need_rows > self.rows {
+            return Err(format!(
+                "row overflow: {need_rows} needed, {} available",
+                self.rows
+            ));
+        }
+        Ok(())
+    }
+
+    /// Peak synaptic throughput at `freq_hz` (SOP/s): all resident neurons
+    /// accumulate in parallel, one accumulate per `cycles_per_accumulate`.
+    pub fn peak_sops(&self, freq_hz: f64) -> f64 {
+        self.neurons as f64 * freq_hz / self.cycles_per_accumulate() as f64
+    }
+}
+
+/// The macro simulator.
+#[derive(Debug, Clone)]
+pub struct CimMacro {
+    cfg: MacroConfig,
+    array: SramArray,
+    pcs: Vec<Pc>,
+    /// Emulation-bit row: per-column sign-extension bit (write-free reads).
+    eb: Vec<bool>,
+    counters: EnergyCounters,
+}
+
+impl CimMacro {
+    /// Build a macro; PC modes are derived from the layout (the silicon
+    /// equivalent: the controller writes the two control bitcells per PC).
+    pub fn new(cfg: MacroConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        let array = SramArray::new(cfg.rows, cfg.cols);
+        let mut pcs = vec![Pc::default(); cfg.cols];
+        for n in 0..cfg.neurons {
+            for c in 0..cfg.n_c as usize {
+                let col = n * cfg.n_c as usize + c;
+                pcs[col].mode = if c == 0 {
+                    PcMode::Boundary
+                } else {
+                    // Even rows ripple left→right; the static control bits
+                    // encode the chain topology, parity picks direction.
+                    PcMode::ChainLeft
+                };
+            }
+        }
+        Ok(CimMacro { cfg, array, pcs, eb: vec![false; cfg.cols], counters: EnergyCounters::new() })
+    }
+
+    /// Configuration.
+    pub fn config(&self) -> &MacroConfig {
+        &self.cfg
+    }
+
+    /// Energy-event ledger accumulated so far.
+    pub fn counters(&self) -> &EnergyCounters {
+        &self.counters
+    }
+
+    /// Reset the ledger (e.g. after warm-up).
+    pub fn reset_counters(&mut self) {
+        self.counters = EnergyCounters::new();
+    }
+
+    fn col_base(&self, neuron: usize) -> usize {
+        debug_assert!(neuron < self.cfg.neurons);
+        neuron * self.cfg.n_c as usize
+    }
+
+    fn weight_row_base(&self, synapse: usize) -> usize {
+        debug_assert!(synapse < self.cfg.fan_in);
+        synapse * self.cfg.shape_w().n_r() as usize
+    }
+
+    fn vmem_row_base(&self) -> usize {
+        self.cfg.fan_in * self.cfg.shape_w().n_r() as usize
+    }
+
+    // ---------------------------------------------------------------- I/O
+
+    /// Load a weight through the I/O port (counted as SRAM writes).
+    pub fn load_weight(&mut self, neuron: usize, synapse: usize, value: i64) {
+        let shape = self.cfg.shape_w();
+        let base_row = self.weight_row_base(synapse);
+        let base_col = self.col_base(neuron);
+        self.write_operand(value, &shape, base_row, base_col, self.cfg.w_bits);
+    }
+
+    /// Load a membrane potential through the I/O port.
+    pub fn load_vmem(&mut self, neuron: usize, value: i64) {
+        let shape = self.cfg.shape_p();
+        let base_row = self.vmem_row_base();
+        let base_col = self.col_base(neuron);
+        self.write_operand(value, &shape, base_row, base_col, self.cfg.p_bits);
+    }
+
+    fn write_operand(&mut self, value: i64, shape: &OperandShape, base_row: usize, base_col: usize, bits: u32) {
+        let v = wrap(value, bits);
+        for row in 0..shape.n_r() {
+            for col in 0..shape.n_c {
+                if let Some(pos) = shape.bit_at(row, col) {
+                    let b = bit_of(v, pos, bits);
+                    self.array.set(base_row + row as usize, base_col + col as usize, b);
+                    self.counters.sram_writes += 1;
+                    self.counters.io_bits += 1;
+                }
+            }
+        }
+    }
+
+    /// Drain a membrane potential through the I/O port (counted).
+    pub fn read_vmem(&mut self, neuron: usize) -> i64 {
+        let v = self.peek_vmem(neuron);
+        self.counters.sram_reads += self.cfg.p_bits as u64;
+        self.counters.io_bits += self.cfg.p_bits as u64;
+        v
+    }
+
+    /// Test/debug view of a stored membrane potential (not counted).
+    pub fn peek_vmem(&self, neuron: usize) -> i64 {
+        self.read_operand_raw(self.cfg.shape_p(), self.vmem_row_base(), self.col_base(neuron), self.cfg.p_bits)
+    }
+
+    /// Test/debug view of a stored weight (not counted).
+    pub fn peek_weight(&self, neuron: usize, synapse: usize) -> i64 {
+        self.read_operand_raw(
+            self.cfg.shape_w(),
+            self.weight_row_base(synapse),
+            self.col_base(neuron),
+            self.cfg.w_bits,
+        )
+    }
+
+    fn read_operand_raw(&self, shape: OperandShape, base_row: usize, base_col: usize, bits: u32) -> i64 {
+        let mut acc: i64 = 0;
+        for row in 0..shape.n_r() {
+            for col in 0..shape.n_c {
+                if let Some(pos) = shape.bit_at(row, col) {
+                    if self.array.get(base_row + row as usize, base_col + col as usize) {
+                        if pos == bits - 1 {
+                            acc -= 1i64 << pos; // MSB carries negative weight
+                        } else {
+                            acc += 1i64 << pos;
+                        }
+                    }
+                }
+            }
+        }
+        acc
+    }
+
+    // ------------------------------------------------------------- compute
+
+    /// One synaptic CIM accumulate: `v ← wrap(v + w[synapse], p_bits)` for
+    /// every resident neuron whose `mask` entry is true (`None` = all).
+    ///
+    /// Executes `N_R_p` row-cycles of the 5-phase operation. Masked and
+    /// unowned columns sit in standby (87 % energy reduction, Fig. 7a).
+    pub fn cim_accumulate(&mut self, synapse: usize, mask: Option<&[bool]>) {
+        assert!(synapse < self.cfg.fan_in);
+        if let Some(m) = mask {
+            assert_eq!(m.len(), self.cfg.neurons);
+        }
+        let shape_p = self.cfg.shape_p();
+        let shape_w = self.cfg.shape_w();
+        let n_r_p = shape_p.n_r();
+        let w_row_base = self.weight_row_base(synapse);
+        let v_row_base = self.vmem_row_base();
+        let n_c = self.cfg.n_c;
+
+        let active_neurons: Vec<usize> = (0..self.cfg.neurons)
+            .filter(|&n| mask.map_or(true, |m| m[n]))
+            .collect();
+        if n_c == 1 {
+            // Bit-serial layout: every neuron owns exactly one column, so
+            // the whole row of 1-bit adders evaluates as word-parallel
+            // boolean algebra (64 PCs per u64) — same events, same result,
+            // ~20x faster simulation. Verified against the generic path by
+            // the shape-invariance property tests.
+            return self.accumulate_serial_wordwise(w_row_base, &active_neurons);
+        }
+        let active_cols = active_neurons.len() as u64 * n_c as u64;
+
+        // Refresh the emulation-bit row with each active neuron's weight
+        // sign (one write-free broadcast; counted as EB activity). Only
+        // the stored MSB is sensed — not the whole operand.
+        let msb = self.cfg.w_bits - 1;
+        let msb_row = w_row_base + shape_w.row_of_bit(msb) as usize;
+        let msb_col_off = shape_w.col_of_bit(msb) as usize;
+        for &n in &active_neurons {
+            let base = self.col_base(n);
+            let sign = self.array.get(msb_row, base + msb_col_off);
+            for c in 0..n_c as usize {
+                self.eb[base + c] = sign;
+            }
+        }
+
+        // Per-row programme, shared by every neuron group (the silicon
+        // equivalent: the row decoder + carry-select settings are global).
+        // Entries: (col_offset, Some((w_row_abs, w_col_offset)) | None=EB).
+        let mut programme: Vec<(usize, Option<(usize, usize)>)> =
+            Vec::with_capacity(n_c as usize);
+
+        for row in 0..n_r_p {
+            // --- Phases 1-2: precharge + dual-WL activation. The weight
+            // wordline is real for rows that exist, the EB row otherwise.
+            self.counters.cim_cycles += 1;
+            self.counters.wl_activations += 1;
+            self.counters.active_col_cycles += active_cols;
+            self.counters.standby_col_cycles += self.cfg.cols as u64 - active_cols;
+            self.counters.sa_reads += 2 * active_cols;
+
+            programme.clear();
+            let mut eb_per_neuron = 0u64;
+            for &co in &shape_p.visit_order(row) {
+                if let Some(pos) = shape_p.bit_at(row, co) {
+                    if pos < self.cfg.w_bits {
+                        programme.push((
+                            co as usize,
+                            Some((
+                                w_row_base + shape_w.row_of_bit(pos) as usize,
+                                shape_w.col_of_bit(pos) as usize,
+                            )),
+                        ));
+                    } else {
+                        programme.push((co as usize, None));
+                        eb_per_neuron += 1;
+                    }
+                }
+            }
+            self.counters.eb_reads += eb_per_neuron * active_neurons.len() as u64;
+            self.counters.adder_ops +=
+                programme.len() as u64 * active_neurons.len() as u64;
+            self.counters.writebacks +=
+                programme.len() as u64 * active_neurons.len() as u64;
+            self.counters.carry_hops += (programme.len().saturating_sub(1)) as u64
+                * active_neurons.len() as u64;
+
+            let v_row = v_row_base + row as usize;
+            // --- Phases 3-5 per neuron group: ripple the chained adders in
+            // the row's visit order, then write the sum bits back.
+            for &n in &active_neurons {
+                let base_col = self.col_base(n);
+                // Carry-in for the row's first column: 0 on row 0, else the
+                // carry register latched by this same PC last cycle
+                // (ping-pong guarantees it is the same column).
+                let first_col = base_col + programme[0].0;
+                let mut carry = if row == 0 { false } else { self.pcs[first_col].carry_reg };
+                let mut last_col = first_col;
+                for &(co, w_src) in &programme {
+                    let col = base_col + co;
+                    // A = weight bit (sign-extended via EB past w_bits).
+                    let a = match w_src {
+                        Some((wrow, wco)) => self.array.get(wrow, base_col + wco),
+                        None => self.eb[col],
+                    };
+                    let b = self.array.get(v_row, col);
+                    let (sum, cout) = Pc::full_add(a, b, carry);
+                    self.array.set(v_row, col, sum);
+                    carry = cout;
+                    last_col = col;
+                }
+                // Latch the row's final carry in the PC that produced it;
+                // ping-pong makes that PC the next row's first column.
+                self.pcs[last_col].carry_reg = carry;
+            }
+        }
+        self.counters.sops += active_neurons.len() as u64;
+    }
+
+    /// Word-parallel accumulate for the `N_C = 1` bit-serial layout: one
+    /// u64 lane carries 64 peripheral circuits. Carry registers live in a
+    /// per-column carry word that hops rows in place (with `N_C = 1` the
+    /// ping-pong is trivial: the carry stays in its own column).
+    fn accumulate_serial_wordwise(&mut self, w_row_base: usize, active: &[usize]) {
+        let p_bits = self.cfg.p_bits as usize;
+        let w_bits = self.cfg.w_bits as usize;
+        let v_row_base = self.vmem_row_base();
+        let words = self.cfg.cols.div_ceil(64);
+
+        // Active-column mask (column == neuron index for N_C = 1).
+        let mut mask = vec![0u64; words];
+        for &n in active {
+            mask[n / 64] |= 1u64 << (n % 64);
+        }
+
+        // Emulation-bit word: weight sign from the stored MSB row.
+        let sign_w: Vec<u64> = self.array.row_words(w_row_base + w_bits - 1).to_vec();
+
+        let n_active = active.len() as u64;
+        let mut carry = vec![0u64; words];
+        let mut out = vec![0u64; words];
+        for row in 0..p_bits {
+            self.counters.cim_cycles += 1;
+            self.counters.wl_activations += 1;
+            self.counters.active_col_cycles += n_active;
+            self.counters.standby_col_cycles += self.cfg.cols as u64 - n_active;
+            self.counters.sa_reads += 2 * n_active;
+            self.counters.adder_ops += n_active;
+            self.counters.writebacks += n_active;
+            if row >= w_bits {
+                self.counters.eb_reads += n_active;
+            }
+
+            let a_src: &[u64] = if row < w_bits {
+                self.array.row_words(w_row_base + row)
+            } else {
+                &sign_w
+            };
+            // Copy a to avoid aliasing with the write below.
+            let a_row: Vec<u64> = a_src.to_vec();
+            let v_row = v_row_base + row;
+            {
+                let b_row = self.array.row_words(v_row);
+                for w in 0..words {
+                    let a = a_row[w] & mask[w];
+                    let b = b_row[w];
+                    let c = carry[w];
+                    let sum = a ^ b ^ c;
+                    let cout = (a & b) | (c & (a ^ b));
+                    out[w] = (sum & mask[w]) | (b & !mask[w]);
+                    carry[w] = cout & mask[w];
+                }
+            }
+            self.array.write_row_words(v_row, &out);
+        }
+        self.counters.sops += n_active;
+    }
+
+    /// Threshold step for all resident neurons: bit-serial MSB-first
+    /// comparison against `threshold`, then conditional reset-by-
+    /// subtraction for neurons that fired. Returns the spike vector.
+    pub fn cim_fire(&mut self, threshold: i64) -> Vec<bool> {
+        let shape_p = self.cfg.shape_p();
+        let n_r_p = shape_p.n_r();
+        let p_bits = self.cfg.p_bits;
+        let t = wrap(threshold, p_bits);
+        let v_row_base = self.vmem_row_base();
+        let n_c = self.cfg.n_c;
+        let total_cols = (self.cfg.neurons * n_c as usize) as u64;
+
+        // --- Comparison pass: walk rows MSB→LSB; within a row, bits in
+        // descending significance. The controller broadcasts threshold bits.
+        for pc in self.pcs.iter_mut() {
+            pc.reset_cmp();
+        }
+        let mut fired = vec![false; self.cfg.neurons];
+        for row in (0..n_r_p).rev() {
+            self.counters.cim_cycles += 1;
+            self.counters.wl_activations += 1;
+            self.counters.active_col_cycles += total_cols;
+            self.counters.standby_col_cycles += self.cfg.cols as u64 - total_cols;
+            self.counters.sa_reads += total_cols;
+            // Row programme (MSB-of-row first), shared by all neuron
+            // groups: (col_offset, threshold bit, is_sign).
+            let mut order = shape_p.visit_order(row);
+            order.reverse();
+            let programme: Vec<(usize, bool, bool)> = order
+                .iter()
+                .filter_map(|&co| {
+                    shape_p.bit_at(row, co).map(|pos| {
+                        (co as usize, bit_of(t, pos, p_bits), pos == p_bits - 1)
+                    })
+                })
+                .collect();
+            self.counters.compare_ops +=
+                programme.len() as u64 * self.cfg.neurons as u64;
+            let v_row = v_row_base + row as usize;
+            for n in 0..self.cfg.neurons {
+                let base_col = self.col_base(n);
+                // Comparator state is carried per neuron group in the
+                // group's boundary PC.
+                if self.pcs[base_col].cmp_state != super::pc::CmpState::Equal {
+                    continue; // latched: the silicon comparator is idle too
+                }
+                for &(co, t_bit, is_sign) in &programme {
+                    let v_bit = self.array.get(v_row, base_col + co);
+                    let pc = &mut self.pcs[base_col];
+                    pc.compare_step(v_bit, t_bit, is_sign);
+                }
+            }
+        }
+        for (n, f) in fired.iter_mut().enumerate() {
+            // Greater or Equal fires (v >= t).
+            *f = self.pcs[self.col_base(n)].compare_result();
+            self.counters.io_bits += 1; // spike out through the port
+        }
+
+        // --- Conditional subtraction pass: v ← v - t for fired neurons,
+        // implemented as bit-serial add of (!t) with initial carry 1.
+        let any = fired.iter().any(|&f| f);
+        if any {
+            let active: Vec<usize> =
+                (0..self.cfg.neurons).filter(|&n| fired[n]).collect();
+            let active_cols = active.len() as u64 * n_c as u64;
+            for row in 0..n_r_p {
+                self.counters.cim_cycles += 1;
+                self.counters.wl_activations += 1;
+                self.counters.active_col_cycles += active_cols;
+                self.counters.standby_col_cycles += self.cfg.cols as u64 - active_cols;
+                self.counters.sa_reads += active_cols;
+                // Row programme shared by all fired neurons:
+                // (col_offset, !t bit broadcast by the controller).
+                let programme: Vec<(usize, bool)> = shape_p
+                    .visit_order(row)
+                    .iter()
+                    .filter_map(|&co| {
+                        shape_p
+                            .bit_at(row, co)
+                            .map(|pos| (co as usize, !bit_of(t, pos, p_bits)))
+                    })
+                    .collect();
+                self.counters.adder_ops += programme.len() as u64 * active.len() as u64;
+                self.counters.writebacks += programme.len() as u64 * active.len() as u64;
+                self.counters.carry_hops +=
+                    (programme.len().saturating_sub(1)) as u64 * active.len() as u64;
+                let v_row = v_row_base + row as usize;
+                for &n in &active {
+                    let base_col = self.col_base(n);
+                    let first_col = base_col + programme[0].0;
+                    let mut carry =
+                        if row == 0 { true } else { self.pcs[first_col].carry_reg };
+                    let mut last_col = first_col;
+                    for &(co, a) in &programme {
+                        let col = base_col + co;
+                        let b = self.array.get(v_row, col);
+                        let (sum, cout) = Pc::full_add(a, b, carry);
+                        self.array.set(v_row, col, sum);
+                        carry = cout;
+                        last_col = col;
+                    }
+                    self.pcs[last_col].carry_reg = carry;
+                }
+            }
+        }
+        fired
+    }
+
+    /// Convenience: process one timestep of input spikes event-driven —
+    /// accumulate every spiking synapse, then fire. Returns output spikes.
+    pub fn timestep(&mut self, spikes_in: &[bool], threshold: i64) -> Vec<bool> {
+        assert_eq!(spikes_in.len(), self.cfg.fan_in);
+        for (j, &s) in spikes_in.iter().enumerate() {
+            if s {
+                self.cim_accumulate(j, None);
+            }
+        }
+        self.cim_fire(threshold)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::quant::{max_val, min_val};
+    use crate::util::proptest_lite::{check, prop_eq, Config};
+
+    fn mk(w_bits: u32, p_bits: u32, n_c: u32, fan_in: usize, neurons: usize) -> CimMacro {
+        CimMacro::new(MacroConfig::flexspim(w_bits, p_bits, n_c, fan_in, neurons)).unwrap()
+    }
+
+    #[test]
+    fn weight_vmem_roundtrip() {
+        let mut m = mk(5, 10, 3, 4, 8);
+        m.load_weight(2, 1, -13);
+        m.load_vmem(2, 301);
+        assert_eq!(m.peek_weight(2, 1), -13);
+        assert_eq!(m.peek_vmem(2), 301);
+        // Other slots untouched.
+        assert_eq!(m.peek_weight(2, 0), 0);
+        assert_eq!(m.peek_vmem(3), 0);
+    }
+
+    #[test]
+    fn accumulate_matches_golden_basic() {
+        let mut m = mk(4, 8, 1, 2, 4); // pure bit-serial
+        for n in 0..4 {
+            m.load_weight(n, 0, n as i64 - 2); // -2,-1,0,1
+            m.load_vmem(n, 10 * n as i64);
+        }
+        m.cim_accumulate(0, None);
+        for n in 0..4 {
+            assert_eq!(m.peek_vmem(n), wrap(10 * n as i64 + (n as i64 - 2), 8), "n={n}");
+        }
+    }
+
+    #[test]
+    fn accumulate_wraps_like_two_complement() {
+        let mut m = mk(4, 4, 2, 1, 1);
+        m.load_weight(0, 0, 5);
+        m.load_vmem(0, 6);
+        m.cim_accumulate(0, None); // 11 -> wraps to -5 in 4 bits
+        assert_eq!(m.peek_vmem(0), -5);
+    }
+
+    #[test]
+    fn sign_extension_via_eb() {
+        // w_bits < p_bits: negative weights must sign-extend over the
+        // emulation bits for upper vmem rows.
+        let mut m = mk(3, 12, 2, 1, 2);
+        m.load_weight(0, 0, -4); // most negative 3-bit value
+        m.load_weight(1, 0, 3);
+        m.load_vmem(0, 100);
+        m.load_vmem(1, 100);
+        m.cim_accumulate(0, None);
+        assert_eq!(m.peek_vmem(0), 96);
+        assert_eq!(m.peek_vmem(1), 103);
+        assert!(m.counters().eb_reads > 0, "EB must have been exercised");
+    }
+
+    #[test]
+    fn masked_neurons_untouched() {
+        let mut m = mk(4, 8, 1, 1, 3);
+        for n in 0..3 {
+            m.load_weight(n, 0, 3);
+            m.load_vmem(n, 1);
+        }
+        m.cim_accumulate(0, Some(&[true, false, true]));
+        assert_eq!(m.peek_vmem(0), 4);
+        assert_eq!(m.peek_vmem(1), 1, "masked neuron unchanged");
+        assert_eq!(m.peek_vmem(2), 4);
+    }
+
+    #[test]
+    fn fire_compare_and_reset() {
+        let mut m = mk(4, 8, 2, 1, 3);
+        m.load_vmem(0, 50);
+        m.load_vmem(1, 20);
+        m.load_vmem(2, 30); // exactly at threshold
+        let spikes = m.cim_fire(30);
+        assert_eq!(spikes, vec![true, false, true]);
+        assert_eq!(m.peek_vmem(0), 20, "reset by subtraction");
+        assert_eq!(m.peek_vmem(1), 20, "subthreshold untouched");
+        assert_eq!(m.peek_vmem(2), 0);
+    }
+
+    #[test]
+    fn fire_with_negative_vmem() {
+        let mut m = mk(4, 6, 3, 1, 2);
+        m.load_vmem(0, -5);
+        m.load_vmem(1, 7);
+        let spikes = m.cim_fire(3);
+        assert_eq!(spikes, vec![false, true]);
+        assert_eq!(m.peek_vmem(0), -5);
+        assert_eq!(m.peek_vmem(1), 4);
+    }
+
+    #[test]
+    fn timestep_matches_lif_layer() {
+        use crate::snn::lif::LifLayer;
+        use crate::snn::quant::Resolution;
+        let res = Resolution::new(4, 10);
+        let weights = vec![
+            vec![3, -2, 1, 4],
+            vec![-1, -1, 2, 2],
+            vec![4, 4, 4, 4],
+        ];
+        let mut golden = LifLayer::new(weights.clone(), res, 6);
+        let mut m = mk(4, 10, 2, 4, 3);
+        for (n, row) in weights.iter().enumerate() {
+            for (j, &w) in row.iter().enumerate() {
+                m.load_weight(n, j, w);
+            }
+        }
+        let patterns = [
+            vec![true, false, true, false],
+            vec![true, true, true, true],
+            vec![false, false, false, true],
+            vec![true, false, false, false],
+        ];
+        for p in &patterns {
+            let expect = golden.step(p);
+            let got = m.timestep(p, 6);
+            assert_eq!(got, expect, "spikes for {p:?}");
+            for n in 0..3 {
+                assert_eq!(m.peek_vmem(n), golden.v[n], "vmem neuron {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_accumulate_bit_exact_across_shapes() {
+        // The flagship property: for random resolutions, shapes, and
+        // operand values, the bit-serial shaped CIM add equals wrapped
+        // integer addition — FlexSpIM's arbitrary resolution (contribution
+        // #1) and arbitrary shape (contribution #2) preserve exactness.
+        check(
+            "cim-accumulate-bit-exact",
+            &Config { cases: 120, ..Default::default() },
+            |c| {
+                let w_bits = c.rng.range_i64(1, 12) as u32;
+                let p_bits = c.rng.range_i64(w_bits as i64, 20) as u32;
+                let n_c = c.rng.range_i64(1, p_bits as i64) as u32;
+                let neurons = c.rng.range_usize(1, 4);
+                let fan_in = c.rng.range_usize(1, 3);
+                let cfg = MacroConfig::flexspim(w_bits, p_bits, n_c, fan_in, neurons);
+                if cfg.validate().is_err() {
+                    return Ok(()); // skip configs that don't fit
+                }
+                let mut m = CimMacro::new(cfg).unwrap();
+                let mut golden = vec![0i64; neurons];
+                let mut ws = vec![vec![0i64; fan_in]; neurons];
+                for n in 0..neurons {
+                    for j in 0..fan_in {
+                        let w = c.rng.range_i64(min_val(w_bits), max_val(w_bits));
+                        ws[n][j] = w;
+                        m.load_weight(n, j, w);
+                    }
+                    let v = c.rng.range_i64(min_val(p_bits), max_val(p_bits));
+                    golden[n] = v;
+                    m.load_vmem(n, v);
+                }
+                for _ in 0..4 {
+                    let j = c.rng.range_usize(0, fan_in - 1);
+                    m.cim_accumulate(j, None);
+                    for n in 0..neurons {
+                        golden[n] = wrap(golden[n] + ws[n][j], p_bits);
+                    }
+                }
+                for n in 0..neurons {
+                    prop_eq(
+                        m.peek_vmem(n),
+                        golden[n],
+                        &format!("w={w_bits} p={p_bits} n_c={n_c} neuron {n}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_shape_invariance() {
+        // Same operands, different shapes -> identical results (the paper's
+        // energy varies <24 % across shapes, the *values* not at all).
+        check("cim-shape-invariance", &Config { cases: 60, ..Default::default() }, |c| {
+            let w_bits = c.rng.range_i64(2, 8) as u32;
+            let p_bits = c.rng.range_i64(w_bits as i64, 16) as u32;
+            let w = c.rng.range_i64(min_val(w_bits), max_val(w_bits));
+            let v0 = c.rng.range_i64(min_val(p_bits), max_val(p_bits));
+            let mut results = Vec::new();
+            for n_c in 1..=p_bits {
+                let cfg = MacroConfig::flexspim(w_bits, p_bits, n_c, 1, 1);
+                if cfg.validate().is_err() {
+                    continue;
+                }
+                let mut m = CimMacro::new(cfg).unwrap();
+                m.load_weight(0, 0, w);
+                m.load_vmem(0, v0);
+                m.cim_accumulate(0, None);
+                results.push(m.peek_vmem(0));
+            }
+            let expect = wrap(v0 + w, p_bits);
+            for r in &results {
+                prop_eq(*r, expect, &format!("w={w} v0={v0} p_bits={p_bits}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn counters_track_shape_activity() {
+        // 16-bit operand bit-serial (1 col × 16 rows) vs bit-parallel
+        // (16 cols × 1 row): same adder work, different cycle counts.
+        let mut serial = mk(8, 16, 1, 1, 1);
+        serial.load_weight(0, 0, 7);
+        serial.cim_accumulate(0, None);
+        let s = *serial.counters();
+
+        let mut parallel = mk(8, 16, 16, 1, 1);
+        parallel.load_weight(0, 0, 7);
+        parallel.cim_accumulate(0, None);
+        let p = parallel.counters();
+
+        assert_eq!(s.cim_cycles, 16);
+        assert_eq!(p.cim_cycles, 1);
+        assert_eq!(s.adder_ops, p.adder_ops, "same total adder evaluations");
+        assert_eq!(s.carry_hops, 0, "bit-serial: no inter-PC hops");
+        assert_eq!(p.carry_hops, 15, "bit-parallel: full ripple");
+        assert_eq!(s.sops, 1);
+        assert_eq!(p.sops, 1);
+    }
+
+    #[test]
+    fn validate_rejects_overflow() {
+        assert!(MacroConfig::flexspim(8, 16, 1, 600, 1).validate().is_err());
+        assert!(MacroConfig::flexspim(8, 16, 4, 4, 100).validate().is_err());
+        assert!(MacroConfig::flexspim(8, 16, 4, 4, 64).validate().is_ok());
+    }
+
+    #[test]
+    fn peak_throughput_matches_paper() {
+        // Table I: 2.5 GSOPS at 157 MHz with 8b/16b bit-serial mapping and
+        // 256 single-column neurons.
+        let cfg = MacroConfig::flexspim(8, 16, 1, 1, 256);
+        let gsops = cfg.peak_sops(157e6) / 1e9;
+        assert!((gsops - 2.512).abs() < 0.02, "got {gsops}");
+        // 1.2 GSOPS at 75.5 MHz.
+        let gsops_lo = cfg.peak_sops(75.5e6) / 1e9;
+        assert!((gsops_lo - 1.208).abs() < 0.02, "got {gsops_lo}");
+    }
+}

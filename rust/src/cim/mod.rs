@@ -1,0 +1,30 @@
+//! Bit-accurate digital CIM macro simulator — the substrate that replaces
+//! the paper's fabricated 40-nm chip.
+//!
+//! The FlexSpIM macro (paper Fig. 2d) is a 512×256 6T SRAM array whose
+//! columns each carry a peripheral circuit (PC) with a dual sense
+//! amplifier, a 1-bit full adder, carry-select logic, a comparator, and I/O
+//! logic. Two wordlines are activated per internal cycle, giving each
+//! column `AND`/`NOR` of the two stored bits, from which the PC forms a
+//! full adder (Fig. 2b). Multi-bit operands are laid out over arbitrary
+//! `N_R × N_C` rectangles (Fig. 3) — carries chain across neighboring PCs
+//! within a row and hop rows through per-PC carry registers with a
+//! ping-pong left/right direction.
+//!
+//! Everything architecturally observable is modeled: the 5-phase operation
+//! (Fig. 2c), control-bitcell PC states, emulation-bit sign extension,
+//! per-column standby gating, and an event ledger ([`counters`]) that the
+//! calibrated energy model converts to joules.
+
+pub mod array;
+pub mod counters;
+pub mod macro_unit;
+pub mod ops;
+pub mod pc;
+pub mod shape;
+
+pub use array::SramArray;
+pub use counters::EnergyCounters;
+pub use macro_unit::{CimMacro, MacroConfig};
+pub use pc::{Pc, PcMode};
+pub use shape::OperandShape;

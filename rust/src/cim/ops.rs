@@ -1,0 +1,132 @@
+//! Timing model of the 5-phase CIM operation (paper Fig. 2c).
+//!
+//! Nominal measurement conditions: a 157-MHz *system* clock defines one
+//! complete CIM row-operation, while a 942-MHz *internal* clock sequences
+//! the phases inside it (942 / 157 = 6 internal ticks: five phases plus a
+//! guard slot). This module turns cycle counts from the simulator into
+//! wall-clock latency and throughput at any supported operating point.
+
+/// The five phases of one CIM row-operation (Fig. 2c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// 1 — precharge BL/BLB to VDD.
+    Precharge,
+    /// 2 — dual-WL activation: AND/NOR evaluation on BL/BLB.
+    Evaluate,
+    /// 3 — sum + carry generation in the PC.
+    AddGenerate,
+    /// 4 — half-select-prevention precharge.
+    GuardPrecharge,
+    /// 5 — write-back of the new membrane-potential bit.
+    WriteBack,
+}
+
+/// All phases in execution order.
+pub const PHASES: [Phase; 5] = [
+    Phase::Precharge,
+    Phase::Evaluate,
+    Phase::AddGenerate,
+    Phase::GuardPrecharge,
+    Phase::WriteBack,
+];
+
+/// Macro operating point (supply + clocks), bounded by the silicon's
+/// measured range (Table I: 0.9–1.1 V, 75.5–157 MHz).
+#[derive(Debug, Clone, Copy)]
+pub struct OperatingPoint {
+    /// Core supply voltage in volts.
+    pub vdd: f64,
+    /// System clock (one CIM row-operation per cycle), Hz.
+    pub system_clock_hz: f64,
+}
+
+impl OperatingPoint {
+    /// Nominal point: 1.1 V, 157 MHz (paper §III-A).
+    pub fn nominal() -> Self {
+        OperatingPoint { vdd: 1.1, system_clock_hz: 157e6 }
+    }
+
+    /// Low-voltage point: 0.9 V, 75.5 MHz.
+    pub fn low_voltage() -> Self {
+        OperatingPoint { vdd: 0.9, system_clock_hz: 75.5e6 }
+    }
+
+    /// Internal phase clock: 6 ticks per system cycle (942 MHz at nominal).
+    pub fn internal_clock_hz(&self) -> f64 {
+        self.system_clock_hz * 6.0
+    }
+
+    /// Validate against the measured silicon envelope.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.9..=1.1).contains(&self.vdd) {
+            return Err(format!("vdd {} outside measured 0.9-1.1 V range", self.vdd));
+        }
+        if !(75.5e6..=157e6).contains(&self.system_clock_hz) {
+            return Err(format!(
+                "clock {} outside measured 75.5-157 MHz range",
+                self.system_clock_hz
+            ));
+        }
+        Ok(())
+    }
+
+    /// Wall-clock seconds for `cim_cycles` row-operations.
+    pub fn latency_s(&self, cim_cycles: u64) -> f64 {
+        cim_cycles as f64 / self.system_clock_hz
+    }
+
+    /// Linear frequency interpolation between the two measured points as a
+    /// function of VDD (simple but monotone — adequate for scaling studies).
+    pub fn at_vdd(vdd: f64) -> Self {
+        let t = ((vdd - 0.9) / (1.1 - 0.9)).clamp(0.0, 1.0);
+        OperatingPoint { vdd, system_clock_hz: 75.5e6 + t * (157e6 - 75.5e6) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_order_and_count() {
+        assert_eq!(PHASES.len(), 5);
+        assert_eq!(PHASES[0], Phase::Precharge);
+        assert_eq!(PHASES[4], Phase::WriteBack);
+    }
+
+    #[test]
+    fn nominal_clocks_match_paper() {
+        let op = OperatingPoint::nominal();
+        assert_eq!(op.vdd, 1.1);
+        assert_eq!(op.system_clock_hz, 157e6);
+        // 157 MHz × 6 = 942 MHz internal clock, as measured.
+        assert!((op.internal_clock_hz() - 942e6).abs() < 1e3);
+        op.validate().unwrap();
+        OperatingPoint::low_voltage().validate().unwrap();
+    }
+
+    #[test]
+    fn envelope_enforced() {
+        assert!(OperatingPoint { vdd: 1.3, system_clock_hz: 100e6 }.validate().is_err());
+        assert!(OperatingPoint { vdd: 1.0, system_clock_hz: 200e6 }.validate().is_err());
+    }
+
+    #[test]
+    fn latency_scaling() {
+        let op = OperatingPoint::nominal();
+        // A 16-row accumulate takes 16 system cycles.
+        let dt = op.latency_s(16);
+        assert!((dt - 16.0 / 157e6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn vdd_interpolation_endpoints() {
+        let lo = OperatingPoint::at_vdd(0.9);
+        let hi = OperatingPoint::at_vdd(1.1);
+        assert!((lo.system_clock_hz - 75.5e6).abs() < 1.0);
+        assert!((hi.system_clock_hz - 157e6).abs() < 1.0);
+        let mid = OperatingPoint::at_vdd(1.0);
+        assert!(mid.system_clock_hz > lo.system_clock_hz);
+        assert!(mid.system_clock_hz < hi.system_clock_hz);
+    }
+}

@@ -1,0 +1,204 @@
+//! Peripheral circuit (PC) model.
+//!
+//! One PC sits under every column (paper Fig. 2e): dual sense amplifier,
+//! a 1-bit full adder (Neural-Cache style [14]), a carry-select circuit,
+//! a comparator bit, and I/O logic. Two control bitcells per column define
+//! the PC state (Fig. 3d), which selects where the adder's carry-in comes
+//! from — this is what chains neighboring PCs into arbitrary-width adders
+//! and what powers unused columns down.
+
+/// PC operating mode, decoded from the two control bitcells (Fig. 3d).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PcMode {
+    /// Column unused: clock-gated, precharge disabled (87 % energy cut).
+    Standby,
+    /// First column of an operand: carry-in is 0 (row 0) or the PC's own
+    /// stored carry register (subsequent rows, after ping-pong turn).
+    Boundary,
+    /// Chained column: carry-in arrives from the left neighbor's carry-out.
+    ChainLeft,
+    /// Chained column: carry-in arrives from the right neighbor's carry-out.
+    ChainRight,
+}
+
+impl PcMode {
+    /// Encode to the 2-bit control-bitcell pattern.
+    pub fn encode(self) -> u8 {
+        match self {
+            PcMode::Standby => 0b00,
+            PcMode::Boundary => 0b01,
+            PcMode::ChainLeft => 0b10,
+            PcMode::ChainRight => 0b11,
+        }
+    }
+
+    /// Decode from the 2-bit control-bitcell pattern.
+    pub fn decode(bits: u8) -> PcMode {
+        match bits & 0b11 {
+            0b00 => PcMode::Standby,
+            0b01 => PcMode::Boundary,
+            0b10 => PcMode::ChainLeft,
+            _ => PcMode::ChainRight,
+        }
+    }
+}
+
+/// Per-column peripheral circuit state.
+#[derive(Debug, Clone)]
+pub struct Pc {
+    /// Current mode (from control bitcells).
+    pub mode: PcMode,
+    /// Carry register: holds the inter-row carry at operand boundaries.
+    pub carry_reg: bool,
+    /// Comparator state for the bit-serial threshold comparison.
+    pub cmp_state: CmpState,
+}
+
+/// Bit-serial comparator state (evaluated MSB→LSB).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpState {
+    /// Still equal so far.
+    Equal,
+    /// Membrane potential proven greater than threshold.
+    Greater,
+    /// Membrane potential proven less than threshold.
+    Less,
+}
+
+impl Default for Pc {
+    fn default() -> Self {
+        Pc { mode: PcMode::Standby, carry_reg: false, cmp_state: CmpState::Equal }
+    }
+}
+
+impl Pc {
+    /// Full-adder evaluation: returns `(sum, carry_out)`.
+    ///
+    /// The silicon computes this from the BL/BLB readout (Fig. 2b):
+    /// `and = A·B`, `nor = !A·!B`, `xor = !and·!nor`, then
+    /// `sum = xor ^ cin`, `cout = and + xor·cin` — identical truth table
+    /// to the boolean formulation below, asserted by the unit test.
+    #[inline]
+    pub fn full_add(a: bool, b: bool, cin: bool) -> (bool, bool) {
+        let sum = a ^ b ^ cin;
+        let cout = (a & b) | (cin & (a ^ b));
+        (sum, cout)
+    }
+
+    /// Full-adder evaluation from the CIM readout signals (AND/NOR of the
+    /// two bitcells), as the PC actually receives them.
+    #[inline]
+    pub fn full_add_from_readout(and: bool, nor: bool, cin: bool) -> (bool, bool) {
+        let xor = !and & !nor;
+        let sum = xor ^ cin;
+        let cout = and | (xor & cin);
+        (sum, cout)
+    }
+
+    /// One MSB-first comparison step between a membrane bit and the
+    /// corresponding threshold bit. For signed operands the MSB step is
+    /// inverted (1 in the sign position means *smaller*).
+    #[inline]
+    pub fn compare_step(&mut self, v_bit: bool, t_bit: bool, is_sign_bit: bool) {
+        if self.cmp_state != CmpState::Equal {
+            return;
+        }
+        if v_bit != t_bit {
+            let v_wins = if is_sign_bit { !v_bit } else { v_bit };
+            self.cmp_state = if v_wins { CmpState::Greater } else { CmpState::Less };
+        }
+    }
+
+    /// Resolve the comparison: `v >= threshold`.
+    #[inline]
+    pub fn compare_result(&self) -> bool {
+        matches!(self.cmp_state, CmpState::Greater | CmpState::Equal)
+    }
+
+    /// Reset comparator for a new comparison.
+    pub fn reset_cmp(&mut self) {
+        self.cmp_state = CmpState::Equal;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_adder_truth_table() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for c in [false, true] {
+                    let (s, co) = Pc::full_add(a, b, c);
+                    let total = a as u8 + b as u8 + c as u8;
+                    assert_eq!(s, total & 1 == 1);
+                    assert_eq!(co, total >= 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn readout_adder_matches_boolean_adder() {
+        // The PC sees (AND, NOR) from the bitlines, not (A, B). Both
+        // formulations must agree for all input combinations (Fig. 2b).
+        for a in [false, true] {
+            for b in [false, true] {
+                for c in [false, true] {
+                    let and = a & b;
+                    let nor = !a & !b;
+                    assert_eq!(
+                        Pc::full_add_from_readout(and, nor, c),
+                        Pc::full_add(a, b, c),
+                        "a={a} b={b} c={c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mode_encoding_roundtrip() {
+        for m in [PcMode::Standby, PcMode::Boundary, PcMode::ChainLeft, PcMode::ChainRight] {
+            assert_eq!(PcMode::decode(m.encode()), m);
+        }
+    }
+
+    #[test]
+    fn comparator_unsigned_paths() {
+        // v = 0b101 (5) vs t = 0b011 (3), MSB first, no sign bit.
+        let mut pc = Pc::default();
+        pc.compare_step(true, false, false); // MSB differs: v wins
+        pc.compare_step(false, true, false); // latched; ignored
+        pc.compare_step(true, true, false);
+        assert!(pc.compare_result());
+
+        pc.reset_cmp();
+        // v = 2 (010) vs t = 3 (011): equal, equal, then t wins.
+        pc.compare_step(false, false, false);
+        pc.compare_step(true, true, false);
+        pc.compare_step(false, true, false);
+        assert!(!pc.compare_result());
+
+        pc.reset_cmp();
+        // equal values -> v >= t holds.
+        for _ in 0..3 {
+            pc.compare_step(true, true, false);
+        }
+        assert!(pc.compare_result());
+    }
+
+    #[test]
+    fn comparator_signed_msb() {
+        // v = -1 (sign bit 1) vs t = +1 (sign bit 0): v < t.
+        let mut pc = Pc::default();
+        pc.compare_step(true, false, true);
+        assert!(!pc.compare_result());
+
+        pc.reset_cmp();
+        // v = +1 vs t = -1: v > t.
+        pc.compare_step(false, true, true);
+        assert!(pc.compare_result());
+    }
+}

@@ -1,0 +1,193 @@
+//! Operand shaping (paper §II-A, Fig. 3).
+//!
+//! A `bits`-wide operand may be mapped onto any `N_R × N_C` rectangle of
+//! the array with `N_R·N_C ≥ bits`. Bits are laid out boustrophedon
+//! (ping-pong): even rows run LSB→MSB left-to-right, odd rows
+//! right-to-left, so that the carry leaving the last column of one row is
+//! consumed by the *same* PC in the next row — inter-PC movement stays
+//! bounded to direct neighbors regardless of operand width, which is what
+//! makes the scheme scalable (paper §II-A, last paragraph).
+
+/// Shape of one multi-bit operand in the array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OperandShape {
+    /// Operand width in bits.
+    pub bits: u32,
+    /// Columns occupied (`N_C`).
+    pub n_c: u32,
+}
+
+impl OperandShape {
+    /// Construct and validate a shape.
+    pub fn new(bits: u32, n_c: u32) -> Self {
+        assert!(bits >= 1, "operand must have at least one bit");
+        assert!(n_c >= 1, "shape must occupy at least one column");
+        OperandShape { bits, n_c }
+    }
+
+    /// Rows occupied (`N_R = ceil(bits / N_C)`).
+    pub fn n_r(&self) -> u32 {
+        self.bits.div_ceil(self.n_c)
+    }
+
+    /// Bit position stored at `(row, col_offset)` within the rectangle,
+    /// honoring the ping-pong layout. Returns `None` for padding cells
+    /// (positions ≥ `bits` in the last row).
+    pub fn bit_at(&self, row: u32, col_offset: u32) -> Option<u32> {
+        debug_assert!(row < self.n_r() && col_offset < self.n_c);
+        let within = if row % 2 == 0 {
+            col_offset
+        } else {
+            self.n_c - 1 - col_offset // ping-pong: odd rows reversed
+        };
+        let pos = row * self.n_c + within;
+        if pos < self.bits {
+            Some(pos)
+        } else {
+            None
+        }
+    }
+
+    /// Column offset (within the rectangle) holding bit `pos`.
+    pub fn col_of_bit(&self, pos: u32) -> u32 {
+        debug_assert!(pos < self.bits);
+        let row = pos / self.n_c;
+        let within = pos % self.n_c;
+        if row % 2 == 0 {
+            within
+        } else {
+            self.n_c - 1 - within
+        }
+    }
+
+    /// Row (within the rectangle) holding bit `pos`.
+    pub fn row_of_bit(&self, pos: u32) -> u32 {
+        debug_assert!(pos < self.bits);
+        pos / self.n_c
+    }
+
+    /// Visit order of column offsets for row `row` during the bit-serial
+    /// walk: always LSB-of-the-row first, i.e. left→right on even rows and
+    /// right→left on odd rows.
+    pub fn visit_order(&self, row: u32) -> Vec<u32> {
+        if row % 2 == 0 {
+            (0..self.n_c).collect()
+        } else {
+            (0..self.n_c).rev().collect()
+        }
+    }
+
+    /// Padding cells in the last row (waste for non-divisible shapes).
+    pub fn padding_bits(&self) -> u32 {
+        self.n_r() * self.n_c - self.bits
+    }
+}
+
+/// Enumerate all shapes for `bits` with `n_c` up to `max_cols` that waste
+/// no more than one row of padding — the design space swept in Fig. 7a.
+pub fn enumerate_shapes(bits: u32, max_cols: u32) -> Vec<OperandShape> {
+    (1..=max_cols.min(bits))
+        .map(|n_c| OperandShape::new(bits, n_c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, prop_assert, prop_eq, Config};
+
+    #[test]
+    fn row_count() {
+        assert_eq!(OperandShape::new(16, 1).n_r(), 16); // bit-serial
+        assert_eq!(OperandShape::new(16, 16).n_r(), 1); // bit-parallel
+        assert_eq!(OperandShape::new(16, 4).n_r(), 4); // 4×4
+        assert_eq!(OperandShape::new(12, 3).n_r(), 4); // Fig. 3e: 4×3
+        assert_eq!(OperandShape::new(10, 3).n_r(), 4); // padded
+    }
+
+    #[test]
+    fn fig3e_pingpong_layout() {
+        // 12 bits over 4×3 (Fig. 3e): row0 = b0 b1 b2, row1 = b5 b4 b3, ...
+        let s = OperandShape::new(12, 3);
+        assert_eq!(s.bit_at(0, 0), Some(0));
+        assert_eq!(s.bit_at(0, 2), Some(2));
+        assert_eq!(s.bit_at(1, 0), Some(5));
+        assert_eq!(s.bit_at(1, 2), Some(3));
+        assert_eq!(s.bit_at(2, 0), Some(6));
+        assert_eq!(s.bit_at(3, 2), Some(9));
+    }
+
+    #[test]
+    fn padding_cells_are_none() {
+        let s = OperandShape::new(10, 3); // 4 rows, last row holds b9 only
+        // Row 3 is odd -> reversed: col_offset 2 holds b9, offsets 0,1 pad.
+        assert_eq!(s.bit_at(3, 2), Some(9));
+        assert_eq!(s.bit_at(3, 1), None);
+        assert_eq!(s.bit_at(3, 0), None);
+        assert_eq!(s.padding_bits(), 2);
+    }
+
+    #[test]
+    fn carry_continuity_across_rows() {
+        // The MSB-of-row column must equal the LSB-of-next-row column:
+        // that is the whole point of the ping-pong layout.
+        for bits in [4u32, 9, 12, 16, 24, 33] {
+            for n_c in 1..=bits {
+                let s = OperandShape::new(bits, n_c);
+                for row in 0..s.n_r() - 1 {
+                    let msb_of_row = ((row + 1) * n_c - 1).min(bits - 1);
+                    let lsb_of_next = (row + 1) * n_c;
+                    if lsb_of_next >= bits {
+                        continue;
+                    }
+                    assert_eq!(
+                        s.col_of_bit(msb_of_row),
+                        s.col_of_bit(lsb_of_next),
+                        "bits={bits} n_c={n_c} row={row}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_bit_mapping_is_a_bijection() {
+        check("shape-bijection", &Config::default(), |c| {
+            let bits = c.rng.range_i64(1, 64) as u32;
+            let n_c = c.rng.range_i64(1, bits as i64) as u32;
+            let s = OperandShape::new(bits, n_c);
+            let mut seen = vec![false; bits as usize];
+            for row in 0..s.n_r() {
+                for col in 0..s.n_c {
+                    if let Some(pos) = s.bit_at(row, col) {
+                        prop_assert(!seen[pos as usize], "duplicate bit position")?;
+                        seen[pos as usize] = true;
+                        prop_eq(s.col_of_bit(pos), col, "col_of_bit inverse")?;
+                        prop_eq(s.row_of_bit(pos), row, "row_of_bit inverse")?;
+                    }
+                }
+            }
+            prop_assert(seen.iter().all(|&b| b), "all bits placed")
+        });
+    }
+
+    #[test]
+    fn visit_order_starts_at_row_lsb() {
+        let s = OperandShape::new(12, 3);
+        assert_eq!(s.visit_order(0), vec![0, 1, 2]);
+        assert_eq!(s.visit_order(1), vec![2, 1, 0]);
+        // First visited cell of each row is the row's LSB.
+        for row in 0..s.n_r() {
+            let first = s.visit_order(row)[0];
+            assert_eq!(s.bit_at(row, first), Some(row * 3));
+        }
+    }
+
+    #[test]
+    fn enumerate_shape_sweep() {
+        let shapes = enumerate_shapes(16, 256);
+        assert_eq!(shapes.len(), 16);
+        assert!(shapes.iter().any(|s| s.n_c == 1 && s.n_r() == 16));
+        assert!(shapes.iter().any(|s| s.n_c == 16 && s.n_r() == 1));
+    }
+}

@@ -1,0 +1,13 @@
+//! Configuration system.
+//!
+//! Experiments are driven by small TOML files (see `configs/` at the repo
+//! root). serde is not vendored offline, so [`toml_lite`] implements the
+//! subset we need (tables, strings, ints, floats, bools, homogeneous
+//! arrays, comments) with typed accessors, and [`sim`] defines the typed
+//! simulation config assembled from a parsed document.
+
+pub mod sim;
+pub mod toml_lite;
+
+pub use sim::SimConfig;
+pub use toml_lite::{Doc, Value};

@@ -1,0 +1,115 @@
+//! Typed simulation configuration assembled from a TOML-lite document.
+
+use std::path::Path;
+
+use super::toml_lite::Doc;
+use crate::dataflow::Policy;
+
+/// Top-level simulation configuration (CLI `--config file.toml`).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Number of CIM macros in the system.
+    pub num_macros: usize,
+    /// Dataflow policy.
+    pub policy: Policy,
+    /// Supply voltage (0.9–1.1 V envelope).
+    pub vdd: f64,
+    /// Samples per class for dataset runs.
+    pub samples_per_class: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Timesteps per inference.
+    pub timesteps: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            num_macros: 16,
+            policy: Policy::HsOpt,
+            vdd: 1.1,
+            samples_per_class: 2,
+            seed: 42,
+            timesteps: 16,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Parse from a document, falling back to defaults per key.
+    pub fn from_doc(doc: &Doc) -> Result<Self, String> {
+        let d = SimConfig::default();
+        let policy = match doc.str_or("sim.policy", "hs-opt").as_str() {
+            "ws-only" => Policy::WsOnly,
+            "os-only" => Policy::OsOnly,
+            "hs-min" => Policy::HsMin,
+            "hs-max" => Policy::HsMax,
+            "hs-opt" => Policy::HsOpt,
+            other => return Err(format!("unknown policy '{other}'")),
+        };
+        let cfg = SimConfig {
+            num_macros: doc.int_or("sim.macros", d.num_macros as i64) as usize,
+            policy,
+            vdd: doc.float_or("sim.vdd", d.vdd),
+            samples_per_class: doc.int_or("sim.samples_per_class", d.samples_per_class as i64)
+                as usize,
+            seed: doc.int_or("sim.seed", d.seed as i64) as u64,
+            timesteps: doc.int_or("sim.timesteps", d.timesteps as i64) as usize,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<Self, String> {
+        Self::from_doc(&Doc::load(path)?)
+    }
+
+    /// Sanity limits.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_macros == 0 || self.num_macros > 4096 {
+            return Err(format!("macros {} out of range", self.num_macros));
+        }
+        if !(0.9..=1.1).contains(&self.vdd) {
+            return Err(format!("vdd {} outside 0.9-1.1 V", self.vdd));
+        }
+        if self.timesteps == 0 || self.timesteps > 1024 {
+            return Err("timesteps out of range".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_overrides() {
+        let doc = Doc::parse(
+            "[sim]\nmacros = 4\npolicy = \"hs-min\"\nvdd = 0.9\nseed = 7",
+        )
+        .unwrap();
+        let c = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.num_macros, 4);
+        assert_eq!(c.policy, Policy::HsMin);
+        assert_eq!(c.vdd, 0.9);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.timesteps, 16, "default retained");
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let doc = Doc::parse("[sim]\npolicy = \"nope\"").unwrap();
+        assert!(SimConfig::from_doc(&doc).is_err());
+        let doc = Doc::parse("[sim]\nvdd = 1.5").unwrap();
+        assert!(SimConfig::from_doc(&doc).is_err());
+        let doc = Doc::parse("[sim]\nmacros = 0").unwrap();
+        assert!(SimConfig::from_doc(&doc).is_err());
+    }
+}

@@ -1,0 +1,337 @@
+//! A small TOML-subset parser.
+//!
+//! Supported: `[table]` / `[table.sub]` headers, `key = value` with string,
+//! integer, float, boolean, and homogeneous array values, `#` comments and
+//! blank lines. Unsupported TOML (multi-line strings, inline tables, dates,
+//! array-of-tables) is rejected with a line-numbered error. This covers the
+//! experiment configs in `configs/` without pulling in serde.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// 64-bit signed integer.
+    Int(i64),
+    /// 64-bit float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous array.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// String view, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Integer view (ints only; floats are not silently truncated).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Float view (accepts ints too, widened).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Boolean view.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array view.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-key → value map.
+/// Keys inside `[a.b]` tables are flattened to `a.b.key`.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: malformed table header", lineno + 1))?
+                    .trim();
+                if name.is_empty() || name.starts_with('[') {
+                    return Err(format!(
+                        "line {}: unsupported or empty table header",
+                        lineno + 1
+                    ));
+                }
+                prefix = format!("{name}.");
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let full = format!("{prefix}{key}");
+            if entries.insert(full.clone(), value).is_some() {
+                return Err(format!("line {}: duplicate key '{full}'", lineno + 1));
+            }
+        }
+        Ok(Doc { entries })
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &std::path::Path) -> Result<Doc, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Doc::parse(&text)
+    }
+
+    /// Raw value by dotted key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// String with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Integer with default.
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    /// Float with default (ints widen).
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    /// Bool with default.
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Required key of any type.
+    pub fn require(&self, key: &str) -> Result<&Value, String> {
+        self.get(key).ok_or_else(|| format!("missing config key '{key}'"))
+    }
+
+    /// All keys under a dotted prefix (e.g. `layers.`), sorted.
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s}"))?;
+        if inner.contains('"') {
+            return Err(format!("embedded quote unsupported: {s}"));
+        }
+        return Ok(Value::Str(unescape(inner)));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {s}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> = split_top_level(inner)
+            .into_iter()
+            .map(|p| parse_value(p.trim()))
+            .collect();
+        let items = items?;
+        let homogeneous = items
+            .windows(2)
+            .all(|w| std::mem::discriminant(&w[0]) == std::mem::discriminant(&w[1]));
+        if !homogeneous {
+            return Err(format!("heterogeneous array unsupported: {s}"));
+        }
+        return Ok(Value::Array(items));
+    }
+    // Numbers: underscores allowed as separators.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("unparseable value: {s}"))
+}
+
+fn unescape(s: &str) -> String {
+    s.replace("\\n", "\n").replace("\\t", "\t").replace("\\\\", "\\")
+}
+
+/// Split an array body on commas that are not nested inside brackets/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = Doc::parse(
+            r#"
+            # comment
+            name = "flexspim"   # trailing comment
+            rows = 512
+            vdd = 1.1
+            enabled = true
+
+            [macro]
+            cols = 256
+            [macro.pc]
+            standby = 0.13
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "flexspim");
+        assert_eq!(doc.int_or("rows", 0), 512);
+        assert!((doc.float_or("vdd", 0.0) - 1.1).abs() < 1e-12);
+        assert!(doc.bool_or("enabled", false));
+        assert_eq!(doc.int_or("macro.cols", 0), 256);
+        assert!((doc.float_or("macro.pc.standby", 0.0) - 0.13).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = Doc::parse("bits = [1, 2, 4, 8]\nnames = [\"a\", \"b\"]").unwrap();
+        let bits: Vec<i64> = doc
+            .get("bits")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_int().unwrap())
+            .collect();
+        assert_eq!(bits, vec![1, 2, 4, 8]);
+        assert_eq!(doc.get("names").unwrap().as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn int_float_distinction() {
+        let doc = Doc::parse("i = 3\nf = 3.5").unwrap();
+        assert_eq!(doc.get("i").unwrap().as_int(), Some(3));
+        assert_eq!(doc.get("f").unwrap().as_int(), None);
+        assert_eq!(doc.get("f").unwrap().as_float(), Some(3.5));
+        assert_eq!(doc.get("i").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let doc = Doc::parse("big = 1_000_000").unwrap();
+        assert_eq!(doc.int_or("big", 0), 1_000_000);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("k = ").is_err());
+        assert!(Doc::parse("k = \"unterminated").is_err());
+        assert!(Doc::parse("k = [1, \"x\"]").is_err());
+        assert!(Doc::parse("k = 1\nk = 2").is_err());
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = Doc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        assert_eq!(doc.keys_under("a."), vec!["a.x", "a.y"]);
+    }
+}

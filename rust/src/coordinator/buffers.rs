@@ -1,0 +1,217 @@
+//! On-chip buffer models (paper Fig. 5a).
+//!
+//! Beyond the CIM macro, the accelerator has 4×4 banks of 2-kB SRAM that
+//! buffer the streamed operand (weights in OS mode, membrane potentials in
+//! WS mode), and a 32-to-256-bit *merge-and-shift* unit that aligns
+//! arbitrary-width operands to the macro's I/O port — the piece that makes
+//! bitwise-granular resolutions practical at the system level.
+
+/// One SRAM bank.
+#[derive(Debug, Clone)]
+pub struct Bank {
+    /// Capacity in bits.
+    pub capacity_bits: u64,
+    /// Bits currently allocated.
+    pub used_bits: u64,
+    /// Total read traffic (bits).
+    pub reads_bits: u64,
+    /// Total write traffic (bits).
+    pub writes_bits: u64,
+}
+
+/// The 4×4 bank array.
+#[derive(Debug, Clone)]
+pub struct BankArray {
+    banks: Vec<Bank>,
+}
+
+impl Default for BankArray {
+    fn default() -> Self {
+        Self::flexspim()
+    }
+}
+
+impl BankArray {
+    /// The chip's configuration: 16 banks × 2 kB.
+    pub fn flexspim() -> Self {
+        BankArray {
+            banks: (0..16)
+                .map(|_| Bank {
+                    capacity_bits: 2 * 1024 * 8,
+                    used_bits: 0,
+                    reads_bits: 0,
+                    writes_bits: 0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Total capacity in bits (32 kB for the chip).
+    pub fn capacity_bits(&self) -> u64 {
+        self.banks.iter().map(|b| b.capacity_bits).sum()
+    }
+
+    /// Free bits across banks.
+    pub fn free_bits(&self) -> u64 {
+        self.banks.iter().map(|b| b.capacity_bits - b.used_bits).sum()
+    }
+
+    /// Allocate `bits` across banks (first-fit, spanning allowed).
+    /// Returns false if it does not fit.
+    pub fn allocate(&mut self, bits: u64) -> bool {
+        if bits > self.free_bits() {
+            return false;
+        }
+        let mut remaining = bits;
+        for b in &mut self.banks {
+            if remaining == 0 {
+                break;
+            }
+            let take = remaining.min(b.capacity_bits - b.used_bits);
+            b.used_bits += take;
+            remaining -= take;
+        }
+        true
+    }
+
+    /// Release everything (between layers).
+    pub fn clear(&mut self) {
+        for b in &mut self.banks {
+            b.used_bits = 0;
+        }
+    }
+
+    /// Record read traffic (spread across banks round-robin in hardware;
+    /// aggregate counters suffice for energy).
+    pub fn read(&mut self, bits: u64) {
+        self.banks[0].reads_bits += bits;
+    }
+
+    /// Record write traffic.
+    pub fn write(&mut self, bits: u64) {
+        self.banks[0].writes_bits += bits;
+    }
+
+    /// Total (reads, writes) bits.
+    pub fn traffic(&self) -> (u64, u64) {
+        (
+            self.banks.iter().map(|b| b.reads_bits).sum(),
+            self.banks.iter().map(|b| b.writes_bits).sum(),
+        )
+    }
+}
+
+/// The 32-to-256-bit bandwidth-adaptive merge-and-shift unit: packs/unpacks
+/// arbitrary-width operands (any `w_bits`/`p_bits`) into the macro port.
+#[derive(Debug, Clone, Default)]
+pub struct MergeShiftUnit {
+    /// Port transfers executed (256-bit beats).
+    pub beats: u64,
+    /// Shift micro-ops performed for alignment.
+    pub shift_ops: u64,
+    /// Bits transferred (payload).
+    pub payload_bits: u64,
+}
+
+impl MergeShiftUnit {
+    /// Bus width into the macro (bits).
+    pub const PORT_BITS: u64 = 256;
+    /// Narrow side granularity (bits).
+    pub const WORD_BITS: u64 = 32;
+
+    /// Transfer `count` operands of `op_bits` each; returns beats used.
+    /// Operands are packed back-to-back (no padding waste — that is the
+    /// unit's purpose); each operand that straddles a 32-bit word boundary
+    /// costs one shift micro-op.
+    pub fn transfer(&mut self, count: u64, op_bits: u64) -> u64 {
+        assert!(op_bits >= 1);
+        let total = count * op_bits;
+        let beats = total.div_ceil(Self::PORT_BITS);
+        self.beats += beats;
+        self.payload_bits += total;
+        // An operand straddles a word boundary unless op_bits divides 32
+        // and stays aligned; count straddles exactly.
+        let mut shifts = 0;
+        if op_bits % Self::WORD_BITS != 0 {
+            let mut bit = 0u64;
+            for _ in 0..count {
+                let start_word = bit / Self::WORD_BITS;
+                let end_word = (bit + op_bits - 1) / Self::WORD_BITS;
+                if start_word != end_word || bit % Self::WORD_BITS != 0 {
+                    shifts += 1;
+                }
+                bit += op_bits;
+            }
+        }
+        self.shift_ops += shifts;
+        beats
+    }
+
+    /// Port utilization: payload bits over raw beat capacity.
+    pub fn utilization(&self) -> f64 {
+        if self.beats == 0 {
+            return 0.0;
+        }
+        self.payload_bits as f64 / (self.beats * Self::PORT_BITS) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_array_capacity() {
+        let b = BankArray::flexspim();
+        assert_eq!(b.capacity_bits(), 16 * 2 * 1024 * 8); // 32 kB
+    }
+
+    #[test]
+    fn allocation_spans_banks() {
+        let mut b = BankArray::flexspim();
+        assert!(b.allocate(3 * 2 * 1024 * 8)); // 3 banks worth
+        assert_eq!(b.free_bits(), 13 * 2 * 1024 * 8);
+        assert!(!b.allocate(14 * 2 * 1024 * 8), "overcommit rejected");
+        b.clear();
+        assert_eq!(b.free_bits(), b.capacity_bits());
+    }
+
+    #[test]
+    fn traffic_counters() {
+        let mut b = BankArray::flexspim();
+        b.read(100);
+        b.write(50);
+        b.read(10);
+        assert_eq!(b.traffic(), (110, 50));
+    }
+
+    #[test]
+    fn merge_shift_packs_tightly() {
+        let mut ms = MergeShiftUnit::default();
+        // 256 operands of 5 bits = 1280 bits = 5 beats, zero padding.
+        let beats = ms.transfer(256, 5);
+        assert_eq!(beats, 5);
+        assert!((ms.utilization() - 1.0).abs() < 1e-12);
+        // 11-bit operands mostly straddle word boundaries.
+        let mut ms2 = MergeShiftUnit::default();
+        ms2.transfer(64, 11);
+        assert!(ms2.shift_ops > 0);
+    }
+
+    #[test]
+    fn aligned_operands_need_no_shifts() {
+        let mut ms = MergeShiftUnit::default();
+        ms.transfer(100, 32);
+        assert_eq!(ms.shift_ops, 0);
+        let mut ms64 = MergeShiftUnit::default();
+        ms64.transfer(10, 64);
+        assert_eq!(ms64.shift_ops, 0);
+    }
+
+    #[test]
+    fn beats_round_up() {
+        let mut ms = MergeShiftUnit::default();
+        assert_eq!(ms.transfer(1, 1), 1, "one bit still costs one beat");
+        assert_eq!(ms.transfer(257, 1), 2);
+    }
+}

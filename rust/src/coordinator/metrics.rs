@@ -1,0 +1,166 @@
+//! Run-level metrics aggregation and reporting.
+
+use crate::util::si;
+
+/// Energy breakdown of a run (picojoules).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    /// CIM compute energy.
+    pub compute_pj: f64,
+    /// Streamed operand movement.
+    pub movement_pj: f64,
+    /// Spike I/O.
+    pub spike_pj: f64,
+    /// Amortized stationary loads.
+    pub load_pj: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total pJ.
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj + self.movement_pj + self.spike_pj + self.load_pj
+    }
+
+    /// Accumulate another breakdown.
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.compute_pj += other.compute_pj;
+        self.movement_pj += other.movement_pj;
+        self.spike_pj += other.spike_pj;
+        self.load_pj += other.load_pj;
+    }
+}
+
+/// Aggregated metrics over an inference run (one or many samples).
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Samples processed.
+    pub samples: u64,
+    /// Correct predictions.
+    pub correct: u64,
+    /// Timesteps executed.
+    pub timesteps: u64,
+    /// Synaptic operations executed.
+    pub sops: u64,
+    /// Mean input sparsity observed.
+    pub mean_sparsity: f64,
+    /// Modeled energy.
+    pub energy: EnergyBreakdown,
+    /// Modeled accelerator latency (seconds, summed).
+    pub modeled_latency_s: f64,
+    /// Host wall-clock (seconds, summed) — the simulator's own speed.
+    pub wallclock_s: f64,
+}
+
+impl RunMetrics {
+    /// Classification accuracy.
+    pub fn accuracy(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.samples as f64
+        }
+    }
+
+    /// Energy per synaptic operation (pJ/SOP).
+    pub fn pj_per_sop(&self) -> f64 {
+        if self.sops == 0 {
+            0.0
+        } else {
+            self.energy.total_pj() / self.sops as f64
+        }
+    }
+
+    /// Energy per inference (µJ).
+    pub fn uj_per_inference(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.energy.total_pj() * 1e-6 / self.samples as f64
+        }
+    }
+
+    /// Merge another run's metrics.
+    pub fn merge(&mut self, other: &RunMetrics) {
+        let n = (self.samples + other.samples).max(1);
+        self.mean_sparsity = (self.mean_sparsity * self.samples as f64
+            + other.mean_sparsity * other.samples as f64)
+            / n as f64;
+        self.samples += other.samples;
+        self.correct += other.correct;
+        self.timesteps += other.timesteps;
+        self.sops += other.sops;
+        self.energy.add(&other.energy);
+        self.modeled_latency_s += other.modeled_latency_s;
+        self.wallclock_s += other.wallclock_s;
+    }
+
+    /// Render a report block.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("samples            {}\n", self.samples));
+        s.push_str(&format!("accuracy           {:.1} %\n", 100.0 * self.accuracy()));
+        s.push_str(&format!("timesteps          {}\n", self.timesteps));
+        s.push_str(&format!("mean sparsity      {:.1} %\n", 100.0 * self.mean_sparsity));
+        s.push_str(&format!("SOPs               {}\n", si(self.sops as f64)));
+        s.push_str(&format!(
+            "energy             {}J (compute {:.0} %, movement {:.0} %)\n",
+            si(self.energy.total_pj() * 1e-12),
+            100.0 * self.energy.compute_pj / self.energy.total_pj().max(1e-12),
+            100.0 * self.energy.movement_pj / self.energy.total_pj().max(1e-12),
+        ));
+        s.push_str(&format!("energy/SOP         {:.2} pJ\n", self.pj_per_sop()));
+        s.push_str(&format!("energy/inference   {:.2} µJ\n", self.uj_per_inference()));
+        s.push_str(&format!(
+            "modeled latency    {}s/timestep\n",
+            si(self.modeled_latency_s / self.timesteps.max(1) as f64)
+        ));
+        s.push_str(&format!("host wallclock     {:.2} s\n", self.wallclock_s));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_and_add() {
+        let mut a = EnergyBreakdown {
+            compute_pj: 1.0,
+            movement_pj: 2.0,
+            spike_pj: 0.5,
+            load_pj: 0.5,
+        };
+        assert_eq!(a.total_pj(), 4.0);
+        a.add(&EnergyBreakdown { compute_pj: 1.0, ..Default::default() });
+        assert_eq!(a.total_pj(), 5.0);
+    }
+
+    #[test]
+    fn metrics_accuracy_and_merge() {
+        let mut a = RunMetrics {
+            samples: 4,
+            correct: 3,
+            mean_sparsity: 0.9,
+            ..Default::default()
+        };
+        let b = RunMetrics {
+            samples: 4,
+            correct: 1,
+            mean_sparsity: 0.8,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.samples, 8);
+        assert!((a.accuracy() - 0.5).abs() < 1e-12);
+        assert!((a.mean_sparsity - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_division_guards() {
+        let m = RunMetrics::default();
+        assert_eq!(m.accuracy(), 0.0);
+        assert_eq!(m.pj_per_sop(), 0.0);
+        assert!(m.report().contains("samples"));
+    }
+}

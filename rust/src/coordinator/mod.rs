@@ -1,0 +1,25 @@
+//! L3 coordinator: the accelerator control plane.
+//!
+//! Owns the event loop of Fig. 5a: DVS events → per-timestep spike buffer
+//! → layer execution across the CIM macro array (via the PJRT-compiled
+//! compute graph) → spikes out, while accounting energy (calibrated
+//! model), latency (macro timing model), and buffer traffic
+//! (merge-and-shift + SRAM banks). Python never runs here.
+//!
+//! * [`buffers`] — 4×4 × 2 kB SRAM banks and the 32-to-256-bit
+//!   merge-and-shift bandwidth adapter.
+//! * [`scheduler`] — per-timestep, per-layer execution plan from a
+//!   dataflow [`crate::dataflow::Mapping`]: cycles, macro passes, traffic.
+//! * [`metrics`] — run-level aggregation and reporting.
+//! * [`pipeline`] — the end-to-end inference driver
+//!   ([`pipeline::Coordinator`]).
+
+pub mod buffers;
+pub mod metrics;
+pub mod pipeline;
+pub mod scheduler;
+
+pub use buffers::{BankArray, MergeShiftUnit};
+pub use metrics::{EnergyBreakdown, RunMetrics};
+pub use pipeline::{Coordinator, InferenceResult};
+pub use scheduler::{LayerPlan, Schedule, Scheduler};

@@ -1,0 +1,221 @@
+//! Per-timestep execution planning.
+//!
+//! Turns a workload + dataflow mapping into a per-layer [`LayerPlan`]:
+//! which macro shape executes the layer, how many macro passes and
+//! row-cycles one timestep takes, and what traffic crosses the buffers.
+//! The paper's latency claims (µs-level per timestep) follow from the
+//! cycle counts here and the operating point (Fig. 2c clocks).
+
+use crate::cim::ops::OperatingPoint;
+use crate::cim::OperandShape;
+use crate::dataflow::{Mapping, Operand};
+use crate::snn::{LayerSpec, Network};
+
+/// Execution plan for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    /// Layer name.
+    pub name: String,
+    /// Chosen operand shape columns (`N_C`) for the membrane potential.
+    pub n_c: u32,
+    /// Neurons processed in parallel per macro pass.
+    pub parallel_neurons: usize,
+    /// Macro passes to cover all output neurons once.
+    pub passes_per_synapse: u64,
+    /// Row-cycles per accumulate pass.
+    pub cycles_per_pass: u64,
+    /// Dense SOPs per timestep (before sparsity).
+    pub sops_dense: u64,
+    /// Bits streamed through buffers per timestep (dense estimate).
+    pub streamed_bits: u64,
+}
+
+impl LayerPlan {
+    /// Macro row-cycles for one timestep at the given input activity.
+    /// Event-driven: only spiking synapses trigger accumulate passes,
+    /// plus one fire pass (compare + conditional subtract).
+    pub fn cycles_per_timestep(&self, activity: f64) -> u64 {
+        let fan_in_active = (self.fan_in() as f64 * activity).ceil() as u64;
+        let accumulate = fan_in_active * self.passes_per_synapse * self.cycles_per_pass;
+        let fire = self.passes_per_synapse * 2 * self.cycles_per_pass;
+        accumulate + fire
+    }
+
+    fn fan_in(&self) -> u64 {
+        if self.passes_per_synapse == 0 || self.parallel_neurons == 0 {
+            return 0;
+        }
+        self.sops_dense / (self.passes_per_synapse * self.parallel_neurons as u64).max(1)
+    }
+}
+
+/// A full-network schedule.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Per-layer plans, in execution order.
+    pub layers: Vec<LayerPlan>,
+    /// Operating point used for latency conversion.
+    pub op: OperatingPoint,
+}
+
+impl Schedule {
+    /// Total macro cycles for one timestep at `activity` (layers execute
+    /// sequentially on the macro array in the per-timestep flow, Fig. 1c).
+    pub fn cycles_per_timestep(&self, activity: f64) -> u64 {
+        self.layers.iter().map(|l| l.cycles_per_timestep(activity)).sum()
+    }
+
+    /// Wall-clock latency of one timestep (seconds).
+    pub fn timestep_latency_s(&self, activity: f64) -> f64 {
+        self.op.latency_s(self.cycles_per_timestep(activity))
+    }
+
+    /// Peak throughput in SOP/s at the operating point, summed over the
+    /// layer the plan parallelizes best (diagnostics).
+    pub fn peak_sops(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.parallel_neurons as f64 * self.op.system_clock_hz
+                    / l.cycles_per_pass as f64
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// The planner.
+#[derive(Debug, Clone)]
+pub struct Scheduler {
+    /// Macro columns available per pass.
+    pub macro_cols: usize,
+    /// Operating point.
+    pub op: OperatingPoint,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Scheduler { macro_cols: 256, op: OperatingPoint::nominal() }
+    }
+}
+
+impl Scheduler {
+    /// Pick the energy/latency-efficient operand shape for a layer: the
+    /// widest `N_C` that still lets all requested neurons fit in one pass
+    /// if possible (fewer row-cycles), otherwise the shape minimizing
+    /// passes × cycles.
+    pub fn choose_shape(&self, layer: &LayerSpec) -> (u32, usize) {
+        let p_bits = layer.res.p_bits;
+        let neurons = layer.num_neurons();
+        let mut best: Option<(u64, u32, usize)> = None;
+        for n_c in 1..=p_bits {
+            let shape = OperandShape::new(p_bits, n_c);
+            let parallel = (self.macro_cols / n_c as usize).max(1).min(neurons);
+            let passes = neurons.div_ceil(parallel) as u64;
+            let cost = passes * shape.n_r() as u64;
+            if best.map_or(true, |(c, _, _)| cost < c) {
+                best = Some((cost, n_c, parallel));
+            }
+        }
+        let (_, n_c, parallel) = best.unwrap();
+        (n_c, parallel)
+    }
+
+    /// Build the full-network schedule under a dataflow mapping.
+    pub fn plan(&self, net: &Network, mapping: &Mapping) -> Schedule {
+        let layers = net
+            .layers
+            .iter()
+            .zip(&mapping.assignments)
+            .map(|(l, a)| {
+                let (n_c, parallel) = self.choose_shape(l);
+                let shape = OperandShape::new(l.res.p_bits, n_c);
+                let passes = l.num_neurons().div_ceil(parallel) as u64;
+                // Streamed traffic per timestep (dense): operands without
+                // residency move through the banks.
+                let mut streamed = 0u64;
+                if !a.stationary_resident {
+                    streamed += match a.stationarity.stationary_operand() {
+                        Operand::Weight => l.weight_bits(),
+                        Operand::Vmem => 2 * l.vmem_bits(),
+                    };
+                }
+                if !a.extra_resident {
+                    streamed += match a.stationarity.streamed_operand() {
+                        Operand::Weight => l.weight_bits(),
+                        Operand::Vmem => 2 * l.vmem_bits(),
+                    };
+                }
+                LayerPlan {
+                    name: l.name.clone(),
+                    n_c,
+                    parallel_neurons: parallel,
+                    passes_per_synapse: passes,
+                    cycles_per_pass: shape.n_r() as u64,
+                    sops_dense: l.sops_dense(),
+                    streamed_bits: streamed,
+                }
+            })
+            .collect();
+        Schedule { layers, op: self.op }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{Mapper, Policy};
+    use crate::snn::network::scnn_dvs_gesture;
+    use crate::snn::Resolution;
+
+    #[test]
+    fn shape_choice_minimizes_cost() {
+        let s = Scheduler::default();
+        // 16-bit potential, few neurons: wide shapes win (1 row-cycle).
+        let small = LayerSpec::fc("f", 8, 16, Resolution::new(8, 16));
+        let (n_c, parallel) = s.choose_shape(&small);
+        assert_eq!(parallel, 16);
+        assert_eq!(n_c, 16, "all 16 neurons fit even bit-parallel");
+        // Many neurons: bit-serial shapes maximize parallelism.
+        let big = LayerSpec::fc("g", 8, 4096, Resolution::new(8, 16));
+        let (n_c_big, par_big) = s.choose_shape(&big);
+        assert_eq!(n_c_big, 1);
+        assert_eq!(par_big, 256);
+    }
+
+    #[test]
+    fn schedule_latency_is_microseconds_scale() {
+        // The paper motivates µs-level inference latency per timestep.
+        let net = scnn_dvs_gesture();
+        let mapping = Mapper::flexspim(16).map(&net, Policy::HsOpt);
+        let sched = Scheduler::default().plan(&net, &mapping);
+        let dt = sched.timestep_latency_s(0.05); // 95 % sparsity
+        assert!(dt > 1e-7 && dt < 2e-3, "timestep latency {dt:.2e} s");
+    }
+
+    #[test]
+    fn latency_scales_with_activity() {
+        let net = scnn_dvs_gesture();
+        let mapping = Mapper::flexspim(16).map(&net, Policy::HsOpt);
+        let sched = Scheduler::default().plan(&net, &mapping);
+        assert!(sched.cycles_per_timestep(0.15) > sched.cycles_per_timestep(0.01));
+    }
+
+    #[test]
+    fn full_residency_streams_nothing() {
+        let net = scnn_dvs_gesture();
+        let mapping = Mapper::flexspim(64).map(&net, Policy::HsOpt);
+        let sched = Scheduler::default().plan(&net, &mapping);
+        assert!(sched.layers.iter().all(|l| l.streamed_bits == 0));
+    }
+
+    #[test]
+    fn peak_sops_matches_macro_model() {
+        // Best-case layer: 256 parallel neurons, bit-serial p=16
+        // → ~2.5 GSOPS at 157 MHz (Table I).
+        let net = scnn_dvs_gesture().with_uniform_resolution(Resolution::new(8, 16));
+        let mapping = Mapper::flexspim(16).map(&net, Policy::HsOpt);
+        let sched = Scheduler::default().plan(&net, &mapping);
+        let gsops = sched.peak_sops() / 1e9;
+        assert!(gsops > 1.0 && gsops < 45.0, "peak {gsops:.2} GSOPS");
+    }
+}

@@ -1,0 +1,576 @@
+//! Layer→macro mapping search (the "optimal layer mapping" of Fig. 4b).
+//!
+//! Given a workload, a policy, and a CIM budget (`num_macros × 16 kB`),
+//! the mapper decides per layer (a) which operand is nominally stationary,
+//! (b) whether that operand actually receives CIM residency under the
+//! capacity constraint, and (c) whether the *other* operand can also be
+//! parked in CIM (full-layer stationarity). Residency choices are searched
+//! exhaustively for small networks (≤12 layers, exact optimum) and by
+//! density-greedy otherwise. The objective is per-timestep avoided operand
+//! traffic — the quantity the paper calls "the amount of stationary
+//! operands" (membrane potentials count twice: read + write-back).
+
+use super::policy::Policy;
+use super::stationarity::{avoided_traffic_bits, operand_bits, Stationarity};
+use crate::snn::Network;
+
+/// Per-layer residency plan.
+#[derive(Debug, Clone)]
+pub struct LayerAssignment {
+    /// Index into `network.layers`.
+    pub layer_idx: usize,
+    /// Nominal stationarity choice.
+    pub stationarity: Stationarity,
+    /// The stationary operand actually fits in the CIM budget.
+    pub stationary_resident: bool,
+    /// The streamed operand *also* got parked in CIM (spare capacity).
+    pub extra_resident: bool,
+    /// `(macro_index, bits)` spans for the resident operands.
+    pub spans: Vec<(usize, u64)>,
+}
+
+impl LayerAssignment {
+    /// Bits this layer keeps resident in CIM.
+    pub fn resident_bits(&self, net: &Network) -> u64 {
+        let l = &net.layers[self.layer_idx];
+        let mut b = 0;
+        if self.stationary_resident {
+            b += operand_bits(l, self.stationarity.stationary_operand());
+        }
+        if self.extra_resident {
+            b += operand_bits(l, self.stationarity.streamed_operand());
+        }
+        b
+    }
+
+    /// Per-timestep traffic avoided by this layer's residency.
+    pub fn avoided_bits(&self, net: &Network) -> u64 {
+        let l = &net.layers[self.layer_idx];
+        let mut b = 0;
+        if self.stationary_resident {
+            b += avoided_traffic_bits(l, self.stationarity.stationary_operand());
+        }
+        if self.extra_resident {
+            b += avoided_traffic_bits(l, self.stationarity.streamed_operand());
+        }
+        b
+    }
+
+    /// Per-timestep bits still streamed for this layer (weights once,
+    /// membrane potentials read+write).
+    pub fn streamed_bits(&self, net: &Network) -> u64 {
+        let l = &net.layers[self.layer_idx];
+        let mut b = 0;
+        if !self.stationary_resident {
+            b += avoided_traffic_bits(l, self.stationarity.stationary_operand());
+        }
+        if !self.extra_resident {
+            b += avoided_traffic_bits(l, self.stationarity.streamed_operand());
+        }
+        b
+    }
+}
+
+/// A complete mapping of the workload onto the CIM budget.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    /// Policy that produced it.
+    pub policy: Policy,
+    /// One assignment per layer, in layer order.
+    pub assignments: Vec<LayerAssignment>,
+    /// Total CIM capacity in bits.
+    pub capacity_bits: u64,
+    /// Bits actually resident.
+    pub used_bits: u64,
+}
+
+impl Mapping {
+    /// Per-timestep avoided operand traffic (the Fig. 4b metric).
+    pub fn avoided_traffic_bits(&self, net: &Network) -> u64 {
+        self.assignments.iter().map(|a| a.avoided_bits(net)).sum()
+    }
+
+    /// Per-timestep streamed operand traffic.
+    pub fn streamed_traffic_bits(&self, net: &Network) -> u64 {
+        self.assignments.iter().map(|a| a.streamed_bits(net)).sum()
+    }
+
+    /// CIM utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        self.used_bits as f64 / self.capacity_bits as f64
+    }
+
+    /// Number of layers whose nominal stationary operand is resident.
+    pub fn layers_with_stationarity(&self) -> usize {
+        self.assignments.iter().filter(|a| a.stationary_resident).count()
+    }
+
+    /// Render a Fig. 4(b)-style table.
+    pub fn table(&self, net: &Network) -> String {
+        let mut s = format!(
+            "{:<6} {:<6} {:>12} {:>12} {:>10} {:>10}\n",
+            "layer", "mode", "W bits", "V bits", "resident", "streamed"
+        );
+        for a in &self.assignments {
+            let l = &net.layers[a.layer_idx];
+            let mode = match (a.stationarity, a.stationary_resident) {
+                (Stationarity::Ws, true) => "WS",
+                (Stationarity::Os, true) => "OS",
+                (_, false) => "--",
+            };
+            s.push_str(&format!(
+                "{:<6} {:<6} {:>12} {:>12} {:>10} {:>10}\n",
+                l.name,
+                mode,
+                l.weight_bits(),
+                l.vmem_bits(),
+                a.resident_bits(net),
+                a.streamed_bits(net),
+            ));
+        }
+        s.push_str(&format!(
+            "capacity {} bits, used {} ({:.1}%), avoided/timestep {}\n",
+            self.capacity_bits,
+            self.used_bits,
+            100.0 * self.utilization(),
+            self.avoided_traffic_bits(net),
+        ));
+        s
+    }
+}
+
+/// Residency option for one layer during the search.
+#[derive(Debug, Clone, Copy)]
+struct OptionCandidate {
+    stationarity: Stationarity,
+    stationary_resident: bool,
+    extra_resident: bool,
+    cost_bits: u64,
+    value_bits: u64,
+}
+
+/// The mapping search engine.
+#[derive(Debug, Clone)]
+pub struct Mapper {
+    /// Capacity of one macro in bits (16 kB = 131 072 for the chip).
+    pub macro_capacity_bits: u64,
+    /// Number of macros in the system.
+    pub num_macros: usize,
+}
+
+impl Mapper {
+    /// Mapper for `num_macros` FlexSpIM macros (512×256 bits each).
+    pub fn flexspim(num_macros: usize) -> Self {
+        Mapper { macro_capacity_bits: 512 * 256, num_macros }
+    }
+
+    /// Total capacity in bits.
+    pub fn capacity_bits(&self) -> u64 {
+        self.macro_capacity_bits * self.num_macros as u64
+    }
+
+    /// Compute the optimal mapping for `policy`.
+    ///
+    /// Semantics per policy family:
+    /// * **WsOnly / OsOnly** — prior-art designs with a *fixed* operand
+    ///   location: only the policy's operand may reside in CIM. The mapper
+    ///   picks which layers' operands get residency (exact knapsack on
+    ///   avoided traffic for small networks).
+    /// * **HsMin / HsMax** — rule-based hybrids (Fig. 4a): the chosen
+    ///   operand of *every* layer is made resident first (smallest-first
+    ///   when capacity is short), then leftover capacity parks the other
+    ///   operand of layers by traffic density.
+    /// * **HsOpt** — free per-layer search (Fig. 4b "optimal layer
+    ///   mapping"): any combination of {nothing, one operand, both}.
+    pub fn map(&self, net: &Network, policy: Policy) -> Mapping {
+        let cap = self.capacity_bits();
+        let choice = match policy {
+            Policy::WsOnly | Policy::OsOnly => {
+                let options = fixed_location_options(net, policy);
+                if search_space(&options) <= 2_000_000 {
+                    exhaustive_search(&options, cap)
+                } else {
+                    greedy_search(&options, cap)
+                }
+            }
+            Policy::HsMin | Policy::HsMax => rule_based_hybrid(net, policy, cap),
+            Policy::HsOpt => {
+                let options = free_options(net);
+                if search_space(&options) <= 2_000_000 {
+                    exhaustive_search(&options, cap)
+                } else {
+                    greedy_search(&options, cap)
+                }
+            }
+        };
+
+        // Pack resident operands into discrete macros (first-fit with
+        // splitting — operands may span macro boundaries).
+        let mut macro_free: Vec<u64> = vec![self.macro_capacity_bits; self.num_macros];
+        let mut assignments = Vec::new();
+        let mut used = 0u64;
+        for (idx, opt) in choice.iter().enumerate() {
+            let mut spans = Vec::new();
+            let mut remaining = opt.cost_bits;
+            used += opt.cost_bits;
+            for (m, free) in macro_free.iter_mut().enumerate() {
+                if remaining == 0 {
+                    break;
+                }
+                if *free == 0 {
+                    continue;
+                }
+                let take = remaining.min(*free);
+                *free -= take;
+                remaining -= take;
+                spans.push((m, take));
+            }
+            assert_eq!(remaining, 0, "search result exceeded capacity");
+            assignments.push(LayerAssignment {
+                layer_idx: idx,
+                stationarity: opt.stationarity,
+                stationary_resident: opt.stationary_resident,
+                extra_resident: opt.extra_resident,
+                spans,
+            });
+        }
+        Mapping { policy, assignments, capacity_bits: cap, used_bits: used }
+    }
+}
+
+/// Options for fixed-operand-location designs: nothing resident or the
+/// policy's operand resident. No "both" option — prior-art arrays store
+/// only one operand class.
+fn fixed_location_options(net: &Network, policy: Policy) -> Vec<Vec<OptionCandidate>> {
+    net.layers
+        .iter()
+        .map(|l| {
+            let s = policy.fixed_choice(l).expect("fixed policy");
+            let stat_op = s.stationary_operand();
+            vec![
+                OptionCandidate {
+                    stationarity: s,
+                    stationary_resident: false,
+                    extra_resident: false,
+                    cost_bits: 0,
+                    value_bits: 0,
+                },
+                OptionCandidate {
+                    stationarity: s,
+                    stationary_resident: true,
+                    extra_resident: false,
+                    cost_bits: operand_bits(l, stat_op),
+                    value_bits: avoided_traffic_bits(l, stat_op),
+                },
+            ]
+        })
+        .collect()
+}
+
+/// Full option set for the free HS-opt search: nothing, weights resident,
+/// potentials resident, or both.
+fn free_options(net: &Network) -> Vec<Vec<OptionCandidate>> {
+    net.layers
+        .iter()
+        .map(|l| {
+            let mut opts = Vec::new();
+            for s in [Stationarity::Ws, Stationarity::Os] {
+                let stat_op = s.stationary_operand();
+                let stream_op = s.streamed_operand();
+                opts.push(OptionCandidate {
+                    stationarity: s,
+                    stationary_resident: false,
+                    extra_resident: false,
+                    cost_bits: 0,
+                    value_bits: 0,
+                });
+                opts.push(OptionCandidate {
+                    stationarity: s,
+                    stationary_resident: true,
+                    extra_resident: false,
+                    cost_bits: operand_bits(l, stat_op),
+                    value_bits: avoided_traffic_bits(l, stat_op),
+                });
+                opts.push(OptionCandidate {
+                    stationarity: s,
+                    stationary_resident: true,
+                    extra_resident: true,
+                    cost_bits: operand_bits(l, stat_op) + operand_bits(l, stream_op),
+                    value_bits: avoided_traffic_bits(l, stat_op)
+                        + avoided_traffic_bits(l, stream_op),
+                });
+            }
+            // Deduplicate by (cost, value): the "nothing resident" and
+            // "both resident" options are identical under either
+            // stationarity label, which would needlessly square the
+            // search space (6^n → 4^n).
+            opts.sort_by_key(|o| (o.cost_bits, o.value_bits));
+            opts.dedup_by_key(|o| (o.cost_bits, o.value_bits));
+            opts
+        })
+        .collect()
+}
+
+/// Rule-based HS-min / HS-max: mandatory residency of the rule's operand
+/// (smallest-cost-first when capacity is short), then leftover capacity
+/// parks the other operand of layers in traffic-density order.
+fn rule_based_hybrid(net: &Network, policy: Policy, cap: u64) -> Vec<OptionCandidate> {
+    let n = net.layers.len();
+    let mut out: Vec<OptionCandidate> = net
+        .layers
+        .iter()
+        .map(|l| {
+            let s = policy.fixed_choice(l).expect("fixed policy");
+            OptionCandidate {
+                stationarity: s,
+                stationary_resident: false,
+                extra_resident: false,
+                cost_bits: 0,
+                value_bits: 0,
+            }
+        })
+        .collect();
+
+    // Phase 1: mandatory stationary residency, smallest cost first so the
+    // number of layers with stationarity is maximized when capacity binds.
+    let costs: Vec<u64> = (0..n)
+        .map(|i| operand_bits(&net.layers[i], out[i].stationarity.stationary_operand()))
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| costs[i]);
+    let mut used = 0u64;
+    for &i in &order {
+        let c = costs[i];
+        if used + c <= cap {
+            used += c;
+            out[i].stationary_resident = true;
+            out[i].cost_bits = c;
+            out[i].value_bits =
+                avoided_traffic_bits(&net.layers[i], out[i].stationarity.stationary_operand());
+        }
+    }
+
+    // Phase 2: park the other operand of layers in leftover capacity,
+    // densest (avoided bits per resident bit) first.
+    let mut extras: Vec<(usize, u64, u64)> = (0..n)
+        .filter(|&i| out[i].stationary_resident)
+        .map(|i| {
+            let l = &net.layers[i];
+            let op = out[i].stationarity.streamed_operand();
+            (i, operand_bits(l, op), avoided_traffic_bits(l, op))
+        })
+        .filter(|&(_, c, _)| c > 0)
+        .collect();
+    extras.sort_by(|a, b| {
+        let da = a.2 as f64 / a.1 as f64;
+        let db = b.2 as f64 / b.1 as f64;
+        db.partial_cmp(&da).unwrap()
+    });
+    for (i, c, v) in extras {
+        if used + c <= cap {
+            used += c;
+            out[i].extra_resident = true;
+            out[i].cost_bits += c;
+            out[i].value_bits += v;
+        }
+    }
+    out
+}
+
+fn search_space(options: &[Vec<OptionCandidate>]) -> u64 {
+    options.iter().fold(1u64, |acc, o| acc.saturating_mul(o.len() as u64))
+}
+
+/// Exact exhaustive search over per-layer options (small networks).
+fn exhaustive_search(options: &[Vec<OptionCandidate>], cap: u64) -> Vec<OptionCandidate> {
+    let n = options.len();
+    let mut best: Option<(u64, Vec<usize>)> = None;
+    let mut idx = vec![0usize; n];
+    loop {
+        let mut cost = 0u64;
+        let mut value = 0u64;
+        for (l, &i) in idx.iter().enumerate() {
+            cost += options[l][i].cost_bits;
+            value += options[l][i].value_bits;
+        }
+        if cost <= cap && best.as_ref().map_or(true, |(bv, _)| value > *bv) {
+            best = Some((value, idx.clone()));
+        }
+        // Odometer increment.
+        let mut l = 0;
+        loop {
+            if l == n {
+                let (_, bi) = best.expect("zero-cost option always feasible");
+                return bi
+                    .iter()
+                    .enumerate()
+                    .map(|(layer, &i)| options[layer][i])
+                    .collect();
+            }
+            idx[l] += 1;
+            if idx[l] < options[l].len() {
+                break;
+            }
+            idx[l] = 0;
+            l += 1;
+        }
+    }
+}
+
+/// Density-greedy fallback for large networks: sort candidate *upgrades*
+/// by value/cost and apply while capacity lasts.
+fn greedy_search(options: &[Vec<OptionCandidate>], cap: u64) -> Vec<OptionCandidate> {
+    let n = options.len();
+    // Start from the all-streamed option of the first stationarity choice.
+    let mut current: Vec<OptionCandidate> = options.iter().map(|o| o[0]).collect();
+    let mut used: u64 = 0;
+    loop {
+        // Best upgrade across layers by marginal density.
+        let mut best: Option<(usize, OptionCandidate, f64)> = None;
+        for l in 0..n {
+            for cand in &options[l] {
+                let dc = cand.cost_bits as i64 - current[l].cost_bits as i64;
+                let dv = cand.value_bits as i64 - current[l].value_bits as i64;
+                if dv <= 0 || dc <= 0 {
+                    continue;
+                }
+                if used + dc as u64 > cap {
+                    continue;
+                }
+                let density = dv as f64 / dc as f64;
+                if best.as_ref().map_or(true, |&(_, _, d)| density > d) {
+                    best = Some((l, *cand, density));
+                }
+            }
+        }
+        match best {
+            Some((l, cand, _)) => {
+                used = used + cand.cost_bits - current[l].cost_bits;
+                current[l] = cand;
+            }
+            None => return current,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::network::{scnn_dvs_gesture, Network};
+    use crate::snn::{LayerSpec, Resolution};
+
+    #[test]
+    fn ws_only_respects_capacity_and_policy() {
+        let net = scnn_dvs_gesture();
+        let m = Mapper::flexspim(2).map(&net, Policy::WsOnly);
+        assert!(m.used_bits <= m.capacity_bits);
+        assert!(m
+            .assignments
+            .iter()
+            .all(|a| a.stationarity == Stationarity::Ws));
+        // The big FC1 weights cannot fit in 2 macros.
+        let fc1 = &m.assignments[6];
+        assert!(!fc1.stationary_resident, "FC1 weights exceed 2 macros");
+    }
+
+    #[test]
+    fn hs_min_gives_every_layer_stationarity_with_two_macros() {
+        // Paper §II-B: two macros suffice for full per-layer stationarity
+        // of at least one operand under HS.
+        let net = scnn_dvs_gesture();
+        let m = Mapper::flexspim(2).map(&net, Policy::HsMin);
+        assert_eq!(m.layers_with_stationarity(), net.layers.len());
+    }
+
+    #[test]
+    fn one_macro_cannot_give_full_hs() {
+        // ...and one macro does not (the other half of the same claim).
+        let net = scnn_dvs_gesture();
+        let m = Mapper::flexspim(1).map(&net, Policy::HsMin);
+        assert!(m.layers_with_stationarity() < net.layers.len());
+    }
+
+    #[test]
+    fn fig4b_hs_min_gain_over_ws_only() {
+        // Fig. 4(b): HS-min increases the amount of stationary operands by
+        // ~46 % over WS-only on two macros with optimal mapping.
+        let net = scnn_dvs_gesture();
+        let mapper = Mapper::flexspim(2);
+        let ws = mapper.map(&net, Policy::WsOnly);
+        let hs = mapper.map(&net, Policy::HsMin);
+        let gain = hs.avoided_traffic_bits(&net) as f64
+            / ws.avoided_traffic_bits(&net) as f64
+            - 1.0;
+        assert!(
+            (0.35..0.60).contains(&gain),
+            "HS-min gain {:.3} outside the Fig. 4b band (paper: 0.46)",
+            gain
+        );
+    }
+
+    #[test]
+    fn hs_opt_dominates_fixed_policies() {
+        let net = scnn_dvs_gesture();
+        for macros in [1usize, 2, 4, 16] {
+            let mapper = Mapper::flexspim(macros);
+            let opt = mapper.map(&net, Policy::HsOpt).avoided_traffic_bits(&net);
+            for p in [Policy::WsOnly, Policy::OsOnly, Policy::HsMin, Policy::HsMax] {
+                let v = mapper.map(&net, p).avoided_traffic_bits(&net);
+                assert!(
+                    opt >= v,
+                    "HS-opt ({opt}) must dominate {p} ({v}) at {macros} macros"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plentiful_capacity_keeps_everything_resident() {
+        let net = scnn_dvs_gesture();
+        // 64 macros = 1 MB: all operands of all layers fit.
+        let m = Mapper::flexspim(64).map(&net, Policy::HsOpt);
+        assert_eq!(m.streamed_traffic_bits(&net), 0);
+        let total: u64 = net.total_weight_bits() + net.total_vmem_bits();
+        assert_eq!(m.used_bits, total);
+    }
+
+    #[test]
+    fn spans_are_consistent_with_residency() {
+        let net = scnn_dvs_gesture();
+        let m = Mapper::flexspim(4).map(&net, Policy::HsOpt);
+        for a in &m.assignments {
+            let spanned: u64 = a.spans.iter().map(|&(_, b)| b).sum();
+            assert_eq!(spanned, a.resident_bits(&net));
+        }
+        // Per-macro occupancy must not exceed macro capacity.
+        let mut occupancy = vec![0u64; 4];
+        for a in &m.assignments {
+            for &(mi, b) in &a.spans {
+                occupancy[mi] += b;
+            }
+        }
+        assert!(occupancy.iter().all(|&o| o <= 512 * 256));
+    }
+
+    #[test]
+    fn greedy_engaged_for_large_networks() {
+        // 20 layers × HsOpt = 6^20 options: must fall back to greedy and
+        // still respect capacity.
+        let r = Resolution::new(8, 8);
+        let layers: Vec<LayerSpec> = (0..20)
+            .map(|i| LayerSpec::fc(&format!("f{i}"), 64, 64, r))
+            .collect();
+        let net = Network::new("deep", layers, 4);
+        let m = Mapper::flexspim(1).map(&net, Policy::HsOpt);
+        assert!(m.used_bits <= m.capacity_bits);
+        assert!(m.avoided_traffic_bits(&net) > 0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let net = scnn_dvs_gesture();
+        let m = Mapper::flexspim(2).map(&net, Policy::HsMin);
+        let t = m.table(&net);
+        assert!(t.contains("L1") && t.contains("FC3") && t.contains("capacity"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Hybrid-stationary dataflow (paper §II-B, Fig. 4).
+//!
+//! FlexSpIM's unified weight/membrane-potential CIM storage lets every
+//! layer choose which operand stays resident (weight stationarity, WS, or
+//! output/membrane stationarity, OS). This module turns a workload
+//! ([`crate::snn::Network`]) plus a CIM budget (number of macros) into a
+//! [`mapper::Mapping`]: per-layer stationarity decisions, macro placement,
+//! and the stationary/streamed traffic accounting that drives the Fig. 4
+//! and Fig. 7(c–d) results.
+
+pub mod mapper;
+pub mod policy;
+pub mod stationarity;
+
+pub use mapper::{LayerAssignment, Mapper, Mapping};
+pub use policy::Policy;
+pub use stationarity::{Operand, Stationarity};

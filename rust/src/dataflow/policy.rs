@@ -1,0 +1,86 @@
+//! Dataflow policies compared in the paper.
+
+use super::stationarity::{self, Stationarity};
+use crate::snn::LayerSpec;
+
+/// Mapping policy: how each layer picks its stationary operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Weight-stationary everywhere — what all prior CIM-SNNs do
+    /// ([3]–[6], [9]–[12]); the Fig. 4(b) baseline.
+    WsOnly,
+    /// Output-stationary everywhere (ablation point; not in the paper but
+    /// the natural dual of WS-only).
+    OsOnly,
+    /// Hybrid: keep each layer's *smaller* operand resident (Fig. 4a,
+    /// brown line) — maximizes the number of layers with full
+    /// stationarity under a tight CIM budget.
+    HsMin,
+    /// Hybrid: keep each layer's *larger* operand resident (Fig. 4a, pink
+    /// line) — pays off once the macro count grows (Fig. 7c/d).
+    HsMax,
+    /// Hybrid with free per-layer choice, searched to maximize avoided
+    /// traffic under the capacity constraint (the "optimal layer mapping"
+    /// of Fig. 4b).
+    HsOpt,
+}
+
+impl Policy {
+    /// All policies, for sweep drivers.
+    pub const ALL: [Policy; 5] =
+        [Policy::WsOnly, Policy::OsOnly, Policy::HsMin, Policy::HsMax, Policy::HsOpt];
+
+    /// Fixed per-layer choice for the non-searching policies;
+    /// `None` for [`Policy::HsOpt`] (the mapper searches instead).
+    pub fn fixed_choice(self, layer: &LayerSpec) -> Option<Stationarity> {
+        match self {
+            Policy::WsOnly => Some(Stationarity::Ws),
+            Policy::OsOnly => Some(Stationarity::Os),
+            Policy::HsMin => Some(stationarity::min_footprint_choice(layer)),
+            Policy::HsMax => Some(stationarity::max_footprint_choice(layer)),
+            Policy::HsOpt => None,
+        }
+    }
+
+    /// Short label for tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            Policy::WsOnly => "WS-only",
+            Policy::OsOnly => "OS-only",
+            Policy::HsMin => "HS-min",
+            Policy::HsMax => "HS-max",
+            Policy::HsOpt => "HS-opt",
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{LayerSpec, Resolution};
+
+    #[test]
+    fn fixed_choices() {
+        let vmem_heavy = LayerSpec::conv("c", 2, 8, 3, 1, 1, 32, 32, Resolution::new(4, 9));
+        assert_eq!(Policy::WsOnly.fixed_choice(&vmem_heavy), Some(Stationarity::Ws));
+        assert_eq!(Policy::OsOnly.fixed_choice(&vmem_heavy), Some(Stationarity::Os));
+        assert_eq!(Policy::HsMin.fixed_choice(&vmem_heavy), Some(Stationarity::Ws));
+        assert_eq!(Policy::HsMax.fixed_choice(&vmem_heavy), Some(Stationarity::Os));
+        assert_eq!(Policy::HsOpt.fixed_choice(&vmem_heavy), None);
+    }
+
+    #[test]
+    fn labels_unique() {
+        let labels: Vec<&str> = Policy::ALL.iter().map(|p| p.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len());
+    }
+}

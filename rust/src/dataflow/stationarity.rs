@@ -1,0 +1,128 @@
+//! Per-layer stationarity primitives and traffic accounting.
+
+use crate::snn::LayerSpec;
+
+/// The two operand classes held in the unified CIM storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    /// Synaptic weights.
+    Weight,
+    /// Membrane potentials (the layer's *output* state).
+    Vmem,
+}
+
+/// A layer's dataflow choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stationarity {
+    /// Weight-stationary: weights resident, membrane potentials streamed.
+    Ws,
+    /// Output-stationary: membrane potentials resident, weights streamed.
+    Os,
+}
+
+impl Stationarity {
+    /// Which operand stays in the macro.
+    pub fn stationary_operand(self) -> Operand {
+        match self {
+            Stationarity::Ws => Operand::Weight,
+            Stationarity::Os => Operand::Vmem,
+        }
+    }
+
+    /// Which operand is streamed every timestep.
+    pub fn streamed_operand(self) -> Operand {
+        match self {
+            Stationarity::Ws => Operand::Vmem,
+            Stationarity::Os => Operand::Weight,
+        }
+    }
+}
+
+/// Footprint in bits of one operand of a layer.
+pub fn operand_bits(layer: &LayerSpec, op: Operand) -> u64 {
+    match op {
+        Operand::Weight => layer.weight_bits(),
+        Operand::Vmem => layer.vmem_bits(),
+    }
+}
+
+/// Per-timestep operand movement (bits) *avoided* by keeping `op`
+/// stationary, under the event-driven execution model:
+///
+/// * a streamed **weight** operand is fetched once per timestep
+///   (`weight_bits`) — broadcast weights are reused across output
+///   positions within the timestep;
+/// * a streamed **membrane potential** must be read *and* written back
+///   every timestep (`2 × vmem_bits`) — this factor-2 asymmetry is why
+///   OS wins for potential-dominated early layers (paper Fig. 4a).
+pub fn avoided_traffic_bits(layer: &LayerSpec, op: Operand) -> u64 {
+    match op {
+        Operand::Weight => layer.weight_bits(),
+        Operand::Vmem => 2 * layer.vmem_bits(),
+    }
+}
+
+/// The stationarity that minimizes the layer's resident footprint
+/// (the HS-min rule of Fig. 4a).
+pub fn min_footprint_choice(layer: &LayerSpec) -> Stationarity {
+    if layer.weight_bits() <= layer.vmem_bits() {
+        Stationarity::Ws
+    } else {
+        Stationarity::Os
+    }
+}
+
+/// The stationarity that keeps the *larger* operand resident
+/// (the HS-max rule of Fig. 4a — best when CIM capacity is plentiful).
+pub fn max_footprint_choice(layer: &LayerSpec) -> Stationarity {
+    if layer.weight_bits() >= layer.vmem_bits() {
+        Stationarity::Ws
+    } else {
+        Stationarity::Os
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{LayerSpec, Resolution};
+
+    fn vmem_heavy() -> LayerSpec {
+        // Small kernel, large feature map.
+        LayerSpec::conv("c", 2, 8, 3, 1, 1, 32, 32, Resolution::new(4, 9))
+    }
+
+    fn weight_heavy() -> LayerSpec {
+        LayerSpec::fc("f", 1024, 16, Resolution::new(8, 8))
+    }
+
+    #[test]
+    fn operand_roles() {
+        assert_eq!(Stationarity::Ws.stationary_operand(), Operand::Weight);
+        assert_eq!(Stationarity::Ws.streamed_operand(), Operand::Vmem);
+        assert_eq!(Stationarity::Os.stationary_operand(), Operand::Vmem);
+        assert_eq!(Stationarity::Os.streamed_operand(), Operand::Weight);
+    }
+
+    #[test]
+    fn footprints() {
+        let l = weight_heavy();
+        assert_eq!(operand_bits(&l, Operand::Weight), 1024 * 16 * 8);
+        assert_eq!(operand_bits(&l, Operand::Vmem), 16 * 8);
+    }
+
+    #[test]
+    fn vmem_avoidance_counts_read_and_write() {
+        let l = vmem_heavy();
+        assert_eq!(avoided_traffic_bits(&l, Operand::Vmem), 2 * l.vmem_bits());
+        assert_eq!(avoided_traffic_bits(&l, Operand::Weight), l.weight_bits());
+    }
+
+    #[test]
+    fn min_max_choices() {
+        assert_eq!(min_footprint_choice(&vmem_heavy()), Stationarity::Ws);
+        assert_eq!(max_footprint_choice(&vmem_heavy()), Stationarity::Os);
+        assert_eq!(min_footprint_choice(&weight_heavy()), Stationarity::Os);
+        assert_eq!(max_footprint_choice(&weight_heavy()), Stationarity::Ws);
+    }
+}

@@ -1,0 +1,175 @@
+//! Prior-art baseline systems for the Fig. 7(c–d) comparison.
+//!
+//! The paper extrapolates system-level energy for three designs placed in
+//! the same template (many macros + global buffer + DRAM, Fig. 7b):
+//!
+//! * **FlexSpIM** — arbitrary resolution, operand shaping, hybrid
+//!   stationarity;
+//! * **[4] ISSCC'24** — spike-driven analog-assisted CIM-SNN: 4 kB macros,
+//!   fixed {4, 8}-bit weights / 16-bit potentials, WS-only, no shaping
+//!   (bit-serial), per-spike membrane read-modify-write (that is the
+//!   "spike-driven" operating principle the paper names);
+//! * **[3] IMPULSE** — 65-nm digital CIM-SNN: 1.37 kB macros, fixed
+//!   6-bit/11-bit fused weight/potential storage, WS-only, row-wise
+//!   bit-serial mapping.
+//!
+//! Technology normalization: both baselines are priced with *our*
+//! calibrated 40-nm macro model under their architectural constraints
+//! (capacity, fixed resolution, forced bit-serial shape, WS-only,
+//! per-spike streaming). This isolates the *flexibility* contribution the
+//! paper claims, rather than cross-technology circuit differences —
+//! documented in DESIGN.md §Substitutions.
+
+use super::system::{Discipline, SystemConfig, SystemEnergyModel};
+use crate::dataflow::{Mapper, Policy};
+use crate::snn::network::{scnn_dvs_gesture, scnn_impulse_resolution};
+use crate::snn::{Network, Resolution};
+
+/// The six-conv SCNN used in the system-level study (the paper's Fig. 4a
+/// workload; the system extrapolation operates on the convolutional stack).
+pub fn system_workload() -> Network {
+    let full = scnn_dvs_gesture();
+    Network::new("SCNN-conv6", full.layers[..6].to_vec(), full.timesteps)
+}
+
+/// The same workload at [4]'s constrained resolutions (4/8-bit weights,
+/// 16-bit potentials).
+pub fn system_workload_isscc24() -> Network {
+    let base = system_workload();
+    let res: Vec<Resolution> = base
+        .layers
+        .iter()
+        .map(|l| Resolution::new(if l.res.w_bits <= 4 { 4 } else { 8 }, 16))
+        .collect();
+    base.with_resolutions(&res)
+}
+
+/// The same workload at IMPULSE's fixed 6-bit/11-bit resolution.
+pub fn system_workload_impulse() -> Network {
+    let full = scnn_impulse_resolution();
+    Network::new("SCNN-conv6-6b11b", full.layers[..6].to_vec(), full.timesteps)
+}
+
+/// A [4]-based system: `n` macros of 4 kB, WS-only, spike-driven
+/// streaming, bit-serial mapping.
+pub fn isscc24_system(num_macros: usize) -> SystemEnergyModel {
+    let mut cfg = SystemConfig::flexspim(num_macros);
+    cfg.macro_bits = 4 * 1024 * 8; // 4 kB macros (Table I)
+    cfg.vmem_discipline = Discipline::PerSop; // spike-driven RMW
+    cfg.weight_discipline = Discipline::PerTimestepTile;
+    SystemEnergyModel::new(cfg)
+}
+
+/// An IMPULSE-based system: `n` macros of 1.37 kB, WS-only, row-wise
+/// bit-serial.
+pub fn impulse_system(num_macros: usize) -> SystemEnergyModel {
+    let mut cfg = SystemConfig::flexspim(num_macros);
+    cfg.macro_bits = (1.37 * 1024.0 * 8.0) as u64; // 1.37 kB macros (Table I)
+    cfg.vmem_discipline = Discipline::PerSop;
+    cfg.weight_discipline = Discipline::PerTimestepTile;
+    SystemEnergyModel::new(cfg)
+}
+
+/// Fig. 7(c): energy-efficiency gain of a 16-macro FlexSpIM system (HS,
+/// optimal resolutions) over a 16-macro [4] system, per sparsity point.
+/// Returns `(sparsity, gain)` pairs where `gain = 1 - E_flex / E_base`.
+pub fn fig7c_gain_sweep(sparsities: &[f64]) -> Vec<(f64, f64)> {
+    let flex_net = system_workload();
+    let base_net = system_workload_isscc24();
+
+    let flex_sys = SystemEnergyModel::flexspim(16);
+    let base_sys = isscc24_system(16);
+
+    let flex_map = Mapper {
+        macro_capacity_bits: flex_sys.cfg.macro_bits,
+        num_macros: 16,
+    }
+    .map(&flex_net, Policy::HsOpt);
+    let base_map = Mapper {
+        macro_capacity_bits: base_sys.cfg.macro_bits,
+        num_macros: 16,
+    }
+    .map(&base_net, Policy::WsOnly);
+
+    sparsities
+        .iter()
+        .map(|&s| {
+            let e_flex = flex_sys.evaluate(&flex_net, &flex_map, s, None).total_pj();
+            // Baseline forced to bit-serial shapes (no operand shaping).
+            let e_base = base_sys.evaluate(&base_net, &base_map, s, Some(1)).total_pj();
+            (s, 1.0 - e_flex / e_base)
+        })
+        .collect()
+}
+
+/// Fig. 7(d): gain of an 18-macro FlexSpIM system over an 18-macro
+/// IMPULSE system, both at 6-bit/11-bit resolution.
+pub fn fig7d_gain_sweep(sparsities: &[f64]) -> Vec<(f64, f64)> {
+    let net = system_workload_impulse();
+
+    let flex_sys = SystemEnergyModel::flexspim(18);
+    let base_sys = impulse_system(18);
+
+    let flex_map = Mapper {
+        macro_capacity_bits: flex_sys.cfg.macro_bits,
+        num_macros: 18,
+    }
+    .map(&net, Policy::HsOpt);
+    let base_map = Mapper {
+        macro_capacity_bits: base_sys.cfg.macro_bits,
+        num_macros: 18,
+    }
+    .map(&net, Policy::WsOnly);
+
+    sparsities
+        .iter()
+        .map(|&s| {
+            let e_flex = flex_sys.evaluate(&net, &flex_map, s, None).total_pj();
+            let e_base = base_sys.evaluate(&net, &base_map, s, Some(1)).total_pj();
+            (s, 1.0 - e_flex / e_base)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workloads_have_expected_resolutions() {
+        let w4 = system_workload_isscc24();
+        assert!(w4.layers.iter().all(|l| l.res.p_bits == 16));
+        assert!(w4.layers.iter().all(|l| l.res.w_bits == 4 || l.res.w_bits == 8));
+        let wi = system_workload_impulse();
+        assert!(wi.layers.iter().all(|l| l.res == Resolution::new(6, 11)));
+    }
+
+    #[test]
+    fn baseline_capacity_is_much_smaller() {
+        let flex = SystemEnergyModel::flexspim(16);
+        let b4 = isscc24_system(16);
+        let bi = impulse_system(18);
+        assert!(b4.cfg.cim_bits() < flex.cfg.cim_bits() / 3);
+        assert!(bi.cfg.cim_bits() < flex.cfg.cim_bits() / 8);
+    }
+
+    #[test]
+    fn gains_increase_with_or_stay_flat_in_sparsity() {
+        // The paper's gains are roughly flat (87→90 % and 79→86 % over
+        // 85→99 % sparsity); ours must not *decrease* materially.
+        let g = fig7c_gain_sweep(&[0.85, 0.99]);
+        assert!(g[1].1 >= g[0].1 - 0.03, "gain dropped: {g:?}");
+        let d = fig7d_gain_sweep(&[0.85, 0.99]);
+        assert!(d[1].1 >= d[0].1 - 0.03, "gain dropped: {d:?}");
+    }
+
+    #[test]
+    fn flexspim_wins_at_every_swept_point() {
+        for (_, gain) in fig7c_gain_sweep(&[0.85, 0.90, 0.95, 0.99]) {
+            assert!(gain > 0.5);
+        }
+        for (_, gain) in fig7d_gain_sweep(&[0.85, 0.90, 0.95, 0.99]) {
+            assert!(gain > 0.5);
+        }
+    }
+}

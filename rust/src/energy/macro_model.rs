@@ -1,0 +1,373 @@
+//! Macro-level energy pricing.
+//!
+//! Event coefficients are expressed at the 1.1-V reference and scaled to
+//! other supply points with a mixed quadratic/linear law fitted to the two
+//! published silicon measurements (7.2 pJ/SOP at 1.1 V, 5.7 pJ/SOP at
+//! 0.9 V → scale(0.9 V) = 0.792).
+//!
+//! Coefficient derivation (see DESIGN.md §Energy-Calibration): with the
+//! 8b/16b bit-serial mapping and all 256 columns busy, one SOP costs 16
+//! active column-cycles plus a 1/256 share of the per-cycle overhead:
+//! `16·e_active + 16·e_shared/256 = 7.2 pJ` with `e_shared = 0.5·e_active`
+//! gives `e_active ≈ 0.449 pJ`, which also reproduces the measured 17.9 mW
+//! (256·e_active + e_shared ≈ 115 pJ/cycle × 157 MHz) and, at the
+//! low-voltage point, 6.8 mW. The active column-cycle energy is split over
+//! precharge / sense / add / write-back in ratios typical of 6T digital
+//! CIM (precharge-heavy), which the ledger counts separately.
+
+use crate::cim::EnergyCounters;
+
+/// Joules-per-event coefficients at the 1.1-V reference point.
+#[derive(Debug, Clone)]
+pub struct MacroEnergyModel {
+    /// Precharge energy per active column-cycle (pJ).
+    pub e_precharge: f64,
+    /// One sense-amplifier evaluation (pJ).
+    pub e_sa: f64,
+    /// One full-adder evaluation (pJ).
+    pub e_adder: f64,
+    /// One bit write-back (pJ).
+    pub e_writeback: f64,
+    /// One carry hop between neighboring PCs (pJ).
+    pub e_carry_hop: f64,
+    /// One emulation-bit read (pJ).
+    pub e_eb: f64,
+    /// One comparator step (pJ).
+    pub e_compare: f64,
+    /// Idle-unselected column-cycle without standby gating — what prior
+    /// row-wise designs pay on unused columns (pJ).
+    pub e_idle_unselected: f64,
+    /// Standby column-cycle with PC gating (pJ) = 0.13 × idle-unselected
+    /// (the paper's 87 % reduction).
+    pub e_standby: f64,
+    /// Shared per-cycle overhead: WL pair, decoder, clock, FSM (pJ).
+    pub e_shared_cycle: f64,
+    /// One bit through the macro I/O port (pJ).
+    pub e_io_bit: f64,
+    /// One plain SRAM bit write via the port (pJ).
+    pub e_sram_write: f64,
+    /// One plain SRAM bit read via the port (pJ).
+    pub e_sram_read: f64,
+    /// Supply voltage this model is evaluated at (V).
+    pub vdd: f64,
+}
+
+/// Reference active column-cycle energy at 1.1 V (pJ); see module docs.
+pub const E_ACTIVE_COL_CYCLE_PJ: f64 = 0.449;
+
+impl MacroEnergyModel {
+    /// Model at the 1.1-V nominal point.
+    pub fn nominal() -> Self {
+        let e_a = E_ACTIVE_COL_CYCLE_PJ;
+        // Idle-unselected factor fitted so the Fig. 7a shaping study lands
+        // on the paper's "up to 4.3×" saving (DESIGN.md §Energy-Calibration).
+        let e_idle = 0.617 * e_a;
+        MacroEnergyModel {
+            e_precharge: 0.267 * e_a,
+            e_sa: 0.100 * e_a, // ×2 per CIM cycle
+            e_adder: 0.178 * e_a,
+            e_writeback: 0.355 * e_a,
+            e_carry_hop: 0.030 * e_a,
+            e_eb: 0.045 * e_a,
+            e_compare: 0.045 * e_a,
+            e_idle_unselected: e_idle,
+            e_standby: 0.13 * e_idle, // 87 % reduction (paper §III-A)
+            e_shared_cycle: 0.5 * e_a,
+            e_io_bit: 0.050,
+            e_sram_write: 0.080,
+            e_sram_read: 0.040,
+            vdd: 1.1,
+        }
+    }
+
+    /// Voltage-scaling factor fitted to the two measured efficiency points:
+    /// `scale(1.1) = 1`, `scale(0.9) = 5.7/7.2 = 0.792`. A pure-V² law
+    /// would give 0.669; the silicon shows a substantial voltage-
+    /// independent component, captured by the linear mix below.
+    pub fn voltage_scale(vdd: f64) -> f64 {
+        let r = vdd / 1.1;
+        0.174 * r * r + 0.826 * r
+    }
+
+    /// Model rescaled to a supply point in the measured 0.9–1.1 V range.
+    pub fn at_vdd(vdd: f64) -> Self {
+        assert!((0.9..=1.1).contains(&vdd), "vdd {vdd} outside silicon range");
+        let s = Self::voltage_scale(vdd);
+        let n = Self::nominal();
+        MacroEnergyModel {
+            e_precharge: n.e_precharge * s,
+            e_sa: n.e_sa * s,
+            e_adder: n.e_adder * s,
+            e_writeback: n.e_writeback * s,
+            e_carry_hop: n.e_carry_hop * s,
+            e_eb: n.e_eb * s,
+            e_compare: n.e_compare * s,
+            e_idle_unselected: n.e_idle_unselected * s,
+            e_standby: n.e_standby * s,
+            e_shared_cycle: n.e_shared_cycle * s,
+            e_io_bit: n.e_io_bit * s,
+            e_sram_write: n.e_sram_write * s,
+            e_sram_read: n.e_sram_read * s,
+            vdd,
+        }
+    }
+
+    /// Price an event ledger in picojoules.
+    pub fn price_pj(&self, c: &EnergyCounters) -> f64 {
+        c.active_col_cycles as f64 * self.e_precharge
+            + c.sa_reads as f64 * self.e_sa
+            + c.adder_ops as f64 * self.e_adder
+            + c.writebacks as f64 * self.e_writeback
+            + c.carry_hops as f64 * self.e_carry_hop
+            + c.eb_reads as f64 * self.e_eb
+            + c.compare_ops as f64 * self.e_compare
+            + c.standby_col_cycles as f64 * self.e_standby
+            + c.cim_cycles as f64 * self.e_shared_cycle
+            + c.io_bits as f64 * self.e_io_bit
+            + c.sram_writes as f64 * self.e_sram_write
+            + c.sram_reads as f64 * self.e_sram_read
+    }
+
+    /// Price a ledger as pJ *per SOP*.
+    pub fn pj_per_sop(&self, c: &EnergyCounters) -> f64 {
+        assert!(c.sops > 0, "ledger contains no SOPs");
+        self.price_pj(c) / c.sops as f64
+    }
+
+    /// Analytic per-SOP energy for a shaped accumulate (no bit simulation;
+    /// used by the system-level extrapolation where billions of SOPs are
+    /// priced). Mirrors exactly what the simulator's ledger would produce
+    /// for one `cim_accumulate` amortized over the parallel neurons —
+    /// asserted against the simulator in the unit tests.
+    pub fn sop_pj_analytic(
+        &self,
+        w_bits: u32,
+        p_bits: u32,
+        n_c: u32,
+        parallel_neurons: usize,
+        total_cols: usize,
+    ) -> SopEnergyBreakdown {
+        let n_r_p = p_bits.div_ceil(n_c) as f64;
+        let n = parallel_neurons as f64;
+        let active_cols = n * n_c as f64;
+        assert!(active_cols <= total_cols as f64, "columns oversubscribed");
+        let standby_cols = total_cols as f64 - active_cols;
+
+        // Per-SOP event counts (one accumulate for one neuron).
+        let col_cycles = n_c as f64 * n_r_p; // includes padding cells
+        let adds = p_bits as f64;
+        let carry_hops = (n_c as f64 - 1.0) * n_r_p;
+        let eb_reads = (p_bits.saturating_sub(w_bits)) as f64;
+
+        let compute = col_cycles * self.e_precharge
+            + 2.0 * col_cycles * self.e_sa
+            + adds * (self.e_adder + self.e_writeback)
+            + carry_hops * self.e_carry_hop
+            + eb_reads * self.e_eb;
+        let shared = n_r_p * self.e_shared_cycle / n;
+        let standby = standby_cols * n_r_p * self.e_standby / n;
+        SopEnergyBreakdown { compute_pj: compute, shared_pj: shared, standby_pj: standby }
+    }
+
+    /// Same accumulate priced under a *row-wise kernel-stacking* prior-art
+    /// discipline ([3]–[7]): no operand shaping (bit-serial only) and no
+    /// standby mode — unused columns keep toggling at idle-unselected cost.
+    pub fn sop_pj_rowwise_baseline(
+        &self,
+        p_bits: u32,
+        parallel_neurons: usize,
+        total_cols: usize,
+    ) -> f64 {
+        let n_r_p = p_bits as f64; // N_C = 1 forced
+        let n = parallel_neurons as f64;
+        let idle_cols = total_cols as f64 - n;
+        let compute = n_r_p * (self.e_precharge + 2.0 * self.e_sa)
+            + p_bits as f64 * (self.e_adder + self.e_writeback);
+        let idle = idle_cols * n_r_p * self.e_idle_unselected / n;
+        let shared = n_r_p * self.e_shared_cycle / n;
+        compute + idle + shared
+    }
+}
+
+/// Per-SOP energy decomposition (pJ).
+#[derive(Debug, Clone, Copy)]
+pub struct SopEnergyBreakdown {
+    /// Active-column compute energy.
+    pub compute_pj: f64,
+    /// Amortized shared per-cycle overhead.
+    pub shared_pj: f64,
+    /// Amortized standby energy of gated columns.
+    pub standby_pj: f64,
+}
+
+impl SopEnergyBreakdown {
+    /// Total pJ per SOP.
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj + self.shared_pj + self.standby_pj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::{CimMacro, MacroConfig};
+    use crate::util::stats::rel_diff;
+
+    /// Table I anchor: 8b/16b bit-serial, 256 neurons → 7.2 pJ/SOP at 1.1 V.
+    #[test]
+    fn calibration_nominal_pj_per_sop() {
+        let m = MacroEnergyModel::nominal();
+        let e = m.sop_pj_analytic(8, 16, 1, 256, 256).total_pj();
+        assert!(
+            (e - 7.2).abs() < 0.45,
+            "nominal 8b/16b should be ~7.2 pJ/SOP, got {e:.3}"
+        );
+    }
+
+    /// Table I anchor: 5.7 pJ/SOP at 0.9 V.
+    #[test]
+    fn calibration_low_voltage_pj_per_sop() {
+        let m = MacroEnergyModel::at_vdd(0.9);
+        let e = m.sop_pj_analytic(8, 16, 1, 256, 256).total_pj();
+        assert!(
+            (e - 5.7).abs() < 0.4,
+            "low-voltage 8b/16b should be ~5.7 pJ/SOP, got {e:.3}"
+        );
+    }
+
+    /// Table I anchor: 17.9 mW at nominal, 6.8 mW at low voltage.
+    #[test]
+    fn calibration_power() {
+        let nominal = MacroEnergyModel::nominal();
+        let e_sop = nominal.sop_pj_analytic(8, 16, 1, 256, 256).total_pj();
+        let p_mw = 2.512e9 * e_sop * 1e-12 * 1e3; // 2.5 GSOPS × pJ/SOP
+        assert!((p_mw - 17.9).abs() < 1.5, "nominal power ~17.9 mW, got {p_mw:.2}");
+
+        let lv = MacroEnergyModel::at_vdd(0.9);
+        let e_sop_lv = lv.sop_pj_analytic(8, 16, 1, 256, 256).total_pj();
+        let p_lv = 1.208e9 * e_sop_lv * 1e-12 * 1e3;
+        assert!((p_lv - 6.8).abs() < 0.8, "low-voltage power ~6.8 mW, got {p_lv:.2}");
+    }
+
+    /// 1-bit-normalized efficiency lands in Table I's 44.5–56.3 fJ/SOP band.
+    #[test]
+    fn calibration_1b_normalized_efficiency() {
+        for (vdd, _expect) in [(1.1, 56.3), (0.9, 44.5)] {
+            let m = MacroEnergyModel::at_vdd(vdd);
+            let e = m.sop_pj_analytic(8, 16, 1, 256, 256).total_pj();
+            let norm_fj = e * 1e3 / 128.0; // / (8 × 16)
+            assert!(
+                (40.0..62.0).contains(&norm_fj),
+                "1b-norm {norm_fj:.1} fJ/SOP out of Table I band at {vdd} V"
+            );
+        }
+    }
+
+    /// The paper's 87 % standby reduction is definitional in the model.
+    #[test]
+    fn standby_reduction_is_87_percent() {
+        let m = MacroEnergyModel::nominal();
+        let reduction = 1.0 - m.e_standby / m.e_idle_unselected;
+        assert!((reduction - 0.87).abs() < 1e-9);
+    }
+
+    /// Voltage scale hits both fitted endpoints and is monotone.
+    #[test]
+    fn voltage_scale_fit() {
+        assert!((MacroEnergyModel::voltage_scale(1.1) - 1.0).abs() < 1e-12);
+        assert!((MacroEnergyModel::voltage_scale(0.9) - 0.792).abs() < 2e-3);
+        assert!(MacroEnergyModel::voltage_scale(1.0) < 1.0);
+        assert!(MacroEnergyModel::voltage_scale(1.0) > 0.792);
+    }
+
+    /// Analytic pricing must agree with the bit-accurate simulator's ledger
+    /// (same events, same price) across shapes.
+    #[test]
+    fn analytic_matches_simulated_ledger() {
+        let model = MacroEnergyModel::nominal();
+        for (w, p, n_c, neurons) in [(8u32, 16u32, 1u32, 32usize), (8, 16, 4, 32), (8, 16, 8, 32), (4, 9, 3, 16)] {
+            let cfg = MacroConfig::flexspim(w, p, n_c, 1, neurons);
+            let mut mac = CimMacro::new(cfg).unwrap();
+            for n in 0..neurons {
+                mac.load_weight(n, 0, ((n as i64) % 5) - 2);
+                mac.load_vmem(n, n as i64);
+            }
+            mac.reset_counters();
+            mac.cim_accumulate(0, None);
+            let sim_pj = model.pj_per_sop(mac.counters());
+            let ana_pj = model
+                .sop_pj_analytic(w, p, n_c, neurons, cfg.cols)
+                .total_pj();
+            assert!(
+                rel_diff(sim_pj, ana_pj) < 0.06,
+                "{w}b/{p}b n_c={n_c}: sim {sim_pj:.3} vs analytic {ana_pj:.3}"
+            );
+        }
+    }
+
+    /// Fig. 7a: energy grows linearly with resolution (single-row shapes),
+    /// carry overhead <5 %.
+    #[test]
+    fn linear_resolution_scaling_with_small_carry_overhead() {
+        let m = MacroEnergyModel::nominal();
+        // Single-row shape: N_C = bits, N_R = 1; equal w/p resolution.
+        let e_at = |bits: u32| {
+            m.sop_pj_analytic(bits, bits, bits, (256 / bits) as usize, 256)
+                .total_pj()
+        };
+        let e4 = e_at(4);
+        let e8 = e_at(8);
+        let e16 = e_at(16);
+        let e32 = e_at(32);
+        // Linearity: doubling resolution ≈ doubles energy, within the <5 %
+        // carry-propagation overhead the paper reports.
+        for (lo, hi, f) in [(e4, e8, 2.0), (e8, e16, 2.0), (e4, e16, 4.0), (e8, e32, 4.0)] {
+            let ratio = hi / lo;
+            assert!(
+                ratio > f * 0.95 && ratio < f * 1.08,
+                "scaling {ratio:.3} vs ideal {f} outside <5-8 % overhead band"
+            );
+        }
+        // Carry contribution alone stays under 5 % of the total.
+        let b = m.sop_pj_analytic(16, 16, 16, 16, 256);
+        let carry_pj = 15.0 * m.e_carry_hop;
+        assert!(carry_pj / b.total_pj() < 0.05);
+    }
+
+    /// Fig. 7a headline: shaping + standby saves ~4.3× vs row-wise kernel
+    /// stacking at 16-bit resolution with 32 output channels, while energy
+    /// variation across FlexSpIM shapes stays below ~24 %.
+    #[test]
+    fn shaping_study_savings_and_homogeneity() {
+        let m = MacroEnergyModel::nominal();
+        let base = m.sop_pj_rowwise_baseline(16, 32, 256);
+        // FlexSpIM shapes for a 16-bit operand (Fig. 7a sweep).
+        let shapes = [(2u32, 8u32), (4, 4), (8, 2), (16, 1)]; // (N_C, N_R)
+        let energies: Vec<f64> = shapes
+            .iter()
+            .map(|&(n_c, _)| {
+                let parallel = (256 / n_c as usize).min(32);
+                m.sop_pj_analytic(8, 16, n_c, parallel, 256).total_pj()
+            })
+            .collect();
+        let best = energies.iter().cloned().fold(f64::INFINITY, f64::min);
+        let worst = energies.iter().cloned().fold(0.0f64, f64::max);
+        let saving = base / worst; // conservative: vs the worst flex shape
+        let saving_best = base / best;
+        assert!(
+            saving > 3.4 && saving_best < 7.0,
+            "saving range [{saving:.2}, {saving_best:.2}] should bracket the paper's 4.3×"
+        );
+        assert!(
+            (worst - best) / best < 0.30,
+            "shape variation {:.1}% should be ≤ ~24 %",
+            (worst - best) / best * 100.0
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "outside silicon range")]
+    fn vdd_envelope_enforced() {
+        MacroEnergyModel::at_vdd(1.3);
+    }
+}

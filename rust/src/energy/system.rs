@@ -1,0 +1,412 @@
+//! System-level energy extrapolation (paper §III-B, Fig. 7b–d).
+//!
+//! Architecture template (Fig. 7b): a many-macro CIM array, a global
+//! on-chip buffer, and an external DRAM. Per-layer, per-timestep energy is
+//! the sum of
+//!
+//! * **compute** — SOPs × macro energy/SOP (from the calibrated
+//!   [`MacroEnergyModel`], at the layer's resolution and best shape);
+//! * **streamed-operand movement** — operands without CIM residency move
+//!   through the buffer hierarchy every timestep. Weights stream at most
+//!   once per timestep (broadcast reuse); membrane potentials are
+//!   read-modify-write. The *discipline* (per-spike RMW as in spike-driven
+//!   designs, per-timestep tile sweep, or best-of-both) is configurable —
+//!   FlexSpIM's controller uses `Best`, the spike-driven baselines use
+//!   `PerSop` (that is their published operating principle);
+//! * **spike I/O** — AER events in/out of the array;
+//! * **amortized loads** — one-time DRAM→CIM placement of stationary
+//!   operands, divided over the run length.
+//!
+//! Input sparsity applies uniformly across layers (documented
+//! simplification; the paper sweeps input sparsity 85–99 % the same way).
+
+use super::macro_model::MacroEnergyModel;
+use crate::dataflow::{Mapping, Operand};
+use crate::snn::{LayerSpec, Network};
+
+/// How a streamed operand moves per timestep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discipline {
+    /// Event-driven read-modify-write per SOP (spike-driven designs).
+    PerSop,
+    /// One tile sweep of the full operand per timestep.
+    PerTimestepTile,
+    /// The cheaper of the two (an optimizing controller).
+    Best,
+}
+
+/// System-level configuration knobs.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Number of CIM macros.
+    pub num_macros: usize,
+    /// Bits per macro (131 072 for FlexSpIM's 16 kB).
+    pub macro_bits: u64,
+    /// Global buffer capacity in bits.
+    pub gbuf_bits: u64,
+    /// Global-buffer access energy (pJ/bit).
+    pub e_gbuf_pj_bit: f64,
+    /// External DRAM access energy (pJ/bit) — Horowitz-style [16].
+    pub e_dram_pj_bit: f64,
+    /// AER event word width (bits) for spike I/O.
+    pub spike_addr_bits: u32,
+    /// Timesteps over which one-time stationary loads amortize.
+    pub amortize_timesteps: u64,
+    /// Supply voltage for the macro model.
+    pub vdd: f64,
+    /// Streaming discipline for non-resident membrane potentials.
+    pub vmem_discipline: Discipline,
+    /// Streaming discipline for non-resident weights.
+    pub weight_discipline: Discipline,
+}
+
+impl SystemConfig {
+    /// FlexSpIM system defaults at the nominal operating point.
+    pub fn flexspim(num_macros: usize) -> Self {
+        SystemConfig {
+            num_macros,
+            macro_bits: 512 * 256,
+            gbuf_bits: 256 * 1024 * 8, // 256 kB
+            e_gbuf_pj_bit: 0.6,
+            e_dram_pj_bit: 20.0,
+            spike_addr_bits: 16,
+            amortize_timesteps: 1600, // 100 inferences × 16 timesteps
+            vdd: 1.1,
+            vmem_discipline: Discipline::Best,
+            weight_discipline: Discipline::Best,
+        }
+    }
+
+    /// Total CIM capacity in bits.
+    pub fn cim_bits(&self) -> u64 {
+        self.macro_bits * self.num_macros as u64
+    }
+}
+
+/// Per-layer energy line of a report (all pJ, per timestep).
+#[derive(Debug, Clone)]
+pub struct LayerEnergy {
+    /// Layer name.
+    pub name: String,
+    /// SOPs executed this timestep.
+    pub sops: f64,
+    /// Macro compute energy.
+    pub compute_pj: f64,
+    /// Streamed operand movement energy.
+    pub stream_pj: f64,
+    /// Spike I/O energy.
+    pub spike_pj: f64,
+    /// Amortized stationary-load energy.
+    pub load_pj: f64,
+}
+
+impl LayerEnergy {
+    /// Layer total (pJ/timestep).
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj + self.stream_pj + self.spike_pj + self.load_pj
+    }
+}
+
+/// Whole-system energy report for one timestep.
+#[derive(Debug, Clone)]
+pub struct SystemEnergyReport {
+    /// Per-layer lines.
+    pub per_layer: Vec<LayerEnergy>,
+}
+
+impl SystemEnergyReport {
+    /// Total energy per timestep (pJ).
+    pub fn total_pj(&self) -> f64 {
+        self.per_layer.iter().map(LayerEnergy::total_pj).sum()
+    }
+
+    /// Total compute component (pJ).
+    pub fn compute_pj(&self) -> f64 {
+        self.per_layer.iter().map(|l| l.compute_pj).sum()
+    }
+
+    /// Total movement component (pJ).
+    pub fn stream_pj(&self) -> f64 {
+        self.per_layer.iter().map(|l| l.stream_pj).sum()
+    }
+}
+
+/// The system-level model: configuration + calibrated macro pricing.
+#[derive(Debug, Clone)]
+pub struct SystemEnergyModel {
+    /// System knobs.
+    pub cfg: SystemConfig,
+    /// Macro-level pricing at `cfg.vdd`.
+    pub model: MacroEnergyModel,
+}
+
+impl SystemEnergyModel {
+    /// Build from a config.
+    pub fn new(cfg: SystemConfig) -> Self {
+        let model = MacroEnergyModel::at_vdd(cfg.vdd);
+        SystemEnergyModel { cfg, model }
+    }
+
+    /// FlexSpIM defaults with `num_macros` macros.
+    pub fn flexspim(num_macros: usize) -> Self {
+        Self::new(SystemConfig::flexspim(num_macros))
+    }
+
+    /// Best (minimum-energy) per-SOP cost over the operand shapes the
+    /// macro supports for this resolution — FlexSpIM picks the shape per
+    /// layer (Fig. 7a); pass `force_n_c = Some(1)` to model prior-art
+    /// row-wise bit-serial mapping.
+    pub fn sop_pj(&self, w_bits: u32, p_bits: u32, force_n_c: Option<u32>) -> f64 {
+        let cols = 256usize;
+        let candidates: Vec<u32> = match force_n_c {
+            Some(n) => vec![n],
+            None => (1..=p_bits.min(cols as u32)).collect(),
+        };
+        candidates
+            .into_iter()
+            .map(|n_c| {
+                let neurons = cols / n_c as usize;
+                self.model
+                    .sop_pj_analytic(w_bits, p_bits, n_c, neurons.max(1), cols)
+                    .total_pj()
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Energy (pJ) to move `bits` through the hierarchy: global buffer if
+    /// the per-timestep working set fits, DRAM otherwise.
+    fn path_pj(&self, bits: f64, working_set_bits: u64) -> f64 {
+        let per_bit = if working_set_bits <= self.cfg.gbuf_bits {
+            self.cfg.e_gbuf_pj_bit
+        } else {
+            self.cfg.e_dram_pj_bit
+        };
+        bits * per_bit
+    }
+
+    /// Energy to stream one operand of `layer` for one timestep at the
+    /// given SOP count, under a discipline (public: the coordinator prices
+    /// measured traffic with it too).
+    pub fn streamed_pj(
+        &self,
+        layer: &LayerSpec,
+        op: Operand,
+        sops: f64,
+        discipline: Discipline,
+    ) -> f64 {
+        let (per_sop_bits, tile_bits) = match op {
+            // Read + write back the affected potential on every SOP, or
+            // sweep the whole map once per timestep.
+            Operand::Vmem => (
+                2.0 * layer.res.p_bits as f64,
+                2.0 * layer.vmem_bits() as f64,
+            ),
+            // Fetch the triggering weight per SOP, or broadcast the full
+            // kernel once per timestep.
+            Operand::Weight => (layer.res.w_bits as f64, layer.weight_bits() as f64),
+        };
+        let per_sop = sops * per_sop_bits;
+        let bits = match discipline {
+            Discipline::PerSop => per_sop,
+            Discipline::PerTimestepTile => tile_bits,
+            Discipline::Best => per_sop.min(tile_bits),
+        };
+        let working_set = match op {
+            Operand::Vmem => layer.vmem_bits(),
+            Operand::Weight => layer.weight_bits(),
+        };
+        self.path_pj(bits, working_set)
+    }
+
+    /// Evaluate one timestep of `net` under `mapping` at the given input
+    /// sparsity, using the macro energy at a freely-chosen shape
+    /// (`force_n_c = None`) or a forced one (prior-art bit-serial).
+    pub fn evaluate(
+        &self,
+        net: &Network,
+        mapping: &Mapping,
+        sparsity: f64,
+        force_n_c: Option<u32>,
+    ) -> SystemEnergyReport {
+        assert!((0.0..=1.0).contains(&sparsity));
+        assert_eq!(mapping.assignments.len(), net.layers.len());
+        let activity = 1.0 - sparsity;
+        let mut per_layer = Vec::new();
+        for a in &mapping.assignments {
+            let l = &net.layers[a.layer_idx];
+            let sops = l.sops_dense() as f64 * activity;
+            let compute_pj = sops * self.sop_pj(l.res.w_bits, l.res.p_bits, force_n_c);
+
+            let mut stream_pj = 0.0;
+            let mut load_pj = 0.0;
+            let stat_op = a.stationarity.stationary_operand();
+            let stream_op = a.stationarity.streamed_operand();
+            if a.stationary_resident {
+                // One-time DRAM→CIM load, amortized.
+                let bits = match stat_op {
+                    Operand::Weight => l.weight_bits(),
+                    Operand::Vmem => l.vmem_bits(),
+                };
+                load_pj += bits as f64 * self.cfg.e_dram_pj_bit
+                    / self.cfg.amortize_timesteps as f64;
+            } else {
+                let d = match stat_op {
+                    Operand::Vmem => self.cfg.vmem_discipline,
+                    Operand::Weight => self.cfg.weight_discipline,
+                };
+                stream_pj += self.streamed_pj(l, stat_op, sops, d);
+            }
+            if a.extra_resident {
+                let bits = match stream_op {
+                    Operand::Weight => l.weight_bits(),
+                    Operand::Vmem => l.vmem_bits(),
+                };
+                load_pj += bits as f64 * self.cfg.e_dram_pj_bit
+                    / self.cfg.amortize_timesteps as f64;
+            } else {
+                let d = match stream_op {
+                    Operand::Vmem => self.cfg.vmem_discipline,
+                    Operand::Weight => self.cfg.weight_discipline,
+                };
+                stream_pj += self.streamed_pj(l, stream_op, sops, d);
+            }
+
+            // AER spike I/O: input events reach the array, output spikes
+            // leave it.
+            let (ic, ih, iw) = l.in_shape();
+            let in_events = (ic * ih * iw) as f64 * activity;
+            let out_events = l.num_neurons() as f64 * activity;
+            let spike_pj = (in_events + out_events)
+                * self.cfg.spike_addr_bits as f64
+                * self.cfg.e_gbuf_pj_bit;
+
+            per_layer.push(LayerEnergy {
+                name: l.name.clone(),
+                sops,
+                compute_pj,
+                stream_pj,
+                spike_pj,
+                load_pj,
+            });
+        }
+        SystemEnergyReport { per_layer }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{Mapper, Policy};
+    use crate::snn::network::scnn_dvs_gesture;
+    use crate::snn::Resolution;
+
+    fn conv_net() -> Network {
+        let full = scnn_dvs_gesture();
+        Network::new(
+            "SCNN-conv",
+            full.layers[..6].to_vec(),
+            full.timesteps,
+        )
+    }
+
+    #[test]
+    fn sop_pj_best_shape_beats_bit_serial() {
+        let m = SystemEnergyModel::flexspim(16);
+        let best = m.sop_pj(8, 16, None);
+        let serial = m.sop_pj(8, 16, Some(1));
+        assert!(best <= serial);
+        assert!(best > 0.0);
+    }
+
+    #[test]
+    fn full_residency_means_no_streaming() {
+        let net = conv_net();
+        let mapping = Mapper::flexspim(16).map(&net, Policy::HsOpt);
+        let m = SystemEnergyModel::flexspim(16);
+        let r = m.evaluate(&net, &mapping, 0.95, None);
+        assert_eq!(r.stream_pj(), 0.0, "16 macros hold the whole conv stack");
+        assert!(r.compute_pj() > 0.0);
+    }
+
+    #[test]
+    fn energy_scales_with_activity() {
+        let net = conv_net();
+        let mapping = Mapper::flexspim(16).map(&net, Policy::HsOpt);
+        let m = SystemEnergyModel::flexspim(16);
+        let hi = m.evaluate(&net, &mapping, 0.85, None).total_pj();
+        let lo = m.evaluate(&net, &mapping, 0.99, None).total_pj();
+        assert!(hi > lo, "less sparsity -> more energy");
+    }
+
+    #[test]
+    fn ws_only_streams_early_vmem() {
+        let net = conv_net();
+        let mapping = Mapper::flexspim(2).map(&net, Policy::WsOnly);
+        let m = SystemEnergyModel::flexspim(2);
+        let r = m.evaluate(&net, &mapping, 0.95, None);
+        // L1's membrane potentials dominate and are streamed under WS.
+        assert!(r.per_layer[0].stream_pj > 0.0);
+        let hs = Mapper::flexspim(2).map(&net, Policy::HsOpt);
+        let r_hs = m.evaluate(&net, &hs, 0.95, None);
+        assert!(
+            r_hs.total_pj() < r.total_pj(),
+            "HS must beat WS-only at equal capacity"
+        );
+    }
+
+    #[test]
+    fn dram_spill_engages_for_oversized_working_sets() {
+        let mut cfg = SystemConfig::flexspim(1);
+        cfg.gbuf_bits = 1024; // absurdly small buffer
+        let m = SystemEnergyModel::new(cfg);
+        let net = conv_net();
+        let mapping = Mapper::flexspim(1).map(&net, Policy::WsOnly);
+        let r = m.evaluate(&net, &mapping, 0.95, None);
+        let m2 = SystemEnergyModel::flexspim(1);
+        let r2 = m2.evaluate(&net, &mapping, 0.95, None);
+        assert!(
+            r.stream_pj() > 5.0 * r2.stream_pj(),
+            "DRAM path must be much more expensive than gbuf"
+        );
+    }
+
+    #[test]
+    fn per_sop_discipline_scales_with_sparsity_tile_does_not() {
+        let l = crate::snn::LayerSpec::conv("c", 8, 8, 3, 1, 1, 16, 16, Resolution::new(6, 11));
+        let m = SystemEnergyModel::flexspim(1);
+        let s_lo = m.streamed_pj(&l, Operand::Vmem, 100.0, Discipline::PerSop);
+        let s_hi = m.streamed_pj(&l, Operand::Vmem, 1000.0, Discipline::PerSop);
+        assert!((s_hi / s_lo - 10.0).abs() < 1e-9);
+        let t_lo = m.streamed_pj(&l, Operand::Vmem, 100.0, Discipline::PerTimestepTile);
+        let t_hi = m.streamed_pj(&l, Operand::Vmem, 1000.0, Discipline::PerTimestepTile);
+        assert_eq!(t_lo, t_hi);
+        let b = m.streamed_pj(&l, Operand::Vmem, 1000.0, Discipline::Best);
+        assert!(b <= s_hi && b <= t_hi);
+    }
+
+    /// Fig. 7(c): FlexSpIM (16 macros, HS, optimal resolutions) vs a
+    /// [4]-based system — 87–90 % energy gain over 85–99 % sparsity.
+    #[test]
+    fn fig7c_band() {
+        let report = super::super::baselines::fig7c_gain_sweep(&[0.85, 0.92, 0.99]);
+        for (s, gain) in report {
+            assert!(
+                (0.80..0.95).contains(&gain),
+                "gain {gain:.3} at sparsity {s} outside Fig. 7c band (paper: 0.87-0.90)"
+            );
+        }
+    }
+
+    /// Fig. 7(d): FlexSpIM (18 macros, 6b/11b) vs an IMPULSE-based system —
+    /// 79–86 % gain over the same sparsity range.
+    #[test]
+    fn fig7d_band() {
+        let report = super::super::baselines::fig7d_gain_sweep(&[0.85, 0.92, 0.99]);
+        for (s, gain) in report {
+            assert!(
+                (0.70..0.92).contains(&gain),
+                "gain {gain:.3} at sparsity {s} outside Fig. 7d band (paper: 0.79-0.86)"
+            );
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! DVS event primitives (address-event representation).
+
+/// One DVS event: a pixel fired at a microsecond timestamp with a
+/// brightness-change polarity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DvsEvent {
+    /// Timestamp in microseconds from stream start.
+    pub t_us: u64,
+    /// Pixel x coordinate.
+    pub x: u16,
+    /// Pixel y coordinate.
+    pub y: u16,
+    /// `true` = ON (brightness increase), `false` = OFF.
+    pub polarity: bool,
+}
+
+/// A sensor-resolution-tagged stream of events, sorted by timestamp.
+#[derive(Debug, Clone)]
+pub struct EventStream {
+    /// Sensor width in pixels.
+    pub width: u16,
+    /// Sensor height in pixels.
+    pub height: u16,
+    /// Stream duration in microseconds.
+    pub duration_us: u64,
+    /// Events sorted by `t_us`.
+    pub events: Vec<DvsEvent>,
+}
+
+impl EventStream {
+    /// Validate coordinates/order and build the stream.
+    pub fn new(width: u16, height: u16, duration_us: u64, mut events: Vec<DvsEvent>) -> Self {
+        events.sort_by_key(|e| e.t_us);
+        for e in &events {
+            assert!(e.x < width && e.y < height, "event out of sensor bounds");
+            assert!(e.t_us <= duration_us, "event after stream end");
+        }
+        EventStream { width, height, duration_us, events }
+    }
+
+    /// Mean event rate in events/second.
+    pub fn rate_hz(&self) -> f64 {
+        if self.duration_us == 0 {
+            return 0.0;
+        }
+        self.events.len() as f64 / (self.duration_us as f64 * 1e-6)
+    }
+
+    /// Events within `[t0_us, t1_us)` (binary-searched slice).
+    pub fn window(&self, t0_us: u64, t1_us: u64) -> &[DvsEvent] {
+        let lo = self.events.partition_point(|e| e.t_us < t0_us);
+        let hi = self.events.partition_point(|e| e.t_us < t1_us);
+        &self.events[lo..hi]
+    }
+
+    /// Fraction of (pixel × polarity × timestep) slots with no event, for
+    /// the given timestep width — the paper's "input sparsity".
+    pub fn sparsity(&self, timestep_us: u64) -> f64 {
+        assert!(timestep_us > 0);
+        let steps = self.duration_us.div_ceil(timestep_us).max(1);
+        let slots = steps * self.width as u64 * self.height as u64 * 2;
+        // Count occupied slots (deduplicate multiple events per slot).
+        let mut occupied = std::collections::HashSet::new();
+        for e in &self.events {
+            let step = e.t_us / timestep_us;
+            occupied.insert((step.min(steps - 1), e.x, e.y, e.polarity));
+        }
+        1.0 - occupied.len() as f64 / slots as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64, x: u16, y: u16, p: bool) -> DvsEvent {
+        DvsEvent { t_us: t, x, y, polarity: p }
+    }
+
+    #[test]
+    fn stream_sorts_events() {
+        let s = EventStream::new(8, 8, 100, vec![ev(50, 1, 1, true), ev(10, 2, 2, false)]);
+        assert_eq!(s.events[0].t_us, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of sensor bounds")]
+    fn oob_event_rejected() {
+        EventStream::new(8, 8, 100, vec![ev(0, 8, 0, true)]);
+    }
+
+    #[test]
+    fn rate_and_window() {
+        let events: Vec<DvsEvent> = (0..100).map(|i| ev(i * 10, 0, 0, true)).collect();
+        let s = EventStream::new(4, 4, 1000, events);
+        assert!((s.rate_hz() - 1e5).abs() < 1.0);
+        assert_eq!(s.window(100, 200).len(), 10); // t = 100..190
+        assert_eq!(s.window(0, 10).len(), 1);
+        assert_eq!(s.window(995, 2000).len(), 0);
+    }
+
+    #[test]
+    fn sparsity_extremes() {
+        // Empty stream: fully sparse.
+        let s = EventStream::new(4, 4, 100, vec![]);
+        assert_eq!(s.sparsity(10), 1.0);
+        // One event per slot in a 1-step stream: count occupied.
+        let mut evs = Vec::new();
+        for x in 0..4 {
+            for y in 0..4 {
+                evs.push(ev(0, x, y, true));
+                evs.push(ev(0, x, y, false));
+            }
+        }
+        let s = EventStream::new(4, 4, 9, evs);
+        assert_eq!(s.sparsity(10), 0.0);
+    }
+
+    #[test]
+    fn sparsity_deduplicates_same_slot() {
+        let s = EventStream::new(4, 4, 9, vec![ev(0, 0, 0, true), ev(5, 0, 0, true)]);
+        // 2 events, 1 slot occupied of 32.
+        assert!((s.sparsity(10) - (1.0 - 1.0 / 32.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,185 @@
+//! Event→spike-frame encoder (the per-timestep input buffer of Fig. 5a).
+//!
+//! The accelerator buffers one timestep of input events (the chip's
+//! 4.25-kB spike buffer) and presents them to the first SNN layer as a
+//! binary 2-channel (ON/OFF polarity) frame. Multiple events in the same
+//! (pixel, polarity, timestep) slot collapse into a single spike, exactly
+//! as a single-bit buffer does in hardware.
+
+use super::dvs::EventStream;
+
+/// One timestep of binary input spikes: channel-major `[2][h][w]` bits.
+#[derive(Debug, Clone)]
+pub struct SpikeFrame {
+    /// Frame height.
+    pub height: u16,
+    /// Frame width.
+    pub width: u16,
+    /// Bit per (channel, y, x): `bits[c * h * w + y * w + x]`.
+    pub bits: Vec<bool>,
+}
+
+impl SpikeFrame {
+    /// Empty frame.
+    pub fn new(width: u16, height: u16) -> Self {
+        SpikeFrame {
+            height,
+            width,
+            bits: vec![false; 2 * width as usize * height as usize],
+        }
+    }
+
+    #[inline]
+    fn index(&self, channel: usize, x: u16, y: u16) -> usize {
+        debug_assert!(channel < 2 && x < self.width && y < self.height);
+        channel * self.height as usize * self.width as usize
+            + y as usize * self.width as usize
+            + x as usize
+    }
+
+    /// Read one spike bit. Channel 0 = ON polarity, 1 = OFF.
+    pub fn get(&self, channel: usize, x: u16, y: u16) -> bool {
+        self.bits[self.index(channel, x, y)]
+    }
+
+    /// Set one spike bit.
+    pub fn set(&mut self, channel: usize, x: u16, y: u16) {
+        let i = self.index(channel, x, y);
+        self.bits[i] = true;
+    }
+
+    /// Number of active spikes.
+    pub fn count(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Sparsity of this frame (1 − active fraction).
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.count() as f64 / self.bits.len() as f64
+    }
+
+    /// Buffer footprint in bytes (1 bit per slot) — 4.25 kB holds a
+    /// 128×128×2 frame plus control words on the chip; a 48×48 workload
+    /// needs 576 B of it.
+    pub fn buffer_bytes(&self) -> usize {
+        self.bits.len().div_ceil(8)
+    }
+
+    /// Flatten to the `[channels × h × w]` boolean layout the SNN layer
+    /// expects as its fan-in vector.
+    pub fn as_input_vector(&self) -> &[bool] {
+        &self.bits
+    }
+}
+
+/// Bin an event stream into `timesteps` spike frames (paper Fig. 1c:
+/// per-timestep processing for low-latency decisions).
+pub fn encode_frames(stream: &EventStream, timesteps: usize) -> Vec<SpikeFrame> {
+    assert!(timesteps > 0);
+    let step_us = (stream.duration_us / timesteps as u64).max(1);
+    let mut frames = Vec::with_capacity(timesteps);
+    for i in 0..timesteps {
+        let t0 = i as u64 * step_us;
+        let t1 = if i == timesteps - 1 {
+            stream.duration_us + 1 // last frame absorbs the tail
+        } else {
+            (i + 1) as u64 * step_us
+        };
+        let mut f = SpikeFrame::new(stream.width, stream.height);
+        for e in stream.window(t0, t1) {
+            f.set(if e.polarity { 0 } else { 1 }, e.x, e.y);
+        }
+        frames.push(f);
+    }
+    frames
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::dvs::DvsEvent;
+    use crate::events::synthetic::{GestureClass, GestureGenerator};
+    use crate::util::rng::Rng;
+
+    fn ev(t: u64, x: u16, y: u16, p: bool) -> DvsEvent {
+        DvsEvent { t_us: t, x, y, polarity: p }
+    }
+
+    #[test]
+    fn binning_and_polarity_channels() {
+        let s = EventStream::new(
+            4,
+            4,
+            100,
+            vec![ev(5, 1, 2, true), ev(55, 3, 0, false), ev(99, 3, 3, true)],
+        );
+        let frames = encode_frames(&s, 2);
+        assert_eq!(frames.len(), 2);
+        assert!(frames[0].get(0, 1, 2));
+        assert!(!frames[0].get(1, 1, 2));
+        assert!(frames[1].get(1, 3, 0));
+        assert!(frames[1].get(0, 3, 3), "tail event lands in last frame");
+        assert_eq!(frames[0].count(), 1);
+        assert_eq!(frames[1].count(), 2);
+    }
+
+    #[test]
+    fn duplicate_events_collapse() {
+        let s = EventStream::new(
+            4,
+            4,
+            100,
+            vec![ev(1, 0, 0, true), ev(2, 0, 0, true), ev(3, 0, 0, true)],
+        );
+        let frames = encode_frames(&s, 1);
+        assert_eq!(frames[0].count(), 1, "single-bit buffer semantics");
+    }
+
+    #[test]
+    fn input_vector_layout_is_channel_major() {
+        let mut f = SpikeFrame::new(3, 2);
+        f.set(1, 2, 1); // OFF channel, x=2, y=1
+        let v = f.as_input_vector();
+        assert_eq!(v.len(), 12);
+        assert!(v[6 + 1 * 3 + 2]);
+        assert_eq!(v.iter().filter(|&&b| b).count(), 1);
+    }
+
+    #[test]
+    fn buffer_footprint_matches_chip_scale() {
+        // 128×128 sensor: 2 × 128 × 128 bits = 4 kB — the chip's 4.25-kB
+        // buffer (with control overhead).
+        let f = SpikeFrame::new(128, 128);
+        assert_eq!(f.buffer_bytes(), 4096);
+        let f48 = SpikeFrame::new(48, 48);
+        assert_eq!(f48.buffer_bytes(), 576);
+    }
+
+    #[test]
+    fn gesture_frames_match_network_input() {
+        let g = GestureGenerator::default_48();
+        let mut rng = Rng::new(1);
+        let s = g.sample(GestureClass::HandClap, &mut rng);
+        let frames = encode_frames(&s, 16);
+        assert_eq!(frames.len(), 16);
+        // The SCNN input layer expects 2×48×48 = 4608 inputs.
+        assert_eq!(frames[0].as_input_vector().len(), 4608);
+        // Mid-gesture frames carry signal.
+        assert!(frames[8].count() > 0);
+    }
+
+    #[test]
+    fn frame_sparsity_consistent_with_stream_sparsity() {
+        let g = GestureGenerator::default_48();
+        let mut rng = Rng::new(9);
+        let s = g.sample(GestureClass::RightCw, &mut rng);
+        let frames = encode_frames(&s, 16);
+        let mean_frame_sparsity: f64 =
+            frames.iter().map(SpikeFrame::sparsity).sum::<f64>() / frames.len() as f64;
+        let stream_sparsity = s.sparsity(s.duration_us / 16);
+        assert!(
+            (mean_frame_sparsity - stream_sparsity).abs() < 0.02,
+            "frame {mean_frame_sparsity:.4} vs stream {stream_sparsity:.4}"
+        );
+    }
+}

@@ -1,0 +1,346 @@
+//! Synthetic DVS gesture generator (substitute for IBM DVS Gesture [1]).
+//!
+//! Each of the ten classes is a parametric spatio-temporal motion of a
+//! bright blob (plus a static noise floor). A moving edge produces ON
+//! events on its leading side and OFF events on its trailing side, which
+//! is what a real DVS emits; the per-class trajectories differ in
+//! direction, curvature and frequency so a spiking CNN must integrate
+//! motion over time to classify them — the same computational task as the
+//! real dataset, at the same controllable sparsity.
+
+use super::dvs::{DvsEvent, EventStream};
+use crate::util::rng::Rng;
+
+/// Ten gesture classes, mirroring the IBM set's structure (10-class
+/// variant, Table I footnote b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GestureClass {
+    /// Both-hands oscillation toward the center.
+    HandClap = 0,
+    /// Right-hand horizontal wave.
+    RightWave = 1,
+    /// Left-hand horizontal wave.
+    LeftWave = 2,
+    /// Right-hand clockwise circle.
+    RightCw = 3,
+    /// Right-hand counter-clockwise circle.
+    RightCcw = 4,
+    /// Left-hand clockwise circle.
+    LeftCw = 5,
+    /// Left-hand counter-clockwise circle.
+    LeftCcw = 6,
+    /// Forearm roll: large slow circle.
+    ArmRoll = 7,
+    /// Air drums: two blobs in vertical anti-phase.
+    AirDrums = 8,
+    /// Air guitar: diagonal strum oscillation.
+    AirGuitar = 9,
+}
+
+impl GestureClass {
+    /// All classes in label order.
+    pub const ALL: [GestureClass; 10] = [
+        GestureClass::HandClap,
+        GestureClass::RightWave,
+        GestureClass::LeftWave,
+        GestureClass::RightCw,
+        GestureClass::RightCcw,
+        GestureClass::LeftCw,
+        GestureClass::LeftCcw,
+        GestureClass::ArmRoll,
+        GestureClass::AirDrums,
+        GestureClass::AirGuitar,
+    ];
+
+    /// Class from a label index.
+    pub fn from_label(label: usize) -> GestureClass {
+        Self::ALL[label]
+    }
+
+    /// Integer label.
+    pub fn label(self) -> usize {
+        self as usize
+    }
+
+    /// Blob center(s) at normalized time `t ∈ [0, 1)`, in normalized
+    /// sensor coordinates `[0, 1]²`.
+    fn centers(self, t: f64) -> Vec<(f64, f64)> {
+        use std::f64::consts::TAU;
+        let osc = (TAU * 3.0 * t).sin(); // three periods per sample
+        match self {
+            GestureClass::HandClap => vec![
+                (0.5 - 0.25 * osc.abs(), 0.5),
+                (0.5 + 0.25 * osc.abs(), 0.5),
+            ],
+            GestureClass::RightWave => vec![(0.7 + 0.18 * osc, 0.35)],
+            GestureClass::LeftWave => vec![(0.3 + 0.18 * osc, 0.35)],
+            GestureClass::RightCw => {
+                let a = TAU * 2.0 * t;
+                vec![(0.65 + 0.18 * a.cos(), 0.5 - 0.18 * a.sin())]
+            }
+            GestureClass::RightCcw => {
+                let a = TAU * 2.0 * t;
+                vec![(0.65 + 0.18 * a.cos(), 0.5 + 0.18 * a.sin())]
+            }
+            GestureClass::LeftCw => {
+                let a = TAU * 2.0 * t;
+                vec![(0.35 + 0.18 * a.cos(), 0.5 - 0.18 * a.sin())]
+            }
+            GestureClass::LeftCcw => {
+                let a = TAU * 2.0 * t;
+                vec![(0.35 + 0.18 * a.cos(), 0.5 + 0.18 * a.sin())]
+            }
+            GestureClass::ArmRoll => {
+                let a = TAU * 1.0 * t;
+                vec![(0.5 + 0.3 * a.cos(), 0.5 + 0.3 * a.sin())]
+            }
+            GestureClass::AirDrums => vec![
+                (0.35, 0.5 + 0.2 * osc),
+                (0.65, 0.5 - 0.2 * osc),
+            ],
+            GestureClass::AirGuitar => vec![(0.5 + 0.15 * osc, 0.6 + 0.15 * osc)],
+        }
+    }
+}
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct GestureGenerator {
+    /// Sensor width (pixels).
+    pub width: u16,
+    /// Sensor height (pixels).
+    pub height: u16,
+    /// Sample duration in microseconds.
+    pub duration_us: u64,
+    /// Number of frames the motion is discretized into internally.
+    pub motion_steps: usize,
+    /// Blob radius in normalized units.
+    pub blob_radius: f64,
+    /// Per-pixel event probability on the blob's moving edge per motion
+    /// step (controls foreground density).
+    pub edge_event_prob: f64,
+    /// Background noise events per pixel per second.
+    pub noise_rate_hz: f64,
+}
+
+impl GestureGenerator {
+    /// Defaults matched to the SCNN workload: 48×48 sensor, 16 motion
+    /// steps over 100 ms, ~95 % sparsity at 6.25-ms timesteps.
+    pub fn default_48() -> Self {
+        GestureGenerator {
+            width: 48,
+            height: 48,
+            duration_us: 100_000,
+            motion_steps: 64,
+            blob_radius: 0.10,
+            edge_event_prob: 0.55,
+            noise_rate_hz: 2.0,
+        }
+    }
+
+    /// Generate one labeled sample.
+    pub fn sample(&self, class: GestureClass, rng: &mut Rng) -> EventStream {
+        let mut events = Vec::new();
+        let w = self.width as f64;
+        let h = self.height as f64;
+        let step_us = self.duration_us / self.motion_steps as u64;
+
+        let mut prev: Vec<(f64, f64)> = class.centers(0.0);
+        for step in 1..self.motion_steps {
+            let t = step as f64 / self.motion_steps as f64;
+            let centers = class.centers(t);
+            let t_us = step as u64 * step_us;
+            for (ci, &(cx, cy)) in centers.iter().enumerate() {
+                let (px, py) = prev[ci.min(prev.len() - 1)];
+                let (dx, dy) = (cx - px, cy - py);
+                let speed = (dx * dx + dy * dy).sqrt();
+                if speed < 1e-9 {
+                    continue;
+                }
+                // Emit ON events on the leading edge, OFF on the trailing
+                // edge of the moving disc.
+                let r = self.blob_radius;
+                let x_lo = ((cx - r) * w).floor().max(0.0) as i64;
+                let x_hi = ((cx + r) * w).ceil().min(w - 1.0) as i64;
+                let y_lo = ((cy - r) * h).floor().max(0.0) as i64;
+                let y_hi = ((cy + r) * h).ceil().min(h - 1.0) as i64;
+                for px_i in x_lo..=x_hi {
+                    for py_i in y_lo..=y_hi {
+                        let nx = (px_i as f64 + 0.5) / w - cx;
+                        let ny = (py_i as f64 + 0.5) / h - cy;
+                        let d = (nx * nx + ny * ny).sqrt();
+                        if d > r || d < r * 0.55 {
+                            continue; // only the rim produces edge events
+                        }
+                        // Dot product with motion direction decides
+                        // leading (ON) vs trailing (OFF) side.
+                        let along = (nx * dx + ny * dy) / (d * speed);
+                        if rng.chance(self.edge_event_prob * along.abs()) {
+                            let jitter = rng.below(step_us.max(1));
+                            events.push(DvsEvent {
+                                t_us: (t_us + jitter).min(self.duration_us),
+                                x: px_i as u16,
+                                y: py_i as u16,
+                                polarity: along > 0.0,
+                            });
+                        }
+                    }
+                }
+            }
+            prev = centers;
+        }
+
+        // Uniform background noise.
+        let expected_noise = self.noise_rate_hz
+            * (self.width as f64 * self.height as f64)
+            * (self.duration_us as f64 * 1e-6);
+        let n_noise = rng.poisson(expected_noise);
+        for _ in 0..n_noise {
+            events.push(DvsEvent {
+                t_us: rng.below(self.duration_us),
+                x: rng.below(self.width as u64) as u16,
+                y: rng.below(self.height as u64) as u16,
+                polarity: rng.chance(0.5),
+            });
+        }
+
+        EventStream::new(self.width, self.height, self.duration_us, events)
+    }
+
+    /// Generate a labeled dataset: `per_class` samples of every class.
+    pub fn dataset(&self, per_class: usize, rng: &mut Rng) -> Vec<(EventStream, usize)> {
+        let mut out = Vec::new();
+        for class in GestureClass::ALL {
+            for _ in 0..per_class {
+                out.push((self.sample(class, rng), class.label()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_roundtrip() {
+        for (i, c) in GestureClass::ALL.iter().enumerate() {
+            assert_eq!(c.label(), i);
+            assert_eq!(GestureClass::from_label(i), *c);
+        }
+    }
+
+    #[test]
+    fn samples_are_nonempty_and_in_bounds() {
+        let g = GestureGenerator::default_48();
+        let mut rng = Rng::new(7);
+        for class in GestureClass::ALL {
+            let s = g.sample(class, &mut rng);
+            assert!(
+                s.events.len() > 100,
+                "{class:?} produced only {} events",
+                s.events.len()
+            );
+            assert!(s.events.iter().all(|e| e.x < 48 && e.y < 48));
+        }
+    }
+
+    #[test]
+    fn sparsity_in_papers_sweep_range() {
+        // Default parameters must land inside the paper's 85–99 % band at
+        // the SNN timestep (duration / 16).
+        let g = GestureGenerator::default_48();
+        let mut rng = Rng::new(3);
+        for class in [GestureClass::HandClap, GestureClass::ArmRoll, GestureClass::RightCw] {
+            let s = g.sample(class, &mut rng);
+            let sp = s.sparsity(g.duration_us / 16);
+            assert!(
+                (0.85..0.995).contains(&sp),
+                "{class:?}: sparsity {sp:.4} outside 85-99 %"
+            );
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean event position and polarity balance must differ between a
+        // right-hand and a left-hand gesture — otherwise the classification
+        // task would be degenerate.
+        let g = GestureGenerator::default_48();
+        let mut rng = Rng::new(11);
+        let mean_x = |c: GestureClass, rng: &mut Rng| {
+            let s = g.sample(c, rng);
+            s.events.iter().map(|e| e.x as f64).sum::<f64>() / s.events.len() as f64
+        };
+        let rx = mean_x(GestureClass::RightWave, &mut rng);
+        let lx = mean_x(GestureClass::LeftWave, &mut rng);
+        assert!(rx > lx + 5.0, "right {rx:.1} vs left {lx:.1}");
+    }
+
+    #[test]
+    fn circular_classes_differ_by_rotation_direction() {
+        // CW vs CCW must differ in the phase relation between x and y
+        // motion; test via the sign of the cross-correlation of event
+        // centroid displacement.
+        let g = GestureGenerator::default_48();
+        let mut rng = Rng::new(5);
+        let rotation_sign = |c: GestureClass, rng: &mut Rng| {
+            let s = g.sample(c, rng);
+            let step = g.duration_us / 16;
+            let centroids: Vec<(f64, f64)> = (0..16)
+                .map(|i| {
+                    let w = s.window(i * step, (i + 1) * step);
+                    if w.is_empty() {
+                        return (0.0, 0.0);
+                    }
+                    let n = w.len() as f64;
+                    (
+                        w.iter().map(|e| e.x as f64).sum::<f64>() / n,
+                        w.iter().map(|e| e.y as f64).sum::<f64>() / n,
+                    )
+                })
+                .collect();
+            let mut cross = 0.0;
+            for i in 1..centroids.len() - 1 {
+                let (dx0, dy0) = (
+                    centroids[i].0 - centroids[i - 1].0,
+                    centroids[i].1 - centroids[i - 1].1,
+                );
+                let (dx1, dy1) = (
+                    centroids[i + 1].0 - centroids[i].0,
+                    centroids[i + 1].1 - centroids[i].1,
+                );
+                cross += dx0 * dy1 - dy0 * dx1;
+            }
+            cross
+        };
+        let cw = rotation_sign(GestureClass::RightCw, &mut rng);
+        let ccw = rotation_sign(GestureClass::RightCcw, &mut rng);
+        assert!(
+            cw * ccw < 0.0,
+            "rotation directions must have opposite signs: {cw:.2} vs {ccw:.2}"
+        );
+    }
+
+    #[test]
+    fn dataset_shape() {
+        let g = GestureGenerator {
+            motion_steps: 16,
+            ..GestureGenerator::default_48()
+        };
+        let mut rng = Rng::new(1);
+        let d = g.dataset(2, &mut rng);
+        assert_eq!(d.len(), 20);
+        assert_eq!(d.iter().filter(|(_, l)| *l == 0).count(), 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = GestureGenerator::default_48();
+        let s1 = g.sample(GestureClass::ArmRoll, &mut Rng::new(42));
+        let s2 = g.sample(GestureClass::ArmRoll, &mut Rng::new(42));
+        assert_eq!(s1.events.len(), s2.events.len());
+        assert_eq!(s1.events.first(), s2.events.first());
+    }
+}

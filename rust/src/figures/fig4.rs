@@ -1,0 +1,148 @@
+//! Fig. 4 — layer-wise memory requirements and the hybrid-stationary gain.
+//!
+//! (a) per-layer weight vs membrane-potential footprints of the six-conv
+//! SCNN with the WS/OS crossover; (b) WS-only vs HS-min mapping on two
+//! macros, reporting the increase in stationary operands (paper: +46 %).
+
+use crate::dataflow::{Mapper, Policy, Stationarity};
+use crate::snn::network::scnn_dvs_gesture;
+use crate::snn::Network;
+
+/// One layer row of Fig. 4(a).
+#[derive(Debug, Clone)]
+pub struct LayerRow {
+    /// Layer name.
+    pub name: String,
+    /// Weight footprint (bits).
+    pub weight_bits: u64,
+    /// Membrane footprint (bits).
+    pub vmem_bits: u64,
+    /// HS-min choice for this layer.
+    pub hs_min_choice: Stationarity,
+    /// HS-max choice.
+    pub hs_max_choice: Stationarity,
+}
+
+/// Full Fig. 4 result.
+#[derive(Debug, Clone)]
+pub struct Fig4 {
+    /// Per-layer rows (a).
+    pub rows: Vec<LayerRow>,
+    /// Avoided traffic per timestep under WS-only, 2 macros (b).
+    pub ws_only_avoided: u64,
+    /// Avoided traffic per timestep under HS-min, 2 macros (b).
+    pub hs_min_avoided: u64,
+    /// Layers with full stationarity under each policy.
+    pub ws_only_covered: usize,
+    /// Layers with full stationarity under HS-min.
+    pub hs_min_covered: usize,
+}
+
+impl Fig4 {
+    /// The headline: relative increase in stationary operands (paper 0.46).
+    pub fn hs_gain(&self) -> f64 {
+        self.hs_min_avoided as f64 / self.ws_only_avoided as f64 - 1.0
+    }
+}
+
+/// Compute Fig. 4 on the reference workload with two macros.
+pub fn run() -> Fig4 {
+    run_on(&scnn_dvs_gesture(), 2)
+}
+
+/// Compute Fig. 4 on any workload/macro count.
+pub fn run_on(net: &Network, macros: usize) -> Fig4 {
+    let rows = net
+        .layers
+        .iter()
+        .map(|l| LayerRow {
+            name: l.name.clone(),
+            weight_bits: l.weight_bits(),
+            vmem_bits: l.vmem_bits(),
+            hs_min_choice: crate::dataflow::stationarity::min_footprint_choice(l),
+            hs_max_choice: crate::dataflow::stationarity::max_footprint_choice(l),
+        })
+        .collect();
+    let mapper = Mapper::flexspim(macros);
+    let ws = mapper.map(net, Policy::WsOnly);
+    let hs = mapper.map(net, Policy::HsMin);
+    Fig4 {
+        rows,
+        ws_only_avoided: ws.avoided_traffic_bits(net),
+        hs_min_avoided: hs.avoided_traffic_bits(net),
+        ws_only_covered: ws.layers_with_stationarity(),
+        hs_min_covered: hs.layers_with_stationarity(),
+    }
+}
+
+/// Render the paper-style report.
+pub fn render(f: &Fig4) -> String {
+    let mut s = String::from(
+        "Fig. 4(a) — per-layer operand footprints (bits)\n\
+         layer      weights         vmem   HS-min  HS-max\n",
+    );
+    for r in &f.rows {
+        s.push_str(&format!(
+            "{:<6} {:>12} {:>12}   {:>5}  {:>5}\n",
+            r.name,
+            r.weight_bits,
+            r.vmem_bits,
+            match r.hs_min_choice {
+                Stationarity::Ws => "WS",
+                Stationarity::Os => "OS",
+            },
+            match r.hs_max_choice {
+                Stationarity::Ws => "WS",
+                Stationarity::Os => "OS",
+            },
+        ));
+    }
+    s.push_str(&format!(
+        "\nFig. 4(b) — 2-macro mapping\n\
+         WS-only: avoided {} bits/timestep, {} layers covered\n\
+         HS-min : avoided {} bits/timestep, {} layers covered\n\
+         stationary-operand gain: +{:.1} %  (paper: +46 %)\n",
+        f.ws_only_avoided,
+        f.ws_only_covered,
+        f.hs_min_avoided,
+        f.hs_min_covered,
+        100.0 * f.hs_gain(),
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crossover_exists() {
+        // Fig. 4a's defining feature: early layers OS-preferred, late
+        // layers WS-preferred under HS-min.
+        let f = run();
+        assert_eq!(f.rows[0].hs_min_choice, Stationarity::Ws); // tiny kernel
+        assert_eq!(f.rows[5].hs_min_choice, Stationarity::Os); // big kernel
+    }
+
+    #[test]
+    fn gain_in_paper_band() {
+        let f = run();
+        let g = f.hs_gain();
+        assert!((0.35..0.60).contains(&g), "gain {g:.3}");
+    }
+
+    #[test]
+    fn hs_covers_all_layers_with_two_macros() {
+        let f = run();
+        assert_eq!(f.hs_min_covered, 9);
+        assert!(f.ws_only_covered < 9);
+    }
+
+    #[test]
+    fn render_contains_key_lines() {
+        let s = render(&run());
+        assert!(s.contains("Fig. 4(a)"));
+        assert!(s.contains("stationary-operand gain"));
+        assert!(s.contains("L6"));
+    }
+}

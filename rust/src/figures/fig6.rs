@@ -1,0 +1,188 @@
+//! Fig. 6 — resolution flexibility: accuracy vs memory footprint.
+//!
+//! (a) the FlexSpIM per-layer resolution choice vs the same model
+//! constrained to [4]'s fixed menu (paper: 30 % smaller at iso-accuracy);
+//! (b) accuracy sensitivity to uniform resolution scaling and its model-
+//! size impact (paper: a further 36 % reduction at 90 % accuracy).
+//!
+//! Model sizes are exact (pure accounting). Accuracy points require the
+//! PJRT runtime + trained weights: the driver takes a `&mut Coordinator`
+//! and a labeled synthetic dataset; with random weights accuracy is
+//! chance (~10 %) — train first (examples/train_snn or `flexspim train`).
+
+use crate::coordinator::Coordinator;
+use crate::events::EventStream;
+use crate::snn::network::{scnn_constrained_isscc24, scnn_dvs_gesture};
+use crate::Result;
+
+/// One configuration point.
+#[derive(Debug, Clone)]
+pub struct Fig6Point {
+    /// Configuration label.
+    pub label: String,
+    /// Per-layer (w_bits, p_bits).
+    pub resolutions: Vec<(u32, u32)>,
+    /// Total weight footprint (bits).
+    pub model_bits: u64,
+    /// Conv-only weight footprint (bits) — Fig. 6(b) excludes FC layers.
+    pub conv_bits: u64,
+    /// Measured accuracy (None when run size-only).
+    pub accuracy: Option<f64>,
+}
+
+/// Size-only study for Fig. 6(a): flexible vs constrained footprints.
+pub fn size_study() -> (Fig6Point, Fig6Point) {
+    let flex = scnn_dvs_gesture();
+    let fixed = scnn_constrained_isscc24();
+    let point = |net: &crate::snn::Network, label: &str| Fig6Point {
+        label: label.to_string(),
+        resolutions: net.layers.iter().map(|l| (l.res.w_bits, l.res.p_bits)).collect(),
+        model_bits: net.total_weight_bits(),
+        conv_bits: net.conv_weight_bits(),
+        accuracy: None,
+    };
+    (point(&flex, "FlexSpIM (unconstrained)"), point(&fixed, "[4]-constrained"))
+}
+
+/// Fig. 6(a) headline: relative footprint reduction (paper: 0.30).
+pub fn footprint_reduction() -> f64 {
+    let (flex, fixed) = size_study();
+    1.0 - flex.model_bits as f64 / fixed.model_bits as f64
+}
+
+/// Fig. 6(b) sweep configurations: uniform down-scaling of the reference
+/// resolutions (bitwise granularity — only FlexSpIM can run all of them).
+pub fn scaling_configs() -> Vec<(String, Vec<(u32, u32)>)> {
+    let base: Vec<(u32, u32)> = scnn_dvs_gesture()
+        .layers
+        .iter()
+        .map(|l| (l.res.w_bits, l.res.p_bits))
+        .collect();
+    let mut out = Vec::new();
+    for delta in 0..=3i64 {
+        let cfg: Vec<(u32, u32)> = base
+            .iter()
+            .map(|&(w, p)| {
+                (
+                    (w as i64 - delta).max(2) as u32,
+                    (p as i64 - delta).max(4) as u32,
+                )
+            })
+            .collect();
+        out.push((format!("base-{delta}b"), cfg));
+    }
+    out
+}
+
+/// Measure accuracy at each configuration on a labeled dataset.
+pub fn accuracy_sweep(
+    coord: &mut Coordinator,
+    data: &[(EventStream, usize)],
+    configs: &[(String, Vec<(u32, u32)>)],
+) -> Result<Vec<Fig6Point>> {
+    let mut out = Vec::new();
+    for (label, res) in configs {
+        coord.set_resolutions(res);
+        let metrics = coord.run_dataset(data)?;
+        let net = scnn_dvs_gesture().with_resolutions(
+            &res.iter()
+                .map(|&(w, p)| crate::snn::Resolution::new(w, p))
+                .collect::<Vec<_>>(),
+        );
+        out.push(Fig6Point {
+            label: label.clone(),
+            resolutions: res.clone(),
+            model_bits: net.total_weight_bits(),
+            conv_bits: net.conv_weight_bits(),
+            accuracy: Some(metrics.accuracy()),
+        });
+    }
+    Ok(out)
+}
+
+/// Render the Fig. 6 report.
+pub fn render_sizes() -> String {
+    let (flex, fixed) = size_study();
+    let mut s = String::from("Fig. 6(a) — resolution choice and model size\n");
+    for p in [&flex, &fixed] {
+        s.push_str(&format!(
+            "{:<28} total {:>9} bits ({:>7.1} kB), conv-only {:>9} bits\n",
+            p.label,
+            p.model_bits,
+            p.model_bits as f64 / 8192.0,
+            p.conv_bits
+        ));
+        s.push_str("   per-layer (w/p): ");
+        for (w, pb) in &p.resolutions {
+            s.push_str(&format!("{w}/{pb} "));
+        }
+        s.push('\n');
+    }
+    s.push_str(&format!(
+        "footprint reduction: {:.1} %   (paper: 30 %)\n",
+        100.0 * footprint_reduction()
+    ));
+    s
+}
+
+/// Render accuracy sweep points.
+pub fn render_sweep(points: &[Fig6Point]) -> String {
+    let mut s = String::from(
+        "Fig. 6(b) — accuracy vs resolution (synthetic gesture set)\n\
+         config      conv bits    total bits   accuracy\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{:<10} {:>11} {:>13}   {}\n",
+            p.label,
+            p.conv_bits,
+            p.model_bits,
+            p.accuracy
+                .map(|a| format!("{:.1} %", 100.0 * a))
+                .unwrap_or_else(|| "n/a".into()),
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprint_reduction_in_paper_band() {
+        let r = footprint_reduction();
+        assert!((0.15..0.5).contains(&r), "reduction {r:.3}");
+    }
+
+    #[test]
+    fn scaling_configs_shrink_monotonically() {
+        let configs = scaling_configs();
+        assert_eq!(configs.len(), 4);
+        let sizes: Vec<u64> = configs
+            .iter()
+            .map(|(_, res)| {
+                scnn_dvs_gesture()
+                    .with_resolutions(
+                        &res.iter()
+                            .map(|&(w, p)| crate::snn::Resolution::new(w, p))
+                            .collect::<Vec<_>>(),
+                    )
+                    .total_weight_bits()
+            })
+            .collect();
+        for w in sizes.windows(2) {
+            assert!(w[1] < w[0], "sizes must shrink: {sizes:?}");
+        }
+        // Fig. 6(b): the -2b config lands near the paper's "additional
+        // 36 %" region relative to base.
+        let extra = 1.0 - sizes[2] as f64 / sizes[0] as f64;
+        assert!((0.25..0.50).contains(&extra), "extra reduction {extra:.3}");
+    }
+
+    #[test]
+    fn render_sizes_has_headline() {
+        let s = render_sizes();
+        assert!(s.contains("footprint reduction"));
+    }
+}

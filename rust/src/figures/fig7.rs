@@ -1,0 +1,197 @@
+//! Fig. 7 — macro-level shaping study (a) and many-macro system
+//! extrapolation (c, d).
+
+use crate::cim::{CimMacro, MacroConfig};
+use crate::energy::baselines::{fig7c_gain_sweep, fig7d_gain_sweep};
+use crate::energy::MacroEnergyModel;
+
+/// One point of the Fig. 7(a) resolution-linearity sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct ResolutionPoint {
+    /// Equal weight/potential resolution (bits).
+    pub bits: u32,
+    /// Energy per SOP (pJ), single-row shape over all columns.
+    pub pj_per_sop: f64,
+}
+
+/// One point of the Fig. 7(a) shape sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct ShapePoint {
+    /// Columns per operand.
+    pub n_c: u32,
+    /// Rows per operand.
+    pub n_r: u32,
+    /// Energy per SOP (pJ), measured on the bit-accurate simulator.
+    pub pj_per_sop: f64,
+}
+
+/// Full Fig. 7(a) result.
+#[derive(Debug, Clone)]
+pub struct Fig7a {
+    /// Energy vs resolution (linearity + carry overhead).
+    pub resolution_sweep: Vec<ResolutionPoint>,
+    /// Energy vs shape at 16-bit operands, 32 output channels.
+    pub shape_sweep: Vec<ShapePoint>,
+    /// Row-wise kernel-stacking baseline ([3]-style, no standby).
+    pub rowwise_baseline_pj: f64,
+}
+
+impl Fig7a {
+    /// Max/min across FlexSpIM shapes (paper: ≤24 % variation).
+    pub fn shape_variation(&self) -> f64 {
+        let lo = self.shape_sweep.iter().map(|p| p.pj_per_sop).fold(f64::INFINITY, f64::min);
+        let hi = self.shape_sweep.iter().map(|p| p.pj_per_sop).fold(0.0f64, f64::max);
+        hi / lo - 1.0
+    }
+
+    /// Best-case saving vs the row-wise baseline (paper: up to 4.3×).
+    pub fn max_saving(&self) -> f64 {
+        let lo = self.shape_sweep.iter().map(|p| p.pj_per_sop).fold(f64::INFINITY, f64::min);
+        self.rowwise_baseline_pj / lo
+    }
+
+    /// Worst-case saving vs the row-wise baseline.
+    pub fn min_saving(&self) -> f64 {
+        let hi = self.shape_sweep.iter().map(|p| p.pj_per_sop).fold(0.0f64, f64::max);
+        self.rowwise_baseline_pj / hi
+    }
+}
+
+/// Run Fig. 7(a): the shape sweep uses the *bit-accurate* macro simulator
+/// (every precharge/adder/carry event counted), the resolution sweep uses
+/// the analytic model (identical by the cross-validation test in
+/// energy::macro_model).
+pub fn run_fig7a() -> Fig7a {
+    let model = MacroEnergyModel::nominal();
+
+    // Energy vs resolution: single-row shapes (N_R = 1, N_C = bits),
+    // operands spread over all 256 columns.
+    let resolution_sweep = [2u32, 4, 8, 12, 16, 24, 32]
+        .iter()
+        .map(|&bits| {
+            let e = model
+                .sop_pj_analytic(bits, bits, bits, (256 / bits).max(1) as usize, 256)
+                .total_pj();
+            ResolutionPoint { bits, pj_per_sop: e }
+        })
+        .collect();
+
+    // Shape sweep at 16-bit potentials / 8-bit weights, 32 channels:
+    // simulate one accumulate on the real macro per shape.
+    let shape_sweep = [2u32, 4, 8, 16]
+        .iter()
+        .map(|&n_c| {
+            let neurons = (256 / n_c as usize).min(32);
+            let cfg = MacroConfig::flexspim(8, 16, n_c, 1, neurons);
+            let mut mac = CimMacro::new(cfg).expect("config fits");
+            for n in 0..neurons {
+                mac.load_weight(n, 0, (n as i64 % 11) - 5);
+                mac.load_vmem(n, (n as i64 * 7) % 100);
+            }
+            mac.reset_counters();
+            // Average a few accumulates for stable operand-dependent toggles.
+            for _ in 0..4 {
+                mac.cim_accumulate(0, None);
+            }
+            let pj = model.price_pj(mac.counters()) / mac.counters().sops as f64;
+            ShapePoint { n_c, n_r: 16u32.div_ceil(n_c), pj_per_sop: pj }
+        })
+        .collect();
+
+    let rowwise_baseline_pj = model.sop_pj_rowwise_baseline(16, 32, 256);
+    Fig7a { resolution_sweep, shape_sweep, rowwise_baseline_pj }
+}
+
+/// Fig. 7(c)/(d) sweeps re-exported with the paper's sparsity grid.
+pub fn run_fig7c() -> Vec<(f64, f64)> {
+    fig7c_gain_sweep(&[0.85, 0.88, 0.91, 0.94, 0.97, 0.99])
+}
+
+/// See [`run_fig7c`].
+pub fn run_fig7d() -> Vec<(f64, f64)> {
+    fig7d_gain_sweep(&[0.85, 0.88, 0.91, 0.94, 0.97, 0.99])
+}
+
+/// Render the Fig. 7 report.
+pub fn render(a: &Fig7a, c: &[(f64, f64)], d: &[(f64, f64)]) -> String {
+    let mut s = String::from("Fig. 7(a) — energy vs resolution (single-row shapes)\n");
+    s.push_str("bits   pJ/SOP   pJ/SOP/bit\n");
+    for p in &a.resolution_sweep {
+        s.push_str(&format!(
+            "{:>4} {:>8.3} {:>10.4}\n",
+            p.bits,
+            p.pj_per_sop,
+            p.pj_per_sop / p.bits as f64
+        ));
+    }
+    s.push_str("\nFig. 7(a) — shape sweep (8b/16b, 32 channels, bit-accurate sim)\n");
+    s.push_str("shape (NRxNC)   pJ/SOP\n");
+    for p in &a.shape_sweep {
+        s.push_str(&format!("{:>6}x{:<6} {:>8.3}\n", p.n_r, p.n_c, p.pj_per_sop));
+    }
+    s.push_str(&format!(
+        "row-wise stacking baseline: {:.3} pJ/SOP\n\
+         saving vs baseline: {:.2}x – {:.2}x   (paper: up to 4.3x)\n\
+         shape variation: {:.1} %            (paper: < 24 %)\n",
+        a.rowwise_baseline_pj,
+        a.min_saving(),
+        a.max_saving(),
+        100.0 * a.shape_variation(),
+    ));
+    s.push_str("\nFig. 7(c) — vs [4] ISSCC'24, 16 macros (paper: 87-90 % gain)\n");
+    for (sp, g) in c {
+        s.push_str(&format!("sparsity {:.2}: gain {:.1} %\n", sp, 100.0 * g));
+    }
+    s.push_str("\nFig. 7(d) — vs [3] IMPULSE, 18 macros (paper: 79-86 % gain)\n");
+    for (sp, g) in d {
+        s.push_str(&format!("sparsity {:.2}: gain {:.1} %\n", sp, 100.0 * g));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolution_sweep_is_linear() {
+        let f = run_fig7a();
+        // pJ/SOP/bit roughly constant (< 8 % spread).
+        let per_bit: Vec<f64> = f
+            .resolution_sweep
+            .iter()
+            .map(|p| p.pj_per_sop / p.bits as f64)
+            .collect();
+        let lo = per_bit.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = per_bit.iter().cloned().fold(0.0f64, f64::max);
+        assert!(hi / lo < 1.10, "per-bit energy spread {:.3}", hi / lo);
+    }
+
+    #[test]
+    fn shape_study_headlines() {
+        let f = run_fig7a();
+        assert!(f.shape_variation() < 0.30, "variation {:.3}", f.shape_variation());
+        assert!(
+            f.max_saving() > 3.4 && f.max_saving() < 7.0,
+            "max saving {:.2}",
+            f.max_saving()
+        );
+    }
+
+    #[test]
+    fn system_gains_in_band() {
+        for (_, g) in run_fig7c() {
+            assert!((0.80..0.95).contains(&g), "7c gain {g:.3}");
+        }
+        for (_, g) in run_fig7d() {
+            assert!((0.70..0.92).contains(&g), "7d gain {g:.3}");
+        }
+    }
+
+    #[test]
+    fn render_has_all_sections() {
+        let a = run_fig7a();
+        let s = render(&a, &run_fig7c(), &run_fig7d());
+        assert!(s.contains("Fig. 7(a)") && s.contains("Fig. 7(c)") && s.contains("Fig. 7(d)"));
+    }
+}

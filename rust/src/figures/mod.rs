@@ -1,0 +1,11 @@
+//! Paper-figure reproduction drivers.
+//!
+//! One module per table/figure of the evaluation (DESIGN.md §5 maps each
+//! to its bench target). Every driver returns structured data *and*
+//! renders the paper-style rows, so the benches, the CLI (`flexspim
+//! reproduce <id>`), and EXPERIMENTS.md all consume the same source.
+
+pub mod fig4;
+pub mod fig6;
+pub mod fig7;
+pub mod table1;

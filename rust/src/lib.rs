@@ -1,0 +1,36 @@
+//! # FlexSpIM
+//!
+//! Full-system reproduction of *"An Event-Based Digital Compute-In-Memory
+//! Accelerator with Flexible Operand Resolution and Layer-Wise Weight/Output
+//! Stationarity"* (Chauvaux et al., cs.AR 2024).
+//!
+//! The fabricated 40-nm chip is replaced by a bit-accurate simulator plus an
+//! energy model calibrated to the paper's silicon measurements. The stack is
+//! three layers:
+//!
+//! * **L1** — Pallas kernels (build-time Python) implementing the quantized
+//!   integrate-and-fire hot loop, checked against a pure-jnp oracle.
+//! * **L2** — a JAX spiking-CNN model lowered AOT to HLO text artifacts.
+//! * **L3** — this crate: the coordinator, the bit-accurate CIM macro
+//!   simulator, the hybrid-stationary dataflow mapper, the calibrated energy
+//!   model, the synthetic DVS event substrate, and the PJRT runtime that
+//!   executes the AOT artifacts on the request path (Python never runs at
+//!   inference time).
+//!
+//! Entry points: [`coordinator::Coordinator`] for end-to-end runs,
+//! [`cim::CimMacro`] for the macro simulator, [`dataflow::Mapper`] for the
+//! HS mapping search, and [`figures`] for the paper-figure drivers.
+
+pub mod cim;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod energy;
+pub mod events;
+pub mod figures;
+pub mod runtime;
+pub mod snn;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

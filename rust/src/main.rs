@@ -1,0 +1,250 @@
+//! FlexSpIM command-line interface.
+//!
+//! ```text
+//! flexspim reproduce <fig4|fig6|fig7a|fig7cd|table1|all>
+//! flexspim run       [--samples N] [--macros M] [--policy P] [--seed S]
+//! flexspim train     [--steps N] [--lr X] [--seed S] [--out PATH]
+//! flexspim map       [--macros M]
+//! flexspim simulate  [--wbits W] [--pbits P] [--nc C] [--neurons N] [--fanin F]
+//! flexspim sweep     [--samples N] [--seed S]      # Fig. 6(b) accuracy
+//! ```
+//!
+//! `run`, `train`, and `sweep` need the AOT artifacts (`make artifacts`).
+
+use anyhow::{bail, Result};
+use flexspim::cim::{CimMacro, MacroConfig};
+use flexspim::coordinator::Coordinator;
+use flexspim::dataflow::{Mapper, Policy};
+use flexspim::energy::MacroEnergyModel;
+use flexspim::events::GestureGenerator;
+use flexspim::figures::{fig4, fig6, fig7, table1};
+use flexspim::runtime::{artifacts_dir, Runtime, TrainRunner};
+use flexspim::snn::network::scnn_dvs_gesture;
+use flexspim::util::cli::{usage, Args, Spec};
+use flexspim::util::rng::Rng;
+
+fn specs() -> Vec<Spec> {
+    vec![
+        Spec { name: "samples", takes_value: true, help: "samples per class (default 2)" },
+        Spec { name: "macros", takes_value: true, help: "number of CIM macros (default 16)" },
+        Spec { name: "policy", takes_value: true, help: "ws-only|os-only|hs-min|hs-max|hs-opt" },
+        Spec { name: "seed", takes_value: true, help: "rng seed (default 42)" },
+        Spec { name: "steps", takes_value: true, help: "training steps (default 100)" },
+        Spec { name: "lr", takes_value: true, help: "learning rate (default 0.05)" },
+        Spec { name: "out", takes_value: true, help: "output path for trained weights" },
+        Spec { name: "wbits", takes_value: true, help: "weight bits (simulate)" },
+        Spec { name: "pbits", takes_value: true, help: "membrane bits (simulate)" },
+        Spec { name: "nc", takes_value: true, help: "operand columns N_C (simulate)" },
+        Spec { name: "neurons", takes_value: true, help: "parallel neurons (simulate)" },
+        Spec { name: "fanin", takes_value: true, help: "synapses per neuron (simulate)" },
+        Spec { name: "config", takes_value: true, help: "TOML config file" },
+        Spec { name: "help", takes_value: false, help: "show usage" },
+    ]
+}
+
+fn parse_policy(s: &str) -> Result<Policy> {
+    Ok(match s {
+        "ws-only" => Policy::WsOnly,
+        "os-only" => Policy::OsOnly,
+        "hs-min" => Policy::HsMin,
+        "hs-max" => Policy::HsMax,
+        "hs-opt" => Policy::HsOpt,
+        other => bail!("unknown policy '{other}'"),
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, &specs()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{}", usage("flexspim <command>", &specs()));
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    if args.flag("help") || cmd == "help" {
+        println!("{}", usage("flexspim <command>", &specs()));
+        println!("commands: reproduce run train map simulate sweep");
+        return Ok(());
+    }
+    match cmd {
+        "reproduce" => reproduce(&args),
+        "run" => run_inference(&args),
+        "train" => run_training(&args),
+        "map" => run_map(&args),
+        "simulate" => run_simulate(&args),
+        "sweep" => run_sweep(&args),
+        other => bail!("unknown command '{other}' (try: flexspim help)"),
+    }
+}
+
+fn reproduce(args: &Args) -> Result<()> {
+    let what = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
+    let mut any = false;
+    if matches!(what, "fig4" | "all") {
+        println!("{}", fig4::render(&fig4::run()));
+        any = true;
+    }
+    if matches!(what, "fig6" | "all") {
+        println!("{}", fig6::render_sizes());
+        println!("(accuracy sweep: `flexspim sweep` — needs artifacts + trained weights)\n");
+        any = true;
+    }
+    if matches!(what, "fig7a" | "fig7cd" | "fig7" | "all") {
+        let a = fig7::run_fig7a();
+        println!("{}", fig7::render(&a, &fig7::run_fig7c(), &fig7::run_fig7d()));
+        any = true;
+    }
+    if matches!(what, "table1" | "all") {
+        println!("{}", table1::render());
+        any = true;
+    }
+    if !any {
+        bail!("unknown figure '{what}' (fig4|fig6|fig7a|fig7cd|table1|all)");
+    }
+    Ok(())
+}
+
+fn run_inference(args: &Args) -> Result<()> {
+    let samples = args.get_or("samples", 2usize);
+    let macros = args.get_or("macros", 16usize);
+    let policy = parse_policy(&args.get_or("policy", "hs-opt".to_string()))?;
+    let seed = args.get_or("seed", 42u64);
+
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let dir = artifacts_dir();
+    let runner = flexspim::runtime::ScnnRunner::load(&rt, &dir)?;
+    let mut coord = Coordinator::with_runner(runner, macros, policy)?;
+    let net = coord.network().clone();
+    println!("mapping ({} macros, {policy}):\n{}", macros, coord.mapping().table(&net));
+
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(seed);
+    let data = gen.dataset(samples, &mut rng);
+    println!("running {} samples ...", data.len());
+    let metrics = coord.run_dataset(&data)?;
+    println!("{}", metrics.report());
+    Ok(())
+}
+
+fn run_training(args: &Args) -> Result<()> {
+    let steps = args.get_or("steps", 100usize);
+    let lr = args.get_or("lr", 0.05f32);
+    let seed = args.get_or("seed", 42u64);
+    let out = args.get_or("out", String::from("artifacts/weights_trained.bin"));
+
+    let rt = Runtime::cpu()?;
+    let dir = artifacts_dir();
+    let mut trainer = TrainRunner::load(&rt, &dir)?;
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(seed);
+    println!("training {steps} steps (batch 4, lr {lr}) ...");
+    for step in 0..steps {
+        let (frames, labels) = flexspim::runtime::trainer::synth_batch(&gen, &mut rng);
+        let m = trainer.step(&frames, &labels, lr)?;
+        if step % 10 == 0 || step == steps - 1 {
+            println!("step {step:4}  loss {:.4}  batch-acc {:.2}", m.loss, m.accuracy);
+        }
+    }
+    save_weight_file(&trainer.to_weight_file(), std::path::Path::new(&out))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Serialize a WeightFile in the FSPW format (mirror of train.py).
+fn save_weight_file(wf: &flexspim::runtime::WeightFile, path: &std::path::Path) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(b"FSPW")?;
+    f.write_all(&(wf.layers.len() as i32).to_le_bytes())?;
+    for l in &wf.layers {
+        f.write_all(&(l.name.len() as i32).to_le_bytes())?;
+        f.write_all(l.name.as_bytes())?;
+        f.write_all(&(l.w_bits as i32).to_le_bytes())?;
+        f.write_all(&(l.p_bits as i32).to_le_bytes())?;
+        f.write_all(&(l.dims.len() as i32).to_le_bytes())?;
+        for &d in &l.dims {
+            f.write_all(&(d as i32).to_le_bytes())?;
+        }
+        for &v in &l.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn run_map(args: &Args) -> Result<()> {
+    let macros = args.get_or("macros", 2usize);
+    let net = scnn_dvs_gesture();
+    let mapper = Mapper::flexspim(macros);
+    for policy in Policy::ALL {
+        let m = mapper.map(&net, policy);
+        println!("=== {policy} ({macros} macros) ===");
+        println!("{}", m.table(&net));
+    }
+    Ok(())
+}
+
+fn run_simulate(args: &Args) -> Result<()> {
+    let w_bits = args.get_or("wbits", 8u32);
+    let p_bits = args.get_or("pbits", 16u32);
+    let n_c = args.get_or("nc", 1u32);
+    let neurons = args.get_or("neurons", 32usize);
+    let fan_in = args.get_or("fanin", 4usize);
+
+    let cfg = MacroConfig::flexspim(w_bits, p_bits, n_c, fan_in, neurons);
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let mut mac = CimMacro::new(cfg).map_err(|e| anyhow::anyhow!(e))?;
+    let mut rng = Rng::new(1);
+    for n in 0..neurons {
+        for j in 0..fan_in {
+            mac.load_weight(
+                n,
+                j,
+                rng.range_i64(
+                    flexspim::snn::quant::min_val(w_bits),
+                    flexspim::snn::quant::max_val(w_bits),
+                ),
+            );
+        }
+    }
+    mac.reset_counters();
+    let spikes: Vec<bool> = (0..fan_in).map(|_| rng.chance(0.5)).collect();
+    let theta = flexspim::snn::quant::max_val(p_bits) / 2;
+    let out = mac.timestep(&spikes, theta);
+    let c = *mac.counters();
+    let model = MacroEnergyModel::nominal();
+    println!("macro {w_bits}b/{p_bits}b shape N_C={n_c}, {neurons} neurons × {fan_in} synapses");
+    println!("input spikes: {spikes:?}");
+    println!("output spikes: {} fired of {neurons}", out.iter().filter(|&&b| b).count());
+    println!(
+        "cycles {}  adder-ops {}  carry-hops {}  writebacks {}",
+        c.cim_cycles, c.adder_ops, c.carry_hops, c.writebacks
+    );
+    println!(
+        "energy: {:.3} pJ total, {:.3} pJ/SOP",
+        model.price_pj(&c),
+        model.pj_per_sop(&c)
+    );
+    Ok(())
+}
+
+fn run_sweep(args: &Args) -> Result<()> {
+    let samples = args.get_or("samples", 2usize);
+    let seed = args.get_or("seed", 42u64);
+    let rt = Runtime::cpu()?;
+    let dir = artifacts_dir();
+    let runner = flexspim::runtime::ScnnRunner::load(&rt, &dir)?;
+    let mut coord = Coordinator::with_runner(runner, 16, Policy::HsOpt)?;
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(seed);
+    let data = gen.dataset(samples, &mut rng);
+    let configs = fig6::scaling_configs();
+    println!("sweeping {} configs × {} samples ...", configs.len(), data.len());
+    let points = fig6::accuracy_sweep(&mut coord, &data, &configs)?;
+    println!("{}", fig6::render_sweep(&points));
+    println!("{}", fig6::render_sizes());
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! PJRT client + executable wrappers.
+//!
+//! Adapted from /opt/xla-example/load_hlo: CPU client, HLO-text →
+//! `HloModuleProto` → compile → execute. Executables are compiled once
+//! and reused on the hot path; Python never runs at request time.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT runtime handle (one CPU client per process is plenty).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform string (e.g. `"Host"`), for diagnostics.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled computation plus conversion helpers.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Source artifact (diagnostics).
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple elements
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple()?;
+        Ok(out)
+    }
+}
+
+/// Build an int32 literal with the given logical dims.
+pub fn lit_i32(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == values.len(), "dims {:?} != len {}", dims, values.len());
+    Ok(xla::Literal::vec1(values).reshape(dims)?)
+}
+
+/// Build an f32 literal with the given logical dims.
+pub fn lit_f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == values.len(), "dims {:?} != len {}", dims, values.len());
+    Ok(xla::Literal::vec1(values).reshape(dims)?)
+}
+
+/// Build a scalar f32 literal.
+pub fn lit_f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an i32 vector from a literal.
+pub fn to_vec_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(l.to_vec::<i32>()?)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = lit_i32(&[1, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
+        assert_eq!(to_vec_i32(&l).unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(lit_i32(&[1, 2], &[3]).is_err());
+    }
+
+    #[test]
+    fn f32_scalar() {
+        let l = lit_f32_scalar(2.5);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![2.5]);
+    }
+}

@@ -1,0 +1,54 @@
+//! PJRT runtime: load and execute the AOT HLO artifacts.
+//!
+//! Python runs once at build time (`make artifacts`); from then on this
+//! module is the only bridge to the compute graphs. HLO *text* is the
+//! interchange format — jax ≥ 0.5 serializes protos with 64-bit ids that
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids
+//! (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! * [`client`] — thin wrapper over `xla::PjRtClient` + compiled
+//!   executables with typed int32/f32 literal helpers.
+//! * [`weights`] — reader for `artifacts/weights.bin` (float32 weights)
+//!   and the bit-exact mirror of the Python post-training quantizer.
+//! * [`scnn`] — typed wrapper around `scnn_step.hlo.txt`: runtime-dynamic
+//!   resolution, membrane state threading, per-layer spike counts.
+//! * [`trainer`] — typed wrapper around `train_step.hlo.txt` for the
+//!   end-to-end Rust-driven training example.
+
+pub mod client;
+pub mod scnn;
+pub mod trainer;
+pub mod weights;
+
+pub use client::{Executable, Runtime};
+pub use scnn::ScnnRunner;
+pub use trainer::TrainRunner;
+pub use weights::{LayerWeights, WeightFile};
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$FLEXSPIM_ARTIFACTS`, else
+/// `./artifacts`, else `../artifacts` (when run from `rust/`).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("FLEXSPIM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for cand in ["artifacts", "../artifacts"] {
+        let p = Path::new(cand);
+        if p.join("scnn_step.hlo.txt").exists() {
+            return p.to_path_buf();
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+}

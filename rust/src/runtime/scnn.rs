@@ -1,0 +1,207 @@
+//! Typed wrapper around the full-network timestep artifact.
+//!
+//! `scnn_step.hlo.txt` signature (20 inputs, lowered by compile/aot.py):
+//! `(spikes i32[2,48,48], qparams i32[9,3], w1..w9, v1..v9)` →
+//! `(out_spikes i32[10], v1'..v9', counts i32[9])`.
+//!
+//! Resolution is a *runtime* argument (qparams + requantized weights), so
+//! one compiled executable serves every point of the Fig. 6 sweep —
+//! mirroring the chip's runtime resolution reconfigurability.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::client::{lit_i32, to_vec_i32, Executable, Runtime};
+use super::weights::WeightFile;
+use crate::snn::network::scnn_dvs_gesture;
+use crate::snn::Network;
+
+/// Result of one network timestep.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    /// Output spikes of the classifier layer (10 values, 0/1).
+    pub out_spikes: Vec<i32>,
+    /// Per-layer spike counts (for energy accounting).
+    pub counts: Vec<i32>,
+}
+
+/// Compiled SCNN with resident weights and threaded membrane state.
+pub struct ScnnRunner {
+    exe: Executable,
+    net: Network,
+    /// Quantized weights per layer (row-major i32).
+    weights: Vec<Vec<i32>>,
+    /// Quantization params per layer: (modulus, half, theta).
+    qparams: Vec<[i32; 3]>,
+    /// Membrane state per layer (persisted across timesteps — output
+    /// stationarity at the runtime level).
+    vmems: Vec<Vec<i32>>,
+    /// Float source weights (for requantization).
+    weight_file: WeightFile,
+}
+
+impl ScnnRunner {
+    /// Load the artifact and weights from `dir` and compile. Prefers
+    /// `weights_trained.bin` (produced by the training driver) over the
+    /// shipped random-init `weights.bin`.
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<Self> {
+        let exe = rt.load_hlo(&dir.join("scnn_step.hlo.txt"))?;
+        let trained = dir.join("weights_trained.bin");
+        let wpath = if trained.exists() { trained } else { dir.join("weights.bin") };
+        let weight_file = WeightFile::load(&wpath)?;
+        Self::new(exe, weight_file)
+    }
+
+    /// Load with the shipped (untrained) weights explicitly — used by the
+    /// golden-trace integration test, which pins the random-init model.
+    pub fn load_untrained(rt: &Runtime, dir: &Path) -> Result<Self> {
+        let exe = rt.load_hlo(&dir.join("scnn_step.hlo.txt"))?;
+        let weight_file = WeightFile::load(&dir.join("weights.bin"))?;
+        Self::new(exe, weight_file)
+    }
+
+    /// Build from a compiled executable + weights (testing hook).
+    pub fn new(exe: Executable, weight_file: WeightFile) -> Result<Self> {
+        let net = scnn_dvs_gesture();
+        ensure!(
+            weight_file.layers.len() == net.layers.len(),
+            "weights.bin has {} layers, network has {}",
+            weight_file.layers.len(),
+            net.layers.len()
+        );
+        for (lw, ls) in weight_file.layers.iter().zip(&net.layers) {
+            ensure!(
+                lw.len() == ls.num_weights(),
+                "layer {}: {} weights in file, {} in spec",
+                ls.name,
+                lw.len(),
+                ls.num_weights()
+            );
+        }
+        let (weights, qparams) = weight_file.quantize_default();
+        let vmems = net.layers.iter().map(|l| vec![0i32; l.num_neurons()]).collect();
+        Ok(ScnnRunner { exe, net, weights, qparams, vmems, weight_file })
+    }
+
+    /// The workload description this runner mirrors.
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// Requantize all layers at explicit resolutions and reset state.
+    pub fn set_resolutions(&mut self, res: &[(u32, u32)]) {
+        let (w, q) = self.weight_file.quantize_at(res);
+        self.weights = w;
+        self.qparams = q;
+        self.reset();
+    }
+
+    /// Zero all membrane potentials (new inference).
+    pub fn reset(&mut self) {
+        for v in &mut self.vmems {
+            v.iter_mut().for_each(|x| *x = 0);
+        }
+    }
+
+    /// Current membrane state of a layer (diagnostics).
+    pub fn vmem(&self, layer: usize) -> &[i32] {
+        &self.vmems[layer]
+    }
+
+    /// Current quantization parameters (modulus, half, theta) per layer.
+    pub fn qparams(&self) -> &[[i32; 3]] {
+        &self.qparams
+    }
+
+    /// Execute one timestep on a 2×48×48 binary input frame.
+    pub fn step(&mut self, frame: &[i32]) -> Result<StepResult> {
+        let n = self.net.layers.len();
+        ensure!(frame.len() == 2 * 48 * 48, "frame must be 2x48x48");
+
+        let mut inputs = Vec::with_capacity(2 + 2 * n);
+        inputs.push(lit_i32(frame, &[2, 48, 48])?);
+        let qflat: Vec<i32> = self.qparams.iter().flatten().copied().collect();
+        inputs.push(lit_i32(&qflat, &[n as i64, 3])?);
+        for (w, ls) in self.weights.iter().zip(&self.net.layers) {
+            inputs.push(lit_i32(w, &weight_dims(ls))?);
+        }
+        for (v, ls) in self.vmems.iter().zip(&self.net.layers) {
+            inputs.push(lit_i32(v, &vmem_dims(ls))?);
+        }
+
+        let out = self.exe.run(&inputs).context("scnn_step execution")?;
+        ensure!(out.len() == n + 2, "expected {} outputs, got {}", n + 2, out.len());
+        let out_spikes = to_vec_i32(&out[0])?;
+        for (i, v) in out[1..=n].iter().enumerate() {
+            self.vmems[i] = to_vec_i32(v)?;
+        }
+        let counts = to_vec_i32(&out[n + 1])?;
+        Ok(StepResult { out_spikes, counts })
+    }
+
+    /// Run a full inference: `frames` is a sequence of timestep frames;
+    /// returns accumulated class spike counts (rate-coded logits).
+    pub fn infer(&mut self, frames: &[Vec<i32>]) -> Result<Vec<i64>> {
+        self.reset();
+        let mut rate = vec![0i64; 10];
+        for f in frames {
+            let r = self.step(f)?;
+            for (acc, s) in rate.iter_mut().zip(&r.out_spikes) {
+                *acc += *s as i64;
+            }
+        }
+        Ok(rate)
+    }
+
+    /// Argmax helper over rate-coded logits.
+    pub fn predict(rate: &[i64]) -> usize {
+        rate.iter()
+            .enumerate()
+            .max_by_key(|&(i, v)| (*v, std::cmp::Reverse(i)))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Weight tensor dims for a layer spec.
+fn weight_dims(l: &crate::snn::LayerSpec) -> Vec<i64> {
+    match l.kind {
+        crate::snn::LayerKind::Conv { in_ch, out_ch, k, .. } => {
+            vec![out_ch as i64, in_ch as i64, k as i64, k as i64]
+        }
+        crate::snn::LayerKind::Fc { in_dim, out_dim } => vec![out_dim as i64, in_dim as i64],
+    }
+}
+
+/// Membrane tensor dims for a layer spec.
+fn vmem_dims(l: &crate::snn::LayerSpec) -> Vec<i64> {
+    match l.kind {
+        crate::snn::LayerKind::Conv { .. } => {
+            let (c, h, w) = l.out_shape();
+            vec![c as i64, h as i64, w as i64]
+        }
+        crate::snn::LayerKind::Fc { out_dim, .. } => vec![out_dim as i64],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_is_argmax_with_low_index_tiebreak() {
+        assert_eq!(ScnnRunner::predict(&[0, 3, 3, 1]), 1);
+        assert_eq!(ScnnRunner::predict(&[5, 3, 3, 1]), 0);
+        assert_eq!(ScnnRunner::predict(&[]), 0);
+    }
+
+    #[test]
+    fn dims_helpers() {
+        let net = scnn_dvs_gesture();
+        assert_eq!(weight_dims(&net.layers[0]), vec![12, 2, 3, 3]);
+        assert_eq!(vmem_dims(&net.layers[0]), vec![12, 48, 48]);
+        assert_eq!(weight_dims(&net.layers[6]), vec![256, 3456]);
+        assert_eq!(vmem_dims(&net.layers[8]), vec![10]);
+    }
+}

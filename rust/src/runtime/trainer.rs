@@ -1,0 +1,150 @@
+//! Typed wrapper around the training-step artifact.
+//!
+//! `train_step.hlo.txt` signature (lowered by compile/aot.py):
+//! `(p1..p9 f32, m1..m9 f32, frames f32[B,16,2,48,48], labels i32[B],
+//!   lr f32)` → `(p1'..p9', m1'..m9', loss f32, acc f32)`.
+//!
+//! The Rust driver owns the parameter/momentum buffers and feeds
+//! synthetic gesture batches — end-to-end training with Python nowhere on
+//! the path (examples/train_snn.rs).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::client::{lit_f32, lit_f32_scalar, lit_i32, to_vec_f32, Executable, Runtime};
+use super::weights::{LayerWeights, WeightFile};
+use crate::events::{encode_frames, GestureClass, GestureGenerator};
+use crate::util::rng::Rng;
+
+/// Batch size baked into the artifact by compile/aot.py.
+pub const TRAIN_BATCH: usize = 4;
+/// Timesteps per sample.
+pub const TRAIN_TIMESTEPS: usize = 16;
+
+/// One training step's outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainMetrics {
+    /// Cross-entropy loss.
+    pub loss: f32,
+    /// Batch accuracy.
+    pub accuracy: f32,
+}
+
+/// Compiled trainer holding parameters and momentum host-side.
+pub struct TrainRunner {
+    exe: Executable,
+    /// Float parameters per layer.
+    pub params: Vec<Vec<f32>>,
+    momentum: Vec<Vec<f32>>,
+    dims: Vec<Vec<i64>>,
+    names: Vec<String>,
+    resolutions: Vec<(u32, u32)>,
+}
+
+impl TrainRunner {
+    /// Load artifact + initial weights from `dir` and compile.
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<Self> {
+        let exe = rt.load_hlo(&dir.join("train_step.hlo.txt"))?;
+        let wf = WeightFile::load(&dir.join("weights.bin"))?;
+        let dims = wf
+            .layers
+            .iter()
+            .map(|l| l.dims.iter().map(|&d| d as i64).collect())
+            .collect();
+        let names = wf.layers.iter().map(|l| l.name.clone()).collect();
+        let resolutions = wf.layers.iter().map(|l| (l.w_bits, l.p_bits)).collect();
+        let momentum = wf.layers.iter().map(|l| vec![0f32; l.len()]).collect();
+        let params = wf.layers.into_iter().map(|l| l.data).collect();
+        Ok(TrainRunner { exe, params, momentum, dims, names, resolutions })
+    }
+
+    /// One SGD step on a batch. `frames` is `[B][T][2*48*48]` flattened to
+    /// `B*T*2*48*48` f32 values; `labels` has `B` entries.
+    pub fn step(&mut self, frames: &[f32], labels: &[i32], lr: f32) -> Result<TrainMetrics> {
+        let b = TRAIN_BATCH;
+        ensure!(labels.len() == b, "batch must be {b}");
+        ensure!(
+            frames.len() == b * TRAIN_TIMESTEPS * 2 * 48 * 48,
+            "frames length mismatch"
+        );
+        let n = self.params.len();
+        let mut inputs = Vec::with_capacity(2 * n + 3);
+        for (p, d) in self.params.iter().zip(&self.dims) {
+            inputs.push(lit_f32(p, d)?);
+        }
+        for (m, d) in self.momentum.iter().zip(&self.dims) {
+            inputs.push(lit_f32(m, d)?);
+        }
+        inputs.push(lit_f32(
+            frames,
+            &[b as i64, TRAIN_TIMESTEPS as i64, 2, 48, 48],
+        )?);
+        inputs.push(lit_i32(labels, &[b as i64])?);
+        inputs.push(lit_f32_scalar(lr));
+
+        let out = self.exe.run(&inputs).context("train_step execution")?;
+        ensure!(out.len() == 2 * n + 2, "expected {} outputs", 2 * n + 2);
+        for i in 0..n {
+            self.params[i] = to_vec_f32(&out[i])?;
+            self.momentum[i] = to_vec_f32(&out[n + i])?;
+        }
+        let loss = to_vec_f32(&out[2 * n])?[0];
+        let accuracy = to_vec_f32(&out[2 * n + 1])?[0];
+        Ok(TrainMetrics { loss, accuracy })
+    }
+
+    /// Export the current parameters as a [`WeightFile`] (so the
+    /// inference runner can quantize and use them).
+    pub fn to_weight_file(&self) -> WeightFile {
+        let layers = self
+            .params
+            .iter()
+            .zip(&self.dims)
+            .zip(self.names.iter().zip(&self.resolutions))
+            .map(|((data, dims), (name, &(w_bits, p_bits)))| LayerWeights {
+                name: name.clone(),
+                w_bits,
+                p_bits,
+                dims: dims.iter().map(|&d| d as usize).collect(),
+                data: data.clone(),
+            })
+            .collect();
+        WeightFile { layers }
+    }
+}
+
+/// Generate one training batch from the synthetic gesture substrate:
+/// returns `(frames f32 flat, labels)`.
+pub fn synth_batch(gen: &GestureGenerator, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+    let mut frames = Vec::with_capacity(TRAIN_BATCH * TRAIN_TIMESTEPS * 2 * 48 * 48);
+    let mut labels = Vec::with_capacity(TRAIN_BATCH);
+    for _ in 0..TRAIN_BATCH {
+        let label = rng.below(10) as usize;
+        let stream = gen.sample(GestureClass::from_label(label), rng);
+        let fs = encode_frames(&stream, TRAIN_TIMESTEPS);
+        for f in &fs {
+            frames.extend(f.as_input_vector().iter().map(|&b| b as u8 as f32));
+        }
+        labels.push(label as i32);
+    }
+    (frames, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_batch_shapes() {
+        let gen = GestureGenerator::default_48();
+        let mut rng = Rng::new(1);
+        let (frames, labels) = synth_batch(&gen, &mut rng);
+        assert_eq!(frames.len(), TRAIN_BATCH * TRAIN_TIMESTEPS * 2 * 48 * 48);
+        assert_eq!(labels.len(), TRAIN_BATCH);
+        assert!(labels.iter().all(|&l| (0..10).contains(&l)));
+        assert!(frames.iter().all(|&v| v == 0.0 || v == 1.0));
+        let active: f32 = frames.iter().sum();
+        assert!(active > 100.0, "batch must contain spikes");
+    }
+}

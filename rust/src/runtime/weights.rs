@@ -1,0 +1,223 @@
+//! `weights.bin` reader and the bit-exact quantizer mirror.
+//!
+//! Format (little-endian, written by python/compile/train.py):
+//! `"FSPW"`, `i32 n_layers`, then per layer: `i32 name_len`, name bytes,
+//! `i32 w_bits`, `i32 p_bits`, `i32 ndim`, dims, `f32` data.
+//!
+//! Quantization must be bit-identical to `model.quantize_params`:
+//! float32 scale `max|W| / (2^(w_bits−1) − 1)`, round-half-away-from-zero
+//! (Rust's `f32::round`), `theta = round(1/scale)` clamped to the p_bits
+//! range. The cross-check golden (`golden/quantize_check.txt`) pins both
+//! implementations to the same integers.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use byteorder::{LittleEndian, ReadBytesExt};
+
+/// One layer's float weights plus its default resolution.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    /// Layer name (`"L1"` … `"FC3"`).
+    pub name: String,
+    /// Default weight bit-width from the model description.
+    pub w_bits: u32,
+    /// Default membrane bit-width.
+    pub p_bits: u32,
+    /// Tensor dims (e.g. `[out_ch, in_ch, k, k]` or `[out, in]`).
+    pub dims: Vec<usize>,
+    /// Row-major float32 data.
+    pub data: Vec<f32>,
+}
+
+impl LayerWeights {
+    /// Number of weights.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty (never for valid files).
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Quantize to `w_bits`/`p_bits`, returning `(int_weights, qparams)`
+    /// where qparams = (modulus, half, theta) as i32 — bit-identical to
+    /// the Python quantizer.
+    pub fn quantize(&self, w_bits: u32, p_bits: u32) -> (Vec<i32>, [i32; 3]) {
+        let max_q = ((1i64 << (w_bits - 1)) - 1).max(1) as f32;
+        let maxabs = self.data.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let scale = (maxabs / max_q).max(1e-12);
+        let lo = -(max_q as i32) - 1;
+        let hi = max_q as i32;
+        let q: Vec<i32> = self
+            .data
+            .iter()
+            .map(|&v| ((v / scale).round() as i32).clamp(lo, hi))
+            .collect();
+        let theta_max = (1i64 << (p_bits - 1)) - 1;
+        let theta = ((1.0 / scale).round() as i64).clamp(1, theta_max) as i32;
+        let m = 1i32 << p_bits;
+        let half = 1i32 << (p_bits - 1);
+        (q, [m, half, theta])
+    }
+}
+
+/// A parsed weights file.
+#[derive(Debug, Clone)]
+pub struct WeightFile {
+    /// Layers in network order.
+    pub layers: Vec<LayerWeights>,
+}
+
+impl WeightFile {
+    /// Read and validate a weights file.
+    pub fn load(path: &Path) -> Result<WeightFile> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"FSPW" {
+            bail!("{}: bad magic {:?}", path.display(), magic);
+        }
+        let n = f.read_i32::<LittleEndian>()?;
+        if !(1..=64).contains(&n) {
+            bail!("implausible layer count {n}");
+        }
+        let mut layers = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            let name_len = f.read_i32::<LittleEndian>()? as usize;
+            if name_len > 64 {
+                bail!("implausible name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let w_bits = f.read_i32::<LittleEndian>()? as u32;
+            let p_bits = f.read_i32::<LittleEndian>()? as u32;
+            let ndim = f.read_i32::<LittleEndian>()? as usize;
+            if ndim > 8 {
+                bail!("implausible rank {ndim}");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(f.read_i32::<LittleEndian>()? as usize);
+            }
+            let count: usize = dims.iter().product();
+            let mut data = vec![0f32; count];
+            f.read_f32_into::<LittleEndian>(&mut data)?;
+            layers.push(LayerWeights {
+                name: String::from_utf8(name)?,
+                w_bits,
+                p_bits,
+                dims,
+                data,
+            });
+        }
+        Ok(WeightFile { layers })
+    }
+
+    /// Quantize every layer at its default resolution.
+    pub fn quantize_default(&self) -> (Vec<Vec<i32>>, Vec<[i32; 3]>) {
+        self.layers
+            .iter()
+            .map(|l| l.quantize(l.w_bits, l.p_bits))
+            .unzip()
+    }
+
+    /// Quantize every layer at explicit per-layer resolutions.
+    pub fn quantize_at(&self, res: &[(u32, u32)]) -> (Vec<Vec<i32>>, Vec<[i32; 3]>) {
+        assert_eq!(res.len(), self.layers.len());
+        self.layers
+            .iter()
+            .zip(res)
+            .map(|(l, &(w, p))| l.quantize(w, p))
+            .unzip()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_layer(data: Vec<f32>) -> LayerWeights {
+        LayerWeights {
+            name: "T".into(),
+            w_bits: 4,
+            p_bits: 9,
+            dims: vec![data.len()],
+            data,
+        }
+    }
+
+    #[test]
+    fn quantize_basic() {
+        // max|w| = 0.7, w_bits = 4 -> max_q = 7, scale = 0.1.
+        let l = fake_layer(vec![0.7, -0.7, 0.35, 0.04, -0.06]);
+        let (q, [m, half, theta]) = l.quantize(4, 9);
+        assert_eq!(q, vec![7, -7, 4, 0, -1]); // 0.35/0.1=3.5 -> half-away = 4
+        assert_eq!(m, 512);
+        assert_eq!(half, 256);
+        assert_eq!(theta, 10); // round(1/0.1)
+    }
+
+    #[test]
+    fn quantize_half_away_from_zero() {
+        // 0.25/0.1... construct scale exactly: max 0.5 at 2 bits -> max_q=1,
+        // scale 0.5; 0.25/0.5 = 0.5 -> rounds to 1 (away from zero), and
+        // -0.25 -> -1 (clamped to lo = -2? no, -1 is in range).
+        let l = fake_layer(vec![0.5, 0.25, -0.25]);
+        let (q, _) = l.quantize(2, 6);
+        assert_eq!(q, vec![1, 1, -1]);
+    }
+
+    #[test]
+    fn theta_clamped_to_p_range() {
+        // Tiny weights -> huge 1/scale -> theta clamps to 2^(p-1)-1.
+        let l = fake_layer(vec![1e-6, -1e-6]);
+        let (_, [_, _, theta]) = l.quantize(4, 6);
+        assert_eq!(theta, 31);
+    }
+
+    #[test]
+    fn loads_shipped_weights_and_matches_golden() {
+        let dir = crate::runtime::artifacts_dir();
+        let wpath = dir.join("weights.bin");
+        let gpath = dir.join("golden/quantize_check.txt");
+        if !wpath.exists() || !gpath.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let wf = WeightFile::load(&wpath).unwrap();
+        assert_eq!(wf.layers.len(), 9);
+        assert_eq!(wf.layers[0].name, "L1");
+        assert_eq!(wf.layers[0].dims, vec![12, 2, 3, 3]);
+
+        // Golden cross-check: python and rust quantizers must produce
+        // identical integers (checksums per layer).
+        let text = std::fs::read_to_string(&gpath).unwrap();
+        let mut lines = text.lines();
+        let n: usize = lines.next().unwrap().trim().parse().unwrap();
+        assert_eq!(n, wf.layers.len());
+        let (qs, qparams) = wf.quantize_default();
+        for (i, line) in lines.enumerate() {
+            let v: Vec<i64> = line
+                .split_whitespace()
+                .map(|t| t.parse().unwrap())
+                .collect();
+            let [m, half, theta] = qparams[i];
+            assert_eq!(v[0], m as i64, "layer {i} modulus");
+            assert_eq!(v[1], half as i64, "layer {i} half");
+            assert_eq!(v[2], theta as i64, "layer {i} theta");
+            let q = &qs[i];
+            let sum: i64 = q.iter().map(|&x| x as i64).sum();
+            let abssum: i64 = q.iter().map(|&x| (x as i64).abs()).sum();
+            let min = *q.iter().min().unwrap() as i64;
+            let max = *q.iter().max().unwrap() as i64;
+            assert_eq!(v[3], sum, "layer {i} sum");
+            assert_eq!(v[4], abssum, "layer {i} abssum");
+            assert_eq!(v[5], min, "layer {i} min");
+            assert_eq!(v[6], max, "layer {i} max");
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Fixed-point convolutional integrate-and-fire layer.
+//!
+//! The Rust-native golden model for the conv layers: exact integer
+//! semantics (wrap at `p_bits`, fire, reset-by-subtraction), matching the
+//! Python oracle (`ref.if_step_conv`) and, via im2col, the CIM macro's
+//! matvec execution. Used by golden tests and by workload generators that
+//! need conv spike statistics without the PJRT runtime.
+
+use super::layer::{LayerKind, LayerSpec};
+use super::quant::{max_val, min_val, wrap};
+
+/// A conv layer of IF neurons with quantized weights and persistent
+/// membrane state.
+#[derive(Debug, Clone)]
+pub struct ConvLifLayer {
+    /// Geometry (must be `LayerKind::Conv`).
+    pub spec: LayerSpec,
+    /// Weights `[out_ch][in_ch][k][k]` flattened row-major.
+    pub weights: Vec<i64>,
+    /// Membrane potentials `[out_ch][oh][ow]` flattened.
+    pub v: Vec<i64>,
+    /// Firing threshold.
+    pub threshold: i64,
+}
+
+impl ConvLifLayer {
+    /// Build from a spec and flattened weights (validated against the
+    /// spec's weight count and resolution range).
+    pub fn new(spec: LayerSpec, weights: Vec<i64>, threshold: i64) -> Self {
+        assert!(matches!(spec.kind, LayerKind::Conv { .. }), "conv spec required");
+        assert_eq!(weights.len(), spec.num_weights());
+        let (lo, hi) = (min_val(spec.res.w_bits), max_val(spec.res.w_bits));
+        assert!(
+            weights.iter().all(|&w| (lo..=hi).contains(&w)),
+            "weight exceeds {}b",
+            spec.res.w_bits
+        );
+        assert!(threshold > 0);
+        let v = vec![0i64; spec.num_neurons()];
+        ConvLifLayer { spec, weights, v, threshold }
+    }
+
+    fn dims(&self) -> (usize, usize, usize, usize, usize, usize, usize) {
+        match self.spec.kind {
+            LayerKind::Conv { in_ch, out_ch, k, stride, pad, in_h, in_w } => {
+                (in_ch, out_ch, k, stride, pad, in_h, in_w)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// One timestep: binary input spikes `[in_ch * in_h * in_w]`
+    /// (channel-major), returns output spikes `[out_ch * oh * ow]`.
+    pub fn step(&mut self, spikes_in: &[bool]) -> Vec<bool> {
+        let (in_ch, out_ch, k, stride, pad, in_h, in_w) = self.dims();
+        assert_eq!(spikes_in.len(), in_ch * in_h * in_w);
+        let (_, oh, ow) = self.spec.out_shape();
+        let p_bits = self.spec.res.p_bits;
+        let mut out = vec![false; out_ch * oh * ow];
+
+        for oc in 0..out_ch {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc: i64 = 0;
+                    for ic in 0..in_ch {
+                        for dy in 0..k {
+                            let iy = (oy * stride + dy) as i64 - pad as i64;
+                            if iy < 0 || iy >= in_h as i64 {
+                                continue;
+                            }
+                            for dx in 0..k {
+                                let ix = (ox * stride + dx) as i64 - pad as i64;
+                                if ix < 0 || ix >= in_w as i64 {
+                                    continue;
+                                }
+                                let s = spikes_in
+                                    [ic * in_h * in_w + iy as usize * in_w + ix as usize];
+                                if s {
+                                    acc += self.weights
+                                        [((oc * in_ch + ic) * k + dy) * k + dx];
+                                }
+                            }
+                        }
+                    }
+                    let idx = oc * oh * ow + oy * ow + ox;
+                    let mut v = wrap(self.v[idx] + acc, p_bits);
+                    if v >= self.threshold {
+                        v = wrap(v - self.threshold, p_bits);
+                        out[idx] = true;
+                    }
+                    self.v[idx] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// SOPs triggered by an input spike vector (event-driven count: each
+    /// input spike reaches at most `out_ch × k × k` positions, clipped at
+    /// the borders).
+    pub fn sops(&self, spikes_in: &[bool]) -> u64 {
+        let (in_ch, out_ch, k, stride, pad, in_h, in_w) = self.dims();
+        let (_, oh, ow) = self.spec.out_shape();
+        let mut count = 0u64;
+        for ic in 0..in_ch {
+            for iy in 0..in_h {
+                for ix in 0..in_w {
+                    if !spikes_in[ic * in_h * in_w + iy * in_w + ix] {
+                        continue;
+                    }
+                    // Output positions whose receptive field covers (iy, ix).
+                    let mut positions = 0u64;
+                    for oy in 0..oh {
+                        let dy = iy as i64 + pad as i64 - (oy * stride) as i64;
+                        if !(0..k as i64).contains(&dy) {
+                            continue;
+                        }
+                        for ox in 0..ow {
+                            let dx = ix as i64 + pad as i64 - (ox * stride) as i64;
+                            if (0..k as i64).contains(&dx) {
+                                positions += 1;
+                            }
+                        }
+                    }
+                    count += positions * out_ch as u64;
+                }
+            }
+        }
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::Resolution;
+    use crate::util::proptest_lite::{check, prop_eq, Config};
+
+    fn small_spec() -> LayerSpec {
+        LayerSpec::conv("c", 2, 3, 3, 1, 1, 5, 5, Resolution::new(4, 10))
+    }
+
+    #[test]
+    fn identity_kernel_passes_spikes_through() {
+        // One input channel, one output channel, center-tap kernel equal
+        // to the threshold: every input spike fires its own position.
+        let spec = LayerSpec::conv("id", 1, 1, 3, 1, 1, 4, 4, Resolution::new(4, 8));
+        let mut w = vec![0i64; 9];
+        w[4] = 7; // center tap
+        let mut layer = ConvLifLayer::new(spec, w, 7);
+        let mut spikes = vec![false; 16];
+        spikes[5] = true;
+        spikes[10] = true;
+        let out = layer.step(&spikes);
+        assert_eq!(out, spikes);
+        assert!(layer.v.iter().all(|&v| v == 0), "reset by subtraction");
+    }
+
+    #[test]
+    fn stride_and_padding_geometry() {
+        let spec = LayerSpec::conv("s", 1, 1, 3, 2, 1, 6, 6, Resolution::new(4, 10));
+        let (c, h, w) = spec.out_shape();
+        assert_eq!((c, h, w), (1, 3, 3));
+        let layer = ConvLifLayer::new(spec, vec![1; 9], 100);
+        assert_eq!(layer.v.len(), 9);
+    }
+
+    #[test]
+    fn prop_matches_fc_lif_via_im2col() {
+        // A conv layer must equal an FC LIF layer built from its unrolled
+        // (im2col) weight matrix — the same equivalence the CIM controller
+        // exploits to run conv on the macro.
+        check("conv-vs-im2col-fc", &Config { cases: 30, ..Default::default() }, |c| {
+            let in_ch = c.rng.range_usize(1, 3);
+            let out_ch = c.rng.range_usize(1, 4);
+            let h = c.rng.range_usize(3, 6);
+            let stride = *c.rng.choose(&[1usize, 2]);
+            let res = Resolution::new(4, 12);
+            let spec = LayerSpec::conv("p", in_ch, out_ch, 3, stride, 1, h, h, res);
+            let weights: Vec<i64> = (0..spec.num_weights())
+                .map(|_| c.rng.range_i64(-7, 7))
+                .collect();
+            let theta = c.rng.range_i64(1, 50);
+            let mut conv = ConvLifLayer::new(spec.clone(), weights.clone(), theta);
+
+            // Build the equivalent FC weight matrix: rows = output
+            // neurons (oc, oy, ox), cols = inputs (ic, iy, ix).
+            let (_, oh, ow) = spec.out_shape();
+            let k = 3usize;
+            let pad = 1i64;
+            let in_dim = in_ch * h * h;
+            let mut fc_w = vec![vec![0i64; in_dim]; out_ch * oh * ow];
+            for oc in 0..out_ch {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let row = oc * oh * ow + oy * ow + ox;
+                        for ic in 0..in_ch {
+                            for dy in 0..k {
+                                for dx in 0..k {
+                                    let iy = (oy * stride + dy) as i64 - pad;
+                                    let ix = (ox * stride + dx) as i64 - pad;
+                                    if iy < 0 || ix < 0 || iy >= h as i64 || ix >= h as i64 {
+                                        continue;
+                                    }
+                                    fc_w[row][ic * h * h
+                                        + iy as usize * h
+                                        + ix as usize] = weights
+                                        [((oc * in_ch + ic) * k + dy) * k + dx];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            let mut fc = crate::snn::lif::LifLayer::new(fc_w, res, theta);
+
+            for t in 0..3 {
+                let spikes: Vec<bool> =
+                    (0..in_dim).map(|_| c.rng.chance(0.3)).collect();
+                let a = conv.step(&spikes);
+                let b = fc.step(&spikes);
+                prop_eq(a, b, &format!("t={t} spikes"))?;
+                prop_eq(conv.v.clone(), fc.v.clone(), &format!("t={t} vmem"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sops_counts_border_clipping() {
+        let spec = LayerSpec::conv("b", 1, 2, 3, 1, 1, 4, 4, Resolution::new(4, 10));
+        let layer = ConvLifLayer::new(spec, vec![1; 18], 100);
+        // Corner spike reaches only 2x2 output positions; center 3x3.
+        let mut corner = vec![false; 16];
+        corner[0] = true;
+        assert_eq!(layer.sops(&corner), 2 * 4);
+        let mut center = vec![false; 16];
+        center[5] = true; // (1,1)
+        assert_eq!(layer.sops(&center), 2 * 9);
+    }
+
+    #[test]
+    fn state_persists_and_wraps() {
+        let spec = LayerSpec::conv("w", 1, 1, 1, 1, 0, 1, 1, Resolution::new(4, 4));
+        let mut layer = ConvLifLayer::new(spec, vec![6], 100);
+        let on = vec![true];
+        layer.step(&on); // v = 6
+        layer.step(&on); // v = 12 -> wraps to -4 in 4 bits
+        assert_eq!(layer.v[0], -4);
+    }
+
+    #[test]
+    #[should_panic(expected = "conv spec required")]
+    fn rejects_fc_spec() {
+        let spec = LayerSpec::fc("f", 4, 2, Resolution::new(4, 8));
+        ConvLifLayer::new(spec, vec![0; 8], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn rejects_overwide_weights() {
+        ConvLifLayer::new(small_spec(), vec![100; 54], 1);
+    }
+}

@@ -1,0 +1,229 @@
+//! Layer specifications and operand-footprint accounting.
+//!
+//! The hybrid-stationary dataflow decision (paper §II-B, Fig. 4) is driven
+//! entirely by per-layer memory requirements of the two operand classes:
+//! weights (stationary under WS) and membrane potentials (stationary under
+//! OS). This module computes those footprints for arbitrary resolutions.
+
+use super::quant::Resolution;
+
+/// Geometry of a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution over a `in_ch × in_h × in_w` spike tensor.
+    Conv {
+        /// Input channels.
+        in_ch: usize,
+        /// Output channels.
+        out_ch: usize,
+        /// Square kernel size.
+        k: usize,
+        /// Stride (same both dims).
+        stride: usize,
+        /// Symmetric zero padding.
+        pad: usize,
+        /// Input height.
+        in_h: usize,
+        /// Input width.
+        in_w: usize,
+    },
+    /// Fully-connected layer.
+    Fc {
+        /// Input neurons.
+        in_dim: usize,
+        /// Output neurons.
+        out_dim: usize,
+    },
+}
+
+/// A layer of the spiking CNN: geometry plus per-operand resolution.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    /// Human-readable name (`"L1"`, `"FC2"`, …).
+    pub name: String,
+    /// Geometry.
+    pub kind: LayerKind,
+    /// Operand resolution (weight / membrane-potential bit-widths).
+    pub res: Resolution,
+    /// Integrate-and-fire threshold in weight-LSB units.
+    pub threshold: i64,
+}
+
+impl LayerSpec {
+    /// Convolution constructor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: &str,
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        in_h: usize,
+        in_w: usize,
+        res: Resolution,
+    ) -> Self {
+        assert!(k > 0 && stride > 0 && in_h >= k && in_w >= k);
+        LayerSpec {
+            name: name.to_string(),
+            kind: LayerKind::Conv { in_ch, out_ch, k, stride, pad, in_h, in_w },
+            res,
+            threshold: default_threshold(res),
+        }
+    }
+
+    /// Fully-connected constructor.
+    pub fn fc(name: &str, in_dim: usize, out_dim: usize, res: Resolution) -> Self {
+        assert!(in_dim > 0 && out_dim > 0);
+        LayerSpec {
+            name: name.to_string(),
+            kind: LayerKind::Fc { in_dim, out_dim },
+            res,
+            threshold: default_threshold(res),
+        }
+    }
+
+    /// Output spatial size `(channels, height, width)`; FC maps to
+    /// `(out_dim, 1, 1)`.
+    pub fn out_shape(&self) -> (usize, usize, usize) {
+        match self.kind {
+            LayerKind::Conv { out_ch, k, stride, pad, in_h, in_w, .. } => {
+                let oh = (in_h + 2 * pad - k) / stride + 1;
+                let ow = (in_w + 2 * pad - k) / stride + 1;
+                (out_ch, oh, ow)
+            }
+            LayerKind::Fc { out_dim, .. } => (out_dim, 1, 1),
+        }
+    }
+
+    /// Input shape `(channels, height, width)`.
+    pub fn in_shape(&self) -> (usize, usize, usize) {
+        match self.kind {
+            LayerKind::Conv { in_ch, in_h, in_w, .. } => (in_ch, in_h, in_w),
+            LayerKind::Fc { in_dim, .. } => (in_dim, 1, 1),
+        }
+    }
+
+    /// Number of weights (no biases in the IF model).
+    pub fn num_weights(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { in_ch, out_ch, k, .. } => in_ch * out_ch * k * k,
+            LayerKind::Fc { in_dim, out_dim } => in_dim * out_dim,
+        }
+    }
+
+    /// Number of output neurons (= membrane potentials to keep).
+    pub fn num_neurons(&self) -> usize {
+        let (c, h, w) = self.out_shape();
+        c * h * w
+    }
+
+    /// Weight footprint in bits at this layer's resolution.
+    pub fn weight_bits(&self) -> u64 {
+        self.num_weights() as u64 * self.res.w_bits as u64
+    }
+
+    /// Membrane-potential footprint in bits at this layer's resolution.
+    pub fn vmem_bits(&self) -> u64 {
+        self.num_neurons() as u64 * self.res.p_bits as u64
+    }
+
+    /// Synaptic operations per timestep at dense (0 % sparsity) input:
+    /// one SOP = one accumulate + membrane update (Table I footnote `*`).
+    pub fn sops_dense(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { in_ch, k, .. } => {
+                self.num_neurons() as u64 * (in_ch * k * k) as u64
+            }
+            LayerKind::Fc { in_dim, .. } => self.num_neurons() as u64 * in_dim as u64,
+        }
+    }
+
+    /// Fan-in per output neuron.
+    pub fn fan_in(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { in_ch, k, .. } => in_ch * k * k,
+            LayerKind::Fc { in_dim, .. } => in_dim,
+        }
+    }
+
+    /// Clone with a different resolution (used by the Fig. 6 sweeps).
+    pub fn with_resolution(&self, res: Resolution) -> LayerSpec {
+        let mut l = self.clone();
+        l.res = res;
+        l.threshold = default_threshold(res);
+        l
+    }
+}
+
+/// Default IF threshold: half the positive membrane range, a common choice
+/// that keeps quantized IF neurons in their useful dynamic range.
+pub fn default_threshold(res: Resolution) -> i64 {
+    (crate::snn::quant::max_val(res.p_bits) / 2).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r88() -> Resolution {
+        Resolution::new(8, 8)
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let l = LayerSpec::conv("L1", 2, 16, 3, 1, 1, 64, 64, r88());
+        assert_eq!(l.out_shape(), (16, 64, 64));
+        assert_eq!(l.in_shape(), (2, 64, 64));
+        assert_eq!(l.num_weights(), 2 * 16 * 9);
+        assert_eq!(l.num_neurons(), 16 * 64 * 64);
+        assert_eq!(l.fan_in(), 18);
+    }
+
+    #[test]
+    fn conv_stride_shapes() {
+        let l = LayerSpec::conv("L2", 16, 32, 3, 2, 1, 64, 64, r88());
+        assert_eq!(l.out_shape(), (32, 32, 32));
+    }
+
+    #[test]
+    fn conv_no_pad() {
+        let l = LayerSpec::conv("c", 1, 1, 3, 1, 0, 5, 5, r88());
+        assert_eq!(l.out_shape(), (1, 3, 3));
+    }
+
+    #[test]
+    fn fc_shapes() {
+        let l = LayerSpec::fc("FC1", 512, 10, r88());
+        assert_eq!(l.out_shape(), (10, 1, 1));
+        assert_eq!(l.num_weights(), 5120);
+        assert_eq!(l.num_neurons(), 10);
+        assert_eq!(l.sops_dense(), 5120);
+    }
+
+    #[test]
+    fn footprints_scale_with_resolution() {
+        let l = LayerSpec::fc("FC", 100, 10, Resolution::new(5, 10));
+        assert_eq!(l.weight_bits(), 1000 * 5);
+        assert_eq!(l.vmem_bits(), 10 * 10);
+        let l2 = l.with_resolution(Resolution::new(3, 7));
+        assert_eq!(l2.weight_bits(), 3000);
+        assert_eq!(l2.vmem_bits(), 70);
+    }
+
+    #[test]
+    fn sops_conv() {
+        let l = LayerSpec::conv("c", 2, 4, 3, 1, 1, 8, 8, r88());
+        // 4*8*8 neurons × fan-in 18
+        assert_eq!(l.sops_dense(), 256 * 18);
+    }
+
+    #[test]
+    fn threshold_positive_and_in_range() {
+        for p in 2..20 {
+            let t = default_threshold(Resolution::new(4, p));
+            assert!(t >= 1);
+            assert!(t <= crate::snn::quant::max_val(p));
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Fixed-point integrate-and-fire reference implementation.
+//!
+//! This is the *architectural* golden model: plain integer arithmetic with
+//! the exact wrap semantics of the CIM macro's bit-serial adder. The CIM
+//! simulator (`cim::macro_`) must match it bit-for-bit, and the python
+//! oracle (`python/compile/kernels/ref.py`) matches it at tensor level
+//! (golden-vector tests in `rust/tests/`).
+
+use super::quant::{wrap, Resolution};
+
+/// One integrate-and-fire neuron with a `p_bits`-wide membrane potential.
+///
+/// Update rule (paper Fig. 1b):
+/// ```text
+/// v   <- wrap(v + Σ_j w_j · s_j)       (accumulate spiking inputs)
+/// out <- v >= threshold                 (compare in the PC)
+/// v   <- out ? v - threshold : v        (reset by subtraction)
+/// ```
+#[derive(Debug, Clone)]
+pub struct LifNeuron {
+    /// Membrane potential (two's complement, `p_bits` wide).
+    pub v: i64,
+    /// Firing threshold.
+    pub threshold: i64,
+    /// Operand resolution.
+    pub res: Resolution,
+}
+
+impl LifNeuron {
+    /// New neuron at rest.
+    pub fn new(res: Resolution, threshold: i64) -> Self {
+        assert!(threshold > 0);
+        LifNeuron { v: 0, threshold, res }
+    }
+
+    /// Accumulate a single weighted input spike: `v += w` with wrap
+    /// semantics at `p_bits` (exactly the bit-serial CIM adder).
+    #[inline]
+    pub fn integrate(&mut self, w: i64) {
+        self.v = wrap(self.v + w, self.res.p_bits);
+    }
+
+    /// Accumulate all weighted spikes of one timestep, then apply the
+    /// threshold comparison and reset-by-subtraction. Returns `true` when
+    /// an output spike fires.
+    pub fn step(&mut self, weighted_inputs: &[i64]) -> bool {
+        for &w in weighted_inputs {
+            self.integrate(w);
+        }
+        self.fire()
+    }
+
+    /// Threshold comparison + conditional subtraction (end of timestep).
+    #[inline]
+    pub fn fire(&mut self) -> bool {
+        if self.v >= self.threshold {
+            self.v = wrap(self.v - self.threshold, self.res.p_bits);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// A dense layer of IF neurons with a quantized weight matrix, used as the
+/// layer-level golden model and by the workload generators.
+#[derive(Debug, Clone)]
+pub struct LifLayer {
+    /// Weights `[out][in]` (each `w_bits` wide).
+    pub weights: Vec<Vec<i64>>,
+    /// Membrane potentials per output neuron.
+    pub v: Vec<i64>,
+    /// Firing threshold.
+    pub threshold: i64,
+    /// Operand resolution.
+    pub res: Resolution,
+}
+
+impl LifLayer {
+    /// Create a layer from a weight matrix.
+    pub fn new(weights: Vec<Vec<i64>>, res: Resolution, threshold: i64) -> Self {
+        assert!(!weights.is_empty());
+        let in_dim = weights[0].len();
+        assert!(weights.iter().all(|r| r.len() == in_dim));
+        for row in &weights {
+            for &w in row {
+                assert!(
+                    w >= super::quant::min_val(res.w_bits)
+                        && w <= super::quant::max_val(res.w_bits),
+                    "weight {w} exceeds {}b", res.w_bits
+                );
+            }
+        }
+        let n = weights.len();
+        LifLayer { weights, v: vec![0; n], threshold, res }
+    }
+
+    /// Number of output neurons.
+    pub fn out_dim(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Number of inputs.
+    pub fn in_dim(&self) -> usize {
+        self.weights[0].len()
+    }
+
+    /// Process one timestep of binary input spikes; returns output spikes.
+    /// Event-driven: only columns with an input spike contribute (this is
+    /// what makes SOP count sparsity-dependent).
+    pub fn step(&mut self, spikes_in: &[bool]) -> Vec<bool> {
+        assert_eq!(spikes_in.len(), self.in_dim());
+        let p = self.res.p_bits;
+        let mut out = vec![false; self.out_dim()];
+        for (o, row) in self.weights.iter().enumerate() {
+            let mut v = self.v[o];
+            for (i, &s) in spikes_in.iter().enumerate() {
+                if s {
+                    v = wrap(v + row[i], p);
+                }
+            }
+            if v >= self.threshold {
+                v = wrap(v - self.threshold, p);
+                out[o] = true;
+            }
+            self.v[o] = v;
+        }
+        out
+    }
+
+    /// Count synaptic operations for a given input spike vector.
+    pub fn sops(&self, spikes_in: &[bool]) -> u64 {
+        spikes_in.iter().filter(|&&s| s).count() as u64 * self.out_dim() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::quant::{max_val, min_val};
+    use crate::util::proptest_lite::{check, prop_eq, Config};
+
+    fn res() -> Resolution {
+        Resolution::new(4, 8)
+    }
+
+    #[test]
+    fn integrates_and_fires() {
+        let mut n = LifNeuron::new(res(), 10);
+        assert!(!n.step(&[3, 3]));
+        assert_eq!(n.v, 6);
+        assert!(n.step(&[5])); // 11 >= 10 -> fire
+        assert_eq!(n.v, 1); // reset by subtraction keeps the residue
+    }
+
+    #[test]
+    fn subthreshold_never_fires() {
+        let mut n = LifNeuron::new(res(), 100);
+        for _ in 0..10 {
+            assert!(!n.step(&[7]));
+        }
+        assert_eq!(n.v, 70);
+    }
+
+    #[test]
+    fn wraparound_matches_two_complement() {
+        let mut n = LifNeuron::new(Resolution::new(4, 4), 7);
+        // 4-bit potential: range [-8, 7]. 6 + 5 = 11 -> wraps to -5.
+        n.integrate(6);
+        n.integrate(5);
+        assert_eq!(n.v, -5);
+    }
+
+    #[test]
+    fn negative_weights_inhibit() {
+        let mut n = LifNeuron::new(res(), 5);
+        n.step(&[4, -3]);
+        assert_eq!(n.v, 1);
+        assert!(!n.fire());
+    }
+
+    #[test]
+    fn layer_event_driven_equals_dense_matmul() {
+        // With no wraparound, one LIF step == integer matvec on the spike
+        // mask followed by threshold/reset.
+        check("lif-layer-vs-matvec", &Config { cases: 64, ..Default::default() }, |c| {
+            let res = Resolution::new(4, 16); // wide potential: no wrap
+            let out_dim = c.rng.range_usize(1, 6);
+            let in_dim = c.rng.range_usize(1, c.size.max(1).min(16));
+            let weights: Vec<Vec<i64>> = (0..out_dim)
+                .map(|_| {
+                    (0..in_dim)
+                        .map(|_| c.rng.range_i64(min_val(4), max_val(4)))
+                        .collect()
+                })
+                .collect();
+            let spikes: Vec<bool> = (0..in_dim).map(|_| c.rng.chance(0.4)).collect();
+            let threshold = c.rng.range_i64(1, 20);
+            let mut layer = LifLayer::new(weights.clone(), res, threshold);
+            let out = layer.step(&spikes);
+            for o in 0..out_dim {
+                let acc: i64 = weights[o]
+                    .iter()
+                    .zip(&spikes)
+                    .filter(|(_, &s)| s)
+                    .map(|(&w, _)| w)
+                    .sum();
+                let fired = acc >= threshold;
+                prop_eq(out[o], fired, &format!("neuron {o} spike"))?;
+                let expect_v = if fired { acc - threshold } else { acc };
+                prop_eq(layer.v[o], expect_v, &format!("neuron {o} vmem"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn layer_state_persists_across_timesteps() {
+        let w = vec![vec![2, 2]];
+        let mut layer = LifLayer::new(w, Resolution::new(4, 8), 7);
+        let all = vec![true, true];
+        assert_eq!(layer.step(&all), vec![false]); // v = 4
+        assert_eq!(layer.step(&all), vec![true]); // v = 8 >= 7 -> 1
+        assert_eq!(layer.v[0], 1);
+    }
+
+    #[test]
+    fn sop_count_tracks_sparsity() {
+        let w = vec![vec![1; 100]; 10];
+        let layer = LifLayer::new(w, res(), 5);
+        let dense = vec![true; 100];
+        let sparse: Vec<bool> = (0..100).map(|i| i % 10 == 0).collect();
+        assert_eq!(layer.sops(&dense), 1000);
+        assert_eq!(layer.sops(&sparse), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn overwide_weight_rejected() {
+        LifLayer::new(vec![vec![100]], Resolution::new(4, 8), 1);
+    }
+}

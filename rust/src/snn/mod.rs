@@ -1,0 +1,20 @@
+//! SNN workload model.
+//!
+//! Defines the spiking-CNN layer/network descriptions the rest of the stack
+//! consumes: operand footprints per `(w_bits, p_bits)` resolution, the
+//! paper's six-conv + three-FC SCNN (Fig. 4a), a fixed-point
+//! integrate-and-fire reference implementation, and quantization helpers
+//! shared with the CIM macro simulator and the energy model.
+
+pub mod conv;
+pub mod layer;
+pub mod lif;
+pub mod network;
+pub mod quant;
+
+pub use conv::ConvLifLayer;
+
+pub use layer::{LayerKind, LayerSpec};
+pub use lif::LifNeuron;
+pub use network::{Network, scnn_dvs_gesture};
+pub use quant::Resolution;

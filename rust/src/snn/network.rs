@@ -1,0 +1,227 @@
+//! Network-level workload description.
+//!
+//! [`scnn_dvs_gesture`] is the paper's reference workload (Fig. 4a): a
+//! six-convolution spiking CNN followed by three fully-connected layers,
+//! sized for DVS-gesture-style 2×64×64 event frames and 10 output classes.
+//! Early conv layers are membrane-potential dominated (OS-friendly), late
+//! layers weight dominated (WS-friendly) — exactly the asymmetry that makes
+//! the hybrid-stationary dataflow pay off.
+
+use super::layer::{LayerKind, LayerSpec};
+use super::quant::Resolution;
+
+/// An ordered stack of layers forming the SNN workload.
+#[derive(Debug, Clone)]
+pub struct Network {
+    /// Model name for reports.
+    pub name: String,
+    /// Layers, input to output.
+    pub layers: Vec<LayerSpec>,
+    /// Number of timesteps per inference (per-timestep execution, Fig. 1c).
+    pub timesteps: usize,
+}
+
+impl Network {
+    /// Validate inter-layer shape compatibility and return the network.
+    pub fn new(name: &str, layers: Vec<LayerSpec>, timesteps: usize) -> Self {
+        assert!(!layers.is_empty() && timesteps > 0);
+        for w in layers.windows(2) {
+            let (c, h, wd) = w[0].out_shape();
+            let expect = c * h * wd;
+            let (ic, ih, iw) = w[1].in_shape();
+            let got = ic * ih * iw;
+            assert_eq!(
+                expect, got,
+                "shape mismatch {} -> {}: {} vs {}",
+                w[0].name, w[1].name, expect, got
+            );
+        }
+        Network { name: name.to_string(), layers, timesteps }
+    }
+
+    /// Total weight footprint in bits.
+    pub fn total_weight_bits(&self) -> u64 {
+        self.layers.iter().map(LayerSpec::weight_bits).sum()
+    }
+
+    /// Total membrane-potential footprint in bits.
+    pub fn total_vmem_bits(&self) -> u64 {
+        self.layers.iter().map(LayerSpec::vmem_bits).sum()
+    }
+
+    /// Model size in bits excluding FC layers (Fig. 6b reports conv-only).
+    pub fn conv_weight_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .map(LayerSpec::weight_bits)
+            .sum()
+    }
+
+    /// Dense SOPs per timestep over all layers.
+    pub fn sops_dense(&self) -> u64 {
+        self.layers.iter().map(LayerSpec::sops_dense).sum()
+    }
+
+    /// Replace every layer's resolution (uniform sweep helper, Fig. 6b).
+    pub fn with_uniform_resolution(&self, res: Resolution) -> Network {
+        Network {
+            name: self.name.clone(),
+            layers: self.layers.iter().map(|l| l.with_resolution(res)).collect(),
+            timesteps: self.timesteps,
+        }
+    }
+
+    /// Replace resolutions per layer (must match layer count).
+    pub fn with_resolutions(&self, res: &[Resolution]) -> Network {
+        assert_eq!(res.len(), self.layers.len());
+        Network {
+            name: self.name.clone(),
+            layers: self
+                .layers
+                .iter()
+                .zip(res)
+                .map(|(l, r)| l.with_resolution(*r))
+                .collect(),
+            timesteps: self.timesteps,
+        }
+    }
+}
+
+/// The paper's six-conv + three-FC SCNN for IBM-DVS-gesture-class workloads
+/// (Fig. 4a), at the FlexSpIM *unconstrained* per-layer resolutions of
+/// Fig. 6a. Input: 2×48×48 binary event frames (polarity channels of the
+/// downsampled DVS stream); output: 10 classes.
+///
+/// Dimensions are chosen so that (a) early layers are membrane-potential
+/// dominated and late layers weight dominated (the Fig. 4a crossover), and
+/// (b) the sum of each layer's smaller operand fits two 16-kB macros — the
+/// paper's observation that *two* macros suffice for full hybrid
+/// stationarity of at least one operand per layer (§II-B).
+pub fn scnn_dvs_gesture() -> Network {
+    // Fig. 6a's fine-grained per-layer resolutions (bitwise granularity):
+    // early layers tolerate narrow potentials; later layers narrow weights.
+    let r = |w, p| Resolution::new(w, p);
+    let layers = vec![
+        LayerSpec::conv("L1", 2, 12, 3, 1, 1, 48, 48, r(4, 9)),
+        LayerSpec::conv("L2", 12, 24, 3, 2, 1, 48, 48, r(5, 10)),
+        LayerSpec::conv("L3", 24, 24, 3, 1, 1, 24, 24, r(5, 10)),
+        LayerSpec::conv("L4", 24, 48, 3, 2, 1, 24, 24, r(6, 11)),
+        LayerSpec::conv("L5", 48, 48, 3, 1, 1, 12, 12, r(6, 11)),
+        LayerSpec::conv("L6", 48, 96, 3, 2, 1, 12, 12, r(7, 12)),
+        LayerSpec::fc("FC1", 96 * 6 * 6, 256, r(5, 10)),
+        LayerSpec::fc("FC2", 256, 128, r(5, 10)),
+        LayerSpec::fc("FC3", 128, 10, r(7, 12)),
+    ];
+    Network::new("SCNN-DVS-gesture", layers, 16)
+}
+
+/// The same SCNN constrained to the fixed resolution menu of [4]
+/// (ISSCC'24: 4/8-bit weights, 16-bit membrane potentials) — the
+/// comparison point of Fig. 6a / Fig. 7c.
+pub fn scnn_constrained_isscc24() -> Network {
+    let base = scnn_dvs_gesture();
+    let res: Vec<Resolution> = base
+        .layers
+        .iter()
+        .map(|l| {
+            // Round each weight width up to the nearest supported option.
+            let w = if l.res.w_bits <= 4 { 4 } else { 8 };
+            Resolution::new(w, 16)
+        })
+        .collect();
+    let mut n = base.with_resolutions(&res);
+    n.name = "SCNN-constrained-[4]".into();
+    n
+}
+
+/// The same SCNN at IMPULSE's fixed 6-bit weight / 11-bit membrane
+/// resolution [3] — the comparison point of Fig. 7d.
+pub fn scnn_impulse_resolution() -> Network {
+    let mut n = scnn_dvs_gesture().with_uniform_resolution(Resolution::new(6, 11));
+    n.name = "SCNN-IMPULSE-6b11b".into();
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_network_is_consistent() {
+        let n = scnn_dvs_gesture();
+        assert_eq!(n.layers.len(), 9);
+        assert_eq!(n.layers[0].in_shape(), (2, 48, 48));
+        assert_eq!(n.layers[5].out_shape(), (96, 6, 6));
+        assert_eq!(n.layers[8].out_shape(), (10, 1, 1));
+    }
+
+    #[test]
+    fn early_layers_vmem_dominated_late_weight_dominated() {
+        // The asymmetry that motivates hybrid stationarity (paper §I, §II-B).
+        let n = scnn_dvs_gesture();
+        let l1 = &n.layers[0];
+        assert!(
+            l1.vmem_bits() > 10 * l1.weight_bits(),
+            "L1 must be strongly vmem-dominated: {} vs {}",
+            l1.vmem_bits(),
+            l1.weight_bits()
+        );
+        let l6 = &n.layers[5];
+        assert!(
+            l6.weight_bits() > l6.vmem_bits(),
+            "L6 must be weight-dominated: {} vs {}",
+            l6.weight_bits(),
+            l6.vmem_bits()
+        );
+    }
+
+    #[test]
+    fn constrained_network_is_larger() {
+        // Fig. 6a: flexible per-layer resolution shrinks the model ~30 %
+        // versus the fixed menu of [4].
+        let flex = scnn_dvs_gesture();
+        let fixed = scnn_constrained_isscc24();
+        let f = flex.total_weight_bits() as f64;
+        let c = fixed.total_weight_bits() as f64;
+        let reduction = 1.0 - f / c;
+        assert!(
+            reduction > 0.15 && reduction < 0.5,
+            "footprint reduction {reduction:.3} outside plausible band"
+        );
+    }
+
+    #[test]
+    fn uniform_resolution_override() {
+        let n = scnn_dvs_gesture().with_uniform_resolution(Resolution::new(2, 4));
+        assert!(n.layers.iter().all(|l| l.res == Resolution::new(2, 4)));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_detected() {
+        let r = Resolution::new(8, 8);
+        Network::new(
+            "bad",
+            vec![
+                LayerSpec::fc("a", 10, 20, r),
+                LayerSpec::fc("b", 21, 5, r),
+            ],
+            1,
+        );
+    }
+
+    #[test]
+    fn impulse_resolution_applied() {
+        let n = scnn_impulse_resolution();
+        assert!(n.layers.iter().all(|l| l.res == Resolution::new(6, 11)));
+    }
+
+    #[test]
+    fn sops_positive_and_conv_dominated() {
+        let n = scnn_dvs_gesture();
+        let conv: u64 = n.layers[..6].iter().map(|l| l.sops_dense()).sum();
+        let fc: u64 = n.layers[6..].iter().map(|l| l.sops_dense()).sum();
+        assert!(conv > fc, "conv stack dominates compute");
+    }
+}

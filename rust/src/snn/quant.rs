@@ -1,0 +1,231 @@
+//! Arbitrary-resolution fixed-point quantization.
+//!
+//! FlexSpIM's first contribution is *bitwise-granular* operand resolution:
+//! weights and membrane potentials may take any bit-width per layer. This
+//! module defines the two's-complement ranges, wrap/saturate helpers, and
+//! float↔fixed conversion used by the LIF reference, the CIM macro
+//! simulator (which must agree bit-for-bit), and the footprint accounting.
+
+/// Per-layer operand resolution: weight and membrane-potential bit-widths.
+///
+/// Both are ≥1; widths up to 64 are supported by the software models (the
+/// fabricated macro supports up to the array dimensions, 512×256).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Resolution {
+    /// Weight bit-width (two's complement, signed).
+    pub w_bits: u32,
+    /// Membrane-potential bit-width (two's complement, signed).
+    pub p_bits: u32,
+}
+
+impl Resolution {
+    /// Construct, validating supported widths.
+    pub fn new(w_bits: u32, p_bits: u32) -> Self {
+        assert!(
+            (1..=64).contains(&w_bits) && (1..=64).contains(&p_bits),
+            "resolution out of supported range: w={w_bits} p={p_bits}"
+        );
+        Resolution { w_bits, p_bits }
+    }
+
+    /// Bits per synapse+neuron pair (used for 1-bit normalization of
+    /// throughput/efficiency, Table I footnotes ‡/†).
+    pub fn norm_product(&self) -> u64 {
+        self.w_bits as u64 * self.p_bits as u64
+    }
+}
+
+impl std::fmt::Display for Resolution {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}b/{}b", self.w_bits, self.p_bits)
+    }
+}
+
+/// Smallest representable value of a signed `bits`-wide integer.
+#[inline]
+pub fn min_val(bits: u32) -> i64 {
+    debug_assert!((1..=64).contains(&bits));
+    if bits == 64 {
+        i64::MIN
+    } else {
+        -(1i64 << (bits - 1))
+    }
+}
+
+/// Largest representable value of a signed `bits`-wide integer.
+#[inline]
+pub fn max_val(bits: u32) -> i64 {
+    debug_assert!((1..=64).contains(&bits));
+    if bits == 64 {
+        i64::MAX
+    } else {
+        (1i64 << (bits - 1)) - 1
+    }
+}
+
+/// Two's-complement wrap of `v` into `bits` width (what a bit-serial adder
+/// with no saturation logic produces — and what the CIM macro does).
+#[inline]
+pub fn wrap(v: i64, bits: u32) -> i64 {
+    if bits >= 64 {
+        return v;
+    }
+    // i128 intermediate: `1 << 63` would overflow i64.
+    let m = 1i128 << bits;
+    let r = (v as i128).rem_euclid(m);
+    let r = if r >= m / 2 { r - m } else { r };
+    r as i64
+}
+
+/// Saturate `v` into `bits` width (used by the quantization-aware trainer).
+#[inline]
+pub fn saturate(v: i64, bits: u32) -> i64 {
+    v.clamp(min_val(bits), max_val(bits))
+}
+
+/// Quantize a float in `[-1, 1)` to a signed `bits`-wide integer with
+/// scale `2^(bits-1)` (symmetric, round-to-nearest-even via f64 rounding).
+#[inline]
+pub fn quantize_unit(x: f64, bits: u32) -> i64 {
+    let scale = (1u64 << (bits - 1)) as f64;
+    saturate((x * scale).round() as i64, bits)
+}
+
+/// Dequantize back to float with the same scale.
+#[inline]
+pub fn dequantize_unit(q: i64, bits: u32) -> f64 {
+    let scale = (1u64 << (bits - 1)) as f64;
+    q as f64 / scale
+}
+
+/// Extract bit `i` (LSB = 0) of the two's-complement representation of `v`
+/// at width `bits`, with implicit sign extension for `i >= bits`.
+/// This is exactly what the macro's emulation bits (EBs) provide in
+/// silicon: reads of rows beyond the stored MSB return the sign bit.
+#[inline]
+pub fn bit_of(v: i64, i: u32, bits: u32) -> bool {
+    let idx = i.min(bits - 1); // sign extension beyond MSB
+    ((v >> idx) & 1) != 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, prop_eq, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ranges() {
+        assert_eq!(min_val(1), -1);
+        assert_eq!(max_val(1), 0);
+        assert_eq!(min_val(8), -128);
+        assert_eq!(max_val(8), 127);
+        assert_eq!(min_val(64), i64::MIN);
+        assert_eq!(max_val(64), i64::MAX);
+    }
+
+    #[test]
+    fn wrap_examples() {
+        assert_eq!(wrap(128, 8), -128);
+        assert_eq!(wrap(-129, 8), 127);
+        assert_eq!(wrap(255, 8), -1);
+        assert_eq!(wrap(5, 4), 5);
+        assert_eq!(wrap(8, 4), -8);
+    }
+
+    #[test]
+    fn saturate_examples() {
+        assert_eq!(saturate(1000, 8), 127);
+        assert_eq!(saturate(-1000, 8), -128);
+        assert_eq!(saturate(5, 8), 5);
+    }
+
+    #[test]
+    fn quantize_roundtrip_monotone() {
+        for bits in [2, 4, 5, 8, 12] {
+            let mut last = i64::MIN;
+            let mut x = -1.0;
+            while x < 1.0 {
+                let q = quantize_unit(x, bits);
+                assert!(q >= last, "monotone at bits={bits}");
+                assert!(q >= min_val(bits) && q <= max_val(bits));
+                last = q;
+                x += 0.01;
+            }
+        }
+    }
+
+    #[test]
+    fn bit_of_sign_extension() {
+        // -3 in 4 bits = 1101; bits beyond MSB replicate the sign.
+        let v = -3i64;
+        assert!(bit_of(v, 0, 4)); // 1
+        assert!(!bit_of(v, 1, 4)); // 0
+        assert!(bit_of(v, 2, 4)); // 1
+        assert!(bit_of(v, 3, 4)); // 1 (sign)
+        assert!(bit_of(v, 7, 4)); // EB sign extension
+        let p = 5i64; // 0101
+        assert!(!bit_of(p, 3, 4));
+        assert!(!bit_of(p, 10, 4));
+    }
+
+    #[test]
+    fn prop_wrap_is_additive_homomorphism() {
+        // wrap(a+b) == wrap(wrap(a)+wrap(b)) — the property that lets the
+        // bit-serial CIM adder accumulate without intermediate saturation.
+        check("wrap-homomorphism", &Config::default(), |c| {
+            let bits = c.rng.range_i64(1, 32) as u32;
+            let a = c.rng.range_i64(-(1 << 40), 1 << 40);
+            let b = c.rng.range_i64(-(1 << 40), 1 << 40);
+            prop_eq(
+                wrap(a + b, bits),
+                wrap(wrap(a, bits) + wrap(b, bits), bits),
+                &format!("bits={bits} a={a} b={b}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_wrap_identity_in_range() {
+        check("wrap-identity", &Config::default(), |c| {
+            let bits = c.rng.range_i64(1, 63) as u32;
+            let v = c.rng.range_i64(min_val(bits), max_val(bits));
+            prop_eq(wrap(v, bits), v, &format!("bits={bits}"))
+        });
+    }
+
+    #[test]
+    fn prop_bits_reconstruct_value() {
+        // Reassembling bits must reproduce the value: the foundation of the
+        // macro's bit-serial correctness.
+        let mut rng = Rng::new(0xBEEF);
+        for _ in 0..500 {
+            let bits = rng.range_i64(1, 32) as u32;
+            let v = rng.range_i64(min_val(bits), max_val(bits));
+            let mut acc: i64 = 0;
+            for i in 0..bits {
+                if bit_of(v, i, bits) {
+                    if i == bits - 1 {
+                        acc -= 1i64 << i; // MSB carries negative weight
+                    } else {
+                        acc += 1i64 << i;
+                    }
+                }
+            }
+            assert_eq!(acc, v, "bits={bits} v={v}");
+        }
+    }
+
+    #[test]
+    fn resolution_display_and_norm() {
+        let r = Resolution::new(8, 16);
+        assert_eq!(r.to_string(), "8b/16b");
+        assert_eq!(r.norm_product(), 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "resolution out of supported range")]
+    fn zero_bits_rejected() {
+        Resolution::new(0, 8);
+    }
+}

@@ -1,0 +1,193 @@
+//! Micro-benchmark harness (criterion is not vendored offline).
+//!
+//! `cargo bench` binaries declare `harness = false` and call [`Bench::run`]
+//! / [`Bench::report`]. The harness does warm-up, adaptive iteration-count
+//! selection to hit a target measurement time, and reports median / mean /
+//! p95 per iteration so bench output is stable enough to compare before vs
+//! after optimization (EXPERIMENTS.md §Perf).
+
+use std::time::{Duration, Instant};
+
+use super::stats::{median, percentile};
+
+/// One benchmark measurement result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Name of the benchmark case.
+    pub name: String,
+    /// Per-iteration wall time samples (seconds).
+    pub samples: Vec<f64>,
+    /// Iterations per sample batch.
+    pub iters_per_sample: u64,
+}
+
+impl Measurement {
+    /// Median seconds per iteration.
+    pub fn median_s(&self) -> f64 {
+        median(&self.samples)
+    }
+
+    /// Mean seconds per iteration.
+    pub fn mean_s(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    /// p95 seconds per iteration.
+    pub fn p95_s(&self) -> f64 {
+        percentile(&self.samples, 95.0)
+    }
+
+    /// Render a single aligned report line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  mean {:>12}  p95 {:>12}  ({} samples x {} iters)",
+            self.name,
+            fmt_time(self.median_s()),
+            fmt_time(self.mean_s()),
+            fmt_time(self.p95_s()),
+            self.samples.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Format seconds with an appropriate unit.
+pub fn fmt_time(s: f64) -> String {
+    if !s.is_finite() {
+        return "n/a".into();
+    }
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    /// Warm-up duration before measuring.
+    pub warmup: Duration,
+    /// Total measurement budget per case.
+    pub measure: Duration,
+    /// Number of sample batches to split the budget into.
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(1200),
+            samples: 20,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick harness for cheap functions in CI-like environments.
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            samples: 10,
+        }
+    }
+
+    /// Measure `f`, returning per-iteration timing statistics. The closure's
+    /// return value is consumed with `std::hint::black_box` to prevent the
+    /// optimizer from deleting the work.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        // Warm-up and calibration: find iters/sample so a batch lasts
+        // measure/samples.
+        let mut iters = 1u64;
+        let t0 = Instant::now();
+        loop {
+            let start = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            let dt = start.elapsed();
+            if t0.elapsed() >= self.warmup && dt >= Duration::from_micros(50) {
+                let per_iter = dt.as_secs_f64() / iters as f64;
+                let target = self.measure.as_secs_f64() / self.samples as f64;
+                iters = ((target / per_iter).ceil() as u64).max(1);
+                break;
+            }
+            iters = iters.saturating_mul(2).min(1 << 30);
+        }
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let start = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            samples.push(start.elapsed().as_secs_f64() / iters as f64);
+        }
+        Measurement {
+            name: name.to_string(),
+            samples,
+            iters_per_sample: iters,
+        }
+    }
+
+    /// Run and print in one step; returns the measurement for programmatic use.
+    pub fn report<T>(&self, name: &str, f: impl FnMut() -> T) -> Measurement {
+        let m = self.run(name, f);
+        println!("{}", m.line());
+        m
+    }
+}
+
+/// Print a section header for a bench binary.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_cheap_fn() {
+        let b = Bench::quick();
+        let m = b.run("noop-ish", || std::hint::black_box(3u64).wrapping_mul(7));
+        assert_eq!(m.samples.len(), 10);
+        assert!(m.median_s() > 0.0);
+        assert!(m.median_s() < 1e-3, "cheap op should be far below 1ms");
+    }
+
+    #[test]
+    fn ordering_detects_slower_fn() {
+        // Large work gap + black_box'd loop so the comparison holds even
+        // under heavy parallel-test CPU load.
+        let b = Bench::quick();
+        let fast = b.run("fast", || std::hint::black_box(1u64).wrapping_mul(3));
+        let slow = b.run("slow", || {
+            let mut acc = 0u64;
+            for i in 0..100_000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            acc
+        });
+        assert!(
+            slow.median_s() > 3.0 * fast.median_s(),
+            "slow {} vs fast {}",
+            slow.median_s(),
+            fast.median_s()
+        );
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.0), "2.000 s");
+        assert_eq!(fmt_time(2e-3), "2.000 ms");
+        assert_eq!(fmt_time(2e-6), "2.000 µs");
+        assert_eq!(fmt_time(2e-9), "2.0 ns");
+    }
+}

@@ -1,0 +1,180 @@
+//! Minimal command-line argument parser (clap is not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key/value options, and positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declared option for usage/help rendering and value-vs-flag disambiguation.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    /// Option name without leading dashes, e.g. `"seed"`.
+    pub name: &'static str,
+    /// True if the option takes a value (`--seed 42`); false for bare flags.
+    pub takes_value: bool,
+    /// One-line help string.
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse `argv` (excluding program name) against the declared `specs`.
+    /// Unknown `--options` are an error so typos fail fast.
+    pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    out.opts.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Raw string value of `--name`, if given.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Value of `--name` parsed as `T`, or `default` when absent.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(v) => v.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    /// Typed value of `--name` with a parse error surfaced.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| format!("--{name}={v}: {e}")),
+        }
+    }
+
+    /// Whether a bare `--name` flag was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional arguments, in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage block from specs.
+pub fn usage(cmd: &str, specs: &[Spec]) -> String {
+    let mut s = format!("usage: {cmd} [options]\n");
+    for spec in specs {
+        let head = if spec.takes_value {
+            format!("  --{} <v>", spec.name)
+        } else {
+            format!("  --{}", spec.name)
+        };
+        s.push_str(&format!("{head:<26}{}\n", spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<Spec> {
+        vec![
+            Spec { name: "seed", takes_value: true, help: "rng seed" },
+            Spec { name: "verbose", takes_value: false, help: "chatty" },
+            Spec { name: "out", takes_value: true, help: "output path" },
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_flag_positional() {
+        let a = Args::parse(&sv(&["run", "--seed", "42", "--verbose", "x.txt"]), &specs())
+            .unwrap();
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string(), "x.txt".to_string()]);
+        assert_eq!(a.get_or::<u64>("seed", 0), 42);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&sv(&["--seed=7"]), &specs()).unwrap();
+        assert_eq!(a.get_or::<u64>("seed", 0), 7);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(&sv(&["--nope"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["--seed"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(&sv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn typed_parse_error_reported() {
+        let a = Args::parse(&sv(&["--seed", "abc"]), &specs()).unwrap();
+        assert!(a.get_parsed::<u64>("seed").is_err());
+        assert_eq!(a.get_or::<u64>("seed", 5), 5, "fallback on bad parse");
+    }
+
+    #[test]
+    fn usage_mentions_all() {
+        let u = usage("flexspim", &specs());
+        assert!(u.contains("--seed") && u.contains("--verbose") && u.contains("--out"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is offline and only ships the crates vendored with
+//! the `xla` example, so the usual ecosystem helpers (`rand`, `clap`,
+//! `criterion`, `proptest`) are hand-rolled here. Each module is tested on
+//! its own so the rest of the crate can rely on them.
+
+pub mod bench;
+pub mod cli;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;
+
+/// Format a float with SI-style engineering prefixes (e.g. `1.23 M`).
+pub fn si(value: f64) -> String {
+    let (v, p) = si_parts(value);
+    if p.is_empty() {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.3} {p}")
+    }
+}
+
+/// Split a value into a mantissa and SI prefix.
+pub fn si_parts(value: f64) -> (f64, &'static str) {
+    let a = value.abs();
+    if a == 0.0 || !a.is_finite() {
+        return (value, "");
+    }
+    const UP: [&str; 4] = ["k", "M", "G", "T"];
+    const DOWN: [&str; 4] = ["m", "µ", "n", "p"];
+    if a >= 1.0 && a < 1000.0 {
+        return (value, "");
+    }
+    if a >= 1000.0 {
+        let mut v = value;
+        for p in UP {
+            v /= 1000.0;
+            if v.abs() < 1000.0 {
+                return (v, p);
+            }
+        }
+        return (v, "T");
+    }
+    let mut v = value;
+    for p in DOWN {
+        v *= 1000.0;
+        if v.abs() >= 1.0 {
+            return (v, p);
+        }
+    }
+    (v, "p")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_ranges() {
+        assert_eq!(si(0.0), "0.000");
+        assert_eq!(si(12.5), "12.500");
+        assert_eq!(si(1_500.0), "1.500 k");
+        assert_eq!(si(2.5e9), "2.500 G");
+        assert_eq!(si(5.7e-12), "5.700 p");
+        assert!(si(44.5e-15).ends_with(" p") && si(44.5e-15).starts_with("0.04"));
+        assert_eq!(si(-3.2e6), "-3.200 M");
+    }
+}

@@ -1,0 +1,150 @@
+//! Minimal property-based testing harness (proptest is not vendored
+//! offline).
+//!
+//! A property is a closure over a [`Rng`]-driven generated case. The runner
+//! executes `cases` random cases from a fixed seed; on failure it attempts a
+//! bounded shrink loop by re-generating with "smaller" size hints and
+//! reports the failing seed so the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: u32,
+    /// Base seed; each case `i` runs with seed `base_seed + i`.
+    pub base_seed: u64,
+    /// Maximum size hint passed to generators (scales ranges/lengths).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 256,
+            base_seed: 0xF1E2_D3C4_B5A6_9788,
+            max_size: 64,
+        }
+    }
+}
+
+/// Context handed to each property case: a seeded RNG plus a size hint that
+/// grows with the case index (small cases first, mimicking proptest).
+pub struct Case<'a> {
+    /// Seeded random generator for this case.
+    pub rng: &'a mut Rng,
+    /// Size hint in `[1, max_size]`.
+    pub size: usize,
+    /// Case index (for diagnostics).
+    pub index: u32,
+}
+
+/// Run `prop` on `cfg.cases` generated cases. `prop` returns
+/// `Err(description)` to fail. Panics with a replayable seed on failure.
+pub fn check<F>(name: &str, cfg: &Config, mut prop: F)
+where
+    F: FnMut(&mut Case) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i as u64);
+        // Ramp size from 1 to max_size over the first half of cases, then
+        // stay at max: small counterexamples surface first.
+        let half = (cfg.cases / 2).max(1);
+        let size = if i < half {
+            1 + (i as usize * (cfg.max_size - 1)) / half as usize
+        } else {
+            cfg.max_size
+        };
+        let mut rng = Rng::new(seed);
+        let mut case = Case { rng: &mut rng, size, index: i };
+        if let Err(msg) = prop(&mut case) {
+            // Shrink attempt: replay the same seed with smaller sizes and
+            // report the smallest size that still fails.
+            let mut smallest = (size, msg.clone());
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut rng = Rng::new(seed);
+                let mut case = Case { rng: &mut rng, size: s, index: i };
+                if let Err(m) = prop(&mut case) {
+                    smallest = (s, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed:#x}, size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert-eq helper producing a property error instead of panicking, so the
+/// shrink loop can continue.
+pub fn prop_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+/// Assert a boolean condition as a property result.
+pub fn prop_assert(cond: bool, ctx: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(ctx.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u32;
+        check("add-commutes", &Config { cases: 50, ..Default::default() }, |c| {
+            count += 1;
+            let a = c.rng.range_i64(-1000, 1000);
+            let b = c.rng.range_i64(-1000, 1000);
+            prop_eq(a + b, b + a, "commutativity")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", &Config { cases: 5, ..Default::default() }, |_c| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        let mut sizes = Vec::new();
+        check("observe-size", &Config { cases: 20, max_size: 64, ..Default::default() }, |c| {
+            sizes.push(c.size);
+            Ok(())
+        });
+        assert!(sizes[0] < *sizes.last().unwrap());
+        assert_eq!(*sizes.last().unwrap(), 64);
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<i64> = Vec::new();
+        check("record", &Config { cases: 10, ..Default::default() }, |c| {
+            first.push(c.rng.range_i64(0, 1 << 30));
+            Ok(())
+        });
+        let mut second: Vec<i64> = Vec::new();
+        check("record", &Config { cases: 10, ..Default::default() }, |c| {
+            second.push(c.rng.range_i64(0, 1 << 30));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,130 @@
+//! Cross-language golden-vector tests: the Python oracle (ref.py), the
+//! Rust fixed-point LIF, and the bit-accurate CIM macro simulator must
+//! agree on the exact integer semantics of the IF update.
+//!
+//! Vectors are exported by `python -m compile.aot` into
+//! `artifacts/golden/`; tests skip (with a notice) if artifacts are not
+//! built so `cargo test` works on a fresh checkout.
+
+use flexspim::cim::{CimMacro, MacroConfig};
+use flexspim::runtime::artifacts_dir;
+use flexspim::snn::lif::LifLayer;
+use flexspim::snn::Resolution;
+
+struct FcCase {
+    w_bits: u32,
+    p_bits: u32,
+    theta: i64,
+    weights: Vec<Vec<i64>>,
+    spikes: Vec<bool>,
+    vmem_in: Vec<i64>,
+    spk_expect: Vec<bool>,
+    vmem_expect: Vec<i64>,
+}
+
+fn parse_cases(text: &str) -> Vec<FcCase> {
+    let mut tokens = text.split_whitespace().map(|t| t.parse::<i64>().unwrap());
+    let mut next = || tokens.next().expect("truncated golden file");
+    let n_cases = next() as usize;
+    let mut cases = Vec::with_capacity(n_cases);
+    for _ in 0..n_cases {
+        let (w_bits, p_bits, theta) = (next() as u32, next() as u32, next());
+        let out_dim = next() as usize;
+        let in_dim = next() as usize;
+        let weights: Vec<Vec<i64>> = (0..out_dim)
+            .map(|_| (0..in_dim).map(|_| next()).collect())
+            .collect();
+        let spikes: Vec<bool> = (0..in_dim).map(|_| next() != 0).collect();
+        let vmem_in: Vec<i64> = (0..out_dim).map(|_| next()).collect();
+        let spk_expect: Vec<bool> = (0..out_dim).map(|_| next() != 0).collect();
+        let vmem_expect: Vec<i64> = (0..out_dim).map(|_| next()).collect();
+        cases.push(FcCase {
+            w_bits,
+            p_bits,
+            theta,
+            weights,
+            spikes,
+            vmem_in,
+            spk_expect,
+            vmem_expect,
+        });
+    }
+    cases
+}
+
+fn load_cases() -> Option<Vec<FcCase>> {
+    let path = artifacts_dir().join("golden/if_step_fc.txt");
+    if !path.exists() {
+        eprintln!("skipping golden tests: {} missing (run make artifacts)", path.display());
+        return None;
+    }
+    Some(parse_cases(&std::fs::read_to_string(path).unwrap()))
+}
+
+#[test]
+fn lif_layer_matches_python_oracle() {
+    let Some(cases) = load_cases() else { return };
+    assert!(cases.len() >= 5);
+    for (ci, c) in cases.iter().enumerate() {
+        let res = Resolution::new(c.w_bits, c.p_bits);
+        let mut layer = LifLayer::new(c.weights.clone(), res, c.theta);
+        layer.v = c.vmem_in.clone();
+        let spk = layer.step(&c.spikes);
+        assert_eq!(spk, c.spk_expect, "case {ci}: spikes");
+        assert_eq!(layer.v, c.vmem_expect, "case {ci}: vmem");
+    }
+}
+
+#[test]
+fn cim_macro_matches_python_oracle() {
+    let Some(cases) = load_cases() else { return };
+    for (ci, c) in cases.iter().enumerate() {
+        let out_dim = c.weights.len();
+        let in_dim = c.weights[0].len();
+        // Exercise several operand shapes per case — same result expected
+        // from all (shape invariance is a hardware contribution).
+        for n_c in [1u32, 2, c.p_bits.min(5)] {
+            let cfg = MacroConfig::flexspim(c.w_bits, c.p_bits, n_c, in_dim, out_dim);
+            if cfg.validate().is_err() {
+                continue;
+            }
+            let mut mac = CimMacro::new(cfg).unwrap();
+            for (n, row) in c.weights.iter().enumerate() {
+                for (j, &w) in row.iter().enumerate() {
+                    mac.load_weight(n, j, w);
+                }
+                mac.load_vmem(n, c.vmem_in[n]);
+            }
+            let spk = mac.timestep(&c.spikes, c.theta);
+            assert_eq!(spk, c.spk_expect, "case {ci} n_c {n_c}: spikes");
+            for n in 0..out_dim {
+                assert_eq!(
+                    mac.peek_vmem(n),
+                    c.vmem_expect[n],
+                    "case {ci} n_c {n_c} neuron {n}: vmem"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quantize_check_cross_validates() {
+    // Covered in depth by runtime::weights tests; here assert the file
+    // itself is consistent (modulus = 2 × half > theta).
+    let path = artifacts_dir().join("golden/quantize_check.txt");
+    if !path.exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let text = std::fs::read_to_string(path).unwrap();
+    let mut lines = text.lines();
+    let n: usize = lines.next().unwrap().trim().parse().unwrap();
+    assert_eq!(n, 9);
+    for line in lines {
+        let v: Vec<i64> = line.split_whitespace().map(|t| t.parse().unwrap()).collect();
+        assert_eq!(v[0], 2 * v[1]);
+        assert!(v[2] >= 1 && v[2] < v[1]);
+        assert!(v[5] <= v[6], "min <= max");
+    }
+}

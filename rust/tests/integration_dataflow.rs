@@ -1,0 +1,197 @@
+//! Cross-module integration: workload ↔ mapper ↔ scheduler ↔ energy
+//! model consistency, plus property tests on coordinator-level invariants
+//! (no PJRT needed — these always run).
+
+use flexspim::cim::{CimMacro, MacroConfig};
+use flexspim::coordinator::Scheduler;
+use flexspim::dataflow::{Mapper, Policy};
+use flexspim::energy::{MacroEnergyModel, SystemEnergyModel};
+use flexspim::snn::network::scnn_dvs_gesture;
+use flexspim::snn::quant::{max_val, min_val, wrap};
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::util::proptest_lite::{check, prop_assert, prop_eq, Config};
+
+#[test]
+fn mapping_residency_never_exceeds_capacity_property() {
+    // Invariant: for random workloads, macro counts, and policies, the
+    // mapper never oversubscribes CIM and avoided+streamed covers every
+    // operand exactly once.
+    check("mapper-invariants", &Config { cases: 80, ..Default::default() }, |c| {
+        let n_layers = c.rng.range_usize(1, 8);
+        let mut dim_in = c.rng.range_usize(4, 64);
+        let mut layers = Vec::new();
+        for i in 0..n_layers {
+            let out = c.rng.range_usize(2, 64);
+            let res = Resolution::new(
+                c.rng.range_i64(1, 8) as u32,
+                c.rng.range_i64(2, 16) as u32,
+            );
+            layers.push(LayerSpec::fc(&format!("f{i}"), dim_in, out, res));
+            dim_in = out;
+        }
+        let net = Network::new("rand", layers, 4);
+        let macros = c.rng.range_usize(1, 8);
+        let mapper = Mapper::flexspim(macros);
+        for policy in Policy::ALL {
+            let m = mapper.map(&net, policy);
+            prop_assert(m.used_bits <= m.capacity_bits, "capacity respected")?;
+            // Conservation: avoided + streamed == total operand traffic.
+            let total: u64 = net
+                .layers
+                .iter()
+                .map(|l| l.weight_bits() + 2 * l.vmem_bits())
+                .sum();
+            prop_eq(
+                m.avoided_traffic_bits(&net) + m.streamed_traffic_bits(&net),
+                total,
+                &format!("{policy} traffic conservation"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn more_macros_never_hurt_property() {
+    // Monotonicity: adding CIM capacity never reduces avoided traffic.
+    let net = scnn_dvs_gesture();
+    for policy in Policy::ALL {
+        let mut last = 0u64;
+        for macros in 1..=20 {
+            let m = Mapper::flexspim(macros).map(&net, policy);
+            let avoided = m.avoided_traffic_bits(&net);
+            assert!(
+                avoided >= last,
+                "{policy} at {macros} macros: {avoided} < {last}"
+            );
+            last = avoided;
+        }
+    }
+}
+
+#[test]
+fn system_energy_decreases_with_macro_count() {
+    let net = scnn_dvs_gesture();
+    let mut last = f64::INFINITY;
+    for macros in [1usize, 2, 4, 8, 16, 32] {
+        let mapping = Mapper::flexspim(macros).map(&net, Policy::HsOpt);
+        let sys = SystemEnergyModel::flexspim(macros);
+        let e = sys.evaluate(&net, &mapping, 0.95, None).total_pj();
+        assert!(e <= last * 1.0001, "{macros} macros: {e} > {last}");
+        last = e;
+    }
+}
+
+#[test]
+fn scheduler_and_energy_agree_on_shapes() {
+    // The scheduler's chosen shape must be executable on the macro and
+    // priced by the analytic model without panicking, for every layer.
+    let net = scnn_dvs_gesture();
+    let mapping = Mapper::flexspim(16).map(&net, Policy::HsOpt);
+    let sched = Scheduler::default().plan(&net, &mapping);
+    let model = MacroEnergyModel::nominal();
+    for (plan, layer) in sched.layers.iter().zip(&net.layers) {
+        let e = model.sop_pj_analytic(
+            layer.res.w_bits,
+            layer.res.p_bits,
+            plan.n_c,
+            plan.parallel_neurons,
+            256,
+        );
+        assert!(e.total_pj() > 0.0);
+        assert!(plan.parallel_neurons * plan.n_c as usize <= 256);
+    }
+}
+
+#[test]
+fn macro_sim_energy_close_to_analytic_across_random_configs() {
+    // The bit-accurate simulator and the analytic pricing must stay
+    // within a few percent for random configurations (the analytic form
+    // feeds the system extrapolation; the simulator is ground truth).
+    check("sim-vs-analytic", &Config { cases: 40, ..Default::default() }, |c| {
+        let w = c.rng.range_i64(1, 8) as u32;
+        let p = c.rng.range_i64(w as i64, 16) as u32;
+        let n_c = c.rng.range_i64(1, p as i64) as u32;
+        let neurons = c.rng.range_usize(1, (256 / n_c as usize).min(48));
+        let cfg = MacroConfig::flexspim(w, p, n_c, 1, neurons);
+        if cfg.validate().is_err() {
+            return Ok(());
+        }
+        let mut mac = CimMacro::new(cfg).unwrap();
+        for n in 0..neurons {
+            mac.load_weight(n, 0, c.rng.range_i64(min_val(w), max_val(w)));
+            mac.load_vmem(n, c.rng.range_i64(min_val(p), max_val(p)));
+        }
+        mac.reset_counters();
+        for _ in 0..3 {
+            mac.cim_accumulate(0, None);
+        }
+        let model = MacroEnergyModel::nominal();
+        let sim = model.pj_per_sop(mac.counters());
+        let ana = model.sop_pj_analytic(w, p, n_c, neurons, 256).total_pj();
+        let rel = (sim - ana).abs() / ana;
+        prop_assert(
+            rel < 0.08,
+            &format!("w={w} p={p} n_c={n_c} neurons={neurons}: sim {sim:.3} vs ana {ana:.3}"),
+        )
+    });
+}
+
+#[test]
+fn event_driven_macro_matches_lif_over_long_runs_property() {
+    // Multi-timestep, multi-synapse stress: the macro and the golden LIF
+    // must agree after dozens of timesteps, including wraparound and
+    // firing dynamics.
+    check("macro-vs-lif-long", &Config { cases: 20, ..Default::default() }, |c| {
+        let w_bits = c.rng.range_i64(2, 6) as u32;
+        let p_bits = c.rng.range_i64(w_bits as i64 + 1, 12) as u32;
+        let n_c = c.rng.range_i64(1, 3) as u32;
+        let neurons = c.rng.range_usize(1, 8);
+        let fan_in = c.rng.range_usize(1, 6);
+        let cfg = MacroConfig::flexspim(w_bits, p_bits, n_c, fan_in, neurons);
+        if cfg.validate().is_err() {
+            return Ok(());
+        }
+        let mut mac = CimMacro::new(cfg).unwrap();
+        let weights: Vec<Vec<i64>> = (0..neurons)
+            .map(|_| {
+                (0..fan_in)
+                    .map(|_| c.rng.range_i64(min_val(w_bits), max_val(w_bits)))
+                    .collect()
+            })
+            .collect();
+        let theta = c.rng.range_i64(1, max_val(p_bits));
+        let mut lif = flexspim::snn::lif::LifLayer::new(
+            weights.clone(),
+            Resolution::new(w_bits, p_bits),
+            theta,
+        );
+        for (n, row) in weights.iter().enumerate() {
+            for (j, &wv) in row.iter().enumerate() {
+                mac.load_weight(n, j, wv);
+            }
+        }
+        for t in 0..24 {
+            let spikes: Vec<bool> = (0..fan_in).map(|_| c.rng.chance(0.35)).collect();
+            let expect = lif.step(&spikes);
+            let got = mac.timestep(&spikes, theta);
+            prop_eq(got, expect, &format!("t={t} spikes"))?;
+            for n in 0..neurons {
+                prop_eq(mac.peek_vmem(n), lif.v[n], &format!("t={t} neuron {n}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wrap_consistency_between_modules() {
+    // snn::quant::wrap is the single source of truth; spot-check the
+    // Python-exported semantics on boundary values here too.
+    for bits in 1..=31 {
+        let m = 1i64 << bits;
+        assert_eq!(wrap(m / 2, bits), -m / 2);
+        assert_eq!(wrap(-m / 2 - 1, bits), m / 2 - 1);
+        assert_eq!(wrap(m, bits), 0);
+    }
+}

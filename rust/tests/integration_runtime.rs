@@ -1,0 +1,178 @@
+//! Runtime integration tests: the PJRT-loaded artifacts must reproduce
+//! the Python-computed golden trace, and the whole coordinator stack must
+//! run end to end. These are the tests that prove the three layers
+//! compose.
+//!
+//! Each test creates its own PJRT client: the `xla` crate's client is
+//! `Rc`-based (not `Send`), and cargo runs test functions on separate
+//! threads. Tests skip gracefully when artifacts are missing.
+
+use flexspim::coordinator::Coordinator;
+use flexspim::dataflow::Policy;
+use flexspim::events::{GestureClass, GestureGenerator};
+use flexspim::runtime::{artifacts_dir, Runtime, ScnnRunner};
+use flexspim::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::cpu().expect("PJRT CPU client")
+}
+
+fn artifacts_ready() -> bool {
+    let ok = artifacts_dir().join("scnn_step.hlo.txt").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built (run make artifacts)");
+    }
+    ok
+}
+
+/// The flagship cross-layer test: run the compiled scnn_step for three
+/// timesteps on the golden input frame and compare the output spikes and
+/// per-layer counts with what Python's Pallas path computed.
+#[test]
+fn scnn_step_matches_python_golden_trace() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let trace = std::fs::read_to_string(dir.join("golden/scnn_trace.txt")).unwrap();
+    let mut tok = trace.split_whitespace().map(|t| t.parse::<i64>().unwrap());
+    let mut next = || tok.next().expect("truncated trace");
+
+    let steps = next() as usize;
+    // qparams 9×3 — must equal what the runner derives from weights.bin.
+    let qparams: Vec<[i32; 3]> = (0..9)
+        .map(|_| [next() as i32, next() as i32, next() as i32])
+        .collect();
+    let frame: Vec<i32> = (0..2 * 48 * 48).map(|_| next() as i32).collect();
+
+    // The golden trace was computed with the shipped random-init weights.
+    let mut runner = ScnnRunner::load_untrained(&runtime(), &dir).unwrap();
+    assert_eq!(runner.qparams(), &qparams[..], "quantizer divergence");
+
+    for step in 0..steps {
+        let expect_spk: Vec<i32> = (0..10).map(|_| next() as i32).collect();
+        let expect_counts: Vec<i32> = (0..9).map(|_| next() as i32).collect();
+        let r = runner.step(&frame).unwrap();
+        assert_eq!(r.out_spikes, expect_spk, "step {step}: output spikes");
+        assert_eq!(r.counts, expect_counts, "step {step}: per-layer counts");
+    }
+}
+
+#[test]
+fn runner_resets_and_is_deterministic() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut runner = ScnnRunner::load(&runtime(), &artifacts_dir()).unwrap();
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(5);
+    let stream = gen.sample(GestureClass::RightWave, &mut rng);
+    let frames: Vec<Vec<i32>> = flexspim::events::encode_frames(&stream, 4)
+        .iter()
+        .map(|f| f.as_input_vector().iter().map(|&b| b as i32).collect())
+        .collect();
+    let a = runner.infer(&frames).unwrap();
+    let b = runner.infer(&frames).unwrap();
+    assert_eq!(a, b, "infer must reset state and be deterministic");
+}
+
+#[test]
+fn resolution_reconfiguration_changes_behaviour_not_validity() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut runner = ScnnRunner::load(&runtime(), &artifacts_dir()).unwrap();
+    let frame: Vec<i32> = (0..4608).map(|i| ((i * 37) % 13 == 0) as i32).collect();
+    let base = runner.step(&frame).unwrap();
+    // Reconfigure to a coarser resolution at runtime (chip flexibility).
+    runner.set_resolutions(&[(3, 8); 9]);
+    let coarse = runner.step(&frame).unwrap();
+    assert_eq!(base.counts.len(), coarse.counts.len());
+    // Spike counts stay within layer sizes.
+    let net = runner.network().clone();
+    for (c, l) in coarse.counts.iter().zip(&net.layers) {
+        assert!(*c >= 0 && (*c as usize) <= l.num_neurons());
+    }
+}
+
+#[test]
+fn per_layer_artifacts_compile_and_run() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = artifacts_dir();
+    // Smallest layer: FC3 (128 -> 10), fixed resolution 7b/12b.
+    let exe = runtime().load_hlo(&dir.join("layer_FC3.hlo.txt")).unwrap();
+    let w: Vec<i32> = (0..10 * 128).map(|i| (i % 7) as i32 - 3).collect();
+    let s: Vec<i32> = (0..128).map(|i| (i % 5 == 0) as i32).collect();
+    let v = vec![0i32; 10];
+    let out = exe
+        .run(&[
+            flexspim::runtime::client::lit_i32(&w, &[10, 128]).unwrap(),
+            flexspim::runtime::client::lit_i32(&s, &[128]).unwrap(),
+            flexspim::runtime::client::lit_i32(&v, &[10]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 2, "spikes + vmem");
+    let spk = flexspim::runtime::client::to_vec_i32(&out[0]).unwrap();
+    let vm = flexspim::runtime::client::to_vec_i32(&out[1]).unwrap();
+    assert_eq!(spk.len(), 10);
+    assert_eq!(vm.len(), 10);
+    // Cross-check against the Rust golden LIF (theta from aot.py:
+    // max_val(12)/2 = 1023).
+    let weights: Vec<Vec<i64>> = (0..10)
+        .map(|o| (0..128).map(|i| w[o * 128 + i] as i64).collect())
+        .collect();
+    let mut layer = flexspim::snn::lif::LifLayer::new(
+        weights,
+        flexspim::snn::Resolution::new(7, 12),
+        1023,
+    );
+    let spikes_b: Vec<bool> = s.iter().map(|&x| x != 0).collect();
+    let expect = layer.step(&spikes_b);
+    let got: Vec<bool> = spk.iter().map(|&x| x != 0).collect();
+    assert_eq!(got, expect, "layer artifact vs Rust LIF");
+    assert_eq!(vm.iter().map(|&x| x as i64).collect::<Vec<_>>(), layer.v);
+}
+
+#[test]
+fn coordinator_end_to_end_sample() {
+    if !artifacts_ready() {
+        return;
+    }
+    let runner = ScnnRunner::load(&runtime(), &artifacts_dir()).unwrap();
+    let mut coord = Coordinator::with_runner(runner, 16, Policy::HsOpt).unwrap();
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(11);
+    let stream = gen.sample(GestureClass::ArmRoll, &mut rng);
+    let r = coord.run_sample(&stream, Some(7)).unwrap();
+    assert!(r.prediction < 10);
+    let m = &r.metrics;
+    assert_eq!(m.timesteps, 16);
+    assert!(m.sops > 0, "SOPs must be counted");
+    assert!(m.energy.total_pj() > 0.0);
+    assert!(m.mean_sparsity > 0.80 && m.mean_sparsity < 1.0);
+    assert!(m.modeled_latency_s > 0.0);
+}
+
+#[test]
+fn coordinator_policy_changes_energy() {
+    if !artifacts_ready() {
+        return;
+    }
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(13);
+    let stream = gen.sample(GestureClass::HandClap, &mut rng);
+
+    let run = |policy| {
+        let runner = ScnnRunner::load(&runtime(), &artifacts_dir()).unwrap();
+        let mut coord = Coordinator::with_runner(runner, 2, policy).unwrap();
+        coord.run_sample(&stream, None).unwrap().metrics.energy.total_pj()
+    };
+    let ws = run(Policy::WsOnly);
+    let hs = run(Policy::HsOpt);
+    assert!(
+        hs < ws,
+        "HS must save energy vs WS-only at 2 macros: {hs:.1} vs {ws:.1} pJ"
+    );
+}
