@@ -1,0 +1,103 @@
+//! Engine throughput: samples/sec of the batched parallel engine at 1, 2,
+//! 4, and 8 workers on a 16-sample synthetic gesture batch.
+//!
+//! The acceptance bar for the engine PR: >1.5× samples/sec at 4 workers vs
+//! 1 worker. The per-worker backend is the pure-Rust `NativeScnn`
+//! interpreter (deterministic from one seed), so this runs on any machine
+//! with no artifacts; results are additionally cross-checked for
+//! worker-count invariance while measuring.
+//!
+//! ```sh
+//! cargo bench --bench engine_throughput
+//! ```
+
+use flexspim::coordinator::Engine;
+use flexspim::dataflow::Policy;
+use flexspim::events::{EventStream, GestureClass, GestureGenerator};
+use flexspim::snn::network::scnn_dvs_gesture;
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::util::bench::{fmt_time, section};
+use flexspim::util::rng::Rng;
+
+const SEED: u64 = 42;
+const MACROS: usize = 16;
+const BATCH: usize = 16;
+
+fn gesture_batch(n: usize) -> Vec<(EventStream, usize)> {
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(7);
+    (0..n)
+        .map(|i| {
+            let label = i % 10;
+            (gen.sample(GestureClass::from_label(label), &mut rng), label)
+        })
+        .collect()
+}
+
+/// A mid-size SCNN: heavy enough that per-sample work dominates thread
+/// orchestration, light enough for quick bench turnaround.
+fn bench_net() -> Network {
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "engine-bench",
+        vec![
+            LayerSpec::conv("C1", 2, 8, 3, 2, 1, 48, 48, r),
+            LayerSpec::conv("C2", 8, 16, 3, 2, 1, 24, 24, Resolution::new(5, 10)),
+            LayerSpec::conv("C3", 16, 16, 3, 1, 1, 12, 12, Resolution::new(5, 10)),
+            LayerSpec::fc("F1", 16 * 12 * 12, 64, r),
+            LayerSpec::fc("F2", 64, 10, Resolution::new(5, 10)),
+        ],
+        8,
+    )
+}
+
+fn throughput(net: &Network, data: &[(EventStream, usize)], workers: usize, reps: usize) -> f64 {
+    let engine = Engine::native(net.clone(), SEED, MACROS, Policy::HsOpt, workers);
+    // Warm-up run (thread pool spin-up, allocator, branch predictors).
+    let warm = engine.run_batch(data).expect("warm-up batch");
+    let mut best = 0.0f64;
+    let reference_sops = warm.metrics.sops;
+    for _ in 0..reps {
+        let r = engine.run_batch(data).expect("bench batch");
+        assert_eq!(
+            r.metrics.sops, reference_sops,
+            "throughput runs must stay bit-identical"
+        );
+        best = best.max(r.samples_per_sec());
+    }
+    best
+}
+
+fn main() {
+    section("engine throughput — 16-sample synthetic gesture batch");
+    let net = bench_net();
+    let data = gesture_batch(BATCH);
+
+    let mut base = 0.0;
+    for &workers in &[1usize, 2, 4, 8] {
+        let sps = throughput(&net, &data, workers, 3);
+        if workers == 1 {
+            base = sps;
+        }
+        let speedup = if base > 0.0 { sps / base } else { 0.0 };
+        println!(
+            "{workers} worker(s): {sps:8.2} samples/s  ({:>10}/sample)  speedup {speedup:4.2}x",
+            fmt_time(1.0 / sps.max(1e-12)),
+        );
+    }
+    println!("\nacceptance: 4-worker speedup must exceed 1.50x over 1 worker");
+
+    section("reference workload — full SCNN (paper Fig. 4a) on 4 workers");
+    let full = scnn_dvs_gesture();
+    let small = gesture_batch(4);
+    for &workers in &[1usize, 4] {
+        let engine = Engine::native(full.clone(), SEED, MACROS, Policy::HsOpt, workers);
+        let r = engine.run_batch(&small).expect("full-net batch");
+        println!(
+            "{workers} worker(s): {:8.3} samples/s over {} samples ({} SOPs modeled)",
+            r.samples_per_sec(),
+            r.results.len(),
+            r.metrics.sops,
+        );
+    }
+}

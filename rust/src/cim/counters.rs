@@ -64,6 +64,60 @@ impl EnergyCounters {
         self.sops += other.sops;
     }
 
+    /// Scale every event count by `k` — prices `k` repetitions of an
+    /// operation whose per-op ledger was measured once (the engine's
+    /// shard-calibration path).
+    pub fn scaled(&self, k: u64) -> EnergyCounters {
+        EnergyCounters {
+            cim_cycles: self.cim_cycles * k,
+            active_col_cycles: self.active_col_cycles * k,
+            standby_col_cycles: self.standby_col_cycles * k,
+            wl_activations: self.wl_activations * k,
+            sa_reads: self.sa_reads * k,
+            adder_ops: self.adder_ops * k,
+            writebacks: self.writebacks * k,
+            carry_hops: self.carry_hops * k,
+            eb_reads: self.eb_reads * k,
+            compare_ops: self.compare_ops * k,
+            io_bits: self.io_bits * k,
+            sram_writes: self.sram_writes * k,
+            sram_reads: self.sram_reads * k,
+            sops: self.sops * k,
+        }
+    }
+
+    /// Merge per-shard ledgers of **one operation executed in lockstep**
+    /// across column-group shards of the same physical macro.
+    ///
+    /// Column-proportional events (sense amps, adders, write-backs, carry
+    /// hops, EB reads, comparators, I/O, SOPs) simply sum. Row-cycle events
+    /// (`cim_cycles`, `wl_activations`) are shared by every shard driven by
+    /// the common row decoder, so the merged count is the *maximum* over
+    /// shards (a shard that skips a conditional pass still idles while its
+    /// siblings cycle). Standby activity is then derived from the invariant
+    /// `active + standby = total_cols` per cycle — which is why the total
+    /// column count of the merged view is a parameter.
+    pub fn merge_lockstep(deltas: &[EnergyCounters], total_cols: u64) -> EnergyCounters {
+        let mut out = EnergyCounters::new();
+        for d in deltas {
+            out.active_col_cycles += d.active_col_cycles;
+            out.sa_reads += d.sa_reads;
+            out.adder_ops += d.adder_ops;
+            out.writebacks += d.writebacks;
+            out.carry_hops += d.carry_hops;
+            out.eb_reads += d.eb_reads;
+            out.compare_ops += d.compare_ops;
+            out.io_bits += d.io_bits;
+            out.sram_writes += d.sram_writes;
+            out.sram_reads += d.sram_reads;
+            out.sops += d.sops;
+            out.cim_cycles = out.cim_cycles.max(d.cim_cycles);
+            out.wl_activations = out.wl_activations.max(d.wl_activations);
+        }
+        out.standby_col_cycles = (out.cim_cycles * total_cols).saturating_sub(out.active_col_cycles);
+        out
+    }
+
     /// Difference (self - baseline), for measuring a single operation.
     pub fn delta(&self, baseline: &EnergyCounters) -> EnergyCounters {
         EnergyCounters {
@@ -104,6 +158,39 @@ mod tests {
         assert_eq!(a.adder_ops, 10);
         assert_eq!(a.io_bits, 2);
         assert_eq!(a.delta(&snapshot), b);
+    }
+
+    #[test]
+    fn scaled_multiplies_every_field() {
+        let mut a = EnergyCounters::new();
+        a.cim_cycles = 3;
+        a.adder_ops = 5;
+        a.sops = 1;
+        let s = a.scaled(4);
+        assert_eq!(s.cim_cycles, 12);
+        assert_eq!(s.adder_ops, 20);
+        assert_eq!(s.sops, 4);
+        assert_eq!(a.scaled(0), EnergyCounters::new());
+    }
+
+    #[test]
+    fn lockstep_merge_sums_columns_maxes_cycles() {
+        let mut a = EnergyCounters::new();
+        a.cim_cycles = 16;
+        a.wl_activations = 16;
+        a.active_col_cycles = 64;
+        a.adder_ops = 64;
+        let mut b = EnergyCounters::new();
+        b.cim_cycles = 32; // sibling ran a conditional pass too
+        b.wl_activations = 32;
+        b.active_col_cycles = 96;
+        b.adder_ops = 96;
+        let m = EnergyCounters::merge_lockstep(&[a, b], 10);
+        assert_eq!(m.cim_cycles, 32, "row cycles shared, not summed");
+        assert_eq!(m.wl_activations, 32);
+        assert_eq!(m.active_col_cycles, 160);
+        assert_eq!(m.adder_ops, 160);
+        assert_eq!(m.standby_col_cycles, 32 * 10 - 160, "derived standby");
     }
 
     #[test]

@@ -97,13 +97,20 @@ impl MacroConfig {
 }
 
 /// The macro simulator.
+///
+/// The type is `Send` (plain owned buffers, no interior mutability), so the
+/// parallel inference engine can host one macro per layer shard per worker
+/// thread — asserted by a compile-time check in the tests below.
 #[derive(Debug, Clone)]
 pub struct CimMacro {
     cfg: MacroConfig,
     array: SramArray,
     pcs: Vec<Pc>,
-    /// Emulation-bit row: per-column sign-extension bit (write-free reads).
-    eb: Vec<bool>,
+    /// Decoded mirror of the stored weights (`[neuron][synapse]`, row-major)
+    /// maintained by `load_weight`. The array remains the source of truth
+    /// (`peek_weight` reads it back bit by bit); the mirror only spares the
+    /// accumulate hot loop a bit-gather per operand.
+    w_cache: Vec<i64>,
     counters: EnergyCounters,
 }
 
@@ -126,7 +133,8 @@ impl CimMacro {
                 };
             }
         }
-        Ok(CimMacro { cfg, array, pcs, eb: vec![false; cfg.cols], counters: EnergyCounters::new() })
+        let w_cache = vec![0i64; cfg.neurons * cfg.fan_in];
+        Ok(CimMacro { cfg, array, pcs, w_cache, counters: EnergyCounters::new() })
     }
 
     /// Configuration.
@@ -166,6 +174,7 @@ impl CimMacro {
         let base_row = self.weight_row_base(synapse);
         let base_col = self.col_base(neuron);
         self.write_operand(value, &shape, base_row, base_col, self.cfg.w_bits);
+        self.w_cache[neuron * self.cfg.fan_in + synapse] = wrap(value, self.cfg.w_bits);
     }
 
     /// Load a membrane potential through the I/O port.
@@ -236,19 +245,30 @@ impl CimMacro {
     /// One synaptic CIM accumulate: `v ← wrap(v + w[synapse], p_bits)` for
     /// every resident neuron whose `mask` entry is true (`None` = all).
     ///
-    /// Executes `N_R_p` row-cycles of the 5-phase operation. Masked and
+    /// Models `N_R_p` row-cycles of the 5-phase operation. Masked and
     /// unowned columns sit in standby (87 % energy reduction, Fig. 7a).
+    ///
+    /// The event ledger is derived analytically per row (the per-row adder
+    /// programme is a pure function of the operand shape), while the data
+    /// update runs word-level: each active neuron's stored operands are
+    /// gathered once, added as two's-complement words, and the sum bits are
+    /// scattered back. This replaces the original per-bit full-adder ripple
+    /// — it is the hot loop every engine worker spins on — and is pinned to
+    /// the bit-serial semantics by `prop_accumulate_bit_exact_across_shapes`
+    /// below plus the MAC+IF oracle properties in `rust/tests/property_cim.rs`
+    /// (`prop_timestep_equals_mac_if_oracle` and friends).
     pub fn cim_accumulate(&mut self, synapse: usize, mask: Option<&[bool]>) {
         assert!(synapse < self.cfg.fan_in);
         if let Some(m) = mask {
             assert_eq!(m.len(), self.cfg.neurons);
         }
         let shape_p = self.cfg.shape_p();
-        let shape_w = self.cfg.shape_w();
         let n_r_p = shape_p.n_r();
         let w_row_base = self.weight_row_base(synapse);
         let v_row_base = self.vmem_row_base();
         let n_c = self.cfg.n_c;
+        let p_bits = self.cfg.p_bits;
+        let w_bits = self.cfg.w_bits;
 
         let active_neurons: Vec<usize> = (0..self.cfg.neurons)
             .filter(|&n| mask.map_or(true, |m| m[n]))
@@ -261,93 +281,61 @@ impl CimMacro {
             // the shape-invariance property tests.
             return self.accumulate_serial_wordwise(w_row_base, &active_neurons);
         }
-        let active_cols = active_neurons.len() as u64 * n_c as u64;
+        let n_active = active_neurons.len() as u64;
+        let active_cols = n_active * n_c as u64;
 
-        // Refresh the emulation-bit row with each active neuron's weight
-        // sign (one write-free broadcast; counted as EB activity). Only
-        // the stored MSB is sensed — not the whole operand.
-        let msb = self.cfg.w_bits - 1;
-        let msb_row = w_row_base + shape_w.row_of_bit(msb) as usize;
-        let msb_col_off = shape_w.col_of_bit(msb) as usize;
-        for &n in &active_neurons {
-            let base = self.col_base(n);
-            let sign = self.array.get(msb_row, base + msb_col_off);
-            for c in 0..n_c as usize {
-                self.eb[base + c] = sign;
-            }
-        }
-
-        // Per-row programme, shared by every neuron group (the silicon
-        // equivalent: the row decoder + carry-select settings are global).
-        // Entries: (col_offset, Some((w_row_abs, w_col_offset)) | None=EB).
-        let mut programme: Vec<(usize, Option<(usize, usize)>)> =
-            Vec::with_capacity(n_c as usize);
-
+        // --- Ledger: one entry per row-cycle. Within row `row`, the shared
+        // adder programme covers bit positions `[row·N_C, row·N_C + len)`;
+        // positions at or beyond `w_bits` read the emulation bit (sign
+        // extension) instead of a stored weight bit.
         for row in 0..n_r_p {
-            // --- Phases 1-2: precharge + dual-WL activation. The weight
-            // wordline is real for rows that exist, the EB row otherwise.
+            let start = row * n_c;
+            let len = n_c.min(p_bits - start) as u64;
+            let w_in_row = w_bits.saturating_sub(start).min(len as u32) as u64;
+            let eb_in_row = len - w_in_row;
+
+            // Phases 1-2: precharge + dual-WL activation.
             self.counters.cim_cycles += 1;
             self.counters.wl_activations += 1;
             self.counters.active_col_cycles += active_cols;
             self.counters.standby_col_cycles += self.cfg.cols as u64 - active_cols;
             self.counters.sa_reads += 2 * active_cols;
-
-            programme.clear();
-            let mut eb_per_neuron = 0u64;
-            for &co in &shape_p.visit_order(row) {
-                if let Some(pos) = shape_p.bit_at(row, co) {
-                    if pos < self.cfg.w_bits {
-                        programme.push((
-                            co as usize,
-                            Some((
-                                w_row_base + shape_w.row_of_bit(pos) as usize,
-                                shape_w.col_of_bit(pos) as usize,
-                            )),
-                        ));
-                    } else {
-                        programme.push((co as usize, None));
-                        eb_per_neuron += 1;
-                    }
-                }
-            }
-            self.counters.eb_reads += eb_per_neuron * active_neurons.len() as u64;
-            self.counters.adder_ops +=
-                programme.len() as u64 * active_neurons.len() as u64;
-            self.counters.writebacks +=
-                programme.len() as u64 * active_neurons.len() as u64;
-            self.counters.carry_hops += (programme.len().saturating_sub(1)) as u64
-                * active_neurons.len() as u64;
-
-            let v_row = v_row_base + row as usize;
-            // --- Phases 3-5 per neuron group: ripple the chained adders in
-            // the row's visit order, then write the sum bits back.
-            for &n in &active_neurons {
-                let base_col = self.col_base(n);
-                // Carry-in for the row's first column: 0 on row 0, else the
-                // carry register latched by this same PC last cycle
-                // (ping-pong guarantees it is the same column).
-                let first_col = base_col + programme[0].0;
-                let mut carry = if row == 0 { false } else { self.pcs[first_col].carry_reg };
-                let mut last_col = first_col;
-                for &(co, w_src) in &programme {
-                    let col = base_col + co;
-                    // A = weight bit (sign-extended via EB past w_bits).
-                    let a = match w_src {
-                        Some((wrow, wco)) => self.array.get(wrow, base_col + wco),
-                        None => self.eb[col],
-                    };
-                    let b = self.array.get(v_row, col);
-                    let (sum, cout) = Pc::full_add(a, b, carry);
-                    self.array.set(v_row, col, sum);
-                    carry = cout;
-                    last_col = col;
-                }
-                // Latch the row's final carry in the PC that produced it;
-                // ping-pong makes that PC the next row's first column.
-                self.pcs[last_col].carry_reg = carry;
-            }
+            // Phases 3-5: adder evaluation, carry ripple, write-back.
+            self.counters.eb_reads += eb_in_row * n_active;
+            self.counters.adder_ops += len * n_active;
+            self.counters.writebacks += len * n_active;
+            self.counters.carry_hops += (len - 1) * n_active;
         }
-        self.counters.sops += active_neurons.len() as u64;
+
+        // --- Data: word-level accumulate per neuron group. `w_cache` holds
+        // the decoded (w_bits-wrapped) weight; only its low p_bits matter
+        // for the sum, exactly as in the bit-serial walk.
+        for &n in &active_neurons {
+            let base_col = self.col_base(n);
+            let w = self.w_cache[n * self.cfg.fan_in + synapse];
+            let v = self.read_operand_raw(shape_p, v_row_base, base_col, p_bits);
+            self.write_operand_raw(wrap(v + w, p_bits), &shape_p, v_row_base, base_col, p_bits);
+        }
+        self.counters.sops += n_active;
+    }
+
+    /// Uncounted operand scatter: write `value`'s bits into the array at a
+    /// shaped rectangle (compute-path write-back, not an I/O-port load).
+    fn write_operand_raw(
+        &mut self,
+        value: i64,
+        shape: &OperandShape,
+        base_row: usize,
+        base_col: usize,
+        bits: u32,
+    ) {
+        for pos in 0..bits {
+            self.array.set(
+                base_row + shape.row_of_bit(pos) as usize,
+                base_col + shape.col_of_bit(pos) as usize,
+                bit_of(value, pos, bits),
+            );
+        }
     }
 
     /// Word-parallel accumulate for the `N_C = 1` bit-serial layout: one
@@ -539,6 +527,34 @@ mod tests {
 
     fn mk(w_bits: u32, p_bits: u32, n_c: u32, fan_in: usize, neurons: usize) -> CimMacro {
         CimMacro::new(MacroConfig::flexspim(w_bits, p_bits, n_c, fan_in, neurons)).unwrap()
+    }
+
+    #[test]
+    fn macro_is_send_and_sync() {
+        // The engine hosts one macro per layer shard per worker thread.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<CimMacro>();
+        assert_send_sync::<EnergyCounters>();
+    }
+
+    #[test]
+    fn weight_cache_mirrors_array() {
+        // The hot-loop weight mirror must always agree with the bit-level
+        // readback, including overwrites and out-of-range wrap-on-load.
+        let mut m = mk(4, 9, 3, 3, 4);
+        m.load_weight(1, 2, -5);
+        m.load_weight(1, 2, 7);
+        m.load_weight(2, 0, 9); // wraps to -7 in 4 bits
+        assert_eq!(m.peek_weight(1, 2), 7);
+        assert_eq!(m.peek_weight(2, 0), -7);
+        // The accumulate path consumes the mirror; results must match the
+        // array readback semantics.
+        m.load_vmem(1, 10);
+        m.load_vmem(2, 10);
+        m.cim_accumulate(2, None);
+        m.cim_accumulate(0, None);
+        assert_eq!(m.peek_vmem(1), 10 + 7);
+        assert_eq!(m.peek_vmem(2), 10 - 7);
     }
 
     #[test]

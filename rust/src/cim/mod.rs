@@ -22,9 +22,11 @@ pub mod macro_unit;
 pub mod ops;
 pub mod pc;
 pub mod shape;
+pub mod sharded;
 
 pub use array::SramArray;
 pub use counters::EnergyCounters;
 pub use macro_unit::{CimMacro, MacroConfig};
 pub use pc::{Pc, PcMode};
 pub use shape::OperandShape;
+pub use sharded::ShardedMacro;

@@ -1,0 +1,336 @@
+//! Column-group sharding of one logical macro across several [`CimMacro`]
+//! instances.
+//!
+//! The parallel inference engine splits a layer's resident neurons across
+//! macros per the [`crate::dataflow::Mapper`] assignment. Physically the
+//! shards are column groups driven in lockstep by a common row decoder:
+//! every shard sees the same wordline activations while only its own
+//! columns toggle. [`ShardedMacro`] reproduces that contract in software —
+//! it delegates every operation to the per-shard macros and merges the
+//! per-operation counter deltas with
+//! [`EnergyCounters::merge_lockstep`], so that an N-way sharded run is
+//! bit- and ledger-identical to the equivalent un-sharded macro (pinned by
+//! the interleaved property test below).
+
+use super::counters::EnergyCounters;
+use super::macro_unit::{CimMacro, MacroConfig};
+
+/// Several [`CimMacro`] shards executing one logical macro in lockstep.
+#[derive(Debug, Clone)]
+pub struct ShardedMacro {
+    shards: Vec<CimMacro>,
+    /// First neuron index of each shard (parallel to `shards`).
+    offsets: Vec<usize>,
+    /// Total neurons across shards.
+    neurons: usize,
+    /// Column count of the logical (merged) macro — drives derived standby.
+    total_cols: u64,
+    counters: EnergyCounters,
+}
+
+impl ShardedMacro {
+    /// Split `cfg` into shards of `parts[i]` neurons each (must sum to
+    /// `cfg.neurons`). Each shard macro is sized tight to its column group
+    /// (`parts[i] × N_C` columns); the logical macro keeps `cfg.cols`
+    /// columns, so unowned columns show up as derived standby activity.
+    pub fn split(cfg: MacroConfig, parts: &[usize]) -> Result<ShardedMacro, String> {
+        if parts.is_empty() || parts.iter().any(|&p| p == 0) {
+            return Err("every shard needs at least one neuron".into());
+        }
+        let total: usize = parts.iter().sum();
+        if total != cfg.neurons {
+            return Err(format!(
+                "shard sizes sum to {total}, macro has {} neurons",
+                cfg.neurons
+            ));
+        }
+        let mut shards = Vec::with_capacity(parts.len());
+        let mut offsets = Vec::with_capacity(parts.len());
+        let mut start = 0usize;
+        for &p in parts {
+            let shard_cfg = MacroConfig {
+                cols: p * cfg.n_c as usize,
+                neurons: p,
+                ..cfg
+            };
+            shards.push(CimMacro::new(shard_cfg)?);
+            offsets.push(start);
+            start += p;
+        }
+        Ok(ShardedMacro {
+            shards,
+            offsets,
+            neurons: cfg.neurons,
+            total_cols: cfg.cols as u64,
+            counters: EnergyCounters::new(),
+        })
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total resident neurons.
+    pub fn neurons(&self) -> usize {
+        self.neurons
+    }
+
+    /// Lockstep-merged event ledger accumulated so far.
+    pub fn counters(&self) -> &EnergyCounters {
+        &self.counters
+    }
+
+    /// Reset the merged ledger and every shard ledger.
+    pub fn reset_counters(&mut self) {
+        self.counters = EnergyCounters::new();
+        for s in &mut self.shards {
+            s.reset_counters();
+        }
+    }
+
+    /// Shard index and local neuron index for a global neuron index.
+    fn locate(&self, neuron: usize) -> (usize, usize) {
+        assert!(neuron < self.neurons, "neuron {neuron} out of range");
+        let shard = self
+            .offsets
+            .partition_point(|&o| o <= neuron)
+            .saturating_sub(1);
+        (shard, neuron - self.offsets[shard])
+    }
+
+    /// Run `op` on every shard (passing the shard's first global neuron
+    /// index) and fold the per-op counter deltas into the lockstep-merged
+    /// ledger.
+    fn lockstep<R>(&mut self, mut op: impl FnMut(&mut CimMacro, usize) -> R) -> Vec<R> {
+        let mut deltas = Vec::with_capacity(self.shards.len());
+        let mut outs = Vec::with_capacity(self.shards.len());
+        for (s, &start) in self.shards.iter_mut().zip(&self.offsets) {
+            let before = *s.counters();
+            outs.push(op(s, start));
+            deltas.push(s.counters().delta(&before));
+        }
+        self.counters
+            .merge(&EnergyCounters::merge_lockstep(&deltas, self.total_cols));
+        outs
+    }
+
+    /// Run `op` on the single shard owning `neuron` (passing the local
+    /// neuron index) and fold its counter delta into the merged ledger.
+    fn single_shard<R>(&mut self, neuron: usize, op: impl FnOnce(&mut CimMacro, usize) -> R) -> R {
+        let (si, local) = self.locate(neuron);
+        let before = *self.shards[si].counters();
+        let out = op(&mut self.shards[si], local);
+        let delta = self.shards[si].counters().delta(&before);
+        self.counters
+            .merge(&EnergyCounters::merge_lockstep(&[delta], self.total_cols));
+        out
+    }
+
+    /// Load a weight into the owning shard (counted as I/O there).
+    pub fn load_weight(&mut self, neuron: usize, synapse: usize, value: i64) {
+        self.single_shard(neuron, |shard, local| shard.load_weight(local, synapse, value));
+    }
+
+    /// Load a membrane potential into the owning shard.
+    pub fn load_vmem(&mut self, neuron: usize, value: i64) {
+        self.single_shard(neuron, |shard, local| shard.load_vmem(local, value));
+    }
+
+    /// Test/debug view of a stored membrane potential (not counted).
+    pub fn peek_vmem(&self, neuron: usize) -> i64 {
+        let (si, local) = self.locate(neuron);
+        self.shards[si].peek_vmem(local)
+    }
+
+    /// Test/debug view of a stored weight (not counted).
+    pub fn peek_weight(&self, neuron: usize, synapse: usize) -> i64 {
+        let (si, local) = self.locate(neuron);
+        self.shards[si].peek_weight(local, synapse)
+    }
+
+    /// Lockstep synaptic accumulate across all shards; `mask` (if given)
+    /// covers the global neuron range.
+    pub fn cim_accumulate(&mut self, synapse: usize, mask: Option<&[bool]>) {
+        if let Some(m) = mask {
+            assert_eq!(m.len(), self.neurons);
+        }
+        self.lockstep(|shard, start| match mask {
+            None => shard.cim_accumulate(synapse, None),
+            Some(m) => {
+                let local = &m[start..start + shard.config().neurons];
+                shard.cim_accumulate(synapse, Some(local));
+            }
+        });
+    }
+
+    /// Lockstep threshold step; returns the concatenated spike vector in
+    /// global neuron order.
+    pub fn cim_fire(&mut self, threshold: i64) -> Vec<bool> {
+        let fired = self.lockstep(|shard, _start| shard.cim_fire(threshold));
+        fired.into_iter().flatten().collect()
+    }
+
+    /// Event-driven timestep: accumulate every spiking synapse, then fire.
+    pub fn timestep(&mut self, spikes_in: &[bool], threshold: i64) -> Vec<bool> {
+        // Same contract as `CimMacro::timestep`: a short/long spike vector
+        // is a caller bug, not a partial update.
+        assert_eq!(spikes_in.len(), self.shards[0].config().fan_in);
+        for (j, &s) in spikes_in.iter().enumerate() {
+            if s {
+                self.cim_accumulate(j, None);
+            }
+        }
+        self.cim_fire(threshold)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::quant::{max_val, min_val, wrap};
+    use crate::util::proptest_lite::{check, prop_eq, Config};
+
+    #[test]
+    fn split_validates_partition() {
+        let cfg = MacroConfig::flexspim(4, 8, 2, 2, 6);
+        assert!(ShardedMacro::split(cfg, &[3, 3]).is_ok());
+        assert!(ShardedMacro::split(cfg, &[4, 3]).is_err(), "sum mismatch");
+        assert!(ShardedMacro::split(cfg, &[6, 0]).is_err(), "empty shard");
+        assert!(ShardedMacro::split(cfg, &[]).is_err());
+    }
+
+    #[test]
+    fn locate_and_peek_roundtrip() {
+        let cfg = MacroConfig::flexspim(5, 10, 2, 2, 7);
+        let mut sm = ShardedMacro::split(cfg, &[2, 3, 2]).unwrap();
+        for n in 0..7 {
+            sm.load_weight(n, 1, n as i64 - 3);
+            sm.load_vmem(n, 11 * n as i64);
+        }
+        for n in 0..7 {
+            assert_eq!(sm.peek_weight(n, 1), n as i64 - 3, "weight {n}");
+            assert_eq!(sm.peek_vmem(n), 11 * n as i64, "vmem {n}");
+        }
+    }
+
+    /// The satellite property: an interleaved sequence of accumulate/fire
+    /// operations on a two-way sharded macro, merged through the lockstep
+    /// counter-merge API, equals one un-sharded macro run — membrane
+    /// potentials, spikes, and the full energy ledger.
+    #[test]
+    fn prop_two_shards_equal_one_macro() {
+        check(
+            "sharded-vs-monolithic",
+            &Config { cases: 60, ..Default::default() },
+            |c| {
+                let w_bits = c.rng.range_i64(1, 8) as u32;
+                let p_bits = c.rng.range_i64(w_bits as i64, 14) as u32;
+                let n_c = c.rng.range_i64(1, p_bits as i64) as u32;
+                let neurons = c.rng.range_usize(2, 8);
+                let fan_in = c.rng.range_usize(1, 3);
+                let cfg = MacroConfig {
+                    rows: 512,
+                    cols: neurons * n_c as usize + c.rng.range_usize(0, 8),
+                    w_bits,
+                    p_bits,
+                    n_c,
+                    fan_in,
+                    neurons,
+                };
+                if cfg.validate().is_err() {
+                    return Ok(());
+                }
+                let cut = c.rng.range_usize(1, neurons - 1);
+                let mut full = CimMacro::new(cfg).unwrap();
+                let mut sharded = ShardedMacro::split(cfg, &[cut, neurons - cut]).unwrap();
+
+                for n in 0..neurons {
+                    for j in 0..fan_in {
+                        let w = c.rng.range_i64(min_val(w_bits), max_val(w_bits));
+                        full.load_weight(n, j, w);
+                        sharded.load_weight(n, j, w);
+                    }
+                    let v = c.rng.range_i64(min_val(p_bits), max_val(p_bits));
+                    full.load_vmem(n, v);
+                    sharded.load_vmem(n, v);
+                }
+
+                // Interleave accumulates (masked and unmasked) with fires.
+                let theta = c.rng.range_i64(1, max_val(p_bits).max(1));
+                for _ in 0..6 {
+                    match c.rng.range_usize(0, 2) {
+                        0 => {
+                            let j = c.rng.range_usize(0, fan_in - 1);
+                            full.cim_accumulate(j, None);
+                            sharded.cim_accumulate(j, None);
+                        }
+                        1 => {
+                            let j = c.rng.range_usize(0, fan_in - 1);
+                            let m: Vec<bool> =
+                                (0..neurons).map(|_| c.rng.chance(0.6)).collect();
+                            full.cim_accumulate(j, Some(&m));
+                            sharded.cim_accumulate(j, Some(&m));
+                        }
+                        _ => {
+                            let a = full.cim_fire(theta);
+                            let b = sharded.cim_fire(theta);
+                            prop_eq(a, b, "spike vectors")?;
+                        }
+                    }
+                }
+
+                for n in 0..neurons {
+                    prop_eq(
+                        sharded.peek_vmem(n),
+                        full.peek_vmem(n),
+                        &format!("vmem neuron {n} (w={w_bits} p={p_bits} n_c={n_c})"),
+                    )?;
+                }
+                prop_eq(
+                    *sharded.counters(),
+                    *full.counters(),
+                    &format!("ledger (w={w_bits} p={p_bits} n_c={n_c} cut={cut})"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn timestep_matches_monolithic() {
+        let cfg = MacroConfig::flexspim(4, 9, 3, 4, 6);
+        let mut full = CimMacro::new(cfg).unwrap();
+        let mut sharded = ShardedMacro::split(cfg, &[1, 2, 3]).unwrap();
+        for n in 0..6 {
+            for j in 0..4 {
+                let w = ((n * 5 + j * 3) % 15) as i64 - 7;
+                full.load_weight(n, j, w);
+                sharded.load_weight(n, j, w);
+            }
+        }
+        let spikes = [true, false, true, true];
+        for t in 0..5 {
+            let a = full.timestep(&spikes, 20);
+            let b = sharded.timestep(&spikes, 20);
+            assert_eq!(a, b, "timestep {t}");
+        }
+        assert_eq!(sharded.counters(), full.counters());
+        for n in 0..6 {
+            assert_eq!(sharded.peek_vmem(n), full.peek_vmem(n));
+            // Cross-check against the plain integer LIF semantics.
+            let mut v = 0i64;
+            for t in 0..5 {
+                let _ = t;
+                for (j, &s) in spikes.iter().enumerate() {
+                    if s {
+                        v = wrap(v + full.peek_weight(n, j), 9);
+                    }
+                }
+                if v >= 20 {
+                    v = wrap(v - 20, 9);
+                }
+            }
+            assert_eq!(full.peek_vmem(n), v, "neuron {n} LIF oracle");
+        }
+    }
+}

@@ -1,0 +1,735 @@
+//! Parallel multi-macro inference engine with batched scheduling.
+//!
+//! The single-threaded [`super::Coordinator`] models one sample at a time.
+//! The FlexSpIM system claim, however, is about *scale*: many CIM macros
+//! holding different layer shards, all busy at once, with the hybrid
+//! weight-/output-stationary dataflow keeping operand movement minimal.
+//! This module is the software equivalent of that regime: a sharded,
+//! batched engine that drives a pool of worker threads over a shared
+//! request queue of inference samples.
+//!
+//! ```text
+//!                        ┌───────────────────────────────┐
+//!   batch of             │            Engine             │
+//!   EventStreams ──────► │  RequestQueue<WorkUnit>       │
+//!   (sample i)           │   │ steal  │ steal  │ steal   │
+//!                        │   ▼        ▼        ▼         │
+//!                        │ worker0  worker1  worker2 …   │
+//!                        │  ├ StepBackend (own instance) │
+//!                        │  ├ SampleBuffers (banks+MS)   │
+//!                        │  └ SamplePlan::run_sample ────┼──► (i, InferenceResult)
+//!                        │        ▲ shared, read-only    │
+//!                        │  SamplePlan                   │
+//!                        │   ├ Network / Mapping         │
+//!                        │   ├ Schedule / energy model   │
+//!                        │   └ ShardLedger               │
+//!                        │      one CimMacro per layer   │
+//!                        │      shard (Mapper spans),    │
+//!                        │      per-op deltas calibrated │
+//!                        │      by running the bit-sim   │
+//!                        └───────────────────────────────┘
+//!                                     │ merge_ordered (sample order)
+//!                                     ▼
+//!                                 RunMetrics
+//! ```
+//!
+//! **One code path.** [`SamplePlan::run_sample`] is the per-sample
+//! pipeline — event encoding, backend stepping, energy pricing, shard
+//! ledger charging. The sequential [`super::Coordinator`] and every engine
+//! worker call exactly this function, and both merge per-sample metrics
+//! with [`merge_ordered`] in submission order, so a 4-worker batch is
+//! bit-identical (spikes, rates, energy, ledger — everything except host
+//! wall-clock) to the sequential run. `rust/tests/integration_engine.rs`
+//! pins that property.
+//!
+//! **`Send` constraints.** The PJRT client behind
+//! [`crate::runtime::ScnnRunner`] is `Rc`-based and not `Send`, so a
+//! backend can never migrate between threads. The engine therefore takes a
+//! *factory* (`Fn() -> Result<Box<dyn StepBackend>> + Send + Sync`) and
+//! each worker constructs its own backend inside its thread — per-worker
+//! runner handles, the same pattern the artifact-gated tests use. The
+//! pure-Rust [`crate::runtime::NativeScnn`] is deterministic from a seed,
+//! which is what makes per-worker instances interchangeable.
+//!
+//! **Shards.** [`ShardLedger::calibrate`] instantiates one
+//! [`CimMacro`](crate::cim::CimMacro) per layer shard from the
+//! [`Mapping::shards`] decomposition, executes one real accumulate and one
+//! fire pass on the bit-level simulator, and caches the per-op
+//! [`EnergyCounters`] deltas (which are pure functions of the macro
+//! configuration). Workers then charge `delta × events` per timestep —
+//! grounded in the simulator without paying bit-sim cost per spike — and
+//! the aggregate lands in [`RunMetrics::cim`].
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::cim::{CimMacro, EnergyCounters, MacroConfig};
+use crate::coordinator::buffers::{BankArray, MergeShiftUnit};
+use crate::coordinator::metrics::{EnergyBreakdown, RunMetrics};
+use crate::coordinator::scheduler::{Schedule, Scheduler};
+use crate::dataflow::{Mapper, Mapping, Operand, Policy, Shard};
+use crate::energy::SystemEnergyModel;
+use crate::events::{encode_frames, EventStream};
+use crate::runtime::{NativeScnn, ScnnRunner, StepBackend};
+use crate::snn::Network;
+use crate::Result;
+
+pub use super::pipeline::InferenceResult;
+
+// ------------------------------------------------------------ shard ledger
+
+/// A layer shard plus its calibrated per-operation counter deltas.
+///
+/// A shard larger than one macro pass runs `full_passes` passes with the
+/// full neuron group plus (when the division has a remainder) one final
+/// pass with only the leftover neurons active — the remainder pass gets
+/// its own calibration so partial passes are not over-charged.
+#[derive(Debug, Clone)]
+pub struct ShardCal {
+    /// The shard this calibration covers.
+    pub shard: Shard,
+    /// Ledger delta of one full-group synaptic accumulate pass.
+    pub accumulate: EnergyCounters,
+    /// Ledger delta of one full-group threshold-compare pass.
+    pub fire: EnergyCounters,
+    /// Passes with the full per-pass neuron group.
+    pub full_passes: u64,
+    /// Ledger delta of the remainder accumulate pass (zero if none).
+    pub accumulate_rem: EnergyCounters,
+    /// Ledger delta of the remainder compare pass (zero if none).
+    pub fire_rem: EnergyCounters,
+}
+
+impl ShardCal {
+    /// Total macro passes to cover the shard's neurons once.
+    pub fn passes(&self) -> u64 {
+        self.full_passes + (self.accumulate_rem.sops > 0) as u64
+    }
+
+    /// Ledger charge for one timestep of this shard seeing `in_events`
+    /// input spikes: `in_events` accumulate passes plus one fire pass per
+    /// pass group.
+    pub fn charge(&self, in_events: u64) -> EnergyCounters {
+        let mut total = self.accumulate.scaled(in_events * self.full_passes);
+        total.merge(&self.accumulate_rem.scaled(in_events));
+        total.merge(&self.fire.scaled(self.full_passes));
+        total.merge(&self.fire_rem);
+        total
+    }
+}
+
+/// Per-layer shard calibrations for a mapped workload.
+#[derive(Debug, Clone, Default)]
+pub struct ShardLedger {
+    /// Outer index: layer; inner: shards of that layer.
+    pub per_layer: Vec<Vec<ShardCal>>,
+}
+
+impl ShardLedger {
+    /// Instantiate one [`CimMacro`] per mapped layer shard and measure its
+    /// per-op ledger deltas on the bit-level simulator.
+    ///
+    /// Accumulate and compare-pass deltas are pure functions of the macro
+    /// configuration (they do not depend on stored data), so a single
+    /// execution calibrates the shard exactly. The conditional
+    /// reset-by-subtraction pass *is* data-dependent; its events are folded
+    /// into the analytic energy model instead of this ledger.
+    pub fn calibrate(net: &Network, mapping: &Mapping, schedule: &Schedule) -> ShardLedger {
+        // Measure one accumulate + one compare pass on a freshly built
+        // macro of `neurons` resident neurons. The scheduler guarantees a
+        // fitting shape (n_c ≤ p_bits, neurons × n_c ≤ cols); fail loudly
+        // rather than silently under-reporting a shard's ledger.
+        let measure = |layer: &crate::snn::LayerSpec,
+                       n_c: u32,
+                       neurons: usize|
+         -> (EnergyCounters, EnergyCounters) {
+            let cfg =
+                MacroConfig::flexspim(layer.res.w_bits, layer.res.p_bits, n_c, 1, neurons);
+            let mut mac = CimMacro::new(cfg).unwrap_or_else(|e| {
+                panic!(
+                    "shard calibration: layer {} shape N_C={n_c} x{neurons} \
+                     rejected by the macro: {e}",
+                    layer.name
+                )
+            });
+            let before = *mac.counters();
+            mac.cim_accumulate(0, None);
+            let accumulate = mac.counters().delta(&before);
+            let before = *mac.counters();
+            let _ = mac.cim_fire(layer.threshold.max(1));
+            let fire = mac.counters().delta(&before);
+            (accumulate, fire)
+        };
+
+        let shards = mapping.shards(net);
+        let per_layer = shards
+            .into_iter()
+            .map(|layer_shards| {
+                layer_shards
+                    .into_iter()
+                    .map(|shard| {
+                        let layer = &net.layers[shard.layer_idx];
+                        let plan = &schedule.layers[shard.layer_idx];
+                        let n_c = plan.n_c.max(1);
+                        // Column budget comes from the macro geometry, not
+                        // a duplicated literal.
+                        let cols = MacroConfig::flexspim(1, 1, 1, 1, 1).cols;
+                        let per_pass = (cols / n_c as usize).max(1).min(shard.neuron_count);
+                        let (accumulate, fire) = measure(layer, n_c, per_pass);
+                        let rem = shard.neuron_count % per_pass;
+                        let (accumulate_rem, fire_rem) = if rem > 0 {
+                            measure(layer, n_c, rem)
+                        } else {
+                            (EnergyCounters::new(), EnergyCounters::new())
+                        };
+                        ShardCal {
+                            shard,
+                            accumulate,
+                            fire,
+                            full_passes: (shard.neuron_count / per_pass) as u64,
+                            accumulate_rem,
+                            fire_rem,
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        ShardLedger { per_layer }
+    }
+
+    /// Total shard count across layers.
+    pub fn shard_count(&self) -> usize {
+        self.per_layer.iter().map(Vec::len).sum()
+    }
+
+    /// Ledger charge for one timestep of `layer_idx` seeing `in_events`
+    /// input spikes: `in_events` accumulate passes plus one fire pass, on
+    /// every pass group of every shard.
+    pub fn charge_layer(&self, layer_idx: usize, in_events: u64) -> EnergyCounters {
+        let mut total = EnergyCounters::new();
+        for cal in &self.per_layer[layer_idx] {
+            total.merge(&cal.charge(in_events));
+        }
+        total
+    }
+}
+
+// ------------------------------------------------------------- sample plan
+
+/// Per-worker mutable buffer models (observability only — the priced
+/// energy comes from the calibrated analytic paths).
+#[derive(Debug, Clone)]
+pub struct SampleBuffers {
+    /// 4×4 × 2 kB SRAM bank array.
+    pub banks: BankArray,
+    /// 32-to-256-bit merge-and-shift unit.
+    pub merge_shift: MergeShiftUnit,
+}
+
+impl Default for SampleBuffers {
+    fn default() -> Self {
+        SampleBuffers { banks: BankArray::flexspim(), merge_shift: MergeShiftUnit::default() }
+    }
+}
+
+/// Everything shared and immutable across samples: the workload, its
+/// mapping, the execution schedule, the energy model, and the calibrated
+/// shard ledger. `Sync`, so one instance serves all workers.
+#[derive(Debug, Clone)]
+pub struct SamplePlan {
+    /// The workload.
+    pub net: Network,
+    /// Dataflow mapping in force.
+    pub mapping: Mapping,
+    /// Per-layer execution schedule.
+    pub schedule: Schedule,
+    /// Calibrated system energy model.
+    pub energy: SystemEnergyModel,
+    /// Per-shard calibrated CIM ledgers.
+    pub shards: ShardLedger,
+    /// Timesteps per inference.
+    pub timesteps: usize,
+}
+
+impl SamplePlan {
+    /// Build the plan for `net` on `num_macros` macros under `policy`.
+    pub fn new(net: Network, num_macros: usize, policy: Policy) -> SamplePlan {
+        let mapping = Mapper::flexspim(num_macros).map(&net, policy);
+        let schedule = Scheduler::default().plan(&net, &mapping);
+        let energy = SystemEnergyModel::flexspim(num_macros);
+        let shards = ShardLedger::calibrate(&net, &mapping, &schedule);
+        let timesteps = net.timesteps;
+        SamplePlan { net, mapping, schedule, energy, shards, timesteps }
+    }
+
+    /// Run one event-stream sample end to end on `backend` — the single
+    /// per-sample code path shared by [`super::Coordinator::run_sample`]
+    /// and every engine worker.
+    pub fn run_sample(
+        &self,
+        backend: &mut dyn StepBackend,
+        bufs: &mut SampleBuffers,
+        stream: &EventStream,
+        label: Option<usize>,
+    ) -> Result<InferenceResult> {
+        let t0 = Instant::now();
+        let frames = encode_frames(stream, self.timesteps);
+        backend.reset();
+
+        let mut rate = vec![0i64; 10];
+        let mut energy = EnergyBreakdown::default();
+        let mut cim = EnergyCounters::new();
+        let mut total_sops = 0u64;
+        let mut modeled_latency = 0.0;
+        let mut sparsity_acc = 0.0;
+
+        for frame in &frames {
+            let in_bits: Vec<i32> = frame.as_input_vector().iter().map(|&b| b as i32).collect();
+            // Buffer traffic: the input frame enters through the
+            // merge-and-shift unit as AER events.
+            let in_count = frame.count() as u64;
+            bufs.merge_shift.transfer(in_count.max(1), 16);
+            bufs.banks.write(in_count * 16);
+
+            let step = backend.step(&in_bits)?;
+            for (acc, s) in rate.iter_mut().zip(&step.out_spikes) {
+                *acc += *s as i64;
+            }
+
+            // Energy from measured per-layer activity: layer l's input
+            // spikes are the previous layer's output count (layer 0 sees
+            // the frame).
+            let mut in_events_n = frame.count() as u64;
+            for (li, (layer, assign)) in self
+                .net
+                .layers
+                .iter()
+                .zip(&self.mapping.assignments)
+                .enumerate()
+            {
+                let in_events = in_events_n as f64;
+                let in_neurons = {
+                    let (c, h, w) = layer.in_shape();
+                    (c * h * w) as f64
+                };
+                let activity = (in_events / in_neurons).min(1.0);
+                let sops = layer.sops_dense() as f64 * activity;
+                total_sops += sops as u64;
+                energy.compute_pj +=
+                    sops * self.energy.sop_pj(layer.res.w_bits, layer.res.p_bits, None);
+                for op in [Operand::Weight, Operand::Vmem] {
+                    let resident = if op == assign.stationarity.stationary_operand() {
+                        assign.stationary_resident
+                    } else {
+                        assign.extra_resident
+                    };
+                    if !resident {
+                        energy.movement_pj += self.energy.streamed_pj(
+                            layer,
+                            op,
+                            sops,
+                            self.energy.cfg.vmem_discipline,
+                        );
+                    }
+                }
+                // Charge the calibrated per-shard CIM ledgers for this
+                // layer-timestep (event-driven: one accumulate pass per
+                // input spike, one fire pass).
+                cim.merge(&self.shards.charge_layer(li, in_events_n));
+
+                let out_events = step.counts[li] as f64;
+                energy.spike_pj += (in_events + out_events)
+                    * self.energy.cfg.spike_addr_bits as f64
+                    * self.energy.cfg.e_gbuf_pj_bit;
+                in_events_n = step.counts[li].max(0) as u64;
+            }
+
+            let frame_activity = frame.count() as f64 / frame.as_input_vector().len() as f64;
+            sparsity_acc += 1.0 - frame_activity;
+            modeled_latency += self.schedule.timestep_latency_s(frame_activity);
+        }
+
+        let prediction = ScnnRunner::predict(&rate);
+        let correct = label.map_or(0, |l| (l == prediction) as u64);
+        let metrics = RunMetrics {
+            samples: 1,
+            correct,
+            timesteps: frames.len() as u64,
+            sops: total_sops,
+            mean_sparsity: sparsity_acc / frames.len() as f64,
+            energy,
+            cim,
+            modeled_latency_s: modeled_latency,
+            wallclock_s: t0.elapsed().as_secs_f64(),
+        };
+        Ok(InferenceResult { prediction, rate, metrics })
+    }
+}
+
+/// Merge per-sample metrics in submission order — deterministic float
+/// accumulation, shared by the sequential and batched paths.
+pub fn merge_ordered(results: &[InferenceResult]) -> RunMetrics {
+    let mut total = RunMetrics::default();
+    for r in results {
+        total.merge(&r.metrics);
+    }
+    total
+}
+
+// ------------------------------------------------------------ work queue
+
+/// A blocking multi-producer multi-consumer request queue: one shared
+/// injector deque that idle workers steal from. Work units are whole
+/// inference samples (coarse enough that per-worker local deques would buy
+/// nothing), so "stealing" degenerates to popping the shared front.
+pub struct RequestQueue<T> {
+    state: Mutex<QueueState<T>>,
+    ready: Condvar,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Default for RequestQueue<T> {
+    fn default() -> Self {
+        RequestQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+}
+
+impl<T> RequestQueue<T> {
+    /// Enqueue a work unit; wakes one idle worker.
+    pub fn push(&self, item: T) {
+        let mut s = self.state.lock().unwrap();
+        assert!(!s.closed, "push after close");
+        s.items.push_back(item);
+        drop(s);
+        self.ready.notify_one();
+    }
+
+    /// Close the queue: workers drain the backlog, then `pop` returns
+    /// `None` instead of blocking.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Drop every queued item (first-error cancellation): in-flight work
+    /// finishes, idle workers see the queue empty and exit.
+    pub fn clear(&self) {
+        self.state.lock().unwrap().items.clear();
+        self.ready.notify_all();
+    }
+
+    /// Steal the next work unit, blocking while the queue is open and
+    /// empty. `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.ready.wait(s).unwrap();
+        }
+    }
+
+    /// Items currently queued (diagnostics).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// True when no items are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ----------------------------------------------------------------- engine
+
+/// Constructor for per-worker backends (built *inside* each worker thread
+/// — see the module docs on `Send` constraints).
+pub type BackendFactory = dyn Fn() -> Result<Box<dyn StepBackend>> + Send + Sync;
+
+/// Result of one batched engine run.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    /// Per-sample results, in submission order.
+    pub results: Vec<InferenceResult>,
+    /// Metrics merged in submission order (identical to the sequential
+    /// path's aggregate).
+    pub metrics: RunMetrics,
+    /// End-to-end host wall-clock of the batch (seconds).
+    pub wallclock_s: f64,
+    /// Worker threads used.
+    pub workers: usize,
+}
+
+impl BatchResult {
+    /// Batch throughput in samples per second of host wall-clock.
+    pub fn samples_per_sec(&self) -> f64 {
+        if self.wallclock_s <= 0.0 {
+            return 0.0;
+        }
+        self.results.len() as f64 / self.wallclock_s
+    }
+}
+
+/// The sharded, batched inference engine.
+pub struct Engine {
+    plan: Arc<SamplePlan>,
+    factory: Arc<BackendFactory>,
+    workers: usize,
+}
+
+impl Engine {
+    /// Build an engine from a shared plan and a backend factory.
+    pub fn new(plan: Arc<SamplePlan>, factory: Arc<BackendFactory>, workers: usize) -> Engine {
+        assert!(workers >= 1, "engine needs at least one worker");
+        Engine { plan, factory, workers: workers.min(256) }
+    }
+
+    /// Convenience: an engine over the pure-Rust [`NativeScnn`] backend,
+    /// deterministic from `seed`.
+    pub fn native(
+        net: Network,
+        seed: u64,
+        num_macros: usize,
+        policy: Policy,
+        workers: usize,
+    ) -> Engine {
+        let plan = Arc::new(SamplePlan::new(net.clone(), num_macros, policy));
+        let factory: Arc<BackendFactory> = Arc::new(move || {
+            Ok(Box::new(NativeScnn::new(net.clone(), seed)) as Box<dyn StepBackend>)
+        });
+        Engine::new(plan, factory, workers)
+    }
+
+    /// The shared per-sample plan.
+    pub fn plan(&self) -> &SamplePlan {
+        &self.plan
+    }
+
+    /// Worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Process a batch of labeled samples across the worker pool.
+    ///
+    /// Every sample is one work unit; results are reassembled and merged in
+    /// submission order regardless of which worker ran them, so the output
+    /// is independent of scheduling (and of `workers`).
+    pub fn run_batch(&self, data: &[(EventStream, usize)]) -> Result<BatchResult> {
+        let t0 = Instant::now();
+        let queue: RequestQueue<usize> = RequestQueue::default();
+        for i in 0..data.len() {
+            queue.push(i);
+        }
+        queue.close();
+
+        let n_workers = self.workers.min(data.len()).max(1);
+        let slots: Mutex<Vec<Option<InferenceResult>>> =
+            Mutex::new((0..data.len()).map(|_| None).collect());
+        let first_error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+        std::thread::scope(|scope| {
+            for _ in 0..n_workers {
+                let queue = &queue;
+                let slots = &slots;
+                let first_error = &first_error;
+                let plan = &self.plan;
+                let factory = &self.factory;
+                scope.spawn(move || {
+                    let make: &BackendFactory = factory.as_ref();
+                    let mut backend = match make() {
+                        Ok(b) => b,
+                        Err(e) => {
+                            let mut fe = first_error.lock().unwrap();
+                            if fe.is_none() {
+                                *fe = Some(e);
+                            }
+                            queue.clear();
+                            return;
+                        }
+                    };
+                    let mut bufs = SampleBuffers::default();
+                    while let Some(i) = queue.pop() {
+                        let (stream, label) = &data[i];
+                        match plan.run_sample(backend.as_mut(), &mut bufs, stream, Some(*label))
+                        {
+                            Ok(r) => slots.lock().unwrap()[i] = Some(r),
+                            Err(e) => {
+                                let mut fe = first_error.lock().unwrap();
+                                if fe.is_none() {
+                                    *fe = Some(e);
+                                }
+                                // Don't burn the rest of the batch: drop
+                                // queued work so siblings exit promptly.
+                                queue.clear();
+                                return;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        if let Some(e) = first_error.into_inner().unwrap() {
+            return Err(e);
+        }
+        let results: Vec<InferenceResult> = slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("no error reported, so every slot must be filled"))
+            .collect();
+        let metrics = merge_ordered(&results);
+        Ok(BatchResult {
+            results,
+            metrics,
+            wallclock_s: t0.elapsed().as_secs_f64(),
+            workers: n_workers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::network::scnn_dvs_gesture;
+    use crate::snn::{LayerSpec, Resolution};
+
+    fn small_net() -> Network {
+        let r = Resolution::new(4, 9);
+        Network::new(
+            "engine-test",
+            vec![
+                LayerSpec::conv("C1", 2, 4, 3, 4, 1, 48, 48, r),
+                LayerSpec::fc("F1", 4 * 12 * 12, 16, r),
+                LayerSpec::fc("F2", 16, 10, Resolution::new(5, 10)),
+            ],
+            4,
+        )
+    }
+
+    #[test]
+    fn request_queue_drains_in_order_then_closes() {
+        let q: RequestQueue<u32> = RequestQueue::default();
+        q.push(1);
+        q.push(2);
+        assert_eq!(q.len(), 2);
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn request_queue_feeds_parallel_consumers() {
+        let q: RequestQueue<usize> = RequestQueue::default();
+        let seen: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    while let Some(v) = q.pop() {
+                        seen.lock().unwrap().push(v);
+                    }
+                });
+            }
+            for i in 0..100 {
+                q.push(i);
+            }
+            q.close();
+        });
+        let mut got = seen.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..100).collect::<Vec<_>>(), "every unit processed once");
+    }
+
+    #[test]
+    fn shard_ledger_calibrates_every_shard() {
+        let net = scnn_dvs_gesture();
+        let mapping = Mapper::flexspim(4).map(&net, Policy::HsOpt);
+        let schedule = Scheduler::default().plan(&net, &mapping);
+        let ledger = ShardLedger::calibrate(&net, &mapping, &schedule);
+        assert_eq!(ledger.per_layer.len(), net.layers.len());
+        assert!(ledger.shard_count() >= net.layers.len());
+        for (li, layer) in ledger.per_layer.iter().enumerate() {
+            for cal in layer {
+                assert!(cal.accumulate.cim_cycles > 0, "layer {li}: accumulate measured");
+                assert!(cal.accumulate.sops > 0);
+                assert!(cal.fire.compare_ops > 0, "layer {li}: fire measured");
+                assert!(cal.passes() >= 1);
+                // Every pass group together covers the shard exactly once:
+                // activity-proportional charging must see every neuron.
+                let sops_per_event = cal.accumulate.sops * cal.full_passes
+                    + cal.accumulate_rem.sops;
+                assert_eq!(
+                    sops_per_event, cal.shard.neuron_count as u64,
+                    "layer {li}: partial passes must not over-charge"
+                );
+            }
+        }
+        // Charging is linear in events and zero only for the fire floor.
+        let one = ledger.charge_layer(0, 1);
+        let ten = ledger.charge_layer(0, 10);
+        assert!(ten.adder_ops > one.adder_ops);
+        let per_event: u64 = ledger.per_layer[0]
+            .iter()
+            .map(|c| c.accumulate.sops * c.full_passes + c.accumulate_rem.sops)
+            .sum();
+        assert_eq!(ten.sops - one.sops, 9 * per_event);
+    }
+
+    #[test]
+    fn engine_batch_is_worker_count_invariant() {
+        use crate::events::{GestureClass, GestureGenerator};
+        use crate::util::rng::Rng;
+        let net = small_net();
+        let gen = GestureGenerator::default_48();
+        let mut rng = Rng::new(17);
+        let data: Vec<(EventStream, usize)> = (0..6)
+            .map(|i| (gen.sample(GestureClass::ALL[i % 10], &mut rng), i % 10))
+            .collect();
+        let run = |workers| {
+            Engine::native(net.clone(), 99, 4, Policy::HsOpt, workers)
+                .run_batch(&data)
+                .unwrap()
+        };
+        let a = run(1);
+        let b = run(3);
+        assert_eq!(a.results.len(), b.results.len());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.prediction, y.prediction);
+            assert_eq!(x.rate, y.rate);
+            assert_eq!(x.metrics.sops, y.metrics.sops);
+            assert_eq!(x.metrics.cim, y.metrics.cim);
+        }
+        assert_eq!(a.metrics.samples, 6);
+        assert_eq!(a.metrics.cim, b.metrics.cim);
+        assert_eq!(a.metrics.energy.total_pj(), b.metrics.energy.total_pj());
+    }
+
+    #[test]
+    fn engine_surfaces_factory_errors() {
+        let net = small_net();
+        let plan = Arc::new(SamplePlan::new(net, 2, Policy::HsOpt));
+        let factory: Arc<BackendFactory> =
+            Arc::new(|| Err(anyhow::anyhow!("backend construction refused")));
+        let engine = Engine::new(plan, factory, 2);
+        let gen = crate::events::GestureGenerator::default_48();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let data = vec![(gen.sample(crate::events::GestureClass::HandClap, &mut rng), 0)];
+        let err = engine.run_batch(&data).unwrap_err();
+        assert!(format!("{err}").contains("refused"));
+    }
+}

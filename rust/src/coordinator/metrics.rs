@@ -1,5 +1,6 @@
 //! Run-level metrics aggregation and reporting.
 
+use crate::cim::EnergyCounters;
 use crate::util::si;
 
 /// Energy breakdown of a run (picojoules).
@@ -45,6 +46,9 @@ pub struct RunMetrics {
     pub mean_sparsity: f64,
     /// Modeled energy.
     pub energy: EnergyBreakdown,
+    /// Aggregated CIM macro event ledger across all layer shards (charged
+    /// per timestep from the engine's shard-calibrated per-op deltas).
+    pub cim: EnergyCounters,
     /// Modeled accelerator latency (seconds, summed).
     pub modeled_latency_s: f64,
     /// Host wall-clock (seconds, summed) — the simulator's own speed.
@@ -90,6 +94,7 @@ impl RunMetrics {
         self.timesteps += other.timesteps;
         self.sops += other.sops;
         self.energy.add(&other.energy);
+        self.cim.merge(&other.cim);
         self.modeled_latency_s += other.modeled_latency_s;
         self.wallclock_s += other.wallclock_s;
     }
@@ -109,6 +114,14 @@ impl RunMetrics {
             100.0 * self.energy.movement_pj / self.energy.total_pj().max(1e-12),
         ));
         s.push_str(&format!("energy/SOP         {:.2} pJ\n", self.pj_per_sop()));
+        if self.cim.cim_cycles > 0 {
+            s.push_str(&format!(
+                "CIM ledger         {} row-cycles, {} adder ops, {} SOPs\n",
+                si(self.cim.cim_cycles as f64),
+                si(self.cim.adder_ops as f64),
+                si(self.cim.sops as f64),
+            ));
+        }
         s.push_str(&format!("energy/inference   {:.2} µJ\n", self.uj_per_inference()));
         s.push_str(&format!(
             "modeled latency    {}s/timestep\n",

@@ -11,15 +11,21 @@
 //! * [`scheduler`] — per-timestep, per-layer execution plan from a
 //!   dataflow [`crate::dataflow::Mapping`]: cycles, macro passes, traffic.
 //! * [`metrics`] — run-level aggregation and reporting.
-//! * [`pipeline`] — the end-to-end inference driver
-//!   ([`pipeline::Coordinator`]).
+//! * [`engine`] — the sharded, batched parallel inference engine
+//!   ([`engine::Engine`]) and the shared per-sample code path
+//!   ([`engine::SamplePlan`]).
+//! * [`pipeline`] — the sequential end-to-end inference driver
+//!   ([`pipeline::Coordinator`]), a single-backend view of the engine's
+//!   per-sample path.
 
 pub mod buffers;
+pub mod engine;
 pub mod metrics;
 pub mod pipeline;
 pub mod scheduler;
 
 pub use buffers::{BankArray, MergeShiftUnit};
+pub use engine::{BatchResult, Engine, SampleBuffers, SamplePlan, ShardLedger};
 pub use metrics::{EnergyBreakdown, RunMetrics};
 pub use pipeline::{Coordinator, InferenceResult};
 pub use scheduler::{LayerPlan, Schedule, Scheduler};

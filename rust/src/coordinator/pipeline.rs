@@ -1,24 +1,27 @@
 //! End-to-end inference coordinator.
 //!
 //! The Fig. 5a control plane as one object: events → per-timestep spike
-//! buffer → PJRT-executed network step → prediction, with energy priced
-//! from *measured* per-layer spike counts (not dense estimates), latency
-//! from the macro timing model, and buffer traffic through the
-//! merge-and-shift unit. The hot loop is pure Rust + the compiled XLA
-//! executable.
+//! buffer → network step on a [`StepBackend`] (PJRT-compiled graph or the
+//! pure-Rust interpreter) → prediction, with energy priced from *measured*
+//! per-layer spike counts (not dense estimates), latency from the macro
+//! timing model, buffer traffic through the merge-and-shift unit, and the
+//! per-shard CIM event ledger charged from bit-sim-calibrated deltas.
+//!
+//! The per-sample execution itself lives in
+//! [`super::engine::SamplePlan::run_sample`]; the coordinator is the
+//! sequential, single-backend view of the same code path the parallel
+//! [`super::engine::Engine`] drives from its worker pool.
 
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use super::buffers::{BankArray, MergeShiftUnit};
-use super::metrics::{EnergyBreakdown, RunMetrics};
-use super::scheduler::{Schedule, Scheduler};
-use crate::dataflow::{Mapper, Mapping, Operand, Policy};
-use crate::energy::SystemEnergyModel;
-use crate::events::{encode_frames, EventStream};
-use crate::runtime::{Runtime, ScnnRunner};
+use super::engine::{merge_ordered, SampleBuffers, SamplePlan};
+use super::metrics::RunMetrics;
+use crate::dataflow::{Mapping, Policy};
+use crate::events::EventStream;
+use crate::runtime::{Runtime, ScnnRunner, StepBackend};
 use crate::snn::Network;
 
 /// Result of one sample inference.
@@ -34,17 +37,9 @@ pub struct InferenceResult {
 
 /// The end-to-end coordinator.
 pub struct Coordinator {
-    runner: ScnnRunner,
-    net: Network,
-    mapping: Mapping,
-    schedule: Schedule,
-    energy: SystemEnergyModel,
-    /// Buffer models (observability; energy uses the calibrated paths).
-    pub banks: BankArray,
-    /// Merge-and-shift unit model.
-    pub merge_shift: MergeShiftUnit,
-    /// Timesteps per inference.
-    pub timesteps: usize,
+    backend: Box<dyn StepBackend>,
+    plan: SamplePlan,
+    bufs: SampleBuffers,
 }
 
 impl Coordinator {
@@ -55,143 +50,88 @@ impl Coordinator {
         Self::with_runner(runner, num_macros, Policy::HsOpt)
     }
 
-    /// Build with an explicit runner and policy (testing / ablations).
+    /// Build with an explicit PJRT runner and policy (testing / ablations).
     pub fn with_runner(runner: ScnnRunner, num_macros: usize, policy: Policy) -> Result<Self> {
-        let net = runner.network().clone();
-        let mapping = Mapper::flexspim(num_macros).map(&net, policy);
-        let schedule = Scheduler::default().plan(&net, &mapping);
-        let energy = SystemEnergyModel::flexspim(num_macros);
-        let timesteps = net.timesteps;
-        Ok(Coordinator {
-            runner,
-            net,
-            mapping,
-            schedule,
-            energy,
-            banks: BankArray::flexspim(),
-            merge_shift: MergeShiftUnit::default(),
-            timesteps,
-        })
+        Self::with_backend(Box::new(runner), num_macros, policy)
+    }
+
+    /// Build over any execution backend (PJRT or the pure-Rust
+    /// [`crate::runtime::NativeScnn`]).
+    pub fn with_backend(
+        backend: Box<dyn StepBackend>,
+        num_macros: usize,
+        policy: Policy,
+    ) -> Result<Self> {
+        let net = backend.network().clone();
+        let plan = SamplePlan::new(net, num_macros, policy);
+        Ok(Coordinator { backend, plan, bufs: SampleBuffers::default() })
+    }
+
+    /// Timesteps per inference (fixed by the workload's plan).
+    pub fn timesteps(&self) -> usize {
+        self.plan.timesteps
     }
 
     /// The dataflow mapping in force.
     pub fn mapping(&self) -> &Mapping {
-        &self.mapping
+        &self.plan.mapping
     }
 
     /// The workload.
     pub fn network(&self) -> &Network {
-        &self.net
+        &self.plan.net
+    }
+
+    /// The shared per-sample plan (what the parallel engine distributes).
+    pub fn plan(&self) -> &SamplePlan {
+        &self.plan
+    }
+
+    /// Buffer-model observability: the SRAM bank array.
+    pub fn banks(&self) -> &BankArray {
+        &self.bufs.banks
+    }
+
+    /// Buffer-model observability: the merge-and-shift unit.
+    pub fn merge_shift(&self) -> &MergeShiftUnit {
+        &self.bufs.merge_shift
     }
 
     /// Requantize at explicit per-layer resolutions (Fig. 6 sweeps).
     pub fn set_resolutions(&mut self, res: &[(u32, u32)]) {
-        self.runner.set_resolutions(res);
+        self.backend.set_resolutions(res);
     }
 
-    /// Run one event-stream sample end to end.
+    /// Run one event-stream sample end to end — the same code path the
+    /// engine workers execute ([`SamplePlan::run_sample`]).
     pub fn run_sample(&mut self, stream: &EventStream, label: Option<usize>) -> Result<InferenceResult> {
-        let t0 = Instant::now();
-        let frames = encode_frames(stream, self.timesteps);
-        self.runner.reset();
-
-        let mut rate = vec![0i64; 10];
-        let mut energy = EnergyBreakdown::default();
-        let mut total_sops = 0u64;
-        let mut modeled_latency = 0.0;
-        let mut sparsity_acc = 0.0;
-
-        for frame in &frames {
-            let in_bits: Vec<i32> = frame.as_input_vector().iter().map(|&b| b as i32).collect();
-            // Buffer traffic: the input frame enters through the
-            // merge-and-shift unit as 1-bit operands.
-            let in_count = frame.count() as u64;
-            self.merge_shift.transfer(in_count.max(1), 16); // AER events
-            self.banks.write(in_count * 16);
-
-            let step = self.runner.step(&in_bits)?;
-            for (acc, s) in rate.iter_mut().zip(&step.out_spikes) {
-                *acc += *s as i64;
-            }
-
-            // Energy from measured per-layer activity: layer l's input
-            // spikes are the previous layer's output count (layer 0 sees
-            // the frame).
-            let mut in_events = frame.count() as f64;
-            for (li, (layer, assign)) in self
-                .net
-                .layers
-                .iter()
-                .zip(&self.mapping.assignments)
-                .enumerate()
-            {
-                let in_neurons = {
-                    let (c, h, w) = layer.in_shape();
-                    (c * h * w) as f64
-                };
-                let activity = (in_events / in_neurons).min(1.0);
-                let sops = layer.sops_dense() as f64 * activity;
-                total_sops += sops as u64;
-                energy.compute_pj +=
-                    sops * self.energy.sop_pj(layer.res.w_bits, layer.res.p_bits, None);
-                for op in [Operand::Weight, Operand::Vmem] {
-                    let resident = if op == assign.stationarity.stationary_operand() {
-                        assign.stationary_resident
-                    } else {
-                        assign.extra_resident
-                    };
-                    if !resident {
-                        energy.movement_pj += self.energy.streamed_pj(
-                            layer,
-                            op,
-                            sops,
-                            self.energy.cfg.vmem_discipline,
-                        );
-                    }
-                }
-                let out_events = step.counts[li] as f64;
-                energy.spike_pj += (in_events + out_events)
-                    * self.energy.cfg.spike_addr_bits as f64
-                    * self.energy.cfg.e_gbuf_pj_bit;
-                in_events = out_events;
-            }
-
-            let frame_activity = frame.count() as f64 / frame.as_input_vector().len() as f64;
-            sparsity_acc += 1.0 - frame_activity;
-            modeled_latency += self.schedule.timestep_latency_s(frame_activity);
-        }
-
-        let prediction = ScnnRunner::predict(&rate);
-        let correct = label.map_or(0, |l| (l == prediction) as u64);
-        let metrics = RunMetrics {
-            samples: 1,
-            correct,
-            timesteps: frames.len() as u64,
-            sops: total_sops,
-            mean_sparsity: sparsity_acc / frames.len() as f64,
-            energy,
-            modeled_latency_s: modeled_latency,
-            wallclock_s: t0.elapsed().as_secs_f64(),
-        };
-        Ok(InferenceResult { prediction, rate, metrics })
+        self.plan
+            .run_sample(self.backend.as_mut(), &mut self.bufs, stream, label)
     }
 
-    /// Run a labeled dataset; returns aggregated metrics.
+    /// Run a labeled dataset sequentially; returns metrics merged in
+    /// submission order — the same merge the batched engine applies, so
+    /// sequential and parallel aggregates are identical.
     pub fn run_dataset(&mut self, data: &[(EventStream, usize)]) -> Result<RunMetrics> {
-        let mut total = RunMetrics::default();
+        let mut results = Vec::with_capacity(data.len());
         for (stream, label) in data {
-            let r = self.run_sample(stream, Some(*label))?;
-            total.merge(&r.metrics);
+            results.push(self.run_sample(stream, Some(*label))?);
         }
-        Ok(total)
+        Ok(merge_ordered(&results))
     }
 }
 
 #[cfg(test)]
 mod tests {
     // Pipeline tests that need the PJRT runtime + artifacts live in
-    // rust/tests/integration_runtime.rs; here we only test the pure parts.
+    // rust/tests/integration_runtime.rs; the engine-vs-sequential
+    // equivalence lives in rust/tests/integration_engine.rs. Here we test
+    // the pure parts.
     use super::*;
+    use crate::events::encode_frames;
+    use crate::runtime::NativeScnn;
+    use crate::snn::network::scnn_dvs_gesture;
+    use crate::snn::{LayerSpec, Resolution};
     use crate::util::rng::Rng;
 
     #[test]
@@ -215,5 +155,41 @@ mod tests {
             ms.transfer(f.count() as u64, 16);
         }
         assert!(ms.beats > 0 && ms.payload_bits > 0);
+    }
+
+    #[test]
+    fn coordinator_runs_on_native_backend() {
+        // The coordinator no longer needs artifacts: the pure-Rust backend
+        // exercises the full control plane (energy, latency, CIM ledger).
+        let r = Resolution::new(4, 9);
+        let net = Network::new(
+            "native-pipe",
+            vec![
+                LayerSpec::conv("C1", 2, 4, 3, 4, 1, 48, 48, r),
+                LayerSpec::fc("F1", 4 * 12 * 12, 10, r),
+            ],
+            4,
+        );
+        let backend = Box::new(NativeScnn::new(net, 5));
+        let mut coord = Coordinator::with_backend(backend, 2, Policy::HsOpt).unwrap();
+        assert_eq!(coord.network().layers.len(), 2);
+        assert_eq!(coord.mapping().assignments.len(), 2);
+        let gen = crate::events::GestureGenerator::default_48();
+        let mut rng = Rng::new(2);
+        let s = gen.sample(crate::events::GestureClass::ArmRoll, &mut rng);
+        let r = coord.run_sample(&s, Some(7)).unwrap();
+        assert!(r.prediction < 10);
+        assert_eq!(r.metrics.timesteps, 4);
+        assert!(r.metrics.sops > 0);
+        assert!(r.metrics.energy.total_pj() > 0.0);
+        assert!(r.metrics.cim.cim_cycles > 0, "shard ledger charged");
+        assert!(coord.merge_shift().beats > 0, "buffer models observed traffic");
+    }
+
+    #[test]
+    fn plan_exposes_shard_topology() {
+        let plan = SamplePlan::new(scnn_dvs_gesture(), 4, Policy::HsOpt);
+        assert_eq!(plan.shards.per_layer.len(), 9);
+        assert!(plan.shards.shard_count() >= 9);
     }
 }

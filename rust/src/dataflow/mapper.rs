@@ -80,8 +80,29 @@ pub struct Mapping {
     pub assignments: Vec<LayerAssignment>,
     /// Total CIM capacity in bits.
     pub capacity_bits: u64,
+    /// Capacity of one macro in bits (drives span→shard conversion).
+    pub macro_capacity_bits: u64,
     /// Bits actually resident.
     pub used_bits: u64,
+}
+
+/// One layer shard: a contiguous slice of a layer's output neurons placed
+/// on one macro. The parallel engine instantiates one
+/// [`crate::cim::CimMacro`] per shard; shards of the same layer sit on
+/// *different* macros running concurrently, so the engine's ledger sums
+/// their events (each macro burns its own row-cycles). Splitting a layer
+/// into column groups *within* one macro is the separate lockstep model of
+/// [`crate::cim::ShardedMacro`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// Index into `network.layers`.
+    pub layer_idx: usize,
+    /// Macro hosting the shard.
+    pub macro_index: usize,
+    /// First neuron (global index within the layer).
+    pub neuron_start: usize,
+    /// Number of neurons in the shard.
+    pub neuron_count: usize,
 }
 
 impl Mapping {
@@ -103,6 +124,70 @@ impl Mapping {
     /// Number of layers whose nominal stationary operand is resident.
     pub fn layers_with_stationarity(&self) -> usize {
         self.assignments.iter().filter(|a| a.stationary_resident).count()
+    }
+
+    /// Number of macros in the budget that produced this mapping.
+    pub fn num_macros(&self) -> usize {
+        (self.capacity_bits / self.macro_capacity_bits.max(1)).max(1) as usize
+    }
+
+    /// Per-layer shard decomposition for the parallel engine.
+    ///
+    /// Resident layers are split across the macros their spans occupy,
+    /// with neurons apportioned to each macro proportionally to its bit
+    /// span (floor shares, leftover neurons handed out one each in span
+    /// order, zero-neuron spans dropped).
+    /// Streamed layers — nothing resident — still need a compute home, so
+    /// they get a single shard round-robined over the macro array.
+    pub fn shards(&self, net: &Network) -> Vec<Vec<Shard>> {
+        let macros = self.num_macros();
+        self.assignments
+            .iter()
+            .map(|a| {
+                let layer_idx = a.layer_idx;
+                let neurons = net.layers[layer_idx].num_neurons();
+                let span_total: u64 = a.spans.iter().map(|&(_, b)| b).sum();
+                if span_total == 0 || a.spans.is_empty() {
+                    return vec![Shard {
+                        layer_idx,
+                        macro_index: layer_idx % macros,
+                        neuron_start: 0,
+                        neuron_count: neurons,
+                    }];
+                }
+                // Proportional floor split, then hand out the remainder in
+                // span order so counts always sum to `neurons`.
+                let mut counts: Vec<usize> = a
+                    .spans
+                    .iter()
+                    .map(|&(_, b)| ((neurons as u128 * b as u128) / span_total as u128) as usize)
+                    .collect();
+                let mut rem = neurons - counts.iter().sum::<usize>();
+                for c in counts.iter_mut() {
+                    if rem == 0 {
+                        break;
+                    }
+                    *c += 1;
+                    rem -= 1;
+                }
+                let mut out = Vec::with_capacity(a.spans.len());
+                let mut start = 0usize;
+                for (&(macro_index, _), &count) in a.spans.iter().zip(&counts) {
+                    if count == 0 {
+                        continue;
+                    }
+                    out.push(Shard {
+                        layer_idx,
+                        macro_index,
+                        neuron_start: start,
+                        neuron_count: count,
+                    });
+                    start += count;
+                }
+                debug_assert_eq!(start, neurons, "shards must cover the layer");
+                out
+            })
+            .collect()
     }
 
     /// Render a Fig. 4(b)-style table.
@@ -234,7 +319,13 @@ impl Mapper {
                 spans,
             });
         }
-        Mapping { policy, assignments, capacity_bits: cap, used_bits: used }
+        Mapping {
+            policy,
+            assignments,
+            capacity_bits: cap,
+            macro_capacity_bits: self.macro_capacity_bits,
+            used_bits: used,
+        }
     }
 }
 
@@ -564,6 +655,54 @@ mod tests {
         let m = Mapper::flexspim(1).map(&net, Policy::HsOpt);
         assert!(m.used_bits <= m.capacity_bits);
         assert!(m.avoided_traffic_bits(&net) > 0);
+    }
+
+    #[test]
+    fn shards_cover_every_layer_exactly_once() {
+        let net = scnn_dvs_gesture();
+        for macros in [1usize, 2, 4, 16] {
+            let m = Mapper::flexspim(macros).map(&net, Policy::HsOpt);
+            assert_eq!(m.num_macros(), macros);
+            let shards = m.shards(&net);
+            assert_eq!(shards.len(), net.layers.len());
+            for (li, (layer_shards, layer)) in shards.iter().zip(&net.layers).enumerate() {
+                assert!(!layer_shards.is_empty(), "layer {li} must have a shard");
+                let mut next = 0usize;
+                for s in layer_shards {
+                    assert_eq!(s.layer_idx, li);
+                    assert!(s.macro_index < macros, "macro index in range");
+                    assert_eq!(s.neuron_start, next, "shards contiguous");
+                    assert!(s.neuron_count > 0);
+                    next += s.neuron_count;
+                }
+                assert_eq!(next, layer.num_neurons(), "layer {li} fully covered");
+            }
+        }
+    }
+
+    #[test]
+    fn shards_follow_spans_proportionally() {
+        // A resident layer split across two macros must shard its neurons
+        // roughly proportionally to the per-macro bit spans.
+        let net = scnn_dvs_gesture();
+        let m = Mapper::flexspim(2).map(&net, Policy::HsMin);
+        let shards = m.shards(&net);
+        for (a, layer_shards) in m.assignments.iter().zip(&shards) {
+            if a.spans.len() < 2 || layer_shards.len() != a.spans.len() {
+                continue;
+            }
+            let neurons = net.layers[a.layer_idx].num_neurons() as f64;
+            let bits: u64 = a.spans.iter().map(|&(_, b)| b).sum();
+            for (&(_, span_bits), s) in a.spans.iter().zip(layer_shards) {
+                let expect = neurons * span_bits as f64 / bits as f64;
+                assert!(
+                    (s.neuron_count as f64 - expect).abs() <= 1.0 + neurons * 0.01,
+                    "layer {} shard {} neurons vs expected {expect:.1}",
+                    a.layer_idx,
+                    s.neuron_count
+                );
+            }
+        }
     }
 
     #[test]

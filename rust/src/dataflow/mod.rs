@@ -12,6 +12,6 @@ pub mod mapper;
 pub mod policy;
 pub mod stationarity;
 
-pub use mapper::{LayerAssignment, Mapper, Mapping};
+pub use mapper::{LayerAssignment, Mapper, Mapping, Shard};
 pub use policy::Policy;
 pub use stationarity::{Operand, Stationarity};

@@ -1,0 +1,54 @@
+//! The network-execution backend abstraction.
+//!
+//! The coordinator and the parallel engine drive one inference timestep at
+//! a time through [`StepBackend`], so the same control plane, energy
+//! accounting, and metrics code serves two engines:
+//!
+//! * [`super::scnn::ScnnRunner`] — the AOT-compiled HLO executed under
+//!   PJRT (needs artifacts + the native XLA runtime). The PJRT client is
+//!   `Rc`-based and **not `Send`**, so a runner can never migrate between
+//!   threads: each engine worker must construct its own backend via a
+//!   factory, inside the worker thread.
+//! * [`super::native::NativeScnn`] — a pure-Rust bit-exact interpreter
+//!   over the golden LIF/conv models. `Send`, artifact-free, and
+//!   deterministic from a seed; the engine's offline reference.
+
+use crate::snn::Network;
+use crate::Result;
+
+pub use super::scnn::StepResult;
+
+/// One-timestep network execution engine with persistent membrane state.
+pub trait StepBackend {
+    /// The workload this backend executes.
+    fn network(&self) -> &Network;
+
+    /// Zero all membrane potentials (start of a new inference).
+    fn reset(&mut self);
+
+    /// Execute one timestep on a flattened binary input frame
+    /// (channel-major `[c · h · w]`, 0/1 values).
+    fn step(&mut self, frame: &[i32]) -> Result<StepResult>;
+
+    /// Requantize at explicit per-layer `(w_bits, p_bits)` resolutions and
+    /// reset state.
+    fn set_resolutions(&mut self, res: &[(u32, u32)]);
+}
+
+impl StepBackend for super::scnn::ScnnRunner {
+    fn network(&self) -> &Network {
+        super::scnn::ScnnRunner::network(self)
+    }
+
+    fn reset(&mut self) {
+        super::scnn::ScnnRunner::reset(self)
+    }
+
+    fn step(&mut self, frame: &[i32]) -> Result<StepResult> {
+        super::scnn::ScnnRunner::step(self, frame)
+    }
+
+    fn set_resolutions(&mut self, res: &[(u32, u32)]) {
+        super::scnn::ScnnRunner::set_resolutions(self, res)
+    }
+}

@@ -6,6 +6,10 @@
 //! xla_extension 0.5.1 rejects, while the text parser reassigns ids
 //! (see /opt/xla-example/README.md and DESIGN.md).
 //!
+//! * [`backend`] — the [`StepBackend`] trait the coordinator and the
+//!   parallel engine execute against (PJRT or pure Rust).
+//! * [`native`] — artifact-free, `Send`, deterministic pure-Rust backend
+//!   over the golden LIF/conv models.
 //! * [`client`] — thin wrapper over `xla::PjRtClient` + compiled
 //!   executables with typed int32/f32 literal helpers.
 //! * [`weights`] — reader for `artifacts/weights.bin` (float32 weights)
@@ -15,12 +19,16 @@
 //! * [`trainer`] — typed wrapper around `train_step.hlo.txt` for the
 //!   end-to-end Rust-driven training example.
 
+pub mod backend;
 pub mod client;
+pub mod native;
 pub mod scnn;
 pub mod trainer;
 pub mod weights;
 
+pub use backend::{StepBackend, StepResult};
 pub use client::{Executable, Runtime};
+pub use native::NativeScnn;
 pub use scnn::ScnnRunner;
 pub use trainer::TrainRunner;
 pub use weights::{LayerWeights, WeightFile};

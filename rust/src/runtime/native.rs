@@ -1,0 +1,234 @@
+//! Pure-Rust network backend: the golden LIF/conv models as an execution
+//! engine.
+//!
+//! [`NativeScnn`] interprets any [`Network`] with the bit-exact integer IF
+//! semantics of [`crate::snn::lif::LifLayer`] and
+//! [`crate::snn::conv::ConvLifLayer`] — the same semantics the CIM macro
+//! simulator and the Pallas kernels are pinned to. Weights are generated
+//! deterministically from a seed (per-layer forked RNG streams), so two
+//! instances built from the same `(network, seed)` pair behave identically
+//! on any thread. That property is what lets the parallel engine hand each
+//! worker its own backend and still produce byte-identical results to the
+//! sequential path (asserted by `rust/tests/integration_engine.rs`).
+//!
+//! Unlike the PJRT runner this backend is `Send`, needs no artifacts, and
+//! runs everywhere — it is the engine's throughput substrate and the
+//! fallback when the XLA runtime is not vendored.
+
+use crate::snn::conv::ConvLifLayer;
+use crate::snn::lif::LifLayer;
+use crate::snn::quant::{max_val, min_val};
+use crate::snn::{LayerKind, Network, Resolution};
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::backend::{StepBackend, StepResult};
+
+enum NativeLayer {
+    Conv(ConvLifLayer),
+    Fc(LifLayer),
+}
+
+impl NativeLayer {
+    fn step(&mut self, spikes: &[bool]) -> Vec<bool> {
+        match self {
+            NativeLayer::Conv(l) => l.step(spikes),
+            NativeLayer::Fc(l) => l.step(spikes),
+        }
+    }
+
+    fn reset(&mut self) {
+        match self {
+            NativeLayer::Conv(l) => l.v.iter_mut().for_each(|v| *v = 0),
+            NativeLayer::Fc(l) => l.v.iter_mut().for_each(|v| *v = 0),
+        }
+    }
+}
+
+/// Deterministic pure-Rust SCNN execution engine.
+pub struct NativeScnn {
+    net: Network,
+    seed: u64,
+    layers: Vec<NativeLayer>,
+}
+
+impl NativeScnn {
+    /// Build an interpreter for `net` with seed-derived quantized weights.
+    pub fn new(net: Network, seed: u64) -> NativeScnn {
+        let layers = Self::build_layers(&net, seed);
+        NativeScnn { net, seed, layers }
+    }
+
+    fn build_layers(net: &Network, seed: u64) -> Vec<NativeLayer> {
+        let mut root = Rng::new(seed ^ 0x5EED_CE11_F1E2_D3C4);
+        net.layers
+            .iter()
+            .map(|spec| {
+                // One forked stream per layer: a layer's weights do not
+                // depend on how many layers precede it being regenerated.
+                let mut rng = root.fork();
+                // Excitation-biased weight range and a fan-in-scaled
+                // threshold keep random-weight spike rates in a useful band
+                // (a dead or saturated network would make the engine's
+                // throughput and determinism tests vacuous). The spec's
+                // default threshold targets trained weight distributions.
+                let hi = max_val(spec.res.w_bits);
+                let lo = (-hi / 3).min(-1).max(min_val(spec.res.w_bits));
+                let fan_in = spec.fan_in() as i64;
+                let theta = (fan_in * (hi / 4).max(1) / 2)
+                    .clamp(1, max_val(spec.res.p_bits).max(1));
+                match spec.kind {
+                    LayerKind::Conv { .. } => {
+                        let weights: Vec<i64> = (0..spec.num_weights())
+                            .map(|_| rng.range_i64(lo, hi))
+                            .collect();
+                        NativeLayer::Conv(ConvLifLayer::new(spec.clone(), weights, theta))
+                    }
+                    LayerKind::Fc { in_dim, out_dim } => {
+                        let weights: Vec<Vec<i64>> = (0..out_dim)
+                            .map(|_| (0..in_dim).map(|_| rng.range_i64(lo, hi)).collect())
+                            .collect();
+                        NativeLayer::Fc(LifLayer::new(weights, spec.res, theta))
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// The seed the weights were derived from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+impl StepBackend for NativeScnn {
+    fn network(&self) -> &Network {
+        &self.net
+    }
+
+    fn reset(&mut self) {
+        for l in &mut self.layers {
+            l.reset();
+        }
+    }
+
+    fn step(&mut self, frame: &[i32]) -> Result<StepResult> {
+        let (c, h, w) = self.net.layers[0].in_shape();
+        anyhow::ensure!(
+            frame.len() == c * h * w,
+            "frame has {} inputs, layer 0 expects {}",
+            frame.len(),
+            c * h * w
+        );
+        let mut spikes: Vec<bool> = frame.iter().map(|&b| b != 0).collect();
+        let mut counts = Vec::with_capacity(self.layers.len());
+        for layer in &mut self.layers {
+            spikes = layer.step(&spikes);
+            counts.push(spikes.iter().filter(|&&s| s).count() as i32);
+        }
+        let out_spikes: Vec<i32> = spikes.iter().map(|&s| s as i32).collect();
+        Ok(StepResult { out_spikes, counts })
+    }
+
+    fn set_resolutions(&mut self, res: &[(u32, u32)]) {
+        let resolutions: Vec<Resolution> =
+            res.iter().map(|&(w, p)| Resolution::new(w, p)).collect();
+        self.net = self.net.with_resolutions(&resolutions);
+        self.layers = Self::build_layers(&self.net, self.seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{encode_frames, GestureClass, GestureGenerator};
+    use crate::snn::LayerSpec;
+
+    fn tiny_net() -> Network {
+        let r = Resolution::new(4, 9);
+        Network::new(
+            "tiny",
+            vec![
+                LayerSpec::conv("C1", 2, 4, 3, 4, 1, 48, 48, r),
+                LayerSpec::fc("F1", 4 * 12 * 12, 16, r),
+                LayerSpec::fc("F2", 16, 10, Resolution::new(5, 10)),
+            ],
+            4,
+        )
+    }
+
+    fn frames_for(net: &Network, seed: u64) -> Vec<Vec<i32>> {
+        let gen = GestureGenerator::default_48();
+        let mut rng = Rng::new(seed);
+        let stream = gen.sample(GestureClass::HandClap, &mut rng);
+        encode_frames(&stream, net.timesteps)
+            .iter()
+            .map(|f| f.as_input_vector().iter().map(|&b| b as i32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let net = tiny_net();
+        let frames = frames_for(&net, 3);
+        let mut a = NativeScnn::new(net.clone(), 42);
+        let mut b = NativeScnn::new(net, 42);
+        for f in &frames {
+            let ra = a.step(f).unwrap();
+            let rb = b.step(f).unwrap();
+            assert_eq!(ra.out_spikes, rb.out_spikes);
+            assert_eq!(ra.counts, rb.counts);
+        }
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let net = tiny_net();
+        let frames = frames_for(&net, 5);
+        let mut m = NativeScnn::new(net, 7);
+        let first: Vec<StepResult> =
+            frames.iter().map(|f| m.step(f).unwrap()).collect();
+        m.reset();
+        for (i, f) in frames.iter().enumerate() {
+            let r = m.step(f).unwrap();
+            assert_eq!(r.out_spikes, first[i].out_spikes, "step {i}");
+            assert_eq!(r.counts, first[i].counts, "step {i}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let net = tiny_net();
+        let frames = frames_for(&net, 9);
+        let mut a = NativeScnn::new(net.clone(), 1);
+        let mut b = NativeScnn::new(net, 2);
+        let ca: Vec<i32> = frames.iter().flat_map(|f| a.step(f).unwrap().counts).collect();
+        let cb: Vec<i32> = frames.iter().flat_map(|f| b.step(f).unwrap().counts).collect();
+        assert_ne!(ca, cb, "weight streams must differ across seeds");
+    }
+
+    #[test]
+    fn resolution_rebuild_is_deterministic() {
+        let net = tiny_net();
+        let frames = frames_for(&net, 11);
+        let res = vec![(3u32, 8u32); 3];
+        let mut a = NativeScnn::new(net.clone(), 4);
+        a.set_resolutions(&res);
+        let mut b = NativeScnn::new(net.with_resolutions(&[Resolution::new(3, 8); 3]), 4);
+        for f in &frames {
+            assert_eq!(a.step(f).unwrap().counts, b.step(f).unwrap().counts);
+        }
+    }
+
+    #[test]
+    fn frame_size_checked() {
+        let mut m = NativeScnn::new(tiny_net(), 1);
+        assert!(m.step(&[0i32; 7]).is_err());
+    }
+
+    #[test]
+    fn backend_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<NativeScnn>();
+    }
+}

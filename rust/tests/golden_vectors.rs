@@ -4,7 +4,8 @@
 //!
 //! Vectors are exported by `python -m compile.aot` into
 //! `artifacts/golden/`; tests skip (with a notice) if artifacts are not
-//! built so `cargo test` works on a fresh checkout.
+//! built so `cargo test` works on a fresh checkout. Malformed golden files
+//! fail with a descriptive token-level error, never a bare `unwrap` panic.
 
 use flexspim::cim::{CimMacro, MacroConfig};
 use flexspim::runtime::artifacts_dir;
@@ -22,22 +23,80 @@ struct FcCase {
     vmem_expect: Vec<i64>,
 }
 
-fn parse_cases(text: &str) -> Vec<FcCase> {
-    let mut tokens = text.split_whitespace().map(|t| t.parse::<i64>().unwrap());
-    let mut next = || tokens.next().expect("truncated golden file");
-    let n_cases = next() as usize;
+/// Whitespace-token reader that reports *where* and *why* a golden file is
+/// malformed instead of unwrapping.
+struct TokenReader<'a> {
+    tokens: std::str::SplitWhitespace<'a>,
+    consumed: usize,
+}
+
+impl<'a> TokenReader<'a> {
+    fn new(text: &'a str) -> Self {
+        TokenReader { tokens: text.split_whitespace(), consumed: 0 }
+    }
+
+    fn next_i64(&mut self, what: &str) -> Result<i64, String> {
+        let tok = self.tokens.next().ok_or_else(|| {
+            format!(
+                "truncated golden file: expected {what} after {} tokens",
+                self.consumed
+            )
+        })?;
+        self.consumed += 1;
+        tok.parse::<i64>().map_err(|e| {
+            format!(
+                "malformed golden file at token {} ({what}): {tok:?} is not an integer ({e})",
+                self.consumed
+            )
+        })
+    }
+
+    fn next_usize(&mut self, what: &str) -> Result<usize, String> {
+        let v = self.next_i64(what)?;
+        usize::try_from(v).map_err(|_| {
+            format!(
+                "malformed golden file at token {} ({what}): {v} is not a valid count",
+                self.consumed
+            )
+        })
+    }
+}
+
+fn parse_cases(text: &str) -> Result<Vec<FcCase>, String> {
+    let mut r = TokenReader::new(text);
+    let n_cases = r.next_usize("case count")?;
+    if n_cases > 10_000 {
+        return Err(format!("implausible case count {n_cases}"));
+    }
     let mut cases = Vec::with_capacity(n_cases);
-    for _ in 0..n_cases {
-        let (w_bits, p_bits, theta) = (next() as u32, next() as u32, next());
-        let out_dim = next() as usize;
-        let in_dim = next() as usize;
+    for ci in 0..n_cases {
+        let w_bits = r.next_i64("w_bits")? as u32;
+        let p_bits = r.next_i64("p_bits")? as u32;
+        let theta = r.next_i64("theta")?;
+        let out_dim = r.next_usize("out_dim")?;
+        let in_dim = r.next_usize("in_dim")?;
+        if !(1..=64).contains(&w_bits) || !(1..=64).contains(&p_bits) {
+            return Err(format!(
+                "case {ci}: resolution {w_bits}b/{p_bits}b outside supported 1..=64"
+            ));
+        }
+        if out_dim == 0 || in_dim == 0 || out_dim > 4096 || in_dim > 4096 {
+            return Err(format!("case {ci}: implausible dims {out_dim}x{in_dim}"));
+        }
         let weights: Vec<Vec<i64>> = (0..out_dim)
-            .map(|_| (0..in_dim).map(|_| next()).collect())
-            .collect();
-        let spikes: Vec<bool> = (0..in_dim).map(|_| next() != 0).collect();
-        let vmem_in: Vec<i64> = (0..out_dim).map(|_| next()).collect();
-        let spk_expect: Vec<bool> = (0..out_dim).map(|_| next() != 0).collect();
-        let vmem_expect: Vec<i64> = (0..out_dim).map(|_| next()).collect();
+            .map(|_| (0..in_dim).map(|_| r.next_i64("weight")).collect())
+            .collect::<Result<_, _>>()?;
+        let spikes: Vec<bool> = (0..in_dim)
+            .map(|_| r.next_i64("spike").map(|v| v != 0))
+            .collect::<Result<_, _>>()?;
+        let vmem_in: Vec<i64> =
+            (0..out_dim).map(|_| r.next_i64("vmem_in")).collect::<Result<_, _>>()?;
+        let spk_expect: Vec<bool> = (0..out_dim)
+            .map(|_| r.next_i64("expected spike").map(|v| v != 0))
+            .collect::<Result<_, _>>()?;
+        let vmem_expect: Vec<i64> = (0..out_dim)
+            .map(|_| r.next_i64("expected vmem"))
+            .collect::<Result<_, _>>()?;
         cases.push(FcCase {
             w_bits,
             p_bits,
@@ -49,7 +108,7 @@ fn parse_cases(text: &str) -> Vec<FcCase> {
             vmem_expect,
         });
     }
-    cases
+    Ok(cases)
 }
 
 fn load_cases() -> Option<Vec<FcCase>> {
@@ -58,7 +117,12 @@ fn load_cases() -> Option<Vec<FcCase>> {
         eprintln!("skipping golden tests: {} missing (run make artifacts)", path.display());
         return None;
     }
-    Some(parse_cases(&std::fs::read_to_string(path).unwrap()))
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: unreadable golden file: {e}", path.display()));
+    match parse_cases(&text) {
+        Ok(cases) => Some(cases),
+        Err(msg) => panic!("{}: {msg}", path.display()),
+    }
 }
 
 #[test]
@@ -117,14 +181,56 @@ fn quantize_check_cross_validates() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let text = std::fs::read_to_string(path).unwrap();
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: unreadable golden file: {e}", path.display()));
     let mut lines = text.lines();
-    let n: usize = lines.next().unwrap().trim().parse().unwrap();
+    let header = lines
+        .next()
+        .unwrap_or_else(|| panic!("{}: empty golden file", path.display()));
+    let n: usize = header.trim().parse().unwrap_or_else(|e| {
+        panic!("{}: bad layer count {header:?}: {e}", path.display())
+    });
     assert_eq!(n, 9);
-    for line in lines {
-        let v: Vec<i64> = line.split_whitespace().map(|t| t.parse().unwrap()).collect();
+    for (li, line) in lines.enumerate() {
+        let v: Vec<i64> = line
+            .split_whitespace()
+            .map(|t| {
+                t.parse().unwrap_or_else(|e| {
+                    panic!("{}: layer {li}: bad token {t:?}: {e}", path.display())
+                })
+            })
+            .collect();
+        assert!(
+            v.len() >= 7,
+            "{}: layer {li}: expected 7 fields, got {}",
+            path.display(),
+            v.len()
+        );
         assert_eq!(v[0], 2 * v[1]);
         assert!(v[2] >= 1 && v[2] < v[1]);
         assert!(v[5] <= v[6], "min <= max");
     }
+}
+
+#[test]
+fn parse_cases_reports_descriptive_errors() {
+    // Truncation names the missing field and position.
+    let err = parse_cases("1 4 8 10 2").unwrap_err();
+    assert!(err.contains("truncated") && err.contains("in_dim"), "{err}");
+    // Non-integer tokens name the offending token.
+    let err = parse_cases("1 4 8 banana 2 2").unwrap_err();
+    assert!(err.contains("banana"), "{err}");
+    // Implausible headers are rejected before allocating.
+    let err = parse_cases("1 99 8 10 2 2").unwrap_err();
+    assert!(err.contains("resolution"), "{err}");
+    let err = parse_cases("-3").unwrap_err();
+    assert!(err.contains("count"), "{err}");
+    // A well-formed single case parses.
+    let ok = parse_cases(
+        "1  4 8 3  2 2  1 -1  2 -2  1 0  5 6  1 0  2 6",
+    )
+    .unwrap();
+    assert_eq!(ok.len(), 1);
+    assert_eq!(ok[0].weights, vec![vec![1, -1], vec![2, -2]]);
+    assert_eq!(ok[0].spikes, vec![true, false]);
 }

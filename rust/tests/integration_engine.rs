@@ -1,0 +1,170 @@
+//! Deterministic engine integration: a batch of synthetic gesture streams
+//! through the 4-worker parallel engine must produce byte-identical
+//! spikes, rates, and metrics to the sequential `Coordinator` run with the
+//! same seeds. Runs everywhere — the pure-Rust `NativeScnn` backend needs
+//! no artifacts and no PJRT.
+//!
+//! "Byte-identical" covers everything the model computes: predictions,
+//! rate vectors, SOP counts, the full energy breakdown (exact f64
+//! equality — both paths execute the same float operations in the same
+//! order), and the per-shard CIM event ledger. Host wall-clock is the one
+//! field that legitimately differs.
+
+use flexspim::coordinator::{Coordinator, Engine, InferenceResult, RunMetrics};
+use flexspim::dataflow::Policy;
+use flexspim::events::{EventStream, GestureClass, GestureGenerator};
+use flexspim::runtime::NativeScnn;
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::util::rng::Rng;
+
+const SEED: u64 = 0xC0FFEE;
+const MACROS: usize = 4;
+
+/// A compact SCNN over the 48×48 gesture substrate: conv → conv → fc →
+/// fc(10), small enough that debug-mode test runs stay fast while every
+/// layer kind and the full metrics path is exercised.
+fn test_net() -> Network {
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "engine-itest",
+        vec![
+            LayerSpec::conv("C1", 2, 4, 3, 4, 1, 48, 48, r),
+            LayerSpec::conv("C2", 4, 8, 3, 2, 1, 12, 12, Resolution::new(5, 10)),
+            LayerSpec::fc("F1", 8 * 6 * 6, 32, r),
+            LayerSpec::fc("F2", 32, 10, Resolution::new(5, 10)),
+        ],
+        4,
+    )
+}
+
+fn batch(n: usize, stream_seed: u64) -> Vec<(EventStream, usize)> {
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(stream_seed);
+    (0..n)
+        .map(|i| {
+            let label = i % 10;
+            (gen.sample(GestureClass::from_label(label), &mut rng), label)
+        })
+        .collect()
+}
+
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, ctx: &str) {
+    assert_eq!(a.samples, b.samples, "{ctx}: samples");
+    assert_eq!(a.correct, b.correct, "{ctx}: correct");
+    assert_eq!(a.timesteps, b.timesteps, "{ctx}: timesteps");
+    assert_eq!(a.sops, b.sops, "{ctx}: sops");
+    assert_eq!(a.mean_sparsity, b.mean_sparsity, "{ctx}: mean_sparsity");
+    assert_eq!(a.energy.compute_pj, b.energy.compute_pj, "{ctx}: compute_pj");
+    assert_eq!(a.energy.movement_pj, b.energy.movement_pj, "{ctx}: movement_pj");
+    assert_eq!(a.energy.spike_pj, b.energy.spike_pj, "{ctx}: spike_pj");
+    assert_eq!(a.energy.load_pj, b.energy.load_pj, "{ctx}: load_pj");
+    assert_eq!(a.cim, b.cim, "{ctx}: CIM ledger");
+    assert_eq!(a.modeled_latency_s, b.modeled_latency_s, "{ctx}: modeled latency");
+    // wallclock_s is host timing and legitimately differs.
+}
+
+fn assert_results_identical(a: &InferenceResult, b: &InferenceResult, ctx: &str) {
+    assert_eq!(a.prediction, b.prediction, "{ctx}: prediction");
+    assert_eq!(a.rate, b.rate, "{ctx}: rate");
+    assert_metrics_identical(&a.metrics, &b.metrics, ctx);
+}
+
+#[test]
+fn four_worker_engine_matches_sequential_coordinator() {
+    let net = test_net();
+    let data = batch(8, 21);
+
+    // Sequential reference: the Coordinator over its own backend instance.
+    let backend = Box::new(NativeScnn::new(net.clone(), SEED));
+    let mut coord = Coordinator::with_backend(backend, MACROS, Policy::HsOpt).unwrap();
+    let seq: Vec<InferenceResult> = data
+        .iter()
+        .map(|(s, l)| coord.run_sample(s, Some(*l)).unwrap())
+        .collect();
+
+    // Batched: 4 workers, each constructing its own backend from the seed.
+    let engine = Engine::native(net, SEED, MACROS, Policy::HsOpt, 4);
+    let parallel = engine.run_batch(&data).unwrap();
+    assert_eq!(parallel.workers, 4);
+    assert_eq!(parallel.results.len(), seq.len());
+
+    for (i, (s, p)) in seq.iter().zip(&parallel.results).enumerate() {
+        assert_results_identical(s, p, &format!("sample {i}"));
+    }
+
+    // Aggregates merge in submission order on both paths.
+    let mut seq_total = RunMetrics::default();
+    for r in &seq {
+        seq_total.merge(&r.metrics);
+    }
+    assert_metrics_identical(&seq_total, &parallel.metrics, "batch aggregate");
+    assert!(parallel.metrics.sops > 0, "batch did real work");
+    assert!(parallel.metrics.cim.cim_cycles > 0, "shard ledgers charged");
+}
+
+#[test]
+fn run_dataset_delegates_to_the_same_merge() {
+    let net = test_net();
+    let data = batch(5, 33);
+    let mut coord = Coordinator::with_backend(
+        Box::new(NativeScnn::new(net.clone(), SEED)),
+        MACROS,
+        Policy::HsOpt,
+    )
+    .unwrap();
+    let seq_metrics = coord.run_dataset(&data).unwrap();
+    let batch_metrics = Engine::native(net, SEED, MACROS, Policy::HsOpt, 4)
+        .run_batch(&data)
+        .unwrap()
+        .metrics;
+    assert_metrics_identical(&seq_metrics, &batch_metrics, "run_dataset vs engine");
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let net = test_net();
+    let data = batch(6, 55);
+    let runs: Vec<_> = [1usize, 2, 8]
+        .iter()
+        .map(|&w| {
+            Engine::native(net.clone(), SEED, MACROS, Policy::HsOpt, w)
+                .run_batch(&data)
+                .unwrap()
+        })
+        .collect();
+    for r in &runs[1..] {
+        for (i, (a, b)) in runs[0].results.iter().zip(&r.results).enumerate() {
+            assert_results_identical(a, b, &format!("workers={} sample {i}", r.workers));
+        }
+        assert_metrics_identical(&runs[0].metrics, &r.metrics, "aggregate across pools");
+    }
+}
+
+#[test]
+fn policies_change_energy_but_not_spikes() {
+    // The dataflow policy moves energy between compute/movement buckets;
+    // it must never perturb the computed spikes.
+    let net = test_net();
+    let data = batch(3, 77);
+    let run = |policy| {
+        Engine::native(net.clone(), SEED, 2, policy, 2)
+            .run_batch(&data)
+            .unwrap()
+    };
+    let ws = run(Policy::WsOnly);
+    let hs = run(Policy::HsOpt);
+    for (a, b) in ws.results.iter().zip(&hs.results) {
+        assert_eq!(a.rate, b.rate, "spikes are policy-invariant");
+    }
+    assert!(ws.metrics.energy.total_pj() > 0.0);
+    assert!(hs.metrics.energy.total_pj() > 0.0);
+    // HS-opt's search space contains every WS-only configuration, so its
+    // avoided operand traffic dominates (the Fig. 4b objective).
+    let net = test_net();
+    let ws_plan = flexspim::coordinator::SamplePlan::new(net.clone(), 2, Policy::WsOnly);
+    let hs_plan = flexspim::coordinator::SamplePlan::new(net.clone(), 2, Policy::HsOpt);
+    assert!(
+        hs_plan.mapping.avoided_traffic_bits(&net) >= ws_plan.mapping.avoided_traffic_bits(&net),
+        "HS-opt must avoid at least as much traffic as WS-only"
+    );
+}

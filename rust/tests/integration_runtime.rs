@@ -34,9 +34,14 @@ fn scnn_step_matches_python_golden_trace() {
         return;
     }
     let dir = artifacts_dir();
-    let trace = std::fs::read_to_string(dir.join("golden/scnn_trace.txt")).unwrap();
-    let mut tok = trace.split_whitespace().map(|t| t.parse::<i64>().unwrap());
-    let mut next = || tok.next().expect("truncated trace");
+    let tpath = dir.join("golden/scnn_trace.txt");
+    let trace = std::fs::read_to_string(&tpath)
+        .unwrap_or_else(|e| panic!("{}: unreadable golden trace: {e}", tpath.display()));
+    let mut tok = trace.split_whitespace().map(|t| {
+        t.parse::<i64>()
+            .unwrap_or_else(|e| panic!("{}: bad token {t:?}: {e}", tpath.display()))
+    });
+    let mut next = || tok.next().expect("truncated golden trace (run make artifacts)");
 
     let steps = next() as usize;
     // qparams 9×3 — must equal what the runner derives from weights.bin.

@@ -1,0 +1,223 @@
+//! Property-test net over the CIM bit-level semantics.
+//!
+//! The safety net for the accumulate hot-loop rewrite: for random operand
+//! resolutions (`w_bits`/`p_bits` in 1..=16), random operand shapes
+//! (`N_C`), random macro geometries, and random spike/mask patterns, the
+//! bit-level macro simulator must agree with a naive `i64` MAC +
+//! integrate-and-fire oracle — values, spikes, and masking semantics.
+
+use flexspim::cim::{CimMacro, MacroConfig};
+use flexspim::snn::quant::{max_val, min_val, wrap};
+use flexspim::util::proptest_lite::{check, prop_eq, Config};
+
+/// Naive integer oracle of one macro: plain wrapped MAC + threshold.
+struct Oracle {
+    w: Vec<Vec<i64>>,
+    v: Vec<i64>,
+    p_bits: u32,
+}
+
+impl Oracle {
+    fn accumulate(&mut self, synapse: usize, mask: Option<&[bool]>) {
+        for n in 0..self.v.len() {
+            if mask.map_or(true, |m| m[n]) {
+                self.v[n] = wrap(self.v[n] + self.w[n][synapse], self.p_bits);
+            }
+        }
+    }
+
+    fn fire(&mut self, threshold: i64) -> Vec<bool> {
+        let t = wrap(threshold, self.p_bits);
+        self.v
+            .iter_mut()
+            .map(|v| {
+                if *v >= t {
+                    *v = wrap(*v - t, self.p_bits);
+                    true
+                } else {
+                    false
+                }
+            })
+            .collect()
+    }
+
+    fn timestep(&mut self, spikes: &[bool], threshold: i64) -> Vec<bool> {
+        for (j, &s) in spikes.iter().enumerate() {
+            if s {
+                self.accumulate(j, None);
+            }
+        }
+        self.fire(threshold)
+    }
+}
+
+/// Draw a random macro + matching oracle with loaded weights and state.
+fn random_pair(
+    c: &mut flexspim::util::proptest_lite::Case,
+) -> Option<(CimMacro, Oracle, MacroConfig)> {
+    let w_bits = c.rng.range_i64(1, 16) as u32;
+    let p_bits = c.rng.range_i64(1, 16) as u32;
+    let n_c = c.rng.range_i64(1, p_bits as i64) as u32;
+    let neurons = c.rng.range_usize(1, 8);
+    let fan_in = c.rng.range_usize(1, 6);
+    let cfg = MacroConfig::flexspim(w_bits, p_bits, n_c, fan_in, neurons);
+    if cfg.validate().is_err() {
+        return None;
+    }
+    let mut mac = CimMacro::new(cfg).unwrap();
+    let mut w = vec![vec![0i64; fan_in]; neurons];
+    let mut v = vec![0i64; neurons];
+    for n in 0..neurons {
+        for (j, slot) in w[n].iter_mut().enumerate() {
+            *slot = c.rng.range_i64(min_val(w_bits), max_val(w_bits));
+            mac.load_weight(n, j, *slot);
+        }
+        v[n] = c.rng.range_i64(min_val(p_bits), max_val(p_bits));
+        mac.load_vmem(n, v[n]);
+    }
+    Some((mac, Oracle { w, v, p_bits }, cfg))
+}
+
+#[test]
+fn prop_timestep_equals_mac_if_oracle() {
+    check(
+        "cim-timestep-vs-oracle",
+        &Config { cases: 150, ..Default::default() },
+        |c| {
+            let Some((mut mac, mut oracle, cfg)) = random_pair(c) else {
+                return Ok(());
+            };
+            for t in 0..3 {
+                let spikes: Vec<bool> =
+                    (0..cfg.fan_in).map(|_| c.rng.chance(0.5)).collect();
+                let theta = c.rng.range_i64(1, max_val(cfg.p_bits).max(1));
+                let got = mac.timestep(&spikes, theta);
+                let expect = oracle.timestep(&spikes, theta);
+                prop_eq(
+                    got,
+                    expect,
+                    &format!(
+                        "t={t} spikes (w={} p={} n_c={} fan_in={})",
+                        cfg.w_bits, cfg.p_bits, cfg.n_c, cfg.fan_in
+                    ),
+                )?;
+                for n in 0..cfg.neurons {
+                    prop_eq(
+                        mac.peek_vmem(n),
+                        oracle.v[n],
+                        &format!("t={t} vmem neuron {n} (w={} p={})", cfg.w_bits, cfg.p_bits),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_masked_accumulate_equals_oracle() {
+    check(
+        "cim-masked-accumulate-vs-oracle",
+        &Config { cases: 120, ..Default::default() },
+        |c| {
+            let Some((mut mac, mut oracle, cfg)) = random_pair(c) else {
+                return Ok(());
+            };
+            for _ in 0..5 {
+                let j = c.rng.range_usize(0, cfg.fan_in - 1);
+                let mask: Option<Vec<bool>> = if c.rng.chance(0.5) {
+                    Some((0..cfg.neurons).map(|_| c.rng.chance(0.5)).collect())
+                } else {
+                    None
+                };
+                mac.cim_accumulate(j, mask.as_deref());
+                oracle.accumulate(j, mask.as_deref());
+            }
+            for n in 0..cfg.neurons {
+                prop_eq(
+                    mac.peek_vmem(n),
+                    oracle.v[n],
+                    &format!(
+                        "vmem neuron {n} (w={} p={} n_c={})",
+                        cfg.w_bits, cfg.p_bits, cfg.n_c
+                    ),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fire_thresholds_match_oracle_including_negative() {
+    // Negative and extreme thresholds exercise the signed MSB-first
+    // comparator paths; the oracle compares against the wrapped threshold,
+    // exactly as the broadcast threshold bits do in silicon.
+    check(
+        "cim-fire-vs-oracle",
+        &Config { cases: 120, ..Default::default() },
+        |c| {
+            let Some((mut mac, mut oracle, cfg)) = random_pair(c) else {
+                return Ok(());
+            };
+            for _ in 0..3 {
+                let theta = c.rng.range_i64(min_val(cfg.p_bits), max_val(cfg.p_bits));
+                let got = mac.cim_fire(theta);
+                let expect = oracle.fire(theta);
+                prop_eq(got, expect, &format!("theta={theta} p={}", cfg.p_bits))?;
+                for n in 0..cfg.neurons {
+                    prop_eq(
+                        mac.peek_vmem(n),
+                        oracle.v[n],
+                        &format!("post-fire vmem {n} theta={theta} p={}", cfg.p_bits),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_counters_are_data_independent_for_accumulate() {
+    // The engine's shard calibration relies on accumulate (and the fire
+    // compare pass) having data-independent ledgers: same config + same
+    // mask, different stored values, identical counter deltas.
+    check(
+        "cim-accumulate-ledger-config-pure",
+        &Config { cases: 80, ..Default::default() },
+        |c| {
+            let w_bits = c.rng.range_i64(1, 12) as u32;
+            let p_bits = c.rng.range_i64(1, 16) as u32;
+            let n_c = c.rng.range_i64(1, p_bits as i64) as u32;
+            let neurons = c.rng.range_usize(1, 6);
+            let cfg = MacroConfig::flexspim(w_bits, p_bits, n_c, 2, neurons);
+            if cfg.validate().is_err() {
+                return Ok(());
+            }
+            let mask: Option<Vec<bool>> = if c.rng.chance(0.5) {
+                Some((0..neurons).map(|_| c.rng.chance(0.5)).collect())
+            } else {
+                None
+            };
+            let mut deltas = Vec::new();
+            for _ in 0..2 {
+                let mut mac = CimMacro::new(cfg).unwrap();
+                for n in 0..neurons {
+                    for j in 0..2 {
+                        mac.load_weight(n, j, c.rng.range_i64(min_val(w_bits), max_val(w_bits)));
+                    }
+                    mac.load_vmem(n, c.rng.range_i64(min_val(p_bits), max_val(p_bits)));
+                }
+                let before = *mac.counters();
+                mac.cim_accumulate(0, mask.as_deref());
+                deltas.push(mac.counters().delta(&before));
+            }
+            prop_eq(
+                deltas[0],
+                deltas[1],
+                &format!("accumulate ledger (w={w_bits} p={p_bits} n_c={n_c})"),
+            )
+        },
+    );
+}

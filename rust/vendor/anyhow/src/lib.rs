@@ -1,0 +1,192 @@
+//! Minimal, API-compatible shim for the subset of [`anyhow`] that flexspim
+//! uses: `Error`, `Result`, the `Context` extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The real crate is not vendored in the offline build environment; this
+//! shim keeps the exact call sites compiling unchanged so the full crate
+//! can be dropped back in without touching application code. Like the real
+//! `anyhow::Error`, this `Error` deliberately does **not** implement
+//! `std::error::Error` — that is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// An error with a human-readable message and a chain of context frames
+/// (outermost context first, root cause last).
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    /// Push an outer context frame (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause (innermost frame).
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // The whole chain, outermost first. (The real anyhow shows only the
+        // outermost frame here; joining keeps nested context intact when an
+        // `Error` is itself re-wrapped through the Display-based shim path.)
+        write!(f, "{}", self.frames.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.frames.split_first() {
+            None => write!(f, "Error"),
+            Some((first, rest)) => {
+                write!(f, "{first}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for frame in rest {
+                        write!(f, "\n    {frame}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible values.
+pub trait Context<T> {
+    /// Wrap the error with an outer context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any error
+/// value — mirrors `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error — mirrors `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds — mirrors
+/// `anyhow::ensure!`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn from_std_error_and_question_mark() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("missing thing"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening weights").unwrap_err();
+        assert_eq!(format!("{e}"), "opening weights: missing thing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("opening weights") && dbg.contains("missing thing"));
+        assert_eq!(e.root_cause(), "missing thing");
+    }
+
+    #[test]
+    fn with_context_and_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "slot 3");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(format!("{}", f(12).unwrap_err()).contains("12"));
+        assert!(format!("{}", f(3).unwrap_err()).contains("right out"));
+        let from_string = anyhow!(String::from("owned message"));
+        assert_eq!(format!("{from_string}"), "owned message");
+    }
+}

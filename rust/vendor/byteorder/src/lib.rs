@@ -1,0 +1,120 @@
+//! Minimal, API-compatible shim for the subset of [`byteorder`] that
+//! flexspim uses: `LittleEndian`, `BigEndian`, and the `ReadBytesExt`
+//! methods `read_i32`, `read_u32`, `read_f32`, and `read_f32_into`.
+
+use std::io;
+
+/// Byte-order conversion for fixed-width reads.
+pub trait ByteOrder {
+    /// Decode an `i32` from 4 bytes.
+    fn read_i32(buf: [u8; 4]) -> i32;
+    /// Decode a `u32` from 4 bytes.
+    fn read_u32(buf: [u8; 4]) -> u32;
+    /// Decode an `f32` from 4 bytes.
+    fn read_f32(buf: [u8; 4]) -> f32;
+}
+
+/// Little-endian byte order.
+pub enum LittleEndian {}
+
+/// Big-endian byte order.
+pub enum BigEndian {}
+
+impl ByteOrder for LittleEndian {
+    fn read_i32(buf: [u8; 4]) -> i32 {
+        i32::from_le_bytes(buf)
+    }
+    fn read_u32(buf: [u8; 4]) -> u32 {
+        u32::from_le_bytes(buf)
+    }
+    fn read_f32(buf: [u8; 4]) -> f32 {
+        f32::from_le_bytes(buf)
+    }
+}
+
+impl ByteOrder for BigEndian {
+    fn read_i32(buf: [u8; 4]) -> i32 {
+        i32::from_be_bytes(buf)
+    }
+    fn read_u32(buf: [u8; 4]) -> u32 {
+        u32::from_be_bytes(buf)
+    }
+    fn read_f32(buf: [u8; 4]) -> f32 {
+        f32::from_be_bytes(buf)
+    }
+}
+
+/// Extension methods for reading numbers from any `io::Read`.
+pub trait ReadBytesExt: io::Read {
+    /// Read a 4-byte signed integer.
+    fn read_i32<B: ByteOrder>(&mut self) -> io::Result<i32> {
+        let mut buf = [0u8; 4];
+        self.read_exact(&mut buf)?;
+        Ok(B::read_i32(buf))
+    }
+
+    /// Read a 4-byte unsigned integer.
+    fn read_u32<B: ByteOrder>(&mut self) -> io::Result<u32> {
+        let mut buf = [0u8; 4];
+        self.read_exact(&mut buf)?;
+        Ok(B::read_u32(buf))
+    }
+
+    /// Read a 4-byte float.
+    fn read_f32<B: ByteOrder>(&mut self) -> io::Result<f32> {
+        let mut buf = [0u8; 4];
+        self.read_exact(&mut buf)?;
+        Ok(B::read_f32(buf))
+    }
+
+    /// Fill `dst` with 4-byte floats.
+    fn read_f32_into<B: ByteOrder>(&mut self, dst: &mut [f32]) -> io::Result<()> {
+        // One bulk read, then decode in place: weights files hold millions
+        // of floats and per-element syscalls would dominate.
+        let mut raw = vec![0u8; dst.len() * 4];
+        self.read_exact(&mut raw)?;
+        for (d, chunk) in dst.iter_mut().zip(raw.chunks_exact(4)) {
+            *d = B::read_f32([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
+    }
+}
+
+impl<R: io::Read + ?Sized> ReadBytesExt for R {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn little_endian_reads() {
+        let bytes: Vec<u8> = vec![0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x80, 0x3F];
+        let mut cur = &bytes[..];
+        assert_eq!(cur.read_i32::<LittleEndian>().unwrap(), 1);
+        assert_eq!(cur.read_f32::<LittleEndian>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn f32_into_bulk() {
+        let mut bytes = Vec::new();
+        for v in [1.5f32, -2.25, 0.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut dst = [0f32; 3];
+        (&bytes[..]).read_f32_into::<LittleEndian>(&mut dst).unwrap();
+        assert_eq!(dst, [1.5, -2.25, 0.0]);
+    }
+
+    #[test]
+    fn short_read_errors() {
+        let bytes = [0u8; 2];
+        assert!((&bytes[..]).read_i32::<LittleEndian>().is_err());
+    }
+
+    #[test]
+    fn big_endian_reads() {
+        let bytes: Vec<u8> = vec![0x00, 0x00, 0x00, 0x02];
+        let mut cur = &bytes[..];
+        assert_eq!(cur.read_i32::<BigEndian>().unwrap(), 2);
+    }
+}
