@@ -8,20 +8,24 @@
 //! worker-count invariance while measuring.
 //!
 //! ```sh
-//! cargo bench --bench engine_throughput
+//! cargo bench --bench engine_throughput          # full run
+//! BENCH_QUICK=1 cargo bench --bench engine_throughput   # CI smoke
 //! ```
+//!
+//! Besides the human-readable table, one `BENCH_JSON {...}` line per
+//! worker count is emitted (samples/sec keyed by worker count) so the
+//! bench trajectory can be scraped into `BENCH_*.json` across PRs.
 
 use flexspim::coordinator::Engine;
 use flexspim::dataflow::Policy;
 use flexspim::events::{EventStream, GestureClass, GestureGenerator};
 use flexspim::snn::network::scnn_dvs_gesture;
 use flexspim::snn::{LayerSpec, Network, Resolution};
-use flexspim::util::bench::{fmt_time, section};
+use flexspim::util::bench::{emit_json, fmt_time, quick_mode, section};
 use flexspim::util::rng::Rng;
 
 const SEED: u64 = 42;
 const MACROS: usize = 16;
-const BATCH: usize = 16;
 
 fn gesture_batch(n: usize) -> Vec<(EventStream, usize)> {
     let gen = GestureGenerator::default_48();
@@ -69,13 +73,16 @@ fn throughput(net: &Network, data: &[(EventStream, usize)], workers: usize, reps
 }
 
 fn main() {
-    section("engine throughput — 16-sample synthetic gesture batch");
+    let quick = quick_mode();
+    let batch = if quick { 8 } else { 16 };
+    let reps = if quick { 1 } else { 3 };
+    section(&format!("engine throughput — {batch}-sample synthetic gesture batch"));
     let net = bench_net();
-    let data = gesture_batch(BATCH);
+    let data = gesture_batch(batch);
 
     let mut base = 0.0;
     for &workers in &[1usize, 2, 4, 8] {
-        let sps = throughput(&net, &data, workers, 3);
+        let sps = throughput(&net, &data, workers, reps);
         if workers == 1 {
             base = sps;
         }
@@ -84,9 +91,21 @@ fn main() {
             "{workers} worker(s): {sps:8.2} samples/s  ({:>10}/sample)  speedup {speedup:4.2}x",
             fmt_time(1.0 / sps.max(1e-12)),
         );
+        emit_json(
+            "engine_throughput",
+            &[
+                ("workers", workers as f64),
+                ("batch", batch as f64),
+                ("samples_per_sec", sps),
+                ("speedup", speedup),
+            ],
+        );
     }
     println!("\nacceptance: 4-worker speedup must exceed 1.50x over 1 worker");
 
+    if quick {
+        return;
+    }
     section("reference workload — full SCNN (paper Fig. 4a) on 4 workers");
     let full = scnn_dvs_gesture();
     let small = gesture_batch(4);
@@ -98,6 +117,10 @@ fn main() {
             r.samples_per_sec(),
             r.results.len(),
             r.metrics.sops,
+        );
+        emit_json(
+            "engine_throughput_full_scnn",
+            &[("workers", workers as f64), ("samples_per_sec", r.samples_per_sec())],
         );
     }
 }

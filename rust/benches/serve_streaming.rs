@@ -1,0 +1,97 @@
+//! Streaming serve throughput and latency: hundreds of synthetic gesture
+//! sessions with arrival jitter driven through the serve tier at 1, 2, 4,
+//! and 8 workers.
+//!
+//! Reported per worker count: p50/p95/p99 per-window latency (admission →
+//! completion), sessions/sec, windows/sec, and the shed rate — which must
+//! stay 0 under this nominal load (the acceptance bar). Session results
+//! are additionally cross-checked for worker-count invariance while
+//! measuring: state travels by snapshot, so the pool size must never
+//! change what is computed.
+//!
+//! ```sh
+//! cargo bench --bench serve_streaming          # full run (200 sessions)
+//! BENCH_QUICK=1 cargo bench --bench serve_streaming   # CI smoke (24)
+//! ```
+//!
+//! One `BENCH_JSON {...}` line per worker count is emitted for the
+//! cross-PR bench trajectory (`BENCH_*.json`).
+
+use flexspim::dataflow::Policy;
+use flexspim::serve::{gesture_traffic, ServiceConfig, StreamingService};
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::util::bench::{emit_json, quick_mode, section};
+
+const SEED: u64 = 42;
+const MACROS: usize = 16;
+const JITTER_US: u64 = 8_000;
+
+/// Mid-size SCNN over the 48×48 substrate with 16 timesteps (4 windows of
+/// 4 frames per 100-ms session): heavy enough that window execution
+/// dominates queue orchestration, light enough for quick turnaround.
+fn bench_net() -> Network {
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "serve-bench",
+        vec![
+            LayerSpec::conv("C1", 2, 8, 3, 4, 1, 48, 48, r),
+            LayerSpec::fc("F1", 8 * 12 * 12, 64, r),
+            LayerSpec::fc("F2", 64, 10, Resolution::new(5, 10)),
+        ],
+        16,
+    )
+}
+
+fn main() {
+    let sessions = if quick_mode() { 24 } else { 200 };
+    section(&format!(
+        "serve streaming — {sessions} synthetic gesture sessions, {JITTER_US} us jitter"
+    ));
+    let traffic = gesture_traffic(sessions, 7, JITTER_US);
+
+    let mut reference_sops = 0u64;
+    for &workers in &[1usize, 2, 4, 8] {
+        let svc = StreamingService::native(
+            bench_net(),
+            SEED,
+            MACROS,
+            Policy::HsOpt,
+            ServiceConfig::nominal(workers),
+        );
+        let report = svc.serve(&traffic, 64).expect("serve run");
+        assert_eq!(
+            report.finished_sessions, sessions as u64,
+            "every session must finish"
+        );
+        assert_eq!(report.windows_shed, 0, "nominal load must not shed");
+        if workers == 1 {
+            reference_sops = report.metrics.sops;
+        }
+        assert_eq!(
+            report.metrics.sops, reference_sops,
+            "session results must be worker-count invariant"
+        );
+        println!(
+            "{workers} worker(s): {:7.2} sessions/s  {:8.2} windows/s  {}  shed {:.2} %",
+            report.sessions_per_sec(),
+            report.windows_per_sec(),
+            report.latency.line(),
+            100.0 * report.shed_rate(),
+        );
+        emit_json(
+            "serve_streaming",
+            &[
+                ("workers", workers as f64),
+                ("sessions", sessions as f64),
+                ("sessions_per_sec", report.sessions_per_sec()),
+                ("windows_per_sec", report.windows_per_sec()),
+                ("p50_ms", report.latency.p50() * 1e3),
+                ("p95_ms", report.latency.p95() * 1e3),
+                ("p99_ms", report.latency.p99() * 1e3),
+                ("shed_rate", report.shed_rate()),
+                ("evictions", report.evictions as f64),
+            ],
+        );
+    }
+    println!("\nacceptance: shed rate 0 under nominal load at every pool size");
+}

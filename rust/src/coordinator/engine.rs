@@ -70,7 +70,7 @@ use crate::coordinator::metrics::{EnergyBreakdown, RunMetrics};
 use crate::coordinator::scheduler::{Schedule, Scheduler};
 use crate::dataflow::{Mapper, Mapping, Operand, Policy, Shard};
 use crate::energy::SystemEnergyModel;
-use crate::events::{encode_frames, EventStream};
+use crate::events::{encode_frames, EventStream, SpikeFrame};
 use crate::runtime::{NativeScnn, ScnnRunner, StepBackend};
 use crate::snn::Network;
 use crate::Result;
@@ -263,28 +263,21 @@ impl SamplePlan {
         SamplePlan { net, mapping, schedule, energy, shards, timesteps }
     }
 
-    /// Run one event-stream sample end to end on `backend` — the single
-    /// per-sample code path shared by [`super::Coordinator::run_sample`]
-    /// and every engine worker.
-    pub fn run_sample(
+    /// Run a window of already-encoded frames on `backend` **without
+    /// resetting state**, accumulating classifier spikes into `rate` — the
+    /// inner loop of [`Self::run_sample`], shared with the streaming serve
+    /// tier ([`crate::serve`]), whose micro-windows resume from the
+    /// session's persistent membrane potentials.
+    pub fn run_frames(
         &self,
         backend: &mut dyn StepBackend,
         bufs: &mut SampleBuffers,
-        stream: &EventStream,
-        label: Option<usize>,
-    ) -> Result<InferenceResult> {
-        let t0 = Instant::now();
-        let frames = encode_frames(stream, self.timesteps);
-        backend.reset();
+        frames: &[SpikeFrame],
+        rate: &mut [i64],
+    ) -> Result<WindowTotals> {
+        let mut totals = WindowTotals::default();
 
-        let mut rate = vec![0i64; 10];
-        let mut energy = EnergyBreakdown::default();
-        let mut cim = EnergyCounters::new();
-        let mut total_sops = 0u64;
-        let mut modeled_latency = 0.0;
-        let mut sparsity_acc = 0.0;
-
-        for frame in &frames {
+        for frame in frames {
             let in_bits: Vec<i32> = frame.as_input_vector().iter().map(|&b| b as i32).collect();
             // Buffer traffic: the input frame enters through the
             // merge-and-shift unit as AER events.
@@ -315,8 +308,8 @@ impl SamplePlan {
                 };
                 let activity = (in_events / in_neurons).min(1.0);
                 let sops = layer.sops_dense() as f64 * activity;
-                total_sops += sops as u64;
-                energy.compute_pj +=
+                totals.sops += sops as u64;
+                totals.energy.compute_pj +=
                     sops * self.energy.sop_pj(layer.res.w_bits, layer.res.p_bits, None);
                 for op in [Operand::Weight, Operand::Vmem] {
                     let resident = if op == assign.stationarity.stationary_operand() {
@@ -325,7 +318,7 @@ impl SamplePlan {
                         assign.extra_resident
                     };
                     if !resident {
-                        energy.movement_pj += self.energy.streamed_pj(
+                        totals.energy.movement_pj += self.energy.streamed_pj(
                             layer,
                             op,
                             sops,
@@ -336,34 +329,89 @@ impl SamplePlan {
                 // Charge the calibrated per-shard CIM ledgers for this
                 // layer-timestep (event-driven: one accumulate pass per
                 // input spike, one fire pass).
-                cim.merge(&self.shards.charge_layer(li, in_events_n));
+                totals.cim.merge(&self.shards.charge_layer(li, in_events_n));
 
                 let out_events = step.counts[li] as f64;
-                energy.spike_pj += (in_events + out_events)
+                totals.energy.spike_pj += (in_events + out_events)
                     * self.energy.cfg.spike_addr_bits as f64
                     * self.energy.cfg.e_gbuf_pj_bit;
                 in_events_n = step.counts[li].max(0) as u64;
             }
 
             let frame_activity = frame.count() as f64 / frame.as_input_vector().len() as f64;
-            sparsity_acc += 1.0 - frame_activity;
-            modeled_latency += self.schedule.timestep_latency_s(frame_activity);
+            totals.sparsity_acc += 1.0 - frame_activity;
+            totals.modeled_latency_s += self.schedule.timestep_latency_s(frame_activity);
+            totals.frames += 1;
         }
+
+        Ok(totals)
+    }
+
+    /// Run one event-stream sample end to end on `backend` — the single
+    /// per-sample code path shared by [`super::Coordinator::run_sample`]
+    /// and every engine worker.
+    pub fn run_sample(
+        &self,
+        backend: &mut dyn StepBackend,
+        bufs: &mut SampleBuffers,
+        stream: &EventStream,
+        label: Option<usize>,
+    ) -> Result<InferenceResult> {
+        let t0 = Instant::now();
+        let frames = encode_frames(stream, self.timesteps);
+        backend.reset();
+
+        let mut rate = vec![0i64; 10];
+        let w = self.run_frames(backend, bufs, &frames, &mut rate)?;
 
         let prediction = ScnnRunner::predict(&rate);
         let correct = label.map_or(0, |l| (l == prediction) as u64);
         let metrics = RunMetrics {
             samples: 1,
             correct,
-            timesteps: frames.len() as u64,
-            sops: total_sops,
-            mean_sparsity: sparsity_acc / frames.len() as f64,
-            energy,
-            cim,
-            modeled_latency_s: modeled_latency,
+            timesteps: w.frames,
+            sops: w.sops,
+            mean_sparsity: w.sparsity_acc / w.frames.max(1) as f64,
+            energy: w.energy,
+            cim: w.cim,
+            modeled_latency_s: w.modeled_latency_s,
             wallclock_s: t0.elapsed().as_secs_f64(),
+            ..Default::default()
         };
         Ok(InferenceResult { prediction, rate, metrics })
+    }
+}
+
+/// Totals of one window of frames through [`SamplePlan::run_frames`] —
+/// everything [`RunMetrics`] needs except the per-sample bookkeeping, so
+/// the offline per-sample path and the streaming serve tier assemble their
+/// metrics from the same numbers.
+#[derive(Debug, Clone, Default)]
+pub struct WindowTotals {
+    /// Frames (timesteps) executed.
+    pub frames: u64,
+    /// Synaptic operations executed.
+    pub sops: u64,
+    /// Summed per-frame input sparsity (divide by `frames` for the mean).
+    pub sparsity_acc: f64,
+    /// Modeled energy.
+    pub energy: EnergyBreakdown,
+    /// CIM shard-ledger charges.
+    pub cim: EnergyCounters,
+    /// Modeled accelerator latency (seconds).
+    pub modeled_latency_s: f64,
+}
+
+impl WindowTotals {
+    /// Accumulate another window's totals (window order = frame order, so
+    /// sequential accumulation mirrors the monolithic loop).
+    pub fn add(&mut self, other: &WindowTotals) {
+        self.frames += other.frames;
+        self.sops += other.sops;
+        self.sparsity_acc += other.sparsity_acc;
+        self.energy.add(&other.energy);
+        self.cim.merge(&other.cim);
+        self.modeled_latency_s += other.modeled_latency_s;
     }
 }
 

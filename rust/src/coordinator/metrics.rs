@@ -1,7 +1,9 @@
 //! Run-level metrics aggregation and reporting.
 
 use crate::cim::EnergyCounters;
+use crate::util::bench::fmt_time;
 use crate::util::si;
+use crate::util::stats::percentile;
 
 /// Energy breakdown of a run (picojoules).
 #[derive(Debug, Clone, Copy, Default)]
@@ -53,6 +55,12 @@ pub struct RunMetrics {
     pub modeled_latency_s: f64,
     /// Host wall-clock (seconds, summed) — the simulator's own speed.
     pub wallclock_s: f64,
+    /// Session-state DRAM traffic in bits (vmem spill + refill) charged by
+    /// the serve tier when its residency budget overflows. Zero for
+    /// offline batch runs, whose state never leaves the array.
+    pub state_spill_bits: u64,
+    /// Session-state evictions behind `state_spill_bits`.
+    pub state_evictions: u64,
 }
 
 impl RunMetrics {
@@ -97,6 +105,8 @@ impl RunMetrics {
         self.cim.merge(&other.cim);
         self.modeled_latency_s += other.modeled_latency_s;
         self.wallclock_s += other.wallclock_s;
+        self.state_spill_bits += other.state_spill_bits;
+        self.state_evictions += other.state_evictions;
     }
 
     /// Render a report block.
@@ -122,6 +132,13 @@ impl RunMetrics {
                 si(self.cim.sops as f64),
             ));
         }
+        if self.state_evictions > 0 {
+            s.push_str(&format!(
+                "state spills       {} evictions, {}b DRAM traffic\n",
+                self.state_evictions,
+                si(self.state_spill_bits as f64),
+            ));
+        }
         s.push_str(&format!("energy/inference   {:.2} µJ\n", self.uj_per_inference()));
         s.push_str(&format!(
             "modeled latency    {}s/timestep\n",
@@ -129,6 +146,75 @@ impl RunMetrics {
         ));
         s.push_str(&format!("host wallclock     {:.2} s\n", self.wallclock_s));
         s
+    }
+}
+
+/// Latency sample accumulator with percentile reporting — the serve tier
+/// pushes one observation per completed micro-window (admission →
+/// completion, host wall-clock).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+}
+
+impl LatencyStats {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        LatencyStats::default()
+    }
+
+    /// Absorb one latency observation (seconds).
+    pub fn push(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+    }
+
+    /// Absorb another accumulator's samples.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Percentile in seconds (NaN when empty).
+    pub fn pct(&self, p: f64) -> f64 {
+        percentile(&self.samples, p)
+    }
+
+    /// Median latency (seconds).
+    pub fn p50(&self) -> f64 {
+        self.pct(50.0)
+    }
+
+    /// 95th-percentile latency (seconds).
+    pub fn p95(&self) -> f64 {
+        self.pct(95.0)
+    }
+
+    /// 99th-percentile latency (seconds).
+    pub fn p99(&self) -> f64 {
+        self.pct(99.0)
+    }
+
+    /// Mean latency in seconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// One aligned report line: `p50 … p95 … p99 … (n windows)`.
+    pub fn line(&self) -> String {
+        format!(
+            "p50 {:>10}  p95 {:>10}  p99 {:>10}  ({} windows)",
+            fmt_time(self.p50()),
+            fmt_time(self.p95()),
+            fmt_time(self.p99()),
+            self.count(),
+        )
     }
 }
 
@@ -175,5 +261,33 @@ mod tests {
         assert_eq!(m.accuracy(), 0.0);
         assert_eq!(m.pj_per_sop(), 0.0);
         assert!(m.report().contains("samples"));
+    }
+
+    #[test]
+    fn spill_fields_merge_and_report() {
+        let mut a = RunMetrics { state_spill_bits: 100, state_evictions: 2, ..Default::default() };
+        let b = RunMetrics { state_spill_bits: 50, state_evictions: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.state_spill_bits, 150);
+        assert_eq!(a.state_evictions, 3);
+        assert!(a.report().contains("state spills"));
+        assert!(!RunMetrics::default().report().contains("state spills"));
+    }
+
+    #[test]
+    fn latency_stats_percentiles() {
+        let mut l = LatencyStats::new();
+        for i in 1..=100 {
+            l.push(i as f64 * 1e-3);
+        }
+        assert_eq!(l.count(), 100);
+        assert!((l.p50() - 0.0505).abs() < 1e-9);
+        assert!((l.p99() - 0.09901).abs() < 1e-6);
+        assert!((l.mean() - 0.0505).abs() < 1e-9);
+        let mut other = LatencyStats::new();
+        other.push(1.0);
+        l.merge(&other);
+        assert_eq!(l.count(), 101);
+        assert!(l.line().contains("101 windows"));
     }
 }

@@ -25,7 +25,7 @@ pub mod pipeline;
 pub mod scheduler;
 
 pub use buffers::{BankArray, MergeShiftUnit};
-pub use engine::{BatchResult, Engine, SampleBuffers, SamplePlan, ShardLedger};
-pub use metrics::{EnergyBreakdown, RunMetrics};
+pub use engine::{BatchResult, Engine, SampleBuffers, SamplePlan, ShardLedger, WindowTotals};
+pub use metrics::{EnergyBreakdown, LatencyStats, RunMetrics};
 pub use pipeline::{Coordinator, InferenceResult};
 pub use scheduler::{LayerPlan, Schedule, Scheduler};

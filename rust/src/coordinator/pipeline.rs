@@ -21,7 +21,7 @@ use super::engine::{merge_ordered, SampleBuffers, SamplePlan};
 use super::metrics::RunMetrics;
 use crate::dataflow::{Mapping, Policy};
 use crate::events::EventStream;
-use crate::runtime::{Runtime, ScnnRunner, StepBackend};
+use crate::runtime::{Runtime, ScnnRunner, StateSnapshot, StepBackend};
 use crate::snn::Network;
 
 /// Result of one sample inference.
@@ -100,6 +100,12 @@ impl Coordinator {
     /// Requantize at explicit per-layer resolutions (Fig. 6 sweeps).
     pub fn set_resolutions(&mut self, res: &[(u32, u32)]) {
         self.backend.set_resolutions(res);
+    }
+
+    /// Checkpoint the backend's membrane state (serve-tier equivalence
+    /// tests and diagnostics).
+    pub fn state(&self) -> StateSnapshot {
+        self.backend.snapshot()
     }
 
     /// Run one event-stream sample end to end — the same code path the

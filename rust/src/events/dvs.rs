@@ -1,5 +1,7 @@
 //! DVS event primitives (address-event representation).
 
+use crate::Result;
+
 /// One DVS event: a pixel fired at a microsecond timestamp with a
 /// brightness-change polarity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -12,6 +14,24 @@ pub struct DvsEvent {
     pub y: u16,
     /// `true` = ON (brightness increase), `false` = OFF.
     pub polarity: bool,
+}
+
+impl DvsEvent {
+    /// Validate this event's pixel against a sensor geometry — the single
+    /// client-facing bounds check shared by [`EventStream::new`] and the
+    /// serve tier's ingest buffer.
+    pub fn ensure_in_bounds(&self, width: u16, height: u16) -> Result<()> {
+        anyhow::ensure!(
+            self.x < width && self.y < height,
+            "event at t={} us out of sensor bounds: pixel ({}, {}) on a {}x{} sensor",
+            self.t_us,
+            self.x,
+            self.y,
+            width,
+            height
+        );
+        Ok(())
+    }
 }
 
 /// A sensor-resolution-tagged stream of events, sorted by timestamp.
@@ -29,13 +49,27 @@ pub struct EventStream {
 
 impl EventStream {
     /// Validate coordinates/order and build the stream.
-    pub fn new(width: u16, height: u16, duration_us: u64, mut events: Vec<DvsEvent>) -> Self {
+    ///
+    /// Events arrive from outside the process (a sensor, a network client),
+    /// so invalid input is a recoverable [`Err`] with a descriptive
+    /// message, never a panic.
+    pub fn new(
+        width: u16,
+        height: u16,
+        duration_us: u64,
+        mut events: Vec<DvsEvent>,
+    ) -> Result<Self> {
         events.sort_by_key(|e| e.t_us);
         for e in &events {
-            assert!(e.x < width && e.y < height, "event out of sensor bounds");
-            assert!(e.t_us <= duration_us, "event after stream end");
+            e.ensure_in_bounds(width, height)?;
+            anyhow::ensure!(
+                e.t_us <= duration_us,
+                "event at t={} us after stream end ({} us)",
+                e.t_us,
+                duration_us
+            );
         }
-        EventStream { width, height, duration_us, events }
+        Ok(EventStream { width, height, duration_us, events })
     }
 
     /// Mean event rate in events/second.
@@ -79,20 +113,37 @@ mod tests {
 
     #[test]
     fn stream_sorts_events() {
-        let s = EventStream::new(8, 8, 100, vec![ev(50, 1, 1, true), ev(10, 2, 2, false)]);
+        let s =
+            EventStream::new(8, 8, 100, vec![ev(50, 1, 1, true), ev(10, 2, 2, false)]).unwrap();
         assert_eq!(s.events[0].t_us, 10);
     }
 
     #[test]
-    #[should_panic(expected = "out of sensor bounds")]
-    fn oob_event_rejected() {
-        EventStream::new(8, 8, 100, vec![ev(0, 8, 0, true)]);
+    fn oob_event_rejected_with_descriptive_error() {
+        let err = EventStream::new(8, 8, 100, vec![ev(3, 8, 0, true)]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("out of sensor bounds"), "got: {msg}");
+        assert!(msg.contains("(8, 0)") && msg.contains("8x8"), "got: {msg}");
+    }
+
+    #[test]
+    fn late_event_rejected_with_descriptive_error() {
+        let err = EventStream::new(8, 8, 100, vec![ev(101, 0, 0, true)]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("after stream end"), "got: {msg}");
+        assert!(msg.contains("101"), "got: {msg}");
+    }
+
+    #[test]
+    fn event_at_exact_stream_end_is_valid() {
+        let s = EventStream::new(8, 8, 100, vec![ev(100, 0, 0, true)]).unwrap();
+        assert_eq!(s.events.len(), 1);
     }
 
     #[test]
     fn rate_and_window() {
         let events: Vec<DvsEvent> = (0..100).map(|i| ev(i * 10, 0, 0, true)).collect();
-        let s = EventStream::new(4, 4, 1000, events);
+        let s = EventStream::new(4, 4, 1000, events).unwrap();
         assert!((s.rate_hz() - 1e5).abs() < 1.0);
         assert_eq!(s.window(100, 200).len(), 10); // t = 100..190
         assert_eq!(s.window(0, 10).len(), 1);
@@ -102,7 +153,7 @@ mod tests {
     #[test]
     fn sparsity_extremes() {
         // Empty stream: fully sparse.
-        let s = EventStream::new(4, 4, 100, vec![]);
+        let s = EventStream::new(4, 4, 100, vec![]).unwrap();
         assert_eq!(s.sparsity(10), 1.0);
         // One event per slot in a 1-step stream: count occupied.
         let mut evs = Vec::new();
@@ -112,13 +163,14 @@ mod tests {
                 evs.push(ev(0, x, y, false));
             }
         }
-        let s = EventStream::new(4, 4, 9, evs);
+        let s = EventStream::new(4, 4, 9, evs).unwrap();
         assert_eq!(s.sparsity(10), 0.0);
     }
 
     #[test]
     fn sparsity_deduplicates_same_slot() {
-        let s = EventStream::new(4, 4, 9, vec![ev(0, 0, 0, true), ev(5, 0, 0, true)]);
+        let s =
+            EventStream::new(4, 4, 9, vec![ev(0, 0, 0, true), ev(5, 0, 0, true)]).unwrap();
         // 2 events, 1 slot occupied of 32.
         assert!((s.sparsity(10) - (1.0 - 1.0 / 32.0)).abs() < 1e-12);
     }

@@ -112,7 +112,8 @@ mod tests {
             4,
             100,
             vec![ev(5, 1, 2, true), ev(55, 3, 0, false), ev(99, 3, 3, true)],
-        );
+        )
+        .unwrap();
         let frames = encode_frames(&s, 2);
         assert_eq!(frames.len(), 2);
         assert!(frames[0].get(0, 1, 2));
@@ -130,9 +131,65 @@ mod tests {
             4,
             100,
             vec![ev(1, 0, 0, true), ev(2, 0, 0, true), ev(3, 0, 0, true)],
-        );
+        )
+        .unwrap();
         let frames = encode_frames(&s, 1);
         assert_eq!(frames[0].count(), 1, "single-bit buffer semantics");
+    }
+
+    #[test]
+    fn empty_stream_encodes_to_empty_frames() {
+        let s = EventStream::new(4, 4, 100, vec![]).unwrap();
+        let frames = encode_frames(&s, 4);
+        assert_eq!(frames.len(), 4);
+        assert!(frames.iter().all(|f| f.count() == 0));
+        assert!(frames.iter().all(|f| (f.sparsity() - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn all_events_at_stream_end_land_in_last_frame() {
+        // t_us == duration_us is a valid timestamp; the tail-absorbing last
+        // frame must own it for every frame count.
+        let evs = vec![ev(100, 0, 0, true), ev(100, 1, 1, false), ev(100, 2, 2, true)];
+        let s = EventStream::new(4, 4, 100, evs).unwrap();
+        for timesteps in [1usize, 2, 3, 16] {
+            let frames = encode_frames(&s, timesteps);
+            assert_eq!(frames.len(), timesteps);
+            for f in &frames[..timesteps - 1] {
+                assert_eq!(f.count(), 0, "{timesteps} steps: early frame empty");
+            }
+            assert_eq!(frames[timesteps - 1].count(), 3, "{timesteps} steps: tail owns all");
+        }
+    }
+
+    #[test]
+    fn duplicate_timestamps_collapse_per_slot_not_per_time() {
+        // Three events share t=10: two on the same (pixel, polarity) slot
+        // collapse, the third targets another pixel and survives.
+        let evs = vec![ev(10, 0, 0, true), ev(10, 0, 0, true), ev(10, 3, 3, true)];
+        let s = EventStream::new(4, 4, 100, evs).unwrap();
+        let frames = encode_frames(&s, 1);
+        assert_eq!(frames[0].count(), 2);
+        assert!(frames[0].get(0, 0, 0) && frames[0].get(0, 3, 3));
+    }
+
+    #[test]
+    fn out_of_order_arrival_encodes_identically_to_sorted() {
+        // EventStream::new sorts, so heavily out-of-order client input must
+        // produce the same frames as the time-ordered stream.
+        let ordered: Vec<DvsEvent> =
+            (0..50).map(|i| ev(i * 2, (i % 4) as u16, ((i / 4) % 4) as u16, i % 2 == 0)).collect();
+        let mut shuffled = ordered.clone();
+        shuffled.reverse();
+        shuffled.swap(3, 41);
+        shuffled.swap(0, 25);
+        let a = EventStream::new(4, 4, 100, ordered).unwrap();
+        let b = EventStream::new(4, 4, 100, shuffled).unwrap();
+        let fa = encode_frames(&a, 8);
+        let fb = encode_frames(&b, 8);
+        for (x, y) in fa.iter().zip(&fb) {
+            assert_eq!(x.bits, y.bits);
+        }
     }
 
     #[test]

@@ -205,6 +205,7 @@ impl GestureGenerator {
         }
 
         EventStream::new(self.width, self.height, self.duration_us, events)
+            .expect("generator emits only in-bounds, in-range events")
     }
 
     /// Generate a labeled dataset: `per_class` samples of every class.

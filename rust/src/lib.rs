@@ -18,6 +18,7 @@
 //!   inference time).
 //!
 //! Entry points: [`coordinator::Coordinator`] for end-to-end runs,
+//! [`serve::StreamingService`] for sessionized streaming inference,
 //! [`cim::CimMacro`] for the macro simulator, [`dataflow::Mapper`] for the
 //! HS mapping search, and [`figures`] for the paper-figure drivers.
 
@@ -29,6 +30,7 @@ pub mod energy;
 pub mod events;
 pub mod figures;
 pub mod runtime;
+pub mod serve;
 pub mod snn;
 pub mod util;
 

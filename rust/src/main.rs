@@ -3,13 +3,17 @@
 //! ```text
 //! flexspim reproduce <fig4|fig6|fig7a|fig7cd|table1|all>
 //! flexspim run       [--samples N] [--macros M] [--policy P] [--seed S]
+//! flexspim serve     [--sessions N] [--workers W] [--jitter-us J]
+//!                    [--budget-kb B] [--macros M] [--policy P] [--seed S] [--full]
 //! flexspim train     [--steps N] [--lr X] [--seed S] [--out PATH]
 //! flexspim map       [--macros M]
 //! flexspim simulate  [--wbits W] [--pbits P] [--nc C] [--neurons N] [--fanin F]
 //! flexspim sweep     [--samples N] [--seed S]      # Fig. 6(b) accuracy
 //! ```
 //!
-//! `run`, `train`, and `sweep` need the AOT artifacts (`make artifacts`).
+//! `run`, `train`, and `sweep` need the AOT artifacts (`make artifacts`);
+//! `serve` drives the streaming tier on the pure-Rust backend and runs
+//! everywhere.
 
 use anyhow::{bail, Result};
 use flexspim::cim::{CimMacro, MacroConfig};
@@ -37,6 +41,11 @@ fn specs() -> Vec<Spec> {
         Spec { name: "nc", takes_value: true, help: "operand columns N_C (simulate)" },
         Spec { name: "neurons", takes_value: true, help: "parallel neurons (simulate)" },
         Spec { name: "fanin", takes_value: true, help: "synapses per neuron (simulate)" },
+        Spec { name: "sessions", takes_value: true, help: "streaming sessions (serve, default 16)" },
+        Spec { name: "workers", takes_value: true, help: "serve worker threads (default 4)" },
+        Spec { name: "jitter-us", takes_value: true, help: "arrival jitter in us (serve)" },
+        Spec { name: "budget-kb", takes_value: true, help: "vmem budget kB (serve, 0 = chip)" },
+        Spec { name: "full", takes_value: false, help: "serve the full paper SCNN" },
         Spec { name: "config", takes_value: true, help: "TOML config file" },
         Spec { name: "help", takes_value: false, help: "show usage" },
     ]
@@ -65,12 +74,13 @@ fn main() -> Result<()> {
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     if args.flag("help") || cmd == "help" {
         println!("{}", usage("flexspim <command>", &specs()));
-        println!("commands: reproduce run train map simulate sweep");
+        println!("commands: reproduce run serve train map simulate sweep");
         return Ok(());
     }
     match cmd {
         "reproduce" => reproduce(&args),
         "run" => run_inference(&args),
+        "serve" => run_serve(&args),
         "train" => run_training(&args),
         "map" => run_map(&args),
         "simulate" => run_simulate(&args),
@@ -126,6 +136,52 @@ fn run_inference(args: &Args) -> Result<()> {
     println!("running {} samples ...", data.len());
     let metrics = coord.run_dataset(&data)?;
     println!("{}", metrics.report());
+    Ok(())
+}
+
+/// Compact serve demo net: 16 timesteps over the 48×48 substrate, so each
+/// 100-ms session streams as 4 micro-windows of 4 frames.
+fn serve_demo_net() -> flexspim::snn::Network {
+    use flexspim::snn::{LayerSpec, Network, Resolution};
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "serve-demo",
+        vec![
+            LayerSpec::conv("C1", 2, 8, 3, 4, 1, 48, 48, r),
+            LayerSpec::fc("F1", 8 * 12 * 12, 64, r),
+            LayerSpec::fc("F2", 64, 10, Resolution::new(5, 10)),
+        ],
+        16,
+    )
+}
+
+fn run_serve(args: &Args) -> Result<()> {
+    use flexspim::serve::{gesture_traffic, ServiceConfig, StreamingService};
+
+    let sessions = args.get_or("sessions", 16usize);
+    let workers = args.get_or("workers", 4usize);
+    let macros = args.get_or("macros", 16usize);
+    let policy = parse_policy(&args.get_or("policy", "hs-opt".to_string()))?;
+    let seed = args.get_or("seed", 42u64);
+    let jitter_us = args.get_or("jitter-us", 8_000u64);
+    let budget_kb = args.get_or("budget-kb", 0u64);
+
+    let net = if args.flag("full") { scnn_dvs_gesture() } else { serve_demo_net() };
+    let mut cfg = ServiceConfig::nominal(workers);
+    if budget_kb > 0 {
+        cfg.resident_budget_bits = budget_kb * 1024 * 8;
+    }
+    let svc = StreamingService::native(net.clone(), seed, macros, policy, cfg);
+    println!(
+        "serving {} on {macros} macros ({policy}): {sessions} sessions, {workers} workers, \
+         {jitter_us} us arrival jitter, {} b vmem/session, {} b residency budget",
+        net.name,
+        svc.plan().net.total_vmem_bits(),
+        svc.config().resident_budget_bits,
+    );
+    let traffic = gesture_traffic(sessions, seed ^ 0x7EA4_11FC, jitter_us);
+    let report = svc.serve(&traffic, 64)?;
+    println!("{}", report.report());
     Ok(())
 }
 

@@ -18,6 +18,34 @@ use crate::Result;
 
 pub use super::scnn::StepResult;
 
+/// A full copy of a backend's persistent per-neuron state: one membrane
+/// vector per layer, in layer order.
+///
+/// This is what the chip's layer-wise output stationarity keeps resident in
+/// CIM between timesteps. The serve tier (`crate::serve`) checkpoints it
+/// between micro-windows so a session resumes from its previous membrane
+/// potentials instead of re-simulating from reset, and spills it as DRAM
+/// traffic when the residency budget is exceeded.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct StateSnapshot {
+    /// Per-layer membrane potentials.
+    pub vmems: Vec<Vec<i64>>,
+}
+
+impl StateSnapshot {
+    /// The all-zero (reset) state of `net`.
+    pub fn zeros(net: &Network) -> StateSnapshot {
+        StateSnapshot {
+            vmems: net.layers.iter().map(|l| vec![0i64; l.num_neurons()]).collect(),
+        }
+    }
+
+    /// Total neurons captured.
+    pub fn neurons(&self) -> usize {
+        self.vmems.iter().map(Vec::len).sum()
+    }
+}
+
 /// One-timestep network execution engine with persistent membrane state.
 pub trait StepBackend {
     /// The workload this backend executes.
@@ -33,6 +61,13 @@ pub trait StepBackend {
     /// Requantize at explicit per-layer `(w_bits, p_bits)` resolutions and
     /// reset state.
     fn set_resolutions(&mut self, res: &[(u32, u32)]);
+
+    /// Copy out the persistent membrane state (a session checkpoint).
+    fn snapshot(&self) -> StateSnapshot;
+
+    /// Restore state previously captured with [`StepBackend::snapshot`]
+    /// (shape-checked against the current network).
+    fn restore(&mut self, state: &StateSnapshot) -> Result<()>;
 }
 
 impl StepBackend for super::scnn::ScnnRunner {
@@ -50,5 +85,13 @@ impl StepBackend for super::scnn::ScnnRunner {
 
     fn set_resolutions(&mut self, res: &[(u32, u32)]) {
         super::scnn::ScnnRunner::set_resolutions(self, res)
+    }
+
+    fn snapshot(&self) -> StateSnapshot {
+        StateSnapshot { vmems: self.vmems_i64() }
+    }
+
+    fn restore(&mut self, state: &StateSnapshot) -> Result<()> {
+        self.set_vmems_i64(&state.vmems)
     }
 }

@@ -26,7 +26,7 @@ pub mod scnn;
 pub mod trainer;
 pub mod weights;
 
-pub use backend::{StepBackend, StepResult};
+pub use backend::{StateSnapshot, StepBackend, StepResult};
 pub use client::{Executable, Runtime};
 pub use native::NativeScnn;
 pub use scnn::ScnnRunner;

@@ -22,7 +22,7 @@ use crate::snn::{LayerKind, Network, Resolution};
 use crate::util::rng::Rng;
 use crate::Result;
 
-use super::backend::{StepBackend, StepResult};
+use super::backend::{StateSnapshot, StepBackend, StepResult};
 
 enum NativeLayer {
     Conv(ConvLifLayer),
@@ -41,6 +41,20 @@ impl NativeLayer {
         match self {
             NativeLayer::Conv(l) => l.v.iter_mut().for_each(|v| *v = 0),
             NativeLayer::Fc(l) => l.v.iter_mut().for_each(|v| *v = 0),
+        }
+    }
+
+    fn vmem(&self) -> &[i64] {
+        match self {
+            NativeLayer::Conv(l) => &l.v,
+            NativeLayer::Fc(l) => &l.v,
+        }
+    }
+
+    fn set_vmem(&mut self, v: &[i64]) {
+        match self {
+            NativeLayer::Conv(l) => l.v.copy_from_slice(v),
+            NativeLayer::Fc(l) => l.v.copy_from_slice(v),
         }
     }
 }
@@ -136,6 +150,35 @@ impl StepBackend for NativeScnn {
         self.net = self.net.with_resolutions(&resolutions);
         self.layers = Self::build_layers(&self.net, self.seed);
     }
+
+    fn snapshot(&self) -> StateSnapshot {
+        StateSnapshot {
+            vmems: self.layers.iter().map(|l| l.vmem().to_vec()).collect(),
+        }
+    }
+
+    fn restore(&mut self, state: &StateSnapshot) -> Result<()> {
+        // Validate every layer before the first write: an Err must leave
+        // the backend's state untouched, not half-restored.
+        anyhow::ensure!(
+            state.vmems.len() == self.layers.len(),
+            "snapshot has {} layers, backend has {}",
+            state.vmems.len(),
+            self.layers.len()
+        );
+        for (i, (layer, v)) in self.layers.iter().zip(&state.vmems).enumerate() {
+            let have = layer.vmem().len();
+            anyhow::ensure!(
+                v.len() == have,
+                "layer {i}: snapshot has {} neurons, backend has {have}",
+                v.len()
+            );
+        }
+        for (layer, v) in self.layers.iter_mut().zip(&state.vmems) {
+            layer.set_vmem(v);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -230,5 +273,62 @@ mod tests {
     fn backend_is_send() {
         fn assert_send<T: Send>() {}
         assert_send::<NativeScnn>();
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        // Run T steps monolithically; run T/2 steps, checkpoint, restore
+        // into a *fresh* backend, run the rest: outputs and final state
+        // must match exactly. This is the contract the serve tier's
+        // incremental windows stand on.
+        let net = tiny_net();
+        let frames = frames_for(&net, 13);
+        let mut mono = NativeScnn::new(net.clone(), 42);
+        let mono_out: Vec<StepResult> = frames.iter().map(|f| mono.step(f).unwrap()).collect();
+
+        let mut first = NativeScnn::new(net.clone(), 42);
+        let half = frames.len() / 2;
+        let mut windowed_out: Vec<StepResult> =
+            frames[..half].iter().map(|f| first.step(f).unwrap()).collect();
+        let checkpoint = first.snapshot();
+        drop(first);
+
+        let mut second = NativeScnn::new(net, 42);
+        second.restore(&checkpoint).unwrap();
+        windowed_out.extend(frames[half..].iter().map(|f| second.step(f).unwrap()));
+
+        for (i, (a, b)) in mono_out.iter().zip(&windowed_out).enumerate() {
+            assert_eq!(a.out_spikes, b.out_spikes, "step {i}");
+            assert_eq!(a.counts, b.counts, "step {i}");
+        }
+        assert_eq!(mono.snapshot(), second.snapshot(), "final vmem");
+    }
+
+    #[test]
+    fn restore_rejects_shape_mismatch() {
+        let mut m = NativeScnn::new(tiny_net(), 1);
+        let err = m.restore(&StateSnapshot { vmems: vec![vec![0; 3]] }).unwrap_err();
+        assert!(format!("{err}").contains("layers"));
+        let mut bad = m.snapshot();
+        bad.vmems[1] = vec![0; 7];
+        let err = m.restore(&bad).unwrap_err();
+        assert!(format!("{err}").contains("neurons"));
+    }
+
+    #[test]
+    fn zeros_snapshot_equals_reset_state() {
+        let net = tiny_net();
+        let frames = frames_for(&net, 2);
+        let mut m = NativeScnn::new(net.clone(), 3);
+        for f in &frames {
+            m.step(f).unwrap();
+        }
+        m.restore(&StateSnapshot::zeros(&net)).unwrap();
+        let mut fresh = NativeScnn::new(net, 3);
+        assert_eq!(m.snapshot(), fresh.snapshot());
+        assert_eq!(
+            m.step(&frames[0]).unwrap().counts,
+            fresh.step(&frames[0]).unwrap().counts
+        );
     }
 }

@@ -109,6 +109,47 @@ impl ScnnRunner {
         &self.vmems[layer]
     }
 
+    /// Copy out the full membrane state, widened to i64 (the
+    /// [`super::backend::StateSnapshot`] representation).
+    pub fn vmems_i64(&self) -> Vec<Vec<i64>> {
+        self.vmems
+            .iter()
+            .map(|v| v.iter().map(|&x| x as i64).collect())
+            .collect()
+    }
+
+    /// Restore membrane state captured with [`Self::vmems_i64`]. All
+    /// layers are validated (shapes and i32 range) before the first write,
+    /// so an `Err` leaves the runner's state untouched.
+    pub fn set_vmems_i64(&mut self, vmems: &[Vec<i64>]) -> Result<()> {
+        ensure!(
+            vmems.len() == self.vmems.len(),
+            "snapshot has {} layers, runner has {}",
+            vmems.len(),
+            self.vmems.len()
+        );
+        for (i, (dst, src)) in self.vmems.iter().zip(vmems).enumerate() {
+            ensure!(
+                src.len() == dst.len(),
+                "layer {i}: snapshot has {} neurons, runner has {}",
+                src.len(),
+                dst.len()
+            );
+            for &s in src {
+                ensure!(
+                    i32::try_from(s).is_ok(),
+                    "layer {i}: vmem value {s} exceeds the runner's i32 range"
+                );
+            }
+        }
+        for (dst, src) in self.vmems.iter_mut().zip(vmems) {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = s as i32;
+            }
+        }
+        Ok(())
+    }
+
     /// Current quantization parameters (modulus, half, theta) per layer.
     pub fn qparams(&self) -> &[[i32; 3]] {
         &self.qparams

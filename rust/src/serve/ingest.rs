@@ -1,0 +1,417 @@
+//! Per-session AER ingestion: a reorder/jitter buffer.
+//!
+//! Real DVS front ends deliver events over links that reorder and delay
+//! (USB bursts, network transport). The chip's 4.25-kB spike buffer
+//! assumes time-ordered per-timestep input, so the serving tier puts a
+//! jitter buffer in front of every session: out-of-order [`DvsEvent`]s are
+//! accepted up to a configurable reorder slack and re-emitted as
+//! time-ordered [`MicroWindow`]s, each spanning a fixed number of SNN
+//! timesteps. Invalid client input (out-of-bounds pixels) is rejected with
+//! a descriptive [`Err`] — never a panic — and events that arrive after
+//! their window has already been emitted are dropped and counted, exactly
+//! like a media jitter buffer.
+//!
+//! Watermark discipline: a window `[t0, t0 + window_us)` is only released
+//! by [`ReorderBuffer::poll`] once the *watermark* (the newest event
+//! timestamp seen so far) has passed the window end by `max_lateness_us`,
+//! so any event delayed by at most the slack still lands in its window.
+//! [`ReorderBuffer::flush`] closes the session at an explicit end time,
+//! releasing everything left — its final window absorbs the stream tail
+//! (including events at exactly the end timestamp), mirroring the
+//! tail-absorbing last frame of [`crate::events::encode_frames`].
+
+use crate::events::DvsEvent;
+use crate::Result;
+
+/// Ingest-side configuration of one session.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Sensor width in pixels.
+    pub width: u16,
+    /// Sensor height in pixels.
+    pub height: u16,
+    /// Width of one emitted micro-window in microseconds.
+    pub window_us: u64,
+    /// Reorder slack: an event may trail the watermark by up to this long
+    /// and still be placed into its window.
+    pub max_lateness_us: u64,
+    /// Upper bound on buffered events (per-session memory bound); arrivals
+    /// beyond it are dropped and counted, not buffered.
+    pub max_pending: usize,
+    /// Upper bound on how far past the emitted frontier an event timestamp
+    /// (or a declared stream end) may point. A malformed/hostile timestamp
+    /// would otherwise inflate the watermark and make `poll`/`flush` emit
+    /// an unbounded run of empty windows inside the service lock; beyond
+    /// this bound the input is rejected with a descriptive error instead.
+    pub max_future_us: u64,
+}
+
+/// One time-ordered micro-window of events, ready for encoding.
+#[derive(Debug, Clone)]
+pub struct MicroWindow {
+    /// Window start, inclusive (microseconds).
+    pub t0_us: u64,
+    /// Window end, exclusive (microseconds). The final window of a flush
+    /// ends just past the declared stream end (inclusive of it), which may
+    /// be shorter or longer than the nominal stride.
+    pub t1_us: u64,
+    /// Events with `t0_us <= t_us < t1_us`, sorted by timestamp. The
+    /// final window of a flush also owns the inclusive session end.
+    pub events: Vec<DvsEvent>,
+    /// True for the final window emitted by [`ReorderBuffer::flush`].
+    pub last: bool,
+}
+
+impl MicroWindow {
+    /// Window span in microseconds.
+    pub fn span_us(&self) -> u64 {
+        self.t1_us.saturating_sub(self.t0_us)
+    }
+}
+
+/// The per-session reorder/jitter buffer.
+#[derive(Debug, Clone)]
+pub struct ReorderBuffer {
+    cfg: IngestConfig,
+    /// Buffered events not yet assigned to an emitted window (arrival
+    /// order; sorted per window at emission).
+    pending: Vec<DvsEvent>,
+    /// Newest event timestamp seen.
+    watermark_us: u64,
+    /// Windows have been emitted up to this time.
+    emitted_until_us: u64,
+    /// Events accepted into the buffer.
+    pub accepted: u64,
+    /// Events dropped because their window was already emitted.
+    pub late_dropped: u64,
+    /// Events dropped because the buffer was full.
+    pub overflow_dropped: u64,
+}
+
+impl ReorderBuffer {
+    /// Empty buffer at session time zero.
+    pub fn new(cfg: IngestConfig) -> ReorderBuffer {
+        assert!(cfg.window_us > 0, "window must be non-empty");
+        ReorderBuffer {
+            cfg,
+            pending: Vec::new(),
+            watermark_us: 0,
+            emitted_until_us: 0,
+            accepted: 0,
+            late_dropped: 0,
+            overflow_dropped: 0,
+        }
+    }
+
+    /// The ingest configuration.
+    pub fn config(&self) -> &IngestConfig {
+        &self.cfg
+    }
+
+    /// Newest event timestamp seen so far.
+    pub fn watermark_us(&self) -> u64 {
+        self.watermark_us
+    }
+
+    /// Windows have been emitted up to this session time.
+    pub fn emitted_until_us(&self) -> u64 {
+        self.emitted_until_us
+    }
+
+    /// Events currently buffered.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Accept one event. Returns `Ok(true)` when buffered, `Ok(false)`
+    /// when dropped (late beyond the reorder slack, or buffer full), and
+    /// `Err` for invalid client input (out-of-bounds pixel).
+    pub fn push(&mut self, e: DvsEvent) -> Result<bool> {
+        e.ensure_in_bounds(self.cfg.width, self.cfg.height)?;
+        anyhow::ensure!(
+            e.t_us <= self.emitted_until_us.saturating_add(self.cfg.max_future_us),
+            "event at t={} us is more than {} us past the emitted frontier ({} us)",
+            e.t_us,
+            self.cfg.max_future_us,
+            self.emitted_until_us
+        );
+        if e.t_us < self.emitted_until_us {
+            self.late_dropped += 1;
+            return Ok(false);
+        }
+        if self.pending.len() >= self.cfg.max_pending {
+            self.overflow_dropped += 1;
+            return Ok(false);
+        }
+        self.watermark_us = self.watermark_us.max(e.t_us);
+        self.pending.push(e);
+        self.accepted += 1;
+        Ok(true)
+    }
+
+    /// Release every window whose end the watermark has passed by the
+    /// reorder slack. Call after a batch of [`Self::push`]es.
+    pub fn poll(&mut self) -> Vec<MicroWindow> {
+        let mut out = Vec::new();
+        while self
+            .emitted_until_us
+            .saturating_add(self.cfg.window_us)
+            .saturating_add(self.cfg.max_lateness_us)
+            <= self.watermark_us
+        {
+            let t1 = self.emitted_until_us + self.cfg.window_us;
+            out.push(self.take_window(t1, t1, false));
+        }
+        out
+    }
+
+    /// Close the session at `end_us`: release everything still pending.
+    /// Full strides come out as ordinary windows; the final window is
+    /// marked `last` and owns the tail `[t0, end_us]` inclusive. A
+    /// declared end absurdly far past the emitted frontier is rejected
+    /// (it would amplify into an unbounded run of empty windows).
+    pub fn flush(&mut self, end_us: u64) -> Result<Vec<MicroWindow>> {
+        anyhow::ensure!(
+            end_us <= self.emitted_until_us.saturating_add(self.cfg.max_future_us),
+            "stream end {} us is more than {} us past the emitted frontier ({} us)",
+            end_us,
+            self.cfg.max_future_us,
+            self.emitted_until_us
+        );
+        let mut out = Vec::new();
+        while self.emitted_until_us.saturating_add(self.cfg.window_us) < end_us {
+            let t1 = self.emitted_until_us + self.cfg.window_us;
+            out.push(self.take_window(t1, t1, false));
+        }
+        if self.emitted_until_us >= end_us {
+            // The frontier already passed the declared end (poll emitted
+            // beyond it): nothing is left to run — emit a zero-span `last`
+            // marker so the session still completes, without executing
+            // spurious post-end timesteps.
+            let t1 = self.emitted_until_us;
+            out.push(self.take_window(t1, t1, true));
+        } else {
+            // Final window: it ends at `end_us` *inclusive* (the
+            // tail-absorbing frame owns the exact stream end), so a
+            // mid-stride close encodes only the frames up to the declared
+            // end instead of a full stride of phantom post-end timesteps.
+            // Anything timestamped past the declared end is left behind.
+            let t1 = end_us.saturating_add(1);
+            out.push(self.take_window(t1, t1, true));
+        }
+        // Anything left was timestamped past the declared end: treat like
+        // late arrivals.
+        self.late_dropped += self.pending.len() as u64;
+        self.pending.clear();
+        Ok(out)
+    }
+
+    /// Emit the window `[emitted_until, t1)`, collecting pending events
+    /// with `t_us < cut` (sorted by timestamp).
+    fn take_window(&mut self, t1: u64, cut: u64, last: bool) -> MicroWindow {
+        let t0 = self.emitted_until_us;
+        let mut events = Vec::new();
+        let mut keep = Vec::with_capacity(self.pending.len());
+        for e in self.pending.drain(..) {
+            if e.t_us < cut {
+                events.push(e);
+            } else {
+                keep.push(e);
+            }
+        }
+        self.pending = keep;
+        events.sort_by_key(|e| e.t_us);
+        self.emitted_until_us = t1;
+        MicroWindow { t0_us: t0, t1_us: t1, events, last }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(window_us: u64, slack_us: u64) -> IngestConfig {
+        IngestConfig {
+            width: 8,
+            height: 8,
+            window_us,
+            max_lateness_us: slack_us,
+            max_pending: 1024,
+            max_future_us: 1 << 20,
+        }
+    }
+
+    fn ev(t: u64, x: u16, y: u16) -> DvsEvent {
+        DvsEvent { t_us: t, x, y, polarity: true }
+    }
+
+    #[test]
+    fn out_of_bounds_event_is_a_recoverable_error() {
+        let mut b = ReorderBuffer::new(cfg(100, 10));
+        let err = b.push(ev(5, 8, 0)).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("out of sensor bounds"), "got: {msg}");
+        // The buffer survives and keeps accepting valid input.
+        assert!(b.push(ev(5, 7, 7)).unwrap());
+        assert_eq!(b.accepted, 1);
+    }
+
+    #[test]
+    fn windows_wait_for_the_watermark_slack() {
+        let mut b = ReorderBuffer::new(cfg(100, 50));
+        b.push(ev(10, 0, 0)).unwrap();
+        b.push(ev(120, 1, 1)).unwrap();
+        // Watermark 120 < 100 + 50: window [0, 100) not yet safe.
+        assert!(b.poll().is_empty());
+        b.push(ev(150, 2, 2)).unwrap();
+        let w = b.poll();
+        assert_eq!(w.len(), 1);
+        assert_eq!((w[0].t0_us, w[0].t1_us), (0, 100));
+        assert_eq!(w[0].events.len(), 1);
+        assert!(!w[0].last);
+        assert_eq!(b.pending_len(), 2, "later events stay buffered");
+    }
+
+    #[test]
+    fn heavily_out_of_order_arrivals_reassemble_in_order() {
+        let mut b = ReorderBuffer::new(cfg(100, 100));
+        // Arrival order is fully reversed across three windows.
+        for t in [290u64, 250, 210, 190, 150, 110, 90, 50, 10] {
+            assert!(b.push(ev(t, (t % 8) as u16, 0)).unwrap());
+        }
+        // Watermark is the max seen (290, pushed first), so polling after
+        // the batch releases [0,100) and [100,200) but not [200,300).
+        let w = b.poll();
+        assert_eq!(w.len(), 1, "only [0,100) has end+slack <= 290");
+        assert_eq!(
+            w[0].events.iter().map(|e| e.t_us).collect::<Vec<_>>(),
+            vec![10, 50, 90],
+            "window events are time-ordered despite reversed arrival"
+        );
+        let rest = b.flush(300).unwrap();
+        assert_eq!(rest.len(), 2);
+        assert_eq!(
+            rest[0].events.iter().map(|e| e.t_us).collect::<Vec<_>>(),
+            vec![110, 150, 190]
+        );
+        assert_eq!(
+            rest[1].events.iter().map(|e| e.t_us).collect::<Vec<_>>(),
+            vec![210, 250, 290]
+        );
+        assert!(rest[1].last);
+        assert_eq!(b.late_dropped, 0);
+    }
+
+    #[test]
+    fn duplicate_timestamps_are_kept_and_ordered() {
+        let mut b = ReorderBuffer::new(cfg(100, 0));
+        b.push(ev(40, 1, 1)).unwrap();
+        b.push(ev(40, 2, 2)).unwrap();
+        b.push(ev(40, 1, 1)).unwrap();
+        let w = b.flush(99).unwrap();
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].events.len(), 3, "dedup is the encoder's job, not ingest's");
+        assert!(w[0].events.windows(2).all(|p| p[0].t_us <= p[1].t_us));
+    }
+
+    #[test]
+    fn empty_stream_flush_covers_the_whole_session() {
+        let mut b = ReorderBuffer::new(cfg(100, 10));
+        let w = b.flush(250).unwrap();
+        // [0,100), [100,200), then the last window absorbing to 250.
+        assert_eq!(w.len(), 3);
+        assert_eq!((w[0].t0_us, w[0].t1_us), (0, 100));
+        assert_eq!((w[1].t0_us, w[1].t1_us), (100, 200));
+        assert_eq!(w[2].t0_us, 200);
+        assert!(w[2].t1_us > 250, "tail window owns t == end");
+        assert!(w.iter().all(|x| x.events.is_empty()));
+        assert!(w[2].last && !w[0].last && !w[1].last);
+    }
+
+    #[test]
+    fn event_at_exact_session_end_lands_in_last_window() {
+        let mut b = ReorderBuffer::new(cfg(100, 10));
+        b.push(ev(200, 3, 3)).unwrap();
+        let w = b.flush(200).unwrap();
+        let last = w.last().unwrap();
+        assert!(last.last);
+        assert_eq!(last.events.len(), 1);
+        assert_eq!(b.late_dropped, 0);
+    }
+
+    #[test]
+    fn late_event_is_dropped_and_counted() {
+        let mut b = ReorderBuffer::new(cfg(100, 0));
+        b.push(ev(250, 0, 0)).unwrap();
+        let w = b.poll();
+        assert_eq!(w.len(), 2, "[0,100) and [100,200) are past the watermark");
+        // An event for the already-emitted first window arrives now.
+        assert!(!b.push(ev(50, 1, 1)).unwrap());
+        assert_eq!(b.late_dropped, 1);
+        assert_eq!(b.accepted, 1);
+    }
+
+    #[test]
+    fn overflow_drops_and_counts() {
+        let mut b = ReorderBuffer::new(IngestConfig { max_pending: 2, ..cfg(100, 0) });
+        assert!(b.push(ev(1, 0, 0)).unwrap());
+        assert!(b.push(ev(2, 0, 0)).unwrap());
+        assert!(!b.push(ev(3, 0, 0)).unwrap());
+        assert_eq!(b.overflow_dropped, 1);
+        assert_eq!(b.pending_len(), 2);
+    }
+
+    #[test]
+    fn far_future_timestamps_are_rejected_not_amplified() {
+        // A hostile/corrupt timestamp must become an error, not an
+        // unbounded run of empty windows inside the service lock.
+        let mut b = ReorderBuffer::new(IngestConfig { max_future_us: 1_000, ..cfg(100, 0) });
+        let err = b.push(ev(2_000, 0, 0)).unwrap_err();
+        assert!(format!("{err}").contains("past the emitted frontier"), "got: {err}");
+        assert!(b.push(ev(900, 0, 0)).unwrap(), "in-bound events still accepted");
+        // Same bound for a declared stream end.
+        let err = b.flush(500_000).unwrap_err();
+        assert!(format!("{err}").contains("past the emitted frontier"), "got: {err}");
+        let w = b.flush(950).unwrap();
+        assert!(w.last().unwrap().last);
+        assert_eq!(w.iter().map(|x| x.events.len()).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn mid_stride_close_ends_the_final_window_at_the_declared_end() {
+        let mut b = ReorderBuffer::new(cfg(100, 0));
+        b.push(ev(130, 0, 0)).unwrap();
+        let w = b.flush(150).unwrap();
+        // One full stride, then a short final window — no phantom span
+        // past the declared end.
+        assert_eq!(w.len(), 2);
+        assert_eq!((w[1].t0_us, w[1].t1_us), (100, 151));
+        assert!(w[1].last);
+        assert_eq!(w[1].events.len(), 1);
+    }
+
+    #[test]
+    fn flush_after_frontier_passed_end_emits_zero_span_last_marker() {
+        // poll() already emitted past the (late, inconsistent) declared
+        // end: the close must not fabricate post-end timesteps.
+        let mut b = ReorderBuffer::new(cfg(100, 0));
+        b.push(ev(250, 0, 0)).unwrap();
+        assert_eq!(b.poll().len(), 2, "frontier advances to 200");
+        let w = b.flush(150).unwrap();
+        assert_eq!(w.len(), 1);
+        assert!(w[0].last);
+        assert_eq!(w[0].span_us(), 0, "no post-end stride");
+        assert!(w[0].events.is_empty());
+        assert_eq!(b.late_dropped, 1, "the t=250 event is past the declared end");
+    }
+
+    #[test]
+    fn events_past_the_declared_end_are_dropped_at_flush() {
+        let mut b = ReorderBuffer::new(cfg(100, 50));
+        b.push(ev(50, 0, 0)).unwrap();
+        b.push(ev(500, 0, 0)).unwrap();
+        let w = b.flush(100).unwrap();
+        assert_eq!(w.last().unwrap().events.len(), 1);
+        assert_eq!(b.late_dropped, 1, "t=500 is past the declared end");
+    }
+}

@@ -1,0 +1,44 @@
+//! Streaming inference service: sessionized DVS ingestion with
+//! vmem-resident incremental windows.
+//!
+//! The offline tiers ([`crate::coordinator::Coordinator`] and the batched
+//! [`crate::coordinator::Engine`]) replay whole pre-recorded samples and
+//! discard all state between them. Real event-based deployments are
+//! continuous: a DVS camera never stops, and the paper's central
+//! system-level idea — layer-wise weight/output stationarity with unified
+//! CIM storage for weights *and* membrane potentials — means the SNN's
+//! vmem is persistent state that should stay resident across consecutive
+//! input windows. This module is that serving tier:
+//!
+//! * [`ingest`] — per-session AER ingestion: a reorder/jitter buffer that
+//!   accepts out-of-order [`crate::events::DvsEvent`]s, rejects invalid
+//!   client input with recoverable errors, and emits time-ordered
+//!   micro-windows under a watermark discipline.
+//! * [`session`] — per-client state: checkpointed membrane potentials
+//!   ([`crate::runtime::StateSnapshot`]) so each window resumes where the
+//!   last ended, rolling label-smoothed classification, and an LRU
+//!   residency budget whose spills are priced as DRAM traffic in
+//!   [`crate::coordinator::RunMetrics`].
+//! * [`service`] — the admission/backpressure front end: bounded queues,
+//!   round-robin session fairness, newest-first load shedding, a worker
+//!   pool multiplexing sessions over [`crate::runtime::StepBackend`]s, and
+//!   p50/p95/p99 window-latency + sessions/sec instrumentation.
+//!
+//! Correctness anchor: a sample streamed through the service in aligned
+//! micro-windows is bit-identical (spikes, final vmem, prediction, SOPs,
+//! CIM ledger) to the same sample run monolithically through the
+//! sequential coordinator — pinned by `rust/tests/integration_serve.rs`.
+
+pub mod ingest;
+pub mod session;
+pub mod service;
+
+pub use ingest::{IngestConfig, MicroWindow, ReorderBuffer};
+pub use service::{
+    gesture_traffic, ServeReport, ServiceConfig, SessionResult, SessionTraffic,
+    StreamingService,
+};
+pub use session::{
+    encode_window, QueuedWindow, ResidencyCharge, Session, SessionConfig, SessionManager,
+    WindowOutcome,
+};

@@ -1,0 +1,843 @@
+//! The streaming front end: admission, backpressure, and the worker pool.
+//!
+//! ```text
+//!  clients ──ingest──► ReorderBuffer (per session, jitter absorb)
+//!                         │ poll: time-ordered MicroWindows
+//!                         ▼
+//!                 admission control ──over capacity──► shed (counted)
+//!                         │
+//!                         ▼
+//!              per-session FIFO + ready queue (round-robin fairness)
+//!                         │ one window per session in flight
+//!                         ▼
+//!               worker pool (own StepBackend each, via factory)
+//!                restore vmem → run_frames → snapshot vmem
+//!                         │
+//!                         ▼
+//!            Session commit: rate, smoothed logits, metrics, latency
+//! ```
+//!
+//! Two invariants make streamed inference equal offline inference:
+//!
+//! 1. **Per-session order.** A session's window `n + 1` depends on the
+//!    vmem left by window `n`, so at most one window per session is ever
+//!    in flight, and windows run in emission order. Different sessions'
+//!    windows interleave freely across the pool.
+//! 2. **State travels by snapshot.** A worker restores the session's
+//!    checkpointed [`StateSnapshot`] into its own backend before the
+//!    window and checkpoints it back after, so *which* worker runs a
+//!    window never matters (the per-seed determinism of
+//!    [`crate::runtime::NativeScnn`] makes backends interchangeable).
+//!
+//! Fairness is round-robin: a session that finishes a window re-enters
+//! the ready queue at the back. Overload is handled by shedding newest
+//! windows once the global or per-session queue bound is hit — sessions
+//! degrade by skipping time rather than stalling the service.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure};
+
+use crate::coordinator::engine::{BackendFactory, SampleBuffers, SamplePlan, WindowTotals};
+use crate::coordinator::metrics::{LatencyStats, RunMetrics};
+use crate::dataflow::Policy;
+use crate::events::{DvsEvent, GestureClass, GestureGenerator};
+use crate::runtime::{NativeScnn, StateSnapshot, StepBackend};
+use crate::snn::Network;
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::ingest::MicroWindow;
+use super::session::{
+    encode_window, QueuedWindow, SessionConfig, SessionManager, WindowOutcome,
+};
+
+/// Service-level configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads (each constructs its own backend).
+    pub workers: usize,
+    /// Global bound on admitted-but-unexecuted windows; admissions beyond
+    /// it are shed.
+    pub queue_capacity: usize,
+    /// Per-session bound on queued windows.
+    pub per_session_capacity: usize,
+    /// Vmem residency budget in bits. `0` derives it from the plan's
+    /// system config (CIM array + global buffer capacity).
+    pub resident_budget_bits: u64,
+    /// Session parameters (shared by all sessions).
+    pub session: SessionConfig,
+}
+
+impl ServiceConfig {
+    /// Nominal operating point: deep queues, budget derived from the
+    /// modeled chip capacity, 48×48 gesture sessions.
+    pub fn nominal(workers: usize) -> ServiceConfig {
+        ServiceConfig {
+            workers,
+            queue_capacity: 4096,
+            per_session_capacity: 256,
+            resident_budget_bits: 0,
+            session: SessionConfig::default_48(),
+        }
+    }
+}
+
+/// One synthetic client stream for the traffic driver: events in arrival
+/// order (not necessarily time order) plus the declared stream end.
+#[derive(Debug, Clone)]
+pub struct SessionTraffic {
+    /// Session id to open.
+    pub id: u64,
+    /// Ground-truth label, when known.
+    pub label: Option<usize>,
+    /// Declared end of the stream (microseconds).
+    pub end_us: u64,
+    /// Events in arrival order.
+    pub events: Vec<DvsEvent>,
+}
+
+/// Synthetic gesture traffic: `n` sessions cycling through the ten
+/// classes, each a generated DVS gesture sample whose events are delivered
+/// with up to `jitter_us` of arrival jitter (events stay roughly
+/// time-ordered but locally reordered, as a real transport does). Keep
+/// `jitter_us` at or below the session's reorder slack for zero-drop
+/// delivery.
+pub fn gesture_traffic(n: usize, seed: u64, jitter_us: u64) -> Vec<SessionTraffic> {
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let label = i % 10;
+            let stream = gen.sample(GestureClass::from_label(label), &mut rng);
+            let end_us = stream.duration_us;
+            let mut keyed: Vec<(u64, DvsEvent)> = stream
+                .events
+                .iter()
+                .map(|&e| (e.t_us + rng.below(jitter_us.max(1)), e))
+                .collect();
+            keyed.sort_by_key(|&(k, _)| k);
+            SessionTraffic {
+                id: i as u64,
+                label: Some(label),
+                end_us,
+                events: keyed.into_iter().map(|(_, e)| e).collect(),
+            }
+        })
+        .collect()
+}
+
+/// Shared mutable service state (behind one mutex; compute happens outside
+/// it, only admission/commit bookkeeping inside).
+struct ServiceState {
+    sessions: SessionManager,
+    /// Sessions with queued windows and no window in flight, FIFO.
+    ready: VecDeque<u64>,
+    /// Admitted, unexecuted windows (global, for the capacity bound).
+    queued_windows: usize,
+    /// Windows currently executing on workers.
+    in_flight: usize,
+    /// Windows dropped by admission control.
+    shed: u64,
+    shutdown: bool,
+    first_error: Option<anyhow::Error>,
+}
+
+/// One unit of worker work, captured under the state lock.
+struct Job {
+    id: u64,
+    window: MicroWindow,
+    enqueued_at: Instant,
+    state: StateSnapshot,
+}
+
+/// The streaming inference service.
+pub struct StreamingService {
+    plan: Arc<SamplePlan>,
+    factory: Arc<BackendFactory>,
+    cfg: ServiceConfig,
+    state: Mutex<ServiceState>,
+    signal: Condvar,
+}
+
+impl StreamingService {
+    /// Build a service over a shared plan and backend factory.
+    pub fn new(
+        plan: Arc<SamplePlan>,
+        factory: Arc<BackendFactory>,
+        mut cfg: ServiceConfig,
+    ) -> StreamingService {
+        if cfg.resident_budget_bits == 0 {
+            cfg.resident_budget_bits =
+                plan.energy.cfg.cim_bits() + plan.energy.cfg.gbuf_bits;
+        }
+        let sessions =
+            SessionManager::new(cfg.session.clone(), &plan.net, cfg.resident_budget_bits);
+        StreamingService {
+            plan,
+            factory,
+            cfg,
+            state: Mutex::new(ServiceState {
+                sessions,
+                ready: VecDeque::new(),
+                queued_windows: 0,
+                in_flight: 0,
+                shed: 0,
+                shutdown: false,
+                first_error: None,
+            }),
+            signal: Condvar::new(),
+        }
+    }
+
+    /// Convenience: a service over the pure-Rust [`NativeScnn`] backend,
+    /// deterministic from `seed`.
+    pub fn native(
+        net: Network,
+        seed: u64,
+        num_macros: usize,
+        policy: Policy,
+        cfg: ServiceConfig,
+    ) -> StreamingService {
+        let plan = Arc::new(SamplePlan::new(net.clone(), num_macros, policy));
+        let factory: Arc<BackendFactory> = Arc::new(move || {
+            Ok(Box::new(NativeScnn::new(net.clone(), seed)) as Box<dyn StepBackend>)
+        });
+        StreamingService::new(plan, factory, cfg)
+    }
+
+    /// The shared per-sample plan.
+    pub fn plan(&self) -> &SamplePlan {
+        &self.plan
+    }
+
+    /// The service configuration (with the residency budget resolved).
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Open a new session.
+    pub fn open_session(&self, id: u64, label: Option<usize>) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        ensure!(!st.shutdown, "service is shut down");
+        st.sessions.open(id, &self.plan.net, label)
+    }
+
+    /// Deliver a batch of events for a session. Out-of-bounds events are a
+    /// recoverable error; late/overflow events are dropped and counted by
+    /// the session's jitter buffer. Completed windows are admitted to the
+    /// run queue (or shed under overload).
+    pub fn ingest(&self, id: u64, events: &[DvsEvent]) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        ensure!(!st.shutdown, "service is shut down");
+        let st_ref = &mut *st;
+        let windows = {
+            let s = st_ref
+                .sessions
+                .get_mut(id)
+                .ok_or_else(|| anyhow!("unknown session {id}"))?;
+            ensure!(!s.closed, "session {id} is closed");
+            for &e in events {
+                let _ = s.ingest.push(e)?;
+            }
+            s.ingest.poll()
+        };
+        Self::admit_windows(st_ref, &self.cfg, id, windows);
+        drop(st);
+        self.signal.notify_all();
+        Ok(())
+    }
+
+    /// Close a session's stream at `end_us`: flush the jitter buffer and
+    /// admit the remaining windows (the final one marked `last`).
+    pub fn close_session(&self, id: u64, end_us: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        ensure!(!st.shutdown, "service is shut down");
+        let st_ref = &mut *st;
+        let windows = {
+            let s = st_ref
+                .sessions
+                .get_mut(id)
+                .ok_or_else(|| anyhow!("unknown session {id}"))?;
+            ensure!(!s.closed, "session {id} already closed");
+            // Validate the declared end before committing the close: a
+            // rejected end leaves the session open for a corrected retry.
+            let windows = s.ingest.flush(end_us)?;
+            s.closed = true;
+            windows
+        };
+        Self::admit_windows(st_ref, &self.cfg, id, windows);
+        drop(st);
+        self.signal.notify_all();
+        Ok(())
+    }
+
+    /// Admission control: bound the global and per-session queues,
+    /// shedding the newest windows on overflow (degrade by skipping time,
+    /// never by stalling).
+    fn admit_windows(
+        st: &mut ServiceState,
+        cfg: &ServiceConfig,
+        id: u64,
+        windows: Vec<MicroWindow>,
+    ) {
+        for w in windows {
+            let over_global = st.queued_windows >= cfg.queue_capacity;
+            let s = match st.sessions.get_mut(id) {
+                Some(s) => s,
+                None => return,
+            };
+            if over_global || s.queue.len() >= cfg.per_session_capacity {
+                s.windows_shed += 1;
+                st.shed += 1;
+                if w.last {
+                    // A shed final window still finishes the session.
+                    s.finished = true;
+                }
+                continue;
+            }
+            let was_idle = s.queue.is_empty() && !s.running;
+            s.queue.push_back(QueuedWindow { window: w, enqueued_at: Instant::now() });
+            st.queued_windows += 1;
+            if was_idle {
+                st.ready.push_back(id);
+            }
+        }
+    }
+
+    /// Record a fatal error and wake everyone.
+    fn fail(&self, e: anyhow::Error) {
+        let mut st = self.state.lock().unwrap();
+        if st.first_error.is_none() {
+            st.first_error = Some(e);
+        }
+        st.shutdown = true;
+        drop(st);
+        self.signal.notify_all();
+    }
+
+    /// Worker body: steal the next ready session's window, run it on this
+    /// worker's backend with the session's restored state, commit.
+    fn worker_loop(&self) {
+        let make: &BackendFactory = self.factory.as_ref();
+        let mut backend = match make() {
+            Ok(b) => b,
+            Err(e) => {
+                self.fail(e);
+                return;
+            }
+        };
+        let mut bufs = SampleBuffers::default();
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if let Some(id) = st.ready.pop_front() {
+                        let st_ref = &mut *st;
+                        let (window, enqueued_at, state) = {
+                            let s = st_ref
+                                .sessions
+                                .get_mut(id)
+                                .expect("ready session exists");
+                            let qw = s.queue.pop_front().expect("ready implies queued");
+                            s.running = true;
+                            (qw.window, qw.enqueued_at, s.state.clone())
+                        };
+                        st_ref.queued_windows -= 1;
+                        st_ref.in_flight += 1;
+                        // Residency: admitting this window makes the
+                        // session's vmem resident (possibly spilling LRU
+                        // peers) — accounted in the SessionManager and
+                        // priced at report time.
+                        let _ = st_ref.sessions.admit(id);
+                        break Job { id, window, enqueued_at, state };
+                    }
+                    st = self.signal.wait(st).unwrap();
+                }
+            };
+
+            let t0 = Instant::now();
+            let outcome = self.run_window(backend.as_mut(), &mut bufs, &job);
+            let wall_s = t0.elapsed().as_secs_f64();
+
+            match outcome {
+                Ok((window_rate, new_state, totals)) => {
+                    let mut st = self.state.lock().unwrap();
+                    let st_ref = &mut *st;
+                    let latency_s = job.enqueued_at.elapsed().as_secs_f64();
+                    let requeue = {
+                        let s = st_ref
+                            .sessions
+                            .get_mut(job.id)
+                            .expect("session exists while running");
+                        s.commit_window(
+                            self.cfg.session.smoothing,
+                            WindowOutcome {
+                                rate: window_rate,
+                                state: new_state,
+                                totals,
+                                latency_s,
+                                wallclock_s: wall_s,
+                                last: job.window.last,
+                            },
+                        );
+                        s.running = false;
+                        !s.queue.is_empty()
+                    };
+                    if requeue {
+                        st_ref.ready.push_back(job.id);
+                    }
+                    st_ref.in_flight -= 1;
+                    drop(st);
+                    self.signal.notify_all();
+                }
+                Err(e) => {
+                    // One lock for decrement + error record: drain() must
+                    // never observe in_flight == 0 with the error unset.
+                    let mut st = self.state.lock().unwrap();
+                    st.in_flight -= 1;
+                    if st.first_error.is_none() {
+                        st.first_error = Some(e);
+                    }
+                    st.shutdown = true;
+                    drop(st);
+                    self.signal.notify_all();
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Execute one window on a worker's backend (no locks held): restore
+    /// the session checkpoint, run the encoded frames, checkpoint back.
+    fn run_window(
+        &self,
+        backend: &mut dyn StepBackend,
+        bufs: &mut SampleBuffers,
+        job: &Job,
+    ) -> Result<(Vec<i64>, StateSnapshot, WindowTotals)> {
+        let frames = encode_window(&self.cfg.session, &job.window);
+        backend.restore(&job.state)?;
+        let mut window_rate = vec![0i64; 10];
+        let totals = self.plan.run_frames(backend, bufs, &frames, &mut window_rate)?;
+        Ok((window_rate, backend.snapshot(), totals))
+    }
+
+    /// Block until every admitted window has executed (or a worker
+    /// failed). Errors surface here.
+    pub fn drain(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.first_error.is_some() {
+                return Err(st.first_error.take().expect("just checked"));
+            }
+            if st.shutdown || (st.queued_windows == 0 && st.in_flight == 0) {
+                return Ok(());
+            }
+            st = self.signal.wait(st).unwrap();
+        }
+    }
+
+    /// Release the worker pool (idempotent).
+    pub fn stop(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        self.signal.notify_all();
+    }
+
+    /// The synthetic-traffic ingest driver: open all sessions, interleave
+    /// event delivery `chunk` events at a time round-robin across sessions
+    /// (simulating concurrent streams), close every session, drain.
+    fn drive(&self, traffic: &[SessionTraffic], chunk: usize) -> Result<()> {
+        for t in traffic {
+            self.open_session(t.id, t.label)?;
+        }
+        let mut offsets = vec![0usize; traffic.len()];
+        let mut live = true;
+        while live {
+            live = false;
+            for (i, t) in traffic.iter().enumerate() {
+                if offsets[i] >= t.events.len() {
+                    continue;
+                }
+                let hi = (offsets[i] + chunk).min(t.events.len());
+                self.ingest(t.id, &t.events[offsets[i]..hi])?;
+                offsets[i] = hi;
+                if hi < t.events.len() {
+                    live = true;
+                }
+            }
+        }
+        for t in traffic {
+            self.close_session(t.id, t.end_us)?;
+        }
+        self.drain()
+    }
+
+    /// Drive a full synthetic-traffic run: spawn the worker pool, run the
+    /// ingest driver, and report.
+    pub fn serve(&self, traffic: &[SessionTraffic], chunk: usize) -> Result<ServeReport> {
+        let chunk = chunk.max(1);
+        let t0 = Instant::now();
+        let n_workers = self.cfg.workers.max(1);
+        std::thread::scope(|scope| -> Result<()> {
+            for _ in 0..n_workers {
+                scope.spawn(|| self.worker_loop());
+            }
+            let outcome = self.drive(traffic, chunk);
+            self.stop();
+            match outcome {
+                // A worker failure can surface indirectly (e.g. the driver
+                // sees "service is shut down"); prefer the root cause.
+                Err(e) => {
+                    let mut st = self.state.lock().unwrap();
+                    Err(st.first_error.take().unwrap_or(e))
+                }
+                ok => ok,
+            }
+        })?;
+        Ok(self.report(t0.elapsed().as_secs_f64()))
+    }
+
+    /// Copy out one session's results (for equivalence tests and
+    /// clients polling a rolling classification).
+    pub fn session_result(&self, id: u64) -> Option<SessionResult> {
+        let st = self.state.lock().unwrap();
+        st.sessions.get(id).map(|s| SessionResult {
+            id: s.id,
+            label: s.label,
+            rate: s.rate.clone(),
+            prediction: s.prediction(),
+            rolling_prediction: s.rolling_prediction(),
+            state: s.state.clone(),
+            windows_done: s.windows_done,
+            windows_shed: s.windows_shed,
+            finished: s.finished,
+            metrics: s.metrics(),
+        })
+    }
+
+    /// Assemble the service-wide report: per-session metrics merged in id
+    /// order plus service-level residency traffic priced at the DRAM
+    /// energy of the plan's system model.
+    pub fn report(&self, wallclock_s: f64) -> ServeReport {
+        let st = self.state.lock().unwrap();
+        let mut metrics = RunMetrics::default();
+        let mut latency = LatencyStats::new();
+        let mut windows_done = 0u64;
+        let mut events_dropped = 0u64;
+        let mut finished = 0u64;
+        let mut rolling_correct = 0u64;
+        for id in st.sessions.ids() {
+            let s = st.sessions.get(id).expect("listed id exists");
+            metrics.merge(&s.metrics());
+            latency.merge(&s.latency);
+            windows_done += s.windows_done;
+            events_dropped += s.ingest.late_dropped + s.ingest.overflow_dropped;
+            if s.finished {
+                finished += 1;
+            }
+            if let Some(l) = s.label {
+                rolling_correct += (s.rolling_prediction() == l) as u64;
+            }
+        }
+        let dram_bits = st.sessions.spill_bits + st.sessions.fill_bits;
+        metrics.state_spill_bits = dram_bits;
+        metrics.state_evictions = st.sessions.evictions;
+        metrics.energy.movement_pj += dram_bits as f64 * self.plan.energy.cfg.e_dram_pj_bit;
+        ServeReport {
+            workers: self.cfg.workers,
+            sessions: st.sessions.len() as u64,
+            finished_sessions: finished,
+            windows_done,
+            windows_shed: st.shed,
+            events_dropped,
+            rolling_correct,
+            evictions: st.sessions.evictions,
+            state_dram_bits: dram_bits,
+            latency,
+            metrics,
+            wallclock_s,
+        }
+    }
+}
+
+/// Snapshot of one session's serving results.
+#[derive(Debug, Clone)]
+pub struct SessionResult {
+    /// Session id.
+    pub id: u64,
+    /// Ground-truth label, when known.
+    pub label: Option<usize>,
+    /// Accumulated classifier spike counts.
+    pub rate: Vec<i64>,
+    /// Final prediction (argmax of the accumulated rate).
+    pub prediction: usize,
+    /// Rolling prediction (argmax of the label-smoothed window rates).
+    pub rolling_prediction: usize,
+    /// Checkpointed membrane state after the last executed window.
+    pub state: StateSnapshot,
+    /// Windows executed.
+    pub windows_done: u64,
+    /// Windows shed.
+    pub windows_shed: u64,
+    /// The final window has executed (or was shed after close).
+    pub finished: bool,
+    /// This session's model metrics.
+    pub metrics: RunMetrics,
+}
+
+/// Result of a traffic run through [`StreamingService::serve`].
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Worker threads configured.
+    pub workers: usize,
+    /// Sessions opened.
+    pub sessions: u64,
+    /// Sessions whose final window executed (or was shed after close).
+    pub finished_sessions: u64,
+    /// Windows executed.
+    pub windows_done: u64,
+    /// Windows shed by admission control.
+    pub windows_shed: u64,
+    /// Events dropped at ingest (late + overflow).
+    pub events_dropped: u64,
+    /// Sessions whose *rolling* (label-smoothed) prediction was correct.
+    pub rolling_correct: u64,
+    /// Session-state evictions under the residency budget.
+    pub evictions: u64,
+    /// Session-state DRAM traffic (spill + refill), bits.
+    pub state_dram_bits: u64,
+    /// Per-window admission→completion latency.
+    pub latency: LatencyStats,
+    /// Merged model metrics (per-session, id order, plus spill pricing).
+    pub metrics: RunMetrics,
+    /// End-to-end host wall-clock of the run (seconds).
+    pub wallclock_s: f64,
+}
+
+impl ServeReport {
+    /// Completed sessions per second of host wall-clock.
+    pub fn sessions_per_sec(&self) -> f64 {
+        if self.wallclock_s <= 0.0 {
+            return 0.0;
+        }
+        self.finished_sessions as f64 / self.wallclock_s
+    }
+
+    /// Executed windows per second of host wall-clock.
+    pub fn windows_per_sec(&self) -> f64 {
+        if self.wallclock_s <= 0.0 {
+            return 0.0;
+        }
+        self.windows_done as f64 / self.wallclock_s
+    }
+
+    /// Fraction of admitted-or-shed windows that were shed.
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.windows_done + self.windows_shed;
+        if total == 0 {
+            return 0.0;
+        }
+        self.windows_shed as f64 / total as f64
+    }
+
+    /// Render a report block.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "sessions           {} opened, {} finished ({:.1} sessions/s)\n",
+            self.sessions,
+            self.finished_sessions,
+            self.sessions_per_sec(),
+        ));
+        out.push_str(&format!(
+            "windows            {} done, {} shed ({:.2} % shed rate), {:.1} windows/s\n",
+            self.windows_done,
+            self.windows_shed,
+            100.0 * self.shed_rate(),
+            self.windows_per_sec(),
+        ));
+        out.push_str(&format!("window latency     {}\n", self.latency.line()));
+        out.push_str(&format!(
+            "ingest drops       {} events (late + overflow)\n",
+            self.events_dropped
+        ));
+        // Residency traffic is reported by the embedded metrics block
+        // ("state spills" line) when any eviction occurred.
+        out.push_str(&format!(
+            "rolling accuracy   {:.1} % ({} of {} sessions)\n",
+            100.0 * self.rolling_correct as f64 / self.sessions.max(1) as f64,
+            self.rolling_correct,
+            self.sessions,
+        ));
+        out.push_str(&self.metrics.report());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::SamplePlan;
+    use crate::snn::{LayerSpec, Resolution};
+
+    const SEED: u64 = 0xBEEF;
+    const MACROS: usize = 2;
+
+    /// Small two-layer net over the 48×48 substrate, 16 timesteps (so a
+    /// 100-ms sample chops into 4 windows of 4 frames).
+    fn small_net() -> Network {
+        let r = Resolution::new(4, 9);
+        Network::new(
+            "serve-test",
+            vec![
+                LayerSpec::conv("C1", 2, 4, 3, 4, 1, 48, 48, r),
+                LayerSpec::fc("F1", 4 * 12 * 12, 10, Resolution::new(5, 10)),
+            ],
+            16,
+        )
+    }
+
+    fn service(workers: usize, cfg_mut: impl FnOnce(&mut ServiceConfig)) -> StreamingService {
+        let mut cfg = ServiceConfig::nominal(workers);
+        cfg_mut(&mut cfg);
+        StreamingService::native(small_net(), SEED, MACROS, Policy::HsOpt, cfg)
+    }
+
+    #[test]
+    fn single_session_streamed_matches_monolithic() {
+        // The module-level smoke version of the acceptance test (the full
+        // ≥4-window bit-identity pin lives in rust/tests/integration_serve.rs).
+        let gen = GestureGenerator::default_48();
+        let mut rng = Rng::new(5);
+        let stream = gen.sample(GestureClass::RightCw, &mut rng);
+
+        // Monolithic reference.
+        let plan = SamplePlan::new(small_net(), MACROS, Policy::HsOpt);
+        let mut backend = NativeScnn::new(small_net(), SEED);
+        let mut bufs = SampleBuffers::default();
+        let mono = plan
+            .run_sample(&mut backend, &mut bufs, &stream, Some(3))
+            .unwrap();
+        let mono_state = backend.snapshot();
+
+        // Streamed: one session, in-order delivery, 4 windows of 4 frames.
+        let svc = service(1, |_| {});
+        let traffic = vec![SessionTraffic {
+            id: 0,
+            label: Some(3),
+            end_us: stream.duration_us,
+            events: stream.events.clone(),
+        }];
+        let report = svc.serve(&traffic, 64).unwrap();
+        assert_eq!(report.finished_sessions, 1);
+        assert_eq!(report.windows_done, 4);
+        assert_eq!(report.windows_shed, 0);
+        assert_eq!(report.events_dropped, 0);
+        assert_eq!(report.evictions, 0, "one session fits the nominal budget");
+
+        let s = svc.session_result(0).unwrap();
+        assert_eq!(s.rate, mono.rate, "streamed spikes == monolithic spikes");
+        assert_eq!(s.prediction, mono.prediction);
+        assert_eq!(s.state, mono_state, "final vmem bit-identical");
+        assert_eq!(s.metrics.timesteps, 16);
+        assert_eq!(s.metrics.sops, mono.metrics.sops);
+        assert_eq!(s.metrics.cim, mono.metrics.cim);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_session_results() {
+        let traffic = gesture_traffic(6, 11, 5_000);
+        let run = |workers: usize| {
+            let svc = service(workers, |_| {});
+            let report = svc.serve(&traffic, 32).unwrap();
+            assert_eq!(report.finished_sessions, 6);
+            assert_eq!(report.windows_shed, 0, "nominal load never sheds");
+            (0..6u64)
+                .map(|id| {
+                    let s = svc.session_result(id).unwrap();
+                    (s.rate, s.prediction, s.state, s.metrics.sops)
+                })
+                .collect::<Vec<_>>()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x, y, "session {i} must not depend on the pool size");
+        }
+    }
+
+    #[test]
+    fn tiny_residency_budget_spills_and_prices_dram() {
+        let traffic = gesture_traffic(4, 3, 0);
+        // Budget of exactly one session's vmem: interleaved sessions evict
+        // each other constantly.
+        let vmem = small_net().total_vmem_bits();
+        let tight = service(2, |c| c.resident_budget_bits = vmem);
+        let tight_report = tight.serve(&traffic, 16).unwrap();
+        assert!(tight_report.evictions > 0, "interleaving must evict");
+        assert!(tight_report.state_dram_bits > 0);
+        assert!(tight_report.metrics.state_evictions > 0);
+
+        let roomy = service(2, |_| {});
+        let roomy_report = roomy.serve(&traffic, 16).unwrap();
+        assert_eq!(roomy_report.evictions, 0);
+        assert!(
+            tight_report.metrics.energy.movement_pj
+                > roomy_report.metrics.energy.movement_pj,
+            "spill traffic must show up as DRAM movement energy"
+        );
+        // Residency never changes what is computed — only what it costs.
+        assert_eq!(tight_report.metrics.sops, roomy_report.metrics.sops);
+        assert_eq!(tight_report.metrics.correct, roomy_report.metrics.correct);
+    }
+
+    #[test]
+    fn zero_capacity_sheds_every_window_without_stalling() {
+        let traffic = gesture_traffic(3, 7, 0);
+        let svc = service(2, |c| c.queue_capacity = 0);
+        let report = svc.serve(&traffic, 32).unwrap();
+        assert_eq!(report.windows_done, 0);
+        assert!(report.windows_shed > 0);
+        assert!((report.shed_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(
+            report.finished_sessions, 3,
+            "shed final windows still finish their sessions"
+        );
+    }
+
+    #[test]
+    fn ingest_rejects_unknown_closed_and_invalid() {
+        let svc = service(1, |_| {});
+        let e = DvsEvent { t_us: 0, x: 0, y: 0, polarity: true };
+        assert!(svc.ingest(9, &[e]).is_err(), "unknown session");
+        svc.open_session(9, None).unwrap();
+        assert!(svc.open_session(9, None).is_err(), "duplicate id");
+        let bad = DvsEvent { t_us: 0, x: 48, y: 0, polarity: true };
+        let err = svc.ingest(9, &[bad]).unwrap_err();
+        assert!(format!("{err}").contains("out of sensor bounds"));
+        svc.close_session(9, 1_000).unwrap();
+        assert!(svc.ingest(9, &[e]).is_err(), "closed session");
+        assert!(svc.close_session(9, 1_000).is_err(), "double close");
+        svc.stop();
+    }
+
+    #[test]
+    fn backend_failure_surfaces_from_serve() {
+        let plan = Arc::new(SamplePlan::new(small_net(), MACROS, Policy::HsOpt));
+        let factory: Arc<BackendFactory> =
+            Arc::new(|| Err(anyhow!("backend construction refused")));
+        let svc = StreamingService::new(plan, factory, ServiceConfig::nominal(2));
+        let traffic = gesture_traffic(1, 1, 0);
+        let err = svc.serve(&traffic, 32).unwrap_err();
+        assert!(format!("{err}").contains("refused"));
+    }
+}

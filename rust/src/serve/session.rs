@@ -1,0 +1,602 @@
+//! Per-client session state and vmem residency management.
+//!
+//! The paper's layer-wise weight/output stationarity makes an SNN's
+//! membrane potentials *persistent state* held in the unified CIM storage.
+//! A streaming session exploits exactly that: each micro-window resumes
+//! from the previous window's vmem ([`StateSnapshot`]) instead of
+//! re-simulating from reset, so serving is incremental in the same sense
+//! the chip is output-stationary.
+//!
+//! Residency is a budget, not a given: the CIM array plus global buffer
+//! hold only so many sessions' vmem. [`SessionManager`] tracks an LRU set
+//! of resident sessions against `resident_budget_bits`; admitting a window
+//! of a non-resident session refills its state from DRAM, and overflowing
+//! the budget evicts the least-recently-used session — both priced as DRAM
+//! traffic in [`RunMetrics`] (`state_spill_bits` / `state_evictions` and
+//! `energy.movement_pj`), the serving-tier analogue of the paper's
+//! streamed-operand energy.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use crate::coordinator::engine::WindowTotals;
+use crate::coordinator::metrics::{LatencyStats, RunMetrics};
+use crate::events::SpikeFrame;
+use crate::runtime::{ScnnRunner, StateSnapshot};
+use crate::snn::Network;
+use crate::Result;
+
+use super::ingest::{IngestConfig, MicroWindow, ReorderBuffer};
+
+/// Session-level configuration, shared by every session of a service.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Sensor width in pixels.
+    pub width: u16,
+    /// Sensor height in pixels.
+    pub height: u16,
+    /// SNN timestep width in microseconds (one spike frame per step).
+    pub step_us: u64,
+    /// Timesteps per micro-window (window span = `step_us` × this).
+    pub frames_per_window: usize,
+    /// Reorder slack for the jitter buffer (microseconds).
+    pub max_lateness_us: u64,
+    /// Ingest buffer bound (events per session).
+    pub max_pending_events: usize,
+    /// Bound on timestamps past the emitted frontier (malformed-input
+    /// guard; see [`IngestConfig::max_future_us`]).
+    pub max_future_us: u64,
+    /// EMA coefficient for rolling (label-smoothed) classification: the
+    /// weight of the newest window's class rates.
+    pub smoothing: f64,
+}
+
+impl SessionConfig {
+    /// Defaults matched to the 48×48 gesture workload: 6.25-ms timesteps
+    /// (16 per 100-ms sample), 4 timesteps per window.
+    pub fn default_48() -> SessionConfig {
+        SessionConfig {
+            width: 48,
+            height: 48,
+            step_us: 6_250,
+            frames_per_window: 4,
+            max_lateness_us: 12_500,
+            max_pending_events: 1 << 16,
+            max_future_us: 10_000_000,
+            smoothing: 0.35,
+        }
+    }
+
+    /// Micro-window span in microseconds.
+    pub fn window_us(&self) -> u64 {
+        self.step_us * self.frames_per_window as u64
+    }
+
+    /// The matching ingest configuration.
+    pub fn ingest(&self) -> IngestConfig {
+        IngestConfig {
+            width: self.width,
+            height: self.height,
+            window_us: self.window_us(),
+            max_lateness_us: self.max_lateness_us,
+            max_pending: self.max_pending_events,
+            max_future_us: self.max_future_us,
+        }
+    }
+}
+
+/// Encode one micro-window into per-timestep spike frames with the same
+/// binning rule as [`crate::events::encode_frames`]: frame `k` of the
+/// window owns `[t0 + k·step, t0 + (k+1)·step)`, and the final frame of a
+/// `last` window absorbs the tail (clamped index) — so a window sequence
+/// aligned to the monolithic frame grid encodes bit-identically to the
+/// monolithic encoder.
+pub fn encode_window(cfg: &SessionConfig, w: &MicroWindow) -> Vec<SpikeFrame> {
+    let step = cfg.step_us.max(1);
+    let n = if w.last {
+        // Partial tail window: only as many frames as its span needs,
+        // capped at the nominal window size. A zero-span last marker
+        // (stream closed at or before the emitted frontier) encodes to
+        // zero frames — nothing runs past the declared end.
+        (w.span_us().div_ceil(step) as usize).min(cfg.frames_per_window)
+    } else {
+        cfg.frames_per_window
+    };
+    let mut frames: Vec<SpikeFrame> =
+        (0..n).map(|_| SpikeFrame::new(cfg.width, cfg.height)).collect();
+    if n == 0 {
+        return frames;
+    }
+    for e in &w.events {
+        let idx = (((e.t_us.saturating_sub(w.t0_us)) / step) as usize).min(n - 1);
+        frames[idx].set(if e.polarity { 0 } else { 1 }, e.x, e.y);
+    }
+    frames
+}
+
+/// A queued, not-yet-executed window with its admission timestamp (the
+/// start of the latency measurement).
+#[derive(Debug, Clone)]
+pub struct QueuedWindow {
+    /// The window to run.
+    pub window: MicroWindow,
+    /// When the service admitted it.
+    pub enqueued_at: std::time::Instant,
+}
+
+/// One executed window's outcome, handed from a worker back to its
+/// session at commit time.
+#[derive(Debug, Clone)]
+pub struct WindowOutcome {
+    /// Classifier spike counts of this window alone.
+    pub rate: Vec<i64>,
+    /// Membrane state after the window (the next checkpoint).
+    pub state: StateSnapshot,
+    /// Model totals of the window.
+    pub totals: WindowTotals,
+    /// Admission→completion latency (seconds).
+    pub latency_s: f64,
+    /// Host wall-clock of the execution alone (seconds).
+    pub wallclock_s: f64,
+    /// This was the session's final window.
+    pub last: bool,
+}
+
+/// One client session: jitter buffer, checkpointed vmem, rolling
+/// classification, and per-session serving metrics.
+#[derive(Debug)]
+pub struct Session {
+    /// Session identity.
+    pub id: u64,
+    /// Ground-truth label when known (synthetic traffic / evaluation).
+    pub label: Option<usize>,
+    /// The reorder/jitter buffer in front of this session.
+    pub ingest: ReorderBuffer,
+    /// Checkpointed membrane state between windows — the session's
+    /// output-stationary residency.
+    pub state: StateSnapshot,
+    /// Admitted windows awaiting execution (in time order).
+    pub queue: VecDeque<QueuedWindow>,
+    /// Accumulated classifier spike counts across all executed windows.
+    pub rate: Vec<i64>,
+    /// Exponentially smoothed per-class window rates (rolling prediction).
+    pub smoothed: Vec<f64>,
+    /// Executed windows.
+    pub windows_done: u64,
+    /// Windows dropped by the load-shed policy.
+    pub windows_shed: u64,
+    /// Accumulated model totals (frames, SOPs, energy, CIM ledger) across
+    /// executed windows.
+    pub totals: WindowTotals,
+    /// Per-window admission→completion latency.
+    pub latency: LatencyStats,
+    /// Summed host wall-clock of this session's window executions.
+    pub wallclock_s: f64,
+    /// A worker is currently executing a window of this session (window
+    /// order is a state dependency, so at most one is ever in flight).
+    pub running: bool,
+    /// The client closed the stream; the final window is queued or done.
+    pub closed: bool,
+    /// The session has executed its final window.
+    pub finished: bool,
+    /// Currently counted resident in the vmem budget.
+    pub resident: bool,
+    /// Has ever been resident (a fresh session zero-initializes instead of
+    /// refilling from DRAM).
+    pub ever_resident: bool,
+}
+
+impl Session {
+    /// Open a session for `net` (state starts at reset).
+    pub fn new(id: u64, cfg: &SessionConfig, net: &Network, label: Option<usize>) -> Session {
+        Session {
+            id,
+            label,
+            ingest: ReorderBuffer::new(cfg.ingest()),
+            state: StateSnapshot::zeros(net),
+            queue: VecDeque::new(),
+            rate: vec![0i64; 10],
+            smoothed: vec![0f64; 10],
+            windows_done: 0,
+            windows_shed: 0,
+            totals: WindowTotals::default(),
+            latency: LatencyStats::new(),
+            wallclock_s: 0.0,
+            running: false,
+            closed: false,
+            finished: false,
+            resident: false,
+            ever_resident: false,
+        }
+    }
+
+    /// Commit one executed window: accumulate spikes, smooth the rolling
+    /// logits, merge totals, record latency.
+    pub fn commit_window(&mut self, smoothing: f64, outcome: WindowOutcome) {
+        for (acc, &r) in self.rate.iter_mut().zip(&outcome.rate) {
+            *acc += r;
+        }
+        for (s, &r) in self.smoothed.iter_mut().zip(&outcome.rate) {
+            *s = (1.0 - smoothing) * *s + smoothing * r as f64;
+        }
+        self.state = outcome.state;
+        self.totals.add(&outcome.totals);
+        self.latency.push(outcome.latency_s);
+        self.wallclock_s += outcome.wallclock_s;
+        self.windows_done += 1;
+        if outcome.last {
+            self.finished = true;
+        }
+    }
+
+    /// Final prediction from the accumulated (unsmoothed) rate — identical
+    /// to the offline path's argmax for the same spikes.
+    pub fn prediction(&self) -> usize {
+        ScnnRunner::predict(&self.rate)
+    }
+
+    /// Rolling prediction from the label-smoothed window rates.
+    pub fn rolling_prediction(&self) -> usize {
+        self.smoothed
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Assemble this session's serving metrics as a [`RunMetrics`] block
+    /// (one session = one sample; spill traffic is accounted service-wide,
+    /// not here).
+    pub fn metrics(&self) -> RunMetrics {
+        let correct = match (self.label, self.finished) {
+            (Some(l), true) => (l == self.prediction()) as u64,
+            _ => 0,
+        };
+        RunMetrics {
+            samples: 1,
+            correct,
+            timesteps: self.totals.frames,
+            sops: self.totals.sops,
+            mean_sparsity: self.totals.sparsity_acc / self.totals.frames.max(1) as f64,
+            energy: self.totals.energy,
+            cim: self.totals.cim,
+            modeled_latency_s: self.totals.modeled_latency_s,
+            wallclock_s: self.wallclock_s,
+            ..Default::default()
+        }
+    }
+}
+
+/// Residency charge of admitting one session window (bits of DRAM
+/// traffic; the service prices them with the plan's energy model).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResidencyCharge {
+    /// Bits read from DRAM to refill the admitted session's vmem.
+    pub fill_bits: u64,
+    /// Bits written to DRAM spilling evicted sessions' vmem.
+    pub spill_bits: u64,
+    /// Sessions evicted to make room.
+    pub evictions: u64,
+}
+
+/// Owner of all sessions plus the vmem residency budget.
+#[derive(Debug)]
+pub struct SessionManager {
+    cfg: SessionConfig,
+    /// Per-session vmem footprint in bits (uniform: one workload per
+    /// service).
+    vmem_bits: u64,
+    /// Residency budget in bits (CIM array + global buffer share).
+    budget_bits: u64,
+    sessions: HashMap<u64, Session>,
+    /// Resident sessions, least-recently-used first.
+    lru: VecDeque<u64>,
+    resident_bits: u64,
+    /// Cumulative refills from DRAM (bits).
+    pub fill_bits: u64,
+    /// Cumulative spills to DRAM (bits).
+    pub spill_bits: u64,
+    /// Cumulative evictions.
+    pub evictions: u64,
+}
+
+impl SessionManager {
+    /// Empty manager for sessions of `net` under `budget_bits` of vmem
+    /// residency.
+    pub fn new(cfg: SessionConfig, net: &Network, budget_bits: u64) -> SessionManager {
+        SessionManager {
+            cfg,
+            vmem_bits: net.total_vmem_bits(),
+            budget_bits,
+            sessions: HashMap::new(),
+            lru: VecDeque::new(),
+            resident_bits: 0,
+            fill_bits: 0,
+            spill_bits: 0,
+            evictions: 0,
+        }
+    }
+
+    /// The session configuration.
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    /// Per-session vmem footprint in bits.
+    pub fn vmem_bits(&self) -> u64 {
+        self.vmem_bits
+    }
+
+    /// Open a new session; errors if the id is taken.
+    pub fn open(&mut self, id: u64, net: &Network, label: Option<usize>) -> Result<()> {
+        anyhow::ensure!(
+            !self.sessions.contains_key(&id),
+            "session {id} already exists"
+        );
+        self.sessions.insert(id, Session::new(id, &self.cfg, net, label));
+        Ok(())
+    }
+
+    /// Look up a session.
+    pub fn get(&self, id: u64) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
+    /// Look up a session mutably.
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Session> {
+        self.sessions.get_mut(&id)
+    }
+
+    /// All session ids, ascending (deterministic iteration/report order).
+    pub fn ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.sessions.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Open session count.
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// True when no sessions are open.
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Sessions currently counted resident.
+    pub fn resident_count(&self) -> usize {
+        self.lru.len()
+    }
+
+    /// Make `id` resident for a window execution, evicting LRU sessions if
+    /// the budget overflows. Returns the DRAM traffic this admission
+    /// caused. A fresh session (never resident) zero-initializes in place
+    /// of a DRAM refill, exactly like the chip's reset path.
+    pub fn admit(&mut self, id: u64) -> ResidencyCharge {
+        let mut charge = ResidencyCharge::default();
+        let session = match self.sessions.get_mut(&id) {
+            Some(s) => s,
+            None => return charge,
+        };
+        if session.resident {
+            // Refresh LRU position.
+            if let Some(pos) = self.lru.iter().position(|&x| x == id) {
+                let _ = self.lru.remove(pos);
+            }
+            self.lru.push_back(id);
+            return charge;
+        }
+        if session.ever_resident {
+            charge.fill_bits = self.vmem_bits;
+            self.fill_bits += self.vmem_bits;
+        }
+        session.resident = true;
+        session.ever_resident = true;
+        self.lru.push_back(id);
+        self.resident_bits += self.vmem_bits;
+        // Evict least-recently-used sessions (never the one just
+        // admitted) until the budget holds.
+        while self.resident_bits > self.budget_bits && self.lru.len() > 1 {
+            let victim = self.lru.pop_front().expect("len > 1");
+            if victim == id {
+                // Should be at the back, but guard anyway.
+                self.lru.push_back(victim);
+                continue;
+            }
+            if let Some(v) = self.sessions.get_mut(&victim) {
+                v.resident = false;
+            }
+            self.resident_bits -= self.vmem_bits;
+            charge.spill_bits += self.vmem_bits;
+            charge.evictions += 1;
+            self.spill_bits += self.vmem_bits;
+            self.evictions += 1;
+        }
+        charge
+    }
+
+    /// Drop a session entirely (its residency share is released without a
+    /// spill — the state is dead).
+    pub fn remove(&mut self, id: u64) -> Option<Session> {
+        if let Some(pos) = self.lru.iter().position(|&x| x == id) {
+            let _ = self.lru.remove(pos);
+            self.resident_bits -= self.vmem_bits;
+        }
+        let mut removed = self.sessions.remove(&id);
+        if let Some(s) = removed.as_mut() {
+            s.resident = false;
+        }
+        removed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::DvsEvent;
+    use crate::snn::{LayerSpec, Resolution};
+
+    fn small_net() -> Network {
+        let r = Resolution::new(4, 9);
+        Network::new(
+            "serve-session-test",
+            vec![
+                LayerSpec::fc("F1", 2 * 48 * 48, 16, r),
+                LayerSpec::fc("F2", 16, 10, Resolution::new(5, 10)),
+            ],
+            16,
+        )
+    }
+
+    fn mw(t0: u64, t1: u64, events: Vec<DvsEvent>, last: bool) -> MicroWindow {
+        MicroWindow { t0_us: t0, t1_us: t1, events, last }
+    }
+
+    #[test]
+    fn encode_window_matches_global_binning() {
+        let cfg = SessionConfig::default_48();
+        // Window 3 of a 16-frame stream: global frames 12..16.
+        let t0 = 3 * cfg.window_us();
+        let e = |t: u64| DvsEvent { t_us: t, x: 1, y: 2, polarity: true };
+        let w = mw(
+            t0,
+            t0 + cfg.window_us(),
+            vec![e(t0), e(t0 + cfg.step_us), e(t0 + 4 * cfg.step_us - 1)],
+            false,
+        );
+        let frames = encode_window(&cfg, &w);
+        assert_eq!(frames.len(), 4);
+        assert!(frames[0].get(0, 1, 2));
+        assert!(frames[1].get(0, 1, 2));
+        assert!(frames[3].get(0, 1, 2));
+        assert_eq!(frames[2].count(), 0);
+    }
+
+    #[test]
+    fn encode_last_window_absorbs_tail_and_clamps() {
+        let cfg = SessionConfig::default_48();
+        let t0 = 3 * cfg.window_us();
+        let end = 16 * cfg.step_us; // 100 ms
+        let e = |t: u64| DvsEvent { t_us: t, x: 0, y: 0, polarity: false };
+        // Flush-style last window: t1 = end + 1.
+        let w = mw(t0, end + 1, vec![e(end)], true);
+        let frames = encode_window(&cfg, &w);
+        assert_eq!(frames.len(), 4, "span 25001 us still yields 4 frames");
+        assert!(frames[3].get(1, 0, 0), "t == end lands in the final frame");
+    }
+
+    #[test]
+    fn encode_short_last_window_shrinks() {
+        let cfg = SessionConfig::default_48();
+        // A session closed mid-window: only 2 steps of span.
+        let w = mw(0, 2 * cfg.step_us + 1, vec![], true);
+        assert_eq!(encode_window(&cfg, &w).len(), 3, "ceil(12501/6250)");
+        let w = mw(0, 2 * cfg.step_us, vec![], true);
+        assert_eq!(encode_window(&cfg, &w).len(), 2);
+        // Zero-span last marker: no frames at all.
+        let w = mw(3 * cfg.window_us(), 3 * cfg.window_us(), vec![], true);
+        assert!(encode_window(&cfg, &w).is_empty());
+    }
+
+    #[test]
+    fn session_commit_accumulates_and_smooths() {
+        let net = small_net();
+        let cfg = SessionConfig::default_48();
+        let mut s = Session::new(7, &cfg, &net, Some(3));
+        let mut rate = vec![0i64; 10];
+        rate[3] = 4;
+        rate[1] = 1;
+        let totals = WindowTotals { frames: 4, sops: 100, ..Default::default() };
+        let outcome = |latency_s: f64, last: bool| WindowOutcome {
+            rate: rate.clone(),
+            state: StateSnapshot::zeros(&net),
+            totals: totals.clone(),
+            latency_s,
+            wallclock_s: 0.02,
+            last,
+        };
+        s.commit_window(0.5, outcome(0.01, false));
+        s.commit_window(0.5, outcome(0.03, true));
+        assert_eq!(s.rate[3], 8);
+        assert_eq!(s.windows_done, 2);
+        assert!(s.finished);
+        assert_eq!(s.prediction(), 3);
+        assert_eq!(s.rolling_prediction(), 3);
+        assert!((s.smoothed[3] - 3.0).abs() < 1e-12, "EMA: 0.5·4 then 0.5·2+0.5·4");
+        let m = s.metrics();
+        assert_eq!(m.samples, 1);
+        assert_eq!(m.correct, 1);
+        assert_eq!(m.timesteps, 8);
+        assert_eq!(m.sops, 200);
+        assert_eq!(m.modeled_latency_s, 0.0);
+        assert!((m.wallclock_s - 0.04).abs() < 1e-12);
+        assert_eq!(s.latency.count(), 2);
+    }
+
+    #[test]
+    fn residency_budget_evicts_lru_and_charges_dram() {
+        let net = small_net();
+        let vmem = net.total_vmem_bits();
+        // Room for exactly two resident sessions.
+        let mut m = SessionManager::new(SessionConfig::default_48(), &net, 2 * vmem);
+        for id in 0..3u64 {
+            m.open(id, &net, None).unwrap();
+        }
+        // Fresh admissions: zero-init, no DRAM fill.
+        assert_eq!(m.admit(0), ResidencyCharge::default());
+        assert_eq!(m.admit(1), ResidencyCharge::default());
+        assert_eq!(m.resident_count(), 2);
+        // Third session overflows: LRU (0) spills.
+        let c = m.admit(2);
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.spill_bits, vmem);
+        assert_eq!(c.fill_bits, 0, "2 was never resident");
+        assert!(!m.get(0).unwrap().resident);
+        // Re-admitting 0 now refills from DRAM and evicts 1.
+        let c = m.admit(0);
+        assert_eq!(c.fill_bits, vmem);
+        assert_eq!(c.evictions, 1);
+        assert_eq!(m.fill_bits, vmem);
+        assert_eq!(m.spill_bits, 2 * vmem);
+        assert_eq!(m.evictions, 2);
+        // Touching a resident session is free and refreshes LRU order.
+        assert_eq!(m.admit(0), ResidencyCharge::default());
+        assert_eq!(m.resident_count(), 2);
+    }
+
+    #[test]
+    fn unbounded_budget_never_evicts() {
+        let net = small_net();
+        let mut m = SessionManager::new(SessionConfig::default_48(), &net, u64::MAX);
+        for id in 0..16u64 {
+            m.open(id, &net, None).unwrap();
+            assert_eq!(m.admit(id), ResidencyCharge::default());
+        }
+        assert_eq!(m.resident_count(), 16);
+        assert_eq!(m.evictions, 0);
+    }
+
+    #[test]
+    fn duplicate_open_is_an_error() {
+        let net = small_net();
+        let mut m = SessionManager::new(SessionConfig::default_48(), &net, u64::MAX);
+        m.open(1, &net, None).unwrap();
+        assert!(m.open(1, &net, None).is_err());
+    }
+
+    #[test]
+    fn remove_releases_residency_without_spill() {
+        let net = small_net();
+        let vmem = net.total_vmem_bits();
+        let mut m = SessionManager::new(SessionConfig::default_48(), &net, vmem);
+        m.open(1, &net, None).unwrap();
+        m.admit(1);
+        assert_eq!(m.resident_count(), 1);
+        assert!(m.remove(1).is_some());
+        assert_eq!(m.resident_count(), 0);
+        assert_eq!(m.spill_bits, 0);
+        assert!(m.is_empty());
+    }
+}

@@ -149,6 +149,37 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// True when `BENCH_QUICK` is set (CI smoke runs): benches shrink their
+/// workloads to finish in seconds while still exercising every code path.
+pub fn quick_mode() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Format one machine-readable JSON line for a bench result, prefixed
+/// `BENCH_JSON `, so the bench trajectory (`BENCH_*.json`) can be scraped
+/// and tracked across PRs. Integral values print without a fraction,
+/// non-finite values as `null` (JSON has no NaN/inf), everything else
+/// with six decimals.
+pub fn json_line(bench: &str, fields: &[(&str, f64)]) -> String {
+    let mut body = format!("{{\"bench\":\"{bench}\"");
+    for (k, v) in fields {
+        if !v.is_finite() {
+            body.push_str(&format!(",\"{k}\":null"));
+        } else if v.fract() == 0.0 && v.abs() < 1e15 {
+            body.push_str(&format!(",\"{k}\":{}", *v as i64));
+        } else {
+            body.push_str(&format!(",\"{k}\":{v:.6}"));
+        }
+    }
+    body.push('}');
+    format!("BENCH_JSON {body}")
+}
+
+/// Print a [`json_line`].
+pub fn emit_json(bench: &str, fields: &[(&str, f64)]) {
+    println!("{}", json_line(bench, fields));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +220,20 @@ mod tests {
         assert_eq!(fmt_time(2e-3), "2.000 ms");
         assert_eq!(fmt_time(2e-6), "2.000 µs");
         assert_eq!(fmt_time(2e-9), "2.0 ns");
+    }
+
+    #[test]
+    fn json_line_shape() {
+        let line = json_line("engine_throughput", &[("workers", 4.0), ("sps", 12.5)]);
+        assert_eq!(
+            line,
+            "BENCH_JSON {\"bench\":\"engine_throughput\",\"workers\":4,\"sps\":12.500000}"
+        );
+    }
+
+    #[test]
+    fn json_line_non_finite_values_stay_valid_json() {
+        let line = json_line("x", &[("a", f64::NAN), ("b", f64::INFINITY)]);
+        assert_eq!(line, "BENCH_JSON {\"bench\":\"x\",\"a\":null,\"b\":null}");
     }
 }

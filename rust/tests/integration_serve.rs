@@ -1,0 +1,141 @@
+//! Windowed-vs-monolithic bit-identity: a sample streamed through the
+//! serve tier in ≥4 micro-windows must produce identical spikes, final
+//! vmem, and prediction to the same sample run monolithically through the
+//! sequential `Coordinator` — the serve subsystem's correctness anchor.
+//!
+//! Integers (spikes, rates, SOPs, timesteps, the CIM event ledger, the
+//! vmem snapshot) are compared exactly. Float aggregates (energy,
+//! sparsity, modeled latency) execute the same per-frame operations but
+//! accumulate via per-window partial sums, so they are compared to within
+//! 1e-12 relative — float addition is not associative across the window
+//! grouping.
+
+use flexspim::coordinator::Coordinator;
+use flexspim::dataflow::Policy;
+use flexspim::events::{EventStream, GestureClass, GestureGenerator};
+use flexspim::runtime::NativeScnn;
+use flexspim::serve::{gesture_traffic, ServiceConfig, SessionTraffic, StreamingService};
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::util::rng::Rng;
+use flexspim::util::stats::rel_diff;
+
+const SEED: u64 = 0x5E55;
+const MACROS: usize = 4;
+
+/// Compact SCNN over the 48×48 gesture substrate with 16 timesteps, so a
+/// 100-ms sample chops into exactly 4 micro-windows of 4 frames under the
+/// default session config.
+fn test_net() -> Network {
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "serve-itest",
+        vec![
+            LayerSpec::conv("C1", 2, 4, 3, 4, 1, 48, 48, r),
+            LayerSpec::fc("F1", 4 * 12 * 12, 32, r),
+            LayerSpec::fc("F2", 32, 10, Resolution::new(5, 10)),
+        ],
+        16,
+    )
+}
+
+fn coordinator() -> Coordinator {
+    Coordinator::with_backend(
+        Box::new(NativeScnn::new(test_net(), SEED)),
+        MACROS,
+        Policy::HsOpt,
+    )
+    .unwrap()
+}
+
+#[test]
+fn streamed_windows_match_monolithic_coordinator() {
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(99);
+    let stream = gen.sample(GestureClass::AirDrums, &mut rng);
+    let label = GestureClass::AirDrums.label();
+
+    // Monolithic reference: the sequential coordinator, whole sample.
+    let mut coord = coordinator();
+    let mono = coord.run_sample(&stream, Some(label)).unwrap();
+    let mono_state = coord.state();
+
+    // Streamed: the same events through the serve tier, 4 windows of 4
+    // frames, incremental vmem between windows.
+    let svc = StreamingService::native(
+        test_net(),
+        SEED,
+        MACROS,
+        Policy::HsOpt,
+        ServiceConfig::nominal(2),
+    );
+    let traffic = vec![SessionTraffic {
+        id: 7,
+        label: Some(label),
+        end_us: stream.duration_us,
+        events: stream.events.clone(),
+    }];
+    let report = svc.serve(&traffic, 50).unwrap();
+    assert_eq!(report.windows_done, 4, "the acceptance bar requires >= 4 windows");
+    assert_eq!(report.windows_shed, 0);
+    assert_eq!(report.events_dropped, 0);
+    assert_eq!(report.evictions, 0, "one session fits the nominal budget");
+
+    let s = svc.session_result(7).unwrap();
+    assert!(s.finished);
+    assert_eq!(s.windows_done, 4);
+    // Exact integer identity.
+    assert_eq!(s.rate, mono.rate, "spikes");
+    assert_eq!(s.prediction, mono.prediction, "prediction");
+    assert_eq!(s.state, mono_state, "final vmem");
+    assert_eq!(s.metrics.timesteps, mono.metrics.timesteps, "frames");
+    assert_eq!(s.metrics.sops, mono.metrics.sops, "SOPs");
+    assert_eq!(s.metrics.cim, mono.metrics.cim, "CIM event ledger");
+    // Float aggregates: same operations, per-window partial-sum grouping.
+    assert!(rel_diff(s.metrics.mean_sparsity, mono.metrics.mean_sparsity) < 1e-12);
+    assert!(
+        rel_diff(s.metrics.energy.total_pj(), mono.metrics.energy.total_pj()) < 1e-12
+    );
+    assert!(
+        rel_diff(s.metrics.modeled_latency_s, mono.metrics.modeled_latency_s) < 1e-12
+    );
+}
+
+#[test]
+fn jittered_multi_session_streaming_matches_per_sample_coordinator() {
+    // Eight concurrent sessions with 10 ms of arrival jitter over a
+    // 4-worker pool: every session's streamed result must equal the
+    // offline coordinator run of its (time-ordered) sample.
+    let traffic = gesture_traffic(8, 42, 10_000);
+    let svc = StreamingService::native(
+        test_net(),
+        SEED,
+        MACROS,
+        Policy::HsOpt,
+        ServiceConfig::nominal(4),
+    );
+    let report = svc.serve(&traffic, 24).unwrap();
+    assert_eq!(report.sessions, 8);
+    assert_eq!(report.finished_sessions, 8);
+    assert_eq!(report.windows_shed, 0, "nominal load must not shed");
+    assert_eq!(report.events_dropped, 0, "jitter is below the reorder slack");
+    assert_eq!(report.windows_done, 32);
+    assert_eq!(report.latency.count(), 32);
+    assert!(report.latency.p50() > 0.0);
+    assert!(report.latency.p99() >= report.latency.p50());
+    assert!(report.metrics.sops > 0);
+
+    let mut coord = coordinator();
+    for t in &traffic {
+        // The jitter buffer must have restored time order: the reference
+        // is the sorted stream.
+        let stream =
+            EventStream::new(48, 48, t.end_us, t.events.clone()).expect("valid traffic");
+        let mono = coord.run_sample(&stream, t.label).unwrap();
+        let s = svc.session_result(t.id).unwrap();
+        assert_eq!(s.rate, mono.rate, "session {}: spikes", t.id);
+        assert_eq!(s.prediction, mono.prediction, "session {}: prediction", t.id);
+        assert_eq!(s.state, coord.state(), "session {}: final vmem", t.id);
+        assert_eq!(s.metrics.sops, mono.metrics.sops, "session {}: SOPs", t.id);
+        assert_eq!(s.metrics.cim, mono.metrics.cim, "session {}: ledger", t.id);
+    }
+}
