@@ -94,4 +94,48 @@ fn main() {
         );
     }
     println!("\nacceptance: shed rate 0 under nominal load at every pool size");
+
+    // Early-exit trade-off: frames saved vs rolling-accuracy delta against
+    // the no-exit baseline, at increasing confidence bounds.
+    section("early exit — frames saved vs rolling accuracy (4 workers)");
+    let baseline = StreamingService::native(
+        bench_net(),
+        SEED,
+        MACROS,
+        Policy::HsOpt,
+        ServiceConfig::nominal(4),
+    )
+    .serve(&traffic, 64)
+    .expect("baseline run");
+    let base_acc = baseline.rolling_correct as f64 / baseline.sessions.max(1) as f64;
+    let base_frames = baseline.metrics.timesteps;
+    for &margin in &[0.5f64, 1.0, 2.0] {
+        let mut cfg = ServiceConfig::nominal(4);
+        cfg.early_exit_margin = margin;
+        cfg.early_exit_min_windows = 1;
+        let svc = StreamingService::native(bench_net(), SEED, MACROS, Policy::HsOpt, cfg);
+        let report = svc.serve(&traffic, 64).expect("early-exit run");
+        assert_eq!(report.finished_sessions, sessions as u64);
+        let acc = report.rolling_correct as f64 / report.sessions.max(1) as f64;
+        let saved_frac = report.frames_saved as f64 / base_frames.max(1) as f64;
+        println!(
+            "margin {margin:4.1}:  {:4} exits  {:5} frames saved ({:5.1} %)  accuracy {:5.1} % (delta {:+5.1} pp)",
+            report.early_exits,
+            report.frames_saved,
+            100.0 * saved_frac,
+            100.0 * acc,
+            100.0 * (acc - base_acc),
+        );
+        emit_json(
+            "serve_early_exit",
+            &[
+                ("margin", margin),
+                ("early_exits", report.early_exits as f64),
+                ("frames_saved", report.frames_saved as f64),
+                ("frames_saved_frac", saved_frac),
+                ("rolling_accuracy", acc),
+                ("accuracy_delta", acc - base_acc),
+            ],
+        );
+    }
 }

@@ -1,0 +1,129 @@
+//! Event-driven speedup: steps/sec of the sparse `NativeScnn` engine vs
+//! the dense seed path, swept over input spike activity from 1 % to 50 %.
+//!
+//! DVS workloads run at a few percent activity — the regime the paper's
+//! event-based execution exploits — so the acceptance bar is a ≥5×
+//! native-backend speedup over the dense reference at ≤5 % activity.
+//! Bit-identity between the two paths is asserted *while* measuring (the
+//! per-layer spike counts of every timestep must match), so the speedup
+//! can never come from computing something different.
+//!
+//! ```sh
+//! cargo bench --bench sparse_speedup          # full sweep
+//! BENCH_QUICK=1 cargo bench --bench sparse_speedup   # CI smoke
+//! ```
+//!
+//! One `BENCH_JSON {...}` line per activity point records dense and
+//! sparse steps/sec plus the speedup for the cross-PR trajectory.
+
+use std::time::Instant;
+
+use flexspim::runtime::{NativeScnn, StepBackend};
+use flexspim::snn::events::SpikeList;
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::util::bench::{emit_json, quick_mode, section};
+use flexspim::util::rng::Rng;
+
+const SEED: u64 = 42;
+
+/// Conv-heavy mid-size SCNN over the 48×48 substrate — the shape class
+/// where dense stepping pays `out_ch × oh × ow × in_ch × k²` per timestep
+/// regardless of activity.
+fn bench_net() -> Network {
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "sparse-bench",
+        vec![
+            LayerSpec::conv("C1", 2, 8, 3, 1, 1, 48, 48, r),
+            LayerSpec::conv("C2", 8, 16, 3, 2, 1, 48, 48, Resolution::new(5, 10)),
+            LayerSpec::conv("C3", 16, 16, 3, 1, 1, 24, 24, Resolution::new(5, 10)),
+            LayerSpec::fc("F1", 16 * 24 * 24, 64, r),
+            LayerSpec::fc("F2", 64, 10, Resolution::new(5, 10)),
+        ],
+        8,
+    )
+}
+
+/// `frames` random spike lists at the given activity over the net's input.
+fn frames_at(net: &Network, activity: f64, frames: usize, seed: u64) -> Vec<SpikeList> {
+    let (c, h, w) = net.layers[0].in_shape();
+    let dim = c * h * w;
+    let mut rng = Rng::new(seed);
+    (0..frames)
+        .map(|_| {
+            let bits: Vec<bool> = (0..dim).map(|_| rng.chance(activity)).collect();
+            SpikeList::from_dense(&bits)
+        })
+        .collect()
+}
+
+/// Steps/sec of `backend` over `frames`, best of `reps` passes; returns
+/// the per-layer counts of the final pass for the identity cross-check.
+fn measure(
+    backend: &mut NativeScnn,
+    frames: &[SpikeList],
+    reps: usize,
+) -> (f64, Vec<Vec<i32>>) {
+    let mut best = 0.0f64;
+    let mut counts = Vec::new();
+    for _ in 0..reps {
+        backend.reset();
+        counts.clear();
+        let t0 = Instant::now();
+        for f in frames {
+            counts.push(backend.step(f).expect("bench step").counts);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.max(frames.len() as f64 / dt.max(1e-12));
+    }
+    (best, counts)
+}
+
+fn main() {
+    let quick = quick_mode();
+    let frames_n = if quick { 8 } else { 24 };
+    let reps = if quick { 1 } else { 3 };
+    let activities: &[f64] = if quick {
+        &[0.01, 0.05, 0.2]
+    } else {
+        &[0.01, 0.02, 0.05, 0.1, 0.2, 0.5]
+    };
+    let net = bench_net();
+    section(&format!(
+        "sparse speedup — {} layers, {frames_n} frames/pass, activity sweep",
+        net.layers.len()
+    ));
+
+    let mut sparse = NativeScnn::new(net.clone(), SEED);
+    let mut dense = NativeScnn::new_dense_reference(net.clone(), SEED);
+    let mut speedup_at_low = 0.0f64;
+    for &activity in activities {
+        let frames = frames_at(&net, activity, frames_n, 7u64 ^ ((activity * 1e4) as u64));
+        let (sparse_sps, sparse_counts) = measure(&mut sparse, &frames, reps);
+        let (dense_sps, dense_counts) = measure(&mut dense, &frames, reps);
+        assert_eq!(
+            sparse_counts, dense_counts,
+            "sparse and dense paths must stay bit-identical while measuring"
+        );
+        let speedup = sparse_sps / dense_sps.max(1e-12);
+        if activity <= 0.05 {
+            speedup_at_low = speedup_at_low.max(speedup);
+        }
+        println!(
+            "activity {:5.1} %:  dense {dense_sps:9.2} steps/s   sparse {sparse_sps:9.2} steps/s   speedup {speedup:6.2}x",
+            100.0 * activity
+        );
+        emit_json(
+            "sparse_speedup",
+            &[
+                ("activity", activity),
+                ("dense_steps_per_sec", dense_sps),
+                ("sparse_steps_per_sec", sparse_sps),
+                ("speedup", speedup),
+            ],
+        );
+    }
+    println!(
+        "\nacceptance: >= 5x sparse-over-dense at <= 5 % activity (best measured: {speedup_at_low:.2}x)"
+    );
+}

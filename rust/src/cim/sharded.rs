@@ -14,6 +14,7 @@
 
 use super::counters::EnergyCounters;
 use super::macro_unit::{CimMacro, MacroConfig};
+use crate::snn::events::SpikeList;
 
 /// Several [`CimMacro`] shards executing one logical macro in lockstep.
 #[derive(Debug, Clone)]
@@ -183,6 +184,19 @@ impl ShardedMacro {
         }
         self.cim_fire(threshold)
     }
+
+    /// Event-driven timestep over a sparse [`SpikeList`]: walk the active
+    /// synapse indices directly — no dense scan — then fire. Ledger- and
+    /// bit-identical to [`Self::timestep`] on the densified vector, since
+    /// the dense path also accumulates only active synapses (in the same
+    /// ascending order).
+    pub fn timestep_events(&mut self, spikes_in: &SpikeList, threshold: i64) -> Vec<bool> {
+        assert_eq!(spikes_in.dim(), self.shards[0].config().fan_in);
+        for &j in spikes_in.active() {
+            self.cim_accumulate(j as usize, None);
+        }
+        self.cim_fire(threshold)
+    }
 }
 
 #[cfg(test)]
@@ -294,6 +308,31 @@ mod tests {
                 )
             },
         );
+    }
+
+    #[test]
+    fn event_timestep_matches_dense_timestep() {
+        let cfg = MacroConfig::flexspim(4, 9, 3, 4, 6);
+        let mut dense = ShardedMacro::split(cfg, &[2, 4]).unwrap();
+        let mut sparse = ShardedMacro::split(cfg, &[2, 4]).unwrap();
+        for n in 0..6 {
+            for j in 0..4 {
+                let w = ((n * 7 + j) % 13) as i64 - 6;
+                dense.load_weight(n, j, w);
+                sparse.load_weight(n, j, w);
+            }
+        }
+        let spikes = [true, false, false, true];
+        let list = SpikeList::from_dense(&spikes);
+        for t in 0..4 {
+            let a = dense.timestep(&spikes, 15);
+            let b = sparse.timestep_events(&list, 15);
+            assert_eq!(a, b, "timestep {t}");
+        }
+        assert_eq!(dense.counters(), sparse.counters(), "ledger identity");
+        for n in 0..6 {
+            assert_eq!(dense.peek_vmem(n), sparse.peek_vmem(n), "neuron {n}");
+        }
     }
 
     #[test]

@@ -278,22 +278,25 @@ impl SamplePlan {
         let mut totals = WindowTotals::default();
 
         for frame in frames {
-            let in_bits: Vec<i32> = frame.as_input_vector().iter().map(|&b| b as i32).collect();
-            // Buffer traffic: the input frame enters through the
-            // merge-and-shift unit as AER events.
-            let in_count = frame.count() as u64;
+            // The sparse datapath: the frame enters as an AER spike list
+            // and stays sparse through every layer of the backend.
+            let spikes_in = frame.to_spike_list();
+            let in_count = spikes_in.count() as u64;
+            // Buffer traffic: the input events flow through the
+            // merge-and-shift unit.
             bufs.merge_shift.transfer(in_count.max(1), 16);
             bufs.banks.write(in_count * 16);
 
-            let step = backend.step(&in_bits)?;
-            for (acc, s) in rate.iter_mut().zip(&step.out_spikes) {
-                *acc += *s as i64;
+            let step = backend.step(&spikes_in)?;
+            for &c in step.out_spikes.active() {
+                rate[c as usize] += 1;
             }
+            totals.in_events += in_count;
 
             // Energy from measured per-layer activity: layer l's input
             // spikes are the previous layer's output count (layer 0 sees
             // the frame).
-            let mut in_events_n = frame.count() as u64;
+            let mut in_events_n = in_count;
             for (li, (layer, assign)) in self
                 .net
                 .layers
@@ -338,7 +341,7 @@ impl SamplePlan {
                 in_events_n = step.counts[li].max(0) as u64;
             }
 
-            let frame_activity = frame.count() as f64 / frame.as_input_vector().len() as f64;
+            let frame_activity = spikes_in.activity();
             totals.sparsity_acc += 1.0 - frame_activity;
             totals.modeled_latency_s += self.schedule.timestep_latency_s(frame_activity);
             totals.frames += 1;
@@ -370,6 +373,7 @@ impl SamplePlan {
             samples: 1,
             correct,
             timesteps: w.frames,
+            in_events: w.in_events,
             sops: w.sops,
             mean_sparsity: w.sparsity_acc / w.frames.max(1) as f64,
             energy: w.energy,
@@ -390,6 +394,8 @@ impl SamplePlan {
 pub struct WindowTotals {
     /// Frames (timesteps) executed.
     pub frames: u64,
+    /// Input spike events entering layer 0 (the event-driven work driver).
+    pub in_events: u64,
     /// Synaptic operations executed.
     pub sops: u64,
     /// Summed per-frame input sparsity (divide by `frames` for the mean).
@@ -407,6 +413,7 @@ impl WindowTotals {
     /// sequential accumulation mirrors the monolithic loop).
     pub fn add(&mut self, other: &WindowTotals) {
         self.frames += other.frames;
+        self.in_events += other.in_events;
         self.sops += other.sops;
         self.sparsity_acc += other.sparsity_acc;
         self.energy.add(&other.energy);

@@ -42,6 +42,9 @@ pub struct RunMetrics {
     pub correct: u64,
     /// Timesteps executed.
     pub timesteps: u64,
+    /// Input spike events entering layer 0 — the quantity the event-driven
+    /// execution engine's work actually scales with.
+    pub in_events: u64,
     /// Synaptic operations executed.
     pub sops: u64,
     /// Mean input sparsity observed.
@@ -100,6 +103,7 @@ impl RunMetrics {
         self.samples += other.samples;
         self.correct += other.correct;
         self.timesteps += other.timesteps;
+        self.in_events += other.in_events;
         self.sops += other.sops;
         self.energy.add(&other.energy);
         self.cim.merge(&other.cim);
@@ -116,6 +120,13 @@ impl RunMetrics {
         s.push_str(&format!("accuracy           {:.1} %\n", 100.0 * self.accuracy()));
         s.push_str(&format!("timesteps          {}\n", self.timesteps));
         s.push_str(&format!("mean sparsity      {:.1} %\n", 100.0 * self.mean_sparsity));
+        if self.in_events > 0 {
+            s.push_str(&format!(
+                "input events       {} ({:.1} events/timestep)\n",
+                si(self.in_events as f64),
+                self.in_events as f64 / self.timesteps.max(1) as f64,
+            ));
+        }
         s.push_str(&format!("SOPs               {}\n", si(self.sops as f64)));
         s.push_str(&format!(
             "energy             {}J (compute {:.0} %, movement {:.0} %)\n",
@@ -261,6 +272,16 @@ mod tests {
         assert_eq!(m.accuracy(), 0.0);
         assert_eq!(m.pj_per_sop(), 0.0);
         assert!(m.report().contains("samples"));
+    }
+
+    #[test]
+    fn in_events_merge_and_report() {
+        let mut a = RunMetrics { in_events: 30, timesteps: 3, ..Default::default() };
+        let b = RunMetrics { in_events: 12, timesteps: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.in_events, 42);
+        assert!(a.report().contains("input events"));
+        assert!(!RunMetrics::default().report().contains("input events"));
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! End-to-end inference coordinator.
 //!
-//! The Fig. 5a control plane as one object: events → per-timestep spike
-//! buffer → network step on a [`StepBackend`] (PJRT-compiled graph or the
-//! pure-Rust interpreter) → prediction, with energy priced from *measured*
+//! The Fig. 5a control plane as one object: events → per-timestep sparse
+//! spike lists ([`crate::snn::events::SpikeList`]) → network step on a
+//! [`StepBackend`] (PJRT-compiled graph or the event-driven pure-Rust
+//! engine) → prediction, with energy priced from *measured*
 //! per-layer spike counts (not dense estimates), latency from the macro
 //! timing model, buffer traffic through the merge-and-shift unit, and the
 //! per-shard CIM event ledger charged from bit-sim-calibrated deltas.
@@ -186,6 +187,7 @@ mod tests {
         let r = coord.run_sample(&s, Some(7)).unwrap();
         assert!(r.prediction < 10);
         assert_eq!(r.metrics.timesteps, 4);
+        assert!(r.metrics.in_events > 0, "event counts observed");
         assert!(r.metrics.sops > 0);
         assert!(r.metrics.energy.total_pj() > 0.0);
         assert!(r.metrics.cim.cim_cycles > 0, "shard ledger charged");

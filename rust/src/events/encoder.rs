@@ -7,6 +7,7 @@
 //! as a single-bit buffer does in hardware.
 
 use super::dvs::EventStream;
+use crate::snn::events::SpikeList;
 
 /// One timestep of binary input spikes: channel-major `[2][h][w]` bits.
 #[derive(Debug, Clone)]
@@ -69,6 +70,13 @@ impl SpikeFrame {
     /// expects as its fan-in vector.
     pub fn as_input_vector(&self) -> &[bool] {
         &self.bits
+    }
+
+    /// Emit the frame as a sparse [`SpikeList`] (sorted active indices
+    /// over the same channel-major layout) — what the event-driven
+    /// execution stack consumes directly, AER-style.
+    pub fn to_spike_list(&self) -> SpikeList {
+        SpikeList::from_dense(&self.bits)
     }
 }
 
@@ -189,6 +197,19 @@ mod tests {
         let fb = encode_frames(&b, 8);
         for (x, y) in fa.iter().zip(&fb) {
             assert_eq!(x.bits, y.bits);
+        }
+    }
+
+    #[test]
+    fn spike_list_matches_dense_bits() {
+        let g = GestureGenerator::default_48();
+        let mut rng = Rng::new(4);
+        let s = g.sample(GestureClass::LeftCw, &mut rng);
+        for f in encode_frames(&s, 8) {
+            let sl = f.to_spike_list();
+            assert_eq!(sl.dim(), f.bits.len());
+            assert_eq!(sl.count(), f.count());
+            assert_eq!(sl.to_dense(), f.bits);
         }
     }
 

@@ -5,6 +5,7 @@
 //! flexspim run       [--samples N] [--macros M] [--policy P] [--seed S]
 //! flexspim serve     [--sessions N] [--workers W] [--jitter-us J]
 //!                    [--budget-kb B] [--macros M] [--policy P] [--seed S] [--full]
+//!                    [--deterministic] [--exit-margin X]
 //! flexspim train     [--steps N] [--lr X] [--seed S] [--out PATH]
 //! flexspim map       [--macros M]
 //! flexspim simulate  [--wbits W] [--pbits P] [--nc C] [--neurons N] [--fanin F]
@@ -45,6 +46,16 @@ fn specs() -> Vec<Spec> {
         Spec { name: "workers", takes_value: true, help: "serve worker threads (default 4)" },
         Spec { name: "jitter-us", takes_value: true, help: "arrival jitter in us (serve)" },
         Spec { name: "budget-kb", takes_value: true, help: "vmem budget kB (serve, 0 = chip)" },
+        Spec {
+            name: "deterministic",
+            takes_value: false,
+            help: "serve: dispatch in admission order (reproducible residency)",
+        },
+        Spec {
+            name: "exit-margin",
+            takes_value: true,
+            help: "serve: early-exit confidence margin (0 = off)",
+        },
         Spec { name: "full", takes_value: false, help: "serve the full paper SCNN" },
         Spec { name: "config", takes_value: true, help: "TOML config file" },
         Spec { name: "help", takes_value: false, help: "show usage" },
@@ -171,6 +182,8 @@ fn run_serve(args: &Args) -> Result<()> {
     if budget_kb > 0 {
         cfg.resident_budget_bits = budget_kb * 1024 * 8;
     }
+    cfg.deterministic_admission = args.flag("deterministic");
+    cfg.early_exit_margin = args.get_or("exit-margin", 0.0f64);
     let svc = StreamingService::native(net.clone(), seed, macros, policy, cfg);
     println!(
         "serving {} on {macros} macros ({policy}): {sessions} sessions, {workers} workers, \

@@ -9,14 +9,28 @@
 //!   `Rc`-based and **not `Send`**, so a runner can never migrate between
 //!   threads: each engine worker must construct its own backend via a
 //!   factory, inside the worker thread.
-//! * [`super::native::NativeScnn`] — a pure-Rust bit-exact interpreter
-//!   over the golden LIF/conv models. `Send`, artifact-free, and
-//!   deterministic from a seed; the engine's offline reference.
+//! * [`super::native::NativeScnn`] — the pure-Rust event-driven sparse
+//!   engine, bit-exact to the golden LIF/conv models. `Send`,
+//!   artifact-free, and deterministic from a seed; the engine's offline
+//!   reference.
+//!
+//! Spikes cross this interface as [`SpikeList`]s (the sparse AER-native
+//! representation of `crate::snn::events`); backends that need dense
+//! tensors — the PJRT artifact — densify at their own boundary.
 
+use crate::snn::events::SpikeList;
 use crate::snn::Network;
 use crate::Result;
 
-pub use super::scnn::StepResult;
+/// Result of one network timestep, in the sparse spike representation the
+/// whole runtime datapath moves.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepResult {
+    /// Output spikes of the classifier layer (10 classes).
+    pub out_spikes: SpikeList,
+    /// Per-layer spike counts (for energy accounting).
+    pub counts: Vec<i32>,
+}
 
 /// A full copy of a backend's persistent per-neuron state: one membrane
 /// vector per layer, in layer order.
@@ -54,9 +68,9 @@ pub trait StepBackend {
     /// Zero all membrane potentials (start of a new inference).
     fn reset(&mut self);
 
-    /// Execute one timestep on a flattened binary input frame
-    /// (channel-major `[c · h · w]`, 0/1 values).
-    fn step(&mut self, frame: &[i32]) -> Result<StepResult>;
+    /// Execute one timestep on a sparse input spike list (active indices
+    /// over the channel-major `[c · h · w]` input space).
+    fn step(&mut self, frame: &SpikeList) -> Result<StepResult>;
 
     /// Requantize at explicit per-layer `(w_bits, p_bits)` resolutions and
     /// reset state.
@@ -79,8 +93,10 @@ impl StepBackend for super::scnn::ScnnRunner {
         super::scnn::ScnnRunner::reset(self)
     }
 
-    fn step(&mut self, frame: &[i32]) -> Result<StepResult> {
-        super::scnn::ScnnRunner::step(self, frame)
+    fn step(&mut self, frame: &SpikeList) -> Result<StepResult> {
+        // The PJRT artifact consumes a dense i32 tensor; densify at the
+        // boundary (the sparse representation stays canonical upstream).
+        super::scnn::ScnnRunner::step(self, &frame.to_i32())
     }
 
     fn set_resolutions(&mut self, res: &[(u32, u32)]) {

@@ -1,5 +1,4 @@
-//! Pure-Rust network backend: the golden LIF/conv models as an execution
-//! engine.
+//! Pure-Rust network backend: the event-driven sparse execution engine.
 //!
 //! [`NativeScnn`] interprets any [`Network`] with the bit-exact integer IF
 //! semantics of [`crate::snn::lif::LifLayer`] and
@@ -11,11 +10,21 @@
 //! worker its own backend and still produce byte-identical results to the
 //! sequential path (asserted by `rust/tests/integration_engine.rs`).
 //!
+//! Since the sparse-datapath refactor the default execution mode is
+//! *event-driven*: spikes travel as [`SpikeList`]s and each timestep costs
+//! work proportional to spike activity ([`crate::snn::events`]), not layer
+//! size — the software equivalent of the chip's event-based operation.
+//! [`NativeScnn::new_dense_reference`] builds the same weights into the
+//! dense golden-model layers instead; it is the oracle the property tests
+//! (`rust/tests/property_sparse.rs`) and the `sparse_speedup` bench
+//! compare against, and is *not* used by any runtime tier.
+//!
 //! Unlike the PJRT runner this backend is `Send`, needs no artifacts, and
 //! runs everywhere — it is the engine's throughput substrate and the
 //! fallback when the XLA runtime is not vendored.
 
 use crate::snn::conv::ConvLifLayer;
+use crate::snn::events::{EventConvLayer, EventFcLayer, SpikeList};
 use crate::snn::lif::LifLayer;
 use crate::snn::quant::{max_val, min_val};
 use crate::snn::{LayerKind, Network, Resolution};
@@ -25,61 +34,86 @@ use crate::Result;
 use super::backend::{StateSnapshot, StepBackend, StepResult};
 
 enum NativeLayer {
-    Conv(ConvLifLayer),
-    Fc(LifLayer),
+    Conv(EventConvLayer),
+    Fc(EventFcLayer),
+    /// Dense golden-model variants: the oracle path for the dense-vs-sparse
+    /// property tests and the `sparse_speedup` bench.
+    DenseConv(ConvLifLayer),
+    DenseFc(LifLayer),
 }
 
 impl NativeLayer {
-    fn step(&mut self, spikes: &[bool]) -> Vec<bool> {
+    fn step(&mut self, spikes: &SpikeList) -> SpikeList {
         match self {
             NativeLayer::Conv(l) => l.step(spikes),
             NativeLayer::Fc(l) => l.step(spikes),
+            NativeLayer::DenseConv(l) => SpikeList::from_dense(&l.step(&spikes.to_dense())),
+            NativeLayer::DenseFc(l) => SpikeList::from_dense(&l.step(&spikes.to_dense())),
         }
     }
 
     fn reset(&mut self) {
         match self {
-            NativeLayer::Conv(l) => l.v.iter_mut().for_each(|v| *v = 0),
-            NativeLayer::Fc(l) => l.v.iter_mut().for_each(|v| *v = 0),
+            NativeLayer::Conv(l) => l.reset(),
+            NativeLayer::Fc(l) => l.reset(),
+            NativeLayer::DenseConv(l) => l.v.iter_mut().for_each(|v| *v = 0),
+            NativeLayer::DenseFc(l) => l.v.iter_mut().for_each(|v| *v = 0),
         }
     }
 
     fn vmem(&self) -> &[i64] {
         match self {
-            NativeLayer::Conv(l) => &l.v,
-            NativeLayer::Fc(l) => &l.v,
+            NativeLayer::Conv(l) => l.vmem(),
+            NativeLayer::Fc(l) => l.vmem(),
+            NativeLayer::DenseConv(l) => &l.v,
+            NativeLayer::DenseFc(l) => &l.v,
         }
     }
 
     fn set_vmem(&mut self, v: &[i64]) {
         match self {
-            NativeLayer::Conv(l) => l.v.copy_from_slice(v),
-            NativeLayer::Fc(l) => l.v.copy_from_slice(v),
+            NativeLayer::Conv(l) => l.set_vmem(v),
+            NativeLayer::Fc(l) => l.set_vmem(v),
+            NativeLayer::DenseConv(l) => l.v.copy_from_slice(v),
+            NativeLayer::DenseFc(l) => l.v.copy_from_slice(v),
         }
     }
 }
 
-/// Deterministic pure-Rust SCNN execution engine.
+/// Deterministic pure-Rust SCNN execution engine (event-driven sparse by
+/// default).
 pub struct NativeScnn {
     net: Network,
     seed: u64,
+    sparse: bool,
     layers: Vec<NativeLayer>,
 }
 
 impl NativeScnn {
-    /// Build an interpreter for `net` with seed-derived quantized weights.
+    /// Build an event-driven interpreter for `net` with seed-derived
+    /// quantized weights.
     pub fn new(net: Network, seed: u64) -> NativeScnn {
-        let layers = Self::build_layers(&net, seed);
-        NativeScnn { net, seed, layers }
+        let layers = Self::build_layers(&net, seed, true);
+        NativeScnn { net, seed, sparse: true, layers }
     }
 
-    fn build_layers(net: &Network, seed: u64) -> Vec<NativeLayer> {
+    /// Build the dense golden-model interpreter over the *same* weight
+    /// streams — the oracle for dense-vs-sparse bit-identity tests and the
+    /// baseline of the `sparse_speedup` bench. Runtime tiers never use it.
+    pub fn new_dense_reference(net: Network, seed: u64) -> NativeScnn {
+        let layers = Self::build_layers(&net, seed, false);
+        NativeScnn { net, seed, sparse: false, layers }
+    }
+
+    fn build_layers(net: &Network, seed: u64, sparse: bool) -> Vec<NativeLayer> {
         let mut root = Rng::new(seed ^ 0x5EED_CE11_F1E2_D3C4);
         net.layers
             .iter()
             .map(|spec| {
                 // One forked stream per layer: a layer's weights do not
                 // depend on how many layers precede it being regenerated.
+                // The sparse and dense builds consume identical RNG
+                // sequences, so their weights are bit-identical.
                 let mut rng = root.fork();
                 // Excitation-biased weight range and a fan-in-scaled
                 // threshold keep random-weight spike rates in a useful band
@@ -96,13 +130,25 @@ impl NativeScnn {
                         let weights: Vec<i64> = (0..spec.num_weights())
                             .map(|_| rng.range_i64(lo, hi))
                             .collect();
-                        NativeLayer::Conv(ConvLifLayer::new(spec.clone(), weights, theta))
+                        if sparse {
+                            NativeLayer::Conv(EventConvLayer::new(spec.clone(), weights, theta))
+                        } else {
+                            NativeLayer::DenseConv(ConvLifLayer::new(
+                                spec.clone(),
+                                weights,
+                                theta,
+                            ))
+                        }
                     }
                     LayerKind::Fc { in_dim, out_dim } => {
                         let weights: Vec<Vec<i64>> = (0..out_dim)
                             .map(|_| (0..in_dim).map(|_| rng.range_i64(lo, hi)).collect())
                             .collect();
-                        NativeLayer::Fc(LifLayer::new(weights, spec.res, theta))
+                        if sparse {
+                            NativeLayer::Fc(EventFcLayer::new(weights, spec.res, theta))
+                        } else {
+                            NativeLayer::DenseFc(LifLayer::new(weights, spec.res, theta))
+                        }
                     }
                 }
             })
@@ -112,6 +158,12 @@ impl NativeScnn {
     /// The seed the weights were derived from.
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+
+    /// True when this instance runs the event-driven sparse datapath
+    /// (false only for [`Self::new_dense_reference`] oracles).
+    pub fn is_sparse(&self) -> bool {
+        self.sparse
     }
 }
 
@@ -126,29 +178,28 @@ impl StepBackend for NativeScnn {
         }
     }
 
-    fn step(&mut self, frame: &[i32]) -> Result<StepResult> {
+    fn step(&mut self, frame: &SpikeList) -> Result<StepResult> {
         let (c, h, w) = self.net.layers[0].in_shape();
         anyhow::ensure!(
-            frame.len() == c * h * w,
+            frame.dim() == c * h * w,
             "frame has {} inputs, layer 0 expects {}",
-            frame.len(),
+            frame.dim(),
             c * h * w
         );
-        let mut spikes: Vec<bool> = frame.iter().map(|&b| b != 0).collect();
+        let mut spikes = frame.clone();
         let mut counts = Vec::with_capacity(self.layers.len());
         for layer in &mut self.layers {
             spikes = layer.step(&spikes);
-            counts.push(spikes.iter().filter(|&&s| s).count() as i32);
+            counts.push(spikes.count() as i32);
         }
-        let out_spikes: Vec<i32> = spikes.iter().map(|&s| s as i32).collect();
-        Ok(StepResult { out_spikes, counts })
+        Ok(StepResult { out_spikes: spikes, counts })
     }
 
     fn set_resolutions(&mut self, res: &[(u32, u32)]) {
         let resolutions: Vec<Resolution> =
             res.iter().map(|&(w, p)| Resolution::new(w, p)).collect();
         self.net = self.net.with_resolutions(&resolutions);
-        self.layers = Self::build_layers(&self.net, self.seed);
+        self.layers = Self::build_layers(&self.net, self.seed, self.sparse);
     }
 
     fn snapshot(&self) -> StateSnapshot {
@@ -200,13 +251,13 @@ mod tests {
         )
     }
 
-    fn frames_for(net: &Network, seed: u64) -> Vec<Vec<i32>> {
+    fn frames_for(net: &Network, seed: u64) -> Vec<SpikeList> {
         let gen = GestureGenerator::default_48();
         let mut rng = Rng::new(seed);
         let stream = gen.sample(GestureClass::HandClap, &mut rng);
         encode_frames(&stream, net.timesteps)
             .iter()
-            .map(|f| f.as_input_vector().iter().map(|&b| b as i32).collect())
+            .map(|f| f.to_spike_list())
             .collect()
     }
 
@@ -222,6 +273,26 @@ mod tests {
             assert_eq!(ra.out_spikes, rb.out_spikes);
             assert_eq!(ra.counts, rb.counts);
         }
+    }
+
+    #[test]
+    fn sparse_matches_dense_reference_end_to_end() {
+        // The module-level smoke of the tentpole property: same seed, same
+        // frames, sparse vs dense golden layers — identical spikes,
+        // counts, and final state (the broad random-geometry sweep lives
+        // in rust/tests/property_sparse.rs).
+        let net = tiny_net();
+        let frames = frames_for(&net, 8);
+        let mut sparse = NativeScnn::new(net.clone(), 42);
+        let mut dense = NativeScnn::new_dense_reference(net, 42);
+        assert!(sparse.is_sparse() && !dense.is_sparse());
+        for (t, f) in frames.iter().enumerate() {
+            let a = sparse.step(f).unwrap();
+            let b = dense.step(f).unwrap();
+            assert_eq!(a.out_spikes, b.out_spikes, "t={t} spikes");
+            assert_eq!(a.counts, b.counts, "t={t} counts");
+        }
+        assert_eq!(sparse.snapshot(), dense.snapshot(), "final vmem");
     }
 
     #[test]
@@ -266,7 +337,7 @@ mod tests {
     #[test]
     fn frame_size_checked() {
         let mut m = NativeScnn::new(tiny_net(), 1);
-        assert!(m.step(&[0i32; 7]).is_err());
+        assert!(m.step(&SpikeList::empty(7)).is_err());
     }
 
     #[test]
@@ -280,7 +351,8 @@ mod tests {
         // Run T steps monolithically; run T/2 steps, checkpoint, restore
         // into a *fresh* backend, run the rest: outputs and final state
         // must match exactly. This is the contract the serve tier's
-        // incremental windows stand on.
+        // incremental windows stand on — and since the refactor the
+        // restore path must also rebuild the sparse refire sets.
         let net = tiny_net();
         let frames = frames_for(&net, 13);
         let mut mono = NativeScnn::new(net.clone(), 42);

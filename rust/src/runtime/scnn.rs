@@ -12,19 +12,12 @@ use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
+use super::backend::StepResult;
 use super::client::{lit_i32, to_vec_i32, Executable, Runtime};
 use super::weights::WeightFile;
+use crate::snn::events::SpikeList;
 use crate::snn::network::scnn_dvs_gesture;
 use crate::snn::Network;
-
-/// Result of one network timestep.
-#[derive(Debug, Clone)]
-pub struct StepResult {
-    /// Output spikes of the classifier layer (10 values, 0/1).
-    pub out_spikes: Vec<i32>,
-    /// Per-layer spike counts (for energy accounting).
-    pub counts: Vec<i32>,
-}
 
 /// Compiled SCNN with resident weights and threaded membrane state.
 pub struct ScnnRunner {
@@ -173,7 +166,7 @@ impl ScnnRunner {
 
         let out = self.exe.run(&inputs).context("scnn_step execution")?;
         ensure!(out.len() == n + 2, "expected {} outputs, got {}", n + 2, out.len());
-        let out_spikes = to_vec_i32(&out[0])?;
+        let out_spikes = SpikeList::from_i32_dense(&to_vec_i32(&out[0])?);
         for (i, v) in out[1..=n].iter().enumerate() {
             self.vmems[i] = to_vec_i32(v)?;
         }
@@ -188,8 +181,8 @@ impl ScnnRunner {
         let mut rate = vec![0i64; 10];
         for f in frames {
             let r = self.step(f)?;
-            for (acc, s) in rate.iter_mut().zip(&r.out_spikes) {
-                *acc += *s as i64;
+            for &c in r.out_spikes.active() {
+                rate[c as usize] += 1;
             }
         }
         Ok(rate)

@@ -20,8 +20,11 @@
 //!   residency budget whose spills are priced as DRAM traffic in
 //!   [`crate::coordinator::RunMetrics`].
 //! * [`service`] — the admission/backpressure front end: bounded queues,
-//!   round-robin session fairness, newest-first load shedding, a worker
-//!   pool multiplexing sessions over [`crate::runtime::StepBackend`]s, and
+//!   round-robin session fairness (or deterministic admission-order
+//!   dispatch for reproducible residency reports), newest-first load
+//!   shedding, early-exit on the rolling classification's confidence
+//!   margin, an idle-session reaper with id recycling, a worker pool
+//!   multiplexing sessions over [`crate::runtime::StepBackend`]s, and
 //!   p50/p95/p99 window-latency + sessions/sec instrumentation.
 //!
 //! Correctness anchor: a sample streamed through the service in aligned
@@ -39,6 +42,6 @@ pub use service::{
     StreamingService,
 };
 pub use session::{
-    encode_window, QueuedWindow, ResidencyCharge, Session, SessionConfig, SessionManager,
-    WindowOutcome,
+    encode_window, window_frames, QueuedWindow, ResidencyCharge, Session, SessionConfig,
+    SessionManager, WindowOutcome,
 };

@@ -34,9 +34,9 @@
 //! windows once the global or per-session queue bound is hit — sessions
 //! degrade by skipping time rather than stalling the service.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure};
 
@@ -51,7 +51,7 @@ use crate::Result;
 
 use super::ingest::MicroWindow;
 use super::session::{
-    encode_window, QueuedWindow, SessionConfig, SessionManager, WindowOutcome,
+    encode_window, window_frames, QueuedWindow, SessionConfig, SessionManager, WindowOutcome,
 };
 
 /// Service-level configuration.
@@ -67,19 +67,37 @@ pub struct ServiceConfig {
     /// Vmem residency budget in bits. `0` derives it from the plan's
     /// system config (CIM array + global buffer capacity).
     pub resident_budget_bits: u64,
+    /// Serialize window dispatch — and therefore vmem residency admission
+    /// and its spill/refill accounting — in global admission order, so
+    /// residency and energy reports are bit-reproducible at any worker
+    /// count. Window *execution* still overlaps across the pool; only the
+    /// dispatch (and the LRU transitions it drives) is ordered, at some
+    /// head-of-line throughput cost.
+    pub deterministic_admission: bool,
+    /// Early-exit confidence bound: stop serving a session once the
+    /// rolling classification's smoothed margin (top-1 − top-2 of the
+    /// EMA'd window rates) reaches this value. Remaining windows are
+    /// skipped and counted as saved. `0` disables.
+    pub early_exit_margin: f64,
+    /// Executed windows required before early exit may trigger (guards
+    /// against deciding on a single noisy window).
+    pub early_exit_min_windows: u64,
     /// Session parameters (shared by all sessions).
     pub session: SessionConfig,
 }
 
 impl ServiceConfig {
     /// Nominal operating point: deep queues, budget derived from the
-    /// modeled chip capacity, 48×48 gesture sessions.
+    /// modeled chip capacity, 48×48 gesture sessions, no early exit.
     pub fn nominal(workers: usize) -> ServiceConfig {
         ServiceConfig {
             workers,
             queue_capacity: 4096,
             per_session_capacity: 256,
             resident_budget_bits: 0,
+            deterministic_admission: false,
+            early_exit_margin: 0.0,
+            early_exit_min_windows: 2,
             session: SessionConfig::default_48(),
         }
     }
@@ -141,6 +159,13 @@ struct ServiceState {
     in_flight: usize,
     /// Windows dropped by admission control.
     shed: u64,
+    /// Next global admission sequence number (dispatch order key).
+    next_seq: u64,
+    /// Seqs admitted but not yet dispatched. In deterministic-admission
+    /// mode the only dispatchable window is the one holding the smallest
+    /// outstanding seq; early-exit drops prune their seqs so the order
+    /// never stalls on a skipped window.
+    outstanding: BTreeSet<u64>,
     shutdown: bool,
     first_error: Option<anyhow::Error>,
 }
@@ -185,6 +210,8 @@ impl StreamingService {
                 queued_windows: 0,
                 in_flight: 0,
                 shed: 0,
+                next_seq: 0,
+                outstanding: BTreeSet::new(),
                 shutdown: false,
                 first_error: None,
             }),
@@ -225,6 +252,25 @@ impl StreamingService {
         st.sessions.open(id, &self.plan.net, label)
     }
 
+    /// Open a new session under a service-allocated id — recycled from a
+    /// reaped/removed session when one is free, so long-running traffic
+    /// reuses the id space instead of growing it without bound.
+    pub fn open_session_auto(&self, label: Option<usize>) -> Result<u64> {
+        let mut st = self.state.lock().unwrap();
+        ensure!(!st.shutdown, "service is shut down");
+        let id = st.sessions.allocate_id();
+        st.sessions.open(id, &self.plan.net, label)?;
+        Ok(id)
+    }
+
+    /// Run the idle-session reaper: close every session with no queued or
+    /// running window that is finished or idle for at least `max_idle`,
+    /// releasing its residency share and recycling its id. Returns the
+    /// reaped ids (their results are gone afterwards — read them first).
+    pub fn reap_idle(&self, max_idle: Duration) -> Vec<u64> {
+        self.state.lock().unwrap().sessions.reap_idle(max_idle)
+    }
+
     /// Deliver a batch of events for a session. Out-of-bounds events are a
     /// recoverable error; late/overflow events are dropped and counted by
     /// the session's jitter buffer. Completed windows are admitted to the
@@ -239,6 +285,7 @@ impl StreamingService {
                 .get_mut(id)
                 .ok_or_else(|| anyhow!("unknown session {id}"))?;
             ensure!(!s.closed, "session {id} is closed");
+            s.last_activity = Instant::now();
             for &e in events {
                 let _ = s.ingest.push(e)?;
             }
@@ -266,6 +313,7 @@ impl StreamingService {
             // rejected end leaves the session open for a corrected retry.
             let windows = s.ingest.flush(end_us)?;
             s.closed = true;
+            s.last_activity = Instant::now();
             windows
         };
         Self::admit_windows(st_ref, &self.cfg, id, windows);
@@ -289,6 +337,24 @@ impl StreamingService {
                 Some(s) => s,
                 None => return,
             };
+            if s.early_exited {
+                // The rolling classification already cleared the
+                // confidence bound: skip the window outright (saved, not
+                // shed — the decision stands without it). The window still
+                // consumes an admission seq: whether a post-exit window is
+                // skipped here or queued-then-dropped at the exit commit
+                // is a wall-clock race, and burning the seq either way
+                // keeps the global dispatch order — and with it the
+                // deterministic-admission residency accounting —
+                // independent of that race.
+                st.next_seq += 1;
+                s.windows_saved += 1;
+                s.frames_saved += window_frames(&cfg.session, &w) as u64;
+                if w.last {
+                    s.finished = true;
+                }
+                continue;
+            }
             if over_global || s.queue.len() >= cfg.per_session_capacity {
                 s.windows_shed += 1;
                 st.shed += 1;
@@ -299,7 +365,10 @@ impl StreamingService {
                 continue;
             }
             let was_idle = s.queue.is_empty() && !s.running;
-            s.queue.push_back(QueuedWindow { window: w, enqueued_at: Instant::now() });
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            s.queue.push_back(QueuedWindow { window: w, enqueued_at: Instant::now(), seq });
+            st.outstanding.insert(seq);
             st.queued_windows += 1;
             if was_idle {
                 st.ready.push_back(id);
@@ -337,17 +406,45 @@ impl StreamingService {
                     if st.shutdown {
                         return;
                     }
-                    if let Some(id) = st.ready.pop_front() {
+                    // Dispatch policy: FIFO over ready sessions, or — in
+                    // deterministic-admission mode — strictly the window
+                    // holding the smallest outstanding admission seq, so
+                    // residency transitions replay identically at any
+                    // worker count. If that window's session is still
+                    // running its previous window, everyone waits (its
+                    // commit wakes us).
+                    let picked = if self.cfg.deterministic_admission {
+                        let next = st.outstanding.iter().next().copied();
+                        let mut found = None;
+                        if let Some(next) = next {
+                            let st_ref = &mut *st;
+                            let pos = st_ref.ready.iter().position(|&rid| {
+                                st_ref
+                                    .sessions
+                                    .get(rid)
+                                    .and_then(|s| s.queue.front())
+                                    .is_some_and(|qw| qw.seq == next)
+                            });
+                            if let Some(pos) = pos {
+                                found = st_ref.ready.remove(pos);
+                            }
+                        }
+                        found
+                    } else {
+                        st.ready.pop_front()
+                    };
+                    if let Some(id) = picked {
                         let st_ref = &mut *st;
-                        let (window, enqueued_at, state) = {
+                        let (window, enqueued_at, seq, state) = {
                             let s = st_ref
                                 .sessions
                                 .get_mut(id)
                                 .expect("ready session exists");
                             let qw = s.queue.pop_front().expect("ready implies queued");
                             s.running = true;
-                            (qw.window, qw.enqueued_at, s.state.clone())
+                            (qw.window, qw.enqueued_at, qw.seq, s.state.clone())
                         };
+                        st_ref.outstanding.remove(&seq);
                         st_ref.queued_windows -= 1;
                         st_ref.in_flight += 1;
                         // Residency: admitting this window makes the
@@ -360,6 +457,11 @@ impl StreamingService {
                     st = self.signal.wait(st).unwrap();
                 }
             };
+            if self.cfg.deterministic_admission {
+                // Taking the smallest seq may have unblocked a sibling on
+                // the next one.
+                self.signal.notify_all();
+            }
 
             let t0 = Instant::now();
             let outcome = self.run_window(backend.as_mut(), &mut bufs, &job);
@@ -370,6 +472,7 @@ impl StreamingService {
                     let mut st = self.state.lock().unwrap();
                     let st_ref = &mut *st;
                     let latency_s = job.enqueued_at.elapsed().as_secs_f64();
+                    let mut dropped_seqs = Vec::new();
                     let requeue = {
                         let s = st_ref
                             .sessions
@@ -387,8 +490,36 @@ impl StreamingService {
                             },
                         );
                         s.running = false;
+                        // Early exit: once the rolling classification's
+                        // smoothed margin clears the configured bound, the
+                        // decision is made — skip the session's remaining
+                        // windows (queued now or arriving later) instead of
+                        // spending frames on them.
+                        if self.cfg.early_exit_margin > 0.0
+                            && !s.early_exited
+                            && !s.finished
+                            && s.windows_done >= self.cfg.early_exit_min_windows
+                            && s.smoothed_margin() >= self.cfg.early_exit_margin
+                        {
+                            s.early_exited = true;
+                        }
+                        if s.early_exited {
+                            while let Some(qw) = s.queue.pop_front() {
+                                dropped_seqs.push(qw.seq);
+                                s.windows_saved += 1;
+                                s.frames_saved +=
+                                    window_frames(&self.cfg.session, &qw.window) as u64;
+                                if qw.window.last {
+                                    s.finished = true;
+                                }
+                            }
+                        }
                         !s.queue.is_empty()
                     };
+                    for seq in &dropped_seqs {
+                        st_ref.outstanding.remove(seq);
+                    }
+                    st_ref.queued_windows -= dropped_seqs.len();
                     if requeue {
                         st_ref.ready.push_back(job.id);
                     }
@@ -518,6 +649,9 @@ impl StreamingService {
             state: s.state.clone(),
             windows_done: s.windows_done,
             windows_shed: s.windows_shed,
+            early_exited: s.early_exited,
+            windows_saved: s.windows_saved,
+            frames_saved: s.frames_saved,
             finished: s.finished,
             metrics: s.metrics(),
         })
@@ -534,6 +668,9 @@ impl StreamingService {
         let mut events_dropped = 0u64;
         let mut finished = 0u64;
         let mut rolling_correct = 0u64;
+        let mut early_exits = 0u64;
+        let mut windows_saved = 0u64;
+        let mut frames_saved = 0u64;
         for id in st.sessions.ids() {
             let s = st.sessions.get(id).expect("listed id exists");
             metrics.merge(&s.metrics());
@@ -543,6 +680,11 @@ impl StreamingService {
             if s.finished {
                 finished += 1;
             }
+            if s.early_exited {
+                early_exits += 1;
+            }
+            windows_saved += s.windows_saved;
+            frames_saved += s.frames_saved;
             if let Some(l) = s.label {
                 rolling_correct += (s.rolling_prediction() == l) as u64;
             }
@@ -559,6 +701,9 @@ impl StreamingService {
             windows_shed: st.shed,
             events_dropped,
             rolling_correct,
+            early_exits,
+            windows_saved,
+            frames_saved,
             evictions: st.sessions.evictions,
             state_dram_bits: dram_bits,
             latency,
@@ -587,7 +732,13 @@ pub struct SessionResult {
     pub windows_done: u64,
     /// Windows shed.
     pub windows_shed: u64,
-    /// The final window has executed (or was shed after close).
+    /// The rolling classification cleared the early-exit bound.
+    pub early_exited: bool,
+    /// Windows skipped after early exit.
+    pub windows_saved: u64,
+    /// Spike frames those skipped windows would have executed.
+    pub frames_saved: u64,
+    /// The final window has executed (or was shed/skipped after close).
     pub finished: bool,
     /// This session's model metrics.
     pub metrics: RunMetrics,
@@ -610,6 +761,12 @@ pub struct ServeReport {
     pub events_dropped: u64,
     /// Sessions whose *rolling* (label-smoothed) prediction was correct.
     pub rolling_correct: u64,
+    /// Sessions that stopped early on the confidence bound.
+    pub early_exits: u64,
+    /// Windows skipped by early exit across all sessions.
+    pub windows_saved: u64,
+    /// Spike frames those skipped windows would have executed.
+    pub frames_saved: u64,
     /// Session-state evictions under the residency budget.
     pub evictions: u64,
     /// Session-state DRAM traffic (spill + refill), bits.
@@ -664,6 +821,12 @@ impl ServeReport {
             100.0 * self.shed_rate(),
             self.windows_per_sec(),
         ));
+        if self.early_exits > 0 {
+            out.push_str(&format!(
+                "early exits        {} sessions, {} windows / {} frames saved\n",
+                self.early_exits, self.windows_saved, self.frames_saved,
+            ));
+        }
         out.push_str(&format!("window latency     {}\n", self.latency.line()));
         out.push_str(&format!(
             "ingest drops       {} events (late + overflow)\n",
@@ -839,5 +1002,116 @@ mod tests {
         let traffic = gesture_traffic(1, 1, 0);
         let err = svc.serve(&traffic, 32).unwrap_err();
         assert!(format!("{err}").contains("refused"));
+    }
+
+    #[test]
+    fn deterministic_admission_reproduces_residency_at_any_worker_count() {
+        // A budget of one session's vmem makes every interleaved window an
+        // eviction battle: under free scheduling the spill pattern depends
+        // on worker timing, but deterministic-admission mode must replay
+        // the exact same residency transitions — and so the same DRAM
+        // traffic — at any pool size.
+        let traffic = gesture_traffic(4, 19, 0);
+        let vmem = small_net().total_vmem_bits();
+        let run = |workers: usize| {
+            let svc = service(workers, |c| {
+                c.resident_budget_bits = vmem;
+                c.deterministic_admission = true;
+            });
+            let r = svc.serve(&traffic, 16).unwrap();
+            assert_eq!(r.finished_sessions, 4);
+            assert_eq!(r.windows_shed, 0);
+            (r.evictions, r.state_dram_bits, r.metrics.sops, r.metrics.in_events)
+        };
+        let a = run(1);
+        let b = run(4);
+        assert!(a.0 > 0, "tight budget must evict");
+        assert_eq!(a, b, "residency accounting must be pool-size invariant");
+
+        // The guarantee must survive early exit: a post-exit window burns
+        // its admission seq whether it is skipped at ingest or
+        // queued-then-dropped at the exit commit, so the dispatch order
+        // (and the spill pattern it drives) stays identical.
+        let run_exit = |workers: usize| {
+            let svc = service(workers, |c| {
+                c.resident_budget_bits = vmem;
+                c.deterministic_admission = true;
+                c.early_exit_margin = 1e-6;
+                c.early_exit_min_windows = 1;
+            });
+            let r = svc.serve(&traffic, 16).unwrap();
+            (
+                r.evictions,
+                r.state_dram_bits,
+                r.windows_done,
+                r.windows_saved,
+                r.frames_saved,
+            )
+        };
+        assert_eq!(run_exit(1), run_exit(4), "deterministic with early exit on");
+    }
+
+    #[test]
+    fn early_exit_saves_windows_and_still_finishes() {
+        let traffic = gesture_traffic(6, 23, 0);
+        let baseline = service(2, |_| {}).serve(&traffic, 32).unwrap();
+        assert_eq!(baseline.early_exits, 0);
+        assert_eq!(baseline.windows_saved, 0);
+
+        let svc = service(2, |c| {
+            // A margin this low triggers as soon as any class leads.
+            c.early_exit_margin = 1e-6;
+            c.early_exit_min_windows = 1;
+        });
+        let report = svc.serve(&traffic, 32).unwrap();
+        assert_eq!(report.finished_sessions, 6, "exited sessions still finish");
+        assert!(report.early_exits > 0, "the bound must trigger");
+        assert!(report.windows_saved > 0);
+        assert!(report.frames_saved > 0);
+        assert!(
+            report.windows_done < baseline.windows_done,
+            "early exit must cut executed windows"
+        );
+        assert_eq!(
+            report.windows_done + report.windows_saved,
+            baseline.windows_done,
+            "every window is either executed or saved, never lost"
+        );
+        for id in 0..6u64 {
+            let s = svc.session_result(id).unwrap();
+            assert!(s.finished);
+            if s.early_exited {
+                assert!(s.windows_saved > 0 || s.windows_done == 4);
+            }
+        }
+    }
+
+    #[test]
+    fn reaper_recycles_ids_after_serving() {
+        let traffic = gesture_traffic(3, 29, 0);
+        let svc = service(2, |_| {});
+        let report = svc.serve(&traffic, 32).unwrap();
+        assert_eq!(report.finished_sessions, 3);
+        // All three sessions are finished and idle: the reaper closes them
+        // regardless of the idle bound.
+        let reaped = svc.reap_idle(Duration::from_secs(3600));
+        assert_eq!(reaped, vec![0, 1, 2]);
+        assert!(svc.session_result(0).is_none(), "reaped results are gone");
+        assert_eq!(svc.reap_idle(Duration::from_secs(3600)), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn auto_ids_recycle_through_the_session_lifecycle() {
+        let svc = service(1, |_| {});
+        let a = svc.open_session_auto(None).unwrap();
+        let b = svc.open_session_auto(None).unwrap();
+        assert_eq!((a, b), (0, 1));
+        // Both sessions are idle (no queued or running windows): a
+        // zero-bound reap closes them and recycles their ids.
+        let reaped = svc.reap_idle(Duration::ZERO);
+        assert_eq!(reaped, vec![0, 1]);
+        let c = svc.open_session_auto(None).unwrap();
+        assert_eq!(c, 1, "the most recently reaped id is reused first");
+        svc.stop();
     }
 }

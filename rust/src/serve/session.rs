@@ -18,6 +18,7 @@
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::engine::WindowTotals;
 use crate::coordinator::metrics::{LatencyStats, RunMetrics};
@@ -85,6 +86,21 @@ impl SessionConfig {
     }
 }
 
+/// Number of spike frames [`encode_window`] would emit for `w` — exposed
+/// so the early-exit accounting can price a *skipped* window in saved
+/// frames without encoding it.
+pub fn window_frames(cfg: &SessionConfig, w: &MicroWindow) -> usize {
+    if w.last {
+        // Partial tail window: only as many frames as its span needs,
+        // capped at the nominal window size. A zero-span last marker
+        // (stream closed at or before the emitted frontier) encodes to
+        // zero frames — nothing runs past the declared end.
+        (w.span_us().div_ceil(cfg.step_us.max(1)) as usize).min(cfg.frames_per_window)
+    } else {
+        cfg.frames_per_window
+    }
+}
+
 /// Encode one micro-window into per-timestep spike frames with the same
 /// binning rule as [`crate::events::encode_frames`]: frame `k` of the
 /// window owns `[t0 + k·step, t0 + (k+1)·step)`, and the final frame of a
@@ -93,15 +109,7 @@ impl SessionConfig {
 /// monolithic encoder.
 pub fn encode_window(cfg: &SessionConfig, w: &MicroWindow) -> Vec<SpikeFrame> {
     let step = cfg.step_us.max(1);
-    let n = if w.last {
-        // Partial tail window: only as many frames as its span needs,
-        // capped at the nominal window size. A zero-span last marker
-        // (stream closed at or before the emitted frontier) encodes to
-        // zero frames — nothing runs past the declared end.
-        (w.span_us().div_ceil(step) as usize).min(cfg.frames_per_window)
-    } else {
-        cfg.frames_per_window
-    };
+    let n = window_frames(cfg, w);
     let mut frames: Vec<SpikeFrame> =
         (0..n).map(|_| SpikeFrame::new(cfg.width, cfg.height)).collect();
     if n == 0 {
@@ -122,6 +130,9 @@ pub struct QueuedWindow {
     pub window: MicroWindow,
     /// When the service admitted it.
     pub enqueued_at: std::time::Instant,
+    /// Global admission sequence number — the dispatch order key of the
+    /// service's deterministic-admission mode.
+    pub seq: u64,
 }
 
 /// One executed window's outcome, handed from a worker back to its
@@ -184,6 +195,15 @@ pub struct Session {
     /// Has ever been resident (a fresh session zero-initializes instead of
     /// refilling from DRAM).
     pub ever_resident: bool,
+    /// The rolling classification crossed the early-exit confidence bound;
+    /// remaining windows are skipped instead of executed.
+    pub early_exited: bool,
+    /// Windows skipped after early exit (distinct from load-shed drops).
+    pub windows_saved: u64,
+    /// Spike frames those skipped windows would have executed.
+    pub frames_saved: u64,
+    /// Last ingest/commit activity — the idle reaper's clock.
+    pub last_activity: Instant,
 }
 
 impl Session {
@@ -207,6 +227,10 @@ impl Session {
             finished: false,
             resident: false,
             ever_resident: false,
+            early_exited: false,
+            windows_saved: 0,
+            frames_saved: 0,
+            last_activity: Instant::now(),
         }
     }
 
@@ -224,6 +248,7 @@ impl Session {
         self.latency.push(outcome.latency_s);
         self.wallclock_s += outcome.wallclock_s;
         self.windows_done += 1;
+        self.last_activity = Instant::now();
         if outcome.last {
             self.finished = true;
         }
@@ -233,6 +258,27 @@ impl Session {
     /// to the offline path's argmax for the same spikes.
     pub fn prediction(&self) -> usize {
         ScnnRunner::predict(&self.rate)
+    }
+
+    /// Confidence margin of the rolling classification: top-1 minus top-2
+    /// of the smoothed per-class window rates. The early-exit policy stops
+    /// serving a session once this clears its configured bound.
+    pub fn smoothed_margin(&self) -> f64 {
+        let mut top = f64::NEG_INFINITY;
+        let mut second = f64::NEG_INFINITY;
+        for &s in &self.smoothed {
+            if s > top {
+                second = top;
+                top = s;
+            } else if s > second {
+                second = s;
+            }
+        }
+        if second.is_finite() {
+            top - second
+        } else {
+            top
+        }
     }
 
     /// Rolling prediction from the label-smoothed window rates.
@@ -257,6 +303,7 @@ impl Session {
             samples: 1,
             correct,
             timesteps: self.totals.frames,
+            in_events: self.totals.in_events,
             sops: self.totals.sops,
             mean_sparsity: self.totals.sparsity_acc / self.totals.frames.max(1) as f64,
             energy: self.totals.energy,
@@ -293,12 +340,20 @@ pub struct SessionManager {
     /// Resident sessions, least-recently-used first.
     lru: VecDeque<u64>,
     resident_bits: u64,
+    /// Next never-used id for [`Self::allocate_id`].
+    next_id: u64,
+    /// Ids released by [`Self::remove`] / [`Self::reap_idle`], reused
+    /// LIFO — long-running services recycle ids instead of counting up
+    /// forever.
+    free_ids: Vec<u64>,
     /// Cumulative refills from DRAM (bits).
     pub fill_bits: u64,
     /// Cumulative spills to DRAM (bits).
     pub spill_bits: u64,
     /// Cumulative evictions.
     pub evictions: u64,
+    /// Sessions closed by the idle reaper.
+    pub reaped: u64,
 }
 
 impl SessionManager {
@@ -312,9 +367,12 @@ impl SessionManager {
             sessions: HashMap::new(),
             lru: VecDeque::new(),
             resident_bits: 0,
+            next_id: 0,
+            free_ids: Vec::new(),
             fill_bits: 0,
             spill_bits: 0,
             evictions: 0,
+            reaped: 0,
         }
     }
 
@@ -335,7 +393,49 @@ impl SessionManager {
             "session {id} already exists"
         );
         self.sessions.insert(id, Session::new(id, &self.cfg, net, label));
+        // Keep the auto-allocator clear of explicitly chosen ids.
+        self.next_id = self.next_id.max(id + 1);
         Ok(())
+    }
+
+    /// Hand out an unused session id, preferring recycled ones — a
+    /// long-running front end reuses the id space instead of growing it
+    /// unboundedly.
+    pub fn allocate_id(&mut self) -> u64 {
+        while let Some(id) = self.free_ids.pop() {
+            // An explicitly reopened id may have re-entered use since it
+            // was recycled.
+            if !self.sessions.contains_key(&id) {
+                return id;
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Close every session that is safe to reap: no window running, no
+    /// window queued, and either finished or idle for at least `max_idle`.
+    /// Returns the reaped ids (ascending); their ids are recycled.
+    pub fn reap_idle(&mut self, max_idle: Duration) -> Vec<u64> {
+        let now = Instant::now();
+        let mut victims: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| {
+                !s.running
+                    && s.queue.is_empty()
+                    && (s.finished
+                        || now.saturating_duration_since(s.last_activity) >= max_idle)
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        victims.sort_unstable();
+        for &id in &victims {
+            self.remove(id);
+        }
+        self.reaped += victims.len() as u64;
+        victims
     }
 
     /// Look up a session.
@@ -418,7 +518,7 @@ impl SessionManager {
     }
 
     /// Drop a session entirely (its residency share is released without a
-    /// spill — the state is dead).
+    /// spill — the state is dead). The id returns to the recycle pool.
     pub fn remove(&mut self, id: u64) -> Option<Session> {
         if let Some(pos) = self.lru.iter().position(|&x| x == id) {
             let _ = self.lru.remove(pos);
@@ -427,6 +527,7 @@ impl SessionManager {
         let mut removed = self.sessions.remove(&id);
         if let Some(s) = removed.as_mut() {
             s.resident = false;
+            self.free_ids.push(id);
         }
         removed
     }
@@ -584,6 +685,87 @@ mod tests {
         let mut m = SessionManager::new(SessionConfig::default_48(), &net, u64::MAX);
         m.open(1, &net, None).unwrap();
         assert!(m.open(1, &net, None).is_err());
+    }
+
+    #[test]
+    fn allocate_recycles_removed_ids() {
+        let net = small_net();
+        let mut m = SessionManager::new(SessionConfig::default_48(), &net, u64::MAX);
+        let a = m.allocate_id();
+        let b = m.allocate_id();
+        assert_eq!((a, b), (0, 1));
+        m.open(a, &net, None).unwrap();
+        m.open(b, &net, None).unwrap();
+        m.remove(a);
+        assert_eq!(m.allocate_id(), a, "removed id is recycled first");
+        // Explicit opens keep the allocator clear of their ids.
+        m.open(7, &net, None).unwrap();
+        assert_eq!(m.allocate_id(), 8);
+    }
+
+    #[test]
+    fn allocate_skips_recycled_id_reopened_explicitly() {
+        let net = small_net();
+        let mut m = SessionManager::new(SessionConfig::default_48(), &net, u64::MAX);
+        let a = m.allocate_id();
+        m.open(a, &net, None).unwrap();
+        m.remove(a);
+        m.open(a, &net, None).unwrap(); // client re-claims the id itself
+        let next = m.allocate_id();
+        assert_ne!(next, a, "an in-use recycled id must not be handed out");
+    }
+
+    #[test]
+    fn reaper_closes_finished_and_idle_sessions_only() {
+        let net = small_net();
+        let mut m = SessionManager::new(SessionConfig::default_48(), &net, u64::MAX);
+        for id in 0..4u64 {
+            m.open(id, &net, None).unwrap();
+            m.admit(id);
+        }
+        m.get_mut(1).unwrap().finished = true;
+        m.get_mut(2).unwrap().running = true;
+        m.get_mut(3).unwrap().queue.push_back(QueuedWindow {
+            window: mw(0, 1, vec![], false),
+            enqueued_at: Instant::now(),
+            seq: 0,
+        });
+        // Huge idle bound: only the finished session qualifies.
+        let reaped = m.reap_idle(Duration::from_secs(3600));
+        assert_eq!(reaped, vec![1]);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.reaped, 1);
+        assert_eq!(m.resident_count(), 3, "reaped session released residency");
+        // Zero idle bound: everything idle goes; running/queued stay.
+        let reaped = m.reap_idle(Duration::ZERO);
+        assert_eq!(reaped, vec![0]);
+        assert!(m.get(2).is_some() && m.get(3).is_some());
+        // Reaped ids recycle.
+        assert_eq!(m.allocate_id(), 0);
+    }
+
+    #[test]
+    fn smoothed_margin_is_top1_minus_top2() {
+        let net = small_net();
+        let mut s = Session::new(1, &SessionConfig::default_48(), &net, None);
+        assert_eq!(s.smoothed_margin(), 0.0, "all-zero logits have no margin");
+        s.smoothed[3] = 5.0;
+        s.smoothed[7] = 2.0;
+        assert!((s.smoothed_margin() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_frames_matches_encode_window() {
+        let cfg = SessionConfig::default_48();
+        let cases = [
+            mw(0, cfg.window_us(), vec![], false),
+            mw(0, 2 * cfg.step_us + 1, vec![], true),
+            mw(0, 2 * cfg.step_us, vec![], true),
+            mw(100, 100, vec![], true),
+        ];
+        for w in &cases {
+            assert_eq!(window_frames(&cfg, w), encode_window(&cfg, w).len());
+        }
     }
 
     #[test]

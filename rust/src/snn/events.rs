@@ -1,0 +1,692 @@
+//! Event-driven sparse spike datapath.
+//!
+//! The paper's headline is *event-based* execution: synaptic accumulates
+//! fire only on input spikes (Fig. 1c/2c), so the work per timestep scales
+//! with spike activity, not with layer size. This module makes that
+//! structural in the software engine:
+//!
+//! * [`SpikeList`] — the first-class sparse spike representation (sorted
+//!   active indices over a known dense dimension). The whole runtime
+//!   datapath — encoder → [`crate::runtime::StepBackend`] → coordinator —
+//!   moves spikes in this form; dense `Vec<bool>` survives only at the
+//!   golden-model boundary.
+//! * [`ConvAdjacency`] — per-layer precomputed scatter adjacency: conv
+//!   geometry compiled once into CSR-style per-input-position synapse
+//!   offsets, so each event walks straight to the output taps its
+//!   receptive field covers (no per-event stride/pad arithmetic on the
+//!   clipped borders).
+//! * [`EventConvLayer`] / [`EventFcLayer`] — event-driven stepping that
+//!   only touches the membrane potentials of neurons reached by an active
+//!   spike, and fire-checks only touched neurons plus the *refire set*
+//!   (see below).
+//!
+//! **Soundness of sparse fire-checking.** Reset-by-subtraction leaves a
+//! residual `v - θ` that can itself still clear the threshold (when
+//! `v ≥ 2θ`), and the dense golden models fire-check *every* neuron
+//! *every* timestep — an untouched neuron with `v ≥ θ` fires on zero
+//! input. The sparse layers therefore carry the set of neurons whose
+//! potential still clears the threshold after each step (`pending`) into
+//! the next step's fire-check. Untouched neurons with `v < θ` are
+//! genuinely inert (their potential is unchanged and below threshold), so
+//! skipping them is exact, not approximate. Bit-identity with the dense
+//! oracles ([`crate::snn::conv::ConvLifLayer`] /
+//! [`crate::snn::lif::LifLayer`]) over random geometries and resolutions
+//! is pinned by `rust/tests/property_sparse.rs`.
+
+use super::layer::{LayerKind, LayerSpec};
+use super::quant::{max_val, min_val, wrap, Resolution};
+
+// -------------------------------------------------------------- spike list
+
+/// A sparse binary spike vector: the sorted indices of the active bits
+/// over a known dense dimension.
+///
+/// This is the AER-native representation the accelerator's event queues
+/// move — storage and bandwidth scale with activity, and the event-driven
+/// layers consume it directly without a densify step.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SpikeList {
+    /// Active indices, strictly increasing.
+    indices: Vec<u32>,
+    /// Dense dimension of the underlying spike vector.
+    dim: usize,
+}
+
+impl SpikeList {
+    /// The all-silent spike vector of dimension `dim`.
+    pub fn empty(dim: usize) -> SpikeList {
+        SpikeList { indices: Vec::new(), dim }
+    }
+
+    /// Build from a dense boolean vector (indices come out sorted).
+    pub fn from_dense(bits: &[bool]) -> SpikeList {
+        let indices = bits
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b)
+            .map(|(i, _)| i as u32)
+            .collect();
+        SpikeList { indices, dim: bits.len() }
+    }
+
+    /// Build from a dense 0/1 `i32` vector (any non-zero is a spike) —
+    /// the PJRT tensor boundary.
+    pub fn from_i32_dense(vals: &[i32]) -> SpikeList {
+        let indices = vals
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        SpikeList { indices, dim: vals.len() }
+    }
+
+    /// Build from already-sorted active indices. Sortedness, uniqueness,
+    /// and bounds are asserted — a malformed spike list is a caller bug,
+    /// not a recoverable condition.
+    pub fn from_sorted(indices: Vec<u32>, dim: usize) -> SpikeList {
+        assert!(
+            indices.windows(2).all(|w| w[0] < w[1]),
+            "spike indices must be strictly increasing"
+        );
+        if let Some(&last) = indices.last() {
+            assert!((last as usize) < dim, "spike index {last} out of dim {dim}");
+        }
+        SpikeList { indices, dim }
+    }
+
+    /// Dense dimension of the spike vector.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of active spikes.
+    pub fn count(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// True when no spike is active.
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// The sorted active indices.
+    pub fn active(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// Active fraction (`count / dim`; 0 for a zero-dim list).
+    pub fn activity(&self) -> f64 {
+        if self.dim == 0 {
+            return 0.0;
+        }
+        self.indices.len() as f64 / self.dim as f64
+    }
+
+    /// Densify to booleans (golden-model boundary).
+    pub fn to_dense(&self) -> Vec<bool> {
+        let mut bits = vec![false; self.dim];
+        for &i in &self.indices {
+            bits[i as usize] = true;
+        }
+        bits
+    }
+
+    /// Densify to the 0/1 `i32` layout the PJRT artifacts expect.
+    pub fn to_i32(&self) -> Vec<i32> {
+        let mut vals = vec![0i32; self.dim];
+        for &i in &self.indices {
+            vals[i as usize] = 1;
+        }
+        vals
+    }
+}
+
+// ---------------------------------------------------------- conv adjacency
+
+/// One precomputed synapse tap: an input spatial position reaches output
+/// position `out_pos` through kernel element `ker_pos`.
+#[derive(Debug, Clone, Copy)]
+struct Tap {
+    /// `oy * ow + ox` of the reached output position.
+    out_pos: u32,
+    /// `dy * k + dx` of the kernel element connecting them.
+    ker_pos: u32,
+}
+
+/// CSR-style scatter adjacency for a conv layer: for every input spatial
+/// position, the list of (output position, kernel element) taps its spikes
+/// reach, with border clipping folded in at build time.
+///
+/// The spatial structure is channel-independent, so one adjacency row per
+/// `(iy, ix)` serves all `in_ch × out_ch` channel pairs — the per-event
+/// walk adds the channel strides on top.
+#[derive(Debug, Clone)]
+pub struct ConvAdjacency {
+    /// Row offsets into `taps`, one row per input position (`in_h × in_w`
+    /// rows, `offsets.len() == rows + 1`).
+    offsets: Vec<u32>,
+    taps: Vec<Tap>,
+}
+
+impl ConvAdjacency {
+    /// Compile the scatter adjacency of `spec` (must be a conv layer).
+    pub fn build(spec: &LayerSpec) -> ConvAdjacency {
+        let (k, stride, pad, in_h, in_w) = match spec.kind {
+            LayerKind::Conv { k, stride, pad, in_h, in_w, .. } => {
+                (k, stride, pad, in_h, in_w)
+            }
+            _ => panic!("conv spec required"),
+        };
+        let (_, oh, ow) = spec.out_shape();
+        let mut offsets = Vec::with_capacity(in_h * in_w + 1);
+        let mut taps = Vec::new();
+        offsets.push(0u32);
+        for iy in 0..in_h {
+            for ix in 0..in_w {
+                for dy in 0..k {
+                    // Output row oy with oy*stride + dy - pad == iy.
+                    let oy_num = iy as i64 + pad as i64 - dy as i64;
+                    if oy_num < 0 || oy_num % stride as i64 != 0 {
+                        continue;
+                    }
+                    let oy = (oy_num / stride as i64) as usize;
+                    if oy >= oh {
+                        continue;
+                    }
+                    for dx in 0..k {
+                        let ox_num = ix as i64 + pad as i64 - dx as i64;
+                        if ox_num < 0 || ox_num % stride as i64 != 0 {
+                            continue;
+                        }
+                        let ox = (ox_num / stride as i64) as usize;
+                        if ox >= ow {
+                            continue;
+                        }
+                        taps.push(Tap {
+                            out_pos: (oy * ow + ox) as u32,
+                            ker_pos: (dy * k + dx) as u32,
+                        });
+                    }
+                }
+                offsets.push(taps.len() as u32);
+            }
+        }
+        ConvAdjacency { offsets, taps }
+    }
+
+    /// Total taps across all input positions (diagnostics: equals the sum
+    /// of per-position receptive-output counts, i.e. `sops / out_ch` of a
+    /// fully dense frame).
+    pub fn tap_count(&self) -> usize {
+        self.taps.len()
+    }
+}
+
+// ------------------------------------------------------- event conv layer
+
+/// Event-driven conv layer of IF neurons: bit-identical to
+/// [`crate::snn::conv::ConvLifLayer`] but with per-timestep work
+/// proportional to input activity instead of layer size.
+#[derive(Debug, Clone)]
+pub struct EventConvLayer {
+    /// Geometry (must be `LayerKind::Conv`).
+    pub spec: LayerSpec,
+    /// Weights `[out_ch][in_ch][k][k]` flattened row-major (dense layout,
+    /// indexed through the adjacency's kernel positions).
+    weights: Vec<i64>,
+    adj: ConvAdjacency,
+    /// Membrane potentials `[out_ch][oh][ow]` flattened.
+    v: Vec<i64>,
+    /// Firing threshold.
+    pub threshold: i64,
+    /// Refire set: neurons whose potential still clears the threshold
+    /// after the previous step (sorted) — they fire on zero input, exactly
+    /// as the dense per-neuron scan would.
+    pending: Vec<u32>,
+    // Scratch (persistent to avoid per-step allocation): per-neuron raw
+    // accumulator, valid only where `stamp == generation`.
+    acc: Vec<i64>,
+    stamp: Vec<u32>,
+    generation: u32,
+    touched: Vec<u32>,
+}
+
+impl EventConvLayer {
+    /// Build from a spec and flattened weights — same validation as the
+    /// dense golden model.
+    pub fn new(spec: LayerSpec, weights: Vec<i64>, threshold: i64) -> Self {
+        assert!(matches!(spec.kind, LayerKind::Conv { .. }), "conv spec required");
+        assert_eq!(weights.len(), spec.num_weights());
+        let (lo, hi) = (min_val(spec.res.w_bits), max_val(spec.res.w_bits));
+        assert!(
+            weights.iter().all(|&w| (lo..=hi).contains(&w)),
+            "weight exceeds {}b",
+            spec.res.w_bits
+        );
+        assert!(threshold > 0);
+        let n = spec.num_neurons();
+        let adj = ConvAdjacency::build(&spec);
+        EventConvLayer {
+            spec,
+            weights,
+            adj,
+            v: vec![0i64; n],
+            threshold,
+            pending: Vec::new(),
+            acc: vec![0i64; n],
+            stamp: vec![0u32; n],
+            generation: 0,
+            touched: Vec::new(),
+        }
+    }
+
+    fn dims(&self) -> (usize, usize, usize, usize, usize) {
+        match self.spec.kind {
+            LayerKind::Conv { in_ch, out_ch, k, in_h, in_w, .. } => {
+                (in_ch, out_ch, k, in_h, in_w)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Current membrane potentials.
+    pub fn vmem(&self) -> &[i64] {
+        &self.v
+    }
+
+    /// Overwrite the membrane state (snapshot restore). The refire set is
+    /// recomputed from the new potentials — restoring mid-stream must
+    /// reproduce exactly the fire-checks the dense scan would perform.
+    pub fn set_vmem(&mut self, v: &[i64]) {
+        self.v.copy_from_slice(v);
+        self.rebuild_pending();
+    }
+
+    /// Zero all membrane potentials.
+    pub fn reset(&mut self) {
+        self.v.iter_mut().for_each(|x| *x = 0);
+        self.pending.clear();
+    }
+
+    fn rebuild_pending(&mut self) {
+        self.pending.clear();
+        for (i, &v) in self.v.iter().enumerate() {
+            if v >= self.threshold {
+                self.pending.push(i as u32);
+            }
+        }
+    }
+
+    /// One event-driven timestep: scatter every input spike through the
+    /// adjacency, then fire-check the touched ∪ refire neurons only.
+    pub fn step(&mut self, spikes_in: &SpikeList) -> SpikeList {
+        let (in_ch, out_ch, k, in_h, in_w) = self.dims();
+        assert_eq!(spikes_in.dim(), in_ch * in_h * in_w);
+        let (_, oh, ow) = self.spec.out_shape();
+        let plane = in_h * in_w;
+        let out_plane = oh * ow;
+        let kk = k * k;
+        let p_bits = self.spec.res.p_bits;
+
+        self.generation = self.generation.wrapping_add(1);
+        if self.generation == 0 {
+            // Stamp wrap-around (once per 2^32 steps): clear and restart.
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.generation = 1;
+        }
+        let gen = self.generation;
+
+        for &idx in spikes_in.active() {
+            let idx = idx as usize;
+            let ic = idx / plane;
+            let pos = idx % plane;
+            let lo = self.adj.offsets[pos] as usize;
+            let hi = self.adj.offsets[pos + 1] as usize;
+            for oc in 0..out_ch {
+                let w_base = (oc * in_ch + ic) * kk;
+                let v_base = oc * out_plane;
+                for t in &self.adj.taps[lo..hi] {
+                    let n = v_base + t.out_pos as usize;
+                    let w = self.weights[w_base + t.ker_pos as usize];
+                    if self.stamp[n] == gen {
+                        self.acc[n] += w;
+                    } else {
+                        self.stamp[n] = gen;
+                        self.acc[n] = w;
+                        self.touched.push(n as u32);
+                    }
+                }
+            }
+        }
+
+        // Refire set: untouched neurons whose residual potential still
+        // clears the threshold fire on zero input (reset-by-subtraction
+        // leaves v ≥ θ when the pre-reset potential was ≥ 2θ).
+        let pending = std::mem::take(&mut self.pending);
+        for &n in &pending {
+            let ni = n as usize;
+            if self.stamp[ni] != gen {
+                self.stamp[ni] = gen;
+                self.acc[ni] = 0;
+                self.touched.push(n);
+            }
+        }
+
+        // Sorted processing keeps the output spike order identical to the
+        // dense per-neuron scan.
+        self.touched.sort_unstable();
+        let mut out = Vec::new();
+        let mut next_pending = Vec::new();
+        for &n in &self.touched {
+            let ni = n as usize;
+            let mut v = wrap(self.v[ni] + self.acc[ni], p_bits);
+            if v >= self.threshold {
+                v = wrap(v - self.threshold, p_bits);
+                out.push(n);
+            }
+            self.v[ni] = v;
+            if v >= self.threshold {
+                next_pending.push(n);
+            }
+        }
+        self.touched.clear();
+        self.pending = next_pending;
+        SpikeList::from_sorted(out, out_ch * out_plane)
+    }
+}
+
+// --------------------------------------------------------- event FC layer
+
+/// Event-driven fully-connected layer of IF neurons: bit-identical to
+/// [`crate::snn::lif::LifLayer`]. The weight matrix is stored transposed
+/// (per presynaptic neuron), so each active input adds one contiguous
+/// column — the classic event-driven SNN layout. An FC layer's fan-out is
+/// structurally dense, so any active input touches every neuron; the
+/// sparsity win is on the input side, and an all-silent timestep reduces
+/// to the refire set alone.
+#[derive(Debug, Clone)]
+pub struct EventFcLayer {
+    /// Transposed weights: `wt[i * out_dim + o]` (column of input `i`
+    /// contiguous).
+    wt: Vec<i64>,
+    in_dim: usize,
+    out_dim: usize,
+    v: Vec<i64>,
+    /// Firing threshold.
+    pub threshold: i64,
+    /// Operand resolution.
+    pub res: Resolution,
+    /// Refire set (see [`EventConvLayer::step`]).
+    pending: Vec<u32>,
+    /// Per-step accumulator scratch (`out_dim` entries).
+    acc: Vec<i64>,
+}
+
+impl EventFcLayer {
+    /// Create from a `[out][in]` weight matrix — same validation as the
+    /// dense golden model, transposed internally.
+    pub fn new(weights: Vec<Vec<i64>>, res: Resolution, threshold: i64) -> Self {
+        assert!(!weights.is_empty());
+        assert!(threshold > 0);
+        let out_dim = weights.len();
+        let in_dim = weights[0].len();
+        assert!(weights.iter().all(|r| r.len() == in_dim));
+        let (lo, hi) = (min_val(res.w_bits), max_val(res.w_bits));
+        let mut wt = vec![0i64; in_dim * out_dim];
+        for (o, row) in weights.iter().enumerate() {
+            for (i, &w) in row.iter().enumerate() {
+                assert!((lo..=hi).contains(&w), "weight {w} exceeds {}b", res.w_bits);
+                wt[i * out_dim + o] = w;
+            }
+        }
+        EventFcLayer {
+            wt,
+            in_dim,
+            out_dim,
+            v: vec![0i64; out_dim],
+            threshold,
+            res,
+            pending: Vec::new(),
+            acc: vec![0i64; out_dim],
+        }
+    }
+
+    /// Number of inputs.
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Number of output neurons.
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Current membrane potentials.
+    pub fn vmem(&self) -> &[i64] {
+        &self.v
+    }
+
+    /// Overwrite the membrane state (snapshot restore) and recompute the
+    /// refire set.
+    pub fn set_vmem(&mut self, v: &[i64]) {
+        self.v.copy_from_slice(v);
+        self.pending.clear();
+        for (i, &x) in self.v.iter().enumerate() {
+            if x >= self.threshold {
+                self.pending.push(i as u32);
+            }
+        }
+    }
+
+    /// Zero all membrane potentials.
+    pub fn reset(&mut self) {
+        self.v.iter_mut().for_each(|x| *x = 0);
+        self.pending.clear();
+    }
+
+    /// One event-driven timestep.
+    pub fn step(&mut self, spikes_in: &SpikeList) -> SpikeList {
+        assert_eq!(spikes_in.dim(), self.in_dim);
+        let p = self.res.p_bits;
+        let out_dim = self.out_dim;
+        let mut out = Vec::new();
+
+        if spikes_in.is_empty() {
+            // No input: only refire candidates can change state; every
+            // other neuron is unchanged and below threshold.
+            let pending = std::mem::take(&mut self.pending);
+            let mut next_pending = Vec::new();
+            for &n in &pending {
+                let ni = n as usize;
+                let mut v = self.v[ni];
+                if v >= self.threshold {
+                    v = wrap(v - self.threshold, p);
+                    out.push(n);
+                }
+                self.v[ni] = v;
+                if v >= self.threshold {
+                    next_pending.push(n);
+                }
+            }
+            self.pending = next_pending;
+            return SpikeList::from_sorted(out, out_dim);
+        }
+
+        self.acc.iter_mut().for_each(|a| *a = 0);
+        for &i in spikes_in.active() {
+            let col = &self.wt[i as usize * out_dim..(i as usize + 1) * out_dim];
+            for (a, &w) in self.acc.iter_mut().zip(col) {
+                *a += w;
+            }
+        }
+        self.pending.clear();
+        for o in 0..out_dim {
+            let mut v = wrap(self.v[o] + self.acc[o], p);
+            if v >= self.threshold {
+                v = wrap(v - self.threshold, p);
+                out.push(o as u32);
+            }
+            self.v[o] = v;
+            if v >= self.threshold {
+                self.pending.push(o as u32);
+            }
+        }
+        SpikeList::from_sorted(out, out_dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::conv::ConvLifLayer;
+    use crate::snn::lif::LifLayer;
+
+    #[test]
+    fn spike_list_roundtrips_dense() {
+        let bits = vec![false, true, false, false, true, true];
+        let s = SpikeList::from_dense(&bits);
+        assert_eq!(s.dim(), 6);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.active(), &[1, 4, 5]);
+        assert_eq!(s.to_dense(), bits);
+        assert_eq!(s.to_i32(), vec![0, 1, 0, 0, 1, 1]);
+        assert!((s.activity() - 0.5).abs() < 1e-12);
+        assert_eq!(SpikeList::from_i32_dense(&s.to_i32()), s);
+    }
+
+    #[test]
+    fn spike_list_empty_and_bounds() {
+        let e = SpikeList::empty(4);
+        assert!(e.is_empty());
+        assert_eq!(e.to_dense(), vec![false; 4]);
+        assert_eq!(e.activity(), 0.0);
+        let s = SpikeList::from_sorted(vec![0, 3], 4);
+        assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn unsorted_indices_rejected() {
+        SpikeList::from_sorted(vec![3, 1], 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of dim")]
+    fn out_of_range_index_rejected() {
+        SpikeList::from_sorted(vec![4], 4);
+    }
+
+    #[test]
+    fn adjacency_matches_sops_reach() {
+        // The adjacency row of a corner covers the clipped receptive
+        // outputs — the same counts ConvLifLayer::sops computes.
+        let spec = LayerSpec::conv("a", 1, 2, 3, 1, 1, 4, 4, Resolution::new(4, 10));
+        let layer = ConvLifLayer::new(spec.clone(), vec![1; 18], 100);
+        let adj = ConvAdjacency::build(&spec);
+        let mut corner = vec![false; 16];
+        corner[0] = true;
+        // sops counts out_ch × positions; the adjacency row is per spatial
+        // position (channel-independent).
+        assert_eq!(
+            (adj.offsets[1] - adj.offsets[0]) as u64 * 2,
+            layer.sops(&corner)
+        );
+        assert!(adj.tap_count() > 0);
+    }
+
+    #[test]
+    fn event_conv_matches_dense_on_identity_kernel() {
+        let spec = LayerSpec::conv("id", 1, 1, 3, 1, 1, 4, 4, Resolution::new(4, 8));
+        let mut w = vec![0i64; 9];
+        w[4] = 7;
+        let mut sparse = EventConvLayer::new(spec.clone(), w.clone(), 7);
+        let mut dense = ConvLifLayer::new(spec, w, 7);
+        let mut spikes = vec![false; 16];
+        spikes[5] = true;
+        spikes[10] = true;
+        let sl = SpikeList::from_dense(&spikes);
+        let out = sparse.step(&sl);
+        assert_eq!(out.to_dense(), dense.step(&spikes));
+        assert_eq!(sparse.vmem(), &dense.v[..]);
+    }
+
+    #[test]
+    fn untouched_neuron_refires_on_residual() {
+        // One strong spike drives v to 3θ: the neuron fires three steps in
+        // a row, the last two with *no* input — the dense scan does this,
+        // and the sparse refire set must reproduce it.
+        let spec = LayerSpec::conv("r", 1, 1, 1, 1, 0, 1, 1, Resolution::new(6, 12));
+        let mut sparse = EventConvLayer::new(spec.clone(), vec![30], 10);
+        let mut dense = ConvLifLayer::new(spec, vec![30], 10);
+        let on = SpikeList::from_dense(&[true]);
+        let off = SpikeList::empty(1);
+        assert_eq!(sparse.step(&on).to_dense(), dense.step(&[true]));
+        assert_eq!(sparse.vmem()[0], 20);
+        assert_eq!(sparse.step(&off).to_dense(), dense.step(&[false]));
+        assert_eq!(sparse.vmem()[0], 10);
+        assert_eq!(sparse.step(&off).to_dense(), dense.step(&[false]));
+        assert_eq!(sparse.vmem()[0], 0);
+        assert_eq!(sparse.step(&off).count(), 0, "residual exhausted");
+        assert_eq!(sparse.vmem(), &dense.v[..]);
+    }
+
+    #[test]
+    fn event_fc_matches_dense_including_silent_steps() {
+        let res = Resolution::new(4, 8);
+        let weights = vec![vec![5, 2], vec![-3, 7], vec![6, 6]];
+        let mut sparse = EventFcLayer::new(weights.clone(), res, 4);
+        let mut dense = LifLayer::new(weights, res, 4);
+        let patterns = [
+            vec![true, true],
+            vec![false, false], // silent: refire path
+            vec![true, false],
+            vec![false, false],
+            vec![false, true],
+        ];
+        for (t, p) in patterns.iter().enumerate() {
+            let a = sparse.step(&SpikeList::from_dense(p));
+            let b = dense.step(p);
+            assert_eq!(a.to_dense(), b, "t={t} spikes");
+            assert_eq!(sparse.vmem(), &dense.v[..], "t={t} vmem");
+        }
+    }
+
+    #[test]
+    fn set_vmem_rebuilds_refire_set() {
+        // Restoring a snapshot whose potentials clear the threshold must
+        // fire on the next silent step, exactly like the dense scan.
+        let res = Resolution::new(4, 10);
+        let weights = vec![vec![1, 1]];
+        let mut sparse = EventFcLayer::new(weights.clone(), res, 3);
+        let mut dense = LifLayer::new(weights, res, 3);
+        sparse.set_vmem(&[7]);
+        dense.v[0] = 7;
+        let silent = SpikeList::empty(2);
+        assert_eq!(sparse.step(&silent).to_dense(), dense.step(&[false, false]));
+        assert_eq!(sparse.vmem(), &dense.v[..]);
+
+        let spec = LayerSpec::conv("s", 1, 1, 1, 1, 0, 2, 2, Resolution::new(4, 10));
+        let mut c_sparse = EventConvLayer::new(spec.clone(), vec![1], 3);
+        let mut c_dense = ConvLifLayer::new(spec, vec![1], 3);
+        c_sparse.set_vmem(&[7, 0, 4, 2]);
+        c_dense.v.copy_from_slice(&[7, 0, 4, 2]);
+        let silent = SpikeList::empty(4);
+        assert_eq!(
+            c_sparse.step(&silent).to_dense(),
+            c_dense.step(&[false; 4])
+        );
+        assert_eq!(c_sparse.vmem(), &c_dense.v[..]);
+    }
+
+    #[test]
+    fn reset_clears_state_and_refire() {
+        let res = Resolution::new(4, 10);
+        let mut l = EventFcLayer::new(vec![vec![7]], res, 2);
+        l.step(&SpikeList::from_dense(&[true])); // v = 7 - 2 = 5, refire
+        assert!(l.vmem()[0] > 0);
+        l.reset();
+        assert_eq!(l.vmem(), &[0]);
+        assert_eq!(l.step(&SpikeList::empty(1)).count(), 0);
+    }
+}

@@ -7,6 +7,7 @@
 //! shared with the CIM macro simulator and the energy model.
 
 pub mod conv;
+pub mod events;
 pub mod layer;
 pub mod lif;
 pub mod network;
@@ -14,6 +15,7 @@ pub mod quant;
 
 pub use conv::ConvLifLayer;
 
+pub use events::{EventConvLayer, EventFcLayer, SpikeList};
 pub use layer::{LayerKind, LayerSpec};
 pub use lif::LifNeuron;
 pub use network::{Network, scnn_dvs_gesture};

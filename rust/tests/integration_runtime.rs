@@ -10,7 +10,8 @@
 use flexspim::coordinator::Coordinator;
 use flexspim::dataflow::Policy;
 use flexspim::events::{GestureClass, GestureGenerator};
-use flexspim::runtime::{artifacts_dir, Runtime, ScnnRunner};
+use flexspim::runtime::{artifacts_dir, Runtime, ScnnRunner, StepBackend, StepResult};
+use flexspim::snn::events::SpikeList;
 use flexspim::util::rng::Rng;
 
 fn runtime() -> Runtime {
@@ -58,7 +59,7 @@ fn scnn_step_matches_python_golden_trace() {
         let expect_spk: Vec<i32> = (0..10).map(|_| next() as i32).collect();
         let expect_counts: Vec<i32> = (0..9).map(|_| next() as i32).collect();
         let r = runner.step(&frame).unwrap();
-        assert_eq!(r.out_spikes, expect_spk, "step {step}: output spikes");
+        assert_eq!(r.out_spikes.to_i32(), expect_spk, "step {step}: output spikes");
         assert_eq!(r.counts, expect_counts, "step {step}: per-layer counts");
     }
 }
@@ -138,6 +139,55 @@ fn per_layer_artifacts_compile_and_run() {
     let got: Vec<bool> = spk.iter().map(|&x| x != 0).collect();
     assert_eq!(got, expect, "layer artifact vs Rust LIF");
     assert_eq!(vm.iter().map(|&x| x as i64).collect::<Vec<_>>(), layer.v);
+}
+
+/// Snapshot/restore round-trip over the *trait* (SpikeList) interface on
+/// the PJRT-shim backend: run half a sample, checkpoint, restore into a
+/// fresh runner, finish — outputs and final state must equal the
+/// monolithic run. The native-backend twin of this check lives in
+/// `runtime::native` (`snapshot_restore_resumes_bit_identically`).
+#[test]
+fn pjrt_snapshot_restore_resumes_bit_identically() {
+    if !artifacts_ready() {
+        return;
+    }
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(23);
+    let stream = gen.sample(GestureClass::LeftWave, &mut rng);
+    let frames: Vec<SpikeList> = flexspim::events::encode_frames(&stream, 8)
+        .iter()
+        .map(|f| f.to_spike_list())
+        .collect();
+
+    let mut mono = ScnnRunner::load(&runtime(), &artifacts_dir()).unwrap();
+    let mono_out: Vec<StepResult> = frames
+        .iter()
+        .map(|f| StepBackend::step(&mut mono, f).unwrap())
+        .collect();
+    let mono_state = StepBackend::snapshot(&mono);
+
+    let mut first = ScnnRunner::load(&runtime(), &artifacts_dir()).unwrap();
+    let half = frames.len() / 2;
+    let mut windowed: Vec<StepResult> = frames[..half]
+        .iter()
+        .map(|f| StepBackend::step(&mut first, f).unwrap())
+        .collect();
+    let checkpoint = StepBackend::snapshot(&first);
+    drop(first);
+
+    let mut second = ScnnRunner::load(&runtime(), &artifacts_dir()).unwrap();
+    StepBackend::restore(&mut second, &checkpoint).unwrap();
+    windowed.extend(
+        frames[half..]
+            .iter()
+            .map(|f| StepBackend::step(&mut second, f).unwrap()),
+    );
+
+    for (i, (a, b)) in mono_out.iter().zip(&windowed).enumerate() {
+        assert_eq!(a.out_spikes, b.out_spikes, "step {i}: spikes");
+        assert_eq!(a.counts, b.counts, "step {i}: counts");
+    }
+    assert_eq!(mono_state, StepBackend::snapshot(&second), "final vmem");
 }
 
 #[test]

@@ -88,6 +88,7 @@ fn streamed_windows_match_monolithic_coordinator() {
     assert_eq!(s.prediction, mono.prediction, "prediction");
     assert_eq!(s.state, mono_state, "final vmem");
     assert_eq!(s.metrics.timesteps, mono.metrics.timesteps, "frames");
+    assert_eq!(s.metrics.in_events, mono.metrics.in_events, "input events");
     assert_eq!(s.metrics.sops, mono.metrics.sops, "SOPs");
     assert_eq!(s.metrics.cim, mono.metrics.cim, "CIM event ledger");
     // Float aggregates: same operations, per-window partial-sum grouping.

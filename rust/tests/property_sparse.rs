@@ -1,0 +1,212 @@
+//! Dense-vs-sparse bit-identity: the event-driven execution engine
+//! (`snn::events`) must reproduce the dense golden models *exactly* —
+//! spikes, membrane potentials, and predictions — across random conv/FC
+//! geometries, operand resolutions, thresholds, and spike activities.
+//!
+//! The thresholds are deliberately drawn small relative to the weight
+//! range so multi-fire residuals (`v ≥ 2θ` after a timestep) occur often:
+//! those are exactly the cases where a naive "fire-check only touched
+//! neurons" scheme diverges from the dense per-neuron scan, and where the
+//! sparse engine's refire set must step in. Activities sweep from fully
+//! silent frames (refire-only paths) to half-dense ones.
+
+use flexspim::runtime::{NativeScnn, StepBackend};
+use flexspim::snn::conv::ConvLifLayer;
+use flexspim::snn::events::{EventConvLayer, EventFcLayer, SpikeList};
+use flexspim::snn::lif::LifLayer;
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::util::proptest_lite::{check, prop_eq, Config};
+
+#[test]
+fn prop_event_conv_matches_dense_conv() {
+    check(
+        "event-conv-vs-dense",
+        &Config { cases: 60, ..Default::default() },
+        |c| {
+            let in_ch = c.rng.range_usize(1, 3);
+            let out_ch = c.rng.range_usize(1, 4);
+            let k = *c.rng.choose(&[1usize, 3]);
+            let stride = *c.rng.choose(&[1usize, 2]);
+            let pad = c.rng.range_usize(0, k / 2);
+            let h = c.rng.range_usize(k.max(3), 7);
+            let w_bits = c.rng.range_i64(2, 5) as u32;
+            let p_bits = c.rng.range_i64(6, 12) as u32;
+            let res = Resolution::new(w_bits, p_bits);
+            let spec = LayerSpec::conv("p", in_ch, out_ch, k, stride, pad, h, h, res);
+            let hi = flexspim::snn::quant::max_val(w_bits);
+            let lo = flexspim::snn::quant::min_val(w_bits);
+            let weights: Vec<i64> = (0..spec.num_weights())
+                .map(|_| c.rng.range_i64(lo, hi))
+                .collect();
+            // Small thresholds provoke multi-fire residuals.
+            let theta = c.rng.range_i64(1, 8);
+            let mut sparse = EventConvLayer::new(spec.clone(), weights.clone(), theta);
+            let mut dense = ConvLifLayer::new(spec, weights, theta);
+
+            let in_dim = in_ch * h * h;
+            for t in 0..6 {
+                // Sweep activity including fully-silent frames.
+                let activity = *c.rng.choose(&[0.0, 0.02, 0.1, 0.3, 0.5]);
+                let bits: Vec<bool> = (0..in_dim).map(|_| c.rng.chance(activity)).collect();
+                let a = sparse.step(&SpikeList::from_dense(&bits));
+                let b = dense.step(&bits);
+                prop_eq(a.to_dense(), b, &format!("t={t} spikes"))?;
+                prop_eq(
+                    sparse.vmem().to_vec(),
+                    dense.v.clone(),
+                    &format!("t={t} vmem"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_event_fc_matches_dense_lif() {
+    check(
+        "event-fc-vs-dense",
+        &Config { cases: 80, ..Default::default() },
+        |c| {
+            let in_dim = c.rng.range_usize(1, 24);
+            let out_dim = c.rng.range_usize(1, 8);
+            let w_bits = c.rng.range_i64(2, 5) as u32;
+            let p_bits = c.rng.range_i64(6, 12) as u32;
+            let res = Resolution::new(w_bits, p_bits);
+            let hi = flexspim::snn::quant::max_val(w_bits);
+            let lo = flexspim::snn::quant::min_val(w_bits);
+            let weights: Vec<Vec<i64>> = (0..out_dim)
+                .map(|_| (0..in_dim).map(|_| c.rng.range_i64(lo, hi)).collect())
+                .collect();
+            let theta = c.rng.range_i64(1, 8);
+            let mut sparse = EventFcLayer::new(weights.clone(), res, theta);
+            let mut dense = LifLayer::new(weights, res, theta);
+            for t in 0..6 {
+                let activity = *c.rng.choose(&[0.0, 0.05, 0.2, 0.5]);
+                let bits: Vec<bool> = (0..in_dim).map(|_| c.rng.chance(activity)).collect();
+                let a = sparse.step(&SpikeList::from_dense(&bits));
+                let b = dense.step(&bits);
+                prop_eq(a.to_dense(), b, &format!("t={t} spikes"))?;
+                prop_eq(
+                    sparse.vmem().to_vec(),
+                    dense.v.clone(),
+                    &format!("t={t} vmem"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Mid-window restore equivalence on the sparse engine: checkpoint at an
+/// index that is *not* a micro-window boundary (frame 3 of 8 under the
+/// serve tier's 4-frame windows), restore into a fresh backend, and
+/// finish. Restoring must rebuild the refire sets from the snapshot, so
+/// spikes, counts, and final vmem match the uninterrupted run exactly.
+#[test]
+fn prop_mid_window_restore_is_bit_identical() {
+    check(
+        "mid-window-restore",
+        &Config { cases: 10, ..Default::default() },
+        |c| {
+            let r = Resolution::new(4, 9);
+            let net = Network::new(
+                "restore",
+                vec![
+                    LayerSpec::conv("C1", 2, 4, 3, 2, 1, 12, 12, r),
+                    LayerSpec::fc("F1", 4 * 6 * 6, 10, r),
+                ],
+                8,
+            );
+            let seed = c.rng.next_u64();
+            let in_dim = 2 * 12 * 12;
+            let frames: Vec<SpikeList> = (0..8)
+                .map(|_| {
+                    let bits: Vec<bool> =
+                        (0..in_dim).map(|_| c.rng.chance(0.15)).collect();
+                    SpikeList::from_dense(&bits)
+                })
+                .collect();
+
+            let mut mono = NativeScnn::new(net.clone(), seed);
+            let mono_out: Vec<_> = frames
+                .iter()
+                .map(|f| mono.step(f).map_err(|e| e.to_string()))
+                .collect::<Result<_, _>>()?;
+
+            let cut = 3; // inside the first serve micro-window pair
+            let mut head = NativeScnn::new(net.clone(), seed);
+            let mut out: Vec<_> = frames[..cut]
+                .iter()
+                .map(|f| head.step(f).map_err(|e| e.to_string()))
+                .collect::<Result<_, _>>()?;
+            let checkpoint = head.snapshot();
+            drop(head);
+
+            let mut tail = NativeScnn::new(net, seed);
+            tail.restore(&checkpoint).map_err(|e| e.to_string())?;
+            for f in &frames[cut..] {
+                out.push(tail.step(f).map_err(|e| e.to_string())?);
+            }
+
+            for (i, (a, b)) in mono_out.iter().zip(&out).enumerate() {
+                prop_eq(a.out_spikes.clone(), b.out_spikes.clone(), &format!("step {i}"))?;
+                prop_eq(a.counts.clone(), b.counts.clone(), &format!("step {i} counts"))?;
+            }
+            prop_eq(mono.snapshot(), tail.snapshot(), "final vmem")
+        },
+    );
+}
+
+/// Random full networks through the backend interface: the sparse engine
+/// and the dense-reference oracle must agree on every step's spike list,
+/// per-layer counts, the final membrane snapshot, and the prediction.
+#[test]
+fn prop_sparse_backend_matches_dense_reference_network() {
+    check(
+        "sparse-net-vs-dense-net",
+        &Config { cases: 12, ..Default::default() },
+        |c| {
+            let in_side = c.rng.range_usize(6, 12);
+            let ch = c.rng.range_usize(2, 6);
+            let stride = *c.rng.choose(&[1usize, 2]);
+            let r1 = Resolution::new(c.rng.range_i64(3, 5) as u32, c.rng.range_i64(8, 11) as u32);
+            let r2 = Resolution::new(c.rng.range_i64(3, 6) as u32, c.rng.range_i64(8, 12) as u32);
+            let conv = LayerSpec::conv("C1", 2, ch, 3, stride, 1, in_side, in_side, r1);
+            let (oc, oh, ow) = conv.out_shape();
+            let net = Network::new(
+                "prop",
+                vec![
+                    conv.clone(),
+                    LayerSpec::fc("F1", oc * oh * ow, 12, r2),
+                    LayerSpec::fc("F2", 12, 10, r2),
+                ],
+                4,
+            );
+            let seed = c.rng.next_u64();
+            let mut sparse = NativeScnn::new(net.clone(), seed);
+            let mut dense = NativeScnn::new_dense_reference(net, seed);
+
+            let in_dim = 2 * in_side * in_side;
+            let mut rate_a = vec![0i64; 10];
+            let mut rate_b = vec![0i64; 10];
+            for t in 0..8 {
+                let activity = *c.rng.choose(&[0.0, 0.05, 0.25]);
+                let bits: Vec<bool> = (0..in_dim).map(|_| c.rng.chance(activity)).collect();
+                let frame = SpikeList::from_dense(&bits);
+                let a = sparse.step(&frame).map_err(|e| e.to_string())?;
+                let b = dense.step(&frame).map_err(|e| e.to_string())?;
+                prop_eq(a.out_spikes.clone(), b.out_spikes.clone(), &format!("t={t} out"))?;
+                prop_eq(a.counts, b.counts, &format!("t={t} counts"))?;
+                for &ci in a.out_spikes.active() {
+                    rate_a[ci as usize] += 1;
+                }
+                for &ci in b.out_spikes.active() {
+                    rate_b[ci as usize] += 1;
+                }
+            }
+            prop_eq(sparse.snapshot(), dense.snapshot(), "final vmem")?;
+            prop_eq(rate_a, rate_b, "rate-coded prediction logits")
+        },
+    );
+}
