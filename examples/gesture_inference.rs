@@ -2,9 +2,12 @@
 //!
 //! Events (synthetic DVS) → per-timestep spike frames → the AOT-compiled
 //! SCNN running under the PJRT runtime → predictions, with energy and
-//! latency from the calibrated models. Uses trained weights if
-//! `artifacts/weights_trained.bin` exists (run `examples/train_snn` or
-//! `flexspim train` first), otherwise the shipped random-init weights.
+//! latency from the calibrated models. Deployment goes through the
+//! unified spec: the builder selects the `pjrt` backend and the
+//! [`flexspim::deploy::Deployment`] materializes the coordinator (the
+//! runner itself prefers `artifacts/weights_trained.bin` when present —
+//! run `examples/train_snn` or `flexspim train` first, otherwise the
+//! shipped random-init weights give chance accuracy).
 //!
 //! ```sh
 //! make artifacts
@@ -12,10 +15,11 @@
 //! ```
 
 use anyhow::Result;
-use flexspim::coordinator::Coordinator;
 use flexspim::dataflow::Policy;
+use flexspim::deploy::DeploymentSpec;
 use flexspim::events::{GestureClass, GestureGenerator};
-use flexspim::runtime::{artifacts_dir, Runtime, ScnnRunner, WeightFile};
+use flexspim::runtime::artifacts_dir;
+use flexspim::snn::network::scnn_dvs_gesture;
 use flexspim::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -23,23 +27,24 @@ fn main() -> Result<()> {
     let samples: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2);
     let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(7);
 
-    let rt = Runtime::cpu()?;
     let dir = artifacts_dir();
-    println!("PJRT platform: {} | artifacts: {}", rt.platform(), dir.display());
-
-    // Prefer trained weights when available.
-    let trained = dir.join("weights_trained.bin");
-    let runner = if trained.exists() {
-        println!("using trained weights: {}", trained.display());
-        let exe = rt.load_hlo(&dir.join("scnn_step.hlo.txt"))?;
-        ScnnRunner::new(exe, WeightFile::load(&trained)?)?
+    if dir.join("weights_trained.bin").exists() {
+        println!("using trained weights: {}", dir.join("weights_trained.bin").display());
     } else {
         println!("using shipped (untrained) weights — accuracy will be chance;");
         println!("run `cargo run --release --example train_snn` first for a real model");
-        ScnnRunner::load(&rt, &dir)?
-    };
+    }
 
-    let mut coord = Coordinator::with_runner(runner, 16, Policy::HsOpt)?;
+    // One spec, PJRT backend; the same spec with `.native_backend(seed)`
+    // would run artifact-free.
+    let spec = DeploymentSpec::builder("gesture-inference")
+        .network(&scnn_dvs_gesture())
+        .macros(16)
+        .policy(Policy::HsOpt)
+        .pjrt_backend(Some(dir))
+        .build()?;
+    let deployment = spec.deploy()?;
+    let mut coord = deployment.coordinator()?;
 
     let gen = GestureGenerator::default_48();
     let mut rng = Rng::new(seed);

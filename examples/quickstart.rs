@@ -1,25 +1,66 @@
-//! Quickstart: the FlexSpIM public API in five minutes, no artifacts
+//! Quickstart: the FlexSpIM deployment API in five minutes, no artifacts
 //! needed.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! 1. Simulate the bit-accurate CIM macro at an arbitrary resolution and
-//!    operand shape (the paper's two circuit-level contributions).
-//! 2. Price the run with the silicon-calibrated energy model.
-//! 3. Map the reference SCNN onto two macros under every dataflow policy
-//!    and see the hybrid-stationarity gain (Fig. 4).
+//! 1. Describe a deployment as data: topology (with per-layer operand
+//!    resolution — the paper's headline flexibility), substrate, backend,
+//!    and serve settings, via the fluent builder.
+//! 2. Materialize tiers from the one spec and run an inference.
+//! 3. Round-trip the same spec through TOML — what `flexspim run
+//!    --config configs/*.toml` consumes.
+//! 4. Peek under the hood: the bit-accurate CIM macro and the
+//!    hybrid-stationary dataflow mapper the deployment drives.
 
 use flexspim::cim::{CimMacro, MacroConfig};
 use flexspim::dataflow::{Mapper, Policy};
+use flexspim::deploy::DeploymentSpec;
 use flexspim::energy::MacroEnergyModel;
+use flexspim::events::{GestureClass, GestureGenerator};
 use flexspim::snn::network::scnn_dvs_gesture;
 use flexspim::snn::quant::max_val;
+use flexspim::snn::Resolution;
+use flexspim::util::rng::Rng;
 
-fn main() {
-    // --- 1. A macro with 5-bit weights, 10-bit membrane potentials,
-    //        operands shaped over N_C = 3 columns (Fig. 3b's example).
+fn main() -> flexspim::Result<()> {
+    // --- 1. One typed spec describes the whole deployment. Resolutions
+    //        are bitwise-granular per layer (Fig. 6a).
+    let spec = DeploymentSpec::builder("quickstart")
+        .timesteps(8)
+        .conv("C1", 2, 8, 3, 4, 1, 48, 48, Resolution::new(4, 9))
+        .fc("F1", 8 * 12 * 12, 32, Resolution::new(4, 9))
+        .fc("F2", 32, 10, Resolution::new(5, 10))
+        .macros(4)
+        .policy(Policy::HsOpt)
+        .native_backend(42) // pure Rust, runs everywhere
+        .workers(2)
+        .build()?;
+
+    // --- 2. Every tier materializes from the same spec: .coordinator()
+    //        here; .engine() / .service() take the identical plan.
+    let deployment = spec.deploy()?;
+    let mut coord = deployment.coordinator()?;
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(7);
+    let sample = gen.sample(GestureClass::HandClap, &mut rng);
+    let result = coord.run_sample(&sample, Some(GestureClass::HandClap.label()))?;
+    println!(
+        "ran {} on {} macros: predicted class {} ({} SOPs, {:.1} nJ modeled)",
+        deployment.network().name,
+        deployment.spec().substrate.macros,
+        result.prediction,
+        result.metrics.sops,
+        result.metrics.energy.total_pj() / 1e3,
+    );
+
+    // --- 3. The same spec as TOML (configs/*.toml ship ready-made
+    //        presets; `flexspim serve --config <file>` needs no recompile).
+    println!("\nthis deployment as TOML:\n{}", deployment.spec().to_toml());
+
+    // --- 4a. Under the hood: the bit-accurate macro at an arbitrary
+    //         resolution and operand shape (Fig. 3b's example).
     let cfg = MacroConfig::flexspim(5, 10, 3, 8, 16); // 16 neurons × 8 synapses
     let mut mac = CimMacro::new(cfg).expect("fits in the 512x256 array");
     for neuron in 0..16 {
@@ -27,37 +68,19 @@ fn main() {
             mac.load_weight(neuron, syn, ((neuron * 7 + syn * 3) % 31) as i64 - 15);
         }
     }
-
-    // Event-driven: present input spikes, macro accumulates and fires.
     let theta = max_val(10) / 2;
     let spikes_in = [true, false, true, true, false, false, true, false];
     let spikes_out = mac.timestep(&spikes_in, theta);
-    println!("input spikes : {spikes_in:?}");
-    println!(
-        "output spikes: {:?} ({} fired)",
-        spikes_out,
-        spikes_out.iter().filter(|&&s| s).count()
-    );
-    println!(
-        "vmem[0..4]   : {:?}",
-        (0..4).map(|n| mac.peek_vmem(n)).collect::<Vec<_>>()
-    );
-
-    // --- 2. Energy: the simulator counted every precharge, adder toggle,
-    //        carry hop and standby cycle; the calibrated model prices them.
     let model = MacroEnergyModel::nominal();
     let c = mac.counters();
     println!(
-        "\nledger: {} cycles, {} adder ops, {} carry hops, {} EB reads",
-        c.cim_cycles, c.adder_ops, c.carry_hops, c.eb_reads
-    );
-    println!(
-        "energy: {:.2} pJ total -> {:.2} pJ/SOP at 1.1 V (paper: 5.7-7.2 pJ/SOP at 8b/16b)",
-        model.price_pj(c),
-        model.pj_per_sop(c)
+        "macro demo: {} of 16 neurons fired; {:.2} pJ/SOP at 1.1 V (paper: 5.7-7.2 at 8b/16b)",
+        spikes_out.iter().filter(|&&s| s).count(),
+        model.pj_per_sop(c),
     );
 
-    // --- 3. Dataflow: map the paper's SCNN onto two macros.
+    // --- 4b. The dataflow decision the substrate section controls: map
+    //         the paper's SCNN onto two macros under each policy.
     let net = scnn_dvs_gesture();
     let mapper = Mapper::flexspim(2);
     println!("\nSCNN on 2 macros — avoided operand traffic per timestep:");
@@ -73,5 +96,6 @@ fn main() {
             100.0 * m.utilization()
         );
     }
-    println!("\n(next: `make artifacts` then `cargo run --release --example gesture_inference`)");
+    println!("\n(next: `flexspim serve --config configs/serve_demo.toml`)");
+    Ok(())
 }

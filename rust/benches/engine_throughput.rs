@@ -18,6 +18,7 @@
 
 use flexspim::coordinator::Engine;
 use flexspim::dataflow::Policy;
+use flexspim::deploy::DeploymentSpec;
 use flexspim::events::{EventStream, GestureClass, GestureGenerator};
 use flexspim::snn::network::scnn_dvs_gesture;
 use flexspim::snn::{LayerSpec, Network, Resolution};
@@ -26,6 +27,24 @@ use flexspim::util::rng::Rng;
 
 const SEED: u64 = 42;
 const MACROS: usize = 16;
+
+/// Materialize the engine from a deployment spec — the same entry point
+/// `flexspim run --config` uses, so the bench measures the deployed
+/// configuration, not a bespoke wiring.
+fn engine_for(net: &Network, workers: usize) -> Engine {
+    DeploymentSpec::builder(&net.name)
+        .network(net)
+        .macros(MACROS)
+        .policy(Policy::HsOpt)
+        .native_backend(SEED)
+        .workers(workers)
+        .build()
+        .expect("bench spec is valid")
+        .deploy()
+        .expect("bench spec deploys")
+        .engine()
+        .expect("engine materializes")
+}
 
 fn gesture_batch(n: usize) -> Vec<(EventStream, usize)> {
     let gen = GestureGenerator::default_48();
@@ -56,7 +75,7 @@ fn bench_net() -> Network {
 }
 
 fn throughput(net: &Network, data: &[(EventStream, usize)], workers: usize, reps: usize) -> f64 {
-    let engine = Engine::native(net.clone(), SEED, MACROS, Policy::HsOpt, workers);
+    let engine = engine_for(net, workers);
     // Warm-up run (thread pool spin-up, allocator, branch predictors).
     let warm = engine.run_batch(data).expect("warm-up batch");
     let mut best = 0.0f64;
@@ -110,7 +129,7 @@ fn main() {
     let full = scnn_dvs_gesture();
     let small = gesture_batch(4);
     for &workers in &[1usize, 4] {
-        let engine = Engine::native(full.clone(), SEED, MACROS, Policy::HsOpt, workers);
+        let engine = engine_for(&full, workers);
         let r = engine.run_batch(&small).expect("full-net batch");
         println!(
             "{workers} worker(s): {:8.3} samples/s over {} samples ({} SOPs modeled)",

@@ -18,13 +18,36 @@
 //! cross-PR bench trajectory (`BENCH_*.json`).
 
 use flexspim::dataflow::Policy;
-use flexspim::serve::{gesture_traffic, ServiceConfig, StreamingService};
+use flexspim::deploy::DeploymentSpec;
+use flexspim::serve::{gesture_traffic, StreamingService};
 use flexspim::snn::{LayerSpec, Network, Resolution};
 use flexspim::util::bench::{emit_json, quick_mode, section};
 
 const SEED: u64 = 42;
 const MACROS: usize = 16;
 const JITTER_US: u64 = 8_000;
+
+/// Materialize the service from a deployment spec — the same entry point
+/// `flexspim serve --config` uses, so the bench measures the deployed
+/// configuration, not a bespoke wiring.
+fn service_for(workers: usize, early_exit: Option<f64>) -> StreamingService {
+    let mut builder = DeploymentSpec::builder("serve-bench")
+        .network(&bench_net())
+        .macros(MACROS)
+        .policy(Policy::HsOpt)
+        .native_backend(SEED)
+        .workers(workers);
+    if let Some(margin) = early_exit {
+        builder = builder.early_exit(margin, 1);
+    }
+    builder
+        .build()
+        .expect("bench spec is valid")
+        .deploy()
+        .expect("bench spec deploys")
+        .service()
+        .expect("service materializes")
+}
 
 /// Mid-size SCNN over the 48×48 substrate with 16 timesteps (4 windows of
 /// 4 frames per 100-ms session): heavy enough that window execution
@@ -51,13 +74,7 @@ fn main() {
 
     let mut reference_sops = 0u64;
     for &workers in &[1usize, 2, 4, 8] {
-        let svc = StreamingService::native(
-            bench_net(),
-            SEED,
-            MACROS,
-            Policy::HsOpt,
-            ServiceConfig::nominal(workers),
-        );
+        let svc = service_for(workers, None);
         let report = svc.serve(&traffic, 64).expect("serve run");
         assert_eq!(
             report.finished_sessions, sessions as u64,
@@ -98,22 +115,11 @@ fn main() {
     // Early-exit trade-off: frames saved vs rolling-accuracy delta against
     // the no-exit baseline, at increasing confidence bounds.
     section("early exit — frames saved vs rolling accuracy (4 workers)");
-    let baseline = StreamingService::native(
-        bench_net(),
-        SEED,
-        MACROS,
-        Policy::HsOpt,
-        ServiceConfig::nominal(4),
-    )
-    .serve(&traffic, 64)
-    .expect("baseline run");
+    let baseline = service_for(4, None).serve(&traffic, 64).expect("baseline run");
     let base_acc = baseline.rolling_correct as f64 / baseline.sessions.max(1) as f64;
     let base_frames = baseline.metrics.timesteps;
     for &margin in &[0.5f64, 1.0, 2.0] {
-        let mut cfg = ServiceConfig::nominal(4);
-        cfg.early_exit_margin = margin;
-        cfg.early_exit_min_windows = 1;
-        let svc = StreamingService::native(bench_net(), SEED, MACROS, Policy::HsOpt, cfg);
+        let svc = service_for(4, Some(margin));
         let report = svc.serve(&traffic, 64).expect("early-exit run");
         assert_eq!(report.finished_sessions, sessions as u64);
         let acc = report.rolling_correct as f64 / report.sessions.max(1) as f64;

@@ -1,13 +1,13 @@
-//! Configuration system.
+//! Configuration plumbing.
 //!
-//! Experiments are driven by small TOML files (see `configs/` at the repo
+//! Deployments are driven by small TOML files (see `configs/` at the repo
 //! root). serde is not vendored offline, so [`toml_lite`] implements the
 //! subset we need (tables, strings, ints, floats, bools, homogeneous
-//! arrays, comments) with typed accessors, and [`sim`] defines the typed
-//! simulation config assembled from a parsed document.
+//! arrays, comments) with typed accessors. The typed deployment
+//! configuration assembled from a parsed document lives in
+//! [`crate::deploy`] ([`crate::deploy::DeploymentSpec`] subsumed the old
+//! `SimConfig`).
 
-pub mod sim;
 pub mod toml_lite;
 
-pub use sim::SimConfig;
 pub use toml_lite::{Doc, Value};

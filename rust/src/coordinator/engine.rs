@@ -72,6 +72,7 @@ use crate::dataflow::{Mapper, Mapping, Operand, Policy, Shard};
 use crate::energy::SystemEnergyModel;
 use crate::events::{encode_frames, EventStream, SpikeFrame};
 use crate::runtime::{NativeScnn, ScnnRunner, StepBackend};
+use crate::snn::events::AdjacencyCache;
 use crate::snn::Network;
 use crate::Result;
 
@@ -253,11 +254,23 @@ pub struct SamplePlan {
 }
 
 impl SamplePlan {
-    /// Build the plan for `net` on `num_macros` macros under `policy`.
+    /// Build the plan for `net` on `num_macros` macros under `policy` at
+    /// the nominal energy operating point.
     pub fn new(net: Network, num_macros: usize, policy: Policy) -> SamplePlan {
+        let energy = SystemEnergyModel::flexspim(num_macros);
+        Self::with_energy(net, num_macros, policy, energy)
+    }
+
+    /// Build with an explicit energy model — the [`crate::deploy`] tier's
+    /// entry point for non-nominal substrate settings (vdd envelope).
+    pub fn with_energy(
+        net: Network,
+        num_macros: usize,
+        policy: Policy,
+        energy: SystemEnergyModel,
+    ) -> SamplePlan {
         let mapping = Mapper::flexspim(num_macros).map(&net, policy);
         let schedule = Scheduler::default().plan(&net, &mapping);
-        let energy = SystemEnergyModel::flexspim(num_macros);
         let shards = ShardLedger::calibrate(&net, &mapping, &schedule);
         let timesteps = net.timesteps;
         SamplePlan { net, mapping, schedule, energy, shards, timesteps }
@@ -552,7 +565,9 @@ impl Engine {
     }
 
     /// Convenience: an engine over the pure-Rust [`NativeScnn`] backend,
-    /// deterministic from `seed`.
+    /// deterministic from `seed`. Thin shim over the same wiring
+    /// [`crate::deploy::Deployment::engine`] performs; all workers share
+    /// one conv-adjacency cache.
     pub fn native(
         net: Network,
         seed: u64,
@@ -561,8 +576,10 @@ impl Engine {
         workers: usize,
     ) -> Engine {
         let plan = Arc::new(SamplePlan::new(net.clone(), num_macros, policy));
+        let adj = Arc::new(AdjacencyCache::new());
         let factory: Arc<BackendFactory> = Arc::new(move || {
-            Ok(Box::new(NativeScnn::new(net.clone(), seed)) as Box<dyn StepBackend>)
+            Ok(Box::new(NativeScnn::with_adjacency_cache(net.clone(), seed, adj.clone()))
+                as Box<dyn StepBackend>)
         });
         Engine::new(plan, factory, workers)
     }

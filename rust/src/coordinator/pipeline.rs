@@ -45,19 +45,23 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Build the full stack: PJRT runtime + artifacts + HS-opt mapping on
-    /// `num_macros` macros.
+    /// `num_macros` macros. Thin shim kept for artifact-gated tests; new
+    /// code should materialize a coordinator from a
+    /// [`crate::deploy::DeploymentSpec`].
     pub fn new(rt: &Runtime, artifacts: &Path, num_macros: usize) -> Result<Self> {
         let runner = ScnnRunner::load(rt, artifacts)?;
         Self::with_runner(runner, num_macros, Policy::HsOpt)
     }
 
-    /// Build with an explicit PJRT runner and policy (testing / ablations).
+    /// Build with an explicit PJRT runner and policy (thin shim over
+    /// [`Self::with_backend`] for artifact-gated tests / ablations).
     pub fn with_runner(runner: ScnnRunner, num_macros: usize, policy: Policy) -> Result<Self> {
         Self::with_backend(Box::new(runner), num_macros, policy)
     }
 
     /// Build over any execution backend (PJRT or the pure-Rust
-    /// [`crate::runtime::NativeScnn`]).
+    /// [`crate::runtime::NativeScnn`]), deriving the plan from the
+    /// backend's own network.
     pub fn with_backend(
         backend: Box<dyn StepBackend>,
         num_macros: usize,
@@ -65,7 +69,27 @@ impl Coordinator {
     ) -> Result<Self> {
         let net = backend.network().clone();
         let plan = SamplePlan::new(net, num_macros, policy);
-        Ok(Coordinator { backend, plan, bufs: SampleBuffers::default() })
+        Ok(Self::from_plan(backend, plan))
+    }
+
+    /// Build from a pre-built plan and a backend already matched to it —
+    /// the [`crate::deploy::Deployment`] entry point. The backend must
+    /// execute the same topology the plan was built for (asserted layer
+    /// by layer; a mismatch is a wiring bug, not a runtime condition).
+    pub fn from_plan(backend: Box<dyn StepBackend>, plan: SamplePlan) -> Coordinator {
+        {
+            let (b, p) = (backend.network(), &plan.net);
+            assert_eq!(
+                b.layers.len(),
+                p.layers.len(),
+                "backend/plan layer count mismatch"
+            );
+            for (lb, lp) in b.layers.iter().zip(&p.layers) {
+                assert_eq!(lb.in_shape(), lp.in_shape(), "layer {}: in-shape", lp.name);
+                assert_eq!(lb.out_shape(), lp.out_shape(), "layer {}: out-shape", lp.name);
+            }
+        }
+        Coordinator { backend, plan, bufs: SampleBuffers::default() }
     }
 
     /// Timesteps per inference (fixed by the workload's plan).

@@ -1,0 +1,336 @@
+//! Materializing runtime tiers from a validated [`DeploymentSpec`].
+//!
+//! [`Deployment`] owns everything every tier shares — the built
+//! [`Network`], the [`SamplePlan`] (mapping, schedule, calibrated energy
+//! and shard ledgers), and one [`AdjacencyCache`] — so
+//! [`Deployment::coordinator`], [`Deployment::engine`], and
+//! [`Deployment::service`] are cheap views over the same deployment
+//! rather than three independent constructions. All backends a deployment
+//! hands out (one per engine/serve worker, via [`Deployment::backend_factory`])
+//! share the conv-adjacency cache.
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure};
+
+use crate::coordinator::engine::{BackendFactory, Engine, SamplePlan};
+use crate::coordinator::Coordinator;
+use crate::energy::{SystemConfig, SystemEnergyModel};
+use crate::runtime::{artifacts_dir, NativeScnn, Runtime, ScnnRunner, StepBackend};
+use crate::serve::{ServiceConfig, StreamingService};
+use crate::snn::events::AdjacencyCache;
+use crate::snn::{LayerKind, Network};
+use crate::Result;
+
+use super::spec::{BackendSpec, DeploymentSpec};
+
+/// A materialized deployment: the shared plan plus factories for every
+/// tier. Obtained from [`DeploymentSpec::deploy`].
+pub struct Deployment {
+    spec: DeploymentSpec,
+    net: Network,
+    plan: Arc<SamplePlan>,
+    adjacency: Arc<AdjacencyCache>,
+}
+
+impl DeploymentSpec {
+    /// Validate the spec and build the shared deployment state (network,
+    /// mapping, schedule, energy model, shard calibration). Cheap tiers
+    /// ([`Deployment::coordinator`] / [`Deployment::engine`] /
+    /// [`Deployment::service`]) materialize from the result on demand.
+    pub fn deploy(self) -> Result<Deployment> {
+        self.validate()?;
+        let net = self.network.build()?;
+        let mut cfg = SystemConfig::flexspim(self.substrate.macros);
+        cfg.vdd = self.substrate.vdd;
+        let plan = Arc::new(SamplePlan::with_energy(
+            net.clone(),
+            self.substrate.macros,
+            self.substrate.policy,
+            SystemEnergyModel::new(cfg),
+        ));
+        Ok(Deployment {
+            spec: self,
+            net,
+            plan,
+            adjacency: Arc::new(AdjacencyCache::new()),
+        })
+    }
+}
+
+/// The PJRT artifacts implement one fixed topology; reject a spec whose
+/// network does not match it shape-for-shape.
+fn ensure_backend_matches(spec_net: &Network, have: &Network) -> Result<()> {
+    let matches = have.layers.len() == spec_net.layers.len()
+        && have.timesteps == spec_net.timesteps
+        && have
+            .layers
+            .iter()
+            .zip(&spec_net.layers)
+            .all(|(a, b)| a.in_shape() == b.in_shape() && a.out_shape() == b.out_shape());
+    ensure!(
+        matches,
+        "the PJRT artifacts implement '{}' ({} layers, {} timesteps) but the spec \
+         describes '{}' ({} layers, {} timesteps) — use the scnn-dvs-gesture preset \
+         with the pjrt backend, or a native backend for custom topologies",
+        have.name,
+        have.layers.len(),
+        have.timesteps,
+        spec_net.name,
+        spec_net.layers.len(),
+        spec_net.timesteps,
+    );
+    Ok(())
+}
+
+impl Deployment {
+    /// The spec this deployment was materialized from.
+    pub fn spec(&self) -> &DeploymentSpec {
+        &self.spec
+    }
+
+    /// The validated workload.
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// The shared per-sample plan (mapping, schedule, energy, shard
+    /// ledgers) every tier executes against.
+    pub fn plan(&self) -> &Arc<SamplePlan> {
+        &self.plan
+    }
+
+    /// The conv-adjacency cache shared by every backend this deployment
+    /// hands out.
+    pub fn adjacency_cache(&self) -> &Arc<AdjacencyCache> {
+        &self.adjacency
+    }
+
+    /// Construct one backend instance per the spec's backend section.
+    pub fn backend(&self) -> Result<Box<dyn StepBackend>> {
+        match &self.spec.backend {
+            BackendSpec::Native { seed } => Ok(Box::new(NativeScnn::with_adjacency_cache(
+                self.net.clone(),
+                *seed,
+                self.adjacency.clone(),
+            ))),
+            BackendSpec::NativeDense { seed } => {
+                Ok(Box::new(NativeScnn::new_dense_reference(self.net.clone(), *seed)))
+            }
+            BackendSpec::Pjrt { artifacts } => {
+                let dir = artifacts.clone().unwrap_or_else(artifacts_dir);
+                let rt = Runtime::cpu()?;
+                let runner = ScnnRunner::load(&rt, &dir)?;
+                ensure_backend_matches(&self.net, runner.network())?;
+                Ok(Box::new(runner))
+            }
+        }
+    }
+
+    /// A factory constructing one backend per worker thread (engine and
+    /// serve pools). Native backends share this deployment's adjacency
+    /// cache; the PJRT runner is `Rc`-based and not `Send`, so each worker
+    /// loads its own runner inside its thread.
+    pub fn backend_factory(&self) -> Arc<BackendFactory> {
+        match &self.spec.backend {
+            BackendSpec::Native { seed } => {
+                let net = self.net.clone();
+                let seed = *seed;
+                let adj = self.adjacency.clone();
+                Arc::new(move || {
+                    Ok(Box::new(NativeScnn::with_adjacency_cache(
+                        net.clone(),
+                        seed,
+                        adj.clone(),
+                    )) as Box<dyn StepBackend>)
+                })
+            }
+            BackendSpec::NativeDense { seed } => {
+                let net = self.net.clone();
+                let seed = *seed;
+                Arc::new(move || {
+                    Ok(Box::new(NativeScnn::new_dense_reference(net.clone(), seed))
+                        as Box<dyn StepBackend>)
+                })
+            }
+            BackendSpec::Pjrt { artifacts } => {
+                let dir = artifacts.clone().unwrap_or_else(artifacts_dir);
+                let net = self.net.clone();
+                Arc::new(move || {
+                    let rt = Runtime::cpu()?;
+                    let runner = ScnnRunner::load(&rt, &dir)?;
+                    ensure_backend_matches(&net, runner.network())?;
+                    Ok(Box::new(runner) as Box<dyn StepBackend>)
+                })
+            }
+        }
+    }
+
+    /// The sequential end-to-end coordinator over one backend instance.
+    pub fn coordinator(&self) -> Result<Coordinator> {
+        Ok(Coordinator::from_plan(self.backend()?, (*self.plan).clone()))
+    }
+
+    /// The batched parallel engine (`serve.workers` worker threads, each
+    /// with its own backend from [`Self::backend_factory`]).
+    pub fn engine(&self) -> Result<Engine> {
+        Ok(Engine::new(
+            self.plan.clone(),
+            self.backend_factory(),
+            self.spec.serve.workers,
+        ))
+    }
+
+    /// The serve-tier configuration derived from the spec: pool size,
+    /// queue bounds, residency budget, admission mode, early exit, with
+    /// the session sensor dimensions taken from the network's input layer
+    /// and the session clock from the network's timestep count.
+    pub fn service_config(&self) -> Result<ServiceConfig> {
+        let s = &self.spec.serve;
+        let mut cfg = ServiceConfig::nominal(s.workers);
+        cfg.queue_capacity = s.queue_capacity;
+        cfg.per_session_capacity = s.per_session_capacity;
+        cfg.resident_budget_bits = s.resident_budget_kb * 1024 * 8;
+        cfg.deterministic_admission = s.deterministic_admission;
+        cfg.early_exit_margin = s.early_exit_margin;
+        cfg.early_exit_min_windows = s.early_exit_min_windows;
+        // Session clock: the serve substrate streams 100-ms gesture
+        // sessions; spreading them over the spec's `timesteps` makes the
+        // streamed frame grid match the offline encoder's binning, so all
+        // three tiers of one deployment integrate the same frame count
+        // (timesteps = 16 reproduces the historical 6.25-ms default).
+        const GESTURE_SESSION_US: u64 = 100_000;
+        cfg.session.step_us = (GESTURE_SESSION_US / self.net.timesteps as u64).max(1);
+        cfg.session.frames_per_window = self.net.timesteps.min(4);
+        cfg.session.max_lateness_us = cfg.session.step_us * 2;
+        match self.net.layers[0].kind {
+            LayerKind::Conv { in_ch, in_h, in_w, .. } if in_ch == 2 => {
+                ensure!(
+                    in_h <= u16::MAX as usize && in_w <= u16::MAX as usize,
+                    "serve: sensor {in_w}x{in_h} exceeds the DVS address range"
+                );
+                cfg.session.width = in_w as u16;
+                cfg.session.height = in_h as u16;
+            }
+            _ => bail!(
+                "serve: the streaming tier ingests DVS events, so the network's first \
+                 layer must be a conv over 2 polarity channels (got {})",
+                self.net.layers[0].name
+            ),
+        }
+        Ok(cfg)
+    }
+
+    /// The streaming inference service over the spec's serve settings.
+    pub fn service(&self) -> Result<StreamingService> {
+        Ok(StreamingService::new(
+            self.plan.clone(),
+            self.backend_factory(),
+            self.service_config()?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Policy;
+    use crate::events::{GestureClass, GestureGenerator};
+    use crate::snn::Resolution;
+    use crate::util::rng::Rng;
+
+    fn small_spec() -> DeploymentSpec {
+        DeploymentSpec::builder("handle-test")
+            .timesteps(4)
+            .conv("C1", 2, 4, 3, 4, 1, 48, 48, Resolution::new(4, 9))
+            .fc("F1", 4 * 12 * 12, 10, Resolution::new(5, 10))
+            .macros(2)
+            .policy(Policy::HsOpt)
+            .native_backend(5)
+            .workers(2)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn one_spec_materializes_every_tier() {
+        let dep = small_spec().deploy().unwrap();
+        assert_eq!(dep.network().layers.len(), 2);
+        assert_eq!(dep.plan().mapping.assignments.len(), 2);
+
+        let mut coord = dep.coordinator().unwrap();
+        let engine = dep.engine().unwrap();
+        let svc = dep.service().unwrap();
+        assert_eq!(engine.workers(), 2);
+        assert_eq!(svc.config().workers, 2);
+        assert_eq!(svc.config().session.width, 48);
+        // 4 timesteps over a 100-ms session: 25-ms steps, one 4-frame
+        // window — the serve tier integrates the same frame count per
+        // session as the offline tiers do per sample.
+        assert_eq!(svc.config().session.step_us, 25_000);
+        assert_eq!(svc.config().session.frames_per_window, 4);
+
+        let gen = GestureGenerator::default_48();
+        let mut rng = Rng::new(3);
+        let s = gen.sample(GestureClass::ArmRoll, &mut rng);
+        let r = coord.run_sample(&s, Some(7)).unwrap();
+        assert!(r.prediction < 10);
+        assert!(r.metrics.sops > 0);
+    }
+
+    #[test]
+    fn coordinator_and_engine_agree_from_one_spec() {
+        let dep = small_spec().deploy().unwrap();
+        let gen = GestureGenerator::default_48();
+        let mut rng = Rng::new(11);
+        let data: Vec<_> = (0..3)
+            .map(|i| (gen.sample(GestureClass::ALL[i % 10], &mut rng), i % 10))
+            .collect();
+        let mut coord = dep.coordinator().unwrap();
+        let seq = coord.run_dataset(&data).unwrap();
+        let batch = dep.engine().unwrap().run_batch(&data).unwrap();
+        assert_eq!(seq.sops, batch.metrics.sops);
+        assert_eq!(seq.cim, batch.metrics.cim);
+        assert_eq!(seq.correct, batch.metrics.correct);
+    }
+
+    #[test]
+    fn factory_workers_share_the_adjacency_cache() {
+        let dep = small_spec().deploy().unwrap();
+        let factory = dep.backend_factory();
+        let make: &BackendFactory = factory.as_ref();
+        let _a = make().unwrap();
+        let _b = make().unwrap();
+        assert_eq!(dep.adjacency_cache().len(), 1, "one conv geometry");
+        assert!(
+            dep.adjacency_cache().hits() >= 1,
+            "the second worker must reuse the first worker's table"
+        );
+    }
+
+    #[test]
+    fn vdd_flows_into_the_energy_model() {
+        let mut spec = small_spec();
+        spec.substrate.vdd = 0.9;
+        let dep = spec.deploy().unwrap();
+        assert_eq!(dep.plan().energy.cfg.vdd, 0.9);
+        let nominal = small_spec().deploy().unwrap();
+        assert!(
+            dep.plan().energy.sop_pj(4, 9, None) < nominal.plan().energy.sop_pj(4, 9, None),
+            "low-voltage SOPs must price cheaper"
+        );
+    }
+
+    #[test]
+    fn fc_first_network_cannot_serve() {
+        let spec = DeploymentSpec::builder("fc-only")
+            .fc("F1", 32, 10, Resolution::new(4, 8))
+            .build()
+            .unwrap();
+        let dep = spec.deploy().unwrap();
+        let err = dep.service_config().unwrap_err();
+        assert!(format!("{err}").contains("polarity"), "got: {err}");
+        // The offline tiers still work.
+        assert!(dep.coordinator().is_ok());
+    }
+}

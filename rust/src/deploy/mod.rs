@@ -1,0 +1,41 @@
+//! The unified deployment API.
+//!
+//! One typed [`DeploymentSpec`] — network topology, substrate, backend,
+//! and serve settings — drives every runtime tier. The spec is
+//! constructible three equivalent ways:
+//!
+//! * **Builder** — [`DeploymentSpec::builder`], a fluent Rust API;
+//! * **TOML** — [`DeploymentSpec::from_toml_str`] / [`DeploymentSpec::load`]
+//!   (strict parsing: unknown keys are errors) with
+//!   [`DeploymentSpec::to_toml`] as the inverse; the shipped presets live
+//!   under `configs/` at the repo root;
+//! * **Presets** — [`presets::spec`] for the known-good topologies
+//!   (`scnn-dvs-gesture`, `serve-demo`).
+//!
+//! [`DeploymentSpec::deploy`] validates the spec (shape-chained topology,
+//! substrate envelope, serve bounds — all with rich errors) and builds the
+//! shared state once; the resulting [`Deployment`] then materializes any
+//! tier from the same plan:
+//!
+//! ```text
+//!   DeploymentSpec ──deploy()──► Deployment
+//!     builder │ TOML │ preset        ├─ .coordinator()  sequential tier
+//!                                    ├─ .engine()       batched parallel tier
+//!                                    └─ .service()      streaming serve tier
+//! ```
+//!
+//! New networks, resolutions, and serving setups are therefore *data* (a
+//! config file or a builder chain), not code changes — the `flexspim`
+//! CLI's `run`/`serve`/`map`/`sweep` subcommands all parse their flags
+//! into a spec overlay on top of an optional `--config file.toml`.
+
+pub mod handle;
+pub mod presets;
+pub mod spec;
+pub mod toml;
+
+pub use handle::Deployment;
+pub use spec::{
+    parse_policy, policy_key, BackendSpec, DeploymentBuilder, DeploymentSpec, LayerDef,
+    NetworkSpec, ServeSpec, SubstrateSpec,
+};

@@ -1,0 +1,89 @@
+//! Shipped deployment presets.
+//!
+//! A preset names a known-good network topology (and, via
+//! [`spec`], a full default deployment around it). Presets are referenced
+//! from TOML (`network.preset = "..."`) and from the CLI defaults; the
+//! matching config files under `configs/` at the repo root are generated
+//! from these and pinned equal by `rust/tests/integration_deploy.rs`.
+
+use crate::snn::network::scnn_dvs_gesture;
+use crate::snn::{LayerSpec, Network, Resolution};
+
+use super::spec::DeploymentSpec;
+
+/// Preset key of the paper's six-conv + three-FC SCNN (Fig. 4a).
+pub const SCNN_DVS_GESTURE: &str = "scnn-dvs-gesture";
+
+/// Preset key of the compact streaming demo network.
+pub const SERVE_DEMO: &str = "serve-demo";
+
+/// All preset keys, for error messages and sweep drivers.
+pub fn names() -> Vec<&'static str> {
+    vec![SCNN_DVS_GESTURE, SERVE_DEMO]
+}
+
+/// Compact serve demo net: 16 timesteps over the 48×48 substrate, so each
+/// 100-ms session streams as 4 micro-windows of 4 frames. Defined once
+/// here (it used to live in `main.rs`) and reachable from benches, tests,
+/// and the TOML preset alike.
+pub fn serve_demo_net() -> Network {
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "serve-demo",
+        vec![
+            LayerSpec::conv("C1", 2, 8, 3, 4, 1, 48, 48, r),
+            LayerSpec::fc("F1", 8 * 12 * 12, 64, r),
+            LayerSpec::fc("F2", 64, 10, Resolution::new(5, 10)),
+        ],
+        16,
+    )
+}
+
+/// The network behind a preset key, if known.
+pub fn network(name: &str) -> Option<Network> {
+    match name {
+        SCNN_DVS_GESTURE => Some(scnn_dvs_gesture()),
+        SERVE_DEMO => Some(serve_demo_net()),
+        _ => None,
+    }
+}
+
+/// A full default deployment spec around a preset network (nominal
+/// substrate, native backend seeded at 42, nominal serve settings), if
+/// the key is known.
+pub fn spec(name: &str) -> Option<DeploymentSpec> {
+    let net = network(name)?;
+    Some(
+        DeploymentSpec::builder(&net.name)
+            .network(&net)
+            .build()
+            .expect("preset networks are valid"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for name in names() {
+            let net = network(name).expect("known preset");
+            assert!(!net.layers.is_empty());
+            let spec = spec(name).expect("known preset");
+            spec.validate().expect("preset specs are valid");
+            assert_eq!(spec.network.name, net.name);
+            assert_eq!(spec.network.layers.len(), net.layers.len());
+        }
+        assert!(network("nope").is_none());
+        assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn serve_demo_shape_chains() {
+        let net = serve_demo_net();
+        assert_eq!(net.layers[0].out_shape(), (8, 12, 12));
+        assert_eq!(net.layers[2].out_shape(), (10, 1, 1));
+        assert_eq!(net.timesteps, 16);
+    }
+}

@@ -1,0 +1,752 @@
+//! The typed deployment specification and its fluent builder.
+//!
+//! A [`DeploymentSpec`] is the single declarative description of a
+//! FlexSpIM deployment: network topology (arbitrary conv/FC stacks with
+//! per-layer operand [`Resolution`]), substrate (macro budget, mapping
+//! policy, vdd envelope), execution backend, and serve-tier settings.
+//! Every section validates with rich errors — a bad spec never panics,
+//! it explains itself. Specs come from the [`DeploymentBuilder`], from
+//! TOML (see [`super::toml`]), or from the shipped [`super::presets`],
+//! and all three produce *identical* values (pinned by
+//! `rust/tests/integration_deploy.rs`).
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, ensure};
+
+use crate::dataflow::Policy;
+use crate::snn::{LayerKind, LayerSpec, Network, Resolution};
+use crate::Result;
+
+// -------------------------------------------------------------- utilities
+
+/// Parse a policy from its CLI/TOML key (`ws-only`, `os-only`, `hs-min`,
+/// `hs-max`, `hs-opt`).
+pub fn parse_policy(s: &str) -> Result<Policy> {
+    Ok(match s {
+        "ws-only" => Policy::WsOnly,
+        "os-only" => Policy::OsOnly,
+        "hs-min" => Policy::HsMin,
+        "hs-max" => Policy::HsMax,
+        "hs-opt" => Policy::HsOpt,
+        other => bail!("unknown policy '{other}' (ws-only|os-only|hs-min|hs-max|hs-opt)"),
+    })
+}
+
+/// The CLI/TOML key of a policy (inverse of [`parse_policy`]).
+pub fn policy_key(policy: Policy) -> &'static str {
+    match policy {
+        Policy::WsOnly => "ws-only",
+        Policy::OsOnly => "os-only",
+        Policy::HsMin => "hs-min",
+        Policy::HsMax => "hs-max",
+        Policy::HsOpt => "hs-opt",
+    }
+}
+
+fn check_bits(layer: &str, what: &str, bits: u32) -> Result<()> {
+    ensure!(
+        (1..=64).contains(&bits),
+        "layer {layer}: {what} width {bits} outside the supported 1..=64 bits"
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------- layer defs
+
+/// One layer of a [`NetworkSpec`] in raw, unvalidated form.
+///
+/// Unlike [`LayerSpec`] (whose constructors assert), a `LayerDef` can hold
+/// any values and is checked by [`NetworkSpec::validate`] with rich
+/// errors. Thresholds follow the resolution-derived default
+/// ([`crate::snn::layer::default_threshold`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerDef {
+    /// 2-D convolution over a `in_ch × in_h × in_w` spike tensor.
+    Conv {
+        /// Layer name for reports.
+        name: String,
+        /// Input channels.
+        in_ch: usize,
+        /// Output channels.
+        out_ch: usize,
+        /// Square kernel size.
+        k: usize,
+        /// Stride (same both dims).
+        stride: usize,
+        /// Symmetric zero padding.
+        pad: usize,
+        /// Input height.
+        in_h: usize,
+        /// Input width.
+        in_w: usize,
+        /// Weight bit-width.
+        w_bits: u32,
+        /// Membrane-potential bit-width.
+        p_bits: u32,
+    },
+    /// Fully-connected layer.
+    Fc {
+        /// Layer name for reports.
+        name: String,
+        /// Input neurons.
+        in_dim: usize,
+        /// Output neurons.
+        out_dim: usize,
+        /// Weight bit-width.
+        w_bits: u32,
+        /// Membrane-potential bit-width.
+        p_bits: u32,
+    },
+}
+
+impl LayerDef {
+    /// The layer's name.
+    pub fn name(&self) -> &str {
+        match self {
+            LayerDef::Conv { name, .. } | LayerDef::Fc { name, .. } => name,
+        }
+    }
+
+    /// Capture an already-validated [`LayerSpec`] (presets, `--full`).
+    pub fn from_spec(spec: &LayerSpec) -> LayerDef {
+        match spec.kind {
+            LayerKind::Conv { in_ch, out_ch, k, stride, pad, in_h, in_w } => LayerDef::Conv {
+                name: spec.name.clone(),
+                in_ch,
+                out_ch,
+                k,
+                stride,
+                pad,
+                in_h,
+                in_w,
+                w_bits: spec.res.w_bits,
+                p_bits: spec.res.p_bits,
+            },
+            LayerKind::Fc { in_dim, out_dim } => LayerDef::Fc {
+                name: spec.name.clone(),
+                in_dim,
+                out_dim,
+                w_bits: spec.res.w_bits,
+                p_bits: spec.res.p_bits,
+            },
+        }
+    }
+
+    /// Validate this definition and lower it to a [`LayerSpec`].
+    pub fn build(&self) -> Result<LayerSpec> {
+        match self {
+            LayerDef::Conv {
+                name,
+                in_ch,
+                out_ch,
+                k,
+                stride,
+                pad,
+                in_h,
+                in_w,
+                w_bits,
+                p_bits,
+            } => {
+                ensure!(!name.is_empty(), "conv layer with an empty name");
+                check_bits(name, "weight", *w_bits)?;
+                check_bits(name, "membrane", *p_bits)?;
+                ensure!(*in_ch > 0 && *out_ch > 0, "layer {name}: channel counts must be > 0");
+                ensure!(*k > 0, "layer {name}: kernel size must be > 0");
+                ensure!(*stride > 0, "layer {name}: stride must be > 0");
+                ensure!(
+                    *in_h >= *k && *in_w >= *k,
+                    "layer {name}: input {in_h}x{in_w} smaller than the {k}x{k} kernel"
+                );
+                Ok(LayerSpec::conv(
+                    name,
+                    *in_ch,
+                    *out_ch,
+                    *k,
+                    *stride,
+                    *pad,
+                    *in_h,
+                    *in_w,
+                    Resolution::new(*w_bits, *p_bits),
+                ))
+            }
+            LayerDef::Fc { name, in_dim, out_dim, w_bits, p_bits } => {
+                ensure!(!name.is_empty(), "fc layer with an empty name");
+                check_bits(name, "weight", *w_bits)?;
+                check_bits(name, "membrane", *p_bits)?;
+                ensure!(
+                    *in_dim > 0 && *out_dim > 0,
+                    "layer {name}: fc dimensions must be > 0"
+                );
+                Ok(LayerSpec::fc(name, *in_dim, *out_dim, Resolution::new(*w_bits, *p_bits)))
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- network spec
+
+/// Network topology section of a [`DeploymentSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkSpec {
+    /// Model name for reports.
+    pub name: String,
+    /// Timesteps per inference.
+    pub timesteps: usize,
+    /// Layers, input to output.
+    pub layers: Vec<LayerDef>,
+}
+
+impl NetworkSpec {
+    /// An empty topology (layers added by the builder / TOML loader).
+    pub fn new(name: &str, timesteps: usize) -> NetworkSpec {
+        NetworkSpec { name: name.to_string(), timesteps, layers: Vec::new() }
+    }
+
+    /// Capture an already-validated [`Network`].
+    pub fn from_network(net: &Network) -> NetworkSpec {
+        NetworkSpec {
+            name: net.name.clone(),
+            timesteps: net.timesteps,
+            layers: net.layers.iter().map(LayerDef::from_spec).collect(),
+        }
+    }
+
+    /// Validate the topology: per-layer geometry/resolution plus the
+    /// inter-layer shape chain, with errors that name the offending
+    /// layers and sizes.
+    pub fn validate(&self) -> Result<()> {
+        self.build_layers().map(|_| ())
+    }
+
+    fn build_layers(&self) -> Result<Vec<LayerSpec>> {
+        ensure!(!self.layers.is_empty(), "network '{}' has no layers", self.name);
+        ensure!(
+            (1..=1024).contains(&self.timesteps),
+            "network '{}': timesteps {} outside 1..=1024",
+            self.name,
+            self.timesteps
+        );
+        let specs: Vec<LayerSpec> =
+            self.layers.iter().map(LayerDef::build).collect::<Result<_>>()?;
+        for w in specs.windows(2) {
+            let (c, h, wd) = w[0].out_shape();
+            let expect = c * h * wd;
+            let (ic, ih, iw) = w[1].in_shape();
+            let got = ic * ih * iw;
+            ensure!(
+                expect == got,
+                "shape chain broken between {} and {}: {} emits {}x{}x{} = {} neurons \
+                 but {} expects {}x{}x{} = {}",
+                w[0].name,
+                w[1].name,
+                w[0].name,
+                c,
+                h,
+                wd,
+                expect,
+                w[1].name,
+                ic,
+                ih,
+                iw,
+                got
+            );
+        }
+        // The runtime's rate-coded head (engine, serve sessions, traffic
+        // labels) is 10-class DVS gesture throughout; a wider classifier
+        // would index past the rate vector at runtime, so reject it here.
+        let last = specs.last().expect("checked non-empty");
+        let (c, h, wd) = last.out_shape();
+        ensure!(
+            c * h * wd == 10,
+            "network '{}': classifier layer {} emits {} outputs, but the rate-coded \
+             head is 10-class (DVS gesture) — end the stack in 10 outputs",
+            self.name,
+            last.name,
+            c * h * wd
+        );
+        Ok(specs)
+    }
+
+    /// Lower to a validated [`Network`].
+    pub fn build(&self) -> Result<Network> {
+        let layers = self.build_layers()?;
+        Ok(Network::new(&self.name, layers, self.timesteps))
+    }
+
+    /// Input shape `(channels, height, width)` of the first layer.
+    pub fn input_shape(&self) -> Result<(usize, usize, usize)> {
+        let first = self
+            .layers
+            .first()
+            .ok_or_else(|| anyhow!("network '{}' has no layers", self.name))?;
+        Ok(match *first {
+            LayerDef::Conv { in_ch, in_h, in_w, .. } => (in_ch, in_h, in_w),
+            LayerDef::Fc { in_dim, .. } => (in_dim, 1, 1),
+        })
+    }
+}
+
+// --------------------------------------------------------- substrate spec
+
+/// Substrate section: the modeled hardware budget and operating point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubstrateSpec {
+    /// Number of CIM macros.
+    pub macros: usize,
+    /// Dataflow mapping policy.
+    pub policy: Policy,
+    /// Supply voltage (the silicon envelope is 0.9–1.1 V).
+    pub vdd: f64,
+}
+
+impl Default for SubstrateSpec {
+    fn default() -> Self {
+        SubstrateSpec { macros: 16, policy: Policy::HsOpt, vdd: 1.1 }
+    }
+}
+
+impl SubstrateSpec {
+    /// Sanity limits (same envelope the energy model enforces).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            (1..=4096).contains(&self.macros),
+            "substrate: {} macros outside 1..=4096",
+            self.macros
+        );
+        ensure!(
+            (0.9..=1.1).contains(&self.vdd),
+            "substrate: vdd {} V outside the 0.9-1.1 V silicon envelope",
+            self.vdd
+        );
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------- backend spec
+
+/// Execution backend selection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BackendSpec {
+    /// Pure-Rust event-driven sparse backend, deterministic from `seed`;
+    /// runs everywhere, no artifacts.
+    Native {
+        /// Weight-stream seed.
+        seed: u64,
+    },
+    /// Dense golden-reference backend over the same weight streams (the
+    /// oracle path — slow, for validation runs only).
+    NativeDense {
+        /// Weight-stream seed.
+        seed: u64,
+    },
+    /// PJRT runtime executing the AOT HLO artifacts (`make artifacts`).
+    Pjrt {
+        /// Artifacts directory; `None` resolves via
+        /// [`crate::runtime::artifacts_dir`].
+        artifacts: Option<PathBuf>,
+    },
+}
+
+impl Default for BackendSpec {
+    fn default() -> Self {
+        BackendSpec::Native { seed: 42 }
+    }
+}
+
+impl BackendSpec {
+    /// The TOML/CLI key of this backend kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BackendSpec::Native { .. } => "native",
+            BackendSpec::NativeDense { .. } => "native-dense",
+            BackendSpec::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// The weight-stream seed, for the seeded (native) backends.
+    pub fn seed(&self) -> Option<u64> {
+        match self {
+            BackendSpec::Native { seed } | BackendSpec::NativeDense { seed } => Some(*seed),
+            BackendSpec::Pjrt { .. } => None,
+        }
+    }
+}
+
+// -------------------------------------------------------------- serve spec
+
+/// Serve-tier section: worker pool, queues, residency, admission mode,
+/// and early exit (see [`crate::serve::ServiceConfig`] for semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    /// Worker threads (each constructs its own backend).
+    pub workers: usize,
+    /// Global bound on admitted-but-unexecuted windows.
+    pub queue_capacity: usize,
+    /// Per-session bound on queued windows.
+    pub per_session_capacity: usize,
+    /// Vmem residency budget in kB; `0` derives it from the modeled chip
+    /// capacity (CIM array + global buffer).
+    pub resident_budget_kb: u64,
+    /// Dispatch windows in global admission order (bit-reproducible
+    /// residency/energy reports at any worker count). The guarantee is
+    /// scoped to shed-free runs: shedding decisions depend on worker
+    /// drain timing, so an overloaded queue reintroduces pool-size
+    /// dependence.
+    pub deterministic_admission: bool,
+    /// Early-exit confidence margin (`0` disables).
+    pub early_exit_margin: f64,
+    /// Executed windows required before early exit may trigger.
+    pub early_exit_min_windows: u64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            workers: 4,
+            queue_capacity: 4096,
+            per_session_capacity: 256,
+            resident_budget_kb: 0,
+            deterministic_admission: false,
+            early_exit_margin: 0.0,
+            early_exit_min_windows: 2,
+        }
+    }
+}
+
+impl ServeSpec {
+    /// Sanity limits.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            (1..=256).contains(&self.workers),
+            "serve: {} workers outside 1..=256",
+            self.workers
+        );
+        ensure!(
+            self.early_exit_margin >= 0.0,
+            "serve: early-exit margin {} must be >= 0",
+            self.early_exit_margin
+        );
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------- deployment spec
+
+/// The one typed description of a FlexSpIM deployment: topology,
+/// substrate, backend, and serve settings. Construct with
+/// [`DeploymentSpec::builder`], load from TOML with
+/// [`DeploymentSpec::from_toml_str`] / [`DeploymentSpec::load`], then
+/// materialize any tier via [`DeploymentSpec::deploy`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentSpec {
+    /// Network topology.
+    pub network: NetworkSpec,
+    /// Hardware budget and operating point.
+    pub substrate: SubstrateSpec,
+    /// Execution backend.
+    pub backend: BackendSpec,
+    /// Serve-tier settings.
+    pub serve: ServeSpec,
+}
+
+impl DeploymentSpec {
+    /// Start a fluent builder for a network named `name`.
+    pub fn builder(name: &str) -> DeploymentBuilder {
+        DeploymentBuilder {
+            network: NetworkSpec::new(name, 16),
+            substrate: SubstrateSpec::default(),
+            backend: BackendSpec::default(),
+            serve: ServeSpec::default(),
+        }
+    }
+
+    /// Validate every section.
+    pub fn validate(&self) -> Result<()> {
+        self.network.validate()?;
+        self.substrate.validate()?;
+        self.serve.validate()?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- builder
+
+/// Fluent builder for a [`DeploymentSpec`].
+///
+/// ```no_run
+/// use flexspim::dataflow::Policy;
+/// use flexspim::deploy::DeploymentSpec;
+/// use flexspim::snn::Resolution;
+///
+/// let spec = DeploymentSpec::builder("demo")
+///     .timesteps(16)
+///     .conv("C1", 2, 8, 3, 4, 1, 48, 48, Resolution::new(4, 9))
+///     .fc("F1", 8 * 12 * 12, 10, Resolution::new(5, 10))
+///     .macros(4)
+///     .policy(Policy::HsOpt)
+///     .native_backend(42)
+///     .workers(2)
+///     .build()
+///     .unwrap();
+/// let service = spec.deploy().unwrap().service().unwrap();
+/// ```
+#[derive(Debug, Clone)]
+pub struct DeploymentBuilder {
+    network: NetworkSpec,
+    substrate: SubstrateSpec,
+    backend: BackendSpec,
+    serve: ServeSpec,
+}
+
+impl DeploymentBuilder {
+    /// Timesteps per inference.
+    pub fn timesteps(mut self, timesteps: usize) -> Self {
+        self.network.timesteps = timesteps;
+        self
+    }
+
+    /// Append a conv layer (same argument order as
+    /// [`LayerSpec::conv`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        mut self,
+        name: &str,
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        in_h: usize,
+        in_w: usize,
+        res: Resolution,
+    ) -> Self {
+        self.network.layers.push(LayerDef::Conv {
+            name: name.to_string(),
+            in_ch,
+            out_ch,
+            k,
+            stride,
+            pad,
+            in_h,
+            in_w,
+            w_bits: res.w_bits,
+            p_bits: res.p_bits,
+        });
+        self
+    }
+
+    /// Append a fully-connected layer.
+    pub fn fc(mut self, name: &str, in_dim: usize, out_dim: usize, res: Resolution) -> Self {
+        self.network.layers.push(LayerDef::Fc {
+            name: name.to_string(),
+            in_dim,
+            out_dim,
+            w_bits: res.w_bits,
+            p_bits: res.p_bits,
+        });
+        self
+    }
+
+    /// Append a raw layer definition.
+    pub fn layer(mut self, layer: LayerDef) -> Self {
+        self.network.layers.push(layer);
+        self
+    }
+
+    /// Replace the whole topology (name, layers, timesteps) with an
+    /// existing [`Network`].
+    pub fn network(mut self, net: &Network) -> Self {
+        self.network = NetworkSpec::from_network(net);
+        self
+    }
+
+    /// Number of CIM macros.
+    pub fn macros(mut self, macros: usize) -> Self {
+        self.substrate.macros = macros;
+        self
+    }
+
+    /// Dataflow mapping policy.
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.substrate.policy = policy;
+        self
+    }
+
+    /// Supply voltage (0.9–1.1 V envelope).
+    pub fn vdd(mut self, vdd: f64) -> Self {
+        self.substrate.vdd = vdd;
+        self
+    }
+
+    /// Explicit backend selection.
+    pub fn backend(mut self, backend: BackendSpec) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Shortcut: the pure-Rust sparse backend with this seed.
+    pub fn native_backend(self, seed: u64) -> Self {
+        self.backend(BackendSpec::Native { seed })
+    }
+
+    /// Shortcut: the PJRT backend (artifacts auto-located when `None`).
+    pub fn pjrt_backend(self, artifacts: Option<PathBuf>) -> Self {
+        self.backend(BackendSpec::Pjrt { artifacts })
+    }
+
+    /// Serve-tier worker threads.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.serve.workers = workers;
+        self
+    }
+
+    /// Global admitted-window queue bound.
+    pub fn queue_capacity(mut self, cap: usize) -> Self {
+        self.serve.queue_capacity = cap;
+        self
+    }
+
+    /// Per-session queued-window bound.
+    pub fn per_session_capacity(mut self, cap: usize) -> Self {
+        self.serve.per_session_capacity = cap;
+        self
+    }
+
+    /// Vmem residency budget in kB (`0` = modeled chip capacity).
+    pub fn resident_budget_kb(mut self, kb: u64) -> Self {
+        self.serve.resident_budget_kb = kb;
+        self
+    }
+
+    /// Dispatch windows in global admission order.
+    pub fn deterministic_admission(mut self, on: bool) -> Self {
+        self.serve.deterministic_admission = on;
+        self
+    }
+
+    /// Early-exit confidence margin (`0` disables) and the minimum
+    /// executed windows before it may trigger.
+    pub fn early_exit(mut self, margin: f64, min_windows: u64) -> Self {
+        self.serve.early_exit_margin = margin;
+        self.serve.early_exit_min_windows = min_windows;
+        self
+    }
+
+    /// Validate and produce the spec.
+    pub fn build(self) -> Result<DeploymentSpec> {
+        let spec = DeploymentSpec {
+            network: self.network,
+            substrate: self.substrate,
+            backend: self.backend,
+            serve: self.serve,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::network::scnn_dvs_gesture;
+
+    #[test]
+    fn builder_produces_a_valid_spec() {
+        let spec = DeploymentSpec::builder("t")
+            .timesteps(8)
+            .conv("C1", 2, 4, 3, 4, 1, 48, 48, Resolution::new(4, 9))
+            .fc("F1", 4 * 12 * 12, 10, Resolution::new(5, 10))
+            .macros(2)
+            .native_backend(7)
+            .workers(2)
+            .build()
+            .unwrap();
+        assert_eq!(spec.network.layers.len(), 2);
+        assert_eq!(spec.backend.seed(), Some(7));
+        let net = spec.network.build().unwrap();
+        assert_eq!(net.timesteps, 8);
+        assert_eq!(net.layers[1].out_shape(), (10, 1, 1));
+    }
+
+    #[test]
+    fn network_spec_round_trips_the_reference_scnn() {
+        let net = scnn_dvs_gesture();
+        let spec = NetworkSpec::from_network(&net);
+        let rebuilt = spec.build().unwrap();
+        assert_eq!(rebuilt.layers.len(), net.layers.len());
+        assert_eq!(rebuilt.timesteps, net.timesteps);
+        assert_eq!(rebuilt.total_weight_bits(), net.total_weight_bits());
+        assert_eq!(rebuilt.total_vmem_bits(), net.total_vmem_bits());
+        for (a, b) in rebuilt.layers.iter().zip(&net.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.res, b.res);
+            assert_eq!(a.threshold, b.threshold);
+        }
+    }
+
+    #[test]
+    fn shape_chain_mismatch_is_a_rich_error() {
+        let err = DeploymentSpec::builder("bad")
+            .fc("a", 10, 20, Resolution::new(4, 8))
+            .fc("b", 21, 5, Resolution::new(4, 8))
+            .build()
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("shape chain"), "got: {msg}");
+        assert!(msg.contains('a') && msg.contains('b'));
+        assert!(msg.contains("20") && msg.contains("21"));
+    }
+
+    #[test]
+    fn invalid_sections_rejected() {
+        let base = || {
+            DeploymentSpec::builder("t").fc("f", 4, 10, Resolution::new(4, 8))
+        };
+        assert!(base().build().is_ok());
+        assert!(base().workers(0).build().is_err(), "zero workers");
+        assert!(base().macros(0).build().is_err(), "zero macros");
+        assert!(base().vdd(1.5).build().is_err(), "vdd envelope");
+        assert!(base().timesteps(0).build().is_err(), "zero timesteps");
+        assert!(base().early_exit(-0.5, 1).build().is_err(), "negative margin");
+        let mut bad_bits = base().build().unwrap();
+        bad_bits.network.layers[0] = LayerDef::Fc {
+            name: "f".into(),
+            in_dim: 4,
+            out_dim: 10,
+            w_bits: 0,
+            p_bits: 8,
+        };
+        assert!(bad_bits.validate().is_err(), "zero-width weights");
+    }
+
+    #[test]
+    fn non_ten_class_head_rejected() {
+        let err = DeploymentSpec::builder("wide")
+            .fc("f", 4, 16, Resolution::new(4, 8))
+            .build()
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("10-class"), "got: {msg}");
+        assert!(msg.contains("16"), "got: {msg}");
+    }
+
+    #[test]
+    fn policy_keys_round_trip() {
+        for p in Policy::ALL {
+            assert_eq!(parse_policy(policy_key(p)).unwrap(), p);
+        }
+        assert!(parse_policy("nope").is_err());
+    }
+
+    #[test]
+    fn input_shape_reported() {
+        let spec = DeploymentSpec::builder("t")
+            .conv("C1", 2, 4, 3, 4, 1, 48, 48, Resolution::new(4, 9))
+            .fc("F1", 4 * 12 * 12, 10, Resolution::new(5, 10))
+            .build()
+            .unwrap();
+        assert_eq!(spec.network.input_shape().unwrap(), (2, 48, 48));
+    }
+}

@@ -1,0 +1,594 @@
+//! TOML (de)serialization of [`DeploymentSpec`].
+//!
+//! Built on [`crate::config::toml_lite`] (serde is not vendored offline).
+//! Parsing is *strict*: unknown keys and wrongly-typed values are errors,
+//! not silently ignored — a typo in a config file fails fast with the
+//! offending key named. Serialization ([`DeploymentSpec::to_toml`]) emits
+//! explicit `[layer.N]` tables (presets are resolved at load time), so
+//! `parse(to_toml(spec)) == spec` for every valid spec.
+//!
+//! ## Format
+//!
+//! ```toml
+//! [network]
+//! name = "serve-demo"        # optional
+//! timesteps = 16             # optional (default 16 / preset's value)
+//! # EITHER a preset:
+//! # preset = "serve-demo"    #   (serve-demo | scnn-dvs-gesture | ...)
+//! # OR explicit layer tables:
+//!
+//! [layer.1]
+//! type = "conv"              # conv | fc
+//! name = "C1"                # optional (default "L<n>")
+//! in_ch = 2
+//! out_ch = 8
+//! kernel = 3
+//! stride = 4                 # optional (default 1)
+//! pad = 1                    # optional (default 0)
+//! in_h = 48
+//! in_w = 48
+//! w_bits = 4
+//! p_bits = 9
+//!
+//! [layer.2]
+//! type = "fc"
+//! in_dim = 1152
+//! out_dim = 10
+//! w_bits = 5
+//! p_bits = 10
+//!
+//! [substrate]
+//! macros = 16                # optional (default 16)
+//! policy = "hs-opt"          # optional (default hs-opt)
+//! vdd = 1.1                  # optional (default 1.1)
+//!
+//! [backend]
+//! kind = "native"            # native | native-dense | pjrt (default native)
+//! seed = 42                  # native backends only (default 42)
+//! # artifacts = "artifacts"  # pjrt only
+//!
+//! [serve]
+//! workers = 4                # all optional; see ServeSpec for defaults
+//! queue_capacity = 4096
+//! per_session_capacity = 256
+//! budget_kb = 0
+//! deterministic = false
+//! exit_margin = 0.0
+//! exit_min_windows = 2
+//! ```
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure};
+
+use crate::config::toml_lite::{Doc, Value};
+use crate::Result;
+
+use super::presets;
+use super::spec::{
+    parse_policy, policy_key, BackendSpec, DeploymentSpec, LayerDef, NetworkSpec, ServeSpec,
+    SubstrateSpec,
+};
+
+// ------------------------------------------------------------ strict doc
+
+/// A [`Doc`] wrapper that records every key it is asked for, so leftover
+/// (unknown) keys can be rejected after parsing, and that turns
+/// wrongly-typed values into errors instead of silent defaults.
+struct StrictDoc<'a> {
+    doc: &'a Doc,
+    used: BTreeSet<String>,
+}
+
+impl<'a> StrictDoc<'a> {
+    fn new(doc: &'a Doc) -> StrictDoc<'a> {
+        StrictDoc { doc, used: BTreeSet::new() }
+    }
+
+    fn raw(&mut self, key: &str) -> Option<&'a Value> {
+        self.used.insert(key.to_string());
+        self.doc.get(key)
+    }
+
+    fn take_str(&mut self, key: &str) -> Result<Option<String>> {
+        match self.raw(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_str()
+                .map(|s| Some(s.to_string()))
+                .ok_or_else(|| anyhow!("config key '{key}': expected a string")),
+        }
+    }
+
+    fn take_int(&mut self, key: &str) -> Result<Option<i64>> {
+        match self.raw(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_int()
+                .map(Some)
+                .ok_or_else(|| anyhow!("config key '{key}': expected an integer")),
+        }
+    }
+
+    fn take_float(&mut self, key: &str) -> Result<Option<f64>> {
+        match self.raw(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_float()
+                .map(Some)
+                .ok_or_else(|| anyhow!("config key '{key}': expected a number")),
+        }
+    }
+
+    fn take_bool(&mut self, key: &str) -> Result<Option<bool>> {
+        match self.raw(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_bool()
+                .map(Some)
+                .ok_or_else(|| anyhow!("config key '{key}': expected a boolean")),
+        }
+    }
+
+    fn take_usize(&mut self, key: &str) -> Result<Option<usize>> {
+        match self.take_int(key)? {
+            None => Ok(None),
+            Some(i) => usize::try_from(i)
+                .map(Some)
+                .map_err(|_| anyhow!("config key '{key}': {i} is not a valid non-negative size")),
+        }
+    }
+
+    fn take_u64(&mut self, key: &str) -> Result<Option<u64>> {
+        match self.take_int(key)? {
+            None => Ok(None),
+            Some(i) => u64::try_from(i)
+                .map(Some)
+                .map_err(|_| anyhow!("config key '{key}': {i} must be non-negative")),
+        }
+    }
+
+    fn take_u32(&mut self, key: &str) -> Result<Option<u32>> {
+        match self.take_int(key)? {
+            None => Ok(None),
+            Some(i) => u32::try_from(i)
+                .map(Some)
+                .map_err(|_| anyhow!("config key '{key}': {i} out of range")),
+        }
+    }
+
+    fn require_usize(&mut self, key: &str) -> Result<usize> {
+        self.take_usize(key)?
+            .ok_or_else(|| anyhow!("missing config key '{key}'"))
+    }
+
+    fn require_u32(&mut self, key: &str) -> Result<u32> {
+        self.take_u32(key)?
+            .ok_or_else(|| anyhow!("missing config key '{key}'"))
+    }
+
+    /// Reject any key the parser never consumed.
+    fn finish(self) -> Result<()> {
+        let unknown: Vec<&str> = self
+            .doc
+            .keys_under("")
+            .into_iter()
+            .filter(|k| !self.used.contains(*k))
+            .collect();
+        ensure!(
+            unknown.is_empty(),
+            "unknown config key(s): {} (strict parsing — check for typos)",
+            unknown.join(", ")
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- parsing
+
+/// The `[layer.N]` indices present in the document, validated to be the
+/// contiguous run `1..=n`.
+fn layer_indices(doc: &Doc) -> Result<Vec<usize>> {
+    let mut seen = BTreeSet::new();
+    for key in doc.keys_under("layer.") {
+        let rest = &key["layer.".len()..];
+        let idx_str = rest
+            .split('.')
+            .next()
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| anyhow!("malformed layer key '{key}'"))?;
+        let idx: usize = idx_str
+            .parse()
+            .map_err(|_| anyhow!("malformed layer table '[layer.{idx_str}]': not a number"))?;
+        ensure!(idx >= 1, "layer tables are numbered from 1, found [layer.{idx}]");
+        seen.insert(idx);
+    }
+    let idxs: Vec<usize> = seen.into_iter().collect();
+    for (pos, &idx) in idxs.iter().enumerate() {
+        ensure!(
+            idx == pos + 1,
+            "layer tables must be contiguous from [layer.1]: missing [layer.{}]",
+            pos + 1
+        );
+    }
+    Ok(idxs)
+}
+
+fn parse_layer(t: &mut StrictDoc<'_>, idx: usize) -> Result<LayerDef> {
+    let p = format!("layer.{idx}");
+    let ty = t
+        .take_str(&format!("{p}.type"))?
+        .ok_or_else(|| anyhow!("[{p}]: missing 'type' (conv|fc)"))?;
+    let name = t
+        .take_str(&format!("{p}.name"))?
+        .unwrap_or_else(|| format!("L{idx}"));
+    let w_bits = t.require_u32(&format!("{p}.w_bits"))?;
+    let p_bits = t.require_u32(&format!("{p}.p_bits"))?;
+    match ty.as_str() {
+        "conv" => Ok(LayerDef::Conv {
+            name,
+            in_ch: t.require_usize(&format!("{p}.in_ch"))?,
+            out_ch: t.require_usize(&format!("{p}.out_ch"))?,
+            k: t.require_usize(&format!("{p}.kernel"))?,
+            stride: t.take_usize(&format!("{p}.stride"))?.unwrap_or(1),
+            pad: t.take_usize(&format!("{p}.pad"))?.unwrap_or(0),
+            in_h: t.require_usize(&format!("{p}.in_h"))?,
+            in_w: t.require_usize(&format!("{p}.in_w"))?,
+            w_bits,
+            p_bits,
+        }),
+        "fc" => Ok(LayerDef::Fc {
+            name,
+            in_dim: t.require_usize(&format!("{p}.in_dim"))?,
+            out_dim: t.require_usize(&format!("{p}.out_dim"))?,
+            w_bits,
+            p_bits,
+        }),
+        other => bail!("[{p}]: unknown layer type '{other}' (conv|fc)"),
+    }
+}
+
+fn parse_network(t: &mut StrictDoc<'_>, layer_idxs: &[usize]) -> Result<NetworkSpec> {
+    let preset = t.take_str("network.preset")?;
+    let name = t.take_str("network.name")?;
+    let timesteps = t.take_usize("network.timesteps")?;
+    match (preset, layer_idxs.is_empty()) {
+        (Some(p), true) => {
+            let net = presets::network(&p).ok_or_else(|| {
+                anyhow!(
+                    "unknown network preset '{p}' (known: {})",
+                    presets::names().join(", ")
+                )
+            })?;
+            let mut spec = NetworkSpec::from_network(&net);
+            if let Some(n) = name {
+                spec.name = n;
+            }
+            if let Some(ts) = timesteps {
+                spec.timesteps = ts;
+            }
+            Ok(spec)
+        }
+        (None, false) => {
+            let mut spec = NetworkSpec::new(
+                name.as_deref().unwrap_or("custom"),
+                timesteps.unwrap_or(16),
+            );
+            for &idx in layer_idxs {
+                spec.layers.push(parse_layer(t, idx)?);
+            }
+            Ok(spec)
+        }
+        (Some(_), false) => {
+            bail!("config sets both network.preset and [layer.N] tables — pick one")
+        }
+        (None, true) => {
+            bail!("config needs a topology: either network.preset or [layer.N] tables")
+        }
+    }
+}
+
+fn parse_backend(t: &mut StrictDoc<'_>) -> Result<BackendSpec> {
+    let kind = t.take_str("backend.kind")?.unwrap_or_else(|| "native".into());
+    let seed = t.take_u64("backend.seed")?;
+    let artifacts = t.take_str("backend.artifacts")?;
+    match kind.as_str() {
+        "native" | "native-dense" => {
+            ensure!(
+                artifacts.is_none(),
+                "backend.artifacts only applies to the pjrt backend"
+            );
+            let seed = seed.unwrap_or(42);
+            Ok(if kind == "native" {
+                BackendSpec::Native { seed }
+            } else {
+                BackendSpec::NativeDense { seed }
+            })
+        }
+        "pjrt" => {
+            ensure!(
+                seed.is_none(),
+                "backend.seed only applies to the native backends (pjrt weights \
+                 come from the artifacts)"
+            );
+            Ok(BackendSpec::Pjrt { artifacts: artifacts.map(PathBuf::from) })
+        }
+        other => bail!("unknown backend kind '{other}' (native|native-dense|pjrt)"),
+    }
+}
+
+/// Assemble a validated spec from a parsed document (strict: unknown keys
+/// are errors).
+pub fn spec_from_doc(doc: &Doc) -> Result<DeploymentSpec> {
+    let mut t = StrictDoc::new(doc);
+    let layer_idxs = layer_indices(doc)?;
+    let network = parse_network(&mut t, &layer_idxs)?;
+
+    let mut substrate = SubstrateSpec::default();
+    if let Some(m) = t.take_usize("substrate.macros")? {
+        substrate.macros = m;
+    }
+    if let Some(p) = t.take_str("substrate.policy")? {
+        substrate.policy = parse_policy(&p)?;
+    }
+    if let Some(v) = t.take_float("substrate.vdd")? {
+        substrate.vdd = v;
+    }
+
+    let backend = parse_backend(&mut t)?;
+
+    let mut serve = ServeSpec::default();
+    if let Some(w) = t.take_usize("serve.workers")? {
+        serve.workers = w;
+    }
+    if let Some(q) = t.take_usize("serve.queue_capacity")? {
+        serve.queue_capacity = q;
+    }
+    if let Some(q) = t.take_usize("serve.per_session_capacity")? {
+        serve.per_session_capacity = q;
+    }
+    if let Some(b) = t.take_u64("serve.budget_kb")? {
+        serve.resident_budget_kb = b;
+    }
+    if let Some(d) = t.take_bool("serve.deterministic")? {
+        serve.deterministic_admission = d;
+    }
+    if let Some(m) = t.take_float("serve.exit_margin")? {
+        serve.early_exit_margin = m;
+    }
+    if let Some(m) = t.take_u64("serve.exit_min_windows")? {
+        serve.early_exit_min_windows = m;
+    }
+
+    t.finish()?;
+    let spec = DeploymentSpec { network, substrate, backend, serve };
+    spec.validate()?;
+    Ok(spec)
+}
+
+// ---------------------------------------------------------- serialization
+
+fn emit_layer(out: &mut String, idx: usize, layer: &LayerDef) {
+    let _ = writeln!(out, "[layer.{idx}]");
+    match layer {
+        LayerDef::Conv {
+            name,
+            in_ch,
+            out_ch,
+            k,
+            stride,
+            pad,
+            in_h,
+            in_w,
+            w_bits,
+            p_bits,
+        } => {
+            let _ = writeln!(out, "type = \"conv\"");
+            let _ = writeln!(out, "name = \"{name}\"");
+            let _ = writeln!(out, "in_ch = {in_ch}");
+            let _ = writeln!(out, "out_ch = {out_ch}");
+            let _ = writeln!(out, "kernel = {k}");
+            let _ = writeln!(out, "stride = {stride}");
+            let _ = writeln!(out, "pad = {pad}");
+            let _ = writeln!(out, "in_h = {in_h}");
+            let _ = writeln!(out, "in_w = {in_w}");
+            let _ = writeln!(out, "w_bits = {w_bits}");
+            let _ = writeln!(out, "p_bits = {p_bits}");
+        }
+        LayerDef::Fc { name, in_dim, out_dim, w_bits, p_bits } => {
+            let _ = writeln!(out, "type = \"fc\"");
+            let _ = writeln!(out, "name = \"{name}\"");
+            let _ = writeln!(out, "in_dim = {in_dim}");
+            let _ = writeln!(out, "out_dim = {out_dim}");
+            let _ = writeln!(out, "w_bits = {w_bits}");
+            let _ = writeln!(out, "p_bits = {p_bits}");
+        }
+    }
+    out.push('\n');
+}
+
+impl DeploymentSpec {
+    /// Parse a spec from TOML text (strict: unknown keys are errors).
+    pub fn from_toml_str(text: &str) -> Result<DeploymentSpec> {
+        let doc = Doc::parse(text).map_err(|e| anyhow!("TOML parse error: {e}"))?;
+        spec_from_doc(&doc)
+    }
+
+    /// Load a spec from a TOML file.
+    pub fn load(path: &Path) -> Result<DeploymentSpec> {
+        let doc = Doc::load(path).map_err(|e| anyhow!("config {e}"))?;
+        spec_from_doc(&doc)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Serialize to TOML. Layers are always explicit `[layer.N]` tables
+    /// (presets resolve at load time), so the output parses back to a
+    /// spec equal to `self`.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# FlexSpIM deployment: {}", self.network.name);
+        let _ = writeln!(out, "[network]");
+        let _ = writeln!(out, "name = \"{}\"", self.network.name);
+        let _ = writeln!(out, "timesteps = {}", self.network.timesteps);
+        out.push('\n');
+        for (i, layer) in self.network.layers.iter().enumerate() {
+            emit_layer(&mut out, i + 1, layer);
+        }
+        let _ = writeln!(out, "[substrate]");
+        let _ = writeln!(out, "macros = {}", self.substrate.macros);
+        let _ = writeln!(out, "policy = \"{}\"", policy_key(self.substrate.policy));
+        let _ = writeln!(out, "vdd = {}", self.substrate.vdd);
+        out.push('\n');
+        let _ = writeln!(out, "[backend]");
+        let _ = writeln!(out, "kind = \"{}\"", self.backend.kind());
+        match &self.backend {
+            BackendSpec::Native { seed } | BackendSpec::NativeDense { seed } => {
+                let _ = writeln!(out, "seed = {seed}");
+            }
+            BackendSpec::Pjrt { artifacts } => {
+                if let Some(dir) = artifacts {
+                    let _ = writeln!(out, "artifacts = \"{}\"", dir.display());
+                }
+            }
+        }
+        out.push('\n');
+        let _ = writeln!(out, "[serve]");
+        let _ = writeln!(out, "workers = {}", self.serve.workers);
+        let _ = writeln!(out, "queue_capacity = {}", self.serve.queue_capacity);
+        let _ = writeln!(
+            out,
+            "per_session_capacity = {}",
+            self.serve.per_session_capacity
+        );
+        let _ = writeln!(out, "budget_kb = {}", self.serve.resident_budget_kb);
+        let _ = writeln!(out, "deterministic = {}", self.serve.deterministic_admission);
+        let _ = writeln!(out, "exit_margin = {}", self.serve.early_exit_margin);
+        let _ = writeln!(
+            out,
+            "exit_min_windows = {}",
+            self.serve.early_exit_min_windows
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Policy;
+    use crate::snn::Resolution;
+
+    fn demo_spec() -> DeploymentSpec {
+        DeploymentSpec::builder("toml-demo")
+            .timesteps(8)
+            .conv("C1", 2, 4, 3, 4, 1, 48, 48, Resolution::new(4, 9))
+            .fc("F1", 4 * 12 * 12, 10, Resolution::new(5, 10))
+            .macros(4)
+            .policy(Policy::HsMin)
+            .vdd(0.95)
+            .native_backend(7)
+            .workers(2)
+            .resident_budget_kb(64)
+            .deterministic_admission(true)
+            .early_exit(0.25, 3)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn serialize_parse_round_trip() {
+        let spec = demo_spec();
+        let text = spec.to_toml();
+        let parsed = DeploymentSpec::from_toml_str(&text).unwrap();
+        assert_eq!(parsed, spec);
+        // And the serialization itself is a fixed point.
+        assert_eq!(parsed.to_toml(), text);
+    }
+
+    #[test]
+    fn preset_reference_loads() {
+        let spec = DeploymentSpec::from_toml_str(
+            "[network]\npreset = \"serve-demo\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.network.name, "serve-demo");
+        assert!(!spec.network.layers.is_empty());
+        // A preset-loaded spec still round-trips through explicit layers.
+        let again = DeploymentSpec::from_toml_str(&spec.to_toml()).unwrap();
+        assert_eq!(again, spec);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let err = DeploymentSpec::from_toml_str(
+            "[network]\npreset = \"serve-demo\"\n[serve]\nworkerz = 4\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("serve.workerz"), "got: {err}");
+    }
+
+    #[test]
+    fn wrong_types_rejected() {
+        let err = DeploymentSpec::from_toml_str(
+            "[network]\npreset = \"serve-demo\"\n[serve]\nworkers = \"four\"\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("expected an integer"), "got: {err}");
+    }
+
+    #[test]
+    fn preset_and_layers_conflict() {
+        let err = DeploymentSpec::from_toml_str(
+            "[network]\npreset = \"serve-demo\"\n[layer.1]\ntype = \"fc\"\n\
+             in_dim = 4\nout_dim = 2\nw_bits = 4\np_bits = 8\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("pick one"), "got: {err}");
+    }
+
+    #[test]
+    fn missing_topology_rejected() {
+        let err = DeploymentSpec::from_toml_str("[substrate]\nmacros = 4\n").unwrap_err();
+        assert!(format!("{err}").contains("topology"), "got: {err}");
+    }
+
+    #[test]
+    fn non_contiguous_layers_rejected() {
+        let err = DeploymentSpec::from_toml_str(
+            "[layer.2]\ntype = \"fc\"\nin_dim = 4\nout_dim = 2\nw_bits = 4\np_bits = 8\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("missing [layer.1]"), "got: {err}");
+    }
+
+    #[test]
+    fn bad_policy_and_backend_rejected() {
+        let base = "[network]\npreset = \"serve-demo\"\n";
+        let err = DeploymentSpec::from_toml_str(
+            &format!("{base}[substrate]\npolicy = \"magic\"\n"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("unknown policy"), "got: {err}");
+        let err = DeploymentSpec::from_toml_str(
+            &format!("{base}[backend]\nkind = \"gpu\"\n"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("unknown backend"), "got: {err}");
+        let err = DeploymentSpec::from_toml_str(
+            &format!("{base}[backend]\nkind = \"pjrt\"\nseed = 3\n"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("backend.seed"), "got: {err}");
+    }
+
+    #[test]
+    fn zero_workers_rejected_via_toml() {
+        let err = DeploymentSpec::from_toml_str(
+            "[network]\npreset = \"serve-demo\"\n[serve]\nworkers = 0\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("workers"), "got: {err}");
+    }
+}

@@ -50,10 +50,18 @@ pub fn footprint_reduction() -> f64 {
     1.0 - flex.model_bits as f64 / fixed.model_bits as f64
 }
 
-/// Fig. 6(b) sweep configurations: uniform down-scaling of the reference
-/// resolutions (bitwise granularity — only FlexSpIM can run all of them).
+/// Fig. 6(b) sweep configurations for the reference SCNN (shorthand for
+/// [`scaling_configs_for`] over [`scnn_dvs_gesture`]).
 pub fn scaling_configs() -> Vec<(String, Vec<(u32, u32)>)> {
-    let base: Vec<(u32, u32)> = scnn_dvs_gesture()
+    scaling_configs_for(&scnn_dvs_gesture())
+}
+
+/// Sweep configurations for an arbitrary workload: uniform down-scaling
+/// of its per-layer resolutions (bitwise granularity — only FlexSpIM can
+/// run all of them). Lets `flexspim sweep --config` sweep any
+/// TOML-defined topology, not just the paper SCNN.
+pub fn scaling_configs_for(net: &crate::snn::Network) -> Vec<(String, Vec<(u32, u32)>)> {
+    let base: Vec<(u32, u32)> = net
         .layers
         .iter()
         .map(|l| (l.res.w_bits, l.res.p_bits))
@@ -84,7 +92,7 @@ pub fn accuracy_sweep(
     for (label, res) in configs {
         coord.set_resolutions(res);
         let metrics = coord.run_dataset(data)?;
-        let net = scnn_dvs_gesture().with_resolutions(
+        let net = coord.network().with_resolutions(
             &res.iter()
                 .map(|&(w, p)| crate::snn::Resolution::new(w, p))
                 .collect::<Vec<_>>(),

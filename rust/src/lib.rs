@@ -17,8 +17,11 @@
 //!   executes the AOT artifacts on the request path (Python never runs at
 //!   inference time).
 //!
-//! Entry points: [`coordinator::Coordinator`] for end-to-end runs,
-//! [`serve::StreamingService`] for sessionized streaming inference,
+//! Entry point: [`deploy::DeploymentSpec`] — one typed spec (built
+//! fluently or loaded from TOML) that materializes every tier via
+//! [`deploy::Deployment`]: the sequential [`coordinator::Coordinator`],
+//! the batched parallel [`coordinator::Engine`], and the streaming
+//! [`serve::StreamingService`]. Lower-level pieces remain public:
 //! [`cim::CimMacro`] for the macro simulator, [`dataflow::Mapper`] for the
 //! HS mapping search, and [`figures`] for the paper-figure drivers.
 
@@ -26,6 +29,7 @@ pub mod cim;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;
+pub mod deploy;
 pub mod energy;
 pub mod events;
 pub mod figures;

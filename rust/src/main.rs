@@ -2,24 +2,30 @@
 //!
 //! ```text
 //! flexspim reproduce <fig4|fig6|fig7a|fig7cd|table1|all>
-//! flexspim run       [--samples N] [--macros M] [--policy P] [--seed S]
-//! flexspim serve     [--sessions N] [--workers W] [--jitter-us J]
+//! flexspim run       [--config F] [--samples N] [--macros M] [--policy P]
+//!                    [--seed S] [--backend B] [--vdd V] [--full]
+//! flexspim serve     [--config F] [--sessions N] [--workers W] [--jitter-us J]
 //!                    [--budget-kb B] [--macros M] [--policy P] [--seed S] [--full]
 //!                    [--deterministic] [--exit-margin X]
 //! flexspim train     [--steps N] [--lr X] [--seed S] [--out PATH]
-//! flexspim map       [--macros M]
+//! flexspim map       [--config F] [--macros M]
 //! flexspim simulate  [--wbits W] [--pbits P] [--nc C] [--neurons N] [--fanin F]
-//! flexspim sweep     [--samples N] [--seed S]      # Fig. 6(b) accuracy
+//! flexspim sweep     [--config F] [--samples N] [--seed S] [--macros M]
 //! ```
 //!
-//! `run`, `train`, and `sweep` need the AOT artifacts (`make artifacts`);
-//! `serve` drives the streaming tier on the pure-Rust backend and runs
-//! everywhere.
+//! `run`, `serve`, `map`, and `sweep` all build one
+//! [`flexspim::deploy::DeploymentSpec`]: start from `--config file.toml`
+//! (or the subcommand's default preset), overlay the CLI flags, then
+//! materialize the tier they need. Defaults use the pure-Rust native
+//! backend and run everywhere; `--backend pjrt` (or a config's
+//! `backend.kind = "pjrt"`) needs the AOT artifacts (`make artifacts`),
+//! as does `train`.
 
-use anyhow::{bail, Result};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
 use flexspim::cim::{CimMacro, MacroConfig};
-use flexspim::coordinator::Coordinator;
-use flexspim::dataflow::{Mapper, Policy};
+use flexspim::deploy::{parse_policy, presets, BackendSpec, DeploymentSpec};
 use flexspim::energy::MacroEnergyModel;
 use flexspim::events::GestureGenerator;
 use flexspim::figures::{fig4, fig6, fig7, table1};
@@ -30,10 +36,17 @@ use flexspim::util::rng::Rng;
 
 fn specs() -> Vec<Spec> {
     vec![
+        Spec { name: "config", takes_value: true, help: "TOML deployment spec (configs/*.toml)" },
         Spec { name: "samples", takes_value: true, help: "samples per class (default 2)" },
-        Spec { name: "macros", takes_value: true, help: "number of CIM macros (default 16)" },
+        Spec { name: "macros", takes_value: true, help: "number of CIM macros" },
         Spec { name: "policy", takes_value: true, help: "ws-only|os-only|hs-min|hs-max|hs-opt" },
-        Spec { name: "seed", takes_value: true, help: "rng seed (default 42)" },
+        Spec { name: "seed", takes_value: true, help: "rng / weight-stream seed (default 42)" },
+        Spec {
+            name: "backend",
+            takes_value: true,
+            help: "native|native-dense|pjrt (overrides the spec)",
+        },
+        Spec { name: "vdd", takes_value: true, help: "supply voltage, 0.9-1.1 V" },
         Spec { name: "steps", takes_value: true, help: "training steps (default 100)" },
         Spec { name: "lr", takes_value: true, help: "learning rate (default 0.05)" },
         Spec { name: "out", takes_value: true, help: "output path for trained weights" },
@@ -43,7 +56,7 @@ fn specs() -> Vec<Spec> {
         Spec { name: "neurons", takes_value: true, help: "parallel neurons (simulate)" },
         Spec { name: "fanin", takes_value: true, help: "synapses per neuron (simulate)" },
         Spec { name: "sessions", takes_value: true, help: "streaming sessions (serve, default 16)" },
-        Spec { name: "workers", takes_value: true, help: "serve worker threads (default 4)" },
+        Spec { name: "workers", takes_value: true, help: "serve/engine worker threads" },
         Spec { name: "jitter-us", takes_value: true, help: "arrival jitter in us (serve)" },
         Spec { name: "budget-kb", takes_value: true, help: "vmem budget kB (serve, 0 = chip)" },
         Spec {
@@ -56,21 +69,68 @@ fn specs() -> Vec<Spec> {
             takes_value: true,
             help: "serve: early-exit confidence margin (0 = off)",
         },
-        Spec { name: "full", takes_value: false, help: "serve the full paper SCNN" },
-        Spec { name: "config", takes_value: true, help: "TOML config file" },
+        Spec { name: "full", takes_value: false, help: "use the full paper SCNN topology" },
         Spec { name: "help", takes_value: false, help: "show usage" },
     ]
 }
 
-fn parse_policy(s: &str) -> Result<Policy> {
-    Ok(match s {
-        "ws-only" => Policy::WsOnly,
-        "os-only" => Policy::OsOnly,
-        "hs-min" => Policy::HsMin,
-        "hs-max" => Policy::HsMax,
-        "hs-opt" => Policy::HsOpt,
-        other => bail!("unknown policy '{other}'"),
-    })
+/// Build the deployment spec for a subcommand: `--config file.toml` (or
+/// the default preset) as the base, CLI flags as an overlay on top.
+fn spec_from_args(args: &Args, default_preset: &str) -> Result<DeploymentSpec> {
+    let mut spec = match args.get("config") {
+        Some(path) => DeploymentSpec::load(Path::new(path))?,
+        None => presets::spec(default_preset).expect("known preset"),
+    };
+    if args.flag("full") {
+        spec.network = flexspim::deploy::NetworkSpec::from_network(&scnn_dvs_gesture());
+    }
+    let parsed = |name: &str| -> Result<Option<usize>> {
+        args.get_parsed::<usize>(name).map_err(|e| anyhow!(e))
+    };
+    if let Some(m) = parsed("macros")? {
+        spec.substrate.macros = m;
+    }
+    if let Some(p) = args.get("policy") {
+        spec.substrate.policy = parse_policy(p)?;
+    }
+    if let Some(v) = args.get_parsed::<f64>("vdd").map_err(|e| anyhow!(e))? {
+        spec.substrate.vdd = v;
+    }
+    // Backend kind before seed: `--backend native --seed 7` on a PJRT
+    // config must land the seed on the freshly-selected native backend.
+    if let Some(kind) = args.get("backend") {
+        let seed = spec.backend.seed().unwrap_or(42);
+        spec.backend = match kind {
+            "native" => BackendSpec::Native { seed },
+            "native-dense" => BackendSpec::NativeDense { seed },
+            // Keep a config's artifacts path when it already selected pjrt.
+            "pjrt" => match spec.backend {
+                BackendSpec::Pjrt { .. } => spec.backend.clone(),
+                _ => BackendSpec::Pjrt { artifacts: None },
+            },
+            other => bail!("unknown backend '{other}' (native|native-dense|pjrt)"),
+        };
+    }
+    if let Some(seed) = args.get_parsed::<u64>("seed").map_err(|e| anyhow!(e))? {
+        match &mut spec.backend {
+            BackendSpec::Native { seed: s } | BackendSpec::NativeDense { seed: s } => *s = seed,
+            BackendSpec::Pjrt { .. } => {}
+        }
+    }
+    if let Some(w) = parsed("workers")? {
+        spec.serve.workers = w;
+    }
+    if let Some(kb) = args.get_parsed::<u64>("budget-kb").map_err(|e| anyhow!(e))? {
+        spec.serve.resident_budget_kb = kb;
+    }
+    if args.flag("deterministic") {
+        spec.serve.deterministic_admission = true;
+    }
+    if let Some(m) = args.get_parsed::<f64>("exit-margin").map_err(|e| anyhow!(e))? {
+        spec.serve.early_exit_margin = m;
+    }
+    spec.validate()?;
+    Ok(spec)
 }
 
 fn main() -> Result<()> {
@@ -86,6 +146,7 @@ fn main() -> Result<()> {
     if args.flag("help") || cmd == "help" {
         println!("{}", usage("flexspim <command>", &specs()));
         println!("commands: reproduce run serve train map simulate sweep");
+        println!("presets:  {}", presets::names().join(" "));
         return Ok(());
     }
     match cmd {
@@ -100,7 +161,17 @@ fn main() -> Result<()> {
     }
 }
 
+/// Subcommands that are not spec-driven must say so rather than silently
+/// ignoring `--config`.
+fn reject_config(args: &Args, cmd: &str) -> Result<()> {
+    if args.get("config").is_some() {
+        bail!("--config applies to run/serve/map/sweep; '{cmd}' is driven by its own flags");
+    }
+    Ok(())
+}
+
 fn reproduce(args: &Args) -> Result<()> {
+    reject_config(args, "reproduce")?;
     let what = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
     let mut any = false;
     if matches!(what, "fig4" | "all") {
@@ -109,7 +180,7 @@ fn reproduce(args: &Args) -> Result<()> {
     }
     if matches!(what, "fig6" | "all") {
         println!("{}", fig6::render_sizes());
-        println!("(accuracy sweep: `flexspim sweep` — needs artifacts + trained weights)\n");
+        println!("(accuracy sweep: `flexspim sweep` — random weights give chance accuracy)\n");
         any = true;
     }
     if matches!(what, "fig7a" | "fig7cd" | "fig7" | "all") {
@@ -129,17 +200,21 @@ fn reproduce(args: &Args) -> Result<()> {
 
 fn run_inference(args: &Args) -> Result<()> {
     let samples = args.get_or("samples", 2usize);
-    let macros = args.get_or("macros", 16usize);
-    let policy = parse_policy(&args.get_or("policy", "hs-opt".to_string()))?;
     let seed = args.get_or("seed", 42u64);
 
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let dir = artifacts_dir();
-    let runner = flexspim::runtime::ScnnRunner::load(&rt, &dir)?;
-    let mut coord = Coordinator::with_runner(runner, macros, policy)?;
+    let spec = spec_from_args(args, presets::SCNN_DVS_GESTURE)?;
+    let deployment = spec.deploy()?;
+    let mut coord = deployment.coordinator()?;
     let net = coord.network().clone();
-    println!("mapping ({} macros, {policy}):\n{}", macros, coord.mapping().table(&net));
+    println!(
+        "deploying {} on {} macros ({}, {} backend, {:.2} V)",
+        net.name,
+        deployment.spec().substrate.macros,
+        deployment.spec().substrate.policy,
+        deployment.spec().backend.kind(),
+        deployment.spec().substrate.vdd,
+    );
+    println!("mapping:\n{}", coord.mapping().table(&net));
 
     let gen = GestureGenerator::default_48();
     let mut rng = Rng::new(seed);
@@ -150,45 +225,22 @@ fn run_inference(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Compact serve demo net: 16 timesteps over the 48×48 substrate, so each
-/// 100-ms session streams as 4 micro-windows of 4 frames.
-fn serve_demo_net() -> flexspim::snn::Network {
-    use flexspim::snn::{LayerSpec, Network, Resolution};
-    let r = Resolution::new(4, 9);
-    Network::new(
-        "serve-demo",
-        vec![
-            LayerSpec::conv("C1", 2, 8, 3, 4, 1, 48, 48, r),
-            LayerSpec::fc("F1", 8 * 12 * 12, 64, r),
-            LayerSpec::fc("F2", 64, 10, Resolution::new(5, 10)),
-        ],
-        16,
-    )
-}
-
 fn run_serve(args: &Args) -> Result<()> {
-    use flexspim::serve::{gesture_traffic, ServiceConfig, StreamingService};
+    use flexspim::serve::gesture_traffic;
 
     let sessions = args.get_or("sessions", 16usize);
-    let workers = args.get_or("workers", 4usize);
-    let macros = args.get_or("macros", 16usize);
-    let policy = parse_policy(&args.get_or("policy", "hs-opt".to_string()))?;
     let seed = args.get_or("seed", 42u64);
     let jitter_us = args.get_or("jitter-us", 8_000u64);
-    let budget_kb = args.get_or("budget-kb", 0u64);
 
-    let net = if args.flag("full") { scnn_dvs_gesture() } else { serve_demo_net() };
-    let mut cfg = ServiceConfig::nominal(workers);
-    if budget_kb > 0 {
-        cfg.resident_budget_bits = budget_kb * 1024 * 8;
-    }
-    cfg.deterministic_admission = args.flag("deterministic");
-    cfg.early_exit_margin = args.get_or("exit-margin", 0.0f64);
-    let svc = StreamingService::native(net.clone(), seed, macros, policy, cfg);
+    let spec = spec_from_args(args, presets::SERVE_DEMO)?;
+    let deployment = spec.deploy()?;
+    let svc = deployment.service()?;
     println!(
-        "serving {} on {macros} macros ({policy}): {sessions} sessions, {workers} workers, \
+        "serving {} on {} macros ({}): {sessions} sessions, {} workers, \
          {jitter_us} us arrival jitter, {} b vmem/session, {} b residency budget",
-        net.name,
+        deployment.network().name,
+        deployment.spec().substrate.macros,
+        deployment.spec().substrate.policy,
         svc.plan().net.total_vmem_bits(),
         svc.config().resident_budget_bits,
     );
@@ -199,6 +251,7 @@ fn run_serve(args: &Args) -> Result<()> {
 }
 
 fn run_training(args: &Args) -> Result<()> {
+    reject_config(args, "train")?;
     let steps = args.get_or("steps", 100usize);
     let lr = args.get_or("lr", 0.05f32);
     let seed = args.get_or("seed", 42u64);
@@ -223,7 +276,7 @@ fn run_training(args: &Args) -> Result<()> {
 }
 
 /// Serialize a WeightFile in the FSPW format (mirror of train.py).
-fn save_weight_file(wf: &flexspim::runtime::WeightFile, path: &std::path::Path) -> Result<()> {
+fn save_weight_file(wf: &flexspim::runtime::WeightFile, path: &Path) -> Result<()> {
     use std::io::Write;
     let mut f = std::fs::File::create(path)?;
     f.write_all(b"FSPW")?;
@@ -245,18 +298,22 @@ fn save_weight_file(wf: &flexspim::runtime::WeightFile, path: &std::path::Path) 
 }
 
 fn run_map(args: &Args) -> Result<()> {
-    let macros = args.get_or("macros", 2usize);
-    let net = scnn_dvs_gesture();
+    use flexspim::dataflow::{Mapper, Policy};
+
+    let spec = spec_from_args(args, presets::SCNN_DVS_GESTURE)?;
+    let net = spec.network.build()?;
+    let macros = spec.substrate.macros;
     let mapper = Mapper::flexspim(macros);
     for policy in Policy::ALL {
         let m = mapper.map(&net, policy);
-        println!("=== {policy} ({macros} macros) ===");
+        println!("=== {} — {policy} ({macros} macros) ===", net.name);
         println!("{}", m.table(&net));
     }
     Ok(())
 }
 
 fn run_simulate(args: &Args) -> Result<()> {
+    reject_config(args, "simulate")?;
     let w_bits = args.get_or("wbits", 8u32);
     let p_bits = args.get_or("pbits", 16u32);
     let n_c = args.get_or("nc", 1u32);
@@ -303,15 +360,20 @@ fn run_simulate(args: &Args) -> Result<()> {
 fn run_sweep(args: &Args) -> Result<()> {
     let samples = args.get_or("samples", 2usize);
     let seed = args.get_or("seed", 42u64);
-    let rt = Runtime::cpu()?;
-    let dir = artifacts_dir();
-    let runner = flexspim::runtime::ScnnRunner::load(&rt, &dir)?;
-    let mut coord = Coordinator::with_runner(runner, 16, Policy::HsOpt)?;
+
+    let spec = spec_from_args(args, presets::SCNN_DVS_GESTURE)?;
+    let deployment = spec.deploy()?;
+    let mut coord = deployment.coordinator()?;
     let gen = GestureGenerator::default_48();
     let mut rng = Rng::new(seed);
     let data = gen.dataset(samples, &mut rng);
-    let configs = fig6::scaling_configs();
-    println!("sweeping {} configs × {} samples ...", configs.len(), data.len());
+    let configs = fig6::scaling_configs_for(coord.network());
+    println!(
+        "sweeping {} on {} configs × {} samples ...",
+        deployment.network().name,
+        configs.len(),
+        data.len()
+    );
     let points = fig6::accuracy_sweep(&mut coord, &data, &configs)?;
     println!("{}", fig6::render_sweep(&points));
     println!("{}", fig6::render_sizes());

@@ -23,8 +23,10 @@
 //! runs everywhere — it is the engine's throughput substrate and the
 //! fallback when the XLA runtime is not vendored.
 
+use std::sync::Arc;
+
 use crate::snn::conv::ConvLifLayer;
-use crate::snn::events::{EventConvLayer, EventFcLayer, SpikeList};
+use crate::snn::events::{AdjacencyCache, EventConvLayer, EventFcLayer, SpikeList};
 use crate::snn::lif::LifLayer;
 use crate::snn::quant::{max_val, min_val};
 use crate::snn::{LayerKind, Network, Resolution};
@@ -86,26 +88,49 @@ pub struct NativeScnn {
     net: Network,
     seed: u64,
     sparse: bool,
+    /// Shared conv scatter-adjacency tables: reused across
+    /// [`Self::set_resolutions`] rebuilds (the adjacency depends only on
+    /// geometry) and, when the same cache `Arc` is handed to several
+    /// instances, across engine / serve workers.
+    adj_cache: Arc<AdjacencyCache>,
     layers: Vec<NativeLayer>,
 }
 
 impl NativeScnn {
     /// Build an event-driven interpreter for `net` with seed-derived
-    /// quantized weights.
+    /// quantized weights (private adjacency cache — resolution rebuilds
+    /// still reuse it).
     pub fn new(net: Network, seed: u64) -> NativeScnn {
-        let layers = Self::build_layers(&net, seed, true);
-        NativeScnn { net, seed, sparse: true, layers }
+        Self::with_adjacency_cache(net, seed, Arc::new(AdjacencyCache::new()))
+    }
+
+    /// Build with a shared [`AdjacencyCache`]: hand the same `Arc` to
+    /// every worker's backend and the conv adjacencies are compiled once
+    /// per distinct geometry process-wide instead of once per worker.
+    pub fn with_adjacency_cache(
+        net: Network,
+        seed: u64,
+        cache: Arc<AdjacencyCache>,
+    ) -> NativeScnn {
+        let layers = Self::build_layers(&net, seed, true, &cache);
+        NativeScnn { net, seed, sparse: true, adj_cache: cache, layers }
     }
 
     /// Build the dense golden-model interpreter over the *same* weight
     /// streams — the oracle for dense-vs-sparse bit-identity tests and the
     /// baseline of the `sparse_speedup` bench. Runtime tiers never use it.
     pub fn new_dense_reference(net: Network, seed: u64) -> NativeScnn {
-        let layers = Self::build_layers(&net, seed, false);
-        NativeScnn { net, seed, sparse: false, layers }
+        let cache = Arc::new(AdjacencyCache::new());
+        let layers = Self::build_layers(&net, seed, false, &cache);
+        NativeScnn { net, seed, sparse: false, adj_cache: cache, layers }
     }
 
-    fn build_layers(net: &Network, seed: u64, sparse: bool) -> Vec<NativeLayer> {
+    fn build_layers(
+        net: &Network,
+        seed: u64,
+        sparse: bool,
+        cache: &AdjacencyCache,
+    ) -> Vec<NativeLayer> {
         let mut root = Rng::new(seed ^ 0x5EED_CE11_F1E2_D3C4);
         net.layers
             .iter()
@@ -131,7 +156,12 @@ impl NativeScnn {
                             .map(|_| rng.range_i64(lo, hi))
                             .collect();
                         if sparse {
-                            NativeLayer::Conv(EventConvLayer::new(spec.clone(), weights, theta))
+                            NativeLayer::Conv(EventConvLayer::with_adjacency(
+                                spec.clone(),
+                                weights,
+                                theta,
+                                cache.get_or_build(spec),
+                            ))
                         } else {
                             NativeLayer::DenseConv(ConvLifLayer::new(
                                 spec.clone(),
@@ -164,6 +194,12 @@ impl NativeScnn {
     /// (false only for [`Self::new_dense_reference`] oracles).
     pub fn is_sparse(&self) -> bool {
         self.sparse
+    }
+
+    /// The conv-adjacency cache this backend compiles through (shared or
+    /// private — see [`Self::with_adjacency_cache`]).
+    pub fn adjacency_cache(&self) -> &Arc<AdjacencyCache> {
+        &self.adj_cache
     }
 }
 
@@ -199,7 +235,9 @@ impl StepBackend for NativeScnn {
         let resolutions: Vec<Resolution> =
             res.iter().map(|&(w, p)| Resolution::new(w, p)).collect();
         self.net = self.net.with_resolutions(&resolutions);
-        self.layers = Self::build_layers(&self.net, self.seed, self.sparse);
+        // Resolution changes do not move the conv geometry, so every
+        // adjacency comes straight out of the cache.
+        self.layers = Self::build_layers(&self.net, self.seed, self.sparse, &self.adj_cache);
     }
 
     fn snapshot(&self) -> StateSnapshot {
@@ -338,6 +376,40 @@ mod tests {
     fn frame_size_checked() {
         let mut m = NativeScnn::new(tiny_net(), 1);
         assert!(m.step(&SpikeList::empty(7)).is_err());
+    }
+
+    #[test]
+    fn resolution_rebuild_reuses_adjacency() {
+        // tiny_net has one conv layer: the first build compiles its
+        // adjacency (a miss), every set_resolutions rebuild is a hit.
+        let mut m = NativeScnn::new(tiny_net(), 1);
+        let cache = m.adjacency_cache().clone();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.hits(), 0);
+        m.set_resolutions(&[(3, 8), (3, 8), (4, 9)]);
+        assert_eq!(cache.len(), 1, "no new geometry appeared");
+        assert_eq!(cache.hits(), 1, "rebuild must hit the cache");
+        m.set_resolutions(&[(5, 10), (5, 10), (5, 10)]);
+        assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn workers_sharing_a_cache_stay_bit_identical() {
+        let net = tiny_net();
+        let frames = frames_for(&net, 21);
+        let cache = Arc::new(AdjacencyCache::new());
+        let mut a = NativeScnn::with_adjacency_cache(net.clone(), 9, cache.clone());
+        let mut b = NativeScnn::with_adjacency_cache(net.clone(), 9, cache.clone());
+        assert_eq!(cache.hits(), 1, "second instance reuses the table");
+        let mut private = NativeScnn::new(net, 9);
+        for f in &frames {
+            let ra = a.step(f).unwrap();
+            let rb = b.step(f).unwrap();
+            let rp = private.step(f).unwrap();
+            assert_eq!(ra.out_spikes, rb.out_spikes);
+            assert_eq!(ra.out_spikes, rp.out_spikes);
+            assert_eq!(ra.counts, rp.counts);
+        }
     }
 
     #[test]

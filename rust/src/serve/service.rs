@@ -45,6 +45,7 @@ use crate::coordinator::metrics::{LatencyStats, RunMetrics};
 use crate::dataflow::Policy;
 use crate::events::{DvsEvent, GestureClass, GestureGenerator};
 use crate::runtime::{NativeScnn, StateSnapshot, StepBackend};
+use crate::snn::events::AdjacencyCache;
 use crate::snn::Network;
 use crate::util::rng::Rng;
 use crate::Result;
@@ -72,7 +73,9 @@ pub struct ServiceConfig {
     /// residency and energy reports are bit-reproducible at any worker
     /// count. Window *execution* still overlaps across the pool; only the
     /// dispatch (and the LRU transitions it drives) is ordered, at some
-    /// head-of-line throughput cost.
+    /// head-of-line throughput cost. Scoped to shed-free runs: shedding
+    /// decisions depend on worker drain timing, so an overloaded queue
+    /// reintroduces pool-size dependence.
     pub deterministic_admission: bool,
     /// Early-exit confidence bound: stop serving a session once the
     /// rolling classification's smoothed margin (top-1 − top-2 of the
@@ -220,7 +223,9 @@ impl StreamingService {
     }
 
     /// Convenience: a service over the pure-Rust [`NativeScnn`] backend,
-    /// deterministic from `seed`.
+    /// deterministic from `seed`. Thin shim over the same wiring
+    /// [`crate::deploy::Deployment::service`] performs; all workers share
+    /// one conv-adjacency cache.
     pub fn native(
         net: Network,
         seed: u64,
@@ -229,8 +234,10 @@ impl StreamingService {
         cfg: ServiceConfig,
     ) -> StreamingService {
         let plan = Arc::new(SamplePlan::new(net.clone(), num_macros, policy));
+        let adj = Arc::new(AdjacencyCache::new());
         let factory: Arc<BackendFactory> = Arc::new(move || {
-            Ok(Box::new(NativeScnn::new(net.clone(), seed)) as Box<dyn StepBackend>)
+            Ok(Box::new(NativeScnn::with_adjacency_cache(net.clone(), seed, adj.clone()))
+                as Box<dyn StepBackend>)
         });
         StreamingService::new(plan, factory, cfg)
     }

@@ -33,6 +33,9 @@
 //! [`crate::snn::lif::LifLayer`]) over random geometries and resolutions
 //! is pinned by `rust/tests/property_sparse.rs`.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
 use super::layer::{LayerKind, LayerSpec};
 use super::quant::{max_val, min_val, wrap, Resolution};
 
@@ -163,6 +166,9 @@ struct Tap {
 /// walk adds the channel strides on top.
 #[derive(Debug, Clone)]
 pub struct ConvAdjacency {
+    /// The geometry this adjacency was compiled for (shared-table safety
+    /// check — see [`EventConvLayer::with_adjacency`]).
+    key: AdjKey,
     /// Row offsets into `taps`, one row per input position (`in_h × in_w`
     /// rows, `offsets.len() == rows + 1`).
     offsets: Vec<u32>,
@@ -172,12 +178,8 @@ pub struct ConvAdjacency {
 impl ConvAdjacency {
     /// Compile the scatter adjacency of `spec` (must be a conv layer).
     pub fn build(spec: &LayerSpec) -> ConvAdjacency {
-        let (k, stride, pad, in_h, in_w) = match spec.kind {
-            LayerKind::Conv { k, stride, pad, in_h, in_w, .. } => {
-                (k, stride, pad, in_h, in_w)
-            }
-            _ => panic!("conv spec required"),
-        };
+        let key = geometry_key(spec);
+        let (k, stride, pad, in_h, in_w) = key;
         let (_, oh, ow) = spec.out_shape();
         let mut offsets = Vec::with_capacity(in_h * in_w + 1);
         let mut taps = Vec::new();
@@ -212,7 +214,7 @@ impl ConvAdjacency {
                 offsets.push(taps.len() as u32);
             }
         }
-        ConvAdjacency { offsets, taps }
+        ConvAdjacency { key, offsets, taps }
     }
 
     /// Total taps across all input positions (diagnostics: equals the sum
@@ -220,6 +222,76 @@ impl ConvAdjacency {
     /// fully dense frame).
     pub fn tap_count(&self) -> usize {
         self.taps.len()
+    }
+}
+
+/// Geometry key of a conv adjacency: `(k, stride, pad, in_h, in_w)` —
+/// everything [`ConvAdjacency::build`] depends on. Channel counts and
+/// operand resolutions do not shape the spatial scatter pattern, so layers
+/// that differ only in those share one table.
+type AdjKey = (usize, usize, usize, usize, usize);
+
+/// The [`AdjKey`] of a conv layer spec (panics on FC specs).
+fn geometry_key(spec: &LayerSpec) -> AdjKey {
+    match spec.kind {
+        LayerKind::Conv { k, stride, pad, in_h, in_w, .. } => (k, stride, pad, in_h, in_w),
+        _ => panic!("conv spec required"),
+    }
+}
+
+/// Shared, thread-safe cache of [`ConvAdjacency`] tables keyed by conv
+/// geometry.
+///
+/// The adjacency is read-only and a pure function of geometry, so one
+/// table can serve every rebuild of [`crate::runtime::NativeScnn`] across
+/// a resolution sweep *and* every worker of the parallel engine / serve
+/// pool. Build cost is paid once per distinct geometry; every later lookup
+/// is an `Arc` clone. Share it by cloning the `Arc<AdjacencyCache>` into
+/// each backend factory closure.
+#[derive(Debug, Default)]
+pub struct AdjacencyCache {
+    state: Mutex<CacheState>,
+}
+
+#[derive(Debug, Default)]
+struct CacheState {
+    map: HashMap<AdjKey, Arc<ConvAdjacency>>,
+    hits: u64,
+}
+
+impl AdjacencyCache {
+    /// An empty cache.
+    pub fn new() -> AdjacencyCache {
+        AdjacencyCache::default()
+    }
+
+    /// The adjacency for `spec` (must be a conv layer): built on first
+    /// use, shared afterwards.
+    pub fn get_or_build(&self, spec: &LayerSpec) -> Arc<ConvAdjacency> {
+        let key = geometry_key(spec);
+        let mut st = self.state.lock().unwrap();
+        if let Some(adj) = st.map.get(&key) {
+            st.hits += 1;
+            return adj.clone();
+        }
+        let adj = Arc::new(ConvAdjacency::build(spec));
+        st.map.insert(key, adj.clone());
+        adj
+    }
+
+    /// Distinct geometries cached so far.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().map.len()
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups served from the cache (observability for the sharing tests).
+    pub fn hits(&self) -> u64 {
+        self.state.lock().unwrap().hits
     }
 }
 
@@ -235,7 +307,8 @@ pub struct EventConvLayer {
     /// Weights `[out_ch][in_ch][k][k]` flattened row-major (dense layout,
     /// indexed through the adjacency's kernel positions).
     weights: Vec<i64>,
-    adj: ConvAdjacency,
+    /// Shared read-only scatter adjacency (see [`AdjacencyCache`]).
+    adj: Arc<ConvAdjacency>,
     /// Membrane potentials `[out_ch][oh][ow]` flattened.
     v: Vec<i64>,
     /// Firing threshold.
@@ -254,9 +327,28 @@ pub struct EventConvLayer {
 
 impl EventConvLayer {
     /// Build from a spec and flattened weights — same validation as the
-    /// dense golden model.
+    /// dense golden model. The scatter adjacency is compiled privately;
+    /// use [`Self::with_adjacency`] to share one across layers/instances.
     pub fn new(spec: LayerSpec, weights: Vec<i64>, threshold: i64) -> Self {
-        assert!(matches!(spec.kind, LayerKind::Conv { .. }), "conv spec required");
+        let adj = Arc::new(ConvAdjacency::build(&spec));
+        Self::with_adjacency(spec, weights, threshold, adj)
+    }
+
+    /// Build with a shared precomputed adjacency (see [`AdjacencyCache`]):
+    /// the adjacency depends only on conv geometry, so resolution rebuilds
+    /// and sibling engine workers reuse one table instead of recompiling
+    /// it per instance.
+    pub fn with_adjacency(
+        spec: LayerSpec,
+        weights: Vec<i64>,
+        threshold: i64,
+        adj: Arc<ConvAdjacency>,
+    ) -> Self {
+        assert_eq!(
+            adj.key,
+            geometry_key(&spec),
+            "adjacency does not match the layer geometry"
+        );
         assert_eq!(weights.len(), spec.num_weights());
         let (lo, hi) = (min_val(spec.res.w_bits), max_val(spec.res.w_bits));
         assert!(
@@ -266,7 +358,6 @@ impl EventConvLayer {
         );
         assert!(threshold > 0);
         let n = spec.num_neurons();
-        let adj = ConvAdjacency::build(&spec);
         EventConvLayer {
             spec,
             weights,
@@ -688,5 +779,66 @@ mod tests {
         l.reset();
         assert_eq!(l.vmem(), &[0]);
         assert_eq!(l.step(&SpikeList::empty(1)).count(), 0);
+    }
+
+    #[test]
+    fn adjacency_cache_shares_by_geometry() {
+        let cache = AdjacencyCache::new();
+        let a = LayerSpec::conv("a", 2, 4, 3, 1, 1, 8, 8, Resolution::new(4, 9));
+        // Same geometry, different channels/resolution: one shared table.
+        let b = LayerSpec::conv("b", 8, 16, 3, 1, 1, 8, 8, Resolution::new(6, 11));
+        // Different stride: its own table.
+        let c = LayerSpec::conv("c", 2, 4, 3, 2, 1, 8, 8, Resolution::new(4, 9));
+        let adj_a = cache.get_or_build(&a);
+        let adj_b = cache.get_or_build(&b);
+        let adj_c = cache.get_or_build(&c);
+        assert!(Arc::ptr_eq(&adj_a, &adj_b), "same geometry must share");
+        assert!(!Arc::ptr_eq(&adj_a, &adj_c), "different geometry must not");
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.hits(), 1);
+        assert!(!cache.is_empty());
+    }
+
+    #[test]
+    fn shared_adjacency_layer_matches_private_one() {
+        let spec = LayerSpec::conv("s", 1, 2, 3, 1, 1, 6, 6, Resolution::new(4, 9));
+        let weights: Vec<i64> = (0..spec.num_weights()).map(|i| (i as i64 % 7) - 3).collect();
+        let cache = AdjacencyCache::new();
+        let mut shared = EventConvLayer::with_adjacency(
+            spec.clone(),
+            weights.clone(),
+            5,
+            cache.get_or_build(&spec),
+        );
+        let mut private = EventConvLayer::new(spec.clone(), weights, 5);
+        let frame = SpikeList::from_sorted(vec![0, 7, 20, 35], 36);
+        for t in 0..4 {
+            let a = shared.step(&frame);
+            let b = private.step(&frame);
+            assert_eq!(a, b, "t={t}");
+        }
+        assert_eq!(shared.vmem(), private.vmem());
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match the layer geometry")]
+    fn mismatched_adjacency_rejected() {
+        let small = LayerSpec::conv("s", 1, 1, 3, 1, 1, 4, 4, Resolution::new(4, 9));
+        let big = LayerSpec::conv("b", 1, 1, 3, 1, 1, 8, 8, Resolution::new(4, 9));
+        let adj = Arc::new(ConvAdjacency::build(&small));
+        let weights = vec![0i64; big.num_weights()];
+        let _ = EventConvLayer::with_adjacency(big, weights, 1, adj);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match the layer geometry")]
+    fn same_plane_different_padding_rejected() {
+        // Same input plane (so the offsets row count matches) but a
+        // different output grid: only the full geometry key catches it.
+        let padded = LayerSpec::conv("p", 1, 1, 3, 1, 1, 8, 8, Resolution::new(4, 9));
+        let unpadded = LayerSpec::conv("u", 1, 1, 3, 1, 0, 8, 8, Resolution::new(4, 9));
+        let adj = Arc::new(ConvAdjacency::build(&padded));
+        let weights = vec![0i64; unpadded.num_weights()];
+        let _ = EventConvLayer::with_adjacency(unpadded, weights, 1, adj);
     }
 }

@@ -15,7 +15,7 @@ pub mod quant;
 
 pub use conv::ConvLifLayer;
 
-pub use events::{EventConvLayer, EventFcLayer, SpikeList};
+pub use events::{AdjacencyCache, ConvAdjacency, EventConvLayer, EventFcLayer, SpikeList};
 pub use layer::{LayerKind, LayerSpec};
 pub use lif::LifNeuron;
 pub use network::{Network, scnn_dvs_gesture};

@@ -1,0 +1,274 @@
+//! Deployment-API integration: TOML round-trips, builder-vs-TOML
+//! equivalence, invalid-spec rejection, shipped-config/preset pinning,
+//! and end-to-end bit-identity of a preset-loaded SCNN against the
+//! hardcoded `scnn_dvs_gesture()` network.
+
+use std::path::Path;
+
+use flexspim::coordinator::Coordinator;
+use flexspim::dataflow::Policy;
+use flexspim::deploy::{presets, DeploymentSpec};
+use flexspim::events::{GestureClass, GestureGenerator};
+use flexspim::runtime::NativeScnn;
+use flexspim::snn::network::scnn_dvs_gesture;
+use flexspim::snn::Resolution;
+use flexspim::util::rng::Rng;
+
+const SEED: u64 = 42;
+
+/// The builder spec used for the equivalence tests.
+fn builder_spec() -> DeploymentSpec {
+    DeploymentSpec::builder("equiv")
+        .timesteps(8)
+        .conv("C1", 2, 4, 3, 4, 1, 48, 48, Resolution::new(4, 9))
+        .fc("F1", 4 * 12 * 12, 16, Resolution::new(4, 9))
+        .fc("F2", 16, 10, Resolution::new(5, 10))
+        .macros(4)
+        .policy(Policy::HsMin)
+        .native_backend(7)
+        .workers(2)
+        .resident_budget_kb(32)
+        .deterministic_admission(true)
+        .early_exit(0.5, 3)
+        .build()
+        .expect("valid spec")
+}
+
+/// The same deployment written by hand as TOML.
+const EQUIV_TOML: &str = r#"
+[network]
+name = "equiv"
+timesteps = 8
+
+[layer.1]
+type = "conv"
+name = "C1"
+in_ch = 2
+out_ch = 4
+kernel = 3
+stride = 4
+pad = 1
+in_h = 48
+in_w = 48
+w_bits = 4
+p_bits = 9
+
+[layer.2]
+type = "fc"
+name = "F1"
+in_dim = 576
+out_dim = 16
+w_bits = 4
+p_bits = 9
+
+[layer.3]
+type = "fc"
+name = "F2"
+in_dim = 16
+out_dim = 10
+w_bits = 5
+p_bits = 10
+
+[substrate]
+macros = 4
+policy = "hs-min"
+
+[backend]
+kind = "native"
+seed = 7
+
+[serve]
+workers = 2
+budget_kb = 32
+deterministic = true
+exit_margin = 0.5
+exit_min_windows = 3
+"#;
+
+#[test]
+fn toml_round_trip_is_lossless() {
+    let spec = builder_spec();
+    let text = spec.to_toml();
+    let parsed = DeploymentSpec::from_toml_str(&text).expect("serialized spec parses");
+    assert_eq!(parsed, spec, "TOML -> spec -> TOML must be lossless");
+    assert_eq!(parsed.to_toml(), text, "serialization is a fixed point");
+}
+
+#[test]
+fn builder_and_toml_specs_are_identical() {
+    let from_builder = builder_spec();
+    let from_toml = DeploymentSpec::from_toml_str(EQUIV_TOML).expect("hand TOML parses");
+    assert_eq!(from_toml, from_builder);
+}
+
+#[test]
+fn builder_and_toml_deployments_run_identically() {
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(9);
+    let stream = gen.sample(GestureClass::RightCw, &mut rng);
+
+    let run = |spec: DeploymentSpec| {
+        let mut coord = spec.deploy().unwrap().coordinator().unwrap();
+        coord.run_sample(&stream, Some(3)).unwrap()
+    };
+    let a = run(builder_spec());
+    let b = run(DeploymentSpec::from_toml_str(EQUIV_TOML).unwrap());
+    assert_eq!(a.prediction, b.prediction);
+    assert_eq!(a.rate, b.rate);
+    assert_eq!(a.metrics.sops, b.metrics.sops);
+    assert_eq!(a.metrics.cim, b.metrics.cim);
+    assert_eq!(a.metrics.energy.total_pj(), b.metrics.energy.total_pj());
+}
+
+#[test]
+fn shipped_configs_match_their_presets() {
+    for (file, preset) in [
+        ("configs/scnn_dvs_gesture.toml", presets::SCNN_DVS_GESTURE),
+        ("configs/serve_demo.toml", presets::SERVE_DEMO),
+    ] {
+        let from_file = DeploymentSpec::load(Path::new(file))
+            .unwrap_or_else(|e| panic!("{file}: {e}"));
+        let from_preset = presets::spec(preset).expect("known preset");
+        assert_eq!(from_file, from_preset, "{file} drifted from preset '{preset}'");
+    }
+}
+
+#[test]
+fn invalid_specs_are_rejected_with_rich_errors() {
+    // Shape-chain mismatch.
+    let err = DeploymentSpec::builder("bad")
+        .fc("a", 10, 20, Resolution::new(4, 8))
+        .fc("b", 21, 5, Resolution::new(4, 8))
+        .build()
+        .unwrap_err();
+    assert!(format!("{err}").contains("shape chain"), "got: {err}");
+
+    // Bad policy (TOML).
+    let err = DeploymentSpec::from_toml_str(
+        "[network]\npreset = \"serve-demo\"\n[substrate]\npolicy = \"bogus\"\n",
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("unknown policy"), "got: {err}");
+
+    // Zero workers (TOML).
+    let err = DeploymentSpec::from_toml_str(
+        "[network]\npreset = \"serve-demo\"\n[serve]\nworkers = 0\n",
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("workers"), "got: {err}");
+
+    // Unknown keys never pass silently.
+    let err = DeploymentSpec::from_toml_str(
+        "[network]\npreset = \"serve-demo\"\nmacros = 4\n",
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("network.macros"), "got: {err}");
+}
+
+#[test]
+fn preset_loaded_scnn_matches_hardcoded_network_end_to_end() {
+    // The shipped config -> Deployment path and the historical
+    // hand-constructed path must execute bit-identically: same spikes,
+    // same prediction, same SOPs and CIM ledger, same final state.
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(5);
+    let stream = gen.sample(GestureClass::HandClap, &mut rng);
+
+    let deployment = DeploymentSpec::load(Path::new("configs/scnn_dvs_gesture.toml"))
+        .expect("shipped config loads")
+        .deploy()
+        .expect("deploys");
+    let mut from_config = deployment.coordinator().expect("coordinator");
+
+    let backend = Box::new(NativeScnn::new(scnn_dvs_gesture(), SEED));
+    let mut reference = Coordinator::with_backend(backend, 16, Policy::HsOpt).unwrap();
+
+    let a = from_config.run_sample(&stream, Some(0)).unwrap();
+    let b = reference.run_sample(&stream, Some(0)).unwrap();
+    assert_eq!(a.prediction, b.prediction);
+    assert_eq!(a.rate, b.rate, "classifier spike counts must be bit-identical");
+    assert_eq!(a.metrics.sops, b.metrics.sops);
+    assert_eq!(a.metrics.in_events, b.metrics.in_events);
+    assert_eq!(a.metrics.cim, b.metrics.cim, "shard ledger must agree");
+    assert_eq!(a.metrics.energy.total_pj(), b.metrics.energy.total_pj());
+    assert_eq!(from_config.state(), reference.state(), "final vmem");
+}
+
+#[test]
+fn toml_topology_serves_without_recompiling() {
+    // The acceptance scenario: a custom topology defined purely as data
+    // drives the streaming tier.
+    let toml = r#"
+        [network]
+        name = "custom-serve"
+        timesteps = 16
+
+        [layer.1]
+        type = "conv"
+        in_ch = 2
+        out_ch = 4
+        kernel = 3
+        stride = 4
+        pad = 1
+        in_h = 48
+        in_w = 48
+        w_bits = 4
+        p_bits = 9
+
+        [layer.2]
+        type = "fc"
+        in_dim = 576
+        out_dim = 10
+        w_bits = 5
+        p_bits = 10
+
+        [substrate]
+        macros = 2
+
+        [serve]
+        workers = 2
+    "#;
+    let deployment = DeploymentSpec::from_toml_str(toml)
+        .expect("custom TOML parses")
+        .deploy()
+        .expect("deploys");
+    let svc = deployment.service().expect("service materializes");
+    let traffic = flexspim::serve::gesture_traffic(4, 13, 0);
+    let report = svc.serve(&traffic, 32).expect("serve run");
+    assert_eq!(report.sessions, 4);
+    assert_eq!(report.finished_sessions, 4);
+    assert!(report.windows_done > 0);
+    for id in 0..4u64 {
+        let s = svc.session_result(id).expect("session served");
+        assert!(s.prediction < 10);
+        assert!(s.finished);
+    }
+}
+
+#[test]
+fn one_spec_drives_all_three_tiers_consistently() {
+    // Coordinator, engine, and service materialized from one spec agree
+    // on what a sample computes.
+    let spec = DeploymentSpec::from_toml_str(EQUIV_TOML).unwrap();
+    let deployment = spec.deploy().unwrap();
+
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(17);
+    let data: Vec<_> = (0..4)
+        .map(|i| (gen.sample(GestureClass::ALL[i % 10], &mut rng), i % 10))
+        .collect();
+
+    let mut coord = deployment.coordinator().unwrap();
+    let seq = coord.run_dataset(&data).unwrap();
+    let batch = deployment.engine().unwrap().run_batch(&data).unwrap();
+    assert_eq!(seq.sops, batch.metrics.sops);
+    assert_eq!(seq.cim, batch.metrics.cim);
+    assert_eq!(seq.correct, batch.metrics.correct);
+
+    // The service executes the same network (window-split equivalence is
+    // pinned in integration_serve.rs; here: it materializes and serves).
+    let svc = deployment.service().unwrap();
+    assert_eq!(svc.plan().net.name, "equiv");
+    assert_eq!(svc.config().workers, 2);
+    assert!(svc.config().deterministic_admission);
+}
