@@ -1,0 +1,269 @@
+//! Open-loop saturation sweep of the streaming serve tier.
+//!
+//! Unlike `serve_streaming` (closed-loop: the driver waits for the
+//! service, so offered load self-throttles), this bench commits to an
+//! arrival schedule and holds it against the wall clock via
+//! [`flexspim::serve::drive_open_loop`]. A stepped ramp of offered load —
+//! multiples of the calibrated single-worker capacity — at several pool
+//! sizes exposes the three regimes:
+//!
+//! * **linear** — goodput tracks offered load, nothing shed;
+//! * **knee**   — goodput falls behind, queues absorb the excess;
+//! * **shed**   — the admission bound trips and windows drop.
+//!
+//! Two follow-on experiments at the knee: Poisson vs. bursty arrivals at
+//! the same mean rate (burstiness alone moves the shed rate), and the SLO
+//! autoscaler vs. a fixed single worker (growth at the knee pulls p99
+//! back down).
+//!
+//! ```sh
+//! cargo bench --bench serve_saturation          # full ramp (48 sessions/step)
+//! BENCH_QUICK=1 cargo bench --bench serve_saturation   # CI smoke (12)
+//! ```
+//!
+//! One `BENCH_JSON {...}` line per ramp step for the cross-PR trajectory
+//! (`BENCH_saturation.json`; capture with `scripts/capture_bench.sh`).
+
+use flexspim::dataflow::Policy;
+use flexspim::deploy::{AutoscaleSpec, DeploymentSpec};
+use flexspim::serve::{
+    drive_open_loop, gesture_traffic, ArrivalProcess, LoadConfig, LoadReport, SessionTraffic,
+    StreamingService,
+};
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::util::bench::{emit_json, quick_mode, section};
+
+const SEED: u64 = 42;
+const MACROS: usize = 16;
+/// Intra-session compression: the 100-ms gesture plays out in 10 ms.
+const TIME_SCALE: f64 = 10.0;
+const CHUNK: usize = 64;
+
+/// Same mid-size SCNN as `serve_streaming`, for comparable numbers.
+fn bench_net() -> Network {
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "serve-saturation",
+        vec![
+            LayerSpec::conv("C1", 2, 8, 3, 4, 1, 48, 48, r),
+            LayerSpec::fc("F1", 8 * 12 * 12, 64, r),
+            LayerSpec::fc("F2", 64, 10, Resolution::new(5, 10)),
+        ],
+        16,
+    )
+}
+
+/// Materialize a fresh service through the deployment API (the same path
+/// `flexspim serve --config` takes).
+fn service_for(
+    workers: usize,
+    queue_capacity: usize,
+    autoscale: Option<AutoscaleSpec>,
+) -> StreamingService {
+    let mut builder = DeploymentSpec::builder("serve-saturation")
+        .network(&bench_net())
+        .macros(MACROS)
+        .policy(Policy::HsOpt)
+        .native_backend(SEED)
+        .workers(workers)
+        .queue_capacity(queue_capacity);
+    if let Some(spec) = autoscale {
+        builder = builder.autoscale(spec);
+    }
+    builder
+        .build()
+        .expect("bench spec is valid")
+        .deploy()
+        .expect("bench spec deploys")
+        .service()
+        .expect("service materializes")
+}
+
+fn drive(
+    svc: &StreamingService,
+    traffic: &[SessionTraffic],
+    arrivals: ArrivalProcess,
+    seed: u64,
+) -> LoadReport {
+    let cfg = LoadConfig { arrivals, time_scale: TIME_SCALE, chunk: CHUNK, seed };
+    drive_open_loop(svc, traffic, &cfg).expect("open-loop drive")
+}
+
+/// Regime classification for one ramp step.
+fn regime(r: &LoadReport) -> &'static str {
+    if r.serve.shed_rate() > 0.01 {
+        "shed"
+    } else if r.goodput_windows_per_sec >= 0.9 * r.offered_windows_per_sec {
+        "linear"
+    } else {
+        "knee"
+    }
+}
+
+fn main() {
+    let quick = quick_mode();
+    let sessions = if quick { 12 } else { 48 };
+    let queue_capacity = if quick { 32 } else { 128 };
+    let multipliers: &[f64] = if quick { &[0.25, 1.0, 4.0] } else { &[0.25, 0.5, 1.0, 2.0, 4.0] };
+    let worker_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let traffic = gesture_traffic(sessions, 7, 0);
+
+    // Calibrate single-worker capacity with a closed-loop run: its
+    // self-paced equilibrium *is* the sustainable session rate.
+    section(&format!("calibration — closed-loop, 1 worker, {sessions} sessions"));
+    let cal = service_for(1, queue_capacity, None)
+        .serve(&traffic, CHUNK)
+        .expect("calibration run");
+    assert_eq!(cal.finished_sessions, sessions as u64);
+    let cap_sessions_per_sec = cal.sessions_per_sec();
+    println!(
+        "1 worker sustains {cap_sessions_per_sec:7.2} sessions/s  ({:8.2} windows/s)",
+        cal.windows_per_sec()
+    );
+
+    section("open-loop ramp — offered load × calibrated per-worker capacity");
+    let mut top_mult_shed_1w = 0u64;
+    for &workers in worker_counts {
+        for &mult in multipliers {
+            let rate = mult * cap_sessions_per_sec * workers as f64;
+            let svc = service_for(workers, queue_capacity, None);
+            let r = drive(
+                &svc,
+                &traffic,
+                ArrivalProcess::Poisson { rate_per_sec: rate },
+                0x5A7 + workers as u64,
+            );
+            assert_eq!(
+                r.serve.finished_sessions, sessions as u64,
+                "overload degrades sessions, never loses them"
+            );
+            if workers == 1 && mult == multipliers[multipliers.len() - 1] {
+                top_mult_shed_1w = r.serve.windows_shed;
+            }
+            println!(
+                "{workers}w x{mult:4.2}: offered {:8.2} w/s  goodput {:8.2} w/s  {}  shed {:5.2} %  lag {:6.1} ms  [{}]",
+                r.offered_windows_per_sec,
+                r.goodput_windows_per_sec,
+                r.serve.latency.line(),
+                100.0 * r.serve.shed_rate(),
+                1e3 * r.max_lag_s,
+                regime(&r),
+            );
+            emit_json(
+                "serve_saturation",
+                &[
+                    ("workers", workers as f64),
+                    ("burst", 1.0),
+                    ("mult", mult),
+                    ("offered_wps", r.offered_windows_per_sec),
+                    ("goodput_wps", r.goodput_windows_per_sec),
+                    ("p50_ms", r.serve.latency.p50() * 1e3),
+                    ("p95_ms", r.serve.latency.p95() * 1e3),
+                    ("p99_ms", r.serve.latency.p99() * 1e3),
+                    ("shed_rate", r.serve.shed_rate()),
+                    ("events_late", r.serve.events_late as f64),
+                    ("events_overflow", r.serve.events_overflow as f64),
+                    ("events_discarded", r.serve.events_flush_discarded as f64),
+                    ("max_lag_s", r.max_lag_s),
+                ],
+            );
+        }
+    }
+    assert!(
+        top_mult_shed_1w > 0,
+        "the top of the ramp must reach the shedding regime on one worker"
+    );
+    println!("\nacceptance: 1-worker ramp reaches shedding at the top multiplier");
+
+    // Burstiness at the knee: same mean rate, arrivals concentrated into
+    // groups of 4 — admission sees the load as spikes.
+    section("burstiness at the knee — Poisson vs. 4-bursts at 1× capacity, 1 worker");
+    for burst in [1usize, 4] {
+        let rate = cap_sessions_per_sec;
+        let arrivals = if burst == 1 {
+            ArrivalProcess::Poisson { rate_per_sec: rate }
+        } else {
+            ArrivalProcess::Bursty { rate_per_sec: rate, burst }
+        };
+        let svc = service_for(1, queue_capacity, None);
+        let r = drive(&svc, &traffic, arrivals, 0xB00);
+        println!(
+            "burst {burst}: goodput {:8.2} w/s  {}  shed {:5.2} %",
+            r.goodput_windows_per_sec,
+            r.serve.latency.line(),
+            100.0 * r.serve.shed_rate(),
+        );
+        emit_json(
+            "serve_saturation_burst",
+            &[
+                ("burst", burst as f64),
+                ("offered_wps", r.offered_windows_per_sec),
+                ("goodput_wps", r.goodput_windows_per_sec),
+                ("p99_ms", r.serve.latency.p99() * 1e3),
+                ("shed_rate", r.serve.shed_rate()),
+            ],
+        );
+    }
+
+    // Autoscaler at the knee: start at 1 worker under 1.5× single-worker
+    // load; the SLO breach must grow the pool and pull p99 back down
+    // versus the pinned single worker.
+    section("autoscaler at the knee — fixed 1 worker vs. SLO-driven growth to 4");
+    let rate = 1.5 * cap_sessions_per_sec;
+    let fixed = {
+        let svc = service_for(1, queue_capacity, None);
+        drive(&svc, &traffic, ArrivalProcess::Poisson { rate_per_sec: rate }, 0xA5C)
+    };
+    let auto = {
+        let spec = AutoscaleSpec {
+            enabled: true,
+            min_workers: 1,
+            max_workers: 4,
+            slo_p99_ms: 10.0,
+            interval_ms: 5,
+            queue_high: 4,
+            hysteresis_ticks: 3,
+        };
+        let svc = service_for(1, queue_capacity, Some(spec));
+        drive(&svc, &traffic, ArrivalProcess::Poisson { rate_per_sec: rate }, 0xA5C)
+    };
+    assert_eq!(auto.serve.finished_sessions, sessions as u64);
+    assert!(
+        auto.serve.scale_ups > 0 && auto.serve.workers_peak > 1,
+        "a sustained 1.5x overload must trip the autoscaler"
+    );
+    for (name, r) in [("fixed 1w", &fixed), ("autoscale", &auto)] {
+        println!(
+            "{name}: peak {} workers ({} ups, {} downs)  goodput {:8.2} w/s  {}  shed {:5.2} %",
+            r.serve.workers_peak,
+            r.serve.scale_ups,
+            r.serve.scale_downs,
+            r.goodput_windows_per_sec,
+            r.serve.latency.line(),
+            100.0 * r.serve.shed_rate(),
+        );
+    }
+    emit_json(
+        "serve_saturation_autoscale",
+        &[
+            ("fixed_p99_ms", fixed.serve.latency.p99() * 1e3),
+            ("auto_p99_ms", auto.serve.latency.p99() * 1e3),
+            ("auto_peak_workers", auto.serve.workers_peak as f64),
+            ("auto_scale_ups", auto.serve.scale_ups as f64),
+            ("auto_scale_downs", auto.serve.scale_downs as f64),
+            ("fixed_goodput_wps", fixed.goodput_windows_per_sec),
+            ("auto_goodput_wps", auto.goodput_windows_per_sec),
+        ],
+    );
+    if !quick {
+        // Timing-sensitive, so asserted only in the full run: with 4×
+        // the compute, the grown pool must beat the pinned worker's p99.
+        assert!(
+            auto.serve.latency.p99() < fixed.serve.latency.p99(),
+            "autoscaler must reduce p99 at the knee (auto {:.1} ms vs fixed {:.1} ms)",
+            auto.serve.latency.p99() * 1e3,
+            fixed.serve.latency.p99() * 1e3,
+        );
+    }
+    println!("\nacceptance: autoscaler grows at the knee and reduces p99 vs the fixed pool");
+}

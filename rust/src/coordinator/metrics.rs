@@ -1,9 +1,12 @@
 //! Run-level metrics aggregation and reporting.
 
+use std::collections::VecDeque;
+
 use crate::cim::EnergyCounters;
 use crate::util::bench::fmt_time;
+use crate::util::rng::splitmix64;
 use crate::util::si;
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, percentile_sorted};
 
 /// Energy breakdown of a run (picojoules).
 #[derive(Debug, Clone, Copy, Default)]
@@ -160,38 +163,110 @@ impl RunMetrics {
     }
 }
 
+/// Default [`LatencyStats`] retention bound: plenty for exact percentiles
+/// over any bench/test run while keeping week-long serve runs at a fixed
+/// memory footprint.
+const LATENCY_DEFAULT_CAP: usize = 1 << 16;
+
 /// Latency sample accumulator with percentile reporting — the serve tier
 /// pushes one observation per completed micro-window (admission →
 /// completion, host wall-clock).
-#[derive(Debug, Clone, Default)]
+///
+/// Samples are kept *sorted on insert*, so every percentile query —
+/// including the three in [`LatencyStats::line`] — is O(1) with zero
+/// sorts (the earlier implementation cloned and re-sorted the full vector
+/// per query). Retention is bounded: up to the capacity every observation
+/// is kept and percentiles are exact; beyond it, reservoir sampling
+/// (Algorithm R, seeded deterministically) keeps a uniform subsample so
+/// long-running services get unbiased percentile estimates at a fixed
+/// memory footprint. [`LatencyStats::count`] always reports the total
+/// observed, not the retained subset.
+#[derive(Debug, Clone)]
 pub struct LatencyStats {
-    samples: Vec<f64>,
+    /// Retained samples, ascending.
+    sorted: Vec<f64>,
+    /// Total observations (retained or not).
+    seen: u64,
+    /// Sum over *all* observations (exact mean survives eviction).
+    sum: f64,
+    /// Retention bound.
+    cap: usize,
+    /// SplitMix64 state for reservoir eviction decisions.
+    rng_state: u64,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        LatencyStats::new()
+    }
 }
 
 impl LatencyStats {
-    /// Empty accumulator.
+    /// Empty accumulator with the default retention bound.
     pub fn new() -> Self {
-        LatencyStats::default()
+        LatencyStats::with_capacity(LATENCY_DEFAULT_CAP)
+    }
+
+    /// Empty accumulator retaining at most `cap` samples.
+    pub fn with_capacity(cap: usize) -> Self {
+        LatencyStats {
+            sorted: Vec::new(),
+            seen: 0,
+            sum: 0.0,
+            cap: cap.max(1),
+            rng_state: 0x1A7E_4C5A_75_u64,
+        }
     }
 
     /// Absorb one latency observation (seconds).
     pub fn push(&mut self, seconds: f64) {
-        self.samples.push(seconds);
+        self.seen += 1;
+        self.sum += seconds;
+        if self.sorted.len() < self.cap {
+            self.insert_sorted(seconds);
+            return;
+        }
+        // Algorithm R: keep the newcomer with probability cap/seen,
+        // evicting a uniformly random retained sample.
+        let j = splitmix64(&mut self.rng_state) % self.seen;
+        if (j as usize) < self.cap {
+            self.sorted.remove(j as usize);
+            self.insert_sorted(seconds);
+        }
     }
 
-    /// Absorb another accumulator's samples.
+    fn insert_sorted(&mut self, seconds: f64) {
+        let at = self.sorted.partition_point(|&x| x < seconds);
+        self.sorted.insert(at, seconds);
+    }
+
+    /// Absorb another accumulator's samples (one merge-sort pass; evicts
+    /// uniformly back down to this accumulator's bound if needed).
     pub fn merge(&mut self, other: &LatencyStats) {
-        self.samples.extend_from_slice(&other.samples);
+        self.seen += other.seen;
+        self.sum += other.sum;
+        self.sorted.extend_from_slice(&other.sorted);
+        self.sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        while self.sorted.len() > self.cap {
+            let j = splitmix64(&mut self.rng_state) % self.sorted.len() as u64;
+            self.sorted.remove(j as usize);
+        }
     }
 
-    /// Observations recorded.
+    /// Observations recorded (total, including evicted ones).
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.seen as usize
     }
 
-    /// Percentile in seconds (NaN when empty).
+    /// Samples currently retained for percentile queries.
+    pub fn retained(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// Percentile in seconds (NaN when empty). O(1): the samples are
+    /// already sorted.
     pub fn pct(&self, p: f64) -> f64 {
-        percentile(&self.samples, p)
+        percentile_sorted(&self.sorted, p)
     }
 
     /// Median latency (seconds).
@@ -209,12 +284,13 @@ impl LatencyStats {
         self.pct(99.0)
     }
 
-    /// Mean latency in seconds (0 when empty).
+    /// Mean latency in seconds (0 when empty). Exact over all
+    /// observations, even evicted ones.
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.seen == 0 {
             return 0.0;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        self.sum / self.seen as f64
     }
 
     /// One aligned report line: `p50 … p95 … p99 … (n windows)`.
@@ -226,6 +302,49 @@ impl LatencyStats {
             fmt_time(self.p99()),
             self.count(),
         )
+    }
+}
+
+/// Rolling latency window: the last `cap` observations, for control loops
+/// that must react to *recent* behaviour (the serve autoscaler's rolling
+/// p99) rather than the whole-run distribution [`LatencyStats`] keeps.
+///
+/// Percentile queries sort a bounded copy — one sort of at most `cap`
+/// elements per control tick, independent of run length.
+#[derive(Debug, Clone)]
+pub struct LatencyWindow {
+    buf: VecDeque<f64>,
+    cap: usize,
+}
+
+impl LatencyWindow {
+    /// Window over the last `cap` observations.
+    pub fn new(cap: usize) -> Self {
+        LatencyWindow { buf: VecDeque::new(), cap: cap.max(1) }
+    }
+
+    /// Absorb one observation, evicting the oldest when full.
+    pub fn push(&mut self, seconds: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(seconds);
+    }
+
+    /// Observations currently in the window.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no observations have been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Percentile over the window (NaN when empty).
+    pub fn pct(&self, p: f64) -> f64 {
+        let v: Vec<f64> = self.buf.iter().copied().collect();
+        percentile(&v, p)
     }
 }
 
@@ -310,5 +429,55 @@ mod tests {
         l.merge(&other);
         assert_eq!(l.count(), 101);
         assert!(l.line().contains("101 windows"));
+    }
+
+    #[test]
+    fn latency_stats_capacity_bound_holds() {
+        let mut l = LatencyStats::with_capacity(16);
+        for i in 0..100_000u64 {
+            l.push((i % 1000) as f64 * 1e-6);
+        }
+        assert_eq!(l.count(), 100_000, "count reports total seen");
+        assert!(l.retained() <= 16, "retained {} exceeds cap", l.retained());
+        // The reservoir subsample still lies inside the observed range.
+        let (lo, hi) = (0.0, 999.0 * 1e-6);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            let v = l.pct(p);
+            assert!((lo..=hi).contains(&v), "p{p} = {v} outside [{lo}, {hi}]");
+        }
+        // Exact mean survives eviction: values cycle 0..1000 uniformly.
+        assert!((l.mean() - 499.5e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_stats_merge_respects_capacity() {
+        let mut a = LatencyStats::with_capacity(8);
+        let mut b = LatencyStats::with_capacity(8);
+        for i in 0..8 {
+            a.push(i as f64);
+            b.push((i + 100) as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 16);
+        assert!(a.retained() <= 8);
+        // Retained samples stay sorted after merge eviction.
+        let p0 = a.pct(0.0);
+        let p100 = a.pct(100.0);
+        assert!(p0 <= p100);
+    }
+
+    #[test]
+    fn latency_window_rolls() {
+        let mut w = LatencyWindow::new(4);
+        assert!(w.is_empty());
+        assert!(w.pct(99.0).is_nan());
+        for i in 1..=10 {
+            w.push(i as f64);
+        }
+        assert_eq!(w.len(), 4);
+        // Only 7..=10 remain.
+        assert!((w.pct(0.0) - 7.0).abs() < 1e-12);
+        assert!((w.pct(100.0) - 10.0).abs() < 1e-12);
+        assert!((w.pct(50.0) - 8.5).abs() < 1e-12);
     }
 }

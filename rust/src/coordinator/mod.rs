@@ -26,6 +26,6 @@ pub mod scheduler;
 
 pub use buffers::{BankArray, MergeShiftUnit};
 pub use engine::{BatchResult, Engine, SampleBuffers, SamplePlan, ShardLedger, WindowTotals};
-pub use metrics::{EnergyBreakdown, LatencyStats, RunMetrics};
+pub use metrics::{EnergyBreakdown, LatencyStats, LatencyWindow, RunMetrics};
 pub use pipeline::{Coordinator, InferenceResult};
 pub use scheduler::{LayerPlan, Schedule, Scheduler};

@@ -10,6 +10,7 @@
 //! share the conv-adjacency cache.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, ensure};
 
@@ -17,7 +18,7 @@ use crate::coordinator::engine::{BackendFactory, Engine, SamplePlan};
 use crate::coordinator::Coordinator;
 use crate::energy::{SystemConfig, SystemEnergyModel};
 use crate::runtime::{artifacts_dir, NativeScnn, Runtime, ScnnRunner, StepBackend};
-use crate::serve::{ServiceConfig, StreamingService};
+use crate::serve::{AutoscaleConfig, ServiceConfig, StreamingService};
 use crate::snn::events::AdjacencyCache;
 use crate::snn::{LayerKind, Network};
 use crate::Result;
@@ -202,7 +203,25 @@ impl Deployment {
         const GESTURE_SESSION_US: u64 = 100_000;
         cfg.session.step_us = (GESTURE_SESSION_US / self.net.timesteps as u64).max(1);
         cfg.session.frames_per_window = self.net.timesteps.min(4);
+        // Spec overrides replace the derived clock (harness sweeps, slow
+        // sensors); the reorder slack tracks whichever step wins.
+        if let Some(step) = s.step_us {
+            cfg.session.step_us = step;
+        }
+        if let Some(frames) = s.frames_per_window {
+            cfg.session.frames_per_window = frames;
+        }
         cfg.session.max_lateness_us = cfg.session.step_us * 2;
+        let a = &s.autoscale;
+        cfg.autoscale = AutoscaleConfig {
+            enabled: a.enabled,
+            min_workers: a.min_workers,
+            max_workers: a.max_workers,
+            slo_p99_s: a.slo_p99_ms * 1e-3,
+            interval: Duration::from_millis(a.interval_ms),
+            queue_high: a.queue_high,
+            hysteresis_ticks: a.hysteresis_ticks,
+        };
         match self.net.layers[0].kind {
             LayerKind::Conv { in_ch, in_h, in_w, .. } if in_ch == 2 => {
                 ensure!(
@@ -319,6 +338,27 @@ mod tests {
             dep.plan().energy.sop_pj(4, 9, None) < nominal.plan().energy.sop_pj(4, 9, None),
             "low-voltage SOPs must price cheaper"
         );
+    }
+
+    #[test]
+    fn clock_override_and_autoscale_reach_the_service_config() {
+        let mut spec = small_spec();
+        spec.serve.step_us = Some(12_500);
+        spec.serve.frames_per_window = Some(2);
+        spec.serve.autoscale.enabled = true;
+        spec.serve.autoscale.max_workers = 8;
+        spec.serve.autoscale.slo_p99_ms = 5.0;
+        let cfg = spec.deploy().unwrap().service_config().unwrap();
+        assert_eq!(cfg.session.step_us, 12_500, "override beats the derived clock");
+        assert_eq!(cfg.session.frames_per_window, 2);
+        assert_eq!(
+            cfg.session.max_lateness_us, 25_000,
+            "reorder slack tracks the overridden step"
+        );
+        assert!(cfg.autoscale.enabled);
+        assert_eq!(cfg.autoscale.max_workers, 8);
+        assert!((cfg.autoscale.slo_p99_s - 0.005).abs() < 1e-12);
+        assert_eq!(cfg.autoscale.interval, Duration::from_millis(10));
     }
 
     #[test]

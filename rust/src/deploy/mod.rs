@@ -36,6 +36,6 @@ pub mod toml;
 
 pub use handle::Deployment;
 pub use spec::{
-    parse_policy, policy_key, BackendSpec, DeploymentBuilder, DeploymentSpec, LayerDef,
-    NetworkSpec, ServeSpec, SubstrateSpec,
+    parse_policy, policy_key, AutoscaleSpec, BackendSpec, DeploymentBuilder, DeploymentSpec,
+    LayerDef, NetworkSpec, ServeSpec, SubstrateSpec,
 };

@@ -375,11 +375,52 @@ impl BackendSpec {
 
 // -------------------------------------------------------------- serve spec
 
+/// SLO autoscaler section of a [`ServeSpec`]: grows/shrinks the worker
+/// pool from queue depth and rolling p99 (see
+/// [`crate::serve::AutoscaleConfig`] for the control semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleSpec {
+    /// Master switch; when off the pool stays at `workers`.
+    pub enabled: bool,
+    /// Pool floor the autoscaler never shrinks below.
+    pub min_workers: usize,
+    /// Pool ceiling the autoscaler never grows past (bounds the spawned
+    /// threads).
+    pub max_workers: usize,
+    /// Latency objective: rolling p99 window latency above this grows the
+    /// pool (milliseconds).
+    pub slo_p99_ms: f64,
+    /// Control-loop tick interval (milliseconds).
+    pub interval_ms: u64,
+    /// Queued windows per active worker considered overloaded even when
+    /// the latency SLO still holds.
+    pub queue_high: usize,
+    /// Consecutive calm ticks required before one shrink step
+    /// (hysteresis: a single quiet tick must not flap the pool).
+    pub hysteresis_ticks: u32,
+}
+
+impl Default for AutoscaleSpec {
+    fn default() -> Self {
+        AutoscaleSpec {
+            enabled: false,
+            min_workers: 1,
+            max_workers: 16,
+            slo_p99_ms: 20.0,
+            interval_ms: 10,
+            queue_high: 8,
+            hysteresis_ticks: 5,
+        }
+    }
+}
+
 /// Serve-tier section: worker pool, queues, residency, admission mode,
-/// and early exit (see [`crate::serve::ServiceConfig`] for semantics).
+/// early exit, session clock overrides, and the SLO autoscaler (see
+/// [`crate::serve::ServiceConfig`] for semantics).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeSpec {
-    /// Worker threads (each constructs its own backend).
+    /// Worker threads (each constructs its own backend). With the
+    /// autoscaler enabled this is the *starting* pool size.
     pub workers: usize,
     /// Global bound on admitted-but-unexecuted windows.
     pub queue_capacity: usize,
@@ -398,6 +439,15 @@ pub struct ServeSpec {
     pub early_exit_margin: f64,
     /// Executed windows required before early exit may trigger.
     pub early_exit_min_windows: u64,
+    /// Session clock override: microseconds per SNN timestep. `None`
+    /// derives it from the network's timestep count (the historical
+    /// behaviour, pinned in `deploy::handle`).
+    pub step_us: Option<u64>,
+    /// Session clock override: timesteps per emitted micro-window.
+    /// `None` derives it from the network (`timesteps.min(4)`).
+    pub frames_per_window: Option<usize>,
+    /// SLO-driven worker-pool autoscaler.
+    pub autoscale: AutoscaleSpec,
 }
 
 impl Default for ServeSpec {
@@ -410,6 +460,9 @@ impl Default for ServeSpec {
             deterministic_admission: false,
             early_exit_margin: 0.0,
             early_exit_min_windows: 2,
+            step_us: None,
+            frames_per_window: None,
+            autoscale: AutoscaleSpec::default(),
         }
     }
 }
@@ -427,6 +480,45 @@ impl ServeSpec {
             "serve: early-exit margin {} must be >= 0",
             self.early_exit_margin
         );
+        if let Some(step) = self.step_us {
+            ensure!(
+                (1..=10_000_000).contains(&step),
+                "serve: step_us {step} outside 1..=10000000 (10 s/timestep cap)"
+            );
+        }
+        if let Some(frames) = self.frames_per_window {
+            ensure!(
+                (1..=1024).contains(&frames),
+                "serve: frames_per_window {frames} outside 1..=1024"
+            );
+        }
+        let a = &self.autoscale;
+        if a.enabled {
+            ensure!(a.min_workers >= 1, "serve: autoscale min_workers must be >= 1");
+            ensure!(
+                a.min_workers <= self.workers && self.workers <= a.max_workers,
+                "serve: workers {} outside the autoscale range {}..={}",
+                self.workers,
+                a.min_workers,
+                a.max_workers
+            );
+            ensure!(
+                a.max_workers <= 256,
+                "serve: autoscale max_workers {} outside 1..=256",
+                a.max_workers
+            );
+            ensure!(
+                a.slo_p99_ms > 0.0,
+                "serve: autoscale slo_p99_ms {} must be > 0",
+                a.slo_p99_ms
+            );
+            ensure!(a.interval_ms >= 1, "serve: autoscale interval_ms must be >= 1");
+            ensure!(a.queue_high >= 1, "serve: autoscale queue_high must be >= 1");
+            ensure!(
+                a.hysteresis_ticks >= 1,
+                "serve: autoscale hysteresis_ticks must be >= 1"
+            );
+        }
         Ok(())
     }
 }
@@ -633,6 +725,29 @@ impl DeploymentBuilder {
         self
     }
 
+    /// Override the serve session clock: microseconds per SNN timestep
+    /// and timesteps per emitted micro-window.
+    pub fn session_clock(mut self, step_us: u64, frames_per_window: usize) -> Self {
+        self.serve.step_us = Some(step_us);
+        self.serve.frames_per_window = Some(frames_per_window);
+        self
+    }
+
+    /// Replace the whole autoscaler section.
+    pub fn autoscale(mut self, spec: AutoscaleSpec) -> Self {
+        self.serve.autoscale = spec;
+        self
+    }
+
+    /// Shortcut: enable the autoscaler with a p99 latency objective (ms)
+    /// and a pool ceiling, keeping the remaining knobs at their defaults.
+    pub fn autoscale_slo(mut self, slo_p99_ms: f64, max_workers: usize) -> Self {
+        self.serve.autoscale.enabled = true;
+        self.serve.autoscale.slo_p99_ms = slo_p99_ms;
+        self.serve.autoscale.max_workers = max_workers;
+        self
+    }
+
     /// Validate and produce the spec.
     pub fn build(self) -> Result<DeploymentSpec> {
         let spec = DeploymentSpec {
@@ -710,6 +825,19 @@ mod tests {
         assert!(base().vdd(1.5).build().is_err(), "vdd envelope");
         assert!(base().timesteps(0).build().is_err(), "zero timesteps");
         assert!(base().early_exit(-0.5, 1).build().is_err(), "negative margin");
+        assert!(base().session_clock(0, 4).build().is_err(), "zero step_us");
+        assert!(base().session_clock(6_250, 0).build().is_err(), "zero frames");
+        assert!(
+            base().workers(8).autoscale_slo(10.0, 4).build().is_err(),
+            "workers above autoscale ceiling"
+        );
+        assert!(base().autoscale_slo(0.0, 4).build().is_err(), "zero SLO");
+        let bad = AutoscaleSpec {
+            enabled: true,
+            hysteresis_ticks: 0,
+            ..AutoscaleSpec::default()
+        };
+        assert!(base().workers(1).autoscale(bad).build().is_err(), "zero hysteresis");
         let mut bad_bits = base().build().unwrap();
         bad_bits.network.layers[0] = LayerDef::Fc {
             name: "f".into(),
@@ -738,6 +866,30 @@ mod tests {
             assert_eq!(parse_policy(policy_key(p)).unwrap(), p);
         }
         assert!(parse_policy("nope").is_err());
+    }
+
+    #[test]
+    fn autoscale_and_clock_builder_paths() {
+        let spec = DeploymentSpec::builder("t")
+            .fc("f", 4, 10, Resolution::new(4, 8))
+            .workers(2)
+            .session_clock(12_500, 2)
+            .autoscale_slo(5.0, 8)
+            .build()
+            .unwrap();
+        assert_eq!(spec.serve.step_us, Some(12_500));
+        assert_eq!(spec.serve.frames_per_window, Some(2));
+        assert!(spec.serve.autoscale.enabled);
+        assert_eq!(spec.serve.autoscale.max_workers, 8);
+        assert!((spec.serve.autoscale.slo_p99_ms - 5.0).abs() < 1e-12);
+        // Disabled autoscaler skips range coupling: workers above the
+        // (unused) ceiling stays valid.
+        let off = DeploymentSpec::builder("t")
+            .fc("f", 4, 10, Resolution::new(4, 8))
+            .workers(32)
+            .build()
+            .unwrap();
+        assert!(!off.serve.autoscale.enabled);
     }
 
     #[test]

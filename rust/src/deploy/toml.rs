@@ -55,6 +55,15 @@
 //! deterministic = false
 //! exit_margin = 0.0
 //! exit_min_windows = 2
+//! # step_us = 6250           # session clock override: us per SNN timestep
+//! # frames_per_window = 4    #   ... and timesteps per micro-window
+//! # autoscale = true         # SLO worker-pool autoscaler (default off)
+//! # autoscale_min = 1        #   pool floor
+//! # autoscale_max = 16       #   pool ceiling (threads spawned up front)
+//! # slo_p99_ms = 20.0        #   grow when rolling p99 exceeds this
+//! # autoscale_interval_ms = 10      # control-loop tick
+//! # autoscale_queue_high = 8        # queued windows/worker = overloaded
+//! # autoscale_hysteresis = 5        # calm ticks before one shrink step
 //! ```
 
 use std::collections::BTreeSet;
@@ -68,8 +77,8 @@ use crate::Result;
 
 use super::presets;
 use super::spec::{
-    parse_policy, policy_key, BackendSpec, DeploymentSpec, LayerDef, NetworkSpec, ServeSpec,
-    SubstrateSpec,
+    parse_policy, policy_key, AutoscaleSpec, BackendSpec, DeploymentSpec, LayerDef, NetworkSpec,
+    ServeSpec, SubstrateSpec,
 };
 
 // ------------------------------------------------------------ strict doc
@@ -361,6 +370,29 @@ pub fn spec_from_doc(doc: &Doc) -> Result<DeploymentSpec> {
     if let Some(m) = t.take_u64("serve.exit_min_windows")? {
         serve.early_exit_min_windows = m;
     }
+    serve.step_us = t.take_u64("serve.step_us")?;
+    serve.frames_per_window = t.take_usize("serve.frames_per_window")?;
+    if let Some(on) = t.take_bool("serve.autoscale")? {
+        serve.autoscale.enabled = on;
+    }
+    if let Some(m) = t.take_usize("serve.autoscale_min")? {
+        serve.autoscale.min_workers = m;
+    }
+    if let Some(m) = t.take_usize("serve.autoscale_max")? {
+        serve.autoscale.max_workers = m;
+    }
+    if let Some(s) = t.take_float("serve.slo_p99_ms")? {
+        serve.autoscale.slo_p99_ms = s;
+    }
+    if let Some(i) = t.take_u64("serve.autoscale_interval_ms")? {
+        serve.autoscale.interval_ms = i;
+    }
+    if let Some(q) = t.take_usize("serve.autoscale_queue_high")? {
+        serve.autoscale.queue_high = q;
+    }
+    if let Some(h) = t.take_u32("serve.autoscale_hysteresis")? {
+        serve.autoscale.hysteresis_ticks = h;
+    }
 
     t.finish()?;
     let spec = DeploymentSpec { network, substrate, backend, serve };
@@ -470,6 +502,24 @@ impl DeploymentSpec {
             "exit_min_windows = {}",
             self.serve.early_exit_min_windows
         );
+        // Optional overrides are emitted only when set, so configs written
+        // before these knobs existed serialize byte-identically.
+        if let Some(step) = self.serve.step_us {
+            let _ = writeln!(out, "step_us = {step}");
+        }
+        if let Some(frames) = self.serve.frames_per_window {
+            let _ = writeln!(out, "frames_per_window = {frames}");
+        }
+        let a = &self.serve.autoscale;
+        if *a != AutoscaleSpec::default() {
+            let _ = writeln!(out, "autoscale = {}", a.enabled);
+            let _ = writeln!(out, "autoscale_min = {}", a.min_workers);
+            let _ = writeln!(out, "autoscale_max = {}", a.max_workers);
+            let _ = writeln!(out, "slo_p99_ms = {}", a.slo_p99_ms);
+            let _ = writeln!(out, "autoscale_interval_ms = {}", a.interval_ms);
+            let _ = writeln!(out, "autoscale_queue_high = {}", a.queue_high);
+            let _ = writeln!(out, "autoscale_hysteresis = {}", a.hysteresis_ticks);
+        }
         out
     }
 }
@@ -581,6 +631,64 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err}").contains("backend.seed"), "got: {err}");
+    }
+
+    #[test]
+    fn clock_and_autoscale_keys_round_trip() {
+        let spec = DeploymentSpec::builder("toml-auto")
+            .timesteps(8)
+            .conv("C1", 2, 4, 3, 4, 1, 48, 48, Resolution::new(4, 9))
+            .fc("F1", 4 * 12 * 12, 10, Resolution::new(5, 10))
+            .workers(2)
+            .session_clock(12_500, 2)
+            .autoscale_slo(5.0, 8)
+            .build()
+            .unwrap();
+        let text = spec.to_toml();
+        assert!(text.contains("step_us = 12500"), "got:\n{text}");
+        assert!(text.contains("autoscale = true"), "got:\n{text}");
+        let parsed = DeploymentSpec::from_toml_str(&text).unwrap();
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.to_toml(), text, "serialization is a fixed point");
+        // Default spec emits none of the optional keys.
+        let plain = demo_spec().to_toml();
+        assert!(!plain.contains("step_us"), "got:\n{plain}");
+        assert!(!plain.contains("autoscale"), "got:\n{plain}");
+    }
+
+    #[test]
+    fn autoscale_toml_parses_every_knob() {
+        let spec = DeploymentSpec::from_toml_str(
+            "[network]\npreset = \"serve-demo\"\n[serve]\nworkers = 2\n\
+             autoscale = true\nautoscale_min = 2\nautoscale_max = 12\n\
+             slo_p99_ms = 7.5\nautoscale_interval_ms = 3\n\
+             autoscale_queue_high = 6\nautoscale_hysteresis = 4\n\
+             step_us = 5000\nframes_per_window = 8\n",
+        )
+        .unwrap();
+        let a = &spec.serve.autoscale;
+        assert!(a.enabled);
+        assert_eq!((a.min_workers, a.max_workers), (2, 12));
+        assert!((a.slo_p99_ms - 7.5).abs() < 1e-12);
+        assert_eq!(a.interval_ms, 3);
+        assert_eq!((a.queue_high, a.hysteresis_ticks), (6, 4));
+        assert_eq!(spec.serve.step_us, Some(5_000));
+        assert_eq!(spec.serve.frames_per_window, Some(8));
+    }
+
+    #[test]
+    fn invalid_clock_override_rejected_via_toml() {
+        let err = DeploymentSpec::from_toml_str(
+            "[network]\npreset = \"serve-demo\"\n[serve]\nstep_us = 0\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("step_us"), "got: {err}");
+        let err = DeploymentSpec::from_toml_str(
+            "[network]\npreset = \"serve-demo\"\n[serve]\nworkers = 9\n\
+             autoscale = true\nautoscale_max = 4\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("autoscale range"), "got: {err}");
     }
 
     #[test]

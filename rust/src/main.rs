@@ -7,6 +7,8 @@
 //! flexspim serve     [--config F] [--sessions N] [--workers W] [--jitter-us J]
 //!                    [--budget-kb B] [--macros M] [--policy P] [--seed S] [--full]
 //!                    [--deterministic] [--exit-margin X]
+//!                    [--step-us U] [--frames-per-window K]
+//!                    [--autoscale] [--autoscale-max W] [--slo-p99-ms X]
 //! flexspim train     [--steps N] [--lr X] [--seed S] [--out PATH]
 //! flexspim map       [--config F] [--macros M]
 //! flexspim simulate  [--wbits W] [--pbits P] [--nc C] [--neurons N] [--fanin F]
@@ -69,6 +71,23 @@ fn specs() -> Vec<Spec> {
             takes_value: true,
             help: "serve: early-exit confidence margin (0 = off)",
         },
+        Spec { name: "step-us", takes_value: true, help: "serve: session timestep in us" },
+        Spec {
+            name: "frames-per-window",
+            takes_value: true,
+            help: "serve: timesteps per micro-window",
+        },
+        Spec { name: "autoscale", takes_value: false, help: "serve: enable the SLO autoscaler" },
+        Spec {
+            name: "autoscale-max",
+            takes_value: true,
+            help: "serve: autoscaler pool ceiling (implies --autoscale)",
+        },
+        Spec {
+            name: "slo-p99-ms",
+            takes_value: true,
+            help: "serve: autoscaler p99 latency objective in ms (implies --autoscale)",
+        },
         Spec { name: "full", takes_value: false, help: "use the full paper SCNN topology" },
         Spec { name: "help", takes_value: false, help: "show usage" },
     ]
@@ -128,6 +147,23 @@ fn spec_from_args(args: &Args, default_preset: &str) -> Result<DeploymentSpec> {
     }
     if let Some(m) = args.get_parsed::<f64>("exit-margin").map_err(|e| anyhow!(e))? {
         spec.serve.early_exit_margin = m;
+    }
+    if let Some(step) = args.get_parsed::<u64>("step-us").map_err(|e| anyhow!(e))? {
+        spec.serve.step_us = Some(step);
+    }
+    if let Some(frames) = parsed("frames-per-window")? {
+        spec.serve.frames_per_window = Some(frames);
+    }
+    if args.flag("autoscale") {
+        spec.serve.autoscale.enabled = true;
+    }
+    if let Some(max) = parsed("autoscale-max")? {
+        spec.serve.autoscale.enabled = true;
+        spec.serve.autoscale.max_workers = max;
+    }
+    if let Some(slo) = args.get_parsed::<f64>("slo-p99-ms").map_err(|e| anyhow!(e))? {
+        spec.serve.autoscale.enabled = true;
+        spec.serve.autoscale.slo_p99_ms = slo;
     }
     spec.validate()?;
     Ok(spec)
@@ -241,9 +277,23 @@ fn run_serve(args: &Args) -> Result<()> {
         deployment.network().name,
         deployment.spec().substrate.macros,
         deployment.spec().substrate.policy,
+        svc.config().workers,
         svc.plan().net.total_vmem_bits(),
         svc.config().resident_budget_bits,
     );
+    let auto = &svc.config().autoscale;
+    if auto.enabled {
+        println!(
+            "autoscaler: {}..{} workers, p99 SLO {:.1} ms, tick {} ms, \
+             queue-high {}/worker, hysteresis {}",
+            auto.min_workers,
+            auto.max_workers,
+            auto.slo_p99_s * 1e3,
+            auto.interval.as_millis(),
+            auto.queue_high,
+            auto.hysteresis_ticks,
+        );
+    }
     let traffic = gesture_traffic(sessions, seed ^ 0x7EA4_11FC, jitter_us);
     let report = svc.serve(&traffic, 64)?;
     println!("{}", report.report());

@@ -70,6 +70,22 @@ impl MicroWindow {
 }
 
 /// The per-session reorder/jitter buffer.
+///
+/// Drop accounting partitions exactly: every valid event offered to
+/// [`ReorderBuffer::push`] increments `pushed`, and from then on lands in
+/// exactly one of `delivered` (emitted inside a window), the pending
+/// buffer, `late_dropped`, `overflow_dropped`, or `flush_discarded` — so
+/// at any point
+///
+/// ```text
+/// delivered + pending + late_dropped + overflow_dropped
+///     + flush_discarded == pushed
+/// ```
+///
+/// and after [`ReorderBuffer::flush`] the pending term is zero. The
+/// saturation harness relies on this invariant to report honest loss
+/// figures; a property test in `rust/tests/property_ingest.rs` enforces
+/// it under bursty/out-of-order arrivals.
 #[derive(Debug, Clone)]
 pub struct ReorderBuffer {
     cfg: IngestConfig,
@@ -80,12 +96,22 @@ pub struct ReorderBuffer {
     watermark_us: u64,
     /// Windows have been emitted up to this time.
     emitted_until_us: u64,
+    /// Valid events offered to [`ReorderBuffer::push`] (accepted or
+    /// dropped; excludes `Err` rejections, which never enter the ledger).
+    pub pushed: u64,
     /// Events accepted into the buffer.
     pub accepted: u64,
+    /// Events handed out inside an emitted [`MicroWindow`].
+    pub delivered: u64,
     /// Events dropped because their window was already emitted.
     pub late_dropped: u64,
     /// Events dropped because the buffer was full.
     pub overflow_dropped: u64,
+    /// Events discarded at [`ReorderBuffer::flush`] because they were
+    /// timestamped past the declared stream end. Distinct from
+    /// `late_dropped`: these arrived in time but the session closed before
+    /// their window — end-of-stream truncation, not transport lateness.
+    pub flush_discarded: u64,
 }
 
 impl ReorderBuffer {
@@ -97,9 +123,12 @@ impl ReorderBuffer {
             pending: Vec::new(),
             watermark_us: 0,
             emitted_until_us: 0,
+            pushed: 0,
             accepted: 0,
+            delivered: 0,
             late_dropped: 0,
             overflow_dropped: 0,
+            flush_discarded: 0,
         }
     }
 
@@ -135,6 +164,7 @@ impl ReorderBuffer {
             self.cfg.max_future_us,
             self.emitted_until_us
         );
+        self.pushed += 1;
         if e.t_us < self.emitted_until_us {
             self.late_dropped += 1;
             return Ok(false);
@@ -199,9 +229,11 @@ impl ReorderBuffer {
             let t1 = end_us.saturating_add(1);
             out.push(self.take_window(t1, t1, true));
         }
-        // Anything left was timestamped past the declared end: treat like
-        // late arrivals.
-        self.late_dropped += self.pending.len() as u64;
+        // Anything left was timestamped past the declared end. These
+        // events were *not* late — they arrived within slack but the
+        // session closed before their window — so they get their own
+        // counter to keep the drop partition honest.
+        self.flush_discarded += self.pending.len() as u64;
         self.pending.clear();
         Ok(out)
     }
@@ -221,6 +253,7 @@ impl ReorderBuffer {
         }
         self.pending = keep;
         events.sort_by_key(|e| e.t_us);
+        self.delivered += events.len() as u64;
         self.emitted_until_us = t1;
         MicroWindow { t0_us: t0, t1_us: t1, events, last }
     }
@@ -402,7 +435,8 @@ mod tests {
         assert!(w[0].last);
         assert_eq!(w[0].span_us(), 0, "no post-end stride");
         assert!(w[0].events.is_empty());
-        assert_eq!(b.late_dropped, 1, "the t=250 event is past the declared end");
+        assert_eq!(b.late_dropped, 0, "the t=250 event was never late");
+        assert_eq!(b.flush_discarded, 1, "it was truncated by the early close");
     }
 
     #[test]
@@ -412,6 +446,32 @@ mod tests {
         b.push(ev(500, 0, 0)).unwrap();
         let w = b.flush(100).unwrap();
         assert_eq!(w.last().unwrap().events.len(), 1);
-        assert_eq!(b.late_dropped, 1, "t=500 is past the declared end");
+        assert_eq!(b.late_dropped, 0, "t=500 arrived in time");
+        assert_eq!(b.flush_discarded, 1, "t=500 is past the declared end");
+    }
+
+    #[test]
+    fn drop_counters_partition_every_pushed_event() {
+        // One event per fate: delivered, late, overflow, flush-discarded —
+        // plus an Err rejection that must stay outside the ledger.
+        let mut b = ReorderBuffer::new(IngestConfig { max_pending: 2, ..cfg(100, 0) });
+        assert!(b.push(ev(50, 0, 0)).unwrap()); // delivered eventually
+        assert!(b.push(ev(250, 1, 1)).unwrap()); // flush-discarded later
+        assert!(!b.push(ev(60, 2, 2)).unwrap(), "buffer full"); // overflow
+        assert!(b.push(ev(999, 9, 9)).is_err(), "out of bounds: not pushed");
+        let _ = b.poll(); // frontier advances to 200 (watermark 250)
+        assert!(!b.push(ev(10, 3, 3)).unwrap(), "window emitted"); // late
+        b.flush(200).unwrap();
+        assert_eq!(b.pushed, 4);
+        assert_eq!(b.delivered, 1);
+        assert_eq!(b.late_dropped, 1);
+        assert_eq!(b.overflow_dropped, 1);
+        assert_eq!(b.flush_discarded, 1);
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(
+            b.delivered + b.late_dropped + b.overflow_dropped + b.flush_discarded,
+            b.pushed,
+            "drop counters partition exactly"
+        );
     }
 }

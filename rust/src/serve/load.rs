@@ -1,0 +1,411 @@
+//! Open-loop saturation harness for the streaming service.
+//!
+//! The synchronous driver behind [`StreamingService::serve`] is
+//! *closed-loop*: `ingest()` only returns after admission ran, so a slow
+//! service implicitly throttles its own offered load and every throughput
+//! number it produces is really a self-paced equilibrium. Saturation
+//! behaviour — where does goodput stop tracking offered load, when does
+//! shedding start — only shows up under an **open-loop** generator that
+//! commits to an arrival schedule up front and holds to it against the
+//! wall clock regardless of how the service is coping.
+//!
+//! This module is that generator:
+//!
+//! * [`ArrivalProcess`] — session arrivals as a Poisson process (i.i.d.
+//!   exponential gaps) or a bursty variant (whole groups of sessions
+//!   landing at the same instant, group arrivals Poisson) at the same
+//!   mean rate, so burstiness is isolated from load.
+//! * Each session gets a **virtual event clock**: its DVS events are
+//!   scheduled relative to its own arrival time, with intra-session
+//!   microsecond timestamps compressed by `time_scale` (10 → the
+//!   100-ms gesture plays out in 10 ms of wall time). Chunks and the
+//!   close are due at the *virtual* time of their newest event, exactly
+//!   as a live sensor would emit them.
+//! * [`drive_open_loop`] — merges every session's schedule into one
+//!   deterministic timeline, sleeps until each item is due (recording
+//!   how far behind it falls when the service back-pressures the ingest
+//!   path), and reports offered vs. delivered rates side by side.
+//!
+//! The harness deliberately reuses the public session API
+//! (`open_session` / `ingest` / `close_session`) — it measures the same
+//! front door a client would hit, not a private fast path. The stepped
+//! ramp over offered load and worker-pool sizes lives in
+//! `rust/benches/serve_saturation.rs`.
+
+use std::time::{Duration, Instant};
+
+use anyhow::ensure;
+
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::service::{ServeReport, SessionTraffic, StreamingService};
+
+/// Session arrival process for the open-loop generator.
+///
+/// Both variants have the same mean rate; `Bursty` concentrates it into
+/// simultaneous groups, which stresses admission control and the jitter
+/// buffers at identical average load.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: exponential inter-arrival gaps at
+    /// `rate_per_sec` sessions per wall-clock second.
+    Poisson {
+        /// Mean session arrival rate (sessions / wall second).
+        rate_per_sec: f64,
+    },
+    /// Groups of `burst` sessions arriving at the same instant; the
+    /// groups themselves are Poisson at `rate_per_sec / burst`, keeping
+    /// the mean session rate at `rate_per_sec`.
+    Bursty {
+        /// Mean session arrival rate (sessions / wall second).
+        rate_per_sec: f64,
+        /// Sessions per burst (≥ 1; 1 degenerates to `Poisson`).
+        burst: usize,
+    },
+}
+
+impl ArrivalProcess {
+    /// Mean session arrival rate in sessions per wall second.
+    pub fn rate_per_sec(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_per_sec } => rate_per_sec,
+            ArrivalProcess::Bursty { rate_per_sec, .. } => rate_per_sec,
+        }
+    }
+
+    /// Sample `n` session start times (wall seconds from the drive
+    /// epoch), non-decreasing. Deterministic in `rng`.
+    pub fn sample_starts(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        // Inverse-CDF exponential gap; `1.0 - f64()` keeps ln() off zero.
+        let mut exp_gap = |rate: f64| -(1.0 - rng.f64()).ln() / rate;
+        let mut starts = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Poisson { rate_per_sec } => {
+                let rate = rate_per_sec.max(1e-9);
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += exp_gap(rate);
+                    starts.push(t);
+                }
+            }
+            ArrivalProcess::Bursty { rate_per_sec, burst } => {
+                let burst = burst.max(1);
+                let group_rate = (rate_per_sec / burst as f64).max(1e-9);
+                let mut t = 0.0;
+                while starts.len() < n {
+                    t += exp_gap(group_rate);
+                    for _ in 0..burst.min(n - starts.len()) {
+                        starts.push(t);
+                    }
+                }
+            }
+        }
+        starts
+    }
+}
+
+/// Open-loop generator configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadConfig {
+    /// Session arrival process (wall-clock rate).
+    pub arrivals: ArrivalProcess,
+    /// Intra-session time compression: virtual event microseconds are
+    /// divided by this to get wall time (10 → sessions play 10× faster
+    /// than the sensor recorded them). Must be positive.
+    pub time_scale: f64,
+    /// Events delivered per `ingest()` call (≥ 1); a chunk is due when
+    /// its newest event's virtual time arrives.
+    pub chunk: usize,
+    /// Seed for the arrival-process draws.
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> LoadConfig {
+        LoadConfig {
+            arrivals: ArrivalProcess::Poisson { rate_per_sec: 50.0 },
+            time_scale: 1.0,
+            chunk: 64,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// One timeline item; `order` breaks due-time ties so the merged
+/// schedule is a deterministic total order (open before first chunk
+/// before close within a session).
+struct Scheduled {
+    due_s: f64,
+    order: u64,
+    action: Action,
+}
+
+enum Action {
+    Open(usize),
+    Ingest { session: usize, lo: usize, hi: usize },
+    Close(usize),
+}
+
+/// What the open-loop drive observed, offered and delivered side by side.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Mean offered session arrival rate (wall sessions/s).
+    pub offered_sessions_per_sec: f64,
+    /// Offered micro-window rate: session rate × mean windows per
+    /// session under the service's session clock.
+    pub offered_windows_per_sec: f64,
+    /// Offered event rate (wall events/s).
+    pub offered_events_per_sec: f64,
+    /// Windows actually executed per wall second of the drive.
+    pub goodput_windows_per_sec: f64,
+    /// Wall time of the whole drive (last item through drain).
+    pub drive_wall_s: f64,
+    /// Worst lateness of a schedule item (seconds the generator fell
+    /// behind its own timeline; > 0 means the ingest path back-pressured
+    /// the open loop).
+    pub max_lag_s: f64,
+    /// The service's own report for the run.
+    pub serve: ServeReport,
+}
+
+/// Build the merged per-session schedule for `traffic` under `cfg`.
+fn build_schedule(
+    traffic: &[SessionTraffic],
+    starts: &[f64],
+    time_scale: f64,
+    chunk: usize,
+) -> Vec<Scheduled> {
+    let mut schedule = Vec::new();
+    let mut order = 0u64;
+    let mut push = |due_s: f64, order: &mut u64, action: Action| {
+        schedule.push(Scheduled { due_s, order: *order, action });
+        *order += 1;
+    };
+    let to_wall = |t_us: u64| t_us as f64 / (time_scale * 1e6);
+    for (i, t) in traffic.iter().enumerate() {
+        let start = starts[i];
+        push(start, &mut order, Action::Open(i));
+        let mut lo = 0;
+        while lo < t.events.len() {
+            let hi = (lo + chunk).min(t.events.len());
+            // Arrival-order delivery: the chunk is due when its newest
+            // event would have left the (jittered) transport.
+            let newest = t.events[lo..hi].iter().map(|e| e.t_us).max().unwrap_or(0);
+            push(start + to_wall(newest), &mut order, Action::Ingest { session: i, lo, hi });
+            lo = hi;
+        }
+        push(start + to_wall(t.end_us), &mut order, Action::Close(i));
+    }
+    schedule.sort_by(|a, b| {
+        a.due_s
+            .partial_cmp(&b.due_s)
+            .expect("schedule times are finite")
+            .then(a.order.cmp(&b.order))
+    });
+    schedule
+}
+
+/// Drive `traffic` through `svc` open-loop: spawn the worker pool, hold
+/// to the arrival schedule against the wall clock, drain, report.
+///
+/// The generator never waits on the service: if an item comes due while
+/// a previous `ingest()` is still blocked on the state lock, the
+/// schedule slips and the slip is recorded in
+/// [`LoadReport::max_lag_s`] rather than silently stretching the
+/// offered load.
+pub fn drive_open_loop(
+    svc: &StreamingService,
+    traffic: &[SessionTraffic],
+    cfg: &LoadConfig,
+) -> Result<LoadReport> {
+    ensure!(
+        cfg.time_scale.is_finite() && cfg.time_scale > 0.0,
+        "load time_scale must be positive and finite (got {})",
+        cfg.time_scale
+    );
+    let chunk = cfg.chunk.max(1);
+    let mut rng = Rng::new(cfg.seed);
+    let starts = cfg.arrivals.sample_starts(traffic.len(), &mut rng);
+    let schedule = build_schedule(traffic, &starts, cfg.time_scale, chunk);
+
+    let (drive_wall_s, max_lag_s) = svc.run_with(|s| {
+        let epoch = Instant::now();
+        let mut max_lag_s = 0.0f64;
+        for item in &schedule {
+            let due = epoch + Duration::from_secs_f64(item.due_s.max(0.0));
+            let now = Instant::now();
+            if now < due {
+                std::thread::sleep(due - now);
+            } else {
+                max_lag_s = max_lag_s.max((now - due).as_secs_f64());
+            }
+            match item.action {
+                Action::Open(i) => s.open_session(traffic[i].id, traffic[i].label)?,
+                Action::Ingest { session, lo, hi } => {
+                    s.ingest(traffic[session].id, &traffic[session].events[lo..hi])?
+                }
+                Action::Close(i) => s.close_session(traffic[i].id, traffic[i].end_us)?,
+            }
+        }
+        s.drain()?;
+        Ok((epoch.elapsed().as_secs_f64(), max_lag_s))
+    })?;
+
+    // Offered load under the service's session clock: a session spanning
+    // `end_us` holds `end_us / window_us + 1` micro-windows (the final
+    // flush always emits a last marker).
+    let session = &svc.config().session;
+    let window_us = (session.step_us * session.frames_per_window as u64).max(1);
+    let n = traffic.len().max(1) as f64;
+    let mean_windows: f64 = traffic
+        .iter()
+        .map(|t| (t.end_us / window_us + 1) as f64)
+        .sum::<f64>()
+        / n;
+    let mean_events: f64 = traffic.iter().map(|t| t.events.len() as f64).sum::<f64>() / n;
+    let rate = cfg.arrivals.rate_per_sec();
+    let serve = svc.report(drive_wall_s);
+    Ok(LoadReport {
+        offered_sessions_per_sec: rate,
+        offered_windows_per_sec: rate * mean_windows,
+        offered_events_per_sec: rate * mean_events,
+        goodput_windows_per_sec: serve.windows_done as f64 / drive_wall_s.max(1e-9),
+        drive_wall_s,
+        max_lag_s,
+        serve,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Policy;
+    use crate::serve::service::gesture_traffic;
+    use crate::serve::ServiceConfig;
+    use crate::snn::{LayerSpec, Network, Resolution};
+
+    fn small_net() -> Network {
+        let r = Resolution::new(4, 9);
+        Network::new(
+            "load-test",
+            vec![
+                LayerSpec::conv("C1", 2, 4, 3, 4, 1, 48, 48, r),
+                LayerSpec::fc("F1", 4 * 12 * 12, 10, Resolution::new(5, 10)),
+            ],
+            16,
+        )
+    }
+
+    fn service(workers: usize, cfg_mut: impl FnOnce(&mut ServiceConfig)) -> StreamingService {
+        let mut cfg = ServiceConfig::nominal(workers);
+        cfg_mut(&mut cfg);
+        StreamingService::native(small_net(), 0xBEEF, 2, Policy::HsOpt, cfg)
+    }
+
+    #[test]
+    fn poisson_starts_are_sorted_with_the_right_mean() {
+        let p = ArrivalProcess::Poisson { rate_per_sec: 100.0 };
+        let mut rng = Rng::new(7);
+        let starts = p.sample_starts(2000, &mut rng);
+        assert_eq!(starts.len(), 2000);
+        assert!(starts.windows(2).all(|w| w[0] <= w[1]), "starts are sorted");
+        assert!(starts[0] > 0.0);
+        // 2000 arrivals at 100/s span ~20 s; the sample mean of i.i.d.
+        // exponential gaps concentrates tightly at this count.
+        let span = starts.last().unwrap();
+        assert!((15.0..25.0).contains(span), "span {span} outside ±25% of 20 s");
+    }
+
+    #[test]
+    fn bursty_starts_share_group_instants_at_the_same_mean_rate() {
+        let p = ArrivalProcess::Bursty { rate_per_sec: 100.0, burst: 4 };
+        let mut rng = Rng::new(7);
+        let starts = p.sample_starts(200, &mut rng);
+        assert_eq!(starts.len(), 200);
+        for group in starts.chunks(4) {
+            assert!(
+                group.iter().all(|&t| t == group[0]),
+                "every burst member shares the group instant"
+            );
+        }
+        let distinct = starts.chunks(4).count();
+        assert_eq!(distinct, 50);
+        let span = starts.last().unwrap();
+        assert!((1.0..4.0).contains(span), "50 groups at 25/s span ~2 s, got {span}");
+        assert_eq!(p.rate_per_sec(), 100.0);
+    }
+
+    #[test]
+    fn schedule_orders_open_before_chunks_before_close() {
+        let traffic = gesture_traffic(3, 11, 0);
+        let starts = [0.5, 0.0, 0.25];
+        let schedule = build_schedule(&traffic, &starts, 10.0, 64);
+        let mut opened = [false; 3];
+        let mut closed = [false; 3];
+        let mut last_due = f64::NEG_INFINITY;
+        for item in &schedule {
+            assert!(item.due_s >= last_due, "schedule is time-sorted");
+            last_due = item.due_s;
+            match item.action {
+                Action::Open(i) => opened[i] = true,
+                Action::Ingest { session, .. } => {
+                    assert!(opened[session] && !closed[session]);
+                }
+                Action::Close(i) => {
+                    assert!(opened[i] && !closed[i]);
+                    closed[i] = true;
+                }
+            }
+        }
+        assert!(opened.iter().all(|&o| o) && closed.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn open_loop_drive_completes_every_session() {
+        let svc = service(2, |_| {});
+        let traffic = gesture_traffic(4, 21, 0);
+        let cfg = LoadConfig {
+            arrivals: ArrivalProcess::Poisson { rate_per_sec: 200.0 },
+            time_scale: 100.0,
+            chunk: 64,
+            seed: 3,
+        };
+        let report = drive_open_loop(&svc, &traffic, &cfg).unwrap();
+        assert_eq!(report.serve.finished_sessions, 4);
+        assert_eq!(report.serve.windows_shed, 0);
+        assert!(report.goodput_windows_per_sec > 0.0);
+        assert!(report.offered_windows_per_sec > 0.0);
+        assert!(report.drive_wall_s > 0.0);
+        assert!(report.max_lag_s >= 0.0);
+        // In-order delivery within jitter slack: nothing dropped.
+        assert_eq!(report.serve.events_dropped, 0);
+    }
+
+    #[test]
+    fn zero_capacity_sheds_under_open_loop_without_stalling() {
+        let svc = service(1, |c| c.queue_capacity = 0);
+        let traffic = gesture_traffic(3, 33, 0);
+        let cfg = LoadConfig {
+            arrivals: ArrivalProcess::Bursty { rate_per_sec: 500.0, burst: 3 },
+            time_scale: 200.0,
+            chunk: 128,
+            seed: 9,
+        };
+        let report = drive_open_loop(&svc, &traffic, &cfg).unwrap();
+        assert!(report.serve.windows_shed > 0, "zero capacity must shed");
+        assert_eq!(
+            report.serve.finished_sessions, 3,
+            "shedding degrades sessions, never stalls them"
+        );
+    }
+
+    #[test]
+    fn nonpositive_time_scale_is_rejected() {
+        let svc = service(1, |_| {});
+        let traffic = gesture_traffic(1, 1, 0);
+        let cfg = LoadConfig { time_scale: 0.0, ..LoadConfig::default() };
+        let err = drive_open_loop(&svc, &traffic, &cfg).unwrap_err();
+        assert!(err.to_string().contains("time_scale"));
+    }
+}

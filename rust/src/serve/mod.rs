@@ -24,8 +24,13 @@
 //!   dispatch for reproducible residency reports), newest-first load
 //!   shedding, early-exit on the rolling classification's confidence
 //!   margin, an idle-session reaper with id recycling, a worker pool
-//!   multiplexing sessions over [`crate::runtime::StepBackend`]s, and
+//!   multiplexing sessions over [`crate::runtime::StepBackend`]s, an
+//!   SLO-driven autoscaler that grows/shrinks the active pool, and
 //!   p50/p95/p99 window-latency + sessions/sec instrumentation.
+//! * [`load`] — an open-loop saturation harness: Poisson/bursty arrival
+//!   processes drive sessions against the wall clock regardless of
+//!   service backpressure, exposing the linear → knee → shedding
+//!   regimes that closed-loop replay hides.
 //!
 //! Correctness anchor: a sample streamed through the service in aligned
 //! micro-windows is bit-identical (spikes, final vmem, prediction, SOPs,
@@ -33,12 +38,14 @@
 //! sequential coordinator — pinned by `rust/tests/integration_serve.rs`.
 
 pub mod ingest;
+pub mod load;
 pub mod session;
 pub mod service;
 
 pub use ingest::{IngestConfig, MicroWindow, ReorderBuffer};
+pub use load::{drive_open_loop, ArrivalProcess, LoadConfig, LoadReport};
 pub use service::{
-    gesture_traffic, ServeReport, ServiceConfig, SessionResult, SessionTraffic,
+    gesture_traffic, AutoscaleConfig, ServeReport, ServiceConfig, SessionResult, SessionTraffic,
     StreamingService,
 };
 pub use session::{

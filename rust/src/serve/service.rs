@@ -33,6 +33,12 @@
 //! the ready queue at the back. Overload is handled by shedding newest
 //! windows once the global or per-session queue bound is hit — sessions
 //! degrade by skipping time rather than stalling the service.
+//!
+//! With the SLO autoscaler ([`AutoscaleConfig`]) enabled, a control
+//! thread grows the active pool when the rolling p99 window latency
+//! breaches the objective (or the queue runs deep) and shrinks it after
+//! a hysteresis run of calm ticks; workers above the current target park
+//! on the pool condvar and own no backend until first dispatched.
 
 use std::collections::{BTreeSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -41,7 +47,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure};
 
 use crate::coordinator::engine::{BackendFactory, SampleBuffers, SamplePlan, WindowTotals};
-use crate::coordinator::metrics::{LatencyStats, RunMetrics};
+use crate::coordinator::metrics::{LatencyStats, LatencyWindow, RunMetrics};
 use crate::dataflow::Policy;
 use crate::events::{DvsEvent, GestureClass, GestureGenerator};
 use crate::runtime::{NativeScnn, StateSnapshot, StepBackend};
@@ -55,10 +61,95 @@ use super::session::{
     encode_window, window_frames, QueuedWindow, SessionConfig, SessionManager, WindowOutcome,
 };
 
+/// Rolling-latency window feeding the autoscaler's p99 (recent windows
+/// only — the whole-run [`LatencyStats`] would average a spike away).
+const ROLLING_WINDOW: usize = 512;
+
+/// SLO-driven worker-pool autoscaler configuration.
+///
+/// The control loop ticks every `interval`: when the rolling p99 window
+/// latency exceeds the SLO — or the queue is deeper than `queue_high`
+/// windows per active worker — the pool grows one worker (up to
+/// `max_workers`); after `hysteresis_ticks` consecutive *calm* ticks
+/// (p99 under half the SLO and a near-empty queue) it shrinks one
+/// (down to `min_workers`). Threads are spawned up to `max_workers` up
+/// front; workers above the current target park on the service condvar
+/// and construct no backend until first dispatched, so an unused ceiling
+/// costs one idle thread each, not one backend each.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Master switch; when off the pool stays at `ServiceConfig::workers`.
+    pub enabled: bool,
+    /// Pool floor.
+    pub min_workers: usize,
+    /// Pool ceiling (threads spawned up front).
+    pub max_workers: usize,
+    /// Rolling-p99 latency objective in seconds.
+    pub slo_p99_s: f64,
+    /// Control-loop tick interval.
+    pub interval: Duration,
+    /// Queued windows per active worker considered overloaded even while
+    /// the latency SLO still holds.
+    pub queue_high: usize,
+    /// Consecutive calm ticks required before one shrink step.
+    pub hysteresis_ticks: u32,
+}
+
+impl AutoscaleConfig {
+    /// The disabled configuration (fixed pool), with the same knob
+    /// defaults as [`crate::deploy::AutoscaleSpec`].
+    pub fn disabled() -> AutoscaleConfig {
+        AutoscaleConfig {
+            enabled: false,
+            min_workers: 1,
+            max_workers: 16,
+            slo_p99_s: 0.020,
+            interval: Duration::from_millis(10),
+            queue_high: 8,
+            hysteresis_ticks: 5,
+        }
+    }
+
+    /// One control decision, pure for testability: given the current
+    /// target pool size, the rolling p99 (NaN when no samples yet), the
+    /// queued-window depth, and the consecutive-calm-tick count, return
+    /// `(new_target, new_calm_ticks)`.
+    ///
+    /// Grow resets the calm streak; a NaN p99 (no recent samples) never
+    /// triggers the latency condition on its own — an idle service must
+    /// not flap on the absence of data.
+    pub fn decide(
+        &self,
+        current: usize,
+        p99_s: f64,
+        queued: usize,
+        calm_ticks: u32,
+    ) -> (usize, u32) {
+        let cur = current.max(1);
+        let overloaded = p99_s > self.slo_p99_s || queued > self.queue_high * cur;
+        if overloaded {
+            if current < self.max_workers {
+                return (current + 1, 0);
+            }
+            return (current, 0);
+        }
+        let calm = p99_s < 0.5 * self.slo_p99_s && queued * 2 <= self.queue_high * cur;
+        if calm && current > self.min_workers {
+            let streak = calm_ticks + 1;
+            if streak >= self.hysteresis_ticks {
+                return (current - 1, 0);
+            }
+            return (current, streak);
+        }
+        (current, 0)
+    }
+}
+
 /// Service-level configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// Worker threads (each constructs its own backend).
+    /// Worker threads (each constructs its own backend). With the
+    /// autoscaler enabled this is the *starting* pool size.
     pub workers: usize,
     /// Global bound on admitted-but-unexecuted windows; admissions beyond
     /// it are shed.
@@ -85,13 +176,16 @@ pub struct ServiceConfig {
     /// Executed windows required before early exit may trigger (guards
     /// against deciding on a single noisy window).
     pub early_exit_min_windows: u64,
+    /// SLO-driven worker-pool autoscaler (disabled by default).
+    pub autoscale: AutoscaleConfig,
     /// Session parameters (shared by all sessions).
     pub session: SessionConfig,
 }
 
 impl ServiceConfig {
     /// Nominal operating point: deep queues, budget derived from the
-    /// modeled chip capacity, 48×48 gesture sessions, no early exit.
+    /// modeled chip capacity, 48×48 gesture sessions, no early exit,
+    /// fixed pool.
     pub fn nominal(workers: usize) -> ServiceConfig {
         ServiceConfig {
             workers,
@@ -101,6 +195,7 @@ impl ServiceConfig {
             deterministic_admission: false,
             early_exit_margin: 0.0,
             early_exit_min_windows: 2,
+            autoscale: AutoscaleConfig::disabled(),
             session: SessionConfig::default_48(),
         }
     }
@@ -169,6 +264,18 @@ struct ServiceState {
     /// outstanding seq; early-exit drops prune their seqs so the order
     /// never stalls on a skipped window.
     outstanding: BTreeSet<u64>,
+    /// Active pool size: workers with `idx >= target_workers` park on the
+    /// condvar and pick no work. Fixed at `cfg.workers` unless the
+    /// autoscaler is driving it.
+    target_workers: usize,
+    /// Largest pool size the autoscaler reached.
+    peak_workers: usize,
+    /// Autoscaler grow steps taken.
+    scale_ups: u64,
+    /// Autoscaler shrink steps taken.
+    scale_downs: u64,
+    /// Recent window latencies feeding the autoscaler's rolling p99.
+    recent_latency: LatencyWindow,
     shutdown: bool,
     first_error: Option<anyhow::Error>,
 }
@@ -203,6 +310,12 @@ impl StreamingService {
         }
         let sessions =
             SessionManager::new(cfg.session.clone(), &plan.net, cfg.resident_budget_bits);
+        let start_workers = if cfg.autoscale.enabled {
+            cfg.workers
+                .clamp(cfg.autoscale.min_workers.max(1), cfg.autoscale.max_workers.max(1))
+        } else {
+            cfg.workers.max(1)
+        };
         StreamingService {
             plan,
             factory,
@@ -215,6 +328,11 @@ impl StreamingService {
                 shed: 0,
                 next_seq: 0,
                 outstanding: BTreeSet::new(),
+                target_workers: start_workers,
+                peak_workers: start_workers,
+                scale_ups: 0,
+                scale_downs: 0,
+                recent_latency: LatencyWindow::new(ROLLING_WINDOW),
                 shutdown: false,
                 first_error: None,
             }),
@@ -383,28 +501,17 @@ impl StreamingService {
         }
     }
 
-    /// Record a fatal error and wake everyone.
-    fn fail(&self, e: anyhow::Error) {
-        let mut st = self.state.lock().unwrap();
-        if st.first_error.is_none() {
-            st.first_error = Some(e);
-        }
-        st.shutdown = true;
-        drop(st);
-        self.signal.notify_all();
-    }
-
     /// Worker body: steal the next ready session's window, run it on this
     /// worker's backend with the session's restored state, commit.
-    fn worker_loop(&self) {
+    ///
+    /// `idx` is this worker's position in the spawned pool: workers with
+    /// `idx >= target_workers` park on the condvar (the autoscaler moves
+    /// the target; commits and scale steps wake them). The backend is
+    /// constructed lazily at first dispatch so a parked worker above the
+    /// target never pays for one.
+    fn worker_loop(&self, idx: usize) {
         let make: &BackendFactory = self.factory.as_ref();
-        let mut backend = match make() {
-            Ok(b) => b,
-            Err(e) => {
-                self.fail(e);
-                return;
-            }
-        };
+        let mut backend: Option<Box<dyn StepBackend>> = None;
         let mut bufs = SampleBuffers::default();
         loop {
             let job = {
@@ -412,6 +519,10 @@ impl StreamingService {
                 loop {
                     if st.shutdown {
                         return;
+                    }
+                    if idx >= st.target_workers {
+                        st = self.signal.wait(st).unwrap();
+                        continue;
                     }
                     // Dispatch policy: FIFO over ready sessions, or — in
                     // deterministic-admission mode — strictly the window
@@ -470,8 +581,31 @@ impl StreamingService {
                 self.signal.notify_all();
             }
 
+            if backend.is_none() {
+                match make() {
+                    Ok(b) => backend = Some(b),
+                    Err(e) => {
+                        // The job is already accounted in-flight: undo that
+                        // under the same lock that records the error, so
+                        // drain() never sees in_flight == 0 with it unset.
+                        let mut st = self.state.lock().unwrap();
+                        st.in_flight -= 1;
+                        if st.first_error.is_none() {
+                            st.first_error = Some(e);
+                        }
+                        st.shutdown = true;
+                        drop(st);
+                        self.signal.notify_all();
+                        return;
+                    }
+                }
+            }
             let t0 = Instant::now();
-            let outcome = self.run_window(backend.as_mut(), &mut bufs, &job);
+            let outcome = self.run_window(
+                backend.as_mut().expect("constructed above").as_mut(),
+                &mut bufs,
+                &job,
+            );
             let wall_s = t0.elapsed().as_secs_f64();
 
             match outcome {
@@ -479,6 +613,7 @@ impl StreamingService {
                     let mut st = self.state.lock().unwrap();
                     let st_ref = &mut *st;
                     let latency_s = job.enqueued_at.elapsed().as_secs_f64();
+                    st_ref.recent_latency.push(latency_s);
                     let mut dropped_seqs = Vec::new();
                     let requeue = {
                         let s = st_ref
@@ -589,6 +724,94 @@ impl StreamingService {
         self.signal.notify_all();
     }
 
+    /// One autoscaler decision applied to the live state; returns the
+    /// updated calm-tick streak. Split from the paced control loop so the
+    /// decision path is testable without wall-clock timing.
+    fn autoscale_tick(&self, calm_ticks: u32) -> u32 {
+        let a = &self.cfg.autoscale;
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return calm_ticks;
+        }
+        let p99 = st.recent_latency.pct(99.0);
+        let current = st.target_workers;
+        let (target, calm) = a.decide(current, p99, st.queued_windows, calm_ticks);
+        if target != current {
+            st.target_workers = target;
+            if target > current {
+                st.scale_ups += 1;
+                st.peak_workers = st.peak_workers.max(target);
+            } else {
+                st.scale_downs += 1;
+            }
+            drop(st);
+            // Grown: parked workers above the old target are waiting on
+            // the condvar. Shrunk: nothing to wake — workers above the
+            // new target park themselves at their next pick attempt.
+            self.signal.notify_all();
+        }
+        calm
+    }
+
+    /// The autoscaler control loop: decide every `interval`, exit
+    /// promptly on shutdown (paced by `wait_timeout`, so `stop()` never
+    /// waits out a long tick).
+    fn autoscale_loop(&self) {
+        let mut calm_ticks = 0u32;
+        loop {
+            calm_ticks = self.autoscale_tick(calm_ticks);
+            let deadline = Instant::now() + self.cfg.autoscale.interval;
+            let mut st = self.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g, _timeout) = self.signal.wait_timeout(st, deadline - now).unwrap();
+                st = g;
+            }
+        }
+    }
+
+    /// Spawn the worker pool (plus the autoscaler thread when enabled),
+    /// run `driver` against the live service, then stop the pool. This is
+    /// how every traffic driver — [`Self::serve`]'s synchronous one, the
+    /// open-loop generator in [`crate::serve::load`] — borrows the pool:
+    /// the driver ingests/closes sessions and typically ends with
+    /// [`Self::drain`]. A worker failure surfacing indirectly through the
+    /// driver (e.g. as "service is shut down") is replaced by the root
+    /// cause.
+    pub fn run_with<T>(
+        &self,
+        driver: impl FnOnce(&StreamingService) -> Result<T>,
+    ) -> Result<T> {
+        let n_threads = if self.cfg.autoscale.enabled {
+            self.cfg.autoscale.max_workers.max(1)
+        } else {
+            self.cfg.workers.max(1)
+        };
+        std::thread::scope(|scope| -> Result<T> {
+            for idx in 0..n_threads {
+                scope.spawn(move || self.worker_loop(idx));
+            }
+            if self.cfg.autoscale.enabled {
+                scope.spawn(|| self.autoscale_loop());
+            }
+            let outcome = driver(self);
+            self.stop();
+            match outcome {
+                Err(e) => {
+                    let mut st = self.state.lock().unwrap();
+                    Err(st.first_error.take().unwrap_or(e))
+                }
+                ok => ok,
+            }
+        })
+    }
+
     /// The synthetic-traffic ingest driver: open all sessions, interleave
     /// event delivery `chunk` events at a time round-robin across sessions
     /// (simulating concurrent streams), close every session, drain.
@@ -623,23 +846,7 @@ impl StreamingService {
     pub fn serve(&self, traffic: &[SessionTraffic], chunk: usize) -> Result<ServeReport> {
         let chunk = chunk.max(1);
         let t0 = Instant::now();
-        let n_workers = self.cfg.workers.max(1);
-        std::thread::scope(|scope| -> Result<()> {
-            for _ in 0..n_workers {
-                scope.spawn(|| self.worker_loop());
-            }
-            let outcome = self.drive(traffic, chunk);
-            self.stop();
-            match outcome {
-                // A worker failure can surface indirectly (e.g. the driver
-                // sees "service is shut down"); prefer the root cause.
-                Err(e) => {
-                    let mut st = self.state.lock().unwrap();
-                    Err(st.first_error.take().unwrap_or(e))
-                }
-                ok => ok,
-            }
-        })?;
+        self.run_with(|svc| svc.drive(traffic, chunk))?;
         Ok(self.report(t0.elapsed().as_secs_f64()))
     }
 
@@ -672,7 +879,9 @@ impl StreamingService {
         let mut metrics = RunMetrics::default();
         let mut latency = LatencyStats::new();
         let mut windows_done = 0u64;
-        let mut events_dropped = 0u64;
+        let mut events_late = 0u64;
+        let mut events_overflow = 0u64;
+        let mut events_flush_discarded = 0u64;
         let mut finished = 0u64;
         let mut rolling_correct = 0u64;
         let mut early_exits = 0u64;
@@ -683,7 +892,9 @@ impl StreamingService {
             metrics.merge(&s.metrics());
             latency.merge(&s.latency);
             windows_done += s.windows_done;
-            events_dropped += s.ingest.late_dropped + s.ingest.overflow_dropped;
+            events_late += s.ingest.late_dropped;
+            events_overflow += s.ingest.overflow_dropped;
+            events_flush_discarded += s.ingest.flush_discarded;
             if s.finished {
                 finished += 1;
             }
@@ -702,11 +913,17 @@ impl StreamingService {
         metrics.energy.movement_pj += dram_bits as f64 * self.plan.energy.cfg.e_dram_pj_bit;
         ServeReport {
             workers: self.cfg.workers,
+            workers_peak: st.peak_workers,
+            scale_ups: st.scale_ups,
+            scale_downs: st.scale_downs,
             sessions: st.sessions.len() as u64,
             finished_sessions: finished,
             windows_done,
             windows_shed: st.shed,
-            events_dropped,
+            events_dropped: events_late + events_overflow + events_flush_discarded,
+            events_late,
+            events_overflow,
+            events_flush_discarded,
             rolling_correct,
             early_exits,
             windows_saved,
@@ -754,8 +971,14 @@ pub struct SessionResult {
 /// Result of a traffic run through [`StreamingService::serve`].
 #[derive(Debug, Clone)]
 pub struct ServeReport {
-    /// Worker threads configured.
+    /// Worker threads configured (the starting pool under autoscaling).
     pub workers: usize,
+    /// Largest pool size reached (equals `workers` without autoscaling).
+    pub workers_peak: usize,
+    /// Autoscaler grow steps taken.
+    pub scale_ups: u64,
+    /// Autoscaler shrink steps taken.
+    pub scale_downs: u64,
     /// Sessions opened.
     pub sessions: u64,
     /// Sessions whose final window executed (or was shed after close).
@@ -764,8 +987,16 @@ pub struct ServeReport {
     pub windows_done: u64,
     /// Windows shed by admission control.
     pub windows_shed: u64,
-    /// Events dropped at ingest (late + overflow).
+    /// Events dropped at ingest (late + overflow + end-of-stream
+    /// discards; the split lives in the three fields below).
     pub events_dropped: u64,
+    /// Events dropped because their window had already been emitted.
+    pub events_late: u64,
+    /// Events dropped because a session's jitter buffer was full.
+    pub events_overflow: u64,
+    /// Events discarded at stream close (timestamped past the declared
+    /// end — truncation, not lateness).
+    pub events_flush_discarded: u64,
     /// Sessions whose *rolling* (label-smoothed) prediction was correct.
     pub rolling_correct: u64,
     /// Sessions that stopped early on the confidence bound.
@@ -834,10 +1065,17 @@ impl ServeReport {
                 self.early_exits, self.windows_saved, self.frames_saved,
             ));
         }
+        if self.scale_ups + self.scale_downs > 0 {
+            out.push_str(&format!(
+                "autoscaler         {} -> peak {} workers ({} ups, {} downs)\n",
+                self.workers, self.workers_peak, self.scale_ups, self.scale_downs,
+            ));
+        }
         out.push_str(&format!("window latency     {}\n", self.latency.line()));
         out.push_str(&format!(
-            "ingest drops       {} events (late + overflow)\n",
-            self.events_dropped
+            "ingest drops       {} events ({} late, {} overflow, {} end-of-stream)\n",
+            self.events_dropped, self.events_late, self.events_overflow,
+            self.events_flush_discarded,
         ));
         // Residency traffic is reported by the embedded metrics block
         // ("state spills" line) when any eviction occurred.
@@ -1105,6 +1343,108 @@ mod tests {
         assert_eq!(reaped, vec![0, 1, 2]);
         assert!(svc.session_result(0).is_none(), "reaped results are gone");
         assert_eq!(svc.reap_idle(Duration::from_secs(3600)), Vec::<u64>::new());
+    }
+
+    fn fast_autoscale(max_workers: usize) -> AutoscaleConfig {
+        AutoscaleConfig {
+            enabled: true,
+            min_workers: 1,
+            max_workers,
+            slo_p99_s: 0.010,
+            interval: Duration::from_millis(1),
+            queue_high: 8,
+            hysteresis_ticks: 3,
+        }
+    }
+
+    #[test]
+    fn autoscale_decision_grows_on_spike_and_shrinks_with_hysteresis() {
+        let a = fast_autoscale(4);
+        // Latency spike: one grow step per tick up to the ceiling.
+        let mut w = 1;
+        for _ in 0..5 {
+            let (next, calm) = a.decide(w, 0.050, 0, 0);
+            assert_eq!(calm, 0, "growth resets the calm streak");
+            assert!(next >= w);
+            w = next;
+        }
+        assert_eq!(w, 4, "grows to the ceiling, never past it");
+        // Queue depth overloads even when p99 is unknown (NaN).
+        assert_eq!(a.decide(1, f64::NAN, 100, 0), (2, 0));
+        // Calm: shrink only after hysteresis_ticks consecutive calm ticks.
+        assert_eq!(a.decide(4, 0.001, 0, 0), (4, 1));
+        assert_eq!(a.decide(4, 0.001, 0, 1), (4, 2));
+        assert_eq!(a.decide(4, 0.001, 0, 2), (3, 0));
+        // Floor: never below min_workers, streak resets at the floor.
+        assert_eq!(a.decide(1, 0.001, 0, 99), (1, 0));
+        // Mid-band (neither overloaded nor calm): hold and reset.
+        assert_eq!(a.decide(2, 0.008, 0, 2), (2, 0));
+        // NaN p99 with an empty queue: hold — no data is not calm.
+        assert_eq!(a.decide(2, f64::NAN, 0, 1), (2, 0));
+    }
+
+    #[test]
+    fn autoscale_ticks_grow_on_spike_and_shrink_after_it_passes() {
+        // Deterministic (no wall-clock): feed the rolling window by hand
+        // and step the control decisions directly.
+        let svc = service(1, |c| c.autoscale = fast_autoscale(4));
+        let target = |svc: &StreamingService| svc.state.lock().unwrap().target_workers;
+        assert_eq!(target(&svc), 1);
+
+        // Spike: p99 far above the 10-ms SLO.
+        svc.state.lock().unwrap().recent_latency.push(0.5);
+        let mut calm = 0;
+        for expect in [2, 3, 4, 4] {
+            calm = svc.autoscale_tick(calm);
+            assert_eq!(target(&svc), expect);
+        }
+        let st = svc.state.lock().unwrap();
+        assert_eq!(st.scale_ups, 3);
+        assert_eq!(st.peak_workers, 4);
+        drop(st);
+
+        // Spike passes: the ring rolls the outlier out behind calm samples.
+        {
+            let mut st = svc.state.lock().unwrap();
+            for _ in 0..ROLLING_WINDOW {
+                st.recent_latency.push(1e-4);
+            }
+        }
+        for expect in [4, 4, 3] {
+            calm = svc.autoscale_tick(calm);
+            assert_eq!(target(&svc), expect, "3-tick hysteresis before the shrink");
+        }
+        assert_eq!(svc.state.lock().unwrap().scale_downs, 1);
+        svc.stop();
+    }
+
+    #[test]
+    fn autoscaled_serve_grows_the_pool_and_matches_fixed_results() {
+        let traffic = gesture_traffic(12, 31, 0);
+        let fixed = service(1, |_| {}).serve(&traffic, 32).unwrap();
+        assert_eq!(fixed.workers_peak, 1);
+        assert_eq!(fixed.scale_ups + fixed.scale_downs, 0);
+
+        let svc = service(1, |c| {
+            c.autoscale = AutoscaleConfig {
+                // An unreachable SLO plus a hair-trigger queue bound: the
+                // sustained backlog forces growth on the first busy tick.
+                slo_p99_s: 1e-9,
+                queue_high: 1,
+                hysteresis_ticks: 1,
+                ..fast_autoscale(4)
+            };
+        });
+        let report = svc.serve(&traffic, 32).unwrap();
+        assert!(report.scale_ups > 0, "sustained overload must grow the pool");
+        assert!(report.workers_peak > 1);
+        assert_eq!(report.finished_sessions, 12);
+        assert_eq!(report.windows_shed, 0, "capacity is deep enough to never shed");
+        assert_eq!(
+            report.metrics.sops, fixed.metrics.sops,
+            "pool scaling must never change what is computed"
+        );
+        assert_eq!(report.metrics.correct, fixed.metrics.correct);
     }
 
     #[test]

@@ -76,20 +76,31 @@ impl Summary {
 
 /// Percentile of a sample via linear interpolation (sorts a copy).
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
-    assert!((0.0..=100.0).contains(&p));
     if samples.is_empty() {
         return f64::NAN;
     }
     let mut v = samples.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = p / 100.0 * (v.len() - 1) as f64;
+    percentile_sorted(&v, p)
+}
+
+/// Percentile of an already-ascending sample via linear interpolation —
+/// O(1), no copy. Callers that keep their samples sorted (e.g.
+/// [`crate::coordinator::LatencyStats`]) use this to answer p50/p95/p99
+/// without re-sorting per query.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
         let w = rank - lo as f64;
-        v[lo] * (1.0 - w) + v[hi] * w
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
     }
 }
 
@@ -141,6 +152,17 @@ mod tests {
         assert!((percentile(&v, 0.0) - 1.0).abs() < 1e-9);
         assert!((percentile(&v, 100.0) - 100.0).abs() < 1e-9);
         assert!((percentile(&v, 95.0) - 95.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_percentile() {
+        let v: Vec<f64> = (1..=100).rev().map(|i| i as f64).collect();
+        let mut sorted = v.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 12.5, 50.0, 95.0, 99.0, 100.0] {
+            assert!((percentile(&v, p) - percentile_sorted(&sorted, p)).abs() < 1e-12);
+        }
+        assert!(percentile_sorted(&[], 50.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Property tests for the ingest jitter buffer's drop accounting.
+//!
+//! The saturation harness reports loss figures straight off the
+//! [`ReorderBuffer`] counters, so they must partition *exactly*: every
+//! valid event offered to `push` ends up in precisely one of
+//! `delivered`, `late_dropped`, `overflow_dropped`, or
+//! `flush_discarded` once the session closes — no event double-counted,
+//! none lost off the books. Rejected (`Err`) pushes stay outside the
+//! ledger entirely.
+//!
+//! Driven under adversarial arrival patterns: forward-biased random
+//! walks with backward jumps (transport reordering), tiny buffers
+//! (overflow), interleaved polls (late drops), and a close point that
+//! may truncate in-flight events (flush discards).
+
+use flexspim::events::DvsEvent;
+use flexspim::serve::{IngestConfig, MicroWindow, ReorderBuffer};
+use flexspim::util::proptest_lite::{check, prop_assert, prop_eq, Config};
+
+const W: u16 = 8;
+const H: u16 = 8;
+/// Event timestamps stay below this; `max_future_us` sits far above it so
+/// the future-bound rejection never fires and every push enters the ledger.
+const T_MAX: u64 = 2048;
+
+fn consume(
+    windows: &[MicroWindow],
+    expected_t0: &mut u64,
+    delivered: &mut u64,
+    lasts: &mut u64,
+) -> Result<(), String> {
+    for w in windows {
+        prop_eq(w.t0_us, *expected_t0, "windows are contiguous")?;
+        prop_assert(w.t1_us >= w.t0_us, "window span is non-negative")?;
+        prop_assert(
+            w.events.windows(2).all(|p| p[0].t_us <= p[1].t_us),
+            "window events are time-sorted",
+        )?;
+        prop_assert(
+            w.events.iter().all(|e| w.t0_us <= e.t_us && (e.t_us < w.t1_us || w.last)),
+            "window events fall inside the window span",
+        )?;
+        *expected_t0 = w.t1_us;
+        *delivered += w.events.len() as u64;
+        *lasts += u64::from(w.last);
+    }
+    Ok(())
+}
+
+#[test]
+fn drop_counters_partition_exactly_under_adversarial_arrivals() {
+    check("ingest-partition", &Config::default(), |c| {
+        let window_us = 1 + c.rng.below(200);
+        let cfg = IngestConfig {
+            width: W,
+            height: H,
+            window_us,
+            max_lateness_us: c.rng.below(3 * window_us),
+            max_pending: 1 + c.rng.below(1 + c.size as u64 / 2) as usize,
+            max_future_us: 2 * T_MAX,
+        };
+        let mut b = ReorderBuffer::new(cfg);
+
+        let mut pushed = 0u64;
+        let mut delivered = 0u64;
+        let mut lasts = 0u64;
+        let mut expected_t0 = 0u64;
+        let mut t = 0u64;
+        for _ in 0..c.size * 4 {
+            // Forward-biased walk with occasional backward jumps, the
+            // shape a reordering transport actually produces.
+            if c.rng.chance(0.3) {
+                t = t.saturating_sub(c.rng.below(2 * window_us));
+            } else {
+                t = (t + c.rng.below(window_us + 1)).min(T_MAX);
+            }
+            if c.rng.chance(0.05) {
+                // Invalid input: rejected, and must never enter the ledger.
+                let before = b.pushed;
+                prop_assert(
+                    b.push(DvsEvent { t_us: t, x: W, y: 0, polarity: true }).is_err(),
+                    "out-of-bounds pixel is an Err",
+                )?;
+                prop_eq(b.pushed, before, "Err pushes stay off the books")?;
+                continue;
+            }
+            let e = DvsEvent {
+                t_us: t,
+                x: c.rng.below(W as u64) as u16,
+                y: c.rng.below(H as u64) as u16,
+                polarity: c.rng.chance(0.5),
+            };
+            b.push(e).map_err(|e| format!("valid push rejected: {e}"))?;
+            pushed += 1;
+            if c.rng.chance(0.25) {
+                consume(&b.poll(), &mut expected_t0, &mut delivered, &mut lasts)?;
+            }
+        }
+        consume(&b.poll(), &mut expected_t0, &mut delivered, &mut lasts)?;
+
+        // Close somewhere between the frontier and past the watermark, so
+        // flushes both truncate pending events and absorb them.
+        let end = b.emitted_until_us().max(b.watermark_us().saturating_sub(c.rng.below(512)));
+        let flushed = b.flush(end).map_err(|e| format!("flush rejected: {e}"))?;
+        consume(&flushed, &mut expected_t0, &mut delivered, &mut lasts)?;
+
+        prop_eq(lasts, 1, "exactly one last-marked window per session")?;
+        prop_assert(flushed.last().is_some_and(|w| w.last), "flush ends with the last window")?;
+        prop_eq(b.pushed, pushed, "every Ok push is counted")?;
+        prop_eq(b.delivered, delivered, "delivered matches the emitted windows")?;
+        prop_eq(b.pending_len(), 0, "flush leaves nothing pending")?;
+        prop_eq(
+            b.delivered + b.late_dropped + b.overflow_dropped + b.flush_discarded,
+            b.pushed,
+            "drop counters partition every pushed event exactly",
+        )
+    });
+}
+
+#[test]
+fn accepted_events_are_either_delivered_or_flush_discarded() {
+    // With no polls before the close, nothing can go late after
+    // acceptance: the accepted/dropped split at push time must be
+    // conserved through the flush.
+    check("ingest-accepted-conserved", &Config { cases: 128, ..Config::default() }, |c| {
+        let window_us = 1 + c.rng.below(100);
+        let cfg = IngestConfig {
+            width: W,
+            height: H,
+            window_us,
+            max_lateness_us: c.rng.below(window_us),
+            max_pending: 1 + c.rng.below(16) as usize,
+            max_future_us: 2 * T_MAX,
+        };
+        let mut b = ReorderBuffer::new(cfg);
+        for _ in 0..c.size * 2 {
+            let e = DvsEvent {
+                t_us: c.rng.below(T_MAX),
+                x: c.rng.below(W as u64) as u16,
+                y: c.rng.below(H as u64) as u16,
+                polarity: true,
+            };
+            b.push(e).map_err(|e| format!("valid push rejected: {e}"))?;
+        }
+        prop_eq(b.late_dropped, 0, "no window was emitted, so nothing is late")?;
+        let end = c.rng.below(T_MAX);
+        let flushed = b.flush(end).map_err(|e| format!("flush rejected: {e}"))?;
+        let emitted: u64 = flushed.iter().map(|w| w.events.len() as u64).sum();
+        prop_eq(b.accepted, emitted + b.flush_discarded, "accepted splits at the close")?;
+        prop_eq(
+            b.delivered + b.overflow_dropped + b.flush_discarded,
+            b.pushed,
+            "partition without lateness",
+        )
+    });
+}

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Refresh a BENCH_*.json trajectory file from a bench binary's BENCH_JSON
+# lines. Each run appends one dated block, so the file accumulates the
+# cross-PR trajectory instead of overwriting it.
+#
+#   scripts/capture_bench.sh                       # serve_saturation (default)
+#   scripts/capture_bench.sh engine_throughput     # any other bench
+#   BENCH_QUICK=1 scripts/capture_bench.sh         # quick-mode numbers
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+bench="${1:-serve_saturation}"
+out="BENCH_${bench#serve_}.json"
+[ "$bench" = "serve_saturation" ] && out="BENCH_saturation.json"
+
+run_log=$(mktemp)
+trap 'rm -f "$run_log"' EXIT
+cargo bench --bench "$bench" | tee "$run_log"
+
+{
+  printf '{"meta":"run","bench":"%s","date":"%s","quick":%s,"host":"%s"}\n' \
+    "$bench" "$(date -u +%Y-%m-%dT%H:%M:%SZ)" \
+    "$([ -n "${BENCH_QUICK:-}" ] && echo true || echo false)" \
+    "$(uname -sm | tr ' ' '-')"
+  grep '^BENCH_JSON ' "$run_log" | sed 's/^BENCH_JSON //'
+} >> "$out"
+
+echo "appended $(grep -c '^BENCH_JSON ' "$run_log") lines to $out"
