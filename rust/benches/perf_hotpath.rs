@@ -15,11 +15,14 @@
 //! ```
 
 use flexspim::cim::{CimMacro, MacroConfig};
+use flexspim::coordinator::engine::SampleBuffers;
 use flexspim::dataflow::{Mapper, Policy};
+use flexspim::deploy::DeploymentSpec;
 use flexspim::energy::SystemEnergyModel;
 use flexspim::events::{encode_frames, GestureClass, GestureGenerator};
 use flexspim::snn::network::scnn_dvs_gesture;
-use flexspim::util::bench::{section, Bench};
+use flexspim::snn::Resolution;
+use flexspim::util::bench::{emit_json, section, Bench};
 use flexspim::util::rng::Rng;
 
 fn main() {
@@ -85,4 +88,49 @@ fn main() {
     });
     let stream = gen.sample(GestureClass::ArmRoll, &mut Rng::new(5));
     b.report("encode 16 frames", || encode_frames(&stream, 16).len());
+
+    // The CI `telemetry-overhead` smoke step gates on the emitted
+    // overhead_pct (scripts/check_overhead.sh): instrumentation at its
+    // default sampling must stay within 5 % of the uninstrumented path.
+    section("6. telemetry overhead on the window hot path");
+    let dep = DeploymentSpec::builder("telemetry-overhead")
+        .timesteps(16)
+        .conv("C1", 2, 4, 3, 4, 1, 48, 48, Resolution::new(4, 9))
+        .fc("F1", 4 * 12 * 12, 10, Resolution::new(5, 10))
+        .macros(2)
+        .native_backend(7)
+        .build()
+        .unwrap()
+        .deploy()
+        .unwrap();
+    let plan = dep.plan().clone();
+    let mut backend = dep.backend().unwrap();
+    let frames = encode_frames(&stream, 16);
+    let mut bufs = SampleBuffers::default();
+    let mut rate = vec![0i64; 10];
+    let off = b.report("run_frames x16, telemetry off", || {
+        rate.iter_mut().for_each(|r| *r = 0);
+        plan.run_frames(backend.as_mut(), &mut bufs, &frames, &mut rate)
+            .unwrap()
+            .sops
+    });
+    flexspim::telemetry::set_enabled(true);
+    flexspim::telemetry::trace::set_tracing(true, 64);
+    let on = b.report("run_frames x16, telemetry on (sample 64)", || {
+        rate.iter_mut().for_each(|r| *r = 0);
+        plan.run_frames(backend.as_mut(), &mut bufs, &frames, &mut rate)
+            .unwrap()
+            .sops
+    });
+    flexspim::telemetry::trace::set_tracing(false, 64);
+    let overhead_pct = (on.median_s() / off.median_s() - 1.0) * 100.0;
+    println!("    -> telemetry overhead {overhead_pct:.2} % (median over median)");
+    emit_json(
+        "telemetry_overhead",
+        &[
+            ("off_us", off.median_s() * 1e6),
+            ("on_us", on.median_s() * 1e6),
+            ("overhead_pct", overhead_pct),
+        ],
+    );
 }

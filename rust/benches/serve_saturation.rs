@@ -59,6 +59,7 @@ fn service_for(
     workers: usize,
     queue_capacity: usize,
     autoscale: Option<AutoscaleSpec>,
+    telemetry: bool,
 ) -> StreamingService {
     let mut builder = DeploymentSpec::builder("serve-saturation")
         .network(&bench_net())
@@ -66,7 +67,8 @@ fn service_for(
         .policy(Policy::HsOpt)
         .native_backend(SEED)
         .workers(workers)
-        .queue_capacity(queue_capacity);
+        .queue_capacity(queue_capacity)
+        .telemetry_enabled(telemetry);
     if let Some(spec) = autoscale {
         builder = builder.autoscale(spec);
     }
@@ -111,7 +113,7 @@ fn main() {
     // Calibrate single-worker capacity with a closed-loop run: its
     // self-paced equilibrium *is* the sustainable session rate.
     section(&format!("calibration — closed-loop, 1 worker, {sessions} sessions"));
-    let cal = service_for(1, queue_capacity, None)
+    let cal = service_for(1, queue_capacity, None, false)
         .serve(&traffic, CHUNK)
         .expect("calibration run");
     assert_eq!(cal.finished_sessions, sessions as u64);
@@ -126,7 +128,7 @@ fn main() {
     for &workers in worker_counts {
         for &mult in multipliers {
             let rate = mult * cap_sessions_per_sec * workers as f64;
-            let svc = service_for(workers, queue_capacity, None);
+            let svc = service_for(workers, queue_capacity, None, false);
             let r = drive(
                 &svc,
                 &traffic,
@@ -185,7 +187,7 @@ fn main() {
         } else {
             ArrivalProcess::Bursty { rate_per_sec: rate, burst }
         };
-        let svc = service_for(1, queue_capacity, None);
+        let svc = service_for(1, queue_capacity, None, false);
         let r = drive(&svc, &traffic, arrivals, 0xB00);
         println!(
             "burst {burst}: goodput {:8.2} w/s  {}  shed {:5.2} %",
@@ -211,10 +213,14 @@ fn main() {
     section("autoscaler at the knee — fixed 1 worker vs. SLO-driven growth to 4");
     let rate = 1.5 * cap_sessions_per_sec;
     let fixed = {
-        let svc = service_for(1, queue_capacity, None);
+        let svc = service_for(1, queue_capacity, None, false);
         drive(&svc, &traffic, ArrivalProcess::Poisson { rate_per_sec: rate }, 0xA5C)
     };
-    let auto = {
+    // The autoscaled run doubles as the flight-recorder exercise: with
+    // telemetry on, every decide tick and scale transition lands in the
+    // ring, so the decision trail printed below is the same evidence
+    // `flexspim serve --dump-telemetry` would show.
+    let auto_svc = {
         let spec = AutoscaleSpec {
             enabled: true,
             min_workers: 1,
@@ -224,13 +230,26 @@ fn main() {
             queue_high: 4,
             hysteresis_ticks: 3,
         };
-        let svc = service_for(1, queue_capacity, Some(spec));
-        drive(&svc, &traffic, ArrivalProcess::Poisson { rate_per_sec: rate }, 0xA5C)
+        service_for(1, queue_capacity, Some(spec), true)
     };
+    let auto = drive(&auto_svc, &traffic, ArrivalProcess::Poisson { rate_per_sec: rate }, 0xA5C);
     assert_eq!(auto.serve.finished_sessions, sessions as u64);
     assert!(
         auto.serve.scale_ups > 0 && auto.serve.workers_peak > 1,
         "a sustained 1.5x overload must trip the autoscaler"
+    );
+    // Decide ticks keep arriving until shutdown, so the bounded ring is
+    // guaranteed to retain recent ones; scale-ups fire early and may have
+    // been displaced by later events — report, don't assert.
+    let rec = auto_svc.recorder();
+    let decisions = rec.events_of_kind("autoscale-decision").len();
+    assert!(decisions > 0, "flight recorder must retain the autoscaler's decision trail");
+    println!(
+        "flight recorder: {decisions} decide ticks retained, {} scale-ups retained, \
+         {} events total ({} dropped by the ring)",
+        rec.events_of_kind("scale-up").len(),
+        rec.recorded(),
+        rec.dropped(),
     );
     for (name, r) in [("fixed 1w", &fixed), ("autoscale", &auto)] {
         println!(

@@ -144,4 +144,49 @@ fn main() {
             ],
         );
     }
+
+    // The same exporters `flexspim serve --dump-telemetry` prints,
+    // exercised on the bench workload so the serve-path instrumentation
+    // stays wired end to end.
+    section("telemetry exporters — metrics registry + flight recorder (2 workers)");
+    let svc = DeploymentSpec::builder("serve-bench-telemetry")
+        .network(&bench_net())
+        .macros(MACROS)
+        .policy(Policy::HsOpt)
+        .native_backend(SEED)
+        .workers(2)
+        .telemetry_enabled(true)
+        .build()
+        .expect("telemetry spec is valid")
+        .deploy()
+        .expect("telemetry spec deploys")
+        .service()
+        .expect("service materializes");
+    let report = svc.serve(&traffic, 64).expect("telemetry run");
+    assert_eq!(report.finished_sessions, sessions as u64);
+    let snap = svc.metrics().snapshot();
+    let admitted = snap.counter_total("flexspim_serve_admitted_total");
+    let done = snap.counter_total("flexspim_serve_windows_done_total");
+    let shed = snap.counter_total("flexspim_serve_shed_total");
+    assert!(admitted > 0, "instrumented run must admit windows");
+    assert_eq!(shed, 0, "nominal load must not shed");
+    assert_eq!(done, admitted, "every admitted window must commit");
+    assert!(
+        svc.metrics().prometheus_text().contains("flexspim_serve_windows_done_total"),
+        "Prometheus export must carry the serve families"
+    );
+    println!(
+        "registry: {admitted} admitted, {done} done, {shed} shed  |  {}",
+        svc.recorder().dump().lines().next().unwrap_or_default()
+    );
+    emit_json(
+        "serve_telemetry",
+        &[
+            ("admitted", admitted as f64),
+            ("windows_done", done as f64),
+            ("shed", shed as f64),
+            ("queue_wait_samples", snap.histogram_count("flexspim_serve_queue_wait_seconds") as f64),
+            ("flight_recorded", svc.recorder().recorded() as f64),
+        ],
+    );
 }

@@ -288,6 +288,7 @@ impl SamplePlan {
         frames: &[SpikeFrame],
         rate: &mut [i64],
     ) -> Result<WindowTotals> {
+        let _span = crate::telemetry::trace::span("plan.run_frames");
         let mut totals = WindowTotals::default();
 
         for frame in frames {
@@ -300,7 +301,10 @@ impl SamplePlan {
             bufs.merge_shift.transfer(in_count.max(1), 16);
             bufs.banks.write(in_count * 16);
 
-            let step = backend.step(&spikes_in)?;
+            let step = {
+                let _s = crate::telemetry::trace::span("backend.step");
+                backend.step(&spikes_in)?
+            };
             for &c in step.out_spikes.active() {
                 rate[c as usize] += 1;
             }
@@ -360,6 +364,13 @@ impl SamplePlan {
             totals.frames += 1;
         }
 
+        if crate::telemetry::enabled() {
+            crate::telemetry::metrics::hot().record_window(
+                totals.frames,
+                totals.in_events,
+                totals.sops,
+            );
+        }
         Ok(totals)
     }
 

@@ -21,6 +21,7 @@ use crate::runtime::{artifacts_dir, NativeScnn, Runtime, ScnnRunner, StepBackend
 use crate::serve::{AutoscaleConfig, ServiceConfig, StreamingService};
 use crate::snn::events::AdjacencyCache;
 use crate::snn::{LayerKind, Network};
+use crate::telemetry::TelemetryConfig;
 use crate::Result;
 
 use super::spec::{BackendSpec, DeploymentSpec};
@@ -41,6 +42,15 @@ impl DeploymentSpec {
     /// [`Deployment::service`]) materialize from the result on demand.
     pub fn deploy(self) -> Result<Deployment> {
         self.validate()?;
+        // Process-global switches are one-way: deploying a telemetry-enabled
+        // spec turns collection on, deploying a plain one never turns it
+        // back off under a concurrently-observed deployment.
+        if self.telemetry.enabled {
+            crate::telemetry::set_enabled(true);
+        }
+        if self.telemetry.trace {
+            crate::telemetry::trace::set_tracing(true, self.telemetry.trace_sample);
+        }
         let net = self.network.build()?;
         let mut cfg = SystemConfig::flexspim(self.substrate.macros);
         cfg.vdd = self.substrate.vdd;
@@ -195,6 +205,10 @@ impl Deployment {
         cfg.deterministic_admission = s.deterministic_admission;
         cfg.early_exit_margin = s.early_exit_margin;
         cfg.early_exit_min_windows = s.early_exit_min_windows;
+        cfg.telemetry = TelemetryConfig {
+            enabled: self.spec.telemetry.enabled,
+            flight_capacity: self.spec.telemetry.flight_capacity,
+        };
         // Session clock: the serve substrate streams 100-ms gesture
         // sessions; spreading them over the spec's `timesteps` makes the
         // streamed frame grid match the offline encoder's binning, so all
@@ -359,6 +373,19 @@ mod tests {
         assert_eq!(cfg.autoscale.max_workers, 8);
         assert!((cfg.autoscale.slo_p99_s - 0.005).abs() < 1e-12);
         assert_eq!(cfg.autoscale.interval, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn telemetry_spec_reaches_the_service_config() {
+        let mut spec = small_spec();
+        spec.telemetry.enabled = true;
+        spec.telemetry.flight_capacity = 32;
+        let cfg = spec.deploy().unwrap().service_config().unwrap();
+        assert!(cfg.telemetry.enabled);
+        assert_eq!(cfg.telemetry.flight_capacity, 32);
+        // A plain spec keeps the service instrumentation off.
+        let cfg = small_spec().deploy().unwrap().service_config().unwrap();
+        assert!(!cfg.telemetry.enabled);
     }
 
     #[test]

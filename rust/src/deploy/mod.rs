@@ -33,9 +33,11 @@ pub mod handle;
 pub mod presets;
 pub mod spec;
 pub mod toml;
+pub mod train;
 
 pub use handle::Deployment;
 pub use spec::{
     parse_policy, policy_key, AutoscaleSpec, BackendSpec, DeploymentBuilder, DeploymentSpec,
-    LayerDef, NetworkSpec, ServeSpec, SubstrateSpec,
+    LayerDef, NetworkSpec, ServeSpec, SubstrateSpec, TelemetrySpec,
 };
+pub use train::{SimulateConfig, TrainConfig, TrainSpec};

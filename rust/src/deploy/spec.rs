@@ -523,6 +523,56 @@ impl ServeSpec {
     }
 }
 
+// ------------------------------------------------------------- telemetry
+
+/// Telemetry section: metrics/flight-recorder switches and the span
+/// tracer's sampling knob (see [`crate::telemetry`] for semantics).
+/// Everything defaults to off, so a plain spec records nothing and the
+/// instrumentation sites cost one relaxed atomic load.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySpec {
+    /// Record service metrics and flight-recorder events; deploying an
+    /// enabled spec also flips the process-global
+    /// [`crate::telemetry::set_enabled`] switch (engine hot-path
+    /// counters).
+    pub enabled: bool,
+    /// Record scoped spans for Chrome-trace export (implies nothing
+    /// about `enabled`; the two can be toggled independently).
+    pub trace: bool,
+    /// Span sampling period: record every n-th span site hit (1 =
+    /// every span). Ignored while `trace` is off.
+    pub trace_sample: u32,
+    /// Flight-recorder ring capacity (last N events retained).
+    pub flight_capacity: usize,
+}
+
+impl Default for TelemetrySpec {
+    fn default() -> Self {
+        TelemetrySpec {
+            enabled: false,
+            trace: false,
+            trace_sample: 64,
+            flight_capacity: 256,
+        }
+    }
+}
+
+impl TelemetrySpec {
+    /// Sanity limits.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.trace_sample >= 1,
+            "telemetry: trace_sample must be >= 1 (1 records every span)"
+        );
+        ensure!(
+            (1..=1_048_576).contains(&self.flight_capacity),
+            "telemetry: flight_capacity {} outside 1..=1048576",
+            self.flight_capacity
+        );
+        Ok(())
+    }
+}
+
 // -------------------------------------------------------- deployment spec
 
 /// The one typed description of a FlexSpIM deployment: topology,
@@ -540,6 +590,8 @@ pub struct DeploymentSpec {
     pub backend: BackendSpec,
     /// Serve-tier settings.
     pub serve: ServeSpec,
+    /// Telemetry settings (metrics, tracing, flight recorder).
+    pub telemetry: TelemetrySpec,
 }
 
 impl DeploymentSpec {
@@ -550,6 +602,7 @@ impl DeploymentSpec {
             substrate: SubstrateSpec::default(),
             backend: BackendSpec::default(),
             serve: ServeSpec::default(),
+            telemetry: TelemetrySpec::default(),
         }
     }
 
@@ -558,6 +611,7 @@ impl DeploymentSpec {
         self.network.validate()?;
         self.substrate.validate()?;
         self.serve.validate()?;
+        self.telemetry.validate()?;
         Ok(())
     }
 }
@@ -589,6 +643,7 @@ pub struct DeploymentBuilder {
     substrate: SubstrateSpec,
     backend: BackendSpec,
     serve: ServeSpec,
+    telemetry: TelemetrySpec,
 }
 
 impl DeploymentBuilder {
@@ -748,6 +803,27 @@ impl DeploymentBuilder {
         self
     }
 
+    /// Replace the whole telemetry section.
+    pub fn telemetry(mut self, spec: TelemetrySpec) -> Self {
+        self.telemetry = spec;
+        self
+    }
+
+    /// Shortcut: turn metrics + flight-recorder telemetry on/off,
+    /// keeping the remaining knobs at their defaults.
+    pub fn telemetry_enabled(mut self, on: bool) -> Self {
+        self.telemetry.enabled = on;
+        self
+    }
+
+    /// Shortcut: enable span tracing at the given sampling period
+    /// (1 = record every span).
+    pub fn tracing(mut self, sample_every: u32) -> Self {
+        self.telemetry.trace = true;
+        self.telemetry.trace_sample = sample_every;
+        self
+    }
+
     /// Validate and produce the spec.
     pub fn build(self) -> Result<DeploymentSpec> {
         let spec = DeploymentSpec {
@@ -755,6 +831,7 @@ impl DeploymentBuilder {
             substrate: self.substrate,
             backend: self.backend,
             serve: self.serve,
+            telemetry: self.telemetry,
         };
         spec.validate()?;
         Ok(spec)
@@ -838,6 +915,10 @@ mod tests {
             ..AutoscaleSpec::default()
         };
         assert!(base().workers(1).autoscale(bad).build().is_err(), "zero hysteresis");
+        let bad_tl = TelemetrySpec { trace_sample: 0, ..TelemetrySpec::default() };
+        assert!(base().telemetry(bad_tl).build().is_err(), "zero trace_sample");
+        let bad_tl = TelemetrySpec { flight_capacity: 0, ..TelemetrySpec::default() };
+        assert!(base().telemetry(bad_tl).build().is_err(), "zero flight_capacity");
         let mut bad_bits = base().build().unwrap();
         bad_bits.network.layers[0] = LayerDef::Fc {
             name: "f".into(),
@@ -890,6 +971,26 @@ mod tests {
             .build()
             .unwrap();
         assert!(!off.serve.autoscale.enabled);
+    }
+
+    #[test]
+    fn telemetry_builder_paths() {
+        let spec = DeploymentSpec::builder("t")
+            .fc("f", 4, 10, Resolution::new(4, 8))
+            .telemetry_enabled(true)
+            .tracing(8)
+            .build()
+            .unwrap();
+        assert!(spec.telemetry.enabled);
+        assert!(spec.telemetry.trace);
+        assert_eq!(spec.telemetry.trace_sample, 8);
+        assert_eq!(spec.telemetry.flight_capacity, 256);
+        // A plain spec keeps everything off.
+        let plain = DeploymentSpec::builder("t")
+            .fc("f", 4, 10, Resolution::new(4, 8))
+            .build()
+            .unwrap();
+        assert_eq!(plain.telemetry, TelemetrySpec::default());
     }
 
     #[test]

@@ -64,6 +64,12 @@
 //! # autoscale_interval_ms = 10      # control-loop tick
 //! # autoscale_queue_high = 8        # queued windows/worker = overloaded
 //! # autoscale_hysteresis = 5        # calm ticks before one shrink step
+//!
+//! # [telemetry]              # whole section optional (defaults off)
+//! # enabled = true           # metrics registry + flight recorder
+//! # trace = false            # Chrome-trace span capture
+//! # trace_sample = 64        # record 1 in N spans (>= 1)
+//! # flight_capacity = 256    # flight-recorder ring size
 //! ```
 
 use std::collections::BTreeSet;
@@ -78,7 +84,7 @@ use crate::Result;
 use super::presets;
 use super::spec::{
     parse_policy, policy_key, AutoscaleSpec, BackendSpec, DeploymentSpec, LayerDef, NetworkSpec,
-    ServeSpec, SubstrateSpec,
+    ServeSpec, SubstrateSpec, TelemetrySpec,
 };
 
 // ------------------------------------------------------------ strict doc
@@ -86,13 +92,16 @@ use super::spec::{
 /// A [`Doc`] wrapper that records every key it is asked for, so leftover
 /// (unknown) keys can be rejected after parsing, and that turns
 /// wrongly-typed values into errors instead of silent defaults.
-struct StrictDoc<'a> {
+///
+/// Shared (`pub(crate)`) so sibling strict parsers — e.g. the `[train]`
+/// config in [`super::train`] — inherit the same contract.
+pub(crate) struct StrictDoc<'a> {
     doc: &'a Doc,
     used: BTreeSet<String>,
 }
 
 impl<'a> StrictDoc<'a> {
-    fn new(doc: &'a Doc) -> StrictDoc<'a> {
+    pub(crate) fn new(doc: &'a Doc) -> StrictDoc<'a> {
         StrictDoc { doc, used: BTreeSet::new() }
     }
 
@@ -101,7 +110,7 @@ impl<'a> StrictDoc<'a> {
         self.doc.get(key)
     }
 
-    fn take_str(&mut self, key: &str) -> Result<Option<String>> {
+    pub(crate) fn take_str(&mut self, key: &str) -> Result<Option<String>> {
         match self.raw(key) {
             None => Ok(None),
             Some(v) => v
@@ -111,7 +120,7 @@ impl<'a> StrictDoc<'a> {
         }
     }
 
-    fn take_int(&mut self, key: &str) -> Result<Option<i64>> {
+    pub(crate) fn take_int(&mut self, key: &str) -> Result<Option<i64>> {
         match self.raw(key) {
             None => Ok(None),
             Some(v) => v
@@ -121,7 +130,7 @@ impl<'a> StrictDoc<'a> {
         }
     }
 
-    fn take_float(&mut self, key: &str) -> Result<Option<f64>> {
+    pub(crate) fn take_float(&mut self, key: &str) -> Result<Option<f64>> {
         match self.raw(key) {
             None => Ok(None),
             Some(v) => v
@@ -131,7 +140,7 @@ impl<'a> StrictDoc<'a> {
         }
     }
 
-    fn take_bool(&mut self, key: &str) -> Result<Option<bool>> {
+    pub(crate) fn take_bool(&mut self, key: &str) -> Result<Option<bool>> {
         match self.raw(key) {
             None => Ok(None),
             Some(v) => v
@@ -141,7 +150,7 @@ impl<'a> StrictDoc<'a> {
         }
     }
 
-    fn take_usize(&mut self, key: &str) -> Result<Option<usize>> {
+    pub(crate) fn take_usize(&mut self, key: &str) -> Result<Option<usize>> {
         match self.take_int(key)? {
             None => Ok(None),
             Some(i) => usize::try_from(i)
@@ -150,7 +159,7 @@ impl<'a> StrictDoc<'a> {
         }
     }
 
-    fn take_u64(&mut self, key: &str) -> Result<Option<u64>> {
+    pub(crate) fn take_u64(&mut self, key: &str) -> Result<Option<u64>> {
         match self.take_int(key)? {
             None => Ok(None),
             Some(i) => u64::try_from(i)
@@ -159,7 +168,7 @@ impl<'a> StrictDoc<'a> {
         }
     }
 
-    fn take_u32(&mut self, key: &str) -> Result<Option<u32>> {
+    pub(crate) fn take_u32(&mut self, key: &str) -> Result<Option<u32>> {
         match self.take_int(key)? {
             None => Ok(None),
             Some(i) => u32::try_from(i)
@@ -168,18 +177,18 @@ impl<'a> StrictDoc<'a> {
         }
     }
 
-    fn require_usize(&mut self, key: &str) -> Result<usize> {
+    pub(crate) fn require_usize(&mut self, key: &str) -> Result<usize> {
         self.take_usize(key)?
             .ok_or_else(|| anyhow!("missing config key '{key}'"))
     }
 
-    fn require_u32(&mut self, key: &str) -> Result<u32> {
+    pub(crate) fn require_u32(&mut self, key: &str) -> Result<u32> {
         self.take_u32(key)?
             .ok_or_else(|| anyhow!("missing config key '{key}'"))
     }
 
     /// Reject any key the parser never consumed.
-    fn finish(self) -> Result<()> {
+    pub(crate) fn finish(self) -> Result<()> {
         let unknown: Vec<&str> = self
             .doc
             .keys_under("")
@@ -394,8 +403,22 @@ pub fn spec_from_doc(doc: &Doc) -> Result<DeploymentSpec> {
         serve.autoscale.hysteresis_ticks = h;
     }
 
+    let mut telemetry = TelemetrySpec::default();
+    if let Some(on) = t.take_bool("telemetry.enabled")? {
+        telemetry.enabled = on;
+    }
+    if let Some(tr) = t.take_bool("telemetry.trace")? {
+        telemetry.trace = tr;
+    }
+    if let Some(s) = t.take_u32("telemetry.trace_sample")? {
+        telemetry.trace_sample = s;
+    }
+    if let Some(c) = t.take_usize("telemetry.flight_capacity")? {
+        telemetry.flight_capacity = c;
+    }
+
     t.finish()?;
-    let spec = DeploymentSpec { network, substrate, backend, serve };
+    let spec = DeploymentSpec { network, substrate, backend, serve, telemetry };
     spec.validate()?;
     Ok(spec)
 }
@@ -519,6 +542,15 @@ impl DeploymentSpec {
             let _ = writeln!(out, "autoscale_interval_ms = {}", a.interval_ms);
             let _ = writeln!(out, "autoscale_queue_high = {}", a.queue_high);
             let _ = writeln!(out, "autoscale_hysteresis = {}", a.hysteresis_ticks);
+        }
+        let tl = &self.telemetry;
+        if *tl != TelemetrySpec::default() {
+            out.push('\n');
+            let _ = writeln!(out, "[telemetry]");
+            let _ = writeln!(out, "enabled = {}", tl.enabled);
+            let _ = writeln!(out, "trace = {}", tl.trace);
+            let _ = writeln!(out, "trace_sample = {}", tl.trace_sample);
+            let _ = writeln!(out, "flight_capacity = {}", tl.flight_capacity);
         }
         out
     }
@@ -654,6 +686,43 @@ mod tests {
         let plain = demo_spec().to_toml();
         assert!(!plain.contains("step_us"), "got:\n{plain}");
         assert!(!plain.contains("autoscale"), "got:\n{plain}");
+        assert!(!plain.contains("telemetry"), "got:\n{plain}");
+    }
+
+    #[test]
+    fn telemetry_section_round_trips() {
+        let spec = DeploymentSpec::builder("toml-telemetry")
+            .timesteps(8)
+            .fc("F1", 16, 4, Resolution::new(4, 8))
+            .telemetry_enabled(true)
+            .tracing(16)
+            .build()
+            .unwrap();
+        let text = spec.to_toml();
+        assert!(text.contains("[telemetry]"), "got:\n{text}");
+        assert!(text.contains("trace_sample = 16"), "got:\n{text}");
+        let parsed = DeploymentSpec::from_toml_str(&text).unwrap();
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.to_toml(), text, "serialization is a fixed point");
+        // Keys parse individually too, and stay strict.
+        let base = "[network]\npreset = \"serve-demo\"\n";
+        let spec = DeploymentSpec::from_toml_str(
+            &format!("{base}[telemetry]\nenabled = true\nflight_capacity = 32\n"),
+        )
+        .unwrap();
+        assert!(spec.telemetry.enabled);
+        assert!(!spec.telemetry.trace);
+        assert_eq!(spec.telemetry.flight_capacity, 32);
+        let err = DeploymentSpec::from_toml_str(
+            &format!("{base}[telemetry]\nsample = 4\n"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("telemetry.sample"), "got: {err}");
+        let err = DeploymentSpec::from_toml_str(
+            &format!("{base}[telemetry]\ntrace_sample = 0\n"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("trace_sample"), "got: {err}");
     }
 
     #[test]

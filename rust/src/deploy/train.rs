@@ -1,0 +1,221 @@
+//! Typed config for the non-deployment subcommands: `[train]` and
+//! `[simulate]`.
+//!
+//! `flexspim train` and `flexspim simulate` do not build a
+//! [`super::DeploymentSpec`] — training drives the AOT gradient
+//! artifacts and `simulate` exercises one bare CIM macro — but their
+//! knobs deserve the same config story as the deployment tiers: a TOML
+//! file with strict parsing (unknown keys are errors, via the shared
+//! [`super::toml::StrictDoc`]) plus CLI-flag overlays, instead of raw
+//! flags only.
+//!
+//! ## Format
+//!
+//! ```toml
+//! [train]
+//! steps = 100                # optional (defaults shown)
+//! lr = 0.05
+//! seed = 42
+//! out = "artifacts/weights_trained.bin"
+//!
+//! [simulate]
+//! w_bits = 8
+//! p_bits = 16
+//! n_c = 1
+//! neurons = 32
+//! fan_in = 4
+//! ```
+//!
+//! Both sections are optional; a missing section means its defaults.
+//! [`TrainSpec::to_toml`] is the lossless inverse of
+//! [`TrainSpec::from_toml_str`].
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, ensure};
+
+use crate::config::toml_lite::Doc;
+use crate::Result;
+
+use super::toml::StrictDoc;
+
+/// `[train]` section: the supervised training loop's knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Gradient steps to run.
+    pub steps: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// Data/shuffle seed.
+    pub seed: u64,
+    /// Output path for the trained FSPW weight file.
+    pub out: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 100,
+            lr: 0.05,
+            seed: 42,
+            out: "artifacts/weights_trained.bin".to_string(),
+        }
+    }
+}
+
+/// `[simulate]` section: the bare-macro demo's shape and resolution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimulateConfig {
+    /// Weight resolution in bits.
+    pub w_bits: u32,
+    /// Membrane-potential resolution in bits.
+    pub p_bits: u32,
+    /// Operand columns N_C.
+    pub n_c: u32,
+    /// Parallel neurons in the macro.
+    pub neurons: usize,
+    /// Synapses per neuron.
+    pub fan_in: usize,
+}
+
+impl Default for SimulateConfig {
+    fn default() -> Self {
+        SimulateConfig { w_bits: 8, p_bits: 16, n_c: 1, neurons: 32, fan_in: 4 }
+    }
+}
+
+/// The typed `[train]`/`[simulate]` config file.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TrainSpec {
+    /// Training-loop settings.
+    pub train: TrainConfig,
+    /// Bare-macro demo settings.
+    pub simulate: SimulateConfig,
+}
+
+impl TrainSpec {
+    /// Parse from TOML text (strict: unknown keys are errors).
+    pub fn from_toml_str(text: &str) -> Result<TrainSpec> {
+        let doc = Doc::parse(text).map_err(|e| anyhow!("TOML parse error: {e}"))?;
+        let mut t = StrictDoc::new(&doc);
+
+        let mut train = TrainConfig::default();
+        if let Some(s) = t.take_usize("train.steps")? {
+            train.steps = s;
+        }
+        if let Some(lr) = t.take_float("train.lr")? {
+            train.lr = lr as f32;
+        }
+        if let Some(s) = t.take_u64("train.seed")? {
+            train.seed = s;
+        }
+        if let Some(o) = t.take_str("train.out")? {
+            train.out = o;
+        }
+
+        let mut simulate = SimulateConfig::default();
+        if let Some(b) = t.take_u32("simulate.w_bits")? {
+            simulate.w_bits = b;
+        }
+        if let Some(b) = t.take_u32("simulate.p_bits")? {
+            simulate.p_bits = b;
+        }
+        if let Some(n) = t.take_u32("simulate.n_c")? {
+            simulate.n_c = n;
+        }
+        if let Some(n) = t.take_usize("simulate.neurons")? {
+            simulate.neurons = n;
+        }
+        if let Some(f) = t.take_usize("simulate.fan_in")? {
+            simulate.fan_in = f;
+        }
+
+        t.finish()?;
+        let spec = TrainSpec { train, simulate };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load from a TOML file.
+    pub fn load(path: &Path) -> Result<TrainSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("config {}: {e}", path.display()))?;
+        Self::from_toml_str(&text).map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Sanity limits for both sections.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.train.steps >= 1, "train: steps must be >= 1");
+        ensure!(
+            self.train.lr.is_finite() && self.train.lr > 0.0,
+            "train: lr {} must be a positive finite number",
+            self.train.lr
+        );
+        ensure!(!self.train.out.is_empty(), "train: out path must not be empty");
+        let s = &self.simulate;
+        ensure!(s.w_bits >= 1, "simulate: w_bits must be >= 1");
+        ensure!(s.p_bits >= 1, "simulate: p_bits must be >= 1");
+        ensure!(s.n_c >= 1, "simulate: n_c must be >= 1");
+        ensure!(s.neurons >= 1, "simulate: neurons must be >= 1");
+        ensure!(s.fan_in >= 1, "simulate: fan_in must be >= 1");
+        Ok(())
+    }
+
+    /// Serialize to TOML; `from_toml_str(to_toml(spec)) == spec`.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "[train]");
+        let _ = writeln!(out, "steps = {}", self.train.steps);
+        let _ = writeln!(out, "lr = {}", self.train.lr);
+        let _ = writeln!(out, "seed = {}", self.train.seed);
+        let _ = writeln!(out, "out = \"{}\"", self.train.out);
+        out.push('\n');
+        let _ = writeln!(out, "[simulate]");
+        let _ = writeln!(out, "w_bits = {}", self.simulate.w_bits);
+        let _ = writeln!(out, "p_bits = {}", self.simulate.p_bits);
+        let _ = writeln!(out, "n_c = {}", self.simulate.n_c);
+        let _ = writeln!(out, "neurons = {}", self.simulate.neurons);
+        let _ = writeln!(out, "fan_in = {}", self.simulate.fan_in);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_round_trip() {
+        let spec = TrainSpec::default();
+        let text = spec.to_toml();
+        let parsed = TrainSpec::from_toml_str(&text).unwrap();
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.to_toml(), text, "serialization is a fixed point");
+        // An empty document is all defaults.
+        assert_eq!(TrainSpec::from_toml_str("").unwrap(), TrainSpec::default());
+    }
+
+    #[test]
+    fn sections_parse_and_stay_strict() {
+        let spec = TrainSpec::from_toml_str(
+            "[train]\nsteps = 7\nlr = 0.125\nout = \"w.bin\"\n\
+             [simulate]\nw_bits = 4\nneurons = 8\n",
+        )
+        .unwrap();
+        assert_eq!(spec.train.steps, 7);
+        assert!((spec.train.lr - 0.125).abs() < 1e-9);
+        assert_eq!(spec.train.out, "w.bin");
+        assert_eq!(spec.train.seed, 42, "unset keys keep defaults");
+        assert_eq!((spec.simulate.w_bits, spec.simulate.neurons), (4, 8));
+        let err = TrainSpec::from_toml_str("[train]\nstep = 7\n").unwrap_err();
+        assert!(format!("{err}").contains("train.step"), "got: {err}");
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(TrainSpec::from_toml_str("[train]\nsteps = 0\n").is_err());
+        assert!(TrainSpec::from_toml_str("[train]\nlr = 0\n").is_err());
+        assert!(TrainSpec::from_toml_str("[simulate]\nfan_in = 0\n").is_err());
+    }
+}

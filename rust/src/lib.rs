@@ -24,6 +24,9 @@
 //! [`serve::StreamingService`]. Lower-level pieces remain public:
 //! [`cim::CimMacro`] for the macro simulator, [`dataflow::Mapper`] for the
 //! HS mapping search, and [`figures`] for the paper-figure drivers.
+//! Observability for all tiers lives in [`telemetry`] (leveled logging,
+//! a metrics registry with Prometheus/JSON exporters, Chrome-trace
+//! spans, and a per-service flight recorder).
 
 pub mod cim;
 pub mod config;
@@ -36,6 +39,7 @@ pub mod figures;
 pub mod runtime;
 pub mod serve;
 pub mod snn;
+pub mod telemetry;
 pub mod util;
 
 /// Crate-wide result alias.

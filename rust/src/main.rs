@@ -9,19 +9,27 @@
 //!                    [--deterministic] [--exit-margin X]
 //!                    [--step-us U] [--frames-per-window K]
 //!                    [--autoscale] [--autoscale-max W] [--slo-p99-ms X]
-//! flexspim train     [--steps N] [--lr X] [--seed S] [--out PATH]
+//! flexspim train     [--config F] [--steps N] [--lr X] [--seed S] [--out PATH]
 //! flexspim map       [--config F] [--macros M]
-//! flexspim simulate  [--wbits W] [--pbits P] [--nc C] [--neurons N] [--fanin F]
+//! flexspim simulate  [--config F] [--wbits W] [--pbits P] [--nc C]
+//!                    [--neurons N] [--fanin F]
 //! flexspim sweep     [--config F] [--samples N] [--seed S] [--macros M]
 //! ```
 //!
 //! `run`, `serve`, `map`, and `sweep` all build one
 //! [`flexspim::deploy::DeploymentSpec`]: start from `--config file.toml`
 //! (or the subcommand's default preset), overlay the CLI flags, then
-//! materialize the tier they need. Defaults use the pure-Rust native
+//! materialize the tier they need. `train` and `simulate` follow the same
+//! pattern over a [`flexspim::deploy::TrainSpec`]
+//! (`configs/train_demo.toml`). Defaults use the pure-Rust native
 //! backend and run everywhere; `--backend pjrt` (or a config's
 //! `backend.kind = "pjrt"`) needs the AOT artifacts (`make artifacts`),
 //! as does `train`.
+//!
+//! Observability: `--verbosity` (or `FLEXSPIM_LOG`) sets the log level;
+//! `--telemetry` enables the metrics registry and flight recorder,
+//! `--dump-telemetry` prints them after a serve run, and `--trace PATH`
+//! captures a Chrome `trace_event` JSON of the hot seams.
 
 use std::path::Path;
 
@@ -33,8 +41,10 @@ use flexspim::events::GestureGenerator;
 use flexspim::figures::{fig4, fig6, fig7, table1};
 use flexspim::runtime::{artifacts_dir, Runtime, TrainRunner};
 use flexspim::snn::network::scnn_dvs_gesture;
+use flexspim::telemetry::log::{self as tlog, Level};
 use flexspim::util::cli::{usage, Args, Spec};
 use flexspim::util::rng::Rng;
+use flexspim::{log_error, log_info};
 
 fn specs() -> Vec<Spec> {
     vec![
@@ -87,6 +97,31 @@ fn specs() -> Vec<Spec> {
             name: "slo-p99-ms",
             takes_value: true,
             help: "serve: autoscaler p99 latency objective in ms (implies --autoscale)",
+        },
+        Spec {
+            name: "verbosity",
+            takes_value: true,
+            help: "log level: error|warn|info|debug|trace (or FLEXSPIM_LOG)",
+        },
+        Spec {
+            name: "telemetry",
+            takes_value: false,
+            help: "enable the metrics registry + flight recorder",
+        },
+        Spec {
+            name: "dump-telemetry",
+            takes_value: false,
+            help: "serve: print the flight recorder and exporters after the run",
+        },
+        Spec {
+            name: "trace",
+            takes_value: true,
+            help: "write a Chrome trace_event JSON of the run to PATH",
+        },
+        Spec {
+            name: "trace-sample",
+            takes_value: true,
+            help: "record 1 in N trace spans (default 64, implies --trace capture)",
         },
         Spec { name: "full", takes_value: false, help: "use the full paper SCNN topology" },
         Spec { name: "help", takes_value: false, help: "show usage" },
@@ -165,24 +200,41 @@ fn spec_from_args(args: &Args, default_preset: &str) -> Result<DeploymentSpec> {
         spec.serve.autoscale.enabled = true;
         spec.serve.autoscale.slo_p99_ms = slo;
     }
+    if args.flag("telemetry") || args.flag("dump-telemetry") {
+        spec.telemetry.enabled = true;
+    }
+    if args.get("trace").is_some() {
+        spec.telemetry.trace = true;
+    }
+    if let Some(n) = args.get_parsed::<u32>("trace-sample").map_err(|e| anyhow!(e))? {
+        spec.telemetry.trace = true;
+        spec.telemetry.trace_sample = n;
+    }
     spec.validate()?;
     Ok(spec)
 }
 
 fn main() -> Result<()> {
+    tlog::init_from_env();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(&argv, &specs()) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}\n{}", usage("flexspim <command>", &specs()));
+            log_error!("{e}\n{}", usage("flexspim <command>", &specs()));
             std::process::exit(2);
         }
     };
+    if let Some(v) = args.get("verbosity") {
+        match Level::parse(v) {
+            Some(l) => tlog::set_level(l),
+            None => bail!("unknown verbosity '{v}' (error|warn|info|debug|trace)"),
+        }
+    }
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     if args.flag("help") || cmd == "help" {
-        println!("{}", usage("flexspim <command>", &specs()));
-        println!("commands: reproduce run serve train map simulate sweep");
-        println!("presets:  {}", presets::names().join(" "));
+        log_info!("{}", usage("flexspim <command>", &specs()));
+        log_info!("commands: reproduce run serve train map simulate sweep");
+        log_info!("presets:  {}", presets::names().join(" "));
         return Ok(());
     }
     match cmd {
@@ -197,11 +249,14 @@ fn main() -> Result<()> {
     }
 }
 
-/// Subcommands that are not spec-driven must say so rather than silently
-/// ignoring `--config`.
+/// Subcommands that are not config-driven must say so rather than
+/// silently ignoring `--config`.
 fn reject_config(args: &Args, cmd: &str) -> Result<()> {
     if args.get("config").is_some() {
-        bail!("--config applies to run/serve/map/sweep; '{cmd}' is driven by its own flags");
+        bail!(
+            "--config applies to run/serve/map/sweep (deployment spec) and \
+             train/simulate (train spec); '{cmd}' is driven by its own flags"
+        );
     }
     Ok(())
 }
@@ -211,21 +266,21 @@ fn reproduce(args: &Args) -> Result<()> {
     let what = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
     let mut any = false;
     if matches!(what, "fig4" | "all") {
-        println!("{}", fig4::render(&fig4::run()));
+        log_info!("{}", fig4::render(&fig4::run()));
         any = true;
     }
     if matches!(what, "fig6" | "all") {
-        println!("{}", fig6::render_sizes());
-        println!("(accuracy sweep: `flexspim sweep` — random weights give chance accuracy)\n");
+        log_info!("{}", fig6::render_sizes());
+        log_info!("(accuracy sweep: `flexspim sweep` — random weights give chance accuracy)\n");
         any = true;
     }
     if matches!(what, "fig7a" | "fig7cd" | "fig7" | "all") {
         let a = fig7::run_fig7a();
-        println!("{}", fig7::render(&a, &fig7::run_fig7c(), &fig7::run_fig7d()));
+        log_info!("{}", fig7::render(&a, &fig7::run_fig7c(), &fig7::run_fig7d()));
         any = true;
     }
     if matches!(what, "table1" | "all") {
-        println!("{}", table1::render());
+        log_info!("{}", table1::render());
         any = true;
     }
     if !any {
@@ -242,7 +297,7 @@ fn run_inference(args: &Args) -> Result<()> {
     let deployment = spec.deploy()?;
     let mut coord = deployment.coordinator()?;
     let net = coord.network().clone();
-    println!(
+    log_info!(
         "deploying {} on {} macros ({}, {} backend, {:.2} V)",
         net.name,
         deployment.spec().substrate.macros,
@@ -250,14 +305,14 @@ fn run_inference(args: &Args) -> Result<()> {
         deployment.spec().backend.kind(),
         deployment.spec().substrate.vdd,
     );
-    println!("mapping:\n{}", coord.mapping().table(&net));
+    log_info!("mapping:\n{}", coord.mapping().table(&net));
 
     let gen = GestureGenerator::default_48();
     let mut rng = Rng::new(seed);
     let data = gen.dataset(samples, &mut rng);
-    println!("running {} samples ...", data.len());
+    log_info!("running {} samples ...", data.len());
     let metrics = coord.run_dataset(&data)?;
-    println!("{}", metrics.report());
+    log_info!("{}", metrics.report());
     Ok(())
 }
 
@@ -271,7 +326,7 @@ fn run_serve(args: &Args) -> Result<()> {
     let spec = spec_from_args(args, presets::SERVE_DEMO)?;
     let deployment = spec.deploy()?;
     let svc = deployment.service()?;
-    println!(
+    log_info!(
         "serving {} on {} macros ({}): {sessions} sessions, {} workers, \
          {jitter_us} us arrival jitter, {} b vmem/session, {} b residency budget",
         deployment.network().name,
@@ -283,7 +338,7 @@ fn run_serve(args: &Args) -> Result<()> {
     );
     let auto = &svc.config().autoscale;
     if auto.enabled {
-        println!(
+        log_info!(
             "autoscaler: {}..{} workers, p99 SLO {:.1} ms, tick {} ms, \
              queue-high {}/worker, hysteresis {}",
             auto.min_workers,
@@ -296,32 +351,80 @@ fn run_serve(args: &Args) -> Result<()> {
     }
     let traffic = gesture_traffic(sessions, seed ^ 0x7EA4_11FC, jitter_us);
     let report = svc.serve(&traffic, 64)?;
-    println!("{}", report.report());
+    log_info!("{}", report.report());
+    if args.flag("dump-telemetry") {
+        log_info!("{}", svc.recorder().dump());
+        log_info!("{}", svc.metrics().prometheus_text());
+        log_info!("{}", flexspim::telemetry::metrics::global().prometheus_text());
+        log_info!("TELEMETRY_JSON {}", svc.metrics().snapshot().to_json());
+    }
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, flexspim::telemetry::trace::chrome_trace_json())?;
+        log_info!("wrote Chrome trace to {path} (load it in Perfetto or chrome://tracing)");
+    }
     Ok(())
 }
 
+/// `train`/`simulate` config base: `--config file.toml` (strict
+/// `[train]`/`[simulate]` sections) or the defaults, CLI flags on top.
+fn train_spec_from_args(args: &Args) -> Result<flexspim::deploy::TrainSpec> {
+    let mut spec = match args.get("config") {
+        Some(path) => flexspim::deploy::TrainSpec::load(Path::new(path))?,
+        None => flexspim::deploy::TrainSpec::default(),
+    };
+    let parsed = |name: &str| -> Result<Option<usize>> {
+        args.get_parsed::<usize>(name).map_err(|e| anyhow!(e))
+    };
+    if let Some(s) = parsed("steps")? {
+        spec.train.steps = s;
+    }
+    if let Some(lr) = args.get_parsed::<f32>("lr").map_err(|e| anyhow!(e))? {
+        spec.train.lr = lr;
+    }
+    if let Some(s) = args.get_parsed::<u64>("seed").map_err(|e| anyhow!(e))? {
+        spec.train.seed = s;
+    }
+    if let Some(o) = args.get("out") {
+        spec.train.out = o.to_string();
+    }
+    if let Some(b) = args.get_parsed::<u32>("wbits").map_err(|e| anyhow!(e))? {
+        spec.simulate.w_bits = b;
+    }
+    if let Some(b) = args.get_parsed::<u32>("pbits").map_err(|e| anyhow!(e))? {
+        spec.simulate.p_bits = b;
+    }
+    if let Some(n) = args.get_parsed::<u32>("nc").map_err(|e| anyhow!(e))? {
+        spec.simulate.n_c = n;
+    }
+    if let Some(n) = parsed("neurons")? {
+        spec.simulate.neurons = n;
+    }
+    if let Some(f) = parsed("fanin")? {
+        spec.simulate.fan_in = f;
+    }
+    spec.validate()?;
+    Ok(spec)
+}
+
 fn run_training(args: &Args) -> Result<()> {
-    reject_config(args, "train")?;
-    let steps = args.get_or("steps", 100usize);
-    let lr = args.get_or("lr", 0.05f32);
-    let seed = args.get_or("seed", 42u64);
-    let out = args.get_or("out", String::from("artifacts/weights_trained.bin"));
+    let tc = train_spec_from_args(args)?.train;
+    let (steps, lr) = (tc.steps, tc.lr);
 
     let rt = Runtime::cpu()?;
     let dir = artifacts_dir();
     let mut trainer = TrainRunner::load(&rt, &dir)?;
     let gen = GestureGenerator::default_48();
-    let mut rng = Rng::new(seed);
-    println!("training {steps} steps (batch 4, lr {lr}) ...");
+    let mut rng = Rng::new(tc.seed);
+    log_info!("training {steps} steps (batch 4, lr {lr}) ...");
     for step in 0..steps {
         let (frames, labels) = flexspim::runtime::trainer::synth_batch(&gen, &mut rng);
         let m = trainer.step(&frames, &labels, lr)?;
         if step % 10 == 0 || step == steps - 1 {
-            println!("step {step:4}  loss {:.4}  batch-acc {:.2}", m.loss, m.accuracy);
+            log_info!("step {step:4}  loss {:.4}  batch-acc {:.2}", m.loss, m.accuracy);
         }
     }
-    save_weight_file(&trainer.to_weight_file(), std::path::Path::new(&out))?;
-    println!("wrote {out}");
+    save_weight_file(&trainer.to_weight_file(), std::path::Path::new(&tc.out))?;
+    log_info!("wrote {}", tc.out);
     Ok(())
 }
 
@@ -356,19 +459,16 @@ fn run_map(args: &Args) -> Result<()> {
     let mapper = Mapper::flexspim(macros);
     for policy in Policy::ALL {
         let m = mapper.map(&net, policy);
-        println!("=== {} — {policy} ({macros} macros) ===", net.name);
-        println!("{}", m.table(&net));
+        log_info!("=== {} — {policy} ({macros} macros) ===", net.name);
+        log_info!("{}", m.table(&net));
     }
     Ok(())
 }
 
 fn run_simulate(args: &Args) -> Result<()> {
-    reject_config(args, "simulate")?;
-    let w_bits = args.get_or("wbits", 8u32);
-    let p_bits = args.get_or("pbits", 16u32);
-    let n_c = args.get_or("nc", 1u32);
-    let neurons = args.get_or("neurons", 32usize);
-    let fan_in = args.get_or("fanin", 4usize);
+    let sc = train_spec_from_args(args)?.simulate;
+    let (w_bits, p_bits, n_c) = (sc.w_bits, sc.p_bits, sc.n_c);
+    let (neurons, fan_in) = (sc.neurons, sc.fan_in);
 
     let cfg = MacroConfig::flexspim(w_bits, p_bits, n_c, fan_in, neurons);
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
@@ -392,14 +492,14 @@ fn run_simulate(args: &Args) -> Result<()> {
     let out = mac.timestep(&spikes, theta);
     let c = *mac.counters();
     let model = MacroEnergyModel::nominal();
-    println!("macro {w_bits}b/{p_bits}b shape N_C={n_c}, {neurons} neurons × {fan_in} synapses");
-    println!("input spikes: {spikes:?}");
-    println!("output spikes: {} fired of {neurons}", out.iter().filter(|&&b| b).count());
-    println!(
+    log_info!("macro {w_bits}b/{p_bits}b shape N_C={n_c}, {neurons} neurons × {fan_in} synapses");
+    log_info!("input spikes: {spikes:?}");
+    log_info!("output spikes: {} fired of {neurons}", out.iter().filter(|&&b| b).count());
+    log_info!(
         "cycles {}  adder-ops {}  carry-hops {}  writebacks {}",
         c.cim_cycles, c.adder_ops, c.carry_hops, c.writebacks
     );
-    println!(
+    log_info!(
         "energy: {:.3} pJ total, {:.3} pJ/SOP",
         model.price_pj(&c),
         model.pj_per_sop(&c)
@@ -418,14 +518,14 @@ fn run_sweep(args: &Args) -> Result<()> {
     let mut rng = Rng::new(seed);
     let data = gen.dataset(samples, &mut rng);
     let configs = fig6::scaling_configs_for(coord.network());
-    println!(
+    log_info!(
         "sweeping {} on {} configs × {} samples ...",
         deployment.network().name,
         configs.len(),
         data.len()
     );
     let points = fig6::accuracy_sweep(&mut coord, &data, &configs)?;
-    println!("{}", fig6::render_sweep(&points));
-    println!("{}", fig6::render_sizes());
+    log_info!("{}", fig6::render_sweep(&points));
+    log_info!("{}", fig6::render_sizes());
     Ok(())
 }

@@ -215,6 +215,7 @@ impl StepBackend for NativeScnn {
     }
 
     fn step(&mut self, frame: &SpikeList) -> Result<StepResult> {
+        let _span = crate::telemetry::trace::span("native.step");
         let (c, h, w) = self.net.layers[0].in_shape();
         anyhow::ensure!(
             frame.dim() == c * h * w,

@@ -185,7 +185,7 @@ mod tests {
         let wpath = dir.join("weights.bin");
         let gpath = dir.join("golden/quantize_check.txt");
         if !wpath.exists() || !gpath.exists() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         }
         let wf = WeightFile::load(&wpath).unwrap();

@@ -182,6 +182,7 @@ impl ReorderBuffer {
     /// Release every window whose end the watermark has passed by the
     /// reorder slack. Call after a batch of [`Self::push`]es.
     pub fn poll(&mut self) -> Vec<MicroWindow> {
+        let _span = crate::telemetry::trace::span("ingest.poll");
         let mut out = Vec::new();
         while self
             .emitted_until_us

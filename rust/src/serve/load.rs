@@ -219,6 +219,7 @@ pub fn drive_open_loop(
     traffic: &[SessionTraffic],
     cfg: &LoadConfig,
 ) -> Result<LoadReport> {
+    let _span = crate::telemetry::trace::span("load.drive_open_loop");
     ensure!(
         cfg.time_scale.is_finite() && cfg.time_scale > 0.0,
         "load time_scale must be positive and finite (got {})",

@@ -32,6 +32,16 @@
 //!   service backpressure, exposing the linear → knee → shedding
 //!   regimes that closed-loop replay hides.
 //!
+//! Observability: with `[telemetry]` enabled each service owns a
+//! [`crate::telemetry::Registry`] (admission/shed/commit counters,
+//! queue-wait and window-latency histograms, a target-workers gauge)
+//! and a [`crate::telemetry::FlightRecorder`] holding the last N
+//! structured events — admissions, sheds, evictions, early exits, and
+//! every autoscaler decide tick with its inputs and verdict. The hot
+//! seams (ingest poll, window run, snapshot/restore) carry
+//! [`crate::telemetry::trace`] spans for Chrome-trace export. See
+//! `flexspim serve --dump-telemetry` and README §Observability.
+//!
 //! Correctness anchor: a sample streamed through the service in aligned
 //! micro-windows is bit-identical (spikes, final vmem, prediction, SOPs,
 //! CIM ledger) to the same sample run monolithically through the

@@ -53,6 +53,9 @@ use crate::events::{DvsEvent, GestureClass, GestureGenerator};
 use crate::runtime::{NativeScnn, StateSnapshot, StepBackend};
 use crate::snn::events::AdjacencyCache;
 use crate::snn::Network;
+use crate::telemetry::{
+    trace, Counter, FlightEvent, FlightRecorder, Gauge, Histogram, Registry, TelemetryConfig,
+};
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -178,6 +181,9 @@ pub struct ServiceConfig {
     pub early_exit_min_windows: u64,
     /// SLO-driven worker-pool autoscaler (disabled by default).
     pub autoscale: AutoscaleConfig,
+    /// Service telemetry: metrics registry updates and flight-recorder
+    /// events (disabled by default; see [`crate::telemetry`]).
+    pub telemetry: TelemetryConfig,
     /// Session parameters (shared by all sessions).
     pub session: SessionConfig,
 }
@@ -196,6 +202,7 @@ impl ServiceConfig {
             early_exit_margin: 0.0,
             early_exit_min_windows: 2,
             autoscale: AutoscaleConfig::disabled(),
+            telemetry: TelemetryConfig::disabled(),
             session: SessionConfig::default_48(),
         }
     }
@@ -288,6 +295,32 @@ struct Job {
     state: StateSnapshot,
 }
 
+/// Cached handles into the service's [`Registry`]: resolved once at
+/// construction so the hot paths touch atomics/reservoirs, never the
+/// registry map.
+struct ServiceMetrics {
+    admitted: Counter,
+    shed: Counter,
+    windows_done: Counter,
+    queue_wait: Histogram,
+    window_latency: Histogram,
+    target_workers: Gauge,
+}
+
+impl ServiceMetrics {
+    fn register(registry: &Registry) -> ServiceMetrics {
+        let labels = &[("tier", "serve")];
+        ServiceMetrics {
+            admitted: registry.counter("flexspim_serve_admitted_total", labels),
+            shed: registry.counter("flexspim_serve_shed_total", labels),
+            windows_done: registry.counter("flexspim_serve_windows_done_total", labels),
+            queue_wait: registry.histogram("flexspim_serve_queue_wait_seconds", labels),
+            window_latency: registry.histogram("flexspim_serve_window_latency_seconds", labels),
+            target_workers: registry.gauge("flexspim_serve_target_workers", labels),
+        }
+    }
+}
+
 /// The streaming inference service.
 pub struct StreamingService {
     plan: Arc<SamplePlan>,
@@ -295,6 +328,9 @@ pub struct StreamingService {
     cfg: ServiceConfig,
     state: Mutex<ServiceState>,
     signal: Condvar,
+    registry: Arc<Registry>,
+    tel: ServiceMetrics,
+    recorder: Arc<FlightRecorder>,
 }
 
 impl StreamingService {
@@ -316,10 +352,17 @@ impl StreamingService {
         } else {
             cfg.workers.max(1)
         };
+        let registry = Arc::new(Registry::default());
+        let tel = ServiceMetrics::register(&registry);
+        tel.target_workers.set(start_workers as i64);
+        let recorder = Arc::new(FlightRecorder::new(cfg.telemetry.flight_capacity));
         StreamingService {
             plan,
             factory,
             cfg,
+            registry,
+            tel,
+            recorder,
             state: Mutex::new(ServiceState {
                 sessions,
                 ready: VecDeque::new(),
@@ -370,6 +413,20 @@ impl StreamingService {
         &self.cfg
     }
 
+    /// This service's metrics registry. Populated only while
+    /// `cfg.telemetry.enabled`; always exportable
+    /// ([`Registry::prometheus_text`] / [`Registry::snapshot`]).
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// This service's flight recorder (admissions, sheds, evictions,
+    /// early exits, autoscaler decisions). Populated only while
+    /// `cfg.telemetry.enabled`.
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
+    }
+
     /// Open a new session.
     pub fn open_session(&self, id: u64, label: Option<usize>) -> Result<()> {
         let mut st = self.state.lock().unwrap();
@@ -401,6 +458,7 @@ impl StreamingService {
     /// the session's jitter buffer. Completed windows are admitted to the
     /// run queue (or shed under overload).
     pub fn ingest(&self, id: u64, events: &[DvsEvent]) -> Result<()> {
+        let _span = trace::span("serve.ingest");
         let mut st = self.state.lock().unwrap();
         ensure!(!st.shutdown, "service is shut down");
         let st_ref = &mut *st;
@@ -416,7 +474,7 @@ impl StreamingService {
             }
             s.ingest.poll()
         };
-        Self::admit_windows(st_ref, &self.cfg, id, windows);
+        self.admit_windows(st_ref, id, windows);
         drop(st);
         self.signal.notify_all();
         Ok(())
@@ -441,7 +499,7 @@ impl StreamingService {
             s.last_activity = Instant::now();
             windows
         };
-        Self::admit_windows(st_ref, &self.cfg, id, windows);
+        self.admit_windows(st_ref, id, windows);
         drop(st);
         self.signal.notify_all();
         Ok(())
@@ -450,12 +508,9 @@ impl StreamingService {
     /// Admission control: bound the global and per-session queues,
     /// shedding the newest windows on overflow (degrade by skipping time,
     /// never by stalling).
-    fn admit_windows(
-        st: &mut ServiceState,
-        cfg: &ServiceConfig,
-        id: u64,
-        windows: Vec<MicroWindow>,
-    ) {
+    fn admit_windows(&self, st: &mut ServiceState, id: u64, windows: Vec<MicroWindow>) {
+        let cfg = &self.cfg;
+        let tel = cfg.telemetry.enabled;
         for w in windows {
             let over_global = st.queued_windows >= cfg.queue_capacity;
             let s = match st.sessions.get_mut(id) {
@@ -487,6 +542,10 @@ impl StreamingService {
                     // A shed final window still finishes the session.
                     s.finished = true;
                 }
+                if tel {
+                    self.tel.shed.inc();
+                    self.recorder.record(FlightEvent::Shed { session: id });
+                }
                 continue;
             }
             let was_idle = s.queue.is_empty() && !s.running;
@@ -497,6 +556,10 @@ impl StreamingService {
             st.queued_windows += 1;
             if was_idle {
                 st.ready.push_back(id);
+            }
+            if tel {
+                self.tel.admitted.inc();
+                self.recorder.record(FlightEvent::Admit { session: id, seq });
             }
         }
     }
@@ -569,12 +632,22 @@ impl StreamingService {
                         // session's vmem resident (possibly spilling LRU
                         // peers) — accounted in the SessionManager and
                         // priced at report time.
-                        let _ = st_ref.sessions.admit(id);
+                        let charge = st_ref.sessions.admit(id);
+                        if self.cfg.telemetry.enabled && charge.evictions > 0 {
+                            self.recorder.record(FlightEvent::Evict {
+                                session: id,
+                                evictions: charge.evictions,
+                                spill_bits: charge.spill_bits,
+                            });
+                        }
                         break Job { id, window, enqueued_at, state };
                     }
                     st = self.signal.wait(st).unwrap();
                 }
             };
+            if self.cfg.telemetry.enabled {
+                self.tel.queue_wait.observe(job.enqueued_at.elapsed().as_secs_f64());
+            }
             if self.cfg.deterministic_admission {
                 // Taking the smallest seq may have unblocked a sibling on
                 // the next one.
@@ -585,6 +658,14 @@ impl StreamingService {
                 match make() {
                     Ok(b) => backend = Some(b),
                     Err(e) => {
+                        if self.cfg.telemetry.enabled {
+                            self.recorder
+                                .record(FlightEvent::Error { message: format!("{e:#}") });
+                            crate::log_error!(
+                                "serve worker {idx}: backend construction failed: {e:#}\n{}",
+                                self.recorder.dump()
+                            );
+                        }
                         // The job is already accounted in-flight: undo that
                         // under the same lock that records the error, so
                         // drain() never sees in_flight == 0 with it unset.
@@ -614,6 +695,10 @@ impl StreamingService {
                     let st_ref = &mut *st;
                     let latency_s = job.enqueued_at.elapsed().as_secs_f64();
                     st_ref.recent_latency.push(latency_s);
+                    if self.cfg.telemetry.enabled {
+                        self.tel.windows_done.inc();
+                        self.tel.window_latency.observe(latency_s);
+                    }
                     let mut dropped_seqs = Vec::new();
                     let requeue = {
                         let s = st_ref
@@ -644,6 +729,12 @@ impl StreamingService {
                             && s.smoothed_margin() >= self.cfg.early_exit_margin
                         {
                             s.early_exited = true;
+                            if self.cfg.telemetry.enabled {
+                                self.recorder.record(FlightEvent::EarlyExit {
+                                    session: job.id,
+                                    margin: s.smoothed_margin(),
+                                });
+                            }
                         }
                         if s.early_exited {
                             while let Some(qw) = s.queue.pop_front() {
@@ -670,6 +761,14 @@ impl StreamingService {
                     self.signal.notify_all();
                 }
                 Err(e) => {
+                    if self.cfg.telemetry.enabled {
+                        self.recorder
+                            .record(FlightEvent::Error { message: format!("{e:#}") });
+                        crate::log_error!(
+                            "serve worker {idx}: window failed: {e:#}\n{}",
+                            self.recorder.dump()
+                        );
+                    }
                     // One lock for decrement + error record: drain() must
                     // never observe in_flight == 0 with the error unset.
                     let mut st = self.state.lock().unwrap();
@@ -694,11 +793,19 @@ impl StreamingService {
         bufs: &mut SampleBuffers,
         job: &Job,
     ) -> Result<(Vec<i64>, StateSnapshot, WindowTotals)> {
+        let _span = trace::span("serve.window");
         let frames = encode_window(&self.cfg.session, &job.window);
-        backend.restore(&job.state)?;
+        {
+            let _s = trace::span("serve.restore");
+            backend.restore(&job.state)?;
+        }
         let mut window_rate = vec![0i64; 10];
         let totals = self.plan.run_frames(backend, bufs, &frames, &mut window_rate)?;
-        Ok((window_rate, backend.snapshot(), totals))
+        let snapshot = {
+            let _s = trace::span("serve.snapshot");
+            backend.snapshot()
+        };
+        Ok((window_rate, snapshot, totals))
     }
 
     /// Block until every admitted window has executed (or a worker
@@ -736,6 +843,15 @@ impl StreamingService {
         let p99 = st.recent_latency.pct(99.0);
         let current = st.target_workers;
         let (target, calm) = a.decide(current, p99, st.queued_windows, calm_ticks);
+        if self.cfg.telemetry.enabled {
+            self.recorder.record(FlightEvent::AutoscaleDecision {
+                current,
+                p99_ms: p99 * 1e3,
+                queued: st.queued_windows,
+                calm_ticks,
+                target,
+            });
+        }
         if target != current {
             st.target_workers = target;
             if target > current {
@@ -743,6 +859,14 @@ impl StreamingService {
                 st.peak_workers = st.peak_workers.max(target);
             } else {
                 st.scale_downs += 1;
+            }
+            if self.cfg.telemetry.enabled {
+                self.tel.target_workers.set(target as i64);
+                self.recorder.record(if target > current {
+                    FlightEvent::ScaleUp { from: current, to: target }
+                } else {
+                    FlightEvent::ScaleDown { from: current, to: target }
+                });
             }
             drop(st);
             // Grown: parked workers above the old target are waiting on

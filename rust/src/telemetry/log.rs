@@ -1,0 +1,186 @@
+//! Leveled logging: the crate's only sanctioned path to stdout/stderr.
+//!
+//! Library and CLI code log through the `log_error!` … `log_trace!`
+//! macros instead of ad-hoc `println!`/`eprintln!`, so every line is
+//! gated by one global [`Level`] set from the `FLEXSPIM_LOG`
+//! environment variable ([`init_from_env`]) or the CLI `--verbosity`
+//! flag.
+//!
+//! Routing keeps existing consumers working: [`Level::Info`] writes the
+//! message *bare* to stdout (CLI reports, bench tables, and the
+//! `BENCH_JSON` trajectory lines keep their exact format and remain
+//! greppable), while every other level goes to stderr prefixed with
+//! `[level]`. Raising the threshold above `info` therefore silences
+//! normal report output too — useful for machine-read runs.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first. The global threshold admits a
+/// message when `message level <= threshold`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Unrecoverable or user-visible failures.
+    Error = 0,
+    /// Degraded-but-continuing conditions (missing artifacts, skips).
+    Warn = 1,
+    /// Normal report output (the default threshold; goes to stdout).
+    Info = 2,
+    /// Diagnostic detail for debugging a run.
+    Debug = 3,
+    /// Per-event firehose.
+    Trace = 4,
+}
+
+impl Level {
+    /// Parse a level name (case-insensitive) or numeric threshold 0–4.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" | "0" => Some(Level::Error),
+            "warn" | "warning" | "1" => Some(Level::Warn),
+            "info" | "2" => Some(Level::Info),
+            "debug" | "3" => Some(Level::Debug),
+            "trace" | "4" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    /// Lower-case level name (the stderr prefix).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// Global threshold; `Info` by default so CLI/bench output is visible
+/// out of the box.
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global log threshold.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// The current global log threshold.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// True when a message at `l` would currently be written.
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Initialize the threshold from the `FLEXSPIM_LOG` environment
+/// variable, if set to a parseable level. Unparseable values are
+/// ignored (the default stays), never fatal.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("FLEXSPIM_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+/// Write one message at `l` (no-op when the threshold excludes it).
+/// Info goes bare to stdout; everything else to stderr with a `[level]`
+/// prefix. Prefer the `log_*!` macros over calling this directly.
+pub fn write(l: Level, args: fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    if l == Level::Info {
+        println!("{args}");
+    } else {
+        eprintln!("[{}] {args}", l.as_str());
+    }
+}
+
+/// Log at [`Level::Error`] (stderr, `[error]` prefix).
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::telemetry::log::write($crate::telemetry::log::Level::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Warn`] (stderr, `[warn]` prefix).
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::telemetry::log::write($crate::telemetry::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Info`] — bare stdout, the normal report channel.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::telemetry::log::write($crate::telemetry::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Debug`] (stderr, `[debug]` prefix).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::telemetry::log::write($crate::telemetry::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Trace`] (stderr, `[trace]` prefix).
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::telemetry::log::write($crate::telemetry::log::Level::Trace, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_names_and_numbers() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse(" info "), Some(Level::Info));
+        assert_eq!(Level::parse("3"), Some(Level::Debug));
+        assert_eq!(Level::parse("4"), Some(Level::Trace));
+        assert_eq!(Level::parse("loud"), None);
+    }
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+        assert_eq!(Level::Error.as_str(), "error");
+        assert_eq!(Level::Trace.as_str(), "trace");
+    }
+
+    // `enabled()`/`set_level()` mutate process-global state shared with
+    // parallel tests, so the round-trip restores the default at the end.
+    #[test]
+    fn threshold_gates_levels() {
+        let before = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error) && enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(before);
+    }
+}

@@ -1,0 +1,562 @@
+//! Typed metrics registry with Prometheus-text and JSON exporters.
+//!
+//! Metrics are registered by name plus a label set (`tier`, `worker`,
+//! `session`, `layer`, …) and come in three flavors:
+//!
+//! * [`Counter`] — monotonically increasing `u64` (lock-free).
+//! * [`Gauge`] — instantaneous `i64` (lock-free).
+//! * [`Histogram`] — latency-style distribution backed by the
+//!   sorted-reservoir [`LatencyStats`], exported as p50/p95/p99
+//!   summaries.
+//!
+//! Registration returns cheap cloneable handles (an `Arc` around the
+//! cell), so hot paths update without touching the registry lock. Two
+//! exporters read a consistent view: [`Registry::prometheus_text`]
+//! (standard text exposition, scrapeable) and [`Registry::snapshot`]
+//! — a [`TelemetrySnapshot`] whose [`TelemetrySnapshot::to_json`]
+//! rendering is *deterministic* (BTree iteration order, fixed number
+//! formatting), so benches and tests can assert on it byte-for-byte.
+//!
+//! A process-wide registry lives behind [`global`] (the engine's
+//! hot-path counters batch into it); services own private registries
+//! so concurrent tests never share state.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::coordinator::metrics::LatencyStats;
+
+/// Identity of one metric: name plus sorted label pairs.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct MetricKey {
+    name: String,
+    labels: Vec<(String, String)>,
+}
+
+impl MetricKey {
+    fn new(name: &str, labels: &[(&str, &str)]) -> MetricKey {
+        let mut labels: Vec<(String, String)> =
+            labels.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect();
+        labels.sort();
+        MetricKey { name: name.to_string(), labels }
+    }
+}
+
+/// Monotonic counter handle. Clones share the same cell.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add `n` to the counter.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous gauge handle. Clones share the same cell.
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    /// Set the gauge to `v`.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Add `d` (may be negative).
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Distribution handle backed by a sorted-reservoir [`LatencyStats`].
+/// Clones share the same reservoir.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram(Arc<Mutex<LatencyStats>>);
+
+impl Histogram {
+    /// Record one observation (seconds, or any unit — the exporter is
+    /// unit-agnostic).
+    pub fn observe(&self, v: f64) {
+        self.0.lock().unwrap().push(v);
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.0.lock().unwrap().count() as u64
+    }
+
+    /// A point-in-time copy of the underlying reservoir.
+    pub fn stats(&self) -> LatencyStats {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<MetricKey, Counter>,
+    gauges: BTreeMap<MetricKey, Gauge>,
+    histograms: BTreeMap<MetricKey, Histogram>,
+}
+
+/// A collection of named metrics with deterministic export order.
+///
+/// `counter`/`gauge`/`histogram` get-or-register: the first call for a
+/// (name, labels) pair creates the metric, later calls return a handle
+/// to the same cell — so instrumentation sites just ask for what they
+/// need with no separate registration step.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or register the counter `name` with `labels`.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let key = MetricKey::new(name, labels);
+        self.inner.lock().unwrap().counters.entry(key).or_default().clone()
+    }
+
+    /// Get or register the gauge `name` with `labels`.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let key = MetricKey::new(name, labels);
+        self.inner.lock().unwrap().gauges.entry(key).or_default().clone()
+    }
+
+    /// Get or register the histogram `name` with `labels`.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Histogram {
+        let key = MetricKey::new(name, labels);
+        self.inner.lock().unwrap().histograms.entry(key).or_default().clone()
+    }
+
+    /// Prometheus text exposition of every registered metric: `# TYPE`
+    /// lines per family, histograms as summaries with `quantile`
+    /// labels plus `_sum`/`_count` series. Deterministic (sorted by
+    /// name, then labels).
+    pub fn prometheus_text(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        let mut last_family = String::new();
+        for (key, c) in &inner.counters {
+            type_line(&mut out, &mut last_family, &key.name, "counter");
+            out.push_str(&format!("{}{} {}\n", key.name, label_text(&key.labels, &[]), c.get()));
+        }
+        for (key, g) in &inner.gauges {
+            type_line(&mut out, &mut last_family, &key.name, "gauge");
+            out.push_str(&format!("{}{} {}\n", key.name, label_text(&key.labels, &[]), g.get()));
+        }
+        for (key, h) in &inner.histograms {
+            type_line(&mut out, &mut last_family, &key.name, "summary");
+            let stats = h.stats();
+            for (q, v) in [(0.5, stats.p50()), (0.95, stats.p95()), (0.99, stats.p99())] {
+                out.push_str(&format!(
+                    "{}{} {}\n",
+                    key.name,
+                    label_text(&key.labels, &[("quantile", &format!("{q}"))]),
+                    prom_num(v)
+                ));
+            }
+            let count = stats.count() as u64;
+            out.push_str(&format!(
+                "{}_sum{} {}\n",
+                key.name,
+                label_text(&key.labels, &[]),
+                prom_num(stats.mean() * count as f64)
+            ));
+            out.push_str(&format!("{}_count{} {count}\n", key.name, label_text(&key.labels, &[])));
+        }
+        out
+    }
+
+    /// A consistent point-in-time view of every metric, for JSON export
+    /// and direct assertions.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let inner = self.inner.lock().unwrap();
+        TelemetrySnapshot {
+            counters: inner
+                .counters
+                .iter()
+                .map(|(k, c)| CounterSample {
+                    name: k.name.clone(),
+                    labels: k.labels.clone(),
+                    value: c.get(),
+                })
+                .collect(),
+            gauges: inner
+                .gauges
+                .iter()
+                .map(|(k, g)| GaugeSample {
+                    name: k.name.clone(),
+                    labels: k.labels.clone(),
+                    value: g.get(),
+                })
+                .collect(),
+            histograms: inner
+                .histograms
+                .iter()
+                .map(|(k, h)| {
+                    let stats = h.stats();
+                    let count = stats.count() as u64;
+                    HistogramSample {
+                        name: k.name.clone(),
+                        labels: k.labels.clone(),
+                        count,
+                        sum: stats.mean() * count as f64,
+                        p50: stats.p50(),
+                        p95: stats.p95(),
+                        p99: stats.p99(),
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Emit a `# TYPE` header when entering a new metric family.
+fn type_line(out: &mut String, last_family: &mut String, name: &str, kind: &str) {
+    if last_family != name {
+        out.push_str(&format!("# TYPE {name} {kind}\n"));
+        last_family.clear();
+        last_family.push_str(name);
+    }
+}
+
+/// Render a label set as `{k="v",...}` (empty string when no labels),
+/// with `extra` pairs appended. Values are escaped per the exposition
+/// format (backslash, quote, newline).
+fn label_text(labels: &[(String, String)], extra: &[(&str, &str)]) -> String {
+    if labels.is_empty() && extra.is_empty() {
+        return String::new();
+    }
+    let escape = |v: &str| v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape(v)))
+        .collect();
+    parts.extend(extra.iter().map(|&(k, v)| format!("{k}=\"{}\"", escape(v))));
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Prometheus sample-value formatting: integral floats without a
+/// fraction, otherwise 6 decimals; non-finite as `NaN`.
+fn prom_num(v: f64) -> String {
+    json_num(v)
+}
+
+/// JSON number formatting shared with `util::bench::json_line`:
+/// integral values render without a fraction, non-finite as `NaN` →
+/// the JSON exporter maps that to `null`.
+fn json_num(v: f64) -> String {
+    if !v.is_finite() {
+        return "NaN".to_string();
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+/// One counter's value at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterSample {
+    /// Metric name.
+    pub name: String,
+    /// Sorted label pairs.
+    pub labels: Vec<(String, String)>,
+    /// Counter value.
+    pub value: u64,
+}
+
+/// One gauge's value at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaugeSample {
+    /// Metric name.
+    pub name: String,
+    /// Sorted label pairs.
+    pub labels: Vec<(String, String)>,
+    /// Gauge value.
+    pub value: i64,
+}
+
+/// One histogram's summary at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSample {
+    /// Metric name.
+    pub name: String,
+    /// Sorted label pairs.
+    pub labels: Vec<(String, String)>,
+    /// Observations recorded.
+    pub count: u64,
+    /// Sum over all observations.
+    pub sum: f64,
+    /// Median.
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+}
+
+/// Point-in-time export of a [`Registry`], with a deterministic JSON
+/// rendering for bench/test assertions.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TelemetrySnapshot {
+    /// All counters, sorted by (name, labels).
+    pub counters: Vec<CounterSample>,
+    /// All gauges, sorted by (name, labels).
+    pub gauges: Vec<GaugeSample>,
+    /// All histogram summaries, sorted by (name, labels).
+    pub histograms: Vec<HistogramSample>,
+}
+
+impl TelemetrySnapshot {
+    /// Sum of every counter named `name` across label sets (0 when
+    /// absent) — the common test assertion.
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.counters.iter().filter(|c| c.name == name).map(|c| c.value).sum()
+    }
+
+    /// Total observation count of every histogram named `name`.
+    pub fn histogram_count(&self, name: &str) -> u64 {
+        self.histograms.iter().filter(|h| h.name == name).map(|h| h.count).sum()
+    }
+
+    /// Deterministic single-line JSON rendering: fixed key order,
+    /// sorted metrics, `json_line`-style number formatting (integral
+    /// values without a fraction, non-finite as `null`). Two snapshots
+    /// of identical metric state render byte-identically.
+    pub fn to_json(&self) -> String {
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let labels_json = |labels: &[(String, String)]| {
+            let parts: Vec<String> = labels
+                .iter()
+                .map(|(k, v)| format!("\"{}\":\"{}\"", esc(k), esc(v)))
+                .collect();
+            format!("{{{}}}", parts.join(","))
+        };
+        let num = |v: f64| {
+            let s = json_num(v);
+            if s == "NaN" {
+                "null".to_string()
+            } else {
+                s
+            }
+        };
+        let counters: Vec<String> = self
+            .counters
+            .iter()
+            .map(|c| {
+                format!(
+                    "{{\"name\":\"{}\",\"labels\":{},\"value\":{}}}",
+                    esc(&c.name),
+                    labels_json(&c.labels),
+                    c.value
+                )
+            })
+            .collect();
+        let gauges: Vec<String> = self
+            .gauges
+            .iter()
+            .map(|g| {
+                format!(
+                    "{{\"name\":\"{}\",\"labels\":{},\"value\":{}}}",
+                    esc(&g.name),
+                    labels_json(&g.labels),
+                    g.value
+                )
+            })
+            .collect();
+        let histograms: Vec<String> = self
+            .histograms
+            .iter()
+            .map(|h| {
+                format!(
+                    "{{\"name\":\"{}\",\"labels\":{},\"count\":{},\"sum\":{},\"p50\":{},\"p95\":{},\"p99\":{}}}",
+                    esc(&h.name),
+                    labels_json(&h.labels),
+                    h.count,
+                    num(h.sum),
+                    num(h.p50),
+                    num(h.p95),
+                    num(h.p99)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"counters\":[{}],\"gauges\":[{}],\"histograms\":[{}]}}",
+            counters.join(","),
+            gauges.join(","),
+            histograms.join(",")
+        )
+    }
+}
+
+/// The process-wide registry (lazily created). Engine-tier hot-path
+/// counters live here; services keep their own [`Registry`] instances.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Pre-registered handles for the engine hot path, fetched once and
+/// cached — `run_frames` batches one `add` per counter per window, so
+/// the enabled cost is four relaxed atomic adds per window (and one
+/// load when disabled).
+pub struct HotPathCounters {
+    /// Spike frames executed.
+    pub frames: Counter,
+    /// Input spike events consumed.
+    pub in_events: Counter,
+    /// Synaptic operations performed.
+    pub sops: Counter,
+    /// Micro-windows completed.
+    pub windows: Counter,
+}
+
+impl HotPathCounters {
+    /// Batch one executed window into the counters.
+    pub fn record_window(&self, frames: u64, in_events: u64, sops: u64) {
+        self.frames.add(frames);
+        self.in_events.add(in_events);
+        self.sops.add(sops);
+        self.windows.inc();
+    }
+}
+
+/// The engine's cached hot-path counters in the [`global`] registry.
+pub fn hot() -> &'static HotPathCounters {
+    static HOT: OnceLock<HotPathCounters> = OnceLock::new();
+    HOT.get_or_init(|| {
+        let g = global();
+        let labels = &[("tier", "engine")];
+        HotPathCounters {
+            frames: g.counter("flexspim_engine_frames_total", labels),
+            in_events: g.counter("flexspim_engine_in_events_total", labels),
+            sops: g.counter("flexspim_engine_sops_total", labels),
+            windows: g.counter("flexspim_engine_windows_total", labels),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_cells_and_labels_distinguish() {
+        let r = Registry::new();
+        let a = r.counter("x_total", &[("tier", "serve")]);
+        let b = r.counter("x_total", &[("tier", "serve")]);
+        let c = r.counter("x_total", &[("tier", "engine")]);
+        a.add(2);
+        b.inc();
+        c.add(10);
+        assert_eq!(a.get(), 3, "same (name, labels) shares one cell");
+        assert_eq!(c.get(), 10);
+        assert_eq!(r.snapshot().counter_total("x_total"), 13);
+    }
+
+    #[test]
+    fn label_order_is_canonicalized() {
+        let r = Registry::new();
+        let a = r.counter("y_total", &[("b", "2"), ("a", "1")]);
+        let b = r.counter("y_total", &[("a", "1"), ("b", "2")]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "label order must not split the metric");
+    }
+
+    #[test]
+    fn gauge_set_and_add() {
+        let r = Registry::new();
+        let g = r.gauge("depth", &[]);
+        g.set(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+        assert_eq!(r.snapshot().gauges[0].value, 3);
+    }
+
+    #[test]
+    fn histogram_summarizes_through_latency_stats() {
+        let r = Registry::new();
+        let h = r.histogram("lat_seconds", &[("tier", "serve")]);
+        for i in 1..=100 {
+            h.observe(i as f64 * 1e-3);
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.histogram_count("lat_seconds"), 100);
+        let s = &snap.histograms[0];
+        assert!((s.p50 - 0.050).abs() < 2e-3, "p50 {}", s.p50);
+        assert!(s.p99 >= s.p95 && s.p95 >= s.p50);
+        assert!((s.sum - 5.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let r = Registry::new();
+        r.counter("c_total", &[("tier", "serve")]).add(7);
+        r.gauge("g_now", &[]).set(-4);
+        r.histogram("h_seconds", &[("worker", "0")]).observe(0.5);
+        let text = r.prometheus_text();
+        assert!(text.contains("# TYPE c_total counter\n"));
+        assert!(text.contains("c_total{tier=\"serve\"} 7\n"));
+        assert!(text.contains("# TYPE g_now gauge\n"));
+        assert!(text.contains("g_now -4\n"));
+        assert!(text.contains("# TYPE h_seconds summary\n"));
+        assert!(text.contains("h_seconds{worker=\"0\",quantile=\"0.5\"} 0.500000\n"));
+        assert!(text.contains("h_seconds_count{worker=\"0\"} 1\n"));
+        assert!(text.contains("h_seconds_sum{worker=\"0\"} 0.500000\n"));
+    }
+
+    #[test]
+    fn json_snapshot_is_deterministic_and_escapes() {
+        let r = Registry::new();
+        r.counter("c_total", &[("note", "a\"b")]).add(1);
+        r.histogram("h", &[]).observe(2.0);
+        let a = r.snapshot().to_json();
+        let b = r.snapshot().to_json();
+        assert_eq!(a, b, "unchanged state renders byte-identically");
+        assert!(a.contains("\"note\":\"a\\\"b\""), "label values are escaped: {a}");
+        assert!(a.contains("\"p50\":2"), "integral floats render without fraction: {a}");
+        assert!(a.starts_with("{\"counters\":["));
+    }
+
+    #[test]
+    fn empty_histogram_percentiles_render_null() {
+        let r = Registry::new();
+        let _ = r.histogram("empty", &[]);
+        let json = r.snapshot().to_json();
+        assert!(json.contains("\"p50\":null"), "NaN percentiles become null: {json}");
+    }
+
+    #[test]
+    fn hot_counters_batch_into_global() {
+        let before = global().snapshot().counter_total("flexspim_engine_windows_total");
+        hot().record_window(4, 100, 2000);
+        let snap = global().snapshot();
+        assert!(snap.counter_total("flexspim_engine_windows_total") >= before + 1);
+        assert!(snap.counter_total("flexspim_engine_sops_total") >= 2000);
+    }
+}

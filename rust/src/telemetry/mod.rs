@@ -1,0 +1,102 @@
+//! Observability for the full serve stack: logging, metrics, tracing,
+//! and a flight recorder.
+//!
+//! The paper's headline numbers are all *measured* quantities, and the
+//! ROADMAP items ahead (fleet traffic ledgers, a live precision
+//! controller) need in-flight visibility rather than end-of-run
+//! aggregates. This module is that layer, in four pieces:
+//!
+//! * [`log`] — a leveled logger (`log_error!` … `log_trace!` macros)
+//!   gated by `FLEXSPIM_LOG` / `--verbosity`, so library code never
+//!   writes unconditionally to stderr. Info-level output goes to stdout
+//!   verbatim (CLI reports and `BENCH_JSON` lines keep their format).
+//! * [`metrics`] — a typed counter/gauge/histogram registry with two
+//!   exporters: Prometheus text exposition and a deterministic JSON
+//!   snapshot ([`metrics::TelemetrySnapshot`]) that tests assert on.
+//!   Histograms reuse the sorted-reservoir
+//!   [`LatencyStats`](crate::coordinator::metrics::LatencyStats).
+//! * [`trace`] — scoped spans around the hot seams (window step, frame
+//!   step, ingest, queue wait, snapshot/restore), recorded into bounded
+//!   per-thread rings and exportable as Chrome `trace_event` JSON
+//!   (open in Perfetto or `chrome://tracing`). A sampling knob keeps
+//!   the default cost to one relaxed atomic load per span site.
+//! * [`recorder`] — a bounded ring of the last N structured service
+//!   events (admissions, sheds, evictions, scale decisions, early
+//!   exits) for after-the-fact diagnosis of saturation failures.
+//!
+//! Configuration rides the deploy plumbing: a `[telemetry]` section in
+//! [`DeploymentSpec`](crate::deploy::DeploymentSpec) (TOML/builder/CLI
+//! overlays) enables recording globally via [`set_enabled`] and
+//! per-service via [`TelemetryConfig`]. Everything is off by default
+//! and the instrumentation points cost a single relaxed atomic load
+//! when disabled (bounded by the CI `telemetry-overhead` smoke step).
+
+pub mod log;
+pub mod metrics;
+pub mod recorder;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, Registry, TelemetrySnapshot};
+pub use recorder::{FlightEvent, FlightRecorder};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Global telemetry master switch (process-wide hot-path gate).
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// True when telemetry recording is globally enabled.
+///
+/// Hot paths (e.g. the engine's per-window counter batch) check this
+/// single relaxed load before touching the registry, so the disabled
+/// cost is one atomic read.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip the global telemetry switch. [`crate::deploy`] calls this when
+/// a spec with `[telemetry] enabled = true` deploys; benches flip it to
+/// measure the instrumented-vs-bare overhead.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Per-service telemetry configuration — the runtime twin of
+/// [`crate::deploy::TelemetrySpec`], carried on
+/// [`ServiceConfig`](crate::serve::ServiceConfig) so each service
+/// records into its own registry/recorder deterministically (tests
+/// never race on process-global state).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Record service metrics and flight-recorder events.
+    pub enabled: bool,
+    /// Flight-recorder ring capacity (last N events are kept).
+    pub flight_capacity: usize,
+}
+
+impl TelemetryConfig {
+    /// Telemetry off (the default): recording sites reduce to a bool
+    /// check, the flight ring keeps its nominal capacity if enabled
+    /// later.
+    pub fn disabled() -> TelemetryConfig {
+        TelemetryConfig { enabled: false, flight_capacity: 256 }
+    }
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> TelemetryConfig {
+        TelemetryConfig::disabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_default_is_disabled() {
+        let c = TelemetryConfig::default();
+        assert!(!c.enabled);
+        assert_eq!(c.flight_capacity, 256);
+        assert_eq!(c, TelemetryConfig::disabled());
+    }
+}

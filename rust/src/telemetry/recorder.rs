@@ -1,0 +1,278 @@
+//! Flight recorder: a bounded ring of the last N structured service
+//! events.
+//!
+//! Saturation-regime failures are hard to diagnose from aggregate
+//! counters — by the time a run ends, the interesting part (what the
+//! admission path and the autoscaler were *doing* when latency blew
+//! up) is gone. Each [`crate::serve::StreamingService`] therefore keeps
+//! a [`FlightRecorder`]: every admission, shed, eviction, early exit,
+//! and autoscaler decision is appended as a timestamped
+//! [`FlightEvent`]; the ring keeps the last `capacity` of them and the
+//! accounting partitions exactly (`recorded == retained + dropped`,
+//! property-tested in `rust/tests/property_flight.rs`).
+//!
+//! The ring is dumped on service error and on demand via
+//! `flexspim serve --dump-telemetry`.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One structured service event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FlightEvent {
+    /// A micro-window was admitted to the run queue.
+    Admit {
+        /// Session id.
+        session: u64,
+        /// Global admission sequence number.
+        seq: u64,
+    },
+    /// A micro-window was shed by the load-shed policy.
+    Shed {
+        /// Session id.
+        session: u64,
+    },
+    /// Residency admission evicted other sessions' vmem to DRAM.
+    Evict {
+        /// The session whose admission caused the eviction.
+        session: u64,
+        /// Sessions evicted.
+        evictions: u64,
+        /// Bits spilled to DRAM.
+        spill_bits: u64,
+    },
+    /// A session crossed the early-exit confidence bound.
+    EarlyExit {
+        /// Session id.
+        session: u64,
+        /// Confidence margin at the exit.
+        margin: f64,
+    },
+    /// One autoscaler `decide()` tick: its inputs and verdict.
+    AutoscaleDecision {
+        /// Workers active at the tick.
+        current: usize,
+        /// Rolling p99 input (milliseconds).
+        p99_ms: f64,
+        /// Queued windows input.
+        queued: usize,
+        /// Consecutive calm ticks before this one.
+        calm_ticks: u32,
+        /// The verdict: target worker count.
+        target: usize,
+    },
+    /// The worker pool grew.
+    ScaleUp {
+        /// Workers before.
+        from: usize,
+        /// Workers after.
+        to: usize,
+    },
+    /// The worker pool shrank.
+    ScaleDown {
+        /// Workers before.
+        from: usize,
+        /// Workers after.
+        to: usize,
+    },
+    /// A worker hit a fatal error.
+    Error {
+        /// The error rendering.
+        message: String,
+    },
+}
+
+impl FlightEvent {
+    /// Short event-kind tag (the dump/report key).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FlightEvent::Admit { .. } => "admit",
+            FlightEvent::Shed { .. } => "shed",
+            FlightEvent::Evict { .. } => "evict",
+            FlightEvent::EarlyExit { .. } => "early-exit",
+            FlightEvent::AutoscaleDecision { .. } => "autoscale-decision",
+            FlightEvent::ScaleUp { .. } => "scale-up",
+            FlightEvent::ScaleDown { .. } => "scale-down",
+            FlightEvent::Error { .. } => "error",
+        }
+    }
+}
+
+/// A [`FlightEvent`] with its recording order and time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recorded {
+    /// 0-based global sequence number of the record.
+    pub seq: u64,
+    /// Microseconds since the recorder was created.
+    pub ts_us: u64,
+    /// The event.
+    pub event: FlightEvent,
+}
+
+struct RecorderInner {
+    ring: VecDeque<Recorded>,
+    recorded: u64,
+    dropped: u64,
+}
+
+/// Bounded ring of the last `capacity` service events.
+///
+/// Accounting invariant: at all times
+/// `recorded() == events().len() as u64 + dropped()` — every recorded
+/// event is either retained or counted as dropped, never both, never
+/// neither.
+pub struct FlightRecorder {
+    inner: Mutex<RecorderInner>,
+    capacity: usize,
+    t0: Instant,
+}
+
+impl FlightRecorder {
+    /// Empty recorder keeping the last `capacity` events (≥ 1).
+    pub fn new(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            inner: Mutex::new(RecorderInner {
+                ring: VecDeque::new(),
+                recorded: 0,
+                dropped: 0,
+            }),
+            capacity: capacity.max(1),
+            t0: Instant::now(),
+        }
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Append one event, evicting the oldest when full.
+    pub fn record(&self, event: FlightEvent) {
+        let ts_us = self.t0.elapsed().as_micros() as u64;
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.recorded;
+        inner.recorded += 1;
+        if inner.ring.len() >= self.capacity {
+            inner.ring.pop_front();
+            inner.dropped += 1;
+        }
+        inner.ring.push_back(Recorded { seq, ts_us, event });
+    }
+
+    /// Events recorded since creation (retained or dropped).
+    pub fn recorded(&self) -> u64 {
+        self.inner.lock().unwrap().recorded
+    }
+
+    /// Events evicted by ring wrap.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().ring.len()
+    }
+
+    /// True when nothing is retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// A copy of the retained events, oldest first.
+    pub fn events(&self) -> Vec<Recorded> {
+        self.inner.lock().unwrap().ring.iter().cloned().collect()
+    }
+
+    /// Retained events of one kind, oldest first.
+    pub fn events_of_kind(&self, kind: &str) -> Vec<Recorded> {
+        self.events().into_iter().filter(|r| r.event.kind() == kind).collect()
+    }
+
+    /// Human-readable dump: a header with the exact accounting
+    /// partition, then one line per retained event, oldest first.
+    pub fn dump(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = format!(
+            "flight recorder: {} recorded, {} retained, {} dropped (cap {})\n",
+            inner.recorded,
+            inner.ring.len(),
+            inner.dropped,
+            self.capacity
+        );
+        for r in &inner.ring {
+            out.push_str(&format!(
+                "  [+{:>10.6}s] #{:<6} {:<18} {:?}\n",
+                r.ts_us as f64 * 1e-6,
+                r.seq,
+                r.event.kind(),
+                r.event
+            ));
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("FlightRecorder")
+            .field("capacity", &self.capacity)
+            .field("recorded", &inner.recorded)
+            .field("retained", &inner.ring.len())
+            .field("dropped", &inner.dropped)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_newest_and_partitions_exactly() {
+        let rec = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            rec.record(FlightEvent::Admit { session: 1, seq: i });
+        }
+        assert_eq!(rec.recorded(), 10);
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 6);
+        assert_eq!(rec.recorded(), rec.len() as u64 + rec.dropped());
+        let evs = rec.events();
+        assert_eq!(evs.first().unwrap().seq, 6, "oldest retained is #6");
+        assert_eq!(evs.last().unwrap().seq, 9);
+        assert!(evs.windows(2).all(|w| w[0].seq + 1 == w[1].seq));
+    }
+
+    #[test]
+    fn kinds_and_dump_render() {
+        let rec = FlightRecorder::new(8);
+        rec.record(FlightEvent::Shed { session: 3 });
+        rec.record(FlightEvent::AutoscaleDecision {
+            current: 1,
+            p99_ms: 12.5,
+            queued: 9,
+            calm_ticks: 0,
+            target: 2,
+        });
+        rec.record(FlightEvent::ScaleUp { from: 1, to: 2 });
+        assert_eq!(rec.events_of_kind("scale-up").len(), 1);
+        assert_eq!(rec.events_of_kind("autoscale-decision").len(), 1);
+        let dump = rec.dump();
+        assert!(dump.starts_with("flight recorder: 3 recorded, 3 retained, 0 dropped"));
+        assert!(dump.contains("scale-up"));
+        assert!(dump.contains("p99_ms: 12.5"));
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let rec = FlightRecorder::new(0);
+        assert_eq!(rec.capacity(), 1);
+        rec.record(FlightEvent::Shed { session: 0 });
+        rec.record(FlightEvent::Shed { session: 1 });
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec.dropped(), 1);
+    }
+}

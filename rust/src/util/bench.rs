@@ -139,14 +139,14 @@ impl Bench {
     /// Run and print in one step; returns the measurement for programmatic use.
     pub fn report<T>(&self, name: &str, f: impl FnMut() -> T) -> Measurement {
         let m = self.run(name, f);
-        println!("{}", m.line());
+        crate::log_info!("{}", m.line());
         m
     }
 }
 
 /// Print a section header for a bench binary.
 pub fn section(title: &str) {
-    println!("\n=== {title} ===");
+    crate::log_info!("\n=== {title} ===");
 }
 
 /// True when `BENCH_QUICK` is set (CI smoke runs): benches shrink their
@@ -175,9 +175,11 @@ pub fn json_line(bench: &str, fields: &[(&str, f64)]) -> String {
     format!("BENCH_JSON {body}")
 }
 
-/// Print a [`json_line`].
+/// Print a [`json_line`]. Emitted at Info level (bare stdout), so the
+/// `grep '^BENCH_JSON '` capture contract in `scripts/capture_bench.sh`
+/// holds as long as the log level admits Info.
 pub fn emit_json(bench: &str, fields: &[(&str, f64)]) {
-    println!("{}", json_line(bench, fields));
+    crate::log_info!("{}", json_line(bench, fields));
 }
 
 #[cfg(test)]

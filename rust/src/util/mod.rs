@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod json_lite;
 pub mod proptest_lite;
 pub mod rng;
 pub mod stats;

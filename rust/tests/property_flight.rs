@@ -1,0 +1,105 @@
+//! Property tests for the flight recorder's ring accounting.
+//!
+//! The recorder's dump header and the `--dump-telemetry` report both
+//! read the counters straight off the ring, so they must partition
+//! *exactly* at every step: every recorded event is either retained in
+//! the ring or counted as dropped — never both, never neither — and
+//! the retained window is always the newest `capacity` events, in
+//! order, with contiguous sequence numbers and monotone timestamps.
+
+use flexspim::telemetry::{FlightEvent, FlightRecorder};
+use flexspim::util::proptest_lite::{check, prop_assert, prop_eq, Config};
+
+/// A random event of every kind, so the partition is kind-agnostic.
+fn any_event(pick: u64, i: u64) -> FlightEvent {
+    match pick {
+        0 => FlightEvent::Admit { session: i % 8, seq: i },
+        1 => FlightEvent::Shed { session: i % 8 },
+        2 => FlightEvent::Evict { session: i % 8, evictions: 1 + i % 3, spill_bits: 512 * i },
+        3 => FlightEvent::EarlyExit { session: i % 8, margin: 0.5 + i as f64 },
+        4 => FlightEvent::AutoscaleDecision {
+            current: 1 + (i % 4) as usize,
+            p99_ms: i as f64 * 0.25,
+            queued: (i % 32) as usize,
+            calm_ticks: (i % 5) as u32,
+            target: 1 + (i % 4) as usize,
+        },
+        5 => FlightEvent::ScaleUp { from: 1, to: 2 },
+        6 => FlightEvent::ScaleDown { from: 2, to: 1 },
+        _ => FlightEvent::Error { message: format!("e{i}") },
+    }
+}
+
+#[test]
+fn ring_wrap_and_drop_partition_exactly_at_every_step() {
+    check("flight-partition", &Config::default(), |c| {
+        let capacity = 1 + c.rng.below(1 + c.size as u64) as usize;
+        let rec = FlightRecorder::new(capacity);
+        prop_eq(rec.capacity(), capacity, "capacity is preserved")?;
+
+        // Push anywhere between an empty run and several wraps.
+        let total = c.rng.below(4 * capacity as u64 + 8);
+        for i in 0..total {
+            rec.record(any_event(c.rng.below(8), i));
+            prop_eq(
+                rec.recorded(),
+                rec.len() as u64 + rec.dropped(),
+                "retained + dropped covers every record, at every step",
+            )?;
+        }
+
+        prop_eq(rec.recorded(), total, "every record is counted")?;
+        prop_eq(rec.len() as u64, total.min(capacity as u64), "retained = min(total, cap)")?;
+        prop_eq(rec.dropped(), total.saturating_sub(capacity as u64), "dropped = overflow")?;
+        prop_eq(rec.is_empty(), total == 0, "is_empty agrees with the count")?;
+
+        // The retained window is exactly the newest records, in order.
+        let evs = rec.events();
+        prop_eq(evs.len(), rec.len(), "events() returns the retained window")?;
+        if let (Some(first), Some(last)) = (evs.first(), evs.last()) {
+            prop_eq(first.seq, total - evs.len() as u64, "oldest retained follows the drops")?;
+            prop_eq(last.seq, total - 1, "newest record is always retained")?;
+        }
+        prop_assert(
+            evs.windows(2).all(|w| w[0].seq + 1 == w[1].seq),
+            "retained sequence numbers are contiguous",
+        )?;
+        prop_assert(
+            evs.windows(2).all(|w| w[0].ts_us <= w[1].ts_us),
+            "retained timestamps are monotone",
+        )?;
+
+        // The dump header states the same partition.
+        let dump = rec.dump();
+        prop_assert(
+            dump.starts_with(&format!(
+                "flight recorder: {total} recorded, {} retained, {} dropped (cap {capacity})",
+                rec.len(),
+                rec.dropped()
+            )),
+            "dump header states the exact partition",
+        )
+    });
+}
+
+#[test]
+fn partition_holds_under_concurrent_recording() {
+    let rec = FlightRecorder::new(32);
+    std::thread::scope(|scope| {
+        for t in 0..4u64 {
+            let rec = &rec;
+            scope.spawn(move || {
+                for i in 0..200u64 {
+                    rec.record(FlightEvent::Admit { session: t, seq: i });
+                }
+            });
+        }
+    });
+    assert_eq!(rec.recorded(), 800);
+    assert_eq!(rec.len(), 32);
+    assert_eq!(rec.dropped(), 768);
+    assert_eq!(rec.recorded(), rec.len() as u64 + rec.dropped());
+    let evs = rec.events();
+    assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq), "ring order follows sequence order");
+    assert_eq!(evs.last().unwrap().seq, 799, "the final record is retained");
+}

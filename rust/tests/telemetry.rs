@@ -1,0 +1,221 @@
+//! Integration tests for the telemetry subsystem: registry determinism
+//! under concurrent updates, Chrome-trace export well-formedness, the
+//! `[telemetry]` TOML round trip, and the serve tier's exporters on a
+//! real deployed service (the acceptance bar: valid Prometheus text, a
+//! deterministic JSON snapshot, and the autoscaler's decision trail in
+//! the flight recorder).
+//!
+//! Metric assertions use per-service registries (no cross-test state);
+//! the JSON exports are re-parsed with `util::json_lite`, the reader
+//! that keeps the hand-rolled writers honest.
+
+use flexspim::dataflow::Policy;
+use flexspim::deploy::{AutoscaleSpec, DeploymentSpec};
+use flexspim::serve::{gesture_traffic, StreamingService};
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::telemetry::{trace, FlightEvent, Registry};
+use flexspim::util::json_lite::{self, Value};
+
+const SEED: u64 = 0x7E1E;
+const MACROS: usize = 4;
+
+/// Compact SCNN over the 48×48 gesture substrate (4 micro-windows per
+/// 100-ms session under the default session clock).
+fn test_net() -> Network {
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "telemetry-itest",
+        vec![
+            LayerSpec::conv("C1", 2, 4, 3, 4, 1, 48, 48, r),
+            LayerSpec::fc("F1", 4 * 12 * 12, 32, r),
+            LayerSpec::fc("F2", 32, 10, Resolution::new(5, 10)),
+        ],
+        16,
+    )
+}
+
+/// A telemetry-enabled service through the deployment API — the same
+/// path `flexspim serve --config ... --telemetry` takes.
+fn telemetry_service(autoscale: Option<AutoscaleSpec>) -> StreamingService {
+    let mut builder = DeploymentSpec::builder("telemetry-itest")
+        .network(&test_net())
+        .macros(MACROS)
+        .policy(Policy::HsOpt)
+        .native_backend(SEED)
+        .workers(2)
+        .telemetry_enabled(true);
+    if let Some(spec) = autoscale {
+        builder = builder.autoscale(spec);
+    }
+    builder
+        .build()
+        .expect("spec is valid")
+        .deploy()
+        .expect("spec deploys")
+        .service()
+        .expect("service materializes")
+}
+
+#[test]
+fn registry_snapshot_is_deterministic_under_concurrent_updates() {
+    // Observation values are dyadic rationals (k / 1024) whose partial
+    // sums are all exactly representable, and the total count stays far
+    // below the reservoir cap — so both the retained percentile set and
+    // the running sum are independent of thread interleaving, and the
+    // concurrent registry must render byte-identically to a sequential
+    // reference fed the same multiset.
+    let concurrent = Registry::new();
+    std::thread::scope(|scope| {
+        for t in 0..8u64 {
+            let r = &concurrent;
+            scope.spawn(move || {
+                let c = r.counter("t_ops_total", &[("tier", "test")]);
+                let h = r.histogram("t_lat", &[]);
+                for i in 0..500u64 {
+                    c.inc();
+                    h.observe(((t * 500 + i) % 97 + 1) as f64 / 1024.0);
+                }
+            });
+        }
+    });
+
+    let reference = Registry::new();
+    let c = reference.counter("t_ops_total", &[("tier", "test")]);
+    let h = reference.histogram("t_lat", &[]);
+    for n in 0..8 * 500u64 {
+        c.inc();
+        h.observe((n % 97 + 1) as f64 / 1024.0);
+    }
+
+    let snap = concurrent.snapshot();
+    assert_eq!(snap.counter_total("t_ops_total"), 4000);
+    assert_eq!(snap.histogram_count("t_lat"), 4000);
+    let a = snap.to_json();
+    assert_eq!(a, concurrent.snapshot().to_json(), "quiescent re-export is byte-identical");
+    assert_eq!(a, reference.snapshot().to_json(), "interleaving must not change the export");
+    json_lite::parse(&a).expect("snapshot JSON parses");
+}
+
+#[test]
+fn chrome_trace_export_is_well_formed() {
+    trace::set_tracing(true, 1);
+    for _ in 0..5 {
+        let _outer = trace::span("itest.outer");
+        let _inner = trace::span("itest.inner");
+    }
+    trace::set_tracing(false, 64);
+
+    let json = trace::chrome_trace_json();
+    let doc = json_lite::parse(&json).expect("trace JSON parses");
+    let events = doc.get("traceEvents").and_then(Value::as_arr).expect("traceEvents array");
+    assert!(events.len() >= 10, "both span sites recorded 5 hits each");
+    let mut names = std::collections::BTreeSet::new();
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Value::as_str), Some("X"), "complete events");
+        assert_eq!(e.get("cat").and_then(Value::as_str), Some("flexspim"));
+        assert_eq!(e.get("pid").and_then(Value::as_num), Some(1.0));
+        assert!(e.get("ts").and_then(Value::as_num).is_some_and(|v| v >= 0.0));
+        assert!(e.get("dur").and_then(Value::as_num).is_some_and(|v| v >= 0.0));
+        assert!(e.get("tid").and_then(Value::as_num).is_some_and(|v| v >= 1.0));
+        names.insert(e.get("name").and_then(Value::as_str).expect("named").to_string());
+    }
+    assert!(names.contains("itest.outer") && names.contains("itest.inner"), "{names:?}");
+    let ts: Vec<f64> =
+        events.iter().map(|e| e.get("ts").and_then(Value::as_num).unwrap()).collect();
+    assert!(ts.windows(2).all(|w| w[0] <= w[1]), "events are sorted by timestamp");
+}
+
+#[test]
+fn telemetry_toml_round_trips_through_the_deployment_spec() {
+    let spec = DeploymentSpec::builder("telemetry-itest")
+        .network(&test_net())
+        .native_backend(SEED)
+        .telemetry_enabled(true)
+        .tracing(32)
+        .build()
+        .unwrap();
+    let text = spec.to_toml();
+    assert!(text.contains("[telemetry]"), "non-default telemetry is emitted:\n{text}");
+    let parsed = DeploymentSpec::from_toml_str(&text).unwrap();
+    assert_eq!(parsed, spec);
+    assert_eq!(parsed.to_toml(), text, "serialization is a fixed point");
+}
+
+#[test]
+fn serve_run_exports_prometheus_and_a_deterministic_snapshot() {
+    let svc = telemetry_service(None);
+    let traffic = gesture_traffic(6, 21, 0);
+    let report = svc.serve(&traffic, 32).expect("serve run");
+    assert_eq!(report.finished_sessions, 6);
+    assert_eq!(report.windows_shed, 0, "nominal load must not shed");
+
+    // Registry counts must agree exactly with the service's own report.
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.counter_total("flexspim_serve_admitted_total"), report.windows_done);
+    assert_eq!(snap.counter_total("flexspim_serve_windows_done_total"), report.windows_done);
+    assert_eq!(snap.counter_total("flexspim_serve_shed_total"), 0);
+    assert_eq!(
+        snap.histogram_count("flexspim_serve_window_latency_seconds"),
+        report.windows_done
+    );
+    assert_eq!(snap.histogram_count("flexspim_serve_queue_wait_seconds"), report.windows_done);
+
+    // Prometheus text exposition carries every serve family.
+    let text = svc.metrics().prometheus_text();
+    for family in [
+        "# TYPE flexspim_serve_admitted_total counter",
+        "# TYPE flexspim_serve_windows_done_total counter",
+        "# TYPE flexspim_serve_shed_total counter",
+        "# TYPE flexspim_serve_target_workers gauge",
+        "# TYPE flexspim_serve_queue_wait_seconds summary",
+        "# TYPE flexspim_serve_window_latency_seconds summary",
+    ] {
+        assert!(text.contains(family), "missing `{family}` in:\n{text}");
+    }
+    assert!(text.contains("flexspim_serve_windows_done_total{tier=\"serve\"}"));
+
+    // The acceptance bar: the JSON snapshot parses, and re-exporting the
+    // quiescent registry is byte-identical.
+    let a = snap.to_json();
+    assert_eq!(a, svc.metrics().snapshot().to_json());
+    let doc = json_lite::parse(&a).expect("snapshot JSON parses");
+    assert!(doc.get("counters").and_then(Value::as_arr).is_some_and(|c| !c.is_empty()));
+    assert!(doc.get("histograms").and_then(Value::as_arr).is_some());
+
+    // Flight recorder: the accounting partition holds and the ring saw
+    // the admissions.
+    let rec = svc.recorder();
+    assert_eq!(rec.recorded(), rec.len() as u64 + rec.dropped());
+    assert!(!rec.is_empty());
+    assert!(rec.events_of_kind("admit").len() as u64 <= report.windows_done);
+}
+
+#[test]
+fn autoscaler_decisions_and_verdicts_land_in_the_flight_recorder() {
+    let spec = AutoscaleSpec {
+        enabled: true,
+        min_workers: 1,
+        max_workers: 2,
+        slo_p99_ms: 1000.0,
+        interval_ms: 1,
+        queue_high: 1000,
+        hysteresis_ticks: 2,
+    };
+    let svc = telemetry_service(Some(spec));
+    let traffic = gesture_traffic(6, 33, 0);
+    svc.serve(&traffic, 32).expect("autoscaled serve run");
+
+    let rec = svc.recorder();
+    let decisions = rec.events_of_kind("autoscale-decision");
+    assert!(!decisions.is_empty(), "every decide() tick is a flight event");
+    for d in &decisions {
+        let FlightEvent::AutoscaleDecision { current, target, .. } = &d.event else {
+            panic!("kind filter returned a non-decision event: {:?}", d.event);
+        };
+        assert!(*current >= 1 && *current <= 2, "inputs are live worker counts");
+        assert!(*target >= 1 && *target <= 2, "the verdict stays inside [min, max]");
+    }
+    assert_eq!(rec.recorded(), rec.len() as u64 + rec.dropped());
+    let dump = svc.recorder().dump();
+    assert!(dump.contains("autoscale-decision"), "dump renders the decision trail:\n{dump}");
+}

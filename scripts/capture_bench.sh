@@ -17,6 +17,17 @@ run_log=$(mktemp)
 trap 'rm -f "$run_log"' EXIT
 cargo bench --bench "$bench" | tee "$run_log"
 
+# Validate the new lines against the trajectory's schema line before they
+# land — a drifted field set fails the capture instead of poisoning the
+# append-only history.
+if [ -f "$out" ] && command -v python3 >/dev/null 2>&1; then
+  grep '^BENCH_JSON ' "$run_log" | python3 scripts/check_bench_schema.py --against "$out"
+elif [ -f "$out" ]; then
+  echo "warning: python3 not found, skipping schema validation" >&2
+else
+  echo "note: $out does not exist yet, skipping schema validation" >&2
+fi
+
 {
   printf '{"meta":"run","bench":"%s","date":"%s","quick":%s,"host":"%s"}\n' \
     "$bench" "$(date -u +%Y-%m-%dT%H:%M:%SZ)" \

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Capture a Chrome trace from a serve run: enables telemetry + tracing on
+# the deployed config and writes a trace_event JSON file loadable in
+# https://ui.perfetto.dev or chrome://tracing.
+#
+#   scripts/capture_trace.sh                                # serve_demo -> trace.json
+#   scripts/capture_trace.sh configs/serve_demo.toml t.json
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+config="${1:-configs/serve_demo.toml}"
+out="${2:-trace.json}"
+
+cargo run --release --quiet -- serve --config "$config" --telemetry --trace "$out"
+echo "trace written to $out — open in https://ui.perfetto.dev or chrome://tracing"

@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Validate BENCH_*.json bench-trajectory files against their schema line.
+
+Each trajectory file is append-only JSON-lines (see scripts/capture_bench.sh):
+
+  line 1   {"meta":"schema","bench":NAME,"fields":[...],"companions":[...]}
+  then     {"meta":"run","bench":NAME,"date":...}   one per capture
+  and      {"bench":NAME,field:value,...}           raw BENCH_JSON records
+
+Rules enforced:
+  * the first line must be the schema line (meta == "schema", a bench name,
+    and a non-empty field list);
+  * a data line for the primary bench must carry exactly {"bench"} plus the
+    schema fields, every value a number or null;
+  * a data line for a companion bench (listed in "companions") may carry any
+    fields, but values must still be numbers or null;
+  * any other bench name is an error — extend "companions" deliberately.
+
+Usage:
+  scripts/check_bench_schema.py [FILE...]     # default: all BENCH_*.json
+  ... | scripts/check_bench_schema.py --against FILE
+                                              # validate stdin lines (with or
+                                              # without the BENCH_JSON prefix)
+                                              # against FILE's schema line
+
+Exit status is non-zero if any line fails; failures name the file and line.
+"""
+
+import glob
+import json
+import os
+import sys
+
+PREFIX = "BENCH_JSON "
+
+
+def fail(where, lineno, msg):
+    print(f"{where}:{lineno}: {msg}", file=sys.stderr)
+    return 1
+
+
+def load_schema(path):
+    """Parse and sanity-check FILE's first line; returns the schema dict."""
+    with open(path, encoding="utf-8") as f:
+        first = f.readline().strip()
+    try:
+        schema = json.loads(first)
+    except json.JSONDecodeError as e:
+        raise ValueError(f"{path}:1: schema line is not JSON: {e}")
+    if not isinstance(schema, dict) or schema.get("meta") != "schema":
+        raise ValueError(f'{path}:1: first line must be a {{"meta":"schema"}} line')
+    if not isinstance(schema.get("bench"), str) or not schema["bench"]:
+        raise ValueError(f"{path}:1: schema needs a non-empty bench name")
+    fields = schema.get("fields")
+    if not isinstance(fields, list) or not fields or not all(
+        isinstance(x, str) for x in fields
+    ):
+        raise ValueError(f"{path}:1: schema needs a non-empty string field list")
+    companions = schema.get("companions", [])
+    if not isinstance(companions, list) or not all(
+        isinstance(x, str) for x in companions
+    ):
+        raise ValueError(f"{path}:1: companions must be a string list")
+    return schema
+
+
+def check_data_line(schema, obj, where, lineno):
+    """Validate one parsed record against the schema; returns error count."""
+    if obj.get("meta") == "run":
+        if not isinstance(obj.get("bench"), str) or "date" not in obj:
+            return fail(where, lineno, "run line needs bench and date")
+        return 0
+    bench = obj.get("bench")
+    if not isinstance(bench, str):
+        return fail(where, lineno, "data line needs a string bench name")
+    values = {k: v for k, v in obj.items() if k != "bench"}
+    bad = [k for k, v in values.items() if not isinstance(v, (int, float)) or isinstance(v, bool)]
+    bad = [k for k in bad if values[k] is not None]
+    if bad:
+        return fail(where, lineno, f"non-numeric values for {sorted(bad)}")
+    if bench == schema["bench"]:
+        want = set(schema["fields"])
+        got = set(values)
+        if got != want:
+            missing = sorted(want - got)
+            extra = sorted(got - want)
+            return fail(
+                where, lineno, f"field mismatch: missing {missing}, extra {extra}"
+            )
+        return 0
+    if bench in schema.get("companions", []):
+        return 0
+    return fail(
+        where,
+        lineno,
+        f'unknown bench "{bench}" (primary is "{schema["bench"]}", '
+        f"companions {schema.get('companions', [])})",
+    )
+
+
+def check_lines(schema, lines, where, start_lineno):
+    errors = 0
+    for lineno, raw in enumerate(lines, start=start_lineno):
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith(PREFIX):
+            line = line[len(PREFIX):]
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors += fail(where, lineno, f"not JSON: {e}")
+            continue
+        if not isinstance(obj, dict):
+            errors += fail(where, lineno, "line is not a JSON object")
+            continue
+        errors += check_data_line(schema, obj, where, lineno)
+    return errors
+
+
+def check_file(path):
+    schema = load_schema(path)
+    with open(path, encoding="utf-8") as f:
+        lines = f.readlines()
+    return check_lines(schema, lines[1:], path, 2)
+
+
+def main(argv):
+    if argv[:1] == ["--against"]:
+        if len(argv) != 2:
+            print("usage: check_bench_schema.py --against FILE", file=sys.stderr)
+            return 2
+        schema = load_schema(argv[1])
+        errors = check_lines(schema, sys.stdin.readlines(), "<stdin>", 1)
+        return 1 if errors else 0
+
+    paths = argv or sorted(glob.glob(os.path.join(os.path.dirname(__file__) or ".", "..", "BENCH_*.json")))
+    if not paths:
+        print("no BENCH_*.json files found", file=sys.stderr)
+        return 2
+    errors = 0
+    for path in paths:
+        try:
+            n = check_file(path)
+        except (OSError, ValueError) as e:
+            print(e, file=sys.stderr)
+            errors += 1
+            continue
+        errors += n
+        if n == 0:
+            print(f"{path}: OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main(sys.argv[1:]))
+    except BrokenPipeError:
+        sys.exit(0)

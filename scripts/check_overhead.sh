@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Gate the telemetry overhead measured by `cargo bench --bench perf_hotpath`
+# (section 6 emits a `BENCH_JSON {"bench":"telemetry_overhead",...}` line):
+# fail if overhead_pct exceeds the budget. CI runs this so instrumentation
+# at default sampling can never quietly tax the hot path.
+#
+#   cargo bench --bench perf_hotpath | tee run.log
+#   scripts/check_overhead.sh run.log        # default budget: 5 %
+#   scripts/check_overhead.sh run.log 7.5    # custom budget
+set -euo pipefail
+
+log="${1:?usage: check_overhead.sh RUN_LOG [BUDGET_PCT]}"
+budget="${2:-5}"
+
+line=$(grep '^BENCH_JSON {"bench":"telemetry_overhead"' "$log" | tail -n 1 || true)
+if [ -z "$line" ]; then
+  echo "error: no telemetry_overhead BENCH_JSON line in $log" >&2
+  exit 1
+fi
+
+pct=$(printf '%s\n' "$line" | sed 's/.*"overhead_pct"://; s/[,}].*//')
+if [ "$pct" = "null" ] || [ -z "$pct" ]; then
+  echo "error: overhead_pct missing or null in: $line" >&2
+  exit 1
+fi
+
+awk -v p="$pct" -v b="$budget" 'BEGIN {
+  if (p > b) {
+    printf "FAIL: telemetry overhead %.2f %% exceeds the %.2f %% budget\n", p, b
+    exit 1
+  }
+  printf "OK: telemetry overhead %.2f %% within the %.2f %% budget\n", p, b
+}'
