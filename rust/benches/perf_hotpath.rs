@@ -19,10 +19,12 @@ use flexspim::coordinator::engine::SampleBuffers;
 use flexspim::dataflow::{Mapper, Policy};
 use flexspim::deploy::DeploymentSpec;
 use flexspim::energy::SystemEnergyModel;
-use flexspim::events::{encode_frames, GestureClass, GestureGenerator};
+use flexspim::events::{encode_frames, encode_frames_sparse, GestureClass, GestureGenerator};
+use flexspim::snn::events::{EventConvLayer, EventFcLayer, SpikeList};
 use flexspim::snn::network::scnn_dvs_gesture;
-use flexspim::snn::Resolution;
-use flexspim::util::bench::{emit_json, section, Bench};
+use flexspim::snn::quant::{max_val, min_val};
+use flexspim::snn::{LayerSpec, Resolution};
+use flexspim::util::bench::{emit_json, quick_mode, section, Bench};
 use flexspim::util::rng::Rng;
 
 fn main() {
@@ -87,7 +89,10 @@ fn main() {
         gen.sample(GestureClass::ArmRoll, &mut rng).events.len()
     });
     let stream = gen.sample(GestureClass::ArmRoll, &mut Rng::new(5));
-    b.report("encode 16 frames", || encode_frames(&stream, 16).len());
+    b.report("encode 16 frames (dense)", || encode_frames(&stream, 16).len());
+    b.report("encode 16 frames (sparse)", || {
+        encode_frames_sparse(&stream, 16).len()
+    });
 
     // The CI `telemetry-overhead` smoke step gates on the emitted
     // overhead_pct (scripts/check_overhead.sh): instrumentation at its
@@ -105,7 +110,7 @@ fn main() {
         .unwrap();
     let plan = dep.plan().clone();
     let mut backend = dep.backend().unwrap();
-    let frames = encode_frames(&stream, 16);
+    let frames = encode_frames_sparse(&stream, 16);
     let mut bufs = SampleBuffers::default();
     let mut rate = vec![0i64; 10];
     let off = b.report("run_frames x16, telemetry off", || {
@@ -133,4 +138,124 @@ fn main() {
             ("overhead_pct", overhead_pct),
         ],
     );
+
+    // The CI `packed-speedup` smoke step gates on the emitted speedups
+    // (scripts/check_speedup.sh): the packed word-parallel kernels must
+    // beat the scalar sparse reference at moderate activity.
+    section("7. packed word-parallel SNN step vs scalar sparse step");
+    let quick = quick_mode();
+    let steps = 8usize;
+
+    // Conv layer: packed row-add scatter + bitmask fire-check vs the
+    // per-spike stamp/generation scalar path, on one weight set.
+    let side = if quick { 16 } else { 24 };
+    let res = Resolution::new(4, 9);
+    let spec = LayerSpec::conv("P", 8, 16, 3, 1, 1, side, side, res);
+    let mut wrng = Rng::new(17);
+    let (lo, hi) = (min_val(res.w_bits), max_val(res.w_bits));
+    let cw: Vec<i64> = (0..spec.num_weights()).map(|_| wrng.range_i64(lo, hi)).collect();
+    let mut conv_packed = EventConvLayer::new(spec.clone(), cw.clone(), 40);
+    let mut conv_scalar = EventConvLayer::new(spec, cw, 40);
+    let conv_in = 8 * side * side;
+    let mut out = SpikeList::default();
+    for activity in [0.1f64, 0.25] {
+        let mut rng = Rng::new(23);
+        let frames: Vec<SpikeList> = (0..steps)
+            .map(|_| {
+                let bits: Vec<bool> = (0..conv_in).map(|_| rng.chance(activity)).collect();
+                SpikeList::from_dense(&bits)
+            })
+            .collect();
+        // Bit-identity sanity at bench scale before timing anything.
+        conv_packed.reset();
+        conv_scalar.reset();
+        for f in &frames {
+            assert_eq!(conv_packed.step(f), conv_scalar.step_scalar(f));
+        }
+        conv_packed.reset();
+        let p = b.report(&format!("conv packed x{steps} @ {activity}"), || {
+            let mut spikes = 0usize;
+            for f in &frames {
+                conv_packed.step_into(f, &mut out);
+                spikes += out.count();
+            }
+            spikes
+        });
+        conv_scalar.reset();
+        let s = b.report(&format!("conv scalar x{steps} @ {activity}"), || {
+            let mut spikes = 0usize;
+            for f in &frames {
+                conv_scalar.step_scalar_into(f, &mut out);
+                spikes += out.count();
+            }
+            spikes
+        });
+        let speedup = s.median_s() / p.median_s();
+        println!("    -> packed conv speedup {speedup:.2}x @ {activity} activity");
+        emit_json(
+            "packed_step_conv",
+            &[
+                ("activity", activity),
+                ("scalar_us", s.median_s() * 1e6),
+                ("packed_us", p.median_s() * 1e6),
+                ("speedup", speedup),
+            ],
+        );
+    }
+
+    // FC layer: bit-plane popcount kernel vs per-spike column adds, forced
+    // through the cutover knob on two instances of one weight matrix.
+    let fc_in = if quick { 1024 } else { 2304 };
+    let fc_out = 64;
+    let mut wrng = Rng::new(19);
+    let fw: Vec<Vec<i64>> = (0..fc_out)
+        .map(|_| (0..fc_in).map(|_| wrng.range_i64(lo, hi)).collect())
+        .collect();
+    let mut fc_packed = EventFcLayer::new(fw.clone(), res, 60);
+    fc_packed.set_packed_cutover(0);
+    let mut fc_scalar = EventFcLayer::new(fw, res, 60);
+    fc_scalar.set_packed_cutover(usize::MAX);
+    for activity in [0.1f64, 0.25] {
+        let mut rng = Rng::new(29);
+        let frames: Vec<SpikeList> = (0..steps)
+            .map(|_| {
+                let bits: Vec<bool> = (0..fc_in).map(|_| rng.chance(activity)).collect();
+                SpikeList::from_dense(&bits)
+            })
+            .collect();
+        fc_packed.reset();
+        fc_scalar.reset();
+        for f in &frames {
+            assert_eq!(fc_packed.step(f), fc_scalar.step(f));
+        }
+        fc_packed.reset();
+        let p = b.report(&format!("fc bit-plane x{steps} @ {activity}"), || {
+            let mut spikes = 0usize;
+            for f in &frames {
+                fc_packed.step_into(f, &mut out);
+                spikes += out.count();
+            }
+            spikes
+        });
+        fc_scalar.reset();
+        let s = b.report(&format!("fc column-add x{steps} @ {activity}"), || {
+            let mut spikes = 0usize;
+            for f in &frames {
+                fc_scalar.step_into(f, &mut out);
+                spikes += out.count();
+            }
+            spikes
+        });
+        let speedup = s.median_s() / p.median_s();
+        println!("    -> packed fc speedup {speedup:.2}x @ {activity} activity");
+        emit_json(
+            "packed_step_fc",
+            &[
+                ("activity", activity),
+                ("scalar_us", s.median_s() * 1e6),
+                ("packed_us", p.median_s() * 1e6),
+                ("speedup", speedup),
+            ],
+        );
+    }
 }

@@ -70,9 +70,9 @@ use crate::coordinator::metrics::{EnergyBreakdown, RunMetrics};
 use crate::coordinator::scheduler::{Schedule, Scheduler};
 use crate::dataflow::{Mapper, Mapping, Operand, Policy, Shard};
 use crate::energy::SystemEnergyModel;
-use crate::events::{encode_frames, EventStream, SpikeFrame};
-use crate::runtime::{NativeScnn, ScnnRunner, StepBackend};
-use crate::snn::events::AdjacencyCache;
+use crate::events::{encode_frames_sparse, EventStream};
+use crate::runtime::{NativeScnn, ScnnRunner, StepBackend, StepResult};
+use crate::snn::events::{AdjacencyCache, SpikeList};
 use crate::snn::Network;
 use crate::Result;
 
@@ -226,11 +226,19 @@ pub struct SampleBuffers {
     pub banks: BankArray,
     /// 32-to-256-bit merge-and-shift unit.
     pub merge_shift: MergeShiftUnit,
+    /// Reusable per-step result scratch — [`SamplePlan::run_frames`] steps
+    /// the backend into this so the steady-state window loop stays
+    /// allocation-free (`rust/tests/alloc_steady_state.rs`).
+    pub step: StepResult,
 }
 
 impl Default for SampleBuffers {
     fn default() -> Self {
-        SampleBuffers { banks: BankArray::flexspim(), merge_shift: MergeShiftUnit::default() }
+        SampleBuffers {
+            banks: BankArray::flexspim(),
+            merge_shift: MergeShiftUnit::default(),
+            step: StepResult::default(),
+        }
     }
 }
 
@@ -276,35 +284,40 @@ impl SamplePlan {
         SamplePlan { net, mapping, schedule, energy, shards, timesteps }
     }
 
-    /// Run a window of already-encoded frames on `backend` **without
-    /// resetting state**, accumulating classifier spikes into `rate` — the
-    /// inner loop of [`Self::run_sample`], shared with the streaming serve
-    /// tier ([`crate::serve`]), whose micro-windows resume from the
-    /// session's persistent membrane potentials.
+    /// Run a window of already-encoded sparse frames on `backend`
+    /// **without resetting state**, accumulating classifier spikes into
+    /// `rate` — the inner loop of [`Self::run_sample`], shared with the
+    /// streaming serve tier ([`crate::serve`]), whose micro-windows resume
+    /// from the session's persistent membrane potentials.
+    ///
+    /// Frames arrive as borrowed [`SpikeList`]s (the encoder emits them
+    /// directly — no dense bitmap or per-frame conversion) and the backend
+    /// steps into `bufs.step`, so the loop performs no heap allocation in
+    /// steady state.
     pub fn run_frames(
         &self,
         backend: &mut dyn StepBackend,
         bufs: &mut SampleBuffers,
-        frames: &[SpikeFrame],
+        frames: &[SpikeList],
         rate: &mut [i64],
     ) -> Result<WindowTotals> {
         let _span = crate::telemetry::trace::span("plan.run_frames");
         let mut totals = WindowTotals::default();
 
-        for frame in frames {
+        for spikes_in in frames {
             // The sparse datapath: the frame enters as an AER spike list
             // and stays sparse through every layer of the backend.
-            let spikes_in = frame.to_spike_list();
             let in_count = spikes_in.count() as u64;
             // Buffer traffic: the input events flow through the
             // merge-and-shift unit.
             bufs.merge_shift.transfer(in_count.max(1), 16);
             bufs.banks.write(in_count * 16);
 
-            let step = {
+            {
                 let _s = crate::telemetry::trace::span("backend.step");
-                backend.step(&spikes_in)?
-            };
+                backend.step_into(spikes_in, &mut bufs.step)?;
+            }
+            let step = &bufs.step;
             for &c in step.out_spikes.active() {
                 rate[c as usize] += 1;
             }
@@ -385,7 +398,7 @@ impl SamplePlan {
         label: Option<usize>,
     ) -> Result<InferenceResult> {
         let t0 = Instant::now();
-        let frames = encode_frames(stream, self.timesteps);
+        let frames = encode_frames_sparse(stream, self.timesteps);
         backend.reset();
 
         let mut rate = vec![0i64; 10];

@@ -78,6 +78,130 @@ impl SpikeFrame {
     pub fn to_spike_list(&self) -> SpikeList {
         SpikeList::from_dense(&self.bits)
     }
+
+    /// Densify a [`SpikeList`] back into a frame (compat boundary for the
+    /// dense golden models; the list's dimension must be `2 × h × w`).
+    pub fn from_spike_list(width: u16, height: u16, spikes: &SpikeList) -> SpikeFrame {
+        let mut f = SpikeFrame::new(width, height);
+        assert_eq!(
+            spikes.dim(),
+            f.bits.len(),
+            "spike list does not match the frame geometry"
+        );
+        for &i in spikes.active() {
+            f.bits[i as usize] = true;
+        }
+        f
+    }
+}
+
+/// One timestep of binary input spikes packed 64 slots per `u64` word —
+/// the bit-plane twin of [`SpikeFrame`] (same channel-major `[2][h][w]`
+/// slot order, bit `i & 63` of word `i >> 6`).
+///
+/// This is the in-memory image of the chip's single-bit spike buffer: the
+/// popcount of the words *is* the event count the energy ledger charges,
+/// and [`Self::to_spike_list_into`] unpacks straight into the sorted
+/// [`SpikeList`] order the event-driven layers consume, with no dense
+/// `Vec<bool>` in between.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitPlaneFrame {
+    /// Frame height.
+    pub height: u16,
+    /// Frame width.
+    pub width: u16,
+    words: Vec<u64>,
+}
+
+impl BitPlaneFrame {
+    /// Empty frame.
+    pub fn new(width: u16, height: u16) -> Self {
+        let dim = 2 * width as usize * height as usize;
+        BitPlaneFrame { height, width, words: vec![0u64; SpikeList::words_for(dim)] }
+    }
+
+    /// Dense dimension of the underlying spike vector (`2 × h × w`).
+    pub fn dim(&self) -> usize {
+        2 * self.width as usize * self.height as usize
+    }
+
+    #[inline]
+    fn index(&self, channel: usize, x: u16, y: u16) -> usize {
+        debug_assert!(channel < 2 && x < self.width && y < self.height);
+        channel * self.height as usize * self.width as usize
+            + y as usize * self.width as usize
+            + x as usize
+    }
+
+    /// Set one spike bit. Channel 0 = ON polarity, 1 = OFF.
+    pub fn set(&mut self, channel: usize, x: u16, y: u16) {
+        let i = self.index(channel, x, y);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    /// Read one spike bit.
+    pub fn get(&self, channel: usize, x: u16, y: u16) -> bool {
+        let i = self.index(channel, x, y);
+        self.words[i >> 6] >> (i & 63) & 1 == 1
+    }
+
+    /// Clear every bit, keeping the buffer.
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Number of active spikes — a word-parallel popcount, the analytic
+    /// source of the per-frame event count.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// The packed words (read-only; word-parallel consumers AND against
+    /// these directly).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Pack a dense [`SpikeFrame`] (compat boundary).
+    pub fn from_spike_frame(f: &SpikeFrame) -> Self {
+        let mut p = BitPlaneFrame::new(f.width, f.height);
+        for (i, &b) in f.bits.iter().enumerate() {
+            if b {
+                p.words[i >> 6] |= 1u64 << (i & 63);
+            }
+        }
+        p
+    }
+
+    /// Unpack into a reusable [`SpikeList`] — set bits enumerate in
+    /// ascending slot order via `trailing_zeros`, so the list comes out
+    /// sorted without a sort, and the buffer is reused (no allocation at
+    /// steady state).
+    pub fn to_spike_list_into(&self, out: &mut SpikeList) {
+        out.begin(self.dim());
+        for (wi, &w) in self.words.iter().enumerate() {
+            let mut m = w;
+            while m != 0 {
+                let b = m.trailing_zeros() as usize;
+                m &= m - 1;
+                out.push(((wi << 6) | b) as u32);
+            }
+        }
+    }
+
+    /// Allocating wrapper around [`Self::to_spike_list_into`].
+    pub fn to_spike_list(&self) -> SpikeList {
+        let mut out = SpikeList::default();
+        self.to_spike_list_into(&mut out);
+        out
+    }
+
+    /// Buffer footprint in bytes — 1 bit per slot rounded up to whole
+    /// `u64` words (matches the dense frame's footprint whenever the slot
+    /// count is word-aligned, as the 48×48 and 128×128 sensors are).
+    pub fn buffer_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
 }
 
 /// Bin an event stream into `timesteps` spike frames (paper Fig. 1c:
@@ -98,6 +222,37 @@ pub fn encode_frames(stream: &EventStream, timesteps: usize) -> Vec<SpikeFrame> 
             f.set(if e.polarity { 0 } else { 1 }, e.x, e.y);
         }
         frames.push(f);
+    }
+    frames
+}
+
+/// Bin an event stream straight into per-timestep [`SpikeList`]s — same
+/// binning rule and slot layout as [`encode_frames`], but fully sparse:
+/// each event appends its slot index and the list is sealed (sorted +
+/// deduped, collapsing same-slot repeats exactly like the single-bit
+/// buffer), with no intermediate dense bitmap. Work and memory scale with
+/// the event count, not the sensor area.
+pub fn encode_frames_sparse(stream: &EventStream, timesteps: usize) -> Vec<SpikeList> {
+    assert!(timesteps > 0);
+    let step_us = (stream.duration_us / timesteps as u64).max(1);
+    let hw = stream.height as usize * stream.width as usize;
+    let width = stream.width as usize;
+    let dim = 2 * hw;
+    let mut frames = Vec::with_capacity(timesteps);
+    for i in 0..timesteps {
+        let t0 = i as u64 * step_us;
+        let t1 = if i == timesteps - 1 {
+            stream.duration_us + 1 // last frame absorbs the tail
+        } else {
+            (i + 1) as u64 * step_us
+        };
+        let mut sl = SpikeList::empty(dim);
+        for e in stream.window(t0, t1) {
+            let c = if e.polarity { 0usize } else { 1 };
+            sl.push_unordered((c * hw + e.y as usize * width + e.x as usize) as u32);
+        }
+        sl.seal();
+        frames.push(sl);
     }
     frames
 }
@@ -211,6 +366,97 @@ mod tests {
             assert_eq!(sl.count(), f.count());
             assert_eq!(sl.to_dense(), f.bits);
         }
+    }
+
+    #[test]
+    fn sparse_encoder_matches_dense_encoder() {
+        // The fully sparse path must reproduce the dense path's binning,
+        // polarity channels, and duplicate collapse exactly, for every
+        // timestep count including the tail-absorbing last frame.
+        let g = GestureGenerator::default_48();
+        for seed in [1u64, 7, 23] {
+            let mut rng = Rng::new(seed);
+            let s = g.sample(GestureClass::ALL[seed as usize % GestureClass::ALL.len()], &mut rng);
+            for ts in [1usize, 5, 16] {
+                let dense = encode_frames(&s, ts);
+                let sparse = encode_frames_sparse(&s, ts);
+                assert_eq!(dense.len(), sparse.len());
+                for (d, sp) in dense.iter().zip(&sparse) {
+                    assert_eq!(d.to_spike_list(), *sp, "seed {seed} ts {ts}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_encoder_collapses_duplicates_and_binds_tail() {
+        // The synthetic edge cases the dense tests pin, on the sparse path.
+        let dup = EventStream::new(
+            4,
+            4,
+            100,
+            vec![ev(10, 0, 0, true), ev(10, 0, 0, true), ev(10, 3, 3, true)],
+        )
+        .unwrap();
+        let frames = encode_frames_sparse(&dup, 1);
+        assert_eq!(frames[0].count(), 2, "same-slot events collapse");
+
+        let tail = EventStream::new(4, 4, 100, vec![ev(100, 2, 2, false)]).unwrap();
+        let frames = encode_frames_sparse(&tail, 4);
+        assert!(frames[..3].iter().all(SpikeList::is_empty));
+        assert_eq!(frames[3].count(), 1, "t == duration lands in last frame");
+        // OFF polarity is channel 1: slot = 1*16 + 2*4 + 2.
+        assert_eq!(frames[3].active(), &[16 + 10]);
+    }
+
+    #[test]
+    fn spike_frame_roundtrips_through_spike_list() {
+        let g = GestureGenerator::default_48();
+        let mut rng = Rng::new(12);
+        let s = g.sample(GestureClass::HandClap, &mut rng);
+        for f in encode_frames(&s, 8) {
+            let back = SpikeFrame::from_spike_list(f.width, f.height, &f.to_spike_list());
+            assert_eq!(back.bits, f.bits);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match the frame geometry")]
+    fn from_spike_list_rejects_wrong_dim() {
+        let _ = SpikeFrame::from_spike_list(4, 4, &SpikeList::empty(7));
+    }
+
+    #[test]
+    fn bit_plane_frame_roundtrips() {
+        let g = GestureGenerator::default_48();
+        let mut rng = Rng::new(3);
+        let s = g.sample(GestureClass::LeftCw, &mut rng);
+        for f in encode_frames(&s, 6) {
+            let p = BitPlaneFrame::from_spike_frame(&f);
+            assert_eq!(p.dim(), f.bits.len());
+            assert_eq!(p.count(), f.count(), "popcount == dense count");
+            assert_eq!(p.to_spike_list(), f.to_spike_list());
+            assert_eq!(p.buffer_bytes(), f.buffer_bytes(), "48×48 is word-aligned");
+        }
+    }
+
+    #[test]
+    fn bit_plane_frame_set_get_clear() {
+        let mut p = BitPlaneFrame::new(48, 48);
+        assert_eq!(p.dim(), 4608);
+        assert_eq!(p.words().len(), 72);
+        p.set(0, 5, 7);
+        p.set(1, 47, 0);
+        assert!(p.get(0, 5, 7));
+        assert!(p.get(1, 47, 0));
+        assert!(!p.get(0, 5, 8));
+        assert_eq!(p.count(), 2);
+        // Unpacked order is sorted slot order.
+        let sl = p.to_spike_list();
+        assert_eq!(sl.active(), &[7 * 48 + 5, 2304 + 47]);
+        p.clear();
+        assert_eq!(p.count(), 0);
+        assert_eq!(p.words().len(), 72, "clear keeps the buffer");
     }
 
     #[test]

@@ -13,5 +13,5 @@ pub mod encoder;
 pub mod synthetic;
 
 pub use dvs::{DvsEvent, EventStream};
-pub use encoder::{encode_frames, SpikeFrame};
+pub use encoder::{encode_frames, encode_frames_sparse, BitPlaneFrame, SpikeFrame};
 pub use synthetic::{GestureClass, GestureGenerator};

@@ -24,7 +24,7 @@ use crate::Result;
 
 /// Result of one network timestep, in the sparse spike representation the
 /// whole runtime datapath moves.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct StepResult {
     /// Output spikes of the classifier layer (10 classes).
     pub out_spikes: SpikeList,
@@ -72,12 +72,29 @@ pub trait StepBackend {
     /// over the channel-major `[c · h · w]` input space).
     fn step(&mut self, frame: &SpikeList) -> Result<StepResult>;
 
+    /// Execute one timestep into a caller-owned [`StepResult`], reusing
+    /// its buffers. The default delegates to [`StepBackend::step`]
+    /// (allocating); backends with a zero-alloc hot path override this —
+    /// the coordinator's window loop always calls it.
+    fn step_into(&mut self, frame: &SpikeList, out: &mut StepResult) -> Result<()> {
+        *out = self.step(frame)?;
+        Ok(())
+    }
+
     /// Requantize at explicit per-layer `(w_bits, p_bits)` resolutions and
     /// reset state.
     fn set_resolutions(&mut self, res: &[(u32, u32)]);
 
     /// Copy out the persistent membrane state (a session checkpoint).
     fn snapshot(&self) -> StateSnapshot;
+
+    /// Copy the persistent membrane state into a caller-owned snapshot,
+    /// reusing its buffers. The default delegates to
+    /// [`StepBackend::snapshot`] (allocating); backends on the serve hot
+    /// path override this.
+    fn snapshot_into(&self, out: &mut StateSnapshot) {
+        *out = self.snapshot();
+    }
 
     /// Restore state previously captured with [`StepBackend::snapshot`]
     /// (shape-checked against the current network).

@@ -45,12 +45,15 @@ enum NativeLayer {
 }
 
 impl NativeLayer {
-    fn step(&mut self, spikes: &SpikeList) -> SpikeList {
+    fn step_into(&mut self, spikes: &SpikeList, out: &mut SpikeList) {
         match self {
-            NativeLayer::Conv(l) => l.step(spikes),
-            NativeLayer::Fc(l) => l.step(spikes),
-            NativeLayer::DenseConv(l) => SpikeList::from_dense(&l.step(&spikes.to_dense())),
-            NativeLayer::DenseFc(l) => SpikeList::from_dense(&l.step(&spikes.to_dense())),
+            NativeLayer::Conv(l) => l.step_into(spikes, out),
+            NativeLayer::Fc(l) => l.step_into(spikes, out),
+            // The dense golden-model variants densify at their boundary —
+            // they are the property-test oracle, not a runtime tier, so
+            // their allocations are acceptable.
+            NativeLayer::DenseConv(l) => dense_into(&l.step(&spikes.to_dense()), out),
+            NativeLayer::DenseFc(l) => dense_into(&l.step(&spikes.to_dense()), out),
         }
     }
 
@@ -82,6 +85,16 @@ impl NativeLayer {
     }
 }
 
+/// Sparsify a dense golden-model output into a reusable [`SpikeList`].
+fn dense_into(bits: &[bool], out: &mut SpikeList) {
+    out.begin(bits.len());
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            out.push(i as u32);
+        }
+    }
+}
+
 /// Deterministic pure-Rust SCNN execution engine (event-driven sparse by
 /// default).
 pub struct NativeScnn {
@@ -94,6 +107,13 @@ pub struct NativeScnn {
     /// instances, across engine / serve workers.
     adj_cache: Arc<AdjacencyCache>,
     layers: Vec<NativeLayer>,
+    /// Ping-pong spike scratch of the zero-alloc
+    /// [`StepBackend::step_into`] path: `spike_a` feeds the layer being
+    /// stepped, `spike_b` receives its output, then they swap. Both keep
+    /// their capacity across windows, so the steady-state step performs
+    /// no heap allocation (asserted by `rust/tests/alloc_steady_state.rs`).
+    spike_a: SpikeList,
+    spike_b: SpikeList,
 }
 
 impl NativeScnn {
@@ -113,7 +133,15 @@ impl NativeScnn {
         cache: Arc<AdjacencyCache>,
     ) -> NativeScnn {
         let layers = Self::build_layers(&net, seed, true, &cache);
-        NativeScnn { net, seed, sparse: true, adj_cache: cache, layers }
+        NativeScnn {
+            net,
+            seed,
+            sparse: true,
+            adj_cache: cache,
+            layers,
+            spike_a: SpikeList::default(),
+            spike_b: SpikeList::default(),
+        }
     }
 
     /// Build the dense golden-model interpreter over the *same* weight
@@ -122,7 +150,15 @@ impl NativeScnn {
     pub fn new_dense_reference(net: Network, seed: u64) -> NativeScnn {
         let cache = Arc::new(AdjacencyCache::new());
         let layers = Self::build_layers(&net, seed, false, &cache);
-        NativeScnn { net, seed, sparse: false, adj_cache: cache, layers }
+        NativeScnn {
+            net,
+            seed,
+            sparse: false,
+            adj_cache: cache,
+            layers,
+            spike_a: SpikeList::default(),
+            spike_b: SpikeList::default(),
+        }
     }
 
     fn build_layers(
@@ -215,6 +251,12 @@ impl StepBackend for NativeScnn {
     }
 
     fn step(&mut self, frame: &SpikeList) -> Result<StepResult> {
+        let mut out = StepResult::default();
+        self.step_into(frame, &mut out)?;
+        Ok(out)
+    }
+
+    fn step_into(&mut self, frame: &SpikeList, out: &mut StepResult) -> Result<()> {
         let _span = crate::telemetry::trace::span("native.step");
         let (c, h, w) = self.net.layers[0].in_shape();
         anyhow::ensure!(
@@ -223,13 +265,15 @@ impl StepBackend for NativeScnn {
             frame.dim(),
             c * h * w
         );
-        let mut spikes = frame.clone();
-        let mut counts = Vec::with_capacity(self.layers.len());
+        out.counts.clear();
+        self.spike_a.copy_from(frame);
         for layer in &mut self.layers {
-            spikes = layer.step(&spikes);
-            counts.push(spikes.count() as i32);
+            layer.step_into(&self.spike_a, &mut self.spike_b);
+            out.counts.push(self.spike_b.count() as i32);
+            std::mem::swap(&mut self.spike_a, &mut self.spike_b);
         }
-        Ok(StepResult { out_spikes: spikes, counts })
+        out.out_spikes.copy_from(&self.spike_a);
+        Ok(())
     }
 
     fn set_resolutions(&mut self, res: &[(u32, u32)]) {
@@ -244,6 +288,14 @@ impl StepBackend for NativeScnn {
     fn snapshot(&self) -> StateSnapshot {
         StateSnapshot {
             vmems: self.layers.iter().map(|l| l.vmem().to_vec()).collect(),
+        }
+    }
+
+    fn snapshot_into(&self, out: &mut StateSnapshot) {
+        out.vmems.resize_with(self.layers.len(), Vec::new);
+        for (dst, l) in out.vmems.iter_mut().zip(&self.layers) {
+            dst.clear();
+            dst.extend_from_slice(l.vmem());
         }
     }
 
@@ -410,6 +462,35 @@ mod tests {
             assert_eq!(ra.out_spikes, rb.out_spikes);
             assert_eq!(ra.out_spikes, rp.out_spikes);
             assert_eq!(ra.counts, rp.counts);
+        }
+    }
+
+    #[test]
+    fn step_into_matches_step_and_reuses_buffers() {
+        // The zero-alloc reusable-buffer entry points must be observably
+        // identical to the allocating forms, for the sparse and the dense
+        // oracle backend alike.
+        let net = tiny_net();
+        let frames = frames_for(&net, 17);
+        for dense in [false, true] {
+            let mut a = if dense {
+                NativeScnn::new_dense_reference(net.clone(), 6)
+            } else {
+                NativeScnn::new(net.clone(), 6)
+            };
+            let mut b = if dense {
+                NativeScnn::new_dense_reference(net.clone(), 6)
+            } else {
+                NativeScnn::new(net.clone(), 6)
+            };
+            let mut out = StepResult::default();
+            for f in &frames {
+                b.step_into(f, &mut out).unwrap();
+                assert_eq!(out, a.step(f).unwrap(), "dense={dense}");
+            }
+            let mut snap = StateSnapshot::default();
+            b.snapshot_into(&mut snap);
+            assert_eq!(snap, a.snapshot(), "dense={dense}");
         }
     }
 

@@ -59,6 +59,6 @@ pub use service::{
     StreamingService,
 };
 pub use session::{
-    encode_window, window_frames, QueuedWindow, ResidencyCharge, Session, SessionConfig,
-    SessionManager, WindowOutcome,
+    encode_window, encode_window_into, window_frames, EncodeScratch, QueuedWindow,
+    ResidencyCharge, Session, SessionConfig, SessionManager, WindowOutcome,
 };

@@ -61,7 +61,8 @@ use crate::Result;
 
 use super::ingest::MicroWindow;
 use super::session::{
-    encode_window, window_frames, QueuedWindow, SessionConfig, SessionManager, WindowOutcome,
+    encode_window_into, window_frames, EncodeScratch, QueuedWindow, SessionConfig,
+    SessionManager, WindowOutcome,
 };
 
 /// Rolling-latency window feeding the autoscaler's p99 (recent windows
@@ -576,6 +577,9 @@ impl StreamingService {
         let make: &BackendFactory = self.factory.as_ref();
         let mut backend: Option<Box<dyn StepBackend>> = None;
         let mut bufs = SampleBuffers::default();
+        // Per-worker encoder scratch: windows re-encode into these
+        // buffers instead of allocating fresh frames every micro-window.
+        let mut encode_scratch = EncodeScratch::default();
         loop {
             let job = {
                 let mut st = self.state.lock().unwrap();
@@ -685,6 +689,7 @@ impl StreamingService {
             let outcome = self.run_window(
                 backend.as_mut().expect("constructed above").as_mut(),
                 &mut bufs,
+                &mut encode_scratch,
                 &job,
             );
             let wall_s = t0.elapsed().as_secs_f64();
@@ -791,16 +796,17 @@ impl StreamingService {
         &self,
         backend: &mut dyn StepBackend,
         bufs: &mut SampleBuffers,
+        scratch: &mut EncodeScratch,
         job: &Job,
     ) -> Result<(Vec<i64>, StateSnapshot, WindowTotals)> {
         let _span = trace::span("serve.window");
-        let frames = encode_window(&self.cfg.session, &job.window);
+        let frames = encode_window_into(&self.cfg.session, &job.window, scratch);
         {
             let _s = trace::span("serve.restore");
             backend.restore(&job.state)?;
         }
         let mut window_rate = vec![0i64; 10];
-        let totals = self.plan.run_frames(backend, bufs, &frames, &mut window_rate)?;
+        let totals = self.plan.run_frames(backend, bufs, frames, &mut window_rate)?;
         let snapshot = {
             let _s = trace::span("serve.snapshot");
             backend.snapshot()

@@ -24,6 +24,7 @@ use crate::coordinator::engine::WindowTotals;
 use crate::coordinator::metrics::{LatencyStats, RunMetrics};
 use crate::events::SpikeFrame;
 use crate::runtime::{ScnnRunner, StateSnapshot};
+use crate::snn::events::SpikeList;
 use crate::snn::Network;
 use crate::Result;
 
@@ -101,25 +102,62 @@ pub fn window_frames(cfg: &SessionConfig, w: &MicroWindow) -> usize {
     }
 }
 
-/// Encode one micro-window into per-timestep spike frames with the same
-/// binning rule as [`crate::events::encode_frames`]: frame `k` of the
-/// window owns `[t0 + k·step, t0 + (k+1)·step)`, and the final frame of a
-/// `last` window absorbs the tail (clamped index) — so a window sequence
-/// aligned to the monolithic frame grid encodes bit-identically to the
-/// monolithic encoder.
-pub fn encode_window(cfg: &SessionConfig, w: &MicroWindow) -> Vec<SpikeFrame> {
+/// Per-worker reusable encoder scratch: the spike-list frames of
+/// [`encode_window_into`] live here across windows, so the serve hot path
+/// encodes without a single heap allocation once the buffers are warm.
+#[derive(Debug, Clone, Default)]
+pub struct EncodeScratch {
+    frames: Vec<SpikeList>,
+}
+
+/// Encode one micro-window into per-timestep sparse spike lists with the
+/// same binning rule as [`crate::events::encode_frames_sparse`]: frame `k`
+/// of the window owns `[t0 + k·step, t0 + (k+1)·step)`, and the final
+/// frame of a `last` window absorbs the tail (clamped index) — so a window
+/// sequence aligned to the monolithic frame grid encodes bit-identically
+/// to the monolithic encoder.
+///
+/// The frames are built in `scratch`'s reusable buffers (grown on first
+/// use, allocation-free thereafter) and returned as a borrowed slice.
+pub fn encode_window_into<'a>(
+    cfg: &SessionConfig,
+    w: &MicroWindow,
+    scratch: &'a mut EncodeScratch,
+) -> &'a [SpikeList] {
     let step = cfg.step_us.max(1);
     let n = window_frames(cfg, w);
-    let mut frames: Vec<SpikeFrame> =
-        (0..n).map(|_| SpikeFrame::new(cfg.width, cfg.height)).collect();
-    if n == 0 {
-        return frames;
+    let dim = 2 * cfg.height as usize * cfg.width as usize;
+    if scratch.frames.len() < n {
+        scratch.frames.resize_with(n, SpikeList::default);
     }
-    for e in &w.events {
-        let idx = (((e.t_us.saturating_sub(w.t0_us)) / step) as usize).min(n - 1);
-        frames[idx].set(if e.polarity { 0 } else { 1 }, e.x, e.y);
+    for f in &mut scratch.frames[..n] {
+        f.begin(dim);
     }
-    frames
+    if n > 0 {
+        let hw = cfg.height as usize * cfg.width as usize;
+        for e in &w.events {
+            let idx = (((e.t_us.saturating_sub(w.t0_us)) / step) as usize).min(n - 1);
+            let c = if e.polarity { 0usize } else { 1 };
+            scratch.frames[idx].push_unordered(
+                (c * hw + e.y as usize * cfg.width as usize + e.x as usize) as u32,
+            );
+        }
+        for f in &mut scratch.frames[..n] {
+            f.seal();
+        }
+    }
+    &scratch.frames[..n]
+}
+
+/// Allocating dense-frame wrapper around [`encode_window_into`] (compat
+/// boundary for callers that want [`SpikeFrame`]s; the serve workers use
+/// the scratch-reusing sparse path directly).
+pub fn encode_window(cfg: &SessionConfig, w: &MicroWindow) -> Vec<SpikeFrame> {
+    let mut scratch = EncodeScratch::default();
+    encode_window_into(cfg, w, &mut scratch)
+        .iter()
+        .map(|sl| SpikeFrame::from_spike_list(cfg.width, cfg.height, sl))
+        .collect()
 }
 
 /// A queued, not-yet-executed window with its admission timestamp (the
@@ -766,6 +804,40 @@ mod tests {
         for w in &cases {
             assert_eq!(window_frames(&cfg, w), encode_window(&cfg, w).len());
         }
+    }
+
+    #[test]
+    fn encode_window_into_matches_dense_and_reuses_scratch() {
+        let cfg = SessionConfig::default_48();
+        let mut scratch = EncodeScratch::default();
+        let e = |t: u64, x: u16, y: u16, p: bool| DvsEvent { t_us: t, x, y, polarity: p };
+        let windows = [
+            mw(
+                0,
+                cfg.window_us(),
+                vec![e(0, 1, 2, true), e(0, 1, 2, true), e(cfg.step_us, 3, 4, false)],
+                false,
+            ),
+            mw(
+                cfg.window_us(),
+                2 * cfg.window_us(),
+                vec![e(cfg.window_us() + 7, 47, 47, false), e(cfg.window_us(), 0, 0, true)],
+                false,
+            ),
+            // Shrunken tail window, then a zero-span last marker.
+            mw(2 * cfg.window_us(), 2 * cfg.window_us() + cfg.step_us, vec![], true),
+            mw(100, 100, vec![], true),
+        ];
+        for w in &windows {
+            let dense = encode_window(&cfg, w);
+            let sparse = encode_window_into(&cfg, w, &mut scratch);
+            assert_eq!(sparse.len(), dense.len());
+            for (sl, f) in sparse.iter().zip(&dense) {
+                assert_eq!(*sl, f.to_spike_list(), "window [{}, {})", w.t0_us, w.t1_us);
+            }
+        }
+        // The scratch keeps the high-water frame count around for reuse.
+        assert_eq!(scratch.frames.len(), cfg.frames_per_window);
     }
 
     #[test]

@@ -9,7 +9,11 @@
 //!   active indices over a known dense dimension). The whole runtime
 //!   datapath — encoder → [`crate::runtime::StepBackend`] → coordinator —
 //!   moves spikes in this form; dense `Vec<bool>` survives only at the
-//!   golden-model boundary.
+//!   golden-model boundary. The builder API ([`SpikeList::begin`] /
+//!   [`SpikeList::push`] / [`SpikeList::copy_from`]) reuses the index
+//!   buffer so the steady-state window loop performs no heap allocation,
+//!   and [`SpikeList::to_words_into`] packs the list into `u64` bit-plane
+//!   words for the word-parallel kernels below.
 //! * [`ConvAdjacency`] — per-layer precomputed scatter adjacency: conv
 //!   geometry compiled once into CSR-style per-input-position synapse
 //!   offsets, so each event walks straight to the output taps its
@@ -19,6 +23,33 @@
 //!   only touches the membrane potentials of neurons reached by an active
 //!   spike, and fire-checks only touched neurons plus the *refire set*
 //!   (see below).
+//!
+//! **Word-parallel packed hot path.** Mirroring the word-level
+//! `cim_accumulate` rewrite of the CIM macro
+//! ([`crate::cim::macro_unit`]), the layer steps operate on packed `u64`
+//! words instead of scalar per-neuron state:
+//!
+//! * The conv step keeps its weights in *scatter order* (one contiguous
+//!   `out_ch` row per `(in_ch, kernel element)` pair) so every adjacency
+//!   tap becomes a single linear row-add over the position-major
+//!   accumulator — an auto-vectorizable inner loop with no stamp
+//!   branches. Touched output positions and the refire set are packed
+//!   bitmasks, and the fire-check enumerates set bits with
+//!   `trailing_zeros`, which yields the dense scan order for free.
+//! * The FC step stores the weight matrix as two's-complement *bit
+//!   planes* over the input dimension and recovers the exact integer
+//!   dot product from popcounts (`acc = Σ_b ±2^b · popcount(in ∧
+//!   plane_b)`); at high activity this replaces per-spike column adds
+//!   with an activity-independent `w_bits × words_in` word ops per
+//!   output. The spike-count cutover between the two is tunable
+//!   ([`EventFcLayer::set_packed_cutover`]) and both modes are pinned
+//!   bit-identical to the dense oracle.
+//!
+//! The scalar per-spike reference path survives as
+//! [`EventConvLayer::step_scalar`] — the packed-vs-scalar property tests
+//! and the `perf_hotpath` speedup gate both measure against it. All
+//! paths share the packed refire mask, so they interleave freely on one
+//! instance.
 //!
 //! **Soundness of sparse fire-checking.** Reset-by-subtraction leaves a
 //! residual `v - θ` that can itself still clear the threshold (when
@@ -37,7 +68,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use super::layer::{LayerKind, LayerSpec};
-use super::quant::{max_val, min_val, wrap, Resolution};
+use super::quant::{bit_of, max_val, min_val, wrap, Resolution};
 
 // -------------------------------------------------------------- spike list
 
@@ -142,6 +173,76 @@ impl SpikeList {
             vals[i as usize] = 1;
         }
         vals
+    }
+
+    // ------------------- reusable-buffer builder API (zero-alloc path)
+
+    /// Reset to the all-silent vector of dimension `dim`, keeping the
+    /// index buffer's capacity — the entry point of every zero-alloc
+    /// producer (layer steps, sparse encoder, serve scratch).
+    pub fn begin(&mut self, dim: usize) {
+        self.indices.clear();
+        self.dim = dim;
+    }
+
+    /// Append the next active index. Callers must push in strictly
+    /// increasing order (debug-asserted); use [`Self::push_unordered`] +
+    /// [`Self::seal`] when the producer is unsorted.
+    pub fn push(&mut self, idx: u32) {
+        debug_assert!(
+            (idx as usize) < self.dim,
+            "spike index {idx} out of dim {}",
+            self.dim
+        );
+        debug_assert!(
+            self.indices.last().map_or(true, |&last| last < idx),
+            "spike indices must be strictly increasing"
+        );
+        self.indices.push(idx);
+    }
+
+    /// Append an active index in arbitrary order; [`Self::seal`] must run
+    /// before the list is read.
+    pub fn push_unordered(&mut self, idx: u32) {
+        debug_assert!(
+            (idx as usize) < self.dim,
+            "spike index {idx} out of dim {}",
+            self.dim
+        );
+        self.indices.push(idx);
+    }
+
+    /// Sort and dedupe after a [`Self::push_unordered`] fill. Both
+    /// `sort_unstable` and `dedup` work in place, so sealing never
+    /// allocates.
+    pub fn seal(&mut self) {
+        self.indices.sort_unstable();
+        self.indices.dedup();
+    }
+
+    /// Become a copy of `other`, reusing this list's buffer. The derived
+    /// `Clone::clone_from` may reallocate; this never does once the
+    /// capacity suffices.
+    pub fn copy_from(&mut self, other: &SpikeList) {
+        self.dim = other.dim;
+        self.indices.clear();
+        self.indices.extend_from_slice(&other.indices);
+    }
+
+    /// `u64` words needed to pack a `dim`-bit spike vector.
+    pub fn words_for(dim: usize) -> usize {
+        dim.div_ceil(64)
+    }
+
+    /// Pack into `u64` words (bit `i & 63` of word `i >> 6`, LSB-first),
+    /// reusing `words`' buffer. The packed form is what the word-parallel
+    /// kernels consume.
+    pub fn to_words_into(&self, words: &mut Vec<u64>) {
+        words.clear();
+        words.resize(Self::words_for(self.dim), 0);
+        for &i in &self.indices {
+            words[(i >> 6) as usize] |= 1u64 << (i & 63);
+        }
     }
 }
 
@@ -297,32 +398,58 @@ impl AdjacencyCache {
 
 // ------------------------------------------------------- event conv layer
 
+/// Per-step scratch of the scalar reference path (stamp/generation lazy
+/// clear, exactly the pre-packed engine) — built lazily so the packed hot
+/// path pays nothing for carrying the baseline around.
+#[derive(Debug, Clone)]
+struct ScalarScratch {
+    acc: Vec<i64>,
+    stamp: Vec<u32>,
+    generation: u32,
+    touched: Vec<u32>,
+}
+
 /// Event-driven conv layer of IF neurons: bit-identical to
 /// [`crate::snn::conv::ConvLifLayer`] but with per-timestep work
 /// proportional to input activity instead of layer size.
+///
+/// The default [`Self::step`] runs the word-parallel packed kernel (see
+/// the module docs); [`Self::step_scalar`] is the per-spike scalar
+/// reference it is measured and property-tested against. Both share the
+/// packed refire mask and membrane state, so they interleave freely on
+/// one instance.
 #[derive(Debug, Clone)]
 pub struct EventConvLayer {
     /// Geometry (must be `LayerKind::Conv`).
     pub spec: LayerSpec,
     /// Weights `[out_ch][in_ch][k][k]` flattened row-major (dense layout,
-    /// indexed through the adjacency's kernel positions).
+    /// used by the scalar reference path).
     weights: Vec<i64>,
+    /// Scatter-order weights: `w_tap[(ic * k² + ker_pos) * out_ch + oc]`
+    /// — one contiguous `out_ch` row per (input channel, kernel element)
+    /// pair, so the packed step adds a whole output-channel row per tap
+    /// in one linear pass the compiler can vectorize.
+    w_tap: Vec<i64>,
     /// Shared read-only scatter adjacency (see [`AdjacencyCache`]).
     adj: Arc<ConvAdjacency>,
     /// Membrane potentials `[out_ch][oh][ow]` flattened.
     v: Vec<i64>,
     /// Firing threshold.
     pub threshold: i64,
-    /// Refire set: neurons whose potential still clears the threshold
-    /// after the previous step (sorted) — they fire on zero input, exactly
-    /// as the dense per-neuron scan would.
-    pending: Vec<u32>,
-    // Scratch (persistent to avoid per-step allocation): per-neuron raw
-    // accumulator, valid only where `stamp == generation`.
+    /// Refire set as packed bitmasks: block `oc` spans `words_pp` words
+    /// and bit `pos` of it marks neuron `oc * out_plane + pos`, whose
+    /// residual potential still clears the threshold after the previous
+    /// step — it fires on zero input, exactly as the dense per-neuron
+    /// scan would. Shared by the packed and scalar paths.
+    pending: Vec<u64>,
+    // Scratch (persistent to avoid per-step allocation): position-major
+    // accumulator `acc[pos * out_ch + oc]`, valid only where the packed
+    // `touched` mask (one bit per output position — the scatter is
+    // spatial, so a single bit covers all out_ch) is set.
     acc: Vec<i64>,
-    stamp: Vec<u32>,
-    generation: u32,
-    touched: Vec<u32>,
+    touched: Vec<u64>,
+    /// Scratch of [`Self::step_scalar`], `None` until first use.
+    scalar: Option<Box<ScalarScratch>>,
 }
 
 impl EventConvLayer {
@@ -358,17 +485,34 @@ impl EventConvLayer {
         );
         assert!(threshold > 0);
         let n = spec.num_neurons();
+        let (in_ch, out_ch, k) = match spec.kind {
+            LayerKind::Conv { in_ch, out_ch, k, .. } => (in_ch, out_ch, k),
+            _ => unreachable!("geometry_key rejects non-conv specs"),
+        };
+        let kk = k * k;
+        let mut w_tap = vec![0i64; weights.len()];
+        for oc in 0..out_ch {
+            for ic in 0..in_ch {
+                for kp in 0..kk {
+                    w_tap[(ic * kk + kp) * out_ch + oc] =
+                        weights[(oc * in_ch + ic) * kk + kp];
+                }
+            }
+        }
+        let (_, oh, ow) = spec.out_shape();
+        let out_plane = oh * ow;
+        let words_pp = out_plane.div_ceil(64);
         EventConvLayer {
             spec,
             weights,
+            w_tap,
             adj,
             v: vec![0i64; n],
             threshold,
-            pending: Vec::new(),
+            pending: vec![0u64; out_ch * words_pp],
             acc: vec![0i64; n],
-            stamp: vec![0u32; n],
-            generation: 0,
-            touched: Vec::new(),
+            touched: vec![0u64; words_pp],
+            scalar: None,
         }
     }
 
@@ -397,21 +541,37 @@ impl EventConvLayer {
     /// Zero all membrane potentials.
     pub fn reset(&mut self) {
         self.v.iter_mut().for_each(|x| *x = 0);
-        self.pending.clear();
+        self.pending.fill(0);
     }
 
     fn rebuild_pending(&mut self) {
-        self.pending.clear();
+        let (_, oh, ow) = self.spec.out_shape();
+        let out_plane = oh * ow;
+        let words_pp = out_plane.div_ceil(64);
+        self.pending.fill(0);
+        let theta = self.threshold;
         for (i, &v) in self.v.iter().enumerate() {
-            if v >= self.threshold {
-                self.pending.push(i as u32);
+            if v >= theta {
+                let oc = i / out_plane;
+                let pos = i % out_plane;
+                self.pending[oc * words_pp + (pos >> 6)] |= 1u64 << (pos & 63);
             }
         }
     }
 
-    /// One event-driven timestep: scatter every input spike through the
-    /// adjacency, then fire-check the touched ∪ refire neurons only.
-    pub fn step(&mut self, spikes_in: &SpikeList) -> SpikeList {
+    /// One event-driven timestep (word-parallel packed kernel), appending
+    /// the output spikes into `out` (buffer reused, no allocation at
+    /// steady state).
+    ///
+    /// Scatter phase: every input spike walks its adjacency row and adds
+    /// one contiguous scatter-order weight row (`out_ch` wide) into the
+    /// position-major accumulator; first touch of a position copies the
+    /// row instead of clearing, and marks one bit in the packed touched
+    /// mask. Fire phase: for each output channel, enumerate the set bits
+    /// of `touched ∪ pending` with `trailing_zeros` — ascending bit order
+    /// is ascending neuron order, so the output matches the dense scan
+    /// without a sort.
+    pub fn step_into(&mut self, spikes_in: &SpikeList, out: &mut SpikeList) {
         let (in_ch, out_ch, k, in_h, in_w) = self.dims();
         assert_eq!(spikes_in.dim(), in_ch * in_h * in_w);
         let (_, oh, ow) = self.spec.out_shape();
@@ -419,14 +579,114 @@ impl EventConvLayer {
         let out_plane = oh * ow;
         let kk = k * k;
         let p_bits = self.spec.res.p_bits;
+        let words_pp = out_plane.div_ceil(64);
 
-        self.generation = self.generation.wrapping_add(1);
-        if self.generation == 0 {
-            // Stamp wrap-around (once per 2^32 steps): clear and restart.
-            self.stamp.iter_mut().for_each(|s| *s = 0);
-            self.generation = 1;
+        self.touched.fill(0);
+        for &idx in spikes_in.active() {
+            let idx = idx as usize;
+            let ic = idx / plane;
+            let pos = idx % plane;
+            let lo = self.adj.offsets[pos] as usize;
+            let hi = self.adj.offsets[pos + 1] as usize;
+            let row_base = ic * kk;
+            for t in &self.adj.taps[lo..hi] {
+                let op = t.out_pos as usize;
+                let wrow = &self.w_tap[(row_base + t.ker_pos as usize) * out_ch..][..out_ch];
+                let arow = &mut self.acc[op * out_ch..][..out_ch];
+                let bit = 1u64 << (op & 63);
+                let word = &mut self.touched[op >> 6];
+                if *word & bit == 0 {
+                    *word |= bit;
+                    arow.copy_from_slice(wrow);
+                } else {
+                    for (a, &w) in arow.iter_mut().zip(wrow) {
+                        *a += w;
+                    }
+                }
+            }
         }
-        let gen = self.generation;
+
+        // Fire-check touched ∪ refire positions; refire bits (packed
+        // `pending` mask) cover untouched neurons whose residual
+        // potential still clears the threshold (reset-by-subtraction
+        // leaves v ≥ θ when the pre-reset potential was ≥ 2θ).
+        out.begin(out_ch * out_plane);
+        let theta = self.threshold;
+        for oc in 0..out_ch {
+            let pend_off = oc * words_pp;
+            let v_base = oc * out_plane;
+            for wi in 0..words_pp {
+                let t_word = self.touched[wi];
+                let mut m = t_word | self.pending[pend_off + wi];
+                if m == 0 {
+                    continue;
+                }
+                let mut still = 0u64;
+                while m != 0 {
+                    let b = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let pos = (wi << 6) | b;
+                    let ni = v_base + pos;
+                    let a = if t_word >> b & 1 == 1 {
+                        self.acc[pos * out_ch + oc]
+                    } else {
+                        0
+                    };
+                    let mut vv = wrap(self.v[ni] + a, p_bits);
+                    if vv >= theta {
+                        vv = wrap(vv - theta, p_bits);
+                        out.push(ni as u32);
+                    }
+                    self.v[ni] = vv;
+                    if vv >= theta {
+                        still |= 1u64 << b;
+                    }
+                }
+                self.pending[pend_off + wi] = still;
+            }
+        }
+    }
+
+    /// One event-driven timestep (packed kernel), allocating the output —
+    /// see [`Self::step_into`] for the reusable-buffer form.
+    pub fn step(&mut self, spikes_in: &SpikeList) -> SpikeList {
+        let mut out = SpikeList::default();
+        self.step_into(spikes_in, &mut out);
+        out
+    }
+
+    /// One event-driven timestep on the *scalar* per-spike reference path
+    /// (stamp/generation lazy clear, sorted touched list) — the baseline
+    /// the packed kernel is property-tested and benchmarked against.
+    /// Shares membrane state and the refire mask with [`Self::step_into`].
+    pub fn step_scalar_into(&mut self, spikes_in: &SpikeList, out: &mut SpikeList) {
+        let (in_ch, out_ch, k, in_h, in_w) = self.dims();
+        assert_eq!(spikes_in.dim(), in_ch * in_h * in_w);
+        let (_, oh, ow) = self.spec.out_shape();
+        let plane = in_h * in_w;
+        let out_plane = oh * ow;
+        let kk = k * k;
+        let p_bits = self.spec.res.p_bits;
+        let words_pp = out_plane.div_ceil(64);
+        let n = out_ch * out_plane;
+
+        if self.scalar.is_none() {
+            self.scalar = Some(Box::new(ScalarScratch {
+                acc: vec![0i64; n],
+                stamp: vec![0u32; n],
+                generation: 0,
+                touched: Vec::new(),
+            }));
+        }
+        let s = self.scalar.as_deref_mut().expect("scratch built above");
+
+        s.generation = s.generation.wrapping_add(1);
+        if s.generation == 0 {
+            // Stamp wrap-around (once per 2^32 steps): clear and restart.
+            s.stamp.iter_mut().for_each(|x| *x = 0);
+            s.generation = 1;
+        }
+        let gen = s.generation;
 
         for &idx in spikes_in.active() {
             let idx = idx as usize;
@@ -438,85 +698,120 @@ impl EventConvLayer {
                 let w_base = (oc * in_ch + ic) * kk;
                 let v_base = oc * out_plane;
                 for t in &self.adj.taps[lo..hi] {
-                    let n = v_base + t.out_pos as usize;
+                    let nn = v_base + t.out_pos as usize;
                     let w = self.weights[w_base + t.ker_pos as usize];
-                    if self.stamp[n] == gen {
-                        self.acc[n] += w;
+                    if s.stamp[nn] == gen {
+                        s.acc[nn] += w;
                     } else {
-                        self.stamp[n] = gen;
-                        self.acc[n] = w;
-                        self.touched.push(n as u32);
+                        s.stamp[nn] = gen;
+                        s.acc[nn] = w;
+                        s.touched.push(nn as u32);
                     }
                 }
             }
         }
 
-        // Refire set: untouched neurons whose residual potential still
-        // clears the threshold fire on zero input (reset-by-subtraction
-        // leaves v ≥ θ when the pre-reset potential was ≥ 2θ).
-        let pending = std::mem::take(&mut self.pending);
-        for &n in &pending {
-            let ni = n as usize;
-            if self.stamp[ni] != gen {
-                self.stamp[ni] = gen;
-                self.acc[ni] = 0;
-                self.touched.push(n);
+        // Merge the refire candidates out of the shared packed mask.
+        for oc in 0..out_ch {
+            let pend_off = oc * words_pp;
+            let v_base = oc * out_plane;
+            for wi in 0..words_pp {
+                let mut m = self.pending[pend_off + wi];
+                while m != 0 {
+                    let b = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let nn = v_base + ((wi << 6) | b);
+                    if s.stamp[nn] != gen {
+                        s.stamp[nn] = gen;
+                        s.acc[nn] = 0;
+                        s.touched.push(nn as u32);
+                    }
+                }
             }
         }
+        self.pending.fill(0);
 
         // Sorted processing keeps the output spike order identical to the
         // dense per-neuron scan.
-        self.touched.sort_unstable();
-        let mut out = Vec::new();
-        let mut next_pending = Vec::new();
-        for &n in &self.touched {
-            let ni = n as usize;
-            let mut v = wrap(self.v[ni] + self.acc[ni], p_bits);
-            if v >= self.threshold {
-                v = wrap(v - self.threshold, p_bits);
-                out.push(n);
+        s.touched.sort_unstable();
+        out.begin(n);
+        let theta = self.threshold;
+        for &nn in &s.touched {
+            let ni = nn as usize;
+            let mut v = wrap(self.v[ni] + s.acc[ni], p_bits);
+            if v >= theta {
+                v = wrap(v - theta, p_bits);
+                out.push(nn);
             }
             self.v[ni] = v;
-            if v >= self.threshold {
-                next_pending.push(n);
+            if v >= theta {
+                let oc = ni / out_plane;
+                let pos = ni % out_plane;
+                self.pending[oc * words_pp + (pos >> 6)] |= 1u64 << (pos & 63);
             }
         }
-        self.touched.clear();
-        self.pending = next_pending;
-        SpikeList::from_sorted(out, out_ch * out_plane)
+        s.touched.clear();
+    }
+
+    /// Allocating wrapper around [`Self::step_scalar_into`].
+    pub fn step_scalar(&mut self, spikes_in: &SpikeList) -> SpikeList {
+        let mut out = SpikeList::default();
+        self.step_scalar_into(spikes_in, &mut out);
+        out
     }
 }
 
 // --------------------------------------------------------- event FC layer
 
 /// Event-driven fully-connected layer of IF neurons: bit-identical to
-/// [`crate::snn::lif::LifLayer`]. The weight matrix is stored transposed
-/// (per presynaptic neuron), so each active input adds one contiguous
-/// column — the classic event-driven SNN layout. An FC layer's fan-out is
-/// structurally dense, so any active input touches every neuron; the
-/// sparsity win is on the input side, and an all-silent timestep reduces
-/// to the refire set alone.
+/// [`crate::snn::lif::LifLayer`]. An FC layer's fan-out is structurally
+/// dense, so any active input touches every neuron; the sparsity win is
+/// on the input side, and an all-silent timestep reduces to the refire
+/// set alone.
+///
+/// Two accumulate kernels cover the activity range, picked per step by a
+/// spike-count cutover: below it, each active input adds one contiguous
+/// transposed-weight column (the classic event-driven layout); at or
+/// above it, the *bit-plane* kernel packs the input spikes into `u64`
+/// words and recovers the exact dot product from popcounts against the
+/// precomputed weight bit-planes — activity-independent word work, the
+/// software mirror of the CIM macro's bit-serial operand ALUs.
 #[derive(Debug, Clone)]
 pub struct EventFcLayer {
     /// Transposed weights: `wt[i * out_dim + o]` (column of input `i`
     /// contiguous).
     wt: Vec<i64>,
+    /// Weight bit-planes over the input dimension:
+    /// `planes[(o * w_bits + b) * words_in + w]` holds bit `b` of the
+    /// two's-complement `w_bits` encoding of every weight feeding output
+    /// `o`, packed 64 inputs per word. The exact dot product is
+    /// `acc[o] = Σ_{b < w_bits-1} 2^b · popcount(in ∧ plane_b)
+    /// − 2^(w_bits-1) · popcount(in ∧ plane_msb)`.
+    planes: Vec<u64>,
     in_dim: usize,
     out_dim: usize,
+    /// `in_dim.div_ceil(64)` — words per packed input / plane row.
+    words_in: usize,
     v: Vec<i64>,
     /// Firing threshold.
     pub threshold: i64,
     /// Operand resolution.
     pub res: Resolution,
-    /// Refire set (see [`EventConvLayer::step`]).
+    /// Refire set (see [`EventConvLayer::step_into`]), kept sorted.
     pending: Vec<u32>,
+    /// Double buffer for the silent-step refire walk (zero-alloc).
+    pending_next: Vec<u32>,
     /// Per-step accumulator scratch (`out_dim` entries).
     acc: Vec<i64>,
+    /// Packed input scratch of the bit-plane kernel.
+    in_words: Vec<u64>,
+    /// Spike count at or above which the bit-plane kernel engages.
+    packed_cutover: usize,
 }
 
 impl EventFcLayer {
     /// Create from a `[out][in]` weight matrix — same validation as the
-    /// dense golden model, transposed internally.
+    /// dense golden model, transposed and bit-plane-packed internally.
     pub fn new(weights: Vec<Vec<i64>>, res: Resolution, threshold: i64) -> Self {
         assert!(!weights.is_empty());
         assert!(threshold > 0);
@@ -531,15 +826,36 @@ impl EventFcLayer {
                 wt[i * out_dim + o] = w;
             }
         }
+        let words_in = in_dim.div_ceil(64);
+        let wb = res.w_bits as usize;
+        let mut planes = vec![0u64; out_dim * wb * words_in];
+        for (o, row) in weights.iter().enumerate() {
+            for b in 0..wb {
+                let base = (o * wb + b) * words_in;
+                for (i, &w) in row.iter().enumerate() {
+                    if bit_of(w, b as u32, res.w_bits) {
+                        planes[base + (i >> 6)] |= 1u64 << (i & 63);
+                    }
+                }
+            }
+        }
         EventFcLayer {
             wt,
+            planes,
             in_dim,
             out_dim,
+            words_in,
             v: vec![0i64; out_dim],
             threshold,
             res,
             pending: Vec::new(),
+            pending_next: Vec::new(),
             acc: vec![0i64; out_dim],
+            in_words: Vec::new(),
+            // Per output, the scalar kernel costs `count` adds and the
+            // packed kernel `w_bits × words_in` word ops — break even
+            // where they meet.
+            packed_cutover: wb * words_in,
         }
     }
 
@@ -551,6 +867,14 @@ impl EventFcLayer {
     /// Number of output neurons.
     pub fn out_dim(&self) -> usize {
         self.out_dim
+    }
+
+    /// Override the packed-vs-scalar cutover (input spike count at which
+    /// the bit-plane kernel engages). `0` forces packed on every
+    /// non-silent step, `usize::MAX` forces scalar — the property tests
+    /// pin both modes against the dense oracle at every activity.
+    pub fn set_packed_cutover(&mut self, cutover: usize) {
+        self.packed_cutover = cutover;
     }
 
     /// Current membrane potentials.
@@ -576,54 +900,87 @@ impl EventFcLayer {
         self.pending.clear();
     }
 
-    /// One event-driven timestep.
-    pub fn step(&mut self, spikes_in: &SpikeList) -> SpikeList {
+    /// One event-driven timestep, appending the output spikes into `out`
+    /// (buffer reused, no allocation at steady state).
+    pub fn step_into(&mut self, spikes_in: &SpikeList, out: &mut SpikeList) {
         assert_eq!(spikes_in.dim(), self.in_dim);
         let p = self.res.p_bits;
         let out_dim = self.out_dim;
-        let mut out = Vec::new();
+        out.begin(out_dim);
+        let theta = self.threshold;
 
         if spikes_in.is_empty() {
             // No input: only refire candidates can change state; every
             // other neuron is unchanged and below threshold.
-            let pending = std::mem::take(&mut self.pending);
-            let mut next_pending = Vec::new();
-            for &n in &pending {
+            self.pending_next.clear();
+            let next = &mut self.pending_next;
+            for &n in self.pending.iter() {
                 let ni = n as usize;
                 let mut v = self.v[ni];
-                if v >= self.threshold {
-                    v = wrap(v - self.threshold, p);
+                if v >= theta {
+                    v = wrap(v - theta, p);
                     out.push(n);
                 }
                 self.v[ni] = v;
-                if v >= self.threshold {
-                    next_pending.push(n);
+                if v >= theta {
+                    next.push(n);
                 }
             }
-            self.pending = next_pending;
-            return SpikeList::from_sorted(out, out_dim);
+            std::mem::swap(&mut self.pending, &mut self.pending_next);
+            return;
         }
 
-        self.acc.iter_mut().for_each(|a| *a = 0);
-        for &i in spikes_in.active() {
-            let col = &self.wt[i as usize * out_dim..(i as usize + 1) * out_dim];
-            for (a, &w) in self.acc.iter_mut().zip(col) {
-                *a += w;
+        if spikes_in.count() >= self.packed_cutover {
+            // Bit-plane kernel: popcount the packed input against every
+            // weight plane; the signed two's-complement recomposition is
+            // exact, so this is bit-identical to the scalar adds.
+            spikes_in.to_words_into(&mut self.in_words);
+            let wb = self.res.w_bits as usize;
+            let words_in = self.words_in;
+            for o in 0..out_dim {
+                let base = o * wb * words_in;
+                let mut a = 0i64;
+                for b in 0..wb {
+                    let row = &self.planes[base + b * words_in..][..words_in];
+                    let mut cnt = 0u64;
+                    for (iw, pw) in self.in_words.iter().zip(row) {
+                        cnt += (iw & pw).count_ones() as u64;
+                    }
+                    let term = (cnt as i64) << b;
+                    a += if b + 1 == wb { -term } else { term };
+                }
+                self.acc[o] = a;
+            }
+        } else {
+            self.acc.iter_mut().for_each(|a| *a = 0);
+            for &i in spikes_in.active() {
+                let col = &self.wt[i as usize * out_dim..(i as usize + 1) * out_dim];
+                for (a, &w) in self.acc.iter_mut().zip(col) {
+                    *a += w;
+                }
             }
         }
+
         self.pending.clear();
         for o in 0..out_dim {
             let mut v = wrap(self.v[o] + self.acc[o], p);
-            if v >= self.threshold {
-                v = wrap(v - self.threshold, p);
+            if v >= theta {
+                v = wrap(v - theta, p);
                 out.push(o as u32);
             }
             self.v[o] = v;
-            if v >= self.threshold {
+            if v >= theta {
                 self.pending.push(o as u32);
             }
         }
-        SpikeList::from_sorted(out, out_dim)
+    }
+
+    /// One event-driven timestep, allocating the output — see
+    /// [`Self::step_into`] for the reusable-buffer form.
+    pub fn step(&mut self, spikes_in: &SpikeList) -> SpikeList {
+        let mut out = SpikeList::default();
+        self.step_into(spikes_in, &mut out);
+        out
     }
 }
 
@@ -654,6 +1011,39 @@ mod tests {
         assert_eq!(e.activity(), 0.0);
         let s = SpikeList::from_sorted(vec![0, 3], 4);
         assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn spike_list_builder_reuses_buffer() {
+        let mut s = SpikeList::default();
+        s.begin(8);
+        s.push(1);
+        s.push(5);
+        assert_eq!(s.active(), &[1, 5]);
+        assert_eq!(s.dim(), 8);
+        // Unordered fill with a duplicate, then seal.
+        s.begin(6);
+        s.push_unordered(4);
+        s.push_unordered(0);
+        s.push_unordered(4);
+        s.seal();
+        assert_eq!(s, SpikeList::from_sorted(vec![0, 4], 6));
+        // copy_from matches the source exactly.
+        let src = SpikeList::from_sorted(vec![2, 3], 5);
+        s.copy_from(&src);
+        assert_eq!(s, src);
+    }
+
+    #[test]
+    fn spike_list_packs_into_words() {
+        let s = SpikeList::from_sorted(vec![0, 63, 64, 70], 130);
+        assert_eq!(SpikeList::words_for(130), 3);
+        let mut words = Vec::new();
+        s.to_words_into(&mut words);
+        assert_eq!(words, vec![1 | (1 << 63), 1 | (1 << 6), 0]);
+        // Reuse shrinks and re-zeroes the buffer.
+        SpikeList::empty(64).to_words_into(&mut words);
+        assert_eq!(words, vec![0]);
     }
 
     #[test]
@@ -723,6 +1113,29 @@ mod tests {
     }
 
     #[test]
+    fn conv_packed_and_scalar_paths_interleave() {
+        // The packed and scalar kernels share membrane state and the
+        // refire mask: alternating them on one instance must still match
+        // the dense oracle step for step.
+        let spec = LayerSpec::conv("mix", 2, 3, 3, 1, 1, 5, 5, Resolution::new(4, 9));
+        let weights: Vec<i64> =
+            (0..spec.num_weights()).map(|i| (i as i64 % 15) - 7).collect();
+        let mut sparse = EventConvLayer::new(spec.clone(), weights.clone(), 6);
+        let mut dense = ConvLifLayer::new(spec, weights, 6);
+        for t in 0..8 {
+            let bits: Vec<bool> = (0..50).map(|i| (i * 7 + t * 13) % 11 < 3).collect();
+            let sl = SpikeList::from_dense(&bits);
+            let got = if t % 2 == 0 {
+                sparse.step(&sl)
+            } else {
+                sparse.step_scalar(&sl)
+            };
+            assert_eq!(got.to_dense(), dense.step(&bits), "t={t}");
+            assert_eq!(sparse.vmem(), &dense.v[..], "t={t} vmem");
+        }
+    }
+
+    #[test]
     fn event_fc_matches_dense_including_silent_steps() {
         let res = Resolution::new(4, 8);
         let weights = vec![vec![5, 2], vec![-3, 7], vec![6, 6]];
@@ -740,6 +1153,38 @@ mod tests {
             let b = dense.step(p);
             assert_eq!(a.to_dense(), b, "t={t} spikes");
             assert_eq!(sparse.vmem(), &dense.v[..], "t={t} vmem");
+        }
+    }
+
+    #[test]
+    fn fc_bit_plane_kernel_matches_column_adds() {
+        // Forced packed vs forced scalar vs dense, including negative
+        // weights (MSB plane) and a 1-bit weight resolution (sign-only).
+        for w_bits in [1u32, 3, 4] {
+            let res = Resolution::new(w_bits, 10);
+            let (lo, hi) = (min_val(w_bits), max_val(w_bits));
+            let weights: Vec<Vec<i64>> = (0..5)
+                .map(|o| {
+                    (0..70)
+                        .map(|i| lo + ((o * 31 + i * 17) as i64 % (hi - lo + 1)))
+                        .collect()
+                })
+                .collect();
+            let mut packed = EventFcLayer::new(weights.clone(), res, 3);
+            packed.set_packed_cutover(0);
+            let mut scalar = EventFcLayer::new(weights.clone(), res, 3);
+            scalar.set_packed_cutover(usize::MAX);
+            let mut dense = LifLayer::new(weights, res, 3);
+            for t in 0..6 {
+                let bits: Vec<bool> = (0..70).map(|i| (i * 5 + t * 29) % 9 < 4).collect();
+                let a = packed.step(&SpikeList::from_dense(&bits));
+                let b = scalar.step(&SpikeList::from_dense(&bits));
+                let d = dense.step(&bits);
+                assert_eq!(a.to_dense(), d, "w_bits={w_bits} t={t} packed");
+                assert_eq!(b.to_dense(), d, "w_bits={w_bits} t={t} scalar");
+                assert_eq!(packed.vmem(), &dense.v[..], "w_bits={w_bits} t={t}");
+                assert_eq!(scalar.vmem(), &dense.v[..], "w_bits={w_bits} t={t}");
+            }
         }
     }
 

@@ -1,0 +1,155 @@
+//! Zero-allocation steady-state guarantee of the packed hot path.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; after one
+//! warm-up window has grown every scratch buffer to its high-water mark,
+//! re-running the identical window trajectory — coordinator window loop,
+//! backend step, state snapshot, and the serve tier's micro-window encoder
+//! — must perform **zero** heap allocations.
+//!
+//! Everything lives in a single `#[test]`: libtest runs tests on parallel
+//! threads sharing this process-wide counter, so the measurements must be
+//! sequential within one test (the Cargo manifest also gives this file its
+//! own binary for the same reason).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use flexspim::coordinator::{SampleBuffers, SamplePlan};
+use flexspim::dataflow::Policy;
+use flexspim::events::DvsEvent;
+use flexspim::runtime::{NativeScnn, StateSnapshot, StepBackend};
+use flexspim::serve::{encode_window_into, EncodeScratch, MicroWindow, SessionConfig};
+use flexspim::snn::events::SpikeList;
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::util::rng::Rng;
+
+/// Counts every allocating entry point; frees are not interesting (a
+/// steady state that allocates and frees each window still churns).
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Conv → FC → FC network small enough for a fast test but exercising
+/// both event-layer kinds on the packed path.
+fn test_net() -> Network {
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "alloc-steady",
+        vec![
+            LayerSpec::conv("C1", 2, 4, 3, 2, 1, 16, 16, r),
+            LayerSpec::fc("F1", 4 * 8 * 8, 16, r),
+            LayerSpec::fc("F2", 16, 10, Resolution::new(5, 10)),
+        ],
+        4,
+    )
+}
+
+/// Input frames for the window: one 100 %-dense frame first (so warm-up
+/// drives every buffer to its worst-case capacity), then sparse frames.
+fn test_frames(dim: usize) -> Vec<SpikeList> {
+    let mut frames = vec![SpikeList::from_dense(&vec![true; dim])];
+    let mut rng = Rng::new(11);
+    for _ in 0..7 {
+        let dense: Vec<bool> = (0..dim).map(|_| rng.chance(0.15)).collect();
+        frames.push(SpikeList::from_dense(&dense));
+    }
+    frames
+}
+
+#[test]
+fn steady_state_window_is_allocation_free() {
+    flexspim::telemetry::set_enabled(false);
+
+    // --- coordinator window loop + native backend ---------------------
+    let net = test_net();
+    let dim = 2 * 16 * 16;
+    let frames = test_frames(dim);
+    let plan = SamplePlan::new(net.clone(), 2, Policy::HsOpt);
+    let mut backend = NativeScnn::new(net, 3);
+    let mut bufs = SampleBuffers::default();
+    let mut rate = vec![0i64; 10];
+
+    // Warm-up: the identical trajectory re-runs below, so one pass grows
+    // every scratch (spike ping-pong buffers, per-layer accumulators,
+    // FC word buffers, step-result counts) to its exact high-water mark.
+    backend.reset();
+    let warm = plan.run_frames(&mut backend, &mut bufs, &frames, &mut rate).unwrap();
+    assert!(warm.in_events > 0 && warm.sops > 0, "warm-up window must do real work");
+
+    let before = allocations();
+    for _ in 0..3 {
+        backend.reset();
+        rate.fill(0);
+        plan.run_frames(&mut backend, &mut bufs, &frames, &mut rate).unwrap();
+    }
+    assert_eq!(
+        allocations() - before,
+        0,
+        "steady-state run_frames window must not touch the heap"
+    );
+
+    // --- state snapshot reuse (the serve checkpoint path) --------------
+    let mut snap = StateSnapshot::default();
+    backend.snapshot_into(&mut snap); // warm: sizes the per-layer vectors
+    let before = allocations();
+    for _ in 0..3 {
+        backend.snapshot_into(&mut snap);
+    }
+    assert_eq!(allocations() - before, 0, "snapshot_into must reuse its buffers");
+    assert_eq!(snap, backend.snapshot(), "reused snapshot matches a fresh one");
+
+    // --- serve micro-window encoder scratch reuse ----------------------
+    let cfg = SessionConfig::default_48();
+    let mut rng = Rng::new(29);
+    let events: Vec<DvsEvent> = (0..512)
+        .map(|_| DvsEvent {
+            t_us: rng.below(cfg.window_us()),
+            x: rng.below(cfg.width as u64) as u16,
+            y: rng.below(cfg.height as u64) as u16,
+            polarity: rng.chance(0.5),
+        })
+        .collect();
+    let window = MicroWindow { t0_us: 0, t1_us: cfg.window_us(), events, last: false };
+    let mut scratch = EncodeScratch::default();
+    let n = encode_window_into(&cfg, &window, &mut scratch).len(); // warm
+    assert_eq!(n, cfg.frames_per_window);
+
+    let before = allocations();
+    for _ in 0..3 {
+        let enc = encode_window_into(&cfg, &window, &mut scratch);
+        assert_eq!(enc.len(), cfg.frames_per_window);
+    }
+    assert_eq!(
+        allocations() - before,
+        0,
+        "steady-state window encoding must not touch the heap"
+    );
+}

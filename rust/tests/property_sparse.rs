@@ -8,7 +8,8 @@
 //! those are exactly the cases where a naive "fire-check only touched
 //! neurons" scheme diverges from the dense per-neuron scan, and where the
 //! sparse engine's refire set must step in. Activities sweep from fully
-//! silent frames (refire-only paths) to half-dense ones.
+//! silent frames (refire-only paths) all the way to 100 %-dense ones (the
+//! packed word-parallel kernels' saturation case).
 
 use flexspim::runtime::{NativeScnn, StepBackend};
 use flexspim::snn::conv::ConvLifLayer;
@@ -46,7 +47,7 @@ fn prop_event_conv_matches_dense_conv() {
             let in_dim = in_ch * h * h;
             for t in 0..6 {
                 // Sweep activity including fully-silent frames.
-                let activity = *c.rng.choose(&[0.0, 0.02, 0.1, 0.3, 0.5]);
+                let activity = *c.rng.choose(&[0.0, 0.02, 0.1, 0.3, 0.5, 1.0]);
                 let bits: Vec<bool> = (0..in_dim).map(|_| c.rng.chance(activity)).collect();
                 let a = sparse.step(&SpikeList::from_dense(&bits));
                 let b = dense.step(&bits);
@@ -82,7 +83,7 @@ fn prop_event_fc_matches_dense_lif() {
             let mut sparse = EventFcLayer::new(weights.clone(), res, theta);
             let mut dense = LifLayer::new(weights, res, theta);
             for t in 0..6 {
-                let activity = *c.rng.choose(&[0.0, 0.05, 0.2, 0.5]);
+                let activity = *c.rng.choose(&[0.0, 0.05, 0.2, 0.5, 1.0]);
                 let bits: Vec<bool> = (0..in_dim).map(|_| c.rng.chance(activity)).collect();
                 let a = sparse.step(&SpikeList::from_dense(&bits));
                 let b = dense.step(&bits);
@@ -92,6 +93,104 @@ fn prop_event_fc_matches_dense_lif() {
                     dense.v.clone(),
                     &format!("t={t} vmem"),
                 )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The conv layer's packed word-parallel step and its scalar reference
+/// step are the same function: run two clones of one layer — one through
+/// `step`, one through `step_scalar` — against the dense oracle, at every
+/// activity including 100 % dense, and demand identical spikes and vmem.
+/// The paths also share the packed pending masks, so alternating them on
+/// a third clone checks the interleaved hand-off.
+#[test]
+fn prop_conv_packed_scalar_and_dense_paths_agree() {
+    check(
+        "conv-packed-vs-scalar-vs-dense",
+        &Config { cases: 40, ..Default::default() },
+        |c| {
+            let in_ch = c.rng.range_usize(1, 3);
+            let out_ch = c.rng.range_usize(1, 4);
+            let k = *c.rng.choose(&[1usize, 3]);
+            let stride = *c.rng.choose(&[1usize, 2]);
+            let pad = c.rng.range_usize(0, k / 2);
+            let h = c.rng.range_usize(k.max(3), 9);
+            let res = Resolution::new(c.rng.range_i64(2, 5) as u32, c.rng.range_i64(6, 12) as u32);
+            let spec = LayerSpec::conv("p", in_ch, out_ch, k, stride, pad, h, h, res);
+            let hi = flexspim::snn::quant::max_val(res.w_bits);
+            let lo = flexspim::snn::quant::min_val(res.w_bits);
+            let weights: Vec<i64> = (0..spec.num_weights())
+                .map(|_| c.rng.range_i64(lo, hi))
+                .collect();
+            let theta = c.rng.range_i64(1, 8);
+            let mut packed = EventConvLayer::new(spec.clone(), weights.clone(), theta);
+            let mut scalar = packed.clone();
+            let mut mixed = packed.clone();
+            let mut dense = ConvLifLayer::new(spec, weights, theta);
+
+            let in_dim = in_ch * h * h;
+            for t in 0..6 {
+                let activity = *c.rng.choose(&[0.0, 0.1, 0.4, 1.0]);
+                let bits: Vec<bool> = (0..in_dim).map(|_| c.rng.chance(activity)).collect();
+                let frame = SpikeList::from_dense(&bits);
+                let a = packed.step(&frame);
+                let b = scalar.step_scalar(&frame);
+                let m = if t % 2 == 0 {
+                    mixed.step(&frame)
+                } else {
+                    mixed.step_scalar(&frame)
+                };
+                let d = dense.step(&bits);
+                prop_eq(a.to_dense(), d.clone(), &format!("t={t} packed spikes"))?;
+                prop_eq(b.to_dense(), d.clone(), &format!("t={t} scalar spikes"))?;
+                prop_eq(m.to_dense(), d, &format!("t={t} interleaved spikes"))?;
+                prop_eq(packed.vmem().to_vec(), dense.v.clone(), &format!("t={t} packed vmem"))?;
+                prop_eq(scalar.vmem().to_vec(), dense.v.clone(), &format!("t={t} scalar vmem"))?;
+                prop_eq(mixed.vmem().to_vec(), dense.v.clone(), &format!("t={t} mixed vmem"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The FC layer's bit-plane popcount kernel and its scalar column-add
+/// kernel are forced (via the cutover knob) on two clones and checked
+/// against the dense LIF at every activity including 100 % dense.
+#[test]
+fn prop_fc_forced_kernels_agree_with_dense() {
+    check(
+        "fc-forced-packed-vs-scalar-vs-dense",
+        &Config { cases: 60, ..Default::default() },
+        |c| {
+            let in_dim = c.rng.range_usize(1, 90);
+            let out_dim = c.rng.range_usize(1, 8);
+            let w_bits = c.rng.range_i64(1, 5) as u32;
+            let p_bits = c.rng.range_i64(6, 12) as u32;
+            let res = Resolution::new(w_bits, p_bits);
+            let hi = flexspim::snn::quant::max_val(w_bits);
+            let lo = flexspim::snn::quant::min_val(w_bits);
+            let weights: Vec<Vec<i64>> = (0..out_dim)
+                .map(|_| (0..in_dim).map(|_| c.rng.range_i64(lo, hi)).collect())
+                .collect();
+            let theta = c.rng.range_i64(1, 8);
+            let mut packed = EventFcLayer::new(weights.clone(), res, theta);
+            packed.set_packed_cutover(0); // every non-silent frame uses popcounts
+            let mut scalar = EventFcLayer::new(weights.clone(), res, theta);
+            scalar.set_packed_cutover(usize::MAX); // never
+            let mut dense = LifLayer::new(weights, res, theta);
+            for t in 0..6 {
+                let activity = *c.rng.choose(&[0.0, 0.1, 0.4, 1.0]);
+                let bits: Vec<bool> = (0..in_dim).map(|_| c.rng.chance(activity)).collect();
+                let frame = SpikeList::from_dense(&bits);
+                let a = packed.step(&frame);
+                let b = scalar.step(&frame);
+                let d = dense.step(&bits);
+                prop_eq(a.to_dense(), d.clone(), &format!("t={t} packed spikes"))?;
+                prop_eq(b.to_dense(), d, &format!("t={t} scalar spikes"))?;
+                prop_eq(packed.vmem().to_vec(), dense.v.clone(), &format!("t={t} packed vmem"))?;
+                prop_eq(scalar.vmem().to_vec(), dense.v.clone(), &format!("t={t} scalar vmem"))?;
             }
             Ok(())
         },
@@ -191,7 +290,7 @@ fn prop_sparse_backend_matches_dense_reference_network() {
             let mut rate_a = vec![0i64; 10];
             let mut rate_b = vec![0i64; 10];
             for t in 0..8 {
-                let activity = *c.rng.choose(&[0.0, 0.05, 0.25]);
+                let activity = *c.rng.choose(&[0.0, 0.05, 0.25, 1.0]);
                 let bits: Vec<bool> = (0..in_dim).map(|_| c.rng.chance(activity)).collect();
                 let frame = SpikeList::from_dense(&bits);
                 let a = sparse.step(&frame).map_err(|e| e.to_string())?;

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Gate the packed-vs-scalar speedup measured by `cargo bench --bench
+# perf_hotpath` (section 7 emits `BENCH_JSON {"bench":"packed_step_conv",...}`
+# and `packed_step_fc` lines, one per activity point): fail unless the best
+# measured speedup of each kernel clears the bar. CI runs this so the packed
+# word-parallel step can never quietly regress below the scalar sparse path.
+#
+#   cargo bench --bench perf_hotpath | tee run.log
+#   scripts/check_speedup.sh run.log        # default bar: 1.5x
+#   scripts/check_speedup.sh run.log 1.2    # relaxed bar (noisy runners)
+set -euo pipefail
+
+log="${1:?usage: check_speedup.sh RUN_LOG [MIN_SPEEDUP]}"
+bar="${2:-1.5}"
+
+fail=0
+for bench in packed_step_conv packed_step_fc; do
+  lines=$(grep "^BENCH_JSON {\"bench\":\"$bench\"" "$log" || true)
+  if [ -z "$lines" ]; then
+    echo "error: no $bench BENCH_JSON line in $log" >&2
+    exit 1
+  fi
+  best=$(printf '%s\n' "$lines" | sed 's/.*"speedup"://; s/[,}].*//' | sort -g | tail -n 1)
+  if [ "$best" = "null" ] || [ -z "$best" ]; then
+    echo "error: speedup missing or null in $bench lines" >&2
+    exit 1
+  fi
+  if awk -v s="$best" -v b="$bar" 'BEGIN { exit !(s >= b) }'; then
+    printf 'OK: %s best speedup %.2fx clears the %.2fx bar\n' "$bench" "$best" "$bar"
+  else
+    printf 'FAIL: %s best speedup %.2fx below the %.2fx bar\n' "$bench" "$best" "$bar"
+    fail=1
+  fi
+done
+exit "$fail"
