@@ -325,10 +325,15 @@ impl SamplePlan {
 
             // Energy from measured per-layer activity: layer l's input
             // spikes are the previous layer's output count (layer 0 sees
-            // the frame).
+            // the frame). Per-layer operand resolutions come from the
+            // *backend's* live network, not the plan's: a serve-time
+            // precision switch (`set_resolutions`) changes the energy of
+            // every subsequent window. Geometry is identical to the plan's
+            // net either way; only the CIM shard ledger below stays
+            // calibrated at the plan's base resolution.
             let mut in_events_n = in_count;
-            for (li, (layer, assign)) in self
-                .net
+            for (li, (layer, assign)) in backend
+                .network()
                 .layers
                 .iter()
                 .zip(&self.mapping.assignments)

@@ -18,7 +18,7 @@ use crate::coordinator::engine::{BackendFactory, Engine, SamplePlan};
 use crate::coordinator::Coordinator;
 use crate::energy::{SystemConfig, SystemEnergyModel};
 use crate::runtime::{artifacts_dir, NativeScnn, Runtime, ScnnRunner, StepBackend};
-use crate::serve::{AutoscaleConfig, ServiceConfig, StreamingService};
+use crate::serve::{AutoscaleConfig, PrecisionConfig, ServiceConfig, StreamingService};
 use crate::snn::events::AdjacencyCache;
 use crate::snn::{LayerKind, Network};
 use crate::telemetry::TelemetryConfig;
@@ -236,6 +236,15 @@ impl Deployment {
             queue_high: a.queue_high,
             hysteresis_ticks: a.hysteresis_ticks,
         };
+        let p = &self.spec.precision;
+        cfg.precision = PrecisionConfig {
+            enabled: p.enabled,
+            max_delta: p.max_delta,
+            drop_p99_s: p.drop_p99_ms * 1e-3,
+            queue_high: p.queue_high,
+            raise_margin: p.raise_margin,
+            min_windows: p.min_windows,
+        };
         match self.net.layers[0].kind {
             LayerKind::Conv { in_ch, in_h, in_w, .. } if in_ch == 2 => {
                 ensure!(
@@ -386,6 +395,23 @@ mod tests {
         // A plain spec keeps the service instrumentation off.
         let cfg = small_spec().deploy().unwrap().service_config().unwrap();
         assert!(!cfg.telemetry.enabled);
+    }
+
+    #[test]
+    fn precision_spec_reaches_the_service_config() {
+        let mut spec = small_spec();
+        spec.precision.enabled = true;
+        spec.precision.max_delta = 2;
+        spec.precision.drop_p99_ms = 5.0;
+        spec.precision.raise_margin = 0.3;
+        let cfg = spec.deploy().unwrap().service_config().unwrap();
+        assert!(cfg.precision.enabled);
+        assert_eq!(cfg.precision.max_delta, 2);
+        assert!((cfg.precision.drop_p99_s - 0.005).abs() < 1e-12, "ms converts to s");
+        assert!((cfg.precision.raise_margin - 0.3).abs() < 1e-12);
+        // A plain spec keeps the controller off.
+        let cfg = small_spec().deploy().unwrap().service_config().unwrap();
+        assert!(!cfg.precision.enabled);
     }
 
     #[test]

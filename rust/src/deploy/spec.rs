@@ -573,6 +573,70 @@ impl TelemetrySpec {
     }
 }
 
+// -------------------------------------------------------- precision spec
+
+/// Precision-controller section: per-session serve-time resolution
+/// adaptation (see [`crate::serve::PrecisionConfig`] for the control
+/// semantics). Defaults to off, so a plain spec serves every window at
+/// the deployed (tier-0) resolution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionSpec {
+    /// Master switch; when off every session stays at tier 0.
+    pub enabled: bool,
+    /// Deepest tier: every layer may lose up to this many bits
+    /// (1..=7; the fig6 floor of 2 weight / 4 membrane bits still
+    /// applies per layer).
+    pub max_delta: u32,
+    /// Rolling-p99 window latency above which a session drops one tier
+    /// (milliseconds).
+    pub drop_p99_ms: f64,
+    /// Queued windows per active worker considered overloaded.
+    pub queue_high: usize,
+    /// Smoothed classification margin below which a session is raised
+    /// one tier back toward full precision.
+    pub raise_margin: f64,
+    /// Executed windows required before margin-driven raises may
+    /// trigger.
+    pub min_windows: u64,
+}
+
+impl Default for PrecisionSpec {
+    fn default() -> Self {
+        PrecisionSpec {
+            enabled: false,
+            max_delta: 3,
+            drop_p99_ms: 20.0,
+            queue_high: 8,
+            raise_margin: 0.5,
+            min_windows: 2,
+        }
+    }
+}
+
+impl PrecisionSpec {
+    /// Sanity limits.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            (1..=crate::serve::precision::MAX_DELTA_LIMIT).contains(&self.max_delta),
+            "precision: max_delta {} outside 1..={}",
+            self.max_delta,
+            crate::serve::precision::MAX_DELTA_LIMIT
+        );
+        ensure!(
+            self.drop_p99_ms > 0.0,
+            "precision: drop_p99_ms {} must be > 0",
+            self.drop_p99_ms
+        );
+        ensure!(self.queue_high >= 1, "precision: queue_high must be >= 1");
+        ensure!(
+            self.raise_margin >= 0.0,
+            "precision: raise_margin {} must be >= 0",
+            self.raise_margin
+        );
+        Ok(())
+    }
+}
+
 // -------------------------------------------------------- deployment spec
 
 /// The one typed description of a FlexSpIM deployment: topology,
@@ -592,6 +656,8 @@ pub struct DeploymentSpec {
     pub serve: ServeSpec,
     /// Telemetry settings (metrics, tracing, flight recorder).
     pub telemetry: TelemetrySpec,
+    /// Serve-time precision-controller settings.
+    pub precision: PrecisionSpec,
 }
 
 impl DeploymentSpec {
@@ -603,6 +669,7 @@ impl DeploymentSpec {
             backend: BackendSpec::default(),
             serve: ServeSpec::default(),
             telemetry: TelemetrySpec::default(),
+            precision: PrecisionSpec::default(),
         }
     }
 
@@ -612,6 +679,7 @@ impl DeploymentSpec {
         self.substrate.validate()?;
         self.serve.validate()?;
         self.telemetry.validate()?;
+        self.precision.validate()?;
         Ok(())
     }
 }
@@ -644,6 +712,7 @@ pub struct DeploymentBuilder {
     backend: BackendSpec,
     serve: ServeSpec,
     telemetry: TelemetrySpec,
+    precision: PrecisionSpec,
 }
 
 impl DeploymentBuilder {
@@ -824,6 +893,22 @@ impl DeploymentBuilder {
         self
     }
 
+    /// Replace the whole precision-controller section.
+    pub fn precision(mut self, spec: PrecisionSpec) -> Self {
+        self.precision = spec;
+        self
+    }
+
+    /// Shortcut: enable serve-time precision adaptation with a drop
+    /// threshold (rolling p99, ms) and a deepest tier, keeping the
+    /// remaining knobs at their defaults.
+    pub fn adaptive_precision(mut self, drop_p99_ms: f64, max_delta: u32) -> Self {
+        self.precision.enabled = true;
+        self.precision.drop_p99_ms = drop_p99_ms;
+        self.precision.max_delta = max_delta;
+        self
+    }
+
     /// Validate and produce the spec.
     pub fn build(self) -> Result<DeploymentSpec> {
         let spec = DeploymentSpec {
@@ -832,6 +917,7 @@ impl DeploymentBuilder {
             backend: self.backend,
             serve: self.serve,
             telemetry: self.telemetry,
+            precision: self.precision,
         };
         spec.validate()?;
         Ok(spec)
@@ -919,6 +1005,14 @@ mod tests {
         assert!(base().telemetry(bad_tl).build().is_err(), "zero trace_sample");
         let bad_tl = TelemetrySpec { flight_capacity: 0, ..TelemetrySpec::default() };
         assert!(base().telemetry(bad_tl).build().is_err(), "zero flight_capacity");
+        let bad_pr = PrecisionSpec { max_delta: 0, ..PrecisionSpec::default() };
+        assert!(base().precision(bad_pr).build().is_err(), "zero max_delta");
+        let bad_pr = PrecisionSpec { max_delta: 8, ..PrecisionSpec::default() };
+        assert!(base().precision(bad_pr).build().is_err(), "max_delta past tier table");
+        let bad_pr = PrecisionSpec { drop_p99_ms: 0.0, ..PrecisionSpec::default() };
+        assert!(base().precision(bad_pr).build().is_err(), "zero drop_p99_ms");
+        let bad_pr = PrecisionSpec { raise_margin: -0.5, ..PrecisionSpec::default() };
+        assert!(base().precision(bad_pr).build().is_err(), "negative raise_margin");
         let mut bad_bits = base().build().unwrap();
         bad_bits.network.layers[0] = LayerDef::Fc {
             name: "f".into(),
@@ -991,6 +1085,27 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(plain.telemetry, TelemetrySpec::default());
+    }
+
+    #[test]
+    fn precision_builder_paths() {
+        let spec = DeploymentSpec::builder("t")
+            .fc("f", 4, 10, Resolution::new(4, 8))
+            .adaptive_precision(8.0, 2)
+            .build()
+            .unwrap();
+        assert!(spec.precision.enabled);
+        assert_eq!(spec.precision.max_delta, 2);
+        assert!((spec.precision.drop_p99_ms - 8.0).abs() < 1e-12);
+        // The untouched knobs stay at their defaults.
+        assert_eq!(spec.precision.queue_high, 8);
+        assert_eq!(spec.precision.min_windows, 2);
+        // A plain spec keeps the controller off.
+        let plain = DeploymentSpec::builder("t")
+            .fc("f", 4, 10, Resolution::new(4, 8))
+            .build()
+            .unwrap();
+        assert_eq!(plain.precision, PrecisionSpec::default());
     }
 
     #[test]

@@ -70,6 +70,14 @@
 //! # trace = false            # Chrome-trace span capture
 //! # trace_sample = 64        # record 1 in N spans (>= 1)
 //! # flight_capacity = 256    # flight-recorder ring size
+//!
+//! # [precision]              # whole section optional (defaults off)
+//! # enabled = true           # per-session serve-time precision control
+//! # max_delta = 3            # deepest resolution tier (1..=7)
+//! # drop_p99_ms = 20.0       # rolling p99 above this drops one tier
+//! # queue_high = 8           # queued windows/worker = overloaded
+//! # raise_margin = 0.5       # margin below this raises one tier
+//! # min_windows = 2          # windows before margin raises may fire
 //! ```
 
 use std::collections::BTreeSet;
@@ -84,7 +92,7 @@ use crate::Result;
 use super::presets;
 use super::spec::{
     parse_policy, policy_key, AutoscaleSpec, BackendSpec, DeploymentSpec, LayerDef, NetworkSpec,
-    ServeSpec, SubstrateSpec, TelemetrySpec,
+    PrecisionSpec, ServeSpec, SubstrateSpec, TelemetrySpec,
 };
 
 // ------------------------------------------------------------ strict doc
@@ -417,8 +425,28 @@ pub fn spec_from_doc(doc: &Doc) -> Result<DeploymentSpec> {
         telemetry.flight_capacity = c;
     }
 
+    let mut precision = PrecisionSpec::default();
+    if let Some(on) = t.take_bool("precision.enabled")? {
+        precision.enabled = on;
+    }
+    if let Some(d) = t.take_u32("precision.max_delta")? {
+        precision.max_delta = d;
+    }
+    if let Some(p) = t.take_float("precision.drop_p99_ms")? {
+        precision.drop_p99_ms = p;
+    }
+    if let Some(q) = t.take_usize("precision.queue_high")? {
+        precision.queue_high = q;
+    }
+    if let Some(m) = t.take_float("precision.raise_margin")? {
+        precision.raise_margin = m;
+    }
+    if let Some(w) = t.take_u64("precision.min_windows")? {
+        precision.min_windows = w;
+    }
+
     t.finish()?;
-    let spec = DeploymentSpec { network, substrate, backend, serve, telemetry };
+    let spec = DeploymentSpec { network, substrate, backend, serve, telemetry, precision };
     spec.validate()?;
     Ok(spec)
 }
@@ -551,6 +579,17 @@ impl DeploymentSpec {
             let _ = writeln!(out, "trace = {}", tl.trace);
             let _ = writeln!(out, "trace_sample = {}", tl.trace_sample);
             let _ = writeln!(out, "flight_capacity = {}", tl.flight_capacity);
+        }
+        let pr = &self.precision;
+        if *pr != PrecisionSpec::default() {
+            out.push('\n');
+            let _ = writeln!(out, "[precision]");
+            let _ = writeln!(out, "enabled = {}", pr.enabled);
+            let _ = writeln!(out, "max_delta = {}", pr.max_delta);
+            let _ = writeln!(out, "drop_p99_ms = {}", pr.drop_p99_ms);
+            let _ = writeln!(out, "queue_high = {}", pr.queue_high);
+            let _ = writeln!(out, "raise_margin = {}", pr.raise_margin);
+            let _ = writeln!(out, "min_windows = {}", pr.min_windows);
         }
         out
     }
@@ -723,6 +762,53 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err}").contains("trace_sample"), "got: {err}");
+    }
+
+    #[test]
+    fn precision_section_round_trips() {
+        let spec = DeploymentSpec::builder("toml-precision")
+            .timesteps(8)
+            .fc("F1", 16, 10, Resolution::new(4, 8))
+            .adaptive_precision(5.0, 2)
+            .build()
+            .unwrap();
+        let text = spec.to_toml();
+        assert!(text.contains("[precision]"), "got:\n{text}");
+        assert!(text.contains("max_delta = 2"), "got:\n{text}");
+        let parsed = DeploymentSpec::from_toml_str(&text).unwrap();
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.to_toml(), text, "serialization is a fixed point");
+        // A default spec emits no [precision] section at all, so configs
+        // written before the controller existed serialize byte-identically.
+        assert!(!demo_spec().to_toml().contains("precision"), "default emits nothing");
+        // Keys parse individually and stay strict.
+        let base = "[network]\npreset = \"serve-demo\"\n";
+        let spec = DeploymentSpec::from_toml_str(&format!(
+            "{base}[precision]\nenabled = true\nmax_delta = 4\nqueue_high = 3\n\
+             drop_p99_ms = 7.5\nraise_margin = 0.25\nmin_windows = 5\n"
+        ))
+        .unwrap();
+        assert!(spec.precision.enabled);
+        assert_eq!(spec.precision.max_delta, 4);
+        assert_eq!(spec.precision.queue_high, 3);
+        assert!((spec.precision.drop_p99_ms - 7.5).abs() < 1e-12);
+        assert!((spec.precision.raise_margin - 0.25).abs() < 1e-12);
+        assert_eq!(spec.precision.min_windows, 5);
+        let err = DeploymentSpec::from_toml_str(
+            &format!("{base}[precision]\ndelta = 4\n"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("precision.delta"), "got: {err}");
+        let err = DeploymentSpec::from_toml_str(
+            &format!("{base}[precision]\nmax_delta = 0\n"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("max_delta"), "got: {err}");
+        let err = DeploymentSpec::from_toml_str(
+            &format!("{base}[precision]\nmax_delta = 9\n"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("max_delta"), "got: {err}");
     }
 
     #[test]

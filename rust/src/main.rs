@@ -9,6 +9,8 @@
 //!                    [--deterministic] [--exit-margin X]
 //!                    [--step-us U] [--frames-per-window K]
 //!                    [--autoscale] [--autoscale-max W] [--slo-p99-ms X]
+//!                    [--precision] [--precision-max-delta D]
+//!                    [--precision-p99-ms X] [--precision-margin M]
 //! flexspim train     [--config F] [--steps N] [--lr X] [--seed S] [--out PATH]
 //! flexspim map       [--config F] [--macros M]
 //! flexspim simulate  [--config F] [--wbits W] [--pbits P] [--nc C]
@@ -97,6 +99,26 @@ fn specs() -> Vec<Spec> {
             name: "slo-p99-ms",
             takes_value: true,
             help: "serve: autoscaler p99 latency objective in ms (implies --autoscale)",
+        },
+        Spec {
+            name: "precision",
+            takes_value: false,
+            help: "serve: enable the per-session precision controller",
+        },
+        Spec {
+            name: "precision-max-delta",
+            takes_value: true,
+            help: "serve: deepest resolution tier, 1..=7 (implies --precision)",
+        },
+        Spec {
+            name: "precision-p99-ms",
+            takes_value: true,
+            help: "serve: p99 above this drops a resolution tier (implies --precision)",
+        },
+        Spec {
+            name: "precision-margin",
+            takes_value: true,
+            help: "serve: margin below this raises a resolution tier (implies --precision)",
         },
         Spec {
             name: "verbosity",
@@ -199,6 +221,21 @@ fn spec_from_args(args: &Args, default_preset: &str) -> Result<DeploymentSpec> {
     if let Some(slo) = args.get_parsed::<f64>("slo-p99-ms").map_err(|e| anyhow!(e))? {
         spec.serve.autoscale.enabled = true;
         spec.serve.autoscale.slo_p99_ms = slo;
+    }
+    if args.flag("precision") {
+        spec.precision.enabled = true;
+    }
+    if let Some(d) = args.get_parsed::<u32>("precision-max-delta").map_err(|e| anyhow!(e))? {
+        spec.precision.enabled = true;
+        spec.precision.max_delta = d;
+    }
+    if let Some(p) = args.get_parsed::<f64>("precision-p99-ms").map_err(|e| anyhow!(e))? {
+        spec.precision.enabled = true;
+        spec.precision.drop_p99_ms = p;
+    }
+    if let Some(m) = args.get_parsed::<f64>("precision-margin").map_err(|e| anyhow!(e))? {
+        spec.precision.enabled = true;
+        spec.precision.raise_margin = m;
     }
     if args.flag("telemetry") || args.flag("dump-telemetry") {
         spec.telemetry.enabled = true;
@@ -347,6 +384,17 @@ fn run_serve(args: &Args) -> Result<()> {
             auto.interval.as_millis(),
             auto.queue_high,
             auto.hysteresis_ticks,
+        );
+    }
+    let prec = &svc.config().precision;
+    if prec.enabled {
+        log_info!(
+            "precision controller: up to {} tiers, drop over p99 {:.1} ms or \
+             queue {}/worker, raise under margin {:.2}",
+            prec.max_delta,
+            prec.drop_p99_s * 1e3,
+            prec.queue_high,
+            prec.raise_margin,
         );
     }
     let traffic = gesture_traffic(sessions, seed ^ 0x7EA4_11FC, jitter_us);

@@ -58,6 +58,37 @@ impl StateSnapshot {
     pub fn neurons(&self) -> usize {
         self.vmems.iter().map(Vec::len).sum()
     }
+
+    /// Realign a snapshot captured at `from` per-layer `(w_bits, p_bits)`
+    /// resolutions into the membrane range of `to`: each layer's
+    /// potentials shift by the `p_bits` delta (`v << Δ` when the
+    /// accumulator widens, arithmetic `v >> Δ` when it narrows), which is
+    /// what the chip's bitwise-reconfigurable vmem words do when a layer's
+    /// operand resolution is switched under a live session. `w_bits` does
+    /// not move stored state (weights are requantized, not membranes).
+    ///
+    /// Shifting keeps every value inside `[min_val(p), max_val(p)]` of the
+    /// target resolution, so a rescaled snapshot always restores cleanly
+    /// into a backend rebuilt at `to`.
+    pub fn rescaled(&self, from: &[(u32, u32)], to: &[(u32, u32)]) -> StateSnapshot {
+        assert_eq!(from.len(), self.vmems.len(), "from-resolution layer count");
+        assert_eq!(to.len(), self.vmems.len(), "to-resolution layer count");
+        let vmems = self
+            .vmems
+            .iter()
+            .zip(from.iter().zip(to))
+            .map(|(v, (&(_, po), &(_, pn)))| {
+                if pn >= po {
+                    let sh = pn - po;
+                    v.iter().map(|&x| x << sh).collect()
+                } else {
+                    let sh = po - pn;
+                    v.iter().map(|&x| x >> sh).collect()
+                }
+            })
+            .collect();
+        StateSnapshot { vmems }
+    }
 }
 
 /// One-timestep network execution engine with persistent membrane state.
@@ -81,8 +112,18 @@ pub trait StepBackend {
         Ok(())
     }
 
-    /// Requantize at explicit per-layer `(w_bits, p_bits)` resolutions and
-    /// reset state.
+    /// Requantize at explicit per-layer `(w_bits, p_bits)` resolutions.
+    ///
+    /// Contract for live sessions: the backend preserves its persistent
+    /// membrane state across the switch by realigning it into the new
+    /// accumulator range ([`StateSnapshot::rescaled`]) — a serve-time
+    /// precision change must not silently reset a session mid-stream.
+    /// [`super::native::NativeScnn`] implements this exactly. The PJRT
+    /// runner diverges (the AOT artifact is requantized host-side and the
+    /// device state reset); that is safe in the serve tier because every
+    /// window restores a rescaled checkpoint immediately after
+    /// reconfiguration, but direct mid-inference switches on PJRT lose
+    /// state.
     fn set_resolutions(&mut self, res: &[(u32, u32)]);
 
     /// Copy out the persistent membrane state (a session checkpoint).

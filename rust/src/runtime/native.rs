@@ -277,12 +277,22 @@ impl StepBackend for NativeScnn {
     }
 
     fn set_resolutions(&mut self, res: &[(u32, u32)]) {
+        let old: Vec<(u32, u32)> =
+            self.net.layers.iter().map(|l| (l.res.w_bits, l.res.p_bits)).collect();
+        let state = self.snapshot();
         let resolutions: Vec<Resolution> =
             res.iter().map(|&(w, p)| Resolution::new(w, p)).collect();
         self.net = self.net.with_resolutions(&resolutions);
         // Resolution changes do not move the conv geometry, so every
         // adjacency comes straight out of the cache.
         self.layers = Self::build_layers(&self.net, self.seed, self.sparse, &self.adj_cache);
+        // A live session's membrane state survives the switch: realign it
+        // into the new accumulator range instead of silently resetting
+        // (the StepBackend contract — see StateSnapshot::rescaled).
+        let rescaled = state.rescaled(&old, res);
+        for (layer, v) in self.layers.iter_mut().zip(&rescaled.vmems) {
+            layer.set_vmem(v);
+        }
     }
 
     fn snapshot(&self) -> StateSnapshot {
@@ -423,6 +433,44 @@ mod tests {
         for f in &frames {
             assert_eq!(a.step(f).unwrap().counts, b.step(f).unwrap().counts);
         }
+    }
+
+    #[test]
+    fn set_resolutions_preserves_vmem_by_rescale() {
+        // A live session's membrane state survives a precision switch:
+        // after set_resolutions the backend holds exactly the old snapshot
+        // realigned into the new p_bits range, and continues bit-identically
+        // to a fresh backend built at the target resolution restoring that
+        // rescaled checkpoint (the broad random sweep lives in
+        // rust/tests/property_sparse.rs).
+        let net = tiny_net();
+        let base: Vec<(u32, u32)> =
+            net.layers.iter().map(|l| (l.res.w_bits, l.res.p_bits)).collect();
+        let target = vec![(3u32, 7u32), (3, 7), (4, 12)];
+        let frames = frames_for(&net, 13);
+        let mut live = NativeScnn::new(net.clone(), 21);
+        for f in &frames[..2] {
+            live.step(f).unwrap();
+        }
+        let checkpoint = live.snapshot();
+        assert!(checkpoint.vmems.iter().any(|v| v.iter().any(|&x| x != 0)));
+        live.set_resolutions(&target);
+        let rescaled = checkpoint.rescaled(&base, &target);
+        assert_eq!(live.snapshot(), rescaled, "vmem realigned, not reset");
+        let tnet = net.with_resolutions(&[
+            Resolution::new(3, 7),
+            Resolution::new(3, 7),
+            Resolution::new(4, 12),
+        ]);
+        let mut fresh = NativeScnn::new(tnet, 21);
+        fresh.restore(&rescaled).unwrap();
+        for (t, f) in frames[2..].iter().enumerate() {
+            let a = live.step(f).unwrap();
+            let b = fresh.step(f).unwrap();
+            assert_eq!(a.out_spikes, b.out_spikes, "t={t} spikes");
+            assert_eq!(a.counts, b.counts, "t={t} counts");
+        }
+        assert_eq!(live.snapshot(), fresh.snapshot(), "final vmem");
     }
 
     #[test]

@@ -27,6 +27,13 @@
 //!   multiplexing sessions over [`crate::runtime::StepBackend`]s, an
 //!   SLO-driven autoscaler that grows/shrinks the active pool, and
 //!   p50/p95/p99 window-latency + sessions/sec instrumentation.
+//! * [`precision`] — per-session serve-time precision control: a pure
+//!   policy ([`PrecisionConfig::decide`]) that drops weight/vmem
+//!   resolution one fig6-grid tier under load (the autoscaler's p99 and
+//!   queue-depth signals) and raises it when a session's smoothed
+//!   classification margin is low, applied by rescaling the session
+//!   checkpoint and reconfiguring worker backends via
+//!   `set_resolutions` + the shared `AdjacencyCache`.
 //! * [`load`] — an open-loop saturation harness: Poisson/bursty arrival
 //!   processes drive sessions against the wall clock regardless of
 //!   service backpressure, exposing the linear → knee → shedding
@@ -49,11 +56,13 @@
 
 pub mod ingest;
 pub mod load;
+pub mod precision;
 pub mod session;
 pub mod service;
 
 pub use ingest::{IngestConfig, MicroWindow, ReorderBuffer};
 pub use load::{drive_open_loop, ArrivalProcess, LoadConfig, LoadReport};
+pub use precision::{tiers_for, PrecisionConfig};
 pub use service::{
     gesture_traffic, AutoscaleConfig, ServeReport, ServiceConfig, SessionResult, SessionTraffic,
     StreamingService,

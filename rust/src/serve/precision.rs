@@ -1,0 +1,224 @@
+//! Per-session serve-time precision control.
+//!
+//! FlexSpIM's headline circuit feature is bitwise-granular operand
+//! resolution — the paper's "up to 90% energy saving" comes from running
+//! layers at fewer weight/vmem bits. The fig6 sweeps exercise that
+//! statically; this module turns it into a closed-loop serve policy:
+//!
+//! * **drop** a session's resolution one tier when the service is loaded
+//!   (rolling p99 over the SLO, or queue depth past the high-water mark —
+//!   the same signals the autoscaler reads), shedding energy instead of
+//!   requests;
+//! * **raise** it one tier when the session's smoothed classification
+//!   margin is low (the early-exit confidence machinery read in reverse:
+//!   an uncertain session gets its precision back even under load);
+//! * **relax** one tier back toward full precision when the service is
+//!   calm.
+//!
+//! Tiers are uniform down-scalings of the deployed net's per-layer
+//! `(w_bits, p_bits)` — the same grid as the fig6 resolution sweep
+//! ([`crate::figures::fig6::scaling_configs_for`]): tier δ subtracts δ
+//! bits from every layer, floored at 2 weight / 4 membrane bits. Tier 0
+//! is the deployed (full) resolution.
+//!
+//! The controller is a pure function ([`PrecisionConfig::decide`]) in the
+//! style of the autoscaler's `AutoscaleConfig::decide`, called at each
+//! window commit; the service applies a verdict by rescaling the
+//! session's checkpoint ([`StateSnapshot::rescaled`]) and letting the
+//! next dispatch reconfigure its worker's backend via `set_resolutions`
+//! (cheap: conv adjacencies come out of the shared `AdjacencyCache`).
+//!
+//! [`StateSnapshot::rescaled`]: crate::runtime::StateSnapshot::rescaled
+
+use crate::snn::Network;
+
+/// Hard cap on `max_delta`: tier tables never exceed 8 entries, so the
+/// per-tier telemetry labels stay a fixed static set.
+pub const MAX_DELTA_LIMIT: u32 = 7;
+
+/// Static per-tier label values for telemetry (`resolution_tier` label).
+pub const TIER_LABELS: [&str; MAX_DELTA_LIMIT as usize + 1] =
+    ["0", "1", "2", "3", "4", "5", "6", "7"];
+
+/// Precision-controller policy knobs. `decide` is pure — the service owns
+/// the clock and the signals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionConfig {
+    /// Master switch; disabled costs one branch per window commit.
+    pub enabled: bool,
+    /// Deepest tier: every layer may lose up to this many bits
+    /// (clamped to the fig6 floor of 2 weight / 4 membrane bits).
+    pub max_delta: u32,
+    /// Rolling-p99 window latency above which a tier is dropped (seconds).
+    pub drop_p99_s: f64,
+    /// Queued windows per active worker considered overloaded.
+    pub queue_high: usize,
+    /// Smoothed classification margin below which precision is raised.
+    pub raise_margin: f64,
+    /// Windows a session must have executed before margin-driven raises
+    /// may trigger (the margin estimate needs samples first).
+    pub min_windows: u64,
+}
+
+impl PrecisionConfig {
+    /// Adaptation off; knobs at their nominal values.
+    pub fn disabled() -> PrecisionConfig {
+        PrecisionConfig {
+            enabled: false,
+            max_delta: 3,
+            drop_p99_s: 0.020,
+            queue_high: 8,
+            raise_margin: 0.5,
+            min_windows: 2,
+        }
+    }
+
+    /// One pure control decision for one session: current `tier` plus the
+    /// service signals (rolling p99 seconds, queued windows, active
+    /// workers) and the session signals (smoothed margin, windows done)
+    /// in, target tier out.
+    ///
+    /// Priority order:
+    /// 1. an uncertain session (margin below `raise_margin` after
+    ///    `min_windows` windows) is raised one tier — uncertainty beats
+    ///    load;
+    /// 2. a loaded service (p99 over `drop_p99_s` or queue past
+    ///    `queue_high` per worker) drops one tier, capped at `max_delta`;
+    /// 3. a calm service (p99 under half the drop threshold — or no
+    ///    samples yet — and queue under half the high-water mark) relaxes
+    ///    one tier back toward full precision;
+    /// 4. otherwise hold.
+    ///
+    /// A NaN p99 (empty latency window) never reads as load.
+    pub fn decide(
+        &self,
+        tier: usize,
+        p99_s: f64,
+        queued: usize,
+        workers: usize,
+        margin: f64,
+        windows_done: u64,
+    ) -> usize {
+        let max_tier = self.max_delta.min(MAX_DELTA_LIMIT) as usize;
+        let tier = tier.min(max_tier);
+        let w = workers.max(1);
+        if tier > 0 && windows_done >= self.min_windows && margin < self.raise_margin {
+            return tier - 1;
+        }
+        let loaded = p99_s > self.drop_p99_s || queued > self.queue_high * w;
+        if loaded {
+            return (tier + 1).min(max_tier);
+        }
+        // `!(p99 >= …)` so an empty window (NaN) reads as calm.
+        let calm = !(p99_s >= 0.5 * self.drop_p99_s) && queued * 2 <= self.queue_high * w;
+        if calm && tier > 0 {
+            return tier - 1;
+        }
+        tier
+    }
+}
+
+/// The tier table for `net`: entry δ holds the per-layer `(w_bits,
+/// p_bits)` with every layer uniformly down-scaled by δ bits, floored at
+/// 2 weight / 4 membrane bits — the fig6 sweep grid. Entry 0 is the
+/// deployed resolution unchanged.
+pub fn tiers_for(net: &Network, max_delta: u32) -> Vec<Vec<(u32, u32)>> {
+    let base: Vec<(u32, u32)> =
+        net.layers.iter().map(|l| (l.res.w_bits, l.res.p_bits)).collect();
+    (0..=max_delta.min(MAX_DELTA_LIMIT) as i64)
+        .map(|delta| {
+            base.iter()
+                .map(|&(w, p)| {
+                    ((w as i64 - delta).max(2) as u32, (p as i64 - delta).max(4) as u32)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{LayerSpec, Resolution};
+
+    fn cfg() -> PrecisionConfig {
+        PrecisionConfig {
+            enabled: true,
+            max_delta: 3,
+            drop_p99_s: 0.020,
+            queue_high: 8,
+            raise_margin: 0.5,
+            min_windows: 2,
+        }
+    }
+
+    #[test]
+    fn load_drops_and_saturates_at_max_delta() {
+        let c = cfg();
+        // p99 over the threshold drops one tier per decision…
+        assert_eq!(c.decide(0, 0.050, 0, 4, 9.0, 10), 1);
+        assert_eq!(c.decide(1, 0.050, 0, 4, 9.0, 10), 2);
+        // …and saturates at max_delta.
+        assert_eq!(c.decide(3, 0.050, 0, 4, 9.0, 10), 3);
+        // Queue depth past high-water per worker is the same signal.
+        assert_eq!(c.decide(0, 0.001, 8 * 4 + 1, 4, 9.0, 10), 1);
+    }
+
+    #[test]
+    fn calm_relaxes_toward_full_precision_with_hysteresis_band() {
+        let c = cfg();
+        // Calm (p99 < half the drop threshold) relaxes one tier…
+        assert_eq!(c.decide(2, 0.005, 0, 4, 9.0, 10), 1);
+        // …an empty latency window (NaN) reads as calm, never as load…
+        assert_eq!(c.decide(2, f64::NAN, 0, 4, 9.0, 10), 1);
+        assert_eq!(c.decide(0, f64::NAN, 0, 4, 9.0, 10), 0);
+        // …and the band between half and full threshold holds.
+        assert_eq!(c.decide(2, 0.015, 0, 4, 9.0, 10), 2);
+    }
+
+    #[test]
+    fn low_margin_raises_even_under_load() {
+        let c = cfg();
+        // Uncertainty beats load: margin under raise_margin raises a tier
+        // although the p99 screams overload.
+        assert_eq!(c.decide(3, 0.100, 100, 1, 0.1, 10), 2);
+        // But not before min_windows margin samples exist…
+        assert_eq!(c.decide(3, 0.100, 100, 1, 0.1, 1), 3);
+        // …and never above full precision.
+        assert_eq!(c.decide(0, 0.001, 0, 4, 0.1, 10), 0);
+    }
+
+    #[test]
+    fn tier_table_matches_the_fig6_grid() {
+        let net = crate::snn::Network::new(
+            "t",
+            vec![
+                LayerSpec::conv("C1", 2, 4, 3, 4, 1, 48, 48, Resolution::new(4, 9)),
+                LayerSpec::fc("F1", 4 * 12 * 12, 10, Resolution::new(5, 10)),
+            ],
+            4,
+        );
+        let tiers = tiers_for(&net, 3);
+        assert_eq!(tiers.len(), 4);
+        assert_eq!(tiers[0], vec![(4, 9), (5, 10)], "tier 0 is the deployed resolution");
+        assert_eq!(tiers[1], vec![(3, 8), (4, 9)]);
+        assert_eq!(tiers[3], vec![(2, 6), (2, 7)], "w_bits floored at 2");
+        // Same grid as the fig6 sweep.
+        let fig6 = crate::figures::fig6::scaling_configs_for(&net);
+        for (t, (_, cfg)) in tiers.iter().zip(&fig6) {
+            assert_eq!(t, cfg);
+        }
+    }
+
+    #[test]
+    fn max_delta_is_capped_for_static_tier_labels() {
+        let net = crate::snn::Network::new(
+            "t",
+            vec![LayerSpec::fc("F1", 16, 10, Resolution::new(8, 12))],
+            4,
+        );
+        assert_eq!(tiers_for(&net, 99).len(), TIER_LABELS.len());
+        let c = PrecisionConfig { max_delta: 99, ..cfg() };
+        assert_eq!(c.decide(50, 0.050, 0, 1, 9.0, 10), MAX_DELTA_LIMIT as usize);
+    }
+}

@@ -60,6 +60,7 @@ use crate::util::rng::Rng;
 use crate::Result;
 
 use super::ingest::MicroWindow;
+use super::precision::{tiers_for, PrecisionConfig, TIER_LABELS};
 use super::session::{
     encode_window_into, window_frames, EncodeScratch, QueuedWindow, SessionConfig,
     SessionManager, WindowOutcome,
@@ -182,6 +183,9 @@ pub struct ServiceConfig {
     pub early_exit_min_windows: u64,
     /// SLO-driven worker-pool autoscaler (disabled by default).
     pub autoscale: AutoscaleConfig,
+    /// Per-session serve-time precision controller (disabled by default;
+    /// see [`crate::serve::precision`]).
+    pub precision: PrecisionConfig,
     /// Service telemetry: metrics registry updates and flight-recorder
     /// events (disabled by default; see [`crate::telemetry`]).
     pub telemetry: TelemetryConfig,
@@ -203,6 +207,7 @@ impl ServiceConfig {
             early_exit_margin: 0.0,
             early_exit_min_windows: 2,
             autoscale: AutoscaleConfig::disabled(),
+            precision: PrecisionConfig::disabled(),
             telemetry: TelemetryConfig::disabled(),
             session: SessionConfig::default_48(),
         }
@@ -284,6 +289,10 @@ struct ServiceState {
     scale_downs: u64,
     /// Recent window latencies feeding the autoscaler's rolling p99.
     recent_latency: LatencyWindow,
+    /// Precision-controller tier moves applied (drops + raises).
+    precision_shifts: u64,
+    /// Windows committed per resolution tier (index = tier).
+    tier_windows: Vec<u64>,
     shutdown: bool,
     first_error: Option<anyhow::Error>,
 }
@@ -294,6 +303,11 @@ struct Job {
     window: MicroWindow,
     enqueued_at: Instant,
     state: StateSnapshot,
+    /// The session's resolution tier at dispatch — the worker reconfigures
+    /// its backend to this tier before running (consistent with `state`:
+    /// both are read under the same lock, and at most one window per
+    /// session is in flight).
+    tier: usize,
 }
 
 /// Cached handles into the service's [`Registry`]: resolved once at
@@ -306,10 +320,14 @@ struct ServiceMetrics {
     queue_wait: Histogram,
     window_latency: Histogram,
     target_workers: Gauge,
+    /// Precision-controller tier moves.
+    precision_shifts: Counter,
+    /// Windows committed per resolution tier (`resolution_tier` label).
+    tier_windows: Vec<Counter>,
 }
 
 impl ServiceMetrics {
-    fn register(registry: &Registry) -> ServiceMetrics {
+    fn register(registry: &Registry, tiers: usize) -> ServiceMetrics {
         let labels = &[("tier", "serve")];
         ServiceMetrics {
             admitted: registry.counter("flexspim_serve_admitted_total", labels),
@@ -318,6 +336,17 @@ impl ServiceMetrics {
             queue_wait: registry.histogram("flexspim_serve_queue_wait_seconds", labels),
             window_latency: registry.histogram("flexspim_serve_window_latency_seconds", labels),
             target_workers: registry.gauge("flexspim_serve_target_workers", labels),
+            precision_shifts: registry
+                .counter("flexspim_serve_precision_shifts_total", labels),
+            tier_windows: TIER_LABELS[..tiers]
+                .iter()
+                .map(|&t| {
+                    registry.counter(
+                        "flexspim_serve_tier_windows_total",
+                        &[("tier", "serve"), ("resolution_tier", t)],
+                    )
+                })
+                .collect(),
         }
     }
 }
@@ -327,6 +356,10 @@ pub struct StreamingService {
     plan: Arc<SamplePlan>,
     factory: Arc<BackendFactory>,
     cfg: ServiceConfig,
+    /// Resolution tier table for the precision controller: entry δ holds
+    /// the per-layer `(w_bits, p_bits)` at down-scaling δ; entry 0 is the
+    /// plan's deployed resolution (see [`tiers_for`]).
+    tiers: Vec<Vec<(u32, u32)>>,
     state: Mutex<ServiceState>,
     signal: Condvar,
     registry: Arc<Registry>,
@@ -353,14 +386,17 @@ impl StreamingService {
         } else {
             cfg.workers.max(1)
         };
+        let tiers = tiers_for(&plan.net, cfg.precision.max_delta);
         let registry = Arc::new(Registry::default());
-        let tel = ServiceMetrics::register(&registry);
+        let tel = ServiceMetrics::register(&registry, tiers.len());
         tel.target_workers.set(start_workers as i64);
         let recorder = Arc::new(FlightRecorder::new(cfg.telemetry.flight_capacity));
+        let tier_windows = vec![0u64; tiers.len()];
         StreamingService {
             plan,
             factory,
             cfg,
+            tiers,
             registry,
             tel,
             recorder,
@@ -377,6 +413,8 @@ impl StreamingService {
                 scale_ups: 0,
                 scale_downs: 0,
                 recent_latency: LatencyWindow::new(ROLLING_WINDOW),
+                precision_shifts: 0,
+                tier_windows,
                 shutdown: false,
                 first_error: None,
             }),
@@ -576,6 +614,10 @@ impl StreamingService {
     fn worker_loop(&self, idx: usize) {
         let make: &BackendFactory = self.factory.as_ref();
         let mut backend: Option<Box<dyn StepBackend>> = None;
+        // Which resolution tier this worker's backend currently holds
+        // (freshly constructed backends come out at tier 0, the plan's
+        // deployed resolution).
+        let mut backend_tier = 0usize;
         let mut bufs = SampleBuffers::default();
         // Per-worker encoder scratch: windows re-encode into these
         // buffers instead of allocating fresh frames every micro-window.
@@ -620,14 +662,14 @@ impl StreamingService {
                     };
                     if let Some(id) = picked {
                         let st_ref = &mut *st;
-                        let (window, enqueued_at, seq, state) = {
+                        let (window, enqueued_at, seq, state, tier) = {
                             let s = st_ref
                                 .sessions
                                 .get_mut(id)
                                 .expect("ready session exists");
                             let qw = s.queue.pop_front().expect("ready implies queued");
                             s.running = true;
-                            (qw.window, qw.enqueued_at, qw.seq, s.state.clone())
+                            (qw.window, qw.enqueued_at, qw.seq, s.state.clone(), s.tier)
                         };
                         st_ref.outstanding.remove(&seq);
                         st_ref.queued_windows -= 1;
@@ -644,7 +686,7 @@ impl StreamingService {
                                 spill_bits: charge.spill_bits,
                             });
                         }
-                        break Job { id, window, enqueued_at, state };
+                        break Job { id, window, enqueued_at, state, tier };
                     }
                     st = self.signal.wait(st).unwrap();
                 }
@@ -660,7 +702,10 @@ impl StreamingService {
 
             if backend.is_none() {
                 match make() {
-                    Ok(b) => backend = Some(b),
+                    Ok(b) => {
+                        backend = Some(b);
+                        backend_tier = 0;
+                    }
                     Err(e) => {
                         if self.cfg.telemetry.enabled {
                             self.recorder
@@ -686,12 +731,21 @@ impl StreamingService {
                 }
             }
             let t0 = Instant::now();
-            let outcome = self.run_window(
-                backend.as_mut().expect("constructed above").as_mut(),
-                &mut bufs,
-                &mut encode_scratch,
-                &job,
-            );
+            let outcome = {
+                let b = backend.as_mut().expect("constructed above").as_mut();
+                if job.tier != backend_tier {
+                    // Reconfigure this worker's backend to the session's
+                    // tier. Cheap: conv adjacencies come out of the shared
+                    // AdjacencyCache, and run_window restores the session's
+                    // (already rescaled) checkpoint right after — so the
+                    // PJRT runner's reset-on-reconfigure divergence is
+                    // harmless here.
+                    let _s = trace::span("serve.set_resolutions");
+                    b.set_resolutions(&self.tiers[job.tier]);
+                    backend_tier = job.tier;
+                }
+                self.run_window(b, &mut bufs, &mut encode_scratch, &job)
+            };
             let wall_s = t0.elapsed().as_secs_f64();
 
             match outcome {
@@ -700,11 +754,20 @@ impl StreamingService {
                     let st_ref = &mut *st;
                     let latency_s = job.enqueued_at.elapsed().as_secs_f64();
                     st_ref.recent_latency.push(latency_s);
+                    st_ref.tier_windows[job.tier] += 1;
                     if self.cfg.telemetry.enabled {
                         self.tel.windows_done.inc();
                         self.tel.window_latency.observe(latency_s);
+                        self.tel.tier_windows[job.tier].inc();
                     }
+                    // Precision-controller load inputs, read before the
+                    // session borrow — the same rolling-p99/queue-depth
+                    // signals the autoscaler consumes.
+                    let p99_s = st_ref.recent_latency.pct(99.0);
+                    let queued = st_ref.queued_windows;
+                    let active = st_ref.target_workers;
                     let mut dropped_seqs = Vec::new();
+                    let mut tier_shift = None;
                     let requeue = {
                         let s = st_ref
                             .sessions
@@ -752,8 +815,46 @@ impl StreamingService {
                                 }
                             }
                         }
+                        // Precision controller: one pure decision per
+                        // committed window. A tier move realigns the
+                        // session's membrane checkpoint into the new
+                        // accumulator range here; the next dispatch carries
+                        // the tier to a worker, which reconfigures its
+                        // backend before running.
+                        if self.cfg.precision.enabled && !s.finished && !s.early_exited {
+                            let margin = s.smoothed_margin();
+                            let next = self.cfg.precision.decide(
+                                s.tier,
+                                p99_s,
+                                queued,
+                                active,
+                                margin,
+                                s.windows_done,
+                            );
+                            if next != s.tier {
+                                s.state = s
+                                    .state
+                                    .rescaled(&self.tiers[s.tier], &self.tiers[next]);
+                                tier_shift = Some((s.tier, next, margin));
+                                s.tier = next;
+                            }
+                        }
                         !s.queue.is_empty()
                     };
+                    if let Some((from, to, margin)) = tier_shift {
+                        st_ref.precision_shifts += 1;
+                        if self.cfg.telemetry.enabled {
+                            self.tel.precision_shifts.inc();
+                            self.recorder.record(FlightEvent::PrecisionDecision {
+                                session: job.id,
+                                from,
+                                to,
+                                p99_ms: p99_s * 1e3,
+                                queued,
+                                margin,
+                            });
+                        }
+                    }
                     for seq in &dropped_seqs {
                         st_ref.outstanding.remove(seq);
                     }
@@ -996,6 +1097,7 @@ impl StreamingService {
             early_exited: s.early_exited,
             windows_saved: s.windows_saved,
             frames_saved: s.frames_saved,
+            tier: s.tier,
             finished: s.finished,
             metrics: s.metrics(),
         })
@@ -1060,6 +1162,8 @@ impl StreamingService {
             frames_saved,
             evictions: st.sessions.evictions,
             state_dram_bits: dram_bits,
+            precision_shifts: st.precision_shifts,
+            tier_windows: st.tier_windows.clone(),
             latency,
             metrics,
             wallclock_s,
@@ -1092,6 +1196,8 @@ pub struct SessionResult {
     pub windows_saved: u64,
     /// Spike frames those skipped windows would have executed.
     pub frames_saved: u64,
+    /// Resolution tier the session ended at (0 = deployed precision).
+    pub tier: usize,
     /// The final window has executed (or was shed/skipped after close).
     pub finished: bool,
     /// This session's model metrics.
@@ -1139,6 +1245,11 @@ pub struct ServeReport {
     pub evictions: u64,
     /// Session-state DRAM traffic (spill + refill), bits.
     pub state_dram_bits: u64,
+    /// Precision-controller tier moves applied (drops + raises).
+    pub precision_shifts: u64,
+    /// Windows executed per resolution tier (index = tier, 0 = deployed
+    /// precision; all windows land in tier 0 when the controller is off).
+    pub tier_windows: Vec<u64>,
     /// Per-window admission→completion latency.
     pub latency: LatencyStats,
     /// Merged model metrics (per-session, id order, plus spill pricing).
@@ -1199,6 +1310,19 @@ impl ServeReport {
             out.push_str(&format!(
                 "autoscaler         {} -> peak {} workers ({} ups, {} downs)\n",
                 self.workers, self.workers_peak, self.scale_ups, self.scale_downs,
+            ));
+        }
+        if self.precision_shifts > 0 {
+            let tiers: Vec<String> = self
+                .tier_windows
+                .iter()
+                .enumerate()
+                .map(|(t, &w)| format!("t{t}:{w}"))
+                .collect();
+            out.push_str(&format!(
+                "precision          {} tier shifts, windows per tier [{}]\n",
+                self.precision_shifts,
+                tiers.join(" "),
             ));
         }
         out.push_str(&format!("window latency     {}\n", self.latency.line()));
@@ -1575,6 +1699,115 @@ mod tests {
             "pool scaling must never change what is computed"
         );
         assert_eq!(report.metrics.correct, fixed.metrics.correct);
+    }
+
+    #[test]
+    fn precision_disabled_keeps_every_window_at_tier_zero() {
+        let traffic = gesture_traffic(3, 17, 0);
+        let svc = service(2, |_| {});
+        let report = svc.serve(&traffic, 32).unwrap();
+        assert_eq!(report.precision_shifts, 0);
+        assert_eq!(report.tier_windows[0], report.windows_done);
+        assert!(report.tier_windows[1..].iter().all(|&w| w == 0));
+        for id in 0..3 {
+            assert_eq!(svc.session_result(id).unwrap().tier, 0);
+        }
+    }
+
+    #[test]
+    fn precision_drops_under_load_sheds_energy_and_records_decisions() {
+        let traffic = gesture_traffic(8, 23, 0);
+        let fixed = service(1, |_| {}).serve(&traffic, 32).unwrap();
+        assert_eq!(fixed.precision_shifts, 0);
+
+        let svc = service(1, |c| {
+            c.precision = PrecisionConfig {
+                enabled: true,
+                // Unreachable latency bound: every committed window reads
+                // as load, so sessions sink toward max_delta tier by tier.
+                drop_p99_s: 1e-9,
+                raise_margin: 0.0,
+                ..PrecisionConfig::disabled()
+            };
+            c.telemetry = TelemetryConfig { enabled: true, flight_capacity: 4096 };
+        });
+        let report = svc.serve(&traffic, 32).unwrap();
+        assert_eq!(report.finished_sessions, 8);
+        assert!(report.precision_shifts > 0, "sustained load must drop tiers");
+        assert!(
+            report.tier_windows[1..].iter().sum::<u64>() > 0,
+            "windows must execute below full precision"
+        );
+        assert_eq!(report.tier_windows.iter().sum::<u64>(), report.windows_done);
+        assert!(
+            report.metrics.energy.compute_pj < fixed.metrics.energy.compute_pj,
+            "narrower operands must price cheaper SOPs: {} !< {}",
+            report.metrics.energy.compute_pj,
+            fixed.metrics.energy.compute_pj
+        );
+        // Sessions end below tier 0 (nothing ever reads calm here).
+        assert!((0..8).any(|id| svc.session_result(id).unwrap().tier > 0));
+
+        // Controller decisions reach the flight recorder and the registry.
+        let decisions = svc.recorder().events_of_kind("precision-decision");
+        assert_eq!(decisions.len() as u64, report.precision_shifts);
+        assert!(decisions.iter().any(|r| matches!(
+            r.event,
+            FlightEvent::PrecisionDecision { from, to, .. } if to == from + 1
+        )));
+        let snap = svc.metrics().snapshot();
+        assert_eq!(
+            snap.counter_total("flexspim_serve_precision_shifts_total"),
+            report.precision_shifts
+        );
+        assert_eq!(
+            snap.counter_total("flexspim_serve_tier_windows_total"),
+            report.windows_done,
+            "per-tier counters must partition the committed windows"
+        );
+    }
+
+    #[test]
+    fn precision_raises_back_toward_full_precision_when_calm() {
+        // Calm service, sessions pre-sunk to tier 2: with no load and no
+        // margin pressure the controller relaxes one tier per commit, and
+        // the realigned checkpoints keep serving without error.
+        let traffic = gesture_traffic(2, 41, 0);
+        let svc = service(1, |c| {
+            c.precision = PrecisionConfig {
+                enabled: true,
+                drop_p99_s: 1e9, // nothing ever reads as load
+                raise_margin: 0.0,
+                ..PrecisionConfig::disabled()
+            };
+        });
+        for t in &traffic {
+            svc.open_session(t.id, t.label).unwrap();
+        }
+        {
+            let mut st = svc.state.lock().unwrap();
+            for t in &traffic {
+                st.sessions.get_mut(t.id).unwrap().tier = 2;
+            }
+        }
+        svc.run_with(|s| {
+            for t in &traffic {
+                s.ingest(t.id, &t.events)?;
+                s.close_session(t.id, t.end_us)?;
+            }
+            s.drain()
+        })
+        .unwrap();
+        let report = svc.report(1.0);
+        assert_eq!(report.finished_sessions, 2);
+        assert!(report.precision_shifts > 0, "calm must relax tiers");
+        assert!(report.tier_windows[2] > 0, "first windows ran at tier 2");
+        for t in &traffic {
+            assert!(
+                svc.session_result(t.id).unwrap().tier < 2,
+                "calm sessions relax back toward full precision"
+            );
+        }
     }
 
     #[test]

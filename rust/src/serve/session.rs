@@ -240,6 +240,11 @@ pub struct Session {
     pub windows_saved: u64,
     /// Spike frames those skipped windows would have executed.
     pub frames_saved: u64,
+    /// Resolution tier the precision controller currently holds this
+    /// session at: 0 is the deployed (full) resolution, tier δ runs every
+    /// layer δ bits narrower (see [`crate::serve::precision`]). The
+    /// session's `state` checkpoint is always aligned to this tier.
+    pub tier: usize,
     /// Last ingest/commit activity — the idle reaper's clock.
     pub last_activity: Instant,
 }
@@ -268,6 +273,7 @@ impl Session {
             early_exited: false,
             windows_saved: 0,
             frames_saved: 0,
+            tier: 0,
             last_activity: Instant::now(),
         }
     }

@@ -763,6 +763,100 @@ impl EventConvLayer {
 
 // --------------------------------------------------------- event FC layer
 
+// ------------------------------------------------------ fc kernel cutover
+
+/// Cost-model estimate of the FC packed-kernel cutover: per output the
+/// scalar kernel costs one add per input spike and the bit-plane kernel
+/// a fixed `w_bits × words_in` word ops, so they break even where the
+/// spike count meets that product. This is the hermetic default when no
+/// measured trajectory is available.
+pub fn fc_cutover_estimate(w_bits: u32, words_in: usize) -> usize {
+    w_bits as usize * words_in
+}
+
+/// Parse `(activity, scalar_us, packed_us)` records for the
+/// `packed_step_fc` bench out of BENCH_JSON trajectory text (the
+/// append-only `BENCH_perf_hotpath.json` format: schema/run meta lines
+/// and records for other benches are skipped; malformed lines are
+/// ignored rather than fatal — a half-written trajectory must never
+/// break layer construction).
+pub fn parse_packed_fc_records(text: &str) -> Vec<(f64, f64, f64)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim().trim_start_matches("BENCH_JSON ");
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(v) = crate::util::json_lite::parse(line) else {
+            continue;
+        };
+        if v.get("meta").is_some() || v.get("bench").and_then(|b| b.as_str()) != Some("packed_step_fc")
+        {
+            continue;
+        }
+        let field = |k: &str| v.get(k).and_then(|x| x.as_num());
+        if let (Some(a), Some(s), Some(p)) =
+            (field("activity"), field("scalar_us"), field("packed_us"))
+        {
+            if a.is_finite() && s.is_finite() && p.is_finite() && a > 0.0 {
+                out.push((a, s, p));
+            }
+        }
+    }
+    out.sort_by(|a, b| a.0.total_cmp(&b.0));
+    out
+}
+
+/// Choose the packed cutover for a layer with `in_dim` inputs from the
+/// cost-model `estimate` and measured `(activity, scalar_us, packed_us)`
+/// records (sorted by activity). Measurements are carried as activity
+/// *fractions*, so a trajectory captured at one FC geometry transfers to
+/// any layer width. Selection:
+///
+/// * no records — the estimate stands;
+/// * packed already wins at the lowest measured activity — cut over at
+///   that activity's spike count (never extrapolate below measurement);
+/// * the advantage crosses zero between two neighbors — cut over at the
+///   linear interpolation of the crossing;
+/// * scalar wins everywhere measured — push the cutover past the last
+///   measured point (and never below the estimate).
+pub fn fc_cutover_select(estimate: usize, records: &[(f64, f64, f64)], in_dim: usize) -> usize {
+    let spikes = |activity: f64| ((activity * in_dim as f64).ceil() as usize).max(1);
+    let adv = |r: &(f64, f64, f64)| r.1 - r.2; // scalar_us - packed_us; > 0 = packed wins
+    let Some(first) = records.first() else {
+        return estimate;
+    };
+    if adv(first) > 0.0 {
+        return spikes(first.0);
+    }
+    for pair in records.windows(2) {
+        let (lose, win) = (&pair[0], &pair[1]);
+        if adv(lose) <= 0.0 && adv(win) > 0.0 {
+            let (a0, a1) = (adv(lose), adv(win));
+            let cross = lose.0 + (win.0 - lose.0) * (-a0) / (a1 - a0);
+            return spikes(cross);
+        }
+    }
+    let last = records.last().expect("non-empty");
+    estimate.max(spikes(last.0) + 1)
+}
+
+/// The process-wide measured trajectory, loaded once from the file named
+/// by `FLEXSPIM_FC_CUTOVER_TRAJECTORY` (typically the repo's
+/// `BENCH_perf_hotpath.json`). Unset, unreadable, or record-free files
+/// all yield the empty trajectory — the cost-model estimate stays the
+/// default, so builds are hermetic unless a trajectory is supplied
+/// explicitly.
+fn fc_cutover_records() -> &'static [(f64, f64, f64)] {
+    static RECORDS: std::sync::OnceLock<Vec<(f64, f64, f64)>> = std::sync::OnceLock::new();
+    RECORDS.get_or_init(|| {
+        std::env::var_os("FLEXSPIM_FC_CUTOVER_TRAJECTORY")
+            .and_then(|p| std::fs::read_to_string(p).ok())
+            .map(|t| parse_packed_fc_records(&t))
+            .unwrap_or_default()
+    })
+}
+
 /// Event-driven fully-connected layer of IF neurons: bit-identical to
 /// [`crate::snn::lif::LifLayer`]. An FC layer's fan-out is structurally
 /// dense, so any active input touches every neuron; the sparsity win is
@@ -852,10 +946,13 @@ impl EventFcLayer {
             pending_next: Vec::new(),
             acc: vec![0i64; out_dim],
             in_words: Vec::new(),
-            // Per output, the scalar kernel costs `count` adds and the
-            // packed kernel `w_bits × words_in` word ops — break even
-            // where they meet.
-            packed_cutover: wb * words_in,
+            // Measured trajectory when one is supplied, the cost-model
+            // break-even otherwise (see fc_cutover_select).
+            packed_cutover: fc_cutover_select(
+                fc_cutover_estimate(res.w_bits, words_in),
+                fc_cutover_records(),
+                in_dim,
+            ),
         }
     }
 
@@ -989,6 +1086,58 @@ mod tests {
     use super::*;
     use crate::snn::conv::ConvLifLayer;
     use crate::snn::lif::LifLayer;
+
+    #[test]
+    fn fc_cutover_estimate_is_the_default_without_a_trajectory() {
+        // Hermetic builds (no FLEXSPIM_FC_CUTOVER_TRAJECTORY, or a
+        // schema-only trajectory file) keep the cost-model break-even.
+        assert_eq!(fc_cutover_select(20, &[], 1000), 20);
+        let weights: Vec<Vec<i64>> = vec![vec![1i64; 100]; 4];
+        let layer = EventFcLayer::new(weights, Resolution::new(4, 9), 5);
+        assert_eq!(
+            layer.packed_cutover,
+            fc_cutover_estimate(4, 100usize.div_ceil(64)),
+            "estimate path is the live default"
+        );
+    }
+
+    #[test]
+    fn fc_cutover_selects_from_measured_records() {
+        // Packed already wins at the lowest measured activity: cut over
+        // there, never extrapolate below measurement.
+        let packed_wins = [(0.05, 10.0, 5.0), (0.5, 50.0, 6.0)];
+        assert_eq!(fc_cutover_select(3, &packed_wins, 1000), 50);
+        // The advantage crosses zero between neighbors: adv(-4) at 0.1,
+        // adv(+4) at 0.3 interpolates to 0.2.
+        let crossing = [(0.1, 4.0, 8.0), (0.3, 12.0, 8.0)];
+        assert_eq!(fc_cutover_select(3, &crossing, 1000), 200);
+        // Scalar wins everywhere measured: past the last point, and
+        // never below the estimate.
+        let scalar_wins = [(0.1, 2.0, 8.0), (0.5, 6.0, 8.0)];
+        assert_eq!(fc_cutover_select(3, &scalar_wins, 1000), 501);
+        assert_eq!(fc_cutover_select(900, &scalar_wins, 1000), 900);
+        // A spike count never rounds to zero.
+        let tiny = [(0.001, 9.0, 1.0)];
+        assert_eq!(fc_cutover_select(3, &tiny, 10), 1);
+    }
+
+    #[test]
+    fn fc_cutover_parses_the_trajectory_format() {
+        let text = concat!(
+            "{\"meta\":\"schema\",\"bench\":\"packed_step_conv\",\"fields\":[\"activity\"]}\n",
+            "{\"meta\":\"run\",\"bench\":\"packed_step_conv\",\"date\":\"2026-08-07\"}\n",
+            "{\"bench\":\"packed_step_conv\",\"activity\":0.1,\"scalar_us\":3,\"packed_us\":1,\"speedup\":3}\n",
+            "BENCH_JSON {\"bench\":\"packed_step_fc\",\"activity\":0.25,\"scalar_us\":8.0,\"packed_us\":2.0,\"speedup\":4.0}\n",
+            "{\"bench\":\"packed_step_fc\",\"activity\":0.1,\"scalar_us\":4.0,\"packed_us\":2.0,\"speedup\":2.0}\n",
+            "not json at all\n",
+            "{\"bench\":\"packed_step_fc\",\"activity\":0.5,\"scalar_us\":null,\"packed_us\":2.0}\n",
+        );
+        let records = parse_packed_fc_records(text);
+        // Only the two complete packed_step_fc records survive, sorted by
+        // activity; meta lines, other benches, junk, and null fields are
+        // skipped.
+        assert_eq!(records, vec![(0.1, 4.0, 2.0), (0.25, 8.0, 2.0)]);
+    }
 
     #[test]
     fn spike_list_roundtrips_dense() {

@@ -49,6 +49,22 @@ pub enum FlightEvent {
         /// Confidence margin at the exit.
         margin: f64,
     },
+    /// One precision-controller verdict that moved a session's
+    /// resolution tier, with the inputs that drove it.
+    PrecisionDecision {
+        /// Session id.
+        session: u64,
+        /// Resolution tier before (0 = deployed full precision).
+        from: usize,
+        /// Resolution tier after.
+        to: usize,
+        /// Rolling p99 input (milliseconds).
+        p99_ms: f64,
+        /// Queued windows input.
+        queued: usize,
+        /// The session's smoothed classification margin input.
+        margin: f64,
+    },
     /// One autoscaler `decide()` tick: its inputs and verdict.
     AutoscaleDecision {
         /// Workers active at the tick.
@@ -91,6 +107,7 @@ impl FlightEvent {
             FlightEvent::Shed { .. } => "shed",
             FlightEvent::Evict { .. } => "evict",
             FlightEvent::EarlyExit { .. } => "early-exit",
+            FlightEvent::PrecisionDecision { .. } => "precision-decision",
             FlightEvent::AutoscaleDecision { .. } => "autoscale-decision",
             FlightEvent::ScaleUp { .. } => "scale-up",
             FlightEvent::ScaleDown { .. } => "scale-down",

@@ -246,6 +246,42 @@ fn toml_topology_serves_without_recompiling() {
 }
 
 #[test]
+fn pjrt_backend_drives_engine_and_service_end_to_end() {
+    // The carried PJRT deployment path: a spec selecting the pjrt backend
+    // must materialize the batched engine and the streaming service and
+    // run them end-to-end over the compiled artifacts. Gated on the AOT
+    // artifacts being built (`make artifacts`); skips cleanly otherwise.
+    if !flexspim::runtime::artifacts_dir().join("scnn_step.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built (run make artifacts)");
+        return;
+    }
+    let mut spec = presets::spec(presets::SCNN_DVS_GESTURE).expect("known preset");
+    spec.backend = flexspim::deploy::BackendSpec::Pjrt { artifacts: None };
+    spec.serve.workers = 1; // the PJRT runner loads per worker thread
+    let deployment = spec.deploy().expect("pjrt spec deploys");
+
+    let gen = GestureGenerator::default_48();
+    let mut rng = Rng::new(29);
+    let data: Vec<_> = (0..2)
+        .map(|i| (gen.sample(GestureClass::ALL[i % 10], &mut rng), i % 10))
+        .collect();
+    let batch = deployment.engine().expect("engine").run_batch(&data).expect("batch");
+    assert_eq!(batch.results.len(), 2);
+    assert!(batch.metrics.sops > 0);
+
+    let svc = deployment.service().expect("service");
+    let traffic = flexspim::serve::gesture_traffic(2, 31, 0);
+    let report = svc.serve(&traffic, 32).expect("serve run");
+    assert_eq!(report.finished_sessions, 2);
+    assert!(report.windows_done > 0);
+    for id in 0..2u64 {
+        let s = svc.session_result(id).expect("session served");
+        assert!(s.prediction < 10);
+        assert!(s.finished);
+    }
+}
+
+#[test]
 fn one_spec_drives_all_three_tiers_consistently() {
     // Coordinator, engine, and service materialized from one spec agree
     // on what a sample computes.

@@ -257,6 +257,101 @@ fn prop_mid_window_restore_is_bit_identical() {
     );
 }
 
+/// Live precision reconfiguration equivalence: running k frames at the
+/// base resolution, switching a live backend via `set_resolutions`, and
+/// finishing must be bit-identical to a *freshly built* net at the target
+/// resolution (same seed) that restores the rescaled checkpoint — spikes,
+/// counts, and final vmem, across random geometries, random target
+/// resolutions in both directions (grow and shrink, weight and membrane),
+/// and activities up to 100 %. A second checkpoint taken *after* the
+/// switch, mid-window, restores into a third fresh backend and finishes
+/// identically — the serve tier's snapshot/commit cycle across a tier
+/// move.
+#[test]
+fn prop_set_resolutions_matches_fresh_build_at_target() {
+    check(
+        "set-resolutions-vs-fresh-build",
+        &Config { cases: 12, ..Default::default() },
+        |c| {
+            let in_side = c.rng.range_usize(6, 10);
+            let ch = c.rng.range_usize(2, 5);
+            let stride = *c.rng.choose(&[1usize, 2]);
+            let rand_res = |rng: &mut flexspim::util::rng::Rng| {
+                Resolution::new(rng.range_i64(2, 6) as u32, rng.range_i64(6, 12) as u32)
+            };
+            let (b1, b2) = (rand_res(c.rng), rand_res(c.rng));
+            let conv = LayerSpec::conv("C1", 2, ch, 3, stride, 1, in_side, in_side, b1);
+            let (oc, oh, ow) = conv.out_shape();
+            let net = Network::new(
+                "reconf",
+                vec![conv, LayerSpec::fc("F1", oc * oh * ow, 10, b2)],
+                8,
+            );
+            let base: Vec<(u32, u32)> =
+                net.layers.iter().map(|l| (l.res.w_bits, l.res.p_bits)).collect();
+            let (t1, t2) = (rand_res(c.rng), rand_res(c.rng));
+            let target = vec![(t1.w_bits, t1.p_bits), (t2.w_bits, t2.p_bits)];
+            let seed = c.rng.next_u64();
+
+            let in_dim = 2 * in_side * in_side;
+            let frames: Vec<SpikeList> = (0..8)
+                .map(|_| {
+                    let activity = *c.rng.choose(&[0.0, 0.1, 0.4, 1.0]);
+                    let bits: Vec<bool> =
+                        (0..in_dim).map(|_| c.rng.chance(activity)).collect();
+                    SpikeList::from_dense(&bits)
+                })
+                .collect();
+
+            // Live path: k frames at base, switch, finish.
+            let cut = c.rng.range_usize(1, 4);
+            let mut live = NativeScnn::new(net.clone(), seed);
+            for f in &frames[..cut] {
+                live.step(f).map_err(|e| e.to_string())?;
+            }
+            let checkpoint = live.snapshot();
+            live.set_resolutions(&target);
+            prop_eq(
+                live.snapshot(),
+                checkpoint.rescaled(&base, &target),
+                "switch rescales, never resets",
+            )?;
+
+            // Oracle: fresh build at the target resolution, same seed,
+            // restoring the rescaled checkpoint.
+            let tnet = net.with_resolutions(&[t1, t2]);
+            let mut fresh = NativeScnn::new(tnet.clone(), seed);
+            fresh.restore(&checkpoint.rescaled(&base, &target)).map_err(|e| e.to_string())?;
+
+            // Finish both, checkpointing once more mid-window after the
+            // switch into a third backend (the serve snapshot/restore
+            // cycle across a tier move).
+            let recut = cut + 2;
+            let mut third: Option<NativeScnn> = None;
+            for (t, f) in frames[cut..].iter().enumerate() {
+                let a = live.step(f).map_err(|e| e.to_string())?;
+                let b = fresh.step(f).map_err(|e| e.to_string())?;
+                prop_eq(a.out_spikes.clone(), b.out_spikes.clone(), &format!("t={t} out"))?;
+                prop_eq(a.counts.clone(), b.counts.clone(), &format!("t={t} counts"))?;
+                if let Some(m) = third.as_mut() {
+                    let d = m.step(f).map_err(|e| e.to_string())?;
+                    prop_eq(a.out_spikes.clone(), d.out_spikes.clone(), &format!("t={t} 3rd"))?;
+                }
+                if cut + t + 1 == recut {
+                    let mut m = NativeScnn::new(tnet.clone(), seed);
+                    m.restore(&live.snapshot()).map_err(|e| e.to_string())?;
+                    third = Some(m);
+                }
+            }
+            prop_eq(live.snapshot(), fresh.snapshot(), "final vmem")?;
+            if let Some(m) = third {
+                prop_eq(live.snapshot(), m.snapshot(), "final vmem via mid-window restore")?;
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Random full networks through the backend interface: the sparse engine
 /// and the dense-reference oracle must agree on every step's spike list,
 /// per-layer counts, the final membrane snapshot, and the prediction.
