@@ -1,0 +1,206 @@
+//! Scale-out trajectory of the fleet serving tier.
+//!
+//! Each step boots a fleet at half its target size and replays the same
+//! per-node session load, scaled to the target, through
+//! [`flexspim::fleet::Fleet::drive_open_loop`]. The watermark autoscaler
+//! grows the fleet to the target mid-drive, so every step exercises the
+//! full rebalancing path — standby activation, broadcast weight push,
+//! consistent-hash rebalance, and priced vmem checkpoint migrations —
+//! not just steady-state routing. Reported per step: sessions per node,
+//! migration traffic, and modeled energy per session (interconnect
+//! included) versus fleet size.
+//!
+//! A follow-on experiment compares the two placement modes at a fixed
+//! size: replicated (weight broadcast at join, no boundary traffic)
+//! vs. layer-sharded (cheaper unicast re-homing, but every executed
+//! window pays modeled shard-boundary spike planes on the link).
+//!
+//! ```sh
+//! cargo bench --bench fleet_scale            # 1/2/4/8-node fleets
+//! BENCH_QUICK=1 cargo bench --bench fleet_scale   # CI smoke (1/2 nodes)
+//! ```
+//!
+//! One `BENCH_JSON {...}` line per step for the cross-PR trajectory
+//! (`BENCH_fleet.json`; capture with `scripts/capture_bench.sh`).
+
+use flexspim::dataflow::Policy;
+use flexspim::deploy::{DeploymentSpec, FleetSpec, Placement};
+use flexspim::fleet::Fleet;
+use flexspim::serve::{gesture_traffic, ArrivalProcess, LoadConfig};
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::util::bench::{emit_json, quick_mode, section};
+
+const SEED: u64 = 42;
+const MACROS: usize = 16;
+/// Intra-session compression: the 100-ms gesture plays out in 10 ms.
+const TIME_SCALE: f64 = 10.0;
+const CHUNK: usize = 64;
+/// Offered session arrivals per target node — comfortably inside one
+/// worker's capacity, so the sweep measures scale-out, not saturation.
+const RATE_PER_NODE: f64 = 40.0;
+
+/// Same mid-size SCNN as the serve benches, for comparable numbers.
+fn bench_net() -> Network {
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "fleet-scale",
+        vec![
+            LayerSpec::conv("C1", 2, 8, 3, 4, 1, 48, 48, r),
+            LayerSpec::fc("F1", 8 * 12 * 12, 64, r),
+            LayerSpec::fc("F2", 64, 10, Resolution::new(5, 10)),
+        ],
+        16,
+    )
+}
+
+/// Materialize a fresh fleet through the deployment API (the same path
+/// `flexspim fleet --config` takes). One worker per node keeps the
+/// per-node capacity fixed, so goodput growth is attributable to nodes.
+fn fleet_for(spec: FleetSpec) -> Fleet {
+    DeploymentSpec::builder("fleet-scale")
+        .network(&bench_net())
+        .macros(MACROS)
+        .policy(Policy::HsOpt)
+        .native_backend(SEED)
+        .workers(1)
+        .queue_capacity(256)
+        .fleet(spec)
+        .build()
+        .expect("bench spec is valid")
+        .deploy()
+        .expect("bench spec deploys")
+        .fleet()
+        .expect("fleet materializes")
+}
+
+fn main() {
+    let quick = quick_mode();
+    let targets: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let per_node_sessions = if quick { 4 } else { 8 };
+
+    section("scale-out sweep — boot at half size, autoscale to target under load");
+    let mut migrations_total = 0u64;
+    let mut four_node_row_live = 0usize;
+    for &target in targets {
+        let boot = (target / 2).max(1);
+        let spec = FleetSpec {
+            nodes: boot,
+            max_nodes: if target > boot { target } else { 0 },
+            // Below per-node offered load, so growth to the target is
+            // guaranteed mid-drive (not only at the end of the ramp).
+            scale_high_sessions: 6,
+            ..FleetSpec::default()
+        };
+        let mut fleet = fleet_for(spec);
+        let sessions = per_node_sessions * target;
+        let traffic = gesture_traffic(sessions, 7, 0);
+        let cfg = LoadConfig {
+            arrivals: ArrivalProcess::Poisson { rate_per_sec: RATE_PER_NODE * target as f64 },
+            time_scale: TIME_SCALE,
+            chunk: CHUNK,
+            seed: 0xF1EE7 + target as u64,
+        };
+        let r = fleet.drive_open_loop(&traffic, &cfg).expect("open-loop drive");
+        assert_eq!(
+            r.fleet.finished_sessions, sessions as u64,
+            "the fleet degrades sessions under load, never loses them"
+        );
+        assert_eq!(
+            r.fleet.nodes_live, target,
+            "the watermark autoscaler must reach the target size"
+        );
+        migrations_total += r.fleet.migrations;
+        if target == 4 {
+            four_node_row_live = r.fleet.nodes_live;
+        }
+        println!(
+            "{target} nodes (boot {boot}): {:5.1} sessions/node  goodput {:8.2} w/s  \
+             {} migrations ({} bits)  link {:.1} nJ  {:.1} nJ/session",
+            r.fleet.sessions_per_node(),
+            r.goodput_windows_per_sec,
+            r.fleet.migrations,
+            r.fleet.vmem_move_bits,
+            r.fleet.link_energy_pj / 1e3,
+            r.fleet.energy_per_session_pj() / 1e3,
+        );
+        print!("{}", r.fleet.report());
+        emit_json(
+            "fleet_scale",
+            &[
+                ("nodes", target as f64),
+                ("boot_nodes", boot as f64),
+                ("live_nodes", r.fleet.nodes_live as f64),
+                ("sessions", r.fleet.sessions as f64),
+                ("finished", r.fleet.finished_sessions as f64),
+                ("sessions_per_node", r.fleet.sessions_per_node()),
+                ("windows_done", r.fleet.windows_done as f64),
+                ("windows_shed", r.fleet.windows_shed as f64),
+                ("migrations", r.fleet.migrations as f64),
+                ("migration_bits", r.fleet.vmem_move_bits as f64),
+                ("weight_push_bits", r.fleet.weight_push_bits as f64),
+                ("link_bits", r.fleet.link_bits as f64),
+                ("link_energy_nj", r.fleet.link_energy_pj / 1e3),
+                ("energy_per_session_nj", r.fleet.energy_per_session_pj() / 1e3),
+                ("offered_wps", r.offered_windows_per_sec),
+                ("goodput_wps", r.goodput_windows_per_sec),
+                ("p99_ms", r.fleet.latency.p99() * 1e3),
+                ("max_lag_s", r.max_lag_s),
+                ("drive_wall_s", r.drive_wall_s),
+            ],
+        );
+    }
+    if !quick {
+        assert_eq!(four_node_row_live, 4, "the sweep must include a live 4-node fleet");
+        assert!(
+            migrations_total > 0,
+            "autoscale joins must rebalance at least one live session"
+        );
+        println!("\nacceptance: 4-node fleet served, autoscale migrations priced on the link");
+    }
+
+    // Placement comparison at a fixed size: same traffic, same nodes —
+    // only the weight-placement policy (and thus the interconnect bill)
+    // differs. Execution stays replicated in simulation; the sharded
+    // ledger is the traffic model.
+    let nodes = if quick { 2 } else { 4 };
+    section(&format!("placement at {nodes} nodes — replicated vs. layer-sharded interconnect"));
+    let mut boundary = [0u64; 2];
+    for (idx, placement) in [Placement::Replicated, Placement::LayerSharded].iter().enumerate() {
+        let spec = FleetSpec { nodes, placement: *placement, ..FleetSpec::default() };
+        let mut fleet = fleet_for(spec);
+        let traffic = gesture_traffic(per_node_sessions * nodes, 7, 0);
+        let cfg = LoadConfig {
+            arrivals: ArrivalProcess::Poisson { rate_per_sec: RATE_PER_NODE * nodes as f64 },
+            time_scale: TIME_SCALE,
+            chunk: CHUNK,
+            seed: 0x91ACE,
+        };
+        let r = fleet.drive_open_loop(&traffic, &cfg).expect("open-loop drive");
+        boundary[idx] = r.fleet.boundary_bits;
+        println!(
+            "{:13}: {:10} link bits ({:10} weight-push, {:10} boundary) = {:8.1} nJ",
+            format!("{placement:?}"),
+            r.fleet.link_bits,
+            r.fleet.weight_push_bits,
+            r.fleet.boundary_bits,
+            r.fleet.link_energy_pj / 1e3,
+        );
+        emit_json(
+            "fleet_scale_placement",
+            &[
+                ("sharded", idx as f64),
+                ("nodes", nodes as f64),
+                ("link_bits", r.fleet.link_bits as f64),
+                ("weight_push_bits", r.fleet.weight_push_bits as f64),
+                ("boundary_bits", r.fleet.boundary_bits as f64),
+                ("migration_bits", r.fleet.vmem_move_bits as f64),
+                ("link_energy_nj", r.fleet.link_energy_pj / 1e3),
+                ("windows_done", r.fleet.windows_done as f64),
+                ("finished", r.fleet.finished_sessions as f64),
+            ],
+        );
+    }
+    assert_eq!(boundary[0], 0, "replicated placement pays no shard-boundary traffic");
+    assert!(boundary[1] > 0, "layer sharding must price boundary spike planes");
+    println!("\nacceptance: sharded boundary traffic priced, absent under replication");
+}

@@ -98,22 +98,43 @@ impl RunMetrics {
     }
 
     /// Merge another run's metrics.
+    ///
+    /// Across serve sessions — and across fleet nodes — merging must stay
+    /// an *exact partition*: every field is either summed or
+    /// sample-weighted, never dropped. The exhaustive destructuring makes
+    /// adding a `RunMetrics` field without deciding its merge rule a
+    /// compile error instead of a silent undercount of a whole node.
     pub fn merge(&mut self, other: &RunMetrics) {
-        let n = (self.samples + other.samples).max(1);
+        let RunMetrics {
+            samples,
+            correct,
+            timesteps,
+            in_events,
+            sops,
+            mean_sparsity,
+            energy,
+            cim,
+            modeled_latency_s,
+            wallclock_s,
+            state_spill_bits,
+            state_evictions,
+        } = other;
+        // Sample-weighted mean, computed before `samples` accumulates.
+        let n = (self.samples + samples).max(1);
         self.mean_sparsity = (self.mean_sparsity * self.samples as f64
-            + other.mean_sparsity * other.samples as f64)
+            + mean_sparsity * *samples as f64)
             / n as f64;
-        self.samples += other.samples;
-        self.correct += other.correct;
-        self.timesteps += other.timesteps;
-        self.in_events += other.in_events;
-        self.sops += other.sops;
-        self.energy.add(&other.energy);
-        self.cim.merge(&other.cim);
-        self.modeled_latency_s += other.modeled_latency_s;
-        self.wallclock_s += other.wallclock_s;
-        self.state_spill_bits += other.state_spill_bits;
-        self.state_evictions += other.state_evictions;
+        self.samples += samples;
+        self.correct += correct;
+        self.timesteps += timesteps;
+        self.in_events += in_events;
+        self.sops += sops;
+        self.energy.add(energy);
+        self.cim.merge(cim);
+        self.modeled_latency_s += modeled_latency_s;
+        self.wallclock_s += wallclock_s;
+        self.state_spill_bits += state_spill_bits;
+        self.state_evictions += state_evictions;
     }
 
     /// Render a report block.
@@ -383,6 +404,51 @@ mod tests {
         assert_eq!(a.samples, 8);
         assert!((a.accuracy() - 0.5).abs() < 1e-12);
         assert!((a.mean_sparsity - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_is_an_exact_partition_of_every_field() {
+        // Every field of RunMetrics carries a distinct nonzero value, so a
+        // field silently dropped by merge() shows up as a wrong sum here
+        // (the destructuring in merge() catches *new* fields at compile
+        // time; this pins the rule for the existing ones).
+        let block = |k: u64| RunMetrics {
+            samples: k,
+            correct: k + 1,
+            timesteps: k + 2,
+            in_events: k + 3,
+            sops: k + 4,
+            mean_sparsity: 0.5,
+            energy: EnergyBreakdown {
+                compute_pj: k as f64,
+                movement_pj: k as f64 + 1.0,
+                spike_pj: k as f64 + 2.0,
+                load_pj: k as f64 + 3.0,
+            },
+            cim: EnergyCounters { cim_cycles: k + 5, adder_ops: k + 6, ..Default::default() },
+            modeled_latency_s: k as f64 + 4.0,
+            wallclock_s: k as f64 + 5.0,
+            state_spill_bits: k + 7,
+            state_evictions: k + 8,
+        };
+        let mut a = block(10);
+        a.merge(&block(100));
+        assert_eq!(a.samples, 110);
+        assert_eq!(a.correct, 112);
+        assert_eq!(a.timesteps, 114);
+        assert_eq!(a.in_events, 116);
+        assert_eq!(a.sops, 118);
+        assert!((a.mean_sparsity - 0.5).abs() < 1e-12, "sample-weighted mean");
+        assert_eq!(a.energy.compute_pj, 110.0);
+        assert_eq!(a.energy.movement_pj, 112.0);
+        assert_eq!(a.energy.spike_pj, 114.0);
+        assert_eq!(a.energy.load_pj, 116.0);
+        assert_eq!(a.cim.cim_cycles, 120);
+        assert_eq!(a.cim.adder_ops, 122);
+        assert_eq!(a.modeled_latency_s, 118.0);
+        assert_eq!(a.wallclock_s, 120.0);
+        assert_eq!(a.state_spill_bits, 124);
+        assert_eq!(a.state_evictions, 126);
     }
 
     #[test]

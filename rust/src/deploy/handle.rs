@@ -271,6 +271,20 @@ impl Deployment {
             self.service_config()?,
         ))
     }
+
+    /// A serving fleet over the spec's `[fleet]` settings: `fleet.nodes`
+    /// live replicas of this deployment's service (plus autoscale
+    /// standbys), each built from the shared plan and backend factory so
+    /// weights are identical fleet-wide — the precondition for
+    /// bit-identical session migration.
+    pub fn fleet(&self) -> Result<crate::fleet::Fleet> {
+        crate::fleet::Fleet::new(
+            self.plan.clone(),
+            self.backend_factory(),
+            self.service_config()?,
+            self.spec.fleet.clone(),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -412,6 +426,22 @@ mod tests {
         // A plain spec keeps the controller off.
         let cfg = small_spec().deploy().unwrap().service_config().unwrap();
         assert!(!cfg.precision.enabled);
+    }
+
+    #[test]
+    fn fleet_section_materializes_a_fleet() {
+        let mut spec = small_spec();
+        spec.fleet.nodes = 2;
+        let dep = spec.deploy().unwrap();
+        let fleet = dep.fleet().unwrap();
+        assert_eq!(fleet.live_nodes(), vec![0, 1]);
+        assert_eq!(
+            fleet.ledger().weight_push_bits,
+            2 * dep.network().total_weight_bits(),
+            "boot joins broadcast the weight image to each replica"
+        );
+        // Replicas inherit the deployment's serve config.
+        assert_eq!(fleet.node(0).config().session.width, 48);
     }
 
     #[test]

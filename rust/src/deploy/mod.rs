@@ -38,6 +38,7 @@ pub mod train;
 pub use handle::Deployment;
 pub use spec::{
     parse_policy, policy_key, AutoscaleSpec, BackendSpec, DeploymentBuilder, DeploymentSpec,
-    LayerDef, NetworkSpec, PrecisionSpec, ServeSpec, SubstrateSpec, TelemetrySpec,
+    FleetSpec, LayerDef, NetworkSpec, Placement, PrecisionSpec, ServeSpec, SubstrateSpec,
+    TelemetrySpec,
 };
 pub use train::{SimulateConfig, TrainConfig, TrainSpec};

@@ -17,9 +17,13 @@ pub const SCNN_DVS_GESTURE: &str = "scnn-dvs-gesture";
 /// Preset key of the compact streaming demo network.
 pub const SERVE_DEMO: &str = "serve-demo";
 
+/// Preset key of the scale-out fleet demo: the serve-demo network
+/// replicated over a 4-node fleet with autoscale headroom to 8.
+pub const FLEET_DEMO: &str = "fleet-demo";
+
 /// All preset keys, for error messages and sweep drivers.
 pub fn names() -> Vec<&'static str> {
-    vec![SCNN_DVS_GESTURE, SERVE_DEMO]
+    vec![SCNN_DVS_GESTURE, SERVE_DEMO, FLEET_DEMO]
 }
 
 /// Compact serve demo net: 16 timesteps over the 48×48 substrate, so each
@@ -43,22 +47,25 @@ pub fn serve_demo_net() -> Network {
 pub fn network(name: &str) -> Option<Network> {
     match name {
         SCNN_DVS_GESTURE => Some(scnn_dvs_gesture()),
-        SERVE_DEMO => Some(serve_demo_net()),
+        // The fleet demo scales the serve-demo workload out; the
+        // per-node network is the same.
+        SERVE_DEMO | FLEET_DEMO => Some(serve_demo_net()),
         _ => None,
     }
 }
 
 /// A full default deployment spec around a preset network (nominal
 /// substrate, native backend seeded at 42, nominal serve settings), if
-/// the key is known.
+/// the key is known. The fleet preset adds its `[fleet]` section on top.
 pub fn spec(name: &str) -> Option<DeploymentSpec> {
     let net = network(name)?;
-    Some(
-        DeploymentSpec::builder(&net.name)
-            .network(&net)
-            .build()
-            .expect("preset networks are valid"),
-    )
+    let builder = DeploymentSpec::builder(&net.name).network(&net);
+    let builder = if name == FLEET_DEMO {
+        builder.fleet_nodes(4).fleet_autoscale(6, 8)
+    } else {
+        builder
+    };
+    Some(builder.build().expect("preset networks are valid"))
 }
 
 #[cfg(test)]

@@ -637,6 +637,118 @@ impl PrecisionSpec {
     }
 }
 
+// ------------------------------------------------------------ fleet spec
+
+/// Weight-placement policy of a fleet (see [`crate::fleet`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Every node holds the full weight set; a session runs anywhere and
+    /// joins cost one broadcast weight push.
+    Replicated,
+    /// Layers are partitioned round-robin across nodes; joins cost one
+    /// unicast per shard and every executed window pays modeled
+    /// inter-shard boundary-spike traffic.
+    LayerSharded,
+}
+
+impl Placement {
+    /// The TOML/CLI key of this placement (`replicated` | `layer-sharded`).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Placement::Replicated => "replicated",
+            Placement::LayerSharded => "layer-sharded",
+        }
+    }
+
+    /// Parse from the TOML/CLI key (inverse of [`Placement::key`]).
+    pub fn parse(s: &str) -> Result<Placement> {
+        Ok(match s {
+            "replicated" => Placement::Replicated,
+            "layer-sharded" => Placement::LayerSharded,
+            other => bail!("unknown placement '{other}' (replicated|layer-sharded)"),
+        })
+    }
+}
+
+/// Fleet section: scale-out across N accelerator nodes (see
+/// [`crate::fleet`] for routing/migration semantics). Defaults to a
+/// single node, so a plain spec deploys exactly as before.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    /// Replica nodes at boot.
+    pub nodes: usize,
+    /// Weight-placement policy.
+    pub placement: Placement,
+    /// Sticky-session capacity per node; the router spills past a full
+    /// node to the next ring successor (`0` = unbounded).
+    pub capacity_sessions: usize,
+    /// Virtual nodes per physical node on the consistent-hash ring
+    /// (more vnodes = smoother key spread, larger ring).
+    pub vnodes: usize,
+    /// Inter-node link energy per transferred bit (pJ/bit). Default 30:
+    /// a chip-to-chip serial link priced above the 20 pJ/bit DRAM lane.
+    pub link_pj_per_bit: f64,
+    /// Autoscale ceiling: the fleet may grow itself up to this many
+    /// nodes (`0` disables autoscale joins; otherwise must be >= `nodes`).
+    pub max_nodes: usize,
+    /// Mean live sessions per node above which an autoscale join fires
+    /// (ignored while `max_nodes` is 0).
+    pub scale_high_sessions: usize,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            nodes: 1,
+            placement: Placement::Replicated,
+            capacity_sessions: 0,
+            vnodes: 16,
+            link_pj_per_bit: 30.0,
+            max_nodes: 0,
+            scale_high_sessions: 8,
+        }
+    }
+}
+
+impl FleetSpec {
+    /// Sanity limits.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            (1..=64).contains(&self.nodes),
+            "fleet: {} nodes outside 1..=64",
+            self.nodes
+        );
+        ensure!(
+            (1..=1024).contains(&self.vnodes),
+            "fleet: vnodes {} outside 1..=1024",
+            self.vnodes
+        );
+        ensure!(
+            self.link_pj_per_bit >= 0.0,
+            "fleet: link_pj_per_bit {} must be >= 0",
+            self.link_pj_per_bit
+        );
+        if self.max_nodes > 0 {
+            ensure!(
+                self.max_nodes >= self.nodes,
+                "fleet: max_nodes {} below the boot size {}",
+                self.max_nodes,
+                self.nodes
+            );
+            ensure!(
+                self.max_nodes <= 64,
+                "fleet: max_nodes {} outside 1..=64",
+                self.max_nodes
+            );
+            ensure!(
+                self.scale_high_sessions >= 1,
+                "fleet: scale_high_sessions must be >= 1 when autoscale is on"
+            );
+        }
+        Ok(())
+    }
+}
+
 // -------------------------------------------------------- deployment spec
 
 /// The one typed description of a FlexSpIM deployment: topology,
@@ -658,6 +770,8 @@ pub struct DeploymentSpec {
     pub telemetry: TelemetrySpec,
     /// Serve-time precision-controller settings.
     pub precision: PrecisionSpec,
+    /// Fleet scale-out settings.
+    pub fleet: FleetSpec,
 }
 
 impl DeploymentSpec {
@@ -670,6 +784,7 @@ impl DeploymentSpec {
             serve: ServeSpec::default(),
             telemetry: TelemetrySpec::default(),
             precision: PrecisionSpec::default(),
+            fleet: FleetSpec::default(),
         }
     }
 
@@ -680,6 +795,7 @@ impl DeploymentSpec {
         self.serve.validate()?;
         self.telemetry.validate()?;
         self.precision.validate()?;
+        self.fleet.validate()?;
         Ok(())
     }
 }
@@ -713,6 +829,7 @@ pub struct DeploymentBuilder {
     serve: ServeSpec,
     telemetry: TelemetrySpec,
     precision: PrecisionSpec,
+    fleet: FleetSpec,
 }
 
 impl DeploymentBuilder {
@@ -909,6 +1026,27 @@ impl DeploymentBuilder {
         self
     }
 
+    /// Replace the whole fleet section.
+    pub fn fleet(mut self, spec: FleetSpec) -> Self {
+        self.fleet = spec;
+        self
+    }
+
+    /// Shortcut: a fleet of `nodes` replicas, keeping the remaining
+    /// fleet knobs at their defaults.
+    pub fn fleet_nodes(mut self, nodes: usize) -> Self {
+        self.fleet.nodes = nodes;
+        self
+    }
+
+    /// Shortcut: enable autoscale joins up to `max_nodes` once the mean
+    /// live sessions per node crosses `high_sessions`.
+    pub fn fleet_autoscale(mut self, high_sessions: usize, max_nodes: usize) -> Self {
+        self.fleet.scale_high_sessions = high_sessions;
+        self.fleet.max_nodes = max_nodes;
+        self
+    }
+
     /// Validate and produce the spec.
     pub fn build(self) -> Result<DeploymentSpec> {
         let spec = DeploymentSpec {
@@ -918,6 +1056,7 @@ impl DeploymentBuilder {
             serve: self.serve,
             telemetry: self.telemetry,
             precision: self.precision,
+            fleet: self.fleet,
         };
         spec.validate()?;
         Ok(spec)
@@ -1013,6 +1152,20 @@ mod tests {
         assert!(base().precision(bad_pr).build().is_err(), "zero drop_p99_ms");
         let bad_pr = PrecisionSpec { raise_margin: -0.5, ..PrecisionSpec::default() };
         assert!(base().precision(bad_pr).build().is_err(), "negative raise_margin");
+        assert!(base().fleet_nodes(0).build().is_err(), "zero fleet nodes");
+        assert!(base().fleet_nodes(65).build().is_err(), "fleet nodes past 64");
+        let bad_fl = FleetSpec { vnodes: 0, ..FleetSpec::default() };
+        assert!(base().fleet(bad_fl).build().is_err(), "zero vnodes");
+        let bad_fl = FleetSpec { link_pj_per_bit: -1.0, ..FleetSpec::default() };
+        assert!(base().fleet(bad_fl).build().is_err(), "negative link energy");
+        assert!(
+            base().fleet_nodes(4).fleet_autoscale(8, 2).build().is_err(),
+            "autoscale ceiling below boot size"
+        );
+        assert!(
+            base().fleet_autoscale(0, 4).build().is_err(),
+            "zero scale_high_sessions with autoscale on"
+        );
         let mut bad_bits = base().build().unwrap();
         bad_bits.network.layers[0] = LayerDef::Fc {
             name: "f".into(),
@@ -1106,6 +1259,38 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(plain.precision, PrecisionSpec::default());
+    }
+
+    #[test]
+    fn fleet_builder_paths() {
+        let spec = DeploymentSpec::builder("t")
+            .fc("f", 4, 10, Resolution::new(4, 8))
+            .fleet_nodes(4)
+            .fleet_autoscale(6, 8)
+            .build()
+            .unwrap();
+        assert_eq!(spec.fleet.nodes, 4);
+        assert_eq!(spec.fleet.max_nodes, 8);
+        assert_eq!(spec.fleet.scale_high_sessions, 6);
+        // The untouched knobs stay at their defaults.
+        assert_eq!(spec.fleet.placement, Placement::Replicated);
+        assert_eq!(spec.fleet.vnodes, 16);
+        // A plain spec is a single node with autoscale off.
+        let plain = DeploymentSpec::builder("t")
+            .fc("f", 4, 10, Resolution::new(4, 8))
+            .build()
+            .unwrap();
+        assert_eq!(plain.fleet, FleetSpec::default());
+        assert_eq!(plain.fleet.nodes, 1);
+        assert_eq!(plain.fleet.max_nodes, 0);
+    }
+
+    #[test]
+    fn placement_keys_round_trip() {
+        for p in [Placement::Replicated, Placement::LayerSharded] {
+            assert_eq!(Placement::parse(p.key()).unwrap(), p);
+        }
+        assert!(Placement::parse("sharded").is_err());
     }
 
     #[test]

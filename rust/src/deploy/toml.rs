@@ -78,6 +78,15 @@
 //! # queue_high = 8           # queued windows/worker = overloaded
 //! # raise_margin = 0.5       # margin below this raises one tier
 //! # min_windows = 2          # windows before margin raises may fire
+//!
+//! # [fleet]                  # whole section optional (default: 1 node)
+//! # nodes = 4                # replica nodes at boot (1..=64)
+//! # placement = "replicated" # replicated | layer-sharded
+//! # capacity_sessions = 0    # sticky sessions per node (0 = unbounded)
+//! # vnodes = 16              # virtual nodes per node on the hash ring
+//! # link_pj_per_bit = 30.0   # inter-node link energy (pJ/bit)
+//! # max_nodes = 0            # autoscale-join ceiling (0 = off)
+//! # scale_high_sessions = 8  # mean sessions/node that triggers a join
 //! ```
 
 use std::collections::BTreeSet;
@@ -91,8 +100,8 @@ use crate::Result;
 
 use super::presets;
 use super::spec::{
-    parse_policy, policy_key, AutoscaleSpec, BackendSpec, DeploymentSpec, LayerDef, NetworkSpec,
-    PrecisionSpec, ServeSpec, SubstrateSpec, TelemetrySpec,
+    parse_policy, policy_key, AutoscaleSpec, BackendSpec, DeploymentSpec, FleetSpec, LayerDef,
+    NetworkSpec, Placement, PrecisionSpec, ServeSpec, SubstrateSpec, TelemetrySpec,
 };
 
 // ------------------------------------------------------------ strict doc
@@ -445,8 +454,32 @@ pub fn spec_from_doc(doc: &Doc) -> Result<DeploymentSpec> {
         precision.min_windows = w;
     }
 
+    let mut fleet = FleetSpec::default();
+    if let Some(n) = t.take_usize("fleet.nodes")? {
+        fleet.nodes = n;
+    }
+    if let Some(p) = t.take_str("fleet.placement")? {
+        fleet.placement = Placement::parse(&p)?;
+    }
+    if let Some(c) = t.take_usize("fleet.capacity_sessions")? {
+        fleet.capacity_sessions = c;
+    }
+    if let Some(v) = t.take_usize("fleet.vnodes")? {
+        fleet.vnodes = v;
+    }
+    if let Some(e) = t.take_float("fleet.link_pj_per_bit")? {
+        fleet.link_pj_per_bit = e;
+    }
+    if let Some(m) = t.take_usize("fleet.max_nodes")? {
+        fleet.max_nodes = m;
+    }
+    if let Some(s) = t.take_usize("fleet.scale_high_sessions")? {
+        fleet.scale_high_sessions = s;
+    }
+
     t.finish()?;
-    let spec = DeploymentSpec { network, substrate, backend, serve, telemetry, precision };
+    let spec =
+        DeploymentSpec { network, substrate, backend, serve, telemetry, precision, fleet };
     spec.validate()?;
     Ok(spec)
 }
@@ -590,6 +623,18 @@ impl DeploymentSpec {
             let _ = writeln!(out, "queue_high = {}", pr.queue_high);
             let _ = writeln!(out, "raise_margin = {}", pr.raise_margin);
             let _ = writeln!(out, "min_windows = {}", pr.min_windows);
+        }
+        let fl = &self.fleet;
+        if *fl != FleetSpec::default() {
+            out.push('\n');
+            let _ = writeln!(out, "[fleet]");
+            let _ = writeln!(out, "nodes = {}", fl.nodes);
+            let _ = writeln!(out, "placement = \"{}\"", fl.placement.key());
+            let _ = writeln!(out, "capacity_sessions = {}", fl.capacity_sessions);
+            let _ = writeln!(out, "vnodes = {}", fl.vnodes);
+            let _ = writeln!(out, "link_pj_per_bit = {}", fl.link_pj_per_bit);
+            let _ = writeln!(out, "max_nodes = {}", fl.max_nodes);
+            let _ = writeln!(out, "scale_high_sessions = {}", fl.scale_high_sessions);
         }
         out
     }
@@ -809,6 +854,57 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err}").contains("max_delta"), "got: {err}");
+    }
+
+    #[test]
+    fn fleet_section_round_trips() {
+        let spec = DeploymentSpec::builder("toml-fleet")
+            .timesteps(8)
+            .fc("F1", 16, 10, Resolution::new(4, 8))
+            .fleet(FleetSpec {
+                nodes: 4,
+                placement: Placement::LayerSharded,
+                capacity_sessions: 12,
+                vnodes: 32,
+                link_pj_per_bit: 25.0,
+                max_nodes: 8,
+                scale_high_sessions: 6,
+            })
+            .build()
+            .unwrap();
+        let text = spec.to_toml();
+        assert!(text.contains("[fleet]"), "got:\n{text}");
+        assert!(text.contains("placement = \"layer-sharded\""), "got:\n{text}");
+        let parsed = DeploymentSpec::from_toml_str(&text).unwrap();
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.to_toml(), text, "serialization is a fixed point");
+        // A default spec emits no [fleet] section at all, so configs
+        // written before the fleet tier existed serialize byte-identically.
+        assert!(!demo_spec().to_toml().contains("fleet"), "default emits nothing");
+        // Keys parse individually and stay strict.
+        let base = "[network]\npreset = \"serve-demo\"\n";
+        let spec = DeploymentSpec::from_toml_str(&format!(
+            "{base}[fleet]\nnodes = 2\ncapacity_sessions = 5\n"
+        ))
+        .unwrap();
+        assert_eq!(spec.fleet.nodes, 2);
+        assert_eq!(spec.fleet.capacity_sessions, 5);
+        assert_eq!(spec.fleet.placement, Placement::Replicated);
+        let err = DeploymentSpec::from_toml_str(
+            &format!("{base}[fleet]\nreplicas = 2\n"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("fleet.replicas"), "got: {err}");
+        let err = DeploymentSpec::from_toml_str(
+            &format!("{base}[fleet]\nplacement = \"sharded\"\n"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("unknown placement"), "got: {err}");
+        let err = DeploymentSpec::from_toml_str(
+            &format!("{base}[fleet]\nnodes = 0\n"),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("nodes"), "got: {err}");
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! Inter-node traffic accounting for the fleet tier.
+//!
+//! The single-node energy ledger (`crate::coordinator::metrics`) prices
+//! on-chip movement and DRAM spills; scale-out adds a third, more
+//! expensive lane: the chip-to-chip link. [`FleetLedger`] records every
+//! modeled transfer on that lane by `(from, to)` link —
+//!
+//! * **weight pushes** — the controller broadcasting a replica's full
+//!   weight image at join (replicated placement), or layers re-homing
+//!   between shard owners (layer-sharded placement). Weight stationarity
+//!   makes this a one-off per join, amortized across every session the
+//!   node then serves.
+//! * **vmem moves** — live-session migrations: the serialized
+//!   [`crate::runtime::StateSnapshot`] at the session's current
+//!   precision tier, unicast old node → new node.
+//! * **boundary spikes** — layer-sharded placement streams binary spike
+//!   planes across every owner cut, per frame (modeled; execution stays
+//!   replicated in simulation).
+//!
+//! Totals convert to energy at a flat `link_pj_per_bit` and export
+//! through the telemetry registry with `from`/`to` node labels.
+
+use std::collections::BTreeMap;
+
+use crate::telemetry::Registry;
+
+/// Pseudo-node id for the deployment controller (weight images originate
+/// there, not on a serving node).
+pub const CONTROLLER: usize = usize::MAX;
+
+fn node_label(node: usize) -> String {
+    if node == CONTROLLER {
+        "ctl".to_string()
+    } else {
+        format!("n{node}")
+    }
+}
+
+/// Per-link bit counters for the fleet interconnect, plus event tallies.
+#[derive(Debug, Clone, Default)]
+pub struct FleetLedger {
+    /// Link energy per transferred bit (pJ/bit).
+    pub link_pj_per_bit: f64,
+    /// Bits moved per `(from, to)` link.
+    pub links: BTreeMap<(usize, usize), u64>,
+    /// Bits spent distributing weight images (joins + shard re-homing).
+    pub weight_push_bits: u64,
+    /// Bits spent moving live-session membrane checkpoints.
+    pub vmem_move_bits: u64,
+    /// Bits spent streaming spike planes across shard boundaries.
+    pub boundary_bits: u64,
+    /// Fleet windows already priced into `boundary_bits` (high-water mark
+    /// so repeated accounting passes stay idempotent).
+    pub boundary_windows: u64,
+    /// Completed live-session migrations.
+    pub migrations: u64,
+    /// Node joins (including boot activations).
+    pub joins: u64,
+    /// Node leaves/drains.
+    pub leaves: u64,
+}
+
+impl FleetLedger {
+    /// A zeroed ledger pricing the link at `link_pj_per_bit`.
+    pub fn new(link_pj_per_bit: f64) -> FleetLedger {
+        FleetLedger { link_pj_per_bit, ..FleetLedger::default() }
+    }
+
+    fn add_link(&mut self, from: usize, to: usize, bits: u64) {
+        *self.links.entry((from, to)).or_insert(0) += bits;
+    }
+
+    /// Price a weight image pushed over `from → to` (controller broadcast
+    /// or shard re-homing).
+    pub fn record_weight_push(&mut self, from: usize, to: usize, bits: u64) {
+        self.weight_push_bits += bits;
+        self.add_link(from, to, bits);
+    }
+
+    /// Price a live-session state move of `bits` over `from → to`.
+    pub fn record_migration(&mut self, from: usize, to: usize, bits: u64) {
+        self.vmem_move_bits += bits;
+        self.migrations += 1;
+        self.add_link(from, to, bits);
+    }
+
+    /// Price shard-boundary spike traffic for one window batch.
+    pub fn record_boundary(&mut self, from: usize, to: usize, bits: u64) {
+        self.boundary_bits += bits;
+        self.add_link(from, to, bits);
+    }
+
+    /// Total bits moved over the fleet interconnect.
+    pub fn total_bits(&self) -> u64 {
+        self.links.values().sum()
+    }
+
+    /// Total link energy in pJ.
+    pub fn energy_pj(&self) -> f64 {
+        self.total_bits() as f64 * self.link_pj_per_bit
+    }
+
+    /// One-line human summary.
+    pub fn line(&self) -> String {
+        format!(
+            "fleet link: {} bits ({} weight-push, {} vmem-move, {} boundary) \
+             over {} links = {:.1} nJ | {} migrations, {} joins, {} leaves",
+            self.total_bits(),
+            self.weight_push_bits,
+            self.vmem_move_bits,
+            self.boundary_bits,
+            self.links.len(),
+            self.energy_pj() / 1e3,
+            self.migrations,
+            self.joins,
+            self.leaves,
+        )
+    }
+
+    /// Mirror the ledger into `registry` as monotonic counters:
+    /// `flexspim_fleet_link_bits_total{from,to}` per link and
+    /// `flexspim_fleet_migrations_total`. Idempotent — each counter is
+    /// raised by the delta since the last publish, so repeated report or
+    /// `--dump-telemetry` passes never double-count.
+    pub fn publish(&self, registry: &Registry) {
+        for (&(from, to), &bits) in &self.links {
+            let (fl, tl) = (node_label(from), node_label(to));
+            let c = registry.counter(
+                "flexspim_fleet_link_bits_total",
+                &[("from", fl.as_str()), ("to", tl.as_str())],
+            );
+            let cur = c.get();
+            if bits > cur {
+                c.add(bits - cur);
+            }
+        }
+        let m = registry.counter("flexspim_fleet_migrations_total", &[]);
+        let cur = m.get();
+        if self.migrations > cur {
+            m.add(self.migrations - cur);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_tallies_categories_and_links() {
+        let mut l = FleetLedger::new(30.0);
+        l.record_weight_push(CONTROLLER, 0, 1000);
+        l.record_weight_push(CONTROLLER, 1, 1000);
+        l.record_migration(0, 1, 256);
+        l.record_boundary(0, 1, 64);
+        assert_eq!(l.weight_push_bits, 2000);
+        assert_eq!(l.vmem_move_bits, 256);
+        assert_eq!(l.boundary_bits, 64);
+        assert_eq!(l.migrations, 1);
+        assert_eq!(l.total_bits(), 2320);
+        assert_eq!(l.links[&(0, 1)], 320, "migration + boundary share a link");
+        assert!((l.energy_pj() - 2320.0 * 30.0).abs() < 1e-9);
+        assert!(l.line().contains("1 migrations"));
+    }
+
+    #[test]
+    fn publish_is_idempotent() {
+        let mut l = FleetLedger::new(30.0);
+        l.record_migration(0, 1, 128);
+        let reg = Registry::new();
+        l.publish(&reg);
+        l.publish(&reg);
+        assert_eq!(reg.counter_total("flexspim_fleet_migrations_total"), 1);
+        assert_eq!(reg.counter_total("flexspim_fleet_link_bits_total"), 128);
+        // New traffic raises the counters by the delta only.
+        l.record_migration(1, 0, 64);
+        l.publish(&reg);
+        assert_eq!(reg.counter_total("flexspim_fleet_migrations_total"), 2);
+        assert_eq!(reg.counter_total("flexspim_fleet_link_bits_total"), 192);
+    }
+
+    #[test]
+    fn controller_label_is_distinct() {
+        assert_eq!(node_label(CONTROLLER), "ctl");
+        assert_eq!(node_label(3), "n3");
+    }
+}

@@ -1,0 +1,945 @@
+//! Fleet tier: scale-out serving across replicated accelerator nodes.
+//!
+//! One [`crate::serve::StreamingService`] models a single FlexSpIM chip
+//! serving sessions out of resident CIM state. A deployment that outgrows
+//! one chip adds nodes — and because the paper's layer-wise weight/output
+//! stationarity makes both weights *and* membrane potentials resident
+//! state, scale-out is not stateless load balancing: placing a session is
+//! a commitment (its vmem lives on that node), and rebalancing means
+//! moving a live checkpoint over a chip-to-chip link that is far more
+//! expensive per bit than any on-chip lane. This module models exactly
+//! that:
+//!
+//! * [`router`] — a consistent-hash ring with virtual nodes and sticky
+//!   session pins, so joins/leaves remap only ~1/N of the key space and
+//!   every remap is an explicit, priced migration.
+//! * [`ledger`] — per-link bit accounting for the fleet interconnect:
+//!   weight pushes at join (broadcast under replicated placement,
+//!   per-layer re-homing under layer sharding), vmem checkpoint moves for
+//!   session migrations, and modeled shard-boundary spike traffic;
+//!   totals convert to energy at `link_pj_per_bit` and export through the
+//!   telemetry registry.
+//! * [`Fleet`] — N pre-spawned service replicas built from one
+//!   [`crate::deploy::Deployment`]-style `(plan, factory, config)`
+//!   triple, a nested worker-pool scope running all replicas at once, an
+//!   open-loop traffic driver that replays the same
+//!   [`crate::serve::load`] timeline through the router, and a mean-load
+//!   autoscaler that activates standby nodes and migrates the ring share
+//!   of existing sessions onto them.
+//!
+//! Correctness anchor: a session migrated mid-stream (snapshot → link →
+//! restore on a freshly built replica, including across a precision-tier
+//! switch) finishes bit-identical to the same stream served on one node —
+//! pinned by `rust/tests/property_fleet.rs`. Everything the move needs
+//! travels in [`crate::serve::SessionExport`]; bit-identity holds because
+//! all replicas share one plan and backend factory (same seed → same
+//! weights) and [`crate::runtime::StepBackend::restore`] reinstates the
+//! exact membrane words.
+//!
+//! Modeling note: under [`Placement::LayerSharded`] the *pricing* places
+//! layer weights round-robin across live nodes and charges every
+//! owner-cut spike plane to the link, but *execution* stays replicated in
+//! simulation — the traffic model is the deliverable, not a distributed
+//! runtime.
+
+pub mod ledger;
+pub mod router;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure};
+
+use crate::coordinator::engine::{BackendFactory, SamplePlan};
+use crate::coordinator::{LatencyStats, RunMetrics};
+use crate::dataflow::Policy;
+use crate::deploy::{FleetSpec, Placement};
+use crate::runtime::{NativeScnn, StepBackend};
+use crate::serve::load::{build_schedule, Action};
+use crate::serve::{
+    tiers_for, LoadConfig, ServiceConfig, SessionResult, SessionTraffic, StreamingService,
+};
+use crate::snn::events::AdjacencyCache;
+use crate::snn::Network;
+use crate::telemetry::Registry;
+use crate::util::rng::Rng;
+use crate::Result;
+
+pub use ledger::{FleetLedger, CONTROLLER};
+pub use router::{HashRing, SessionRouter};
+
+/// Round-robin shard owner of `layer` among the sorted live set.
+fn shard_owner(live: &[usize], layer: usize) -> usize {
+    live[layer % live.len()]
+}
+
+/// Everything the fleet mutates besides the services themselves — split
+/// out so a driver holding `&[StreamingService]` (all pools running) can
+/// still mutate routing and accounting through one `&mut`.
+struct FleetControl {
+    spec: FleetSpec,
+    router: SessionRouter,
+    ledger: FleetLedger,
+    /// Resolution tier table (shared by every node; see
+    /// [`crate::serve::tiers_for`]).
+    tiers: Vec<Vec<(u32, u32)>>,
+    /// Full weight image of the deployed network, bits.
+    total_weight_bits: u64,
+    /// Per-layer weight image, bits.
+    layer_weight_bits: Vec<u64>,
+    /// Per-layer output-neuron counts (shard-boundary plane widths).
+    layer_out_neurons: Vec<u64>,
+    /// Timesteps per micro-window (boundary planes per window).
+    frames_per_window: u64,
+    /// Fleet-owned metrics registry (nodes keep their own).
+    registry: Arc<Registry>,
+}
+
+impl FleetControl {
+    /// Price shard-boundary spike traffic up to `windows_total` executed
+    /// windows: one binary spike plane per frame per owner cut, charged
+    /// to the cut's link at the *current* shard layout. High-water
+    /// marked, so repeated reporting passes never double-count.
+    fn account_boundary(&mut self, windows_total: u64) {
+        let fresh = windows_total.saturating_sub(self.ledger.boundary_windows);
+        if fresh == 0 {
+            return;
+        }
+        self.ledger.boundary_windows = windows_total;
+        if self.spec.placement != Placement::LayerSharded {
+            return;
+        }
+        let live = self.router.live().to_vec();
+        if live.len() < 2 {
+            return;
+        }
+        for l in 0..self.layer_out_neurons.len().saturating_sub(1) {
+            let a = shard_owner(&live, l);
+            let b = shard_owner(&live, l + 1);
+            if a != b {
+                let bits = fresh * self.frames_per_window * self.layer_out_neurons[l];
+                self.ledger.record_boundary(a, b, bits);
+            }
+        }
+    }
+
+    /// Price the weight movement a join of `node` causes and put it on
+    /// the ring.
+    fn activate(&mut self, node: usize) {
+        let live_before = self.router.live().to_vec();
+        match self.spec.placement {
+            // Replicated placement: the controller broadcasts the full
+            // weight image to every joining node, once — weight
+            // stationarity amortizes it over the node's lifetime.
+            Placement::Replicated => {
+                self.ledger.record_weight_push(CONTROLLER, node, self.total_weight_bits);
+            }
+            // Layer sharding: layers re-home round-robin over the new
+            // live set; each moved layer is a unicast old-owner → new
+            // owner push (controller-sourced while the ring is empty).
+            Placement::LayerSharded => {
+                let mut live_after = live_before.clone();
+                let pos = live_after.binary_search(&node).unwrap_err();
+                live_after.insert(pos, node);
+                for (l, &bits) in self.layer_weight_bits.iter().enumerate() {
+                    let old = if live_before.is_empty() {
+                        CONTROLLER
+                    } else {
+                        shard_owner(&live_before, l)
+                    };
+                    let new = shard_owner(&live_after, l);
+                    if old != new {
+                        self.ledger.record_weight_push(old, new, bits);
+                    }
+                }
+            }
+        }
+        self.router.add_node(node);
+        self.ledger.joins += 1;
+    }
+}
+
+/// A scale-out serving fleet: pre-spawned service replicas plus routing
+/// and interconnect accounting.
+///
+/// All `max(nodes, max_nodes)` replicas are constructed up front; ring
+/// membership (not the `Vec`) defines liveness, so a mid-drive autoscale
+/// join only activates a standby replica whose worker pool is already
+/// running — mirroring how the serve autoscaler pre-spawns
+/// `max_workers` threads and parks the surplus.
+pub struct Fleet {
+    nodes: Vec<StreamingService>,
+    ctrl: FleetControl,
+}
+
+/// Mutable fleet operations, valid both outside any worker pool (ingest
+/// and migration work queue-only) and inside [`Fleet::run_with`] (windows
+/// execute concurrently). Obtained from [`Fleet::handle`] or passed to
+/// the `run_with` driver.
+pub struct FleetHandle<'a> {
+    nodes: &'a [StreamingService],
+    ctrl: &'a mut FleetControl,
+}
+
+impl Fleet {
+    /// Build a fleet over a shared plan and backend factory: one service
+    /// replica per potential node (boot + autoscale headroom), the boot
+    /// nodes activated with their weight pushes priced.
+    pub fn new(
+        plan: Arc<SamplePlan>,
+        factory: Arc<BackendFactory>,
+        cfg: ServiceConfig,
+        spec: FleetSpec,
+    ) -> Result<Fleet> {
+        spec.validate()?;
+        let net = &plan.net;
+        let tiers = tiers_for(net, cfg.precision.max_delta);
+        let ctrl = FleetControl {
+            router: SessionRouter::new(spec.vnodes, spec.capacity_sessions),
+            ledger: FleetLedger::new(spec.link_pj_per_bit),
+            tiers,
+            total_weight_bits: net.total_weight_bits(),
+            layer_weight_bits: net.layers.iter().map(|l| l.weight_bits()).collect(),
+            layer_out_neurons: net.layers.iter().map(|l| l.num_neurons() as u64).collect(),
+            frames_per_window: cfg.session.frames_per_window as u64,
+            registry: Arc::new(Registry::default()),
+            spec: spec.clone(),
+        };
+        let total = spec.nodes.max(spec.max_nodes);
+        let nodes = (0..total)
+            .map(|_| StreamingService::new(plan.clone(), factory.clone(), cfg.clone()))
+            .collect();
+        let mut fleet = Fleet { nodes, ctrl };
+        for _ in 0..spec.nodes {
+            fleet.handle().join()?;
+        }
+        Ok(fleet)
+    }
+
+    /// Convenience: a fleet of pure-Rust [`NativeScnn`] replicas,
+    /// deterministic from `seed` — every node builds backends from the
+    /// same factory, so weights are identical fleet-wide (the migration
+    /// bit-identity precondition).
+    pub fn native(
+        net: Network,
+        seed: u64,
+        num_macros: usize,
+        policy: Policy,
+        cfg: ServiceConfig,
+        spec: FleetSpec,
+    ) -> Result<Fleet> {
+        let plan = Arc::new(SamplePlan::new(net.clone(), num_macros, policy));
+        let adj = Arc::new(AdjacencyCache::new());
+        let factory: Arc<BackendFactory> = Arc::new(move || {
+            Ok(Box::new(NativeScnn::with_adjacency_cache(net.clone(), seed, adj.clone()))
+                as Box<dyn StepBackend>)
+        });
+        Fleet::new(plan, factory, cfg, spec)
+    }
+
+    /// The fleet spec in force.
+    pub fn spec(&self) -> &FleetSpec {
+        &self.ctrl.spec
+    }
+
+    /// All replicas (live and standby), by node id.
+    pub fn nodes(&self) -> &[StreamingService] {
+        &self.nodes
+    }
+
+    /// One replica by node id.
+    pub fn node(&self, id: usize) -> &StreamingService {
+        &self.nodes[id]
+    }
+
+    /// Live node ids, ascending.
+    pub fn live_nodes(&self) -> Vec<usize> {
+        self.ctrl.router.live().to_vec()
+    }
+
+    /// The interconnect ledger.
+    pub fn ledger(&self) -> &FleetLedger {
+        &self.ctrl.ledger
+    }
+
+    /// The session router (read-only; mutate through a handle).
+    pub fn router(&self) -> &SessionRouter {
+        &self.ctrl.router
+    }
+
+    /// The fleet-owned metrics registry (per-link traffic counters and
+    /// per-node session gauges; nodes export their own registries).
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.ctrl.registry
+    }
+
+    /// The node a session is pinned to, if any.
+    pub fn session_node(&self, id: u64) -> Option<usize> {
+        self.ctrl.router.lookup(id)
+    }
+
+    /// A session's current results, wherever it lives.
+    pub fn session_result(&self, id: u64) -> Option<SessionResult> {
+        let node = self.ctrl.router.lookup(id)?;
+        self.nodes[node].session_result(id)
+    }
+
+    /// Mutable fleet operations outside any worker pool: opens, ingest,
+    /// and migrations all work (windows queue without executing until
+    /// [`Self::run_with`]).
+    pub fn handle(&mut self) -> FleetHandle<'_> {
+        FleetHandle { nodes: &self.nodes, ctrl: &mut self.ctrl }
+    }
+
+    /// Run `driver` with every replica's worker pool live (standby nodes
+    /// idle until activated). Each service spawns its pool once and shuts
+    /// down when the driver returns — like
+    /// [`StreamingService::run_with`], one run per fleet.
+    pub fn run_with<T>(
+        &mut self,
+        driver: impl FnOnce(&mut FleetHandle<'_>) -> Result<T>,
+    ) -> Result<T> {
+        fn nested<T, F>(
+            nodes: &[StreamingService],
+            idx: usize,
+            ctrl: &mut FleetControl,
+            driver: &mut Option<F>,
+        ) -> Result<T>
+        where
+            F: FnOnce(&mut FleetHandle<'_>) -> Result<T>,
+        {
+            match nodes.get(idx) {
+                None => {
+                    let f = driver.take().expect("driver runs exactly once");
+                    f(&mut FleetHandle { nodes, ctrl })
+                }
+                Some(svc) => svc.run_with(|_| nested(nodes, idx + 1, ctrl, driver)),
+            }
+        }
+        let mut once = Some(driver);
+        nested(&self.nodes, 0, &mut self.ctrl, &mut once)
+    }
+
+    /// Replay `traffic` open-loop through the fleet: the same
+    /// wall-clock schedule as [`crate::serve::drive_open_loop`], with
+    /// every action routed by the session ring and the autoscaler
+    /// consulted at each arrival.
+    pub fn drive_open_loop(
+        &mut self,
+        traffic: &[SessionTraffic],
+        cfg: &LoadConfig,
+    ) -> Result<FleetLoadReport> {
+        let _span = crate::telemetry::trace::span("fleet.drive_open_loop");
+        ensure!(
+            cfg.time_scale.is_finite() && cfg.time_scale > 0.0,
+            "load time_scale must be positive and finite (got {})",
+            cfg.time_scale
+        );
+        let chunk = cfg.chunk.max(1);
+        let mut rng = Rng::new(cfg.seed);
+        let starts = cfg.arrivals.sample_starts(traffic.len(), &mut rng);
+        let schedule = build_schedule(traffic, &starts, cfg.time_scale, chunk);
+
+        let (drive_wall_s, max_lag_s) = self.run_with(|h| {
+            let epoch = Instant::now();
+            let mut max_lag_s = 0.0f64;
+            for item in &schedule {
+                let due = epoch + Duration::from_secs_f64(item.due_s.max(0.0));
+                let now = Instant::now();
+                if now < due {
+                    std::thread::sleep(due - now);
+                } else {
+                    max_lag_s = max_lag_s.max((now - due).as_secs_f64());
+                }
+                match item.action {
+                    Action::Open(i) => {
+                        h.maybe_scale()?;
+                        h.open_session(traffic[i].id, traffic[i].label)?;
+                    }
+                    Action::Ingest { session, lo, hi } => {
+                        h.ingest(traffic[session].id, &traffic[session].events[lo..hi])?
+                    }
+                    Action::Close(i) => h.close_session(traffic[i].id, traffic[i].end_us)?,
+                }
+            }
+            h.drain()?;
+            Ok((epoch.elapsed().as_secs_f64(), max_lag_s))
+        })?;
+
+        let session = &self.nodes[0].config().session;
+        let window_us = (session.step_us * session.frames_per_window as u64).max(1);
+        let n = traffic.len().max(1) as f64;
+        let mean_windows: f64 =
+            traffic.iter().map(|t| (t.end_us / window_us + 1) as f64).sum::<f64>() / n;
+        let rate = cfg.arrivals.rate_per_sec();
+        let fleet = self.report(drive_wall_s);
+        Ok(FleetLoadReport {
+            offered_sessions_per_sec: rate,
+            offered_windows_per_sec: rate * mean_windows,
+            goodput_windows_per_sec: fleet.windows_done as f64 / drive_wall_s.max(1e-9),
+            drive_wall_s,
+            max_lag_s,
+            fleet,
+        })
+    }
+
+    /// Assemble the fleet-wide report: every node's
+    /// [`StreamingService::report`] merged (metrics via the exact-
+    /// partition [`RunMetrics::merge`]), shard-boundary traffic brought
+    /// up to date, link energy folded into the movement ledger, and the
+    /// fleet registry refreshed (per-link counters, per-node session
+    /// gauges).
+    pub fn report(&mut self, wallclock_s: f64) -> FleetReport {
+        let mut metrics = RunMetrics::default();
+        let mut latency = LatencyStats::new();
+        let mut per_node_sessions = Vec::with_capacity(self.nodes.len());
+        let mut sessions = 0u64;
+        let mut finished_sessions = 0u64;
+        let mut windows_done = 0u64;
+        let mut windows_shed = 0u64;
+        let mut events_dropped = 0u64;
+        let mut early_exits = 0u64;
+        let mut precision_shifts = 0u64;
+        for node in &self.nodes {
+            let r = node.report(wallclock_s);
+            metrics.merge(&r.metrics);
+            latency.merge(&r.latency);
+            per_node_sessions.push(r.sessions);
+            sessions += r.sessions;
+            finished_sessions += r.finished_sessions;
+            windows_done += r.windows_done;
+            windows_shed += r.windows_shed;
+            events_dropped += r.events_dropped;
+            early_exits += r.early_exits;
+            precision_shifts += r.precision_shifts;
+        }
+        self.ctrl.account_boundary(windows_done);
+        let ledger = &self.ctrl.ledger;
+        // The link is the fleet's movement lane; price it alongside the
+        // nodes' DRAM spill traffic already inside `metrics.energy`.
+        metrics.energy.movement_pj += ledger.energy_pj();
+        ledger.publish(&self.ctrl.registry);
+        for (i, node) in self.nodes.iter().enumerate() {
+            let label = format!("n{i}");
+            self.ctrl
+                .registry
+                .gauge("flexspim_fleet_node_sessions", &[("node", label.as_str())])
+                .set(node.session_count() as i64);
+        }
+        self.ctrl
+            .registry
+            .gauge("flexspim_fleet_nodes_live", &[])
+            .set(self.ctrl.router.live().len() as i64);
+        FleetReport {
+            nodes_total: self.nodes.len(),
+            nodes_live: self.ctrl.router.live().len(),
+            per_node_sessions,
+            sessions,
+            finished_sessions,
+            windows_done,
+            windows_shed,
+            events_dropped,
+            early_exits,
+            precision_shifts,
+            migrations: ledger.migrations,
+            joins: ledger.joins,
+            leaves: ledger.leaves,
+            link_bits: ledger.total_bits(),
+            weight_push_bits: ledger.weight_push_bits,
+            vmem_move_bits: ledger.vmem_move_bits,
+            boundary_bits: ledger.boundary_bits,
+            link_energy_pj: ledger.energy_pj(),
+            latency,
+            metrics,
+            wallclock_s,
+        }
+    }
+}
+
+impl FleetHandle<'_> {
+    /// Live node ids, ascending.
+    pub fn live_nodes(&self) -> Vec<usize> {
+        self.ctrl.router.live().to_vec()
+    }
+
+    /// One replica by node id.
+    pub fn node(&self, id: usize) -> &StreamingService {
+        &self.nodes[id]
+    }
+
+    /// The node a session is pinned to, if any.
+    pub fn session_node(&self, id: u64) -> Option<usize> {
+        self.ctrl.router.lookup(id)
+    }
+
+    fn owning_node(&self, id: u64) -> Result<usize> {
+        self.ctrl
+            .router
+            .lookup(id)
+            .ok_or_else(|| anyhow!("session {id} is not routed to any node"))
+    }
+
+    /// Open a session on the node the ring picks (sticky thereafter).
+    /// Returns the node id.
+    pub fn open_session(&mut self, id: u64, label: Option<usize>) -> Result<usize> {
+        let already_pinned = self.ctrl.router.lookup(id).is_some();
+        let node = self.ctrl.router.route(id)?;
+        if let Err(e) = self.nodes[node].open_session(id, label) {
+            if !already_pinned {
+                self.ctrl.router.unpin(id);
+            }
+            return Err(e);
+        }
+        Ok(node)
+    }
+
+    /// Deliver events to wherever the session lives now.
+    pub fn ingest(&mut self, id: u64, events: &[crate::events::DvsEvent]) -> Result<()> {
+        let node = self.owning_node(id)?;
+        self.nodes[node].ingest(id, events)
+    }
+
+    /// Close a session's stream on its owning node.
+    pub fn close_session(&mut self, id: u64, end_us: u64) -> Result<()> {
+        let node = self.owning_node(id)?;
+        self.nodes[node].close_session(id, end_us)
+    }
+
+    /// Administratively retier a session on its owning node (see
+    /// [`StreamingService::set_session_tier`]).
+    pub fn set_session_tier(&mut self, id: u64, tier: usize) -> Result<()> {
+        let node = self.owning_node(id)?;
+        self.nodes[node].set_session_tier(id, tier)
+    }
+
+    /// Move a live session to node `to`: export its state from the owner,
+    /// install it on the target, repin, and price the checkpoint on the
+    /// link. Returns `false` without side effects when the session has a
+    /// window in flight right now (callers under a running pool retry or
+    /// skip — stickiness makes skipping safe) or already lives on `to`.
+    pub fn migrate_session(&mut self, id: u64, to: usize) -> Result<bool> {
+        let from = self.owning_node(id)?;
+        if from == to {
+            return Ok(false);
+        }
+        ensure!(self.ctrl.router.contains(to), "target node {to} is not live");
+        let Some(export) = self.nodes[from].try_export_session(id)? else {
+            return Ok(false);
+        };
+        let bits = export.state_bits(&self.ctrl.tiers[export.tier]);
+        self.nodes[to].import_session(export)?;
+        self.ctrl.router.repin(id, to)?;
+        self.ctrl.ledger.record_migration(from, to, bits);
+        Ok(true)
+    }
+
+    /// Activate the lowest-id standby replica: price its weight push,
+    /// add it to the ring, and migrate onto it the pinned sessions whose
+    /// ring owner it now is (~1/N — the consistent-hash dividend).
+    /// Sessions momentarily in flight stay where they are (sticky), as
+    /// do sessions beyond the new node's capacity. Returns the node id.
+    pub fn join(&mut self) -> Result<usize> {
+        let node = (0..self.nodes.len())
+            .find(|&i| !self.ctrl.router.contains(i))
+            .ok_or_else(|| {
+                anyhow!("no standby replica available ({} spawned)", self.nodes.len())
+            })?;
+        self.ctrl.activate(node);
+        for id in self.ctrl.router.rebalance_keys_for(node) {
+            if !self.ctrl.router.has_capacity(node) {
+                break;
+            }
+            self.migrate_session(id, node)?;
+        }
+        Ok(node)
+    }
+
+    /// Drain a node out of the fleet: take it off the ring, re-home its
+    /// shard layers (layer-sharded placement), and migrate every one of
+    /// its sessions to ring successors — waiting out any in-flight
+    /// window. The replica itself stays spawned (a later [`Self::join`]
+    /// may re-activate it). Returns the number of sessions moved.
+    pub fn leave(&mut self, node: usize) -> Result<u64> {
+        ensure!(self.ctrl.router.contains(node), "node {node} is not live");
+        ensure!(
+            self.ctrl.router.live().len() > 1,
+            "cannot drain the last live node"
+        );
+        let live_before = self.ctrl.router.live().to_vec();
+        self.ctrl.router.remove_node(node);
+        if self.ctrl.spec.placement == Placement::LayerSharded {
+            let live_after = self.ctrl.router.live().to_vec();
+            for (l, &bits) in self.ctrl.layer_weight_bits.iter().enumerate() {
+                let old = shard_owner(&live_before, l);
+                let new = shard_owner(&live_after, l);
+                if old != new {
+                    self.ctrl.ledger.record_weight_push(old, new, bits);
+                }
+            }
+        }
+        let mut moved = 0u64;
+        for id in self.ctrl.router.keys_on(node) {
+            let to = self
+                .ctrl
+                .router
+                .ring()
+                .candidates(id)
+                .into_iter()
+                .find(|&n| self.ctrl.router.has_capacity(n))
+                .ok_or_else(|| anyhow!("fleet is full: cannot drain node {node}"))?;
+            let export = loop {
+                match self.nodes[node].try_export_session(id)? {
+                    Some(e) => break e,
+                    // A window of this session is on a worker; its commit
+                    // is imminent (the node routes no new work).
+                    None => std::thread::yield_now(),
+                }
+            };
+            let bits = export.state_bits(&self.ctrl.tiers[export.tier]);
+            self.nodes[to].import_session(export)?;
+            self.ctrl.router.repin(id, to)?;
+            self.ctrl.ledger.record_migration(node, to, bits);
+            moved += 1;
+        }
+        self.ctrl.ledger.leaves += 1;
+        Ok(moved)
+    }
+
+    /// One autoscaler tick: activate a standby node when mean pinned
+    /// sessions per live node exceed the spec watermark (and the spec
+    /// allows growth). Returns the joined node id, if any.
+    pub fn maybe_scale(&mut self) -> Result<Option<usize>> {
+        let spec = &self.ctrl.spec;
+        if spec.max_nodes == 0 {
+            return Ok(None);
+        }
+        let live = self.ctrl.router.live().len();
+        if live >= spec.max_nodes.min(self.nodes.len()) {
+            return Ok(None);
+        }
+        if self.ctrl.router.total_pinned() > spec.scale_high_sessions * live {
+            return self.join().map(Some);
+        }
+        Ok(None)
+    }
+
+    /// Wait until every replica's queue is empty and no window is in
+    /// flight (first error surfaces).
+    pub fn drain(&mut self) -> Result<()> {
+        for node in self.nodes {
+            node.drain()?;
+        }
+        Ok(())
+    }
+}
+
+/// Fleet-wide results: every node's serve report merged, plus the
+/// interconnect ledger.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Replicas spawned (boot + autoscale headroom).
+    pub nodes_total: usize,
+    /// Nodes on the ring at report time.
+    pub nodes_live: usize,
+    /// Sessions opened per node id (standby nodes report 0).
+    pub per_node_sessions: Vec<u64>,
+    /// Sessions opened fleet-wide.
+    pub sessions: u64,
+    /// Sessions whose final window executed.
+    pub finished_sessions: u64,
+    /// Windows executed fleet-wide.
+    pub windows_done: u64,
+    /// Windows shed fleet-wide.
+    pub windows_shed: u64,
+    /// Events dropped at ingest fleet-wide.
+    pub events_dropped: u64,
+    /// Sessions that early-exited on the confidence bound.
+    pub early_exits: u64,
+    /// Precision-controller tier moves fleet-wide.
+    pub precision_shifts: u64,
+    /// Completed session migrations.
+    pub migrations: u64,
+    /// Node joins (including boot activations).
+    pub joins: u64,
+    /// Node leaves.
+    pub leaves: u64,
+    /// Total interconnect traffic, bits.
+    pub link_bits: u64,
+    /// Interconnect bits spent on weight distribution.
+    pub weight_push_bits: u64,
+    /// Interconnect bits spent on session-state moves.
+    pub vmem_move_bits: u64,
+    /// Interconnect bits spent on shard-boundary spike planes.
+    pub boundary_bits: u64,
+    /// Interconnect energy, pJ.
+    pub link_energy_pj: f64,
+    /// Per-window latency merged across nodes.
+    pub latency: LatencyStats,
+    /// Merged model metrics (node DRAM pricing included; link energy
+    /// folded into `energy.movement_pj`).
+    pub metrics: RunMetrics,
+    /// Wall-clock the report covers, seconds.
+    pub wallclock_s: f64,
+}
+
+impl FleetReport {
+    /// Mean sessions per live node.
+    pub fn sessions_per_node(&self) -> f64 {
+        self.sessions as f64 / self.nodes_live.max(1) as f64
+    }
+
+    /// Total modeled energy per finished session, pJ (link included).
+    pub fn energy_per_session_pj(&self) -> f64 {
+        self.metrics.energy.total_pj() / self.finished_sessions.max(1) as f64
+    }
+
+    /// Migration traffic per finished session, bits.
+    pub fn migration_bits_per_session(&self) -> f64 {
+        self.vmem_move_bits as f64 / self.finished_sessions.max(1) as f64
+    }
+
+    /// Render a report block.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fleet              {} live of {} spawned nodes, {:.1} sessions/node\n",
+            self.nodes_live,
+            self.nodes_total,
+            self.sessions_per_node(),
+        ));
+        out.push_str(&format!(
+            "sessions           {} opened, {} finished; {} windows done, {} shed\n",
+            self.sessions, self.finished_sessions, self.windows_done, self.windows_shed,
+        ));
+        out.push_str(&format!(
+            "rebalancing        {} migrations ({} bits vmem), {} joins, {} leaves\n",
+            self.migrations, self.vmem_move_bits, self.joins, self.leaves,
+        ));
+        out.push_str(&format!(
+            "interconnect       {} bits ({} weight-push, {} boundary) = {:.1} nJ\n",
+            self.link_bits,
+            self.weight_push_bits,
+            self.boundary_bits,
+            self.link_energy_pj / 1e3,
+        ));
+        out.push_str(&format!(
+            "energy/session     {:.1} nJ (fleet total {:.1} nJ)\n",
+            self.energy_per_session_pj() / 1e3,
+            self.metrics.energy.total_pj() / 1e3,
+        ));
+        out.push_str(&format!("window latency     {}\n", self.latency.line()));
+        out
+    }
+}
+
+/// What a fleet open-loop drive observed.
+#[derive(Debug, Clone)]
+pub struct FleetLoadReport {
+    /// Mean offered session arrival rate (wall sessions/s).
+    pub offered_sessions_per_sec: f64,
+    /// Offered micro-window rate fleet-wide.
+    pub offered_windows_per_sec: f64,
+    /// Windows executed per wall second across the fleet.
+    pub goodput_windows_per_sec: f64,
+    /// Wall time of the whole drive.
+    pub drive_wall_s: f64,
+    /// Worst schedule lateness (generator fell behind its timeline).
+    pub max_lag_s: f64,
+    /// The fleet's own report for the run.
+    pub fleet: FleetReport,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::gesture_traffic;
+    use crate::serve::ArrivalProcess;
+    use crate::snn::{LayerSpec, Resolution};
+
+    fn small_net() -> Network {
+        let r = Resolution::new(4, 9);
+        Network::new(
+            "fleet-test",
+            vec![
+                LayerSpec::conv("C1", 2, 4, 3, 4, 1, 48, 48, r),
+                LayerSpec::fc("F1", 4 * 12 * 12, 10, Resolution::new(5, 10)),
+            ],
+            16,
+        )
+    }
+
+    fn fleet(spec: FleetSpec, cfg_mut: impl FnOnce(&mut ServiceConfig)) -> Fleet {
+        let mut cfg = ServiceConfig::nominal(1);
+        cfg_mut(&mut cfg);
+        Fleet::native(small_net(), 0xF1EE7, 2, Policy::HsOpt, cfg, spec).unwrap()
+    }
+
+    #[test]
+    fn replicated_boot_broadcasts_the_weight_image_per_node() {
+        let f = fleet(FleetSpec { nodes: 2, ..FleetSpec::default() }, |_| {});
+        let per_node = small_net().total_weight_bits();
+        assert_eq!(f.ledger().weight_push_bits, 2 * per_node);
+        assert_eq!(f.ledger().joins, 2);
+        assert_eq!(f.live_nodes(), vec![0, 1]);
+        // Both pushes came from the controller.
+        assert_eq!(f.ledger().links[&(CONTROLLER, 0)], per_node);
+        assert_eq!(f.ledger().links[&(CONTROLLER, 1)], per_node);
+    }
+
+    #[test]
+    fn sharded_join_rehomes_only_moved_layers() {
+        let mut f = fleet(
+            FleetSpec {
+                nodes: 1,
+                max_nodes: 2,
+                placement: Placement::LayerSharded,
+                ..FleetSpec::default()
+            },
+            |_| {},
+        );
+        let net = small_net();
+        let total = net.total_weight_bits();
+        // Boot: the single node owns every layer, all pushed from the
+        // controller.
+        assert_eq!(f.ledger().weight_push_bits, total);
+        f.handle().join().unwrap();
+        // Join: round-robin over {0, 1} re-homes odd layers to node 1.
+        let moved: u64 = net
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(l, _)| l % 2 == 1)
+            .map(|(_, layer)| layer.weight_bits())
+            .sum();
+        assert!(moved > 0);
+        assert_eq!(f.ledger().weight_push_bits, total + moved);
+        assert_eq!(f.ledger().links[&(0, 1)], moved);
+    }
+
+    #[test]
+    fn opens_route_sticky_and_spread() {
+        let mut f = fleet(FleetSpec { nodes: 4, ..FleetSpec::default() }, |_| {});
+        let mut h = f.handle();
+        let mut nodes_used = std::collections::BTreeSet::new();
+        for id in 0..32u64 {
+            let node = h.open_session(id, None).unwrap();
+            assert_eq!(h.session_node(id), Some(node));
+            nodes_used.insert(node);
+        }
+        assert!(nodes_used.len() >= 2, "32 sessions all landed on one node");
+        // A duplicate open errors without disturbing the pin.
+        let pinned = f.session_node(3).unwrap();
+        assert!(f.handle().open_session(3, None).is_err());
+        assert_eq!(f.session_node(3), Some(pinned));
+        let total: usize = f.live_nodes().iter().map(|&n| f.node(n).session_count()).sum();
+        assert_eq!(total, 32);
+    }
+
+    #[test]
+    fn migration_moves_queued_windows_and_prices_the_checkpoint() {
+        let mut f = fleet(FleetSpec { nodes: 2, ..FleetSpec::default() }, |_| {});
+        let traffic = &gesture_traffic(1, 42, 0)[0];
+        let (from, to) = {
+            let mut h = f.handle();
+            let from = h.open_session(7, traffic.label).unwrap();
+            h.ingest(7, &traffic.events).unwrap();
+            h.close_session(7, traffic.end_us).unwrap();
+            let to = h.live_nodes().into_iter().find(|&n| n != from).unwrap();
+            assert!(h.migrate_session(7, to).unwrap());
+            (from, to)
+        };
+        assert_eq!(f.session_node(7), Some(to));
+        assert_eq!(f.node(from).session_count(), 0);
+        assert_eq!(f.ledger().migrations, 1);
+        // Tier-0 checkpoint: every neuron at its layer's membrane width.
+        let expected: u64 = small_net()
+            .layers
+            .iter()
+            .map(|l| l.num_neurons() as u64 * l.res.p_bits as u64)
+            .sum();
+        assert_eq!(f.ledger().vmem_move_bits, expected);
+        // The queued windows traveled: the run executes them on `to`.
+        f.run_with(|h| h.drain()).unwrap();
+        let res = f.session_result(7).unwrap();
+        assert!(res.finished);
+        assert!(res.windows_done > 0);
+    }
+
+    #[test]
+    fn watermark_autoscale_joins_and_rebalances() {
+        let mut f = fleet(
+            FleetSpec { nodes: 1, max_nodes: 2, scale_high_sessions: 2, ..FleetSpec::default() },
+            |_| {},
+        );
+        assert_eq!(f.live_nodes(), vec![0]);
+        let mut h = f.handle();
+        for id in 0..4u64 {
+            h.open_session(id, None).unwrap();
+            h.maybe_scale().unwrap();
+        }
+        assert_eq!(h.live_nodes(), vec![0, 1], "3rd open crosses 2/node watermark");
+        // At the ceiling the autoscaler holds.
+        assert_eq!(h.maybe_scale().unwrap(), None);
+        drop(h);
+        assert_eq!(f.ledger().joins, 2);
+        // Pins and physical session placement agree after rebalancing,
+        // and every migrated checkpoint was priced at the tier-0 width.
+        assert_eq!(f.node(0).session_count() + f.node(1).session_count(), 4);
+        assert_eq!(f.node(1).session_count(), f.router().load(1));
+        let per_session: u64 = small_net()
+            .layers
+            .iter()
+            .map(|l| l.num_neurons() as u64 * l.res.p_bits as u64)
+            .sum();
+        assert_eq!(f.ledger().vmem_move_bits, f.ledger().migrations * per_session);
+    }
+
+    #[test]
+    fn leave_drains_all_sessions_to_survivors() {
+        let mut f = fleet(FleetSpec { nodes: 2, ..FleetSpec::default() }, |_| {});
+        let mut h = f.handle();
+        for id in 0..8u64 {
+            h.open_session(id, None).unwrap();
+        }
+        let victim = 1usize;
+        let had = h.node(victim).session_count() as u64;
+        let moved = h.leave(victim).unwrap();
+        assert_eq!(moved, had);
+        assert_eq!(h.live_nodes(), vec![0]);
+        assert_eq!(h.node(victim).session_count(), 0);
+        assert!(h.leave(0).is_err(), "cannot drain the last node");
+        drop(h);
+        assert_eq!(f.node(0).session_count(), 8);
+    }
+
+    #[test]
+    fn open_loop_drive_finishes_sessions_across_the_fleet() {
+        let mut f = fleet(FleetSpec { nodes: 2, ..FleetSpec::default() }, |c| {
+            c.workers = 1;
+        });
+        let traffic = gesture_traffic(4, 9, 0);
+        let cfg = LoadConfig {
+            arrivals: ArrivalProcess::Poisson { rate_per_sec: 400.0 },
+            time_scale: 50.0,
+            chunk: 512,
+            seed: 5,
+        };
+        let report = f.drive_open_loop(&traffic, &cfg).unwrap();
+        assert_eq!(report.fleet.sessions, 4);
+        assert_eq!(report.fleet.finished_sessions, 4);
+        assert!(report.fleet.windows_done > 0);
+        assert!(report.goodput_windows_per_sec > 0.0);
+        assert!(report.fleet.link_bits > 0, "boot weight pushes are on the ledger");
+        assert!(
+            report.fleet.metrics.energy.movement_pj >= report.fleet.link_energy_pj,
+            "link energy folds into movement"
+        );
+        assert!(report.fleet.report().contains("sessions/node"));
+        // Telemetry mirrors the ledger.
+        let reg = f.metrics();
+        assert_eq!(
+            reg.counter_total("flexspim_fleet_link_bits_total"),
+            report.fleet.link_bits
+        );
+    }
+}

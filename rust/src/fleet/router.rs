@@ -1,0 +1,401 @@
+//! Consistent-hash session routing for the fleet tier.
+//!
+//! Sessions are sticky: the first `route` of a key pins it to a node and
+//! every later lookup returns the same node until an explicit `repin`
+//! (migration) or `unpin`. Placement comes from a consistent-hash ring
+//! with virtual nodes ([`HashRing`]), so node joins and leaves remap only
+//! the keys adjacent to the moved ring points (~1/N of the key space per
+//! join) instead of reshuffling everything — which matters here because a
+//! remapped key is not a cache miss but a *live session migration* whose
+//! vmem checkpoint moves over the inter-node link (priced by
+//! [`super::ledger::FleetLedger`]).
+//!
+//! Per-node capacity is enforced at pin time: a full node spills the new
+//! session to the next distinct node in ring order, preserving ring
+//! locality as far as the capacity allows.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, ensure};
+
+use crate::util::rng::splitmix64;
+use crate::Result;
+
+/// Hash a session key onto the ring.
+fn hash_key(key: u64) -> u64 {
+    let mut s = key;
+    splitmix64(&mut s)
+}
+
+/// A consistent-hash ring with `vnodes` virtual points per node.
+#[derive(Debug, Clone, Default)]
+pub struct HashRing {
+    vnodes: usize,
+    /// Ring points, sorted by (hash, node).
+    points: Vec<(u64, usize)>,
+    /// Live node ids, ascending.
+    live: Vec<usize>,
+}
+
+impl HashRing {
+    /// An empty ring with `vnodes` virtual points per node.
+    pub fn new(vnodes: usize) -> HashRing {
+        HashRing { vnodes: vnodes.max(1), points: Vec::new(), live: Vec::new() }
+    }
+
+    /// Live node ids, ascending.
+    pub fn live(&self) -> &[usize] {
+        &self.live
+    }
+
+    /// Number of live nodes.
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    /// No live nodes.
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// Whether `node` is on the ring.
+    pub fn contains(&self, node: usize) -> bool {
+        self.live.binary_search(&node).is_ok()
+    }
+
+    /// Add `node`'s virtual points to the ring (no-op when present).
+    pub fn add(&mut self, node: usize) {
+        if self.contains(node) {
+            return;
+        }
+        // Each node seeds its own splitmix64 stream, so a node's points
+        // are stable across joins/leaves of *other* nodes — the property
+        // consistent hashing is for.
+        let mut s = 0x9E37_79B9_7F4A_7C15u64 ^ (node as u64).wrapping_mul(0x100_0000_01B3);
+        for _ in 0..self.vnodes {
+            self.points.push((splitmix64(&mut s), node));
+        }
+        self.points.sort_unstable();
+        let pos = self.live.binary_search(&node).unwrap_err();
+        self.live.insert(pos, node);
+    }
+
+    /// Remove `node`'s virtual points (no-op when absent).
+    pub fn remove(&mut self, node: usize) {
+        self.points.retain(|&(_, n)| n != node);
+        if let Ok(pos) = self.live.binary_search(&node) {
+            self.live.remove(pos);
+        }
+    }
+
+    /// The ring successor of `key`: the node owning the first point at or
+    /// past the key's hash (wrapping). `None` on an empty ring.
+    pub fn owner(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = hash_key(key);
+        let idx = self.points.partition_point(|&(p, _)| p < h);
+        let (_, node) = self.points[idx % self.points.len()];
+        Some(node)
+    }
+
+    /// All live nodes in ring order starting at the key's successor —
+    /// the capacity spill-over sequence (first entry == [`Self::owner`]).
+    pub fn candidates(&self, key: u64) -> Vec<usize> {
+        if self.points.is_empty() {
+            return Vec::new();
+        }
+        let h = hash_key(key);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let mut out = Vec::with_capacity(self.live.len());
+        for i in 0..self.points.len() {
+            let (_, node) = self.points[(start + i) % self.points.len()];
+            if !out.contains(&node) {
+                out.push(node);
+                if out.len() == self.live.len() {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Sticky session router: a [`HashRing`] plus the pin table and per-node
+/// capacity bookkeeping. Pure placement logic — no I/O, no services —
+/// so rebalancing decisions are unit-testable; [`super::Fleet`] executes
+/// the migrations this router plans.
+#[derive(Debug, Clone)]
+pub struct SessionRouter {
+    ring: HashRing,
+    /// Sticky sessions per node; `0` = unbounded.
+    capacity: usize,
+    /// Session key → pinned node.
+    pins: BTreeMap<u64, usize>,
+    /// Pinned sessions per live node.
+    loads: BTreeMap<usize, usize>,
+}
+
+impl SessionRouter {
+    /// An empty router over a fresh ring.
+    pub fn new(vnodes: usize, capacity: usize) -> SessionRouter {
+        SessionRouter {
+            ring: HashRing::new(vnodes),
+            capacity,
+            pins: BTreeMap::new(),
+            loads: BTreeMap::new(),
+        }
+    }
+
+    /// The underlying ring (read-only).
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    /// Live node ids, ascending.
+    pub fn live(&self) -> &[usize] {
+        self.ring.live()
+    }
+
+    /// Whether `node` is live.
+    pub fn contains(&self, node: usize) -> bool {
+        self.ring.contains(node)
+    }
+
+    /// Pinned sessions on `node`.
+    pub fn load(&self, node: usize) -> usize {
+        self.loads.get(&node).copied().unwrap_or(0)
+    }
+
+    /// Total pinned sessions across the fleet.
+    pub fn total_pinned(&self) -> usize {
+        self.pins.len()
+    }
+
+    /// Whether `node` can accept one more pinned session.
+    pub fn has_capacity(&self, node: usize) -> bool {
+        self.capacity == 0 || self.load(node) < self.capacity
+    }
+
+    /// Add a node to the ring (routable immediately).
+    pub fn add_node(&mut self, node: usize) {
+        self.ring.add(node);
+        self.loads.entry(node).or_insert(0);
+    }
+
+    /// Remove a node from the ring. Its pins stay in the table (the
+    /// sessions still live on that node!) until the caller migrates them
+    /// with [`Self::repin`] — a removed node routes no *new* sessions.
+    pub fn remove_node(&mut self, node: usize) {
+        self.ring.remove(node);
+    }
+
+    /// Route `key`: return its pinned node, or pin it to the first node
+    /// in ring order with spare capacity. Errors when no live node has
+    /// room.
+    pub fn route(&mut self, key: u64) -> Result<usize> {
+        if let Some(&node) = self.pins.get(&key) {
+            return Ok(node);
+        }
+        ensure!(!self.ring.is_empty(), "fleet has no live nodes");
+        for node in self.ring.candidates(key) {
+            if self.has_capacity(node) {
+                self.pins.insert(key, node);
+                *self.loads.entry(node).or_insert(0) += 1;
+                return Ok(node);
+            }
+        }
+        bail!(
+            "fleet is full: every live node holds its {} pinned sessions",
+            self.capacity
+        )
+    }
+
+    /// The node `key` is pinned to, if any.
+    pub fn lookup(&self, key: u64) -> Option<usize> {
+        self.pins.get(&key).copied()
+    }
+
+    /// Move an existing pin to `to` (migration bookkeeping).
+    pub fn repin(&mut self, key: u64, to: usize) -> Result<()> {
+        let from = *self
+            .pins
+            .get(&key)
+            .ok_or_else(|| anyhow!("session {key} is not pinned"))?;
+        if from == to {
+            return Ok(());
+        }
+        if let Some(l) = self.loads.get_mut(&from) {
+            *l = l.saturating_sub(1);
+        }
+        *self.loads.entry(to).or_insert(0) += 1;
+        self.pins.insert(key, to);
+        Ok(())
+    }
+
+    /// Drop a pin (session removed from the fleet).
+    pub fn unpin(&mut self, key: u64) {
+        if let Some(node) = self.pins.remove(&key) {
+            if let Some(l) = self.loads.get_mut(&node) {
+                *l = l.saturating_sub(1);
+            }
+        }
+    }
+
+    /// All keys pinned to `node`, ascending.
+    pub fn keys_on(&self, node: usize) -> Vec<u64> {
+        self.pins
+            .iter()
+            .filter(|&(_, &n)| n == node)
+            .map(|(&k, _)| k)
+            .collect()
+    }
+
+    /// Keys a fresh join of `node` should attract: pinned elsewhere but
+    /// now ring-owned by `node`. Consistent hashing keeps this to ~1/N of
+    /// the pinned keys; everything else stays sticky where it is.
+    pub fn rebalance_keys_for(&self, node: usize) -> Vec<u64> {
+        self.pins
+            .iter()
+            .filter(|&(&k, &pinned)| pinned != node && self.ring.owner(k) == Some(node))
+            .map(|(&k, _)| k)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring4() -> HashRing {
+        let mut r = HashRing::new(16);
+        for n in 0..4 {
+            r.add(n);
+        }
+        r
+    }
+
+    #[test]
+    fn ring_spreads_keys_across_nodes() {
+        let r = ring4();
+        let mut counts = [0usize; 4];
+        for k in 0..1000u64 {
+            counts[r.owner(k).unwrap()] += 1;
+        }
+        for (n, &c) in counts.iter().enumerate() {
+            assert!(c > 50, "node {n} owns only {c}/1000 keys — ring badly skewed");
+        }
+    }
+
+    #[test]
+    fn candidates_start_at_owner_and_cover_all_live_nodes() {
+        let r = ring4();
+        for k in 0..50u64 {
+            let c = r.candidates(k);
+            assert_eq!(c[0], r.owner(k).unwrap());
+            let mut sorted = c.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "all live nodes, each once");
+        }
+    }
+
+    #[test]
+    fn removal_only_remaps_the_removed_nodes_keys() {
+        let r = ring4();
+        let before: Vec<usize> = (0..500u64).map(|k| r.owner(k).unwrap()).collect();
+        let mut r2 = r.clone();
+        r2.remove(2);
+        for (k, &owner) in before.iter().enumerate() {
+            if owner != 2 {
+                assert_eq!(
+                    r2.owner(k as u64),
+                    Some(owner),
+                    "key {k} moved although node 2 never owned it"
+                );
+            } else {
+                assert_ne!(r2.owner(k as u64), Some(2));
+            }
+        }
+    }
+
+    #[test]
+    fn routing_is_sticky() {
+        let mut router = SessionRouter::new(16, 0);
+        for n in 0..3 {
+            router.add_node(n);
+        }
+        let first = router.route(42).unwrap();
+        // Ring churn does not move an existing pin.
+        router.add_node(3);
+        assert_eq!(router.route(42).unwrap(), first);
+        assert_eq!(router.lookup(42), Some(first));
+        assert_eq!(router.load(first), 1);
+    }
+
+    #[test]
+    fn capacity_spills_to_ring_successors_then_errors() {
+        let mut router = SessionRouter::new(16, 1);
+        router.add_node(0);
+        router.add_node(1);
+        let a = router.route(1).unwrap();
+        let b = router.route(2).unwrap();
+        assert_ne!(a, b, "second session must spill past the full node");
+        let err = router.route(3).unwrap_err();
+        assert!(format!("{err}").contains("fleet is full"), "got: {err}");
+        // Unpinning frees the slot.
+        router.unpin(1);
+        assert_eq!(router.route(3).unwrap(), a);
+    }
+
+    #[test]
+    fn repin_moves_load_and_keeps_stickiness() {
+        let mut router = SessionRouter::new(16, 0);
+        router.add_node(0);
+        router.add_node(1);
+        let from = router.route(9).unwrap();
+        let to = 1 - from;
+        router.repin(9, to).unwrap();
+        assert_eq!(router.lookup(9), Some(to));
+        assert_eq!(router.load(from), 0);
+        assert_eq!(router.load(to), 1);
+        assert!(router.repin(77, 0).is_err(), "unknown key");
+    }
+
+    #[test]
+    fn join_rebalance_targets_only_newly_owned_keys() {
+        let mut router = SessionRouter::new(16, 0);
+        for n in 0..3 {
+            router.add_node(n);
+        }
+        for k in 0..200u64 {
+            router.route(k).unwrap();
+        }
+        router.add_node(3);
+        let moved = router.rebalance_keys_for(3);
+        assert!(!moved.is_empty(), "a join must attract some keys");
+        assert!(
+            moved.len() < 150,
+            "consistent hashing moves ~1/N, got {}/200",
+            moved.len()
+        );
+        for &k in &moved {
+            assert_eq!(router.ring().owner(k), Some(3));
+            assert_ne!(router.lookup(k), Some(3), "not yet migrated");
+        }
+        // Keys the new node does not own stay put.
+        for k in 0..200u64 {
+            if !moved.contains(&k) {
+                assert_ne!(router.ring().owner(k), Some(3));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_ring_routes_nothing() {
+        let mut router = SessionRouter::new(8, 0);
+        assert!(router.route(1).is_err());
+        assert_eq!(router.ring().owner(1), None);
+        assert!(router.ring().candidates(1).is_empty());
+    }
+}

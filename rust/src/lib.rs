@@ -36,6 +36,7 @@ pub mod deploy;
 pub mod energy;
 pub mod events;
 pub mod figures;
+pub mod fleet;
 pub mod runtime;
 pub mod serve;
 pub mod snn;

@@ -11,6 +11,9 @@
 //!                    [--autoscale] [--autoscale-max W] [--slo-p99-ms X]
 //!                    [--precision] [--precision-max-delta D]
 //!                    [--precision-p99-ms X] [--precision-margin M]
+//! flexspim fleet     [--config F] [--sessions N] [--nodes N] [--max-nodes N]
+//!                    [--placement replicated|layer-sharded] [--rate R]
+//!                    [--time-scale X] [--seed S] [--jitter-us J]
 //! flexspim train     [--config F] [--steps N] [--lr X] [--seed S] [--out PATH]
 //! flexspim map       [--config F] [--macros M]
 //! flexspim simulate  [--config F] [--wbits W] [--pbits P] [--nc C]
@@ -18,7 +21,7 @@
 //! flexspim sweep     [--config F] [--samples N] [--seed S] [--macros M]
 //! ```
 //!
-//! `run`, `serve`, `map`, and `sweep` all build one
+//! `run`, `serve`, `fleet`, `map`, and `sweep` all build one
 //! [`flexspim::deploy::DeploymentSpec`]: start from `--config file.toml`
 //! (or the subcommand's default preset), overlay the CLI flags, then
 //! materialize the tier they need. `train` and `simulate` follow the same
@@ -119,6 +122,27 @@ fn specs() -> Vec<Spec> {
             name: "precision-margin",
             takes_value: true,
             help: "serve: margin below this raises a resolution tier (implies --precision)",
+        },
+        Spec { name: "nodes", takes_value: true, help: "fleet: replica nodes at boot" },
+        Spec {
+            name: "max-nodes",
+            takes_value: true,
+            help: "fleet: autoscale-join ceiling (0 = no autoscale)",
+        },
+        Spec {
+            name: "placement",
+            takes_value: true,
+            help: "fleet: replicated|layer-sharded weight placement",
+        },
+        Spec {
+            name: "rate",
+            takes_value: true,
+            help: "fleet: offered session arrivals per second (default 200)",
+        },
+        Spec {
+            name: "time-scale",
+            takes_value: true,
+            help: "fleet: intra-session replay speedup (default 10)",
         },
         Spec {
             name: "verbosity",
@@ -237,6 +261,15 @@ fn spec_from_args(args: &Args, default_preset: &str) -> Result<DeploymentSpec> {
         spec.precision.enabled = true;
         spec.precision.raise_margin = m;
     }
+    if let Some(n) = parsed("nodes")? {
+        spec.fleet.nodes = n;
+    }
+    if let Some(n) = parsed("max-nodes")? {
+        spec.fleet.max_nodes = n;
+    }
+    if let Some(p) = args.get("placement") {
+        spec.fleet.placement = flexspim::deploy::Placement::parse(p)?;
+    }
     if args.flag("telemetry") || args.flag("dump-telemetry") {
         spec.telemetry.enabled = true;
     }
@@ -270,7 +303,7 @@ fn main() -> Result<()> {
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     if args.flag("help") || cmd == "help" {
         log_info!("{}", usage("flexspim <command>", &specs()));
-        log_info!("commands: reproduce run serve train map simulate sweep");
+        log_info!("commands: reproduce run serve fleet train map simulate sweep");
         log_info!("presets:  {}", presets::names().join(" "));
         return Ok(());
     }
@@ -278,6 +311,7 @@ fn main() -> Result<()> {
         "reproduce" => reproduce(&args),
         "run" => run_inference(&args),
         "serve" => run_serve(&args),
+        "fleet" => run_fleet(&args),
         "train" => run_training(&args),
         "map" => run_map(&args),
         "simulate" => run_simulate(&args),
@@ -409,6 +443,65 @@ fn run_serve(args: &Args) -> Result<()> {
     if let Some(path) = args.get("trace") {
         std::fs::write(path, flexspim::telemetry::trace::chrome_trace_json())?;
         log_info!("wrote Chrome trace to {path} (load it in Perfetto or chrome://tracing)");
+    }
+    Ok(())
+}
+
+fn run_fleet(args: &Args) -> Result<()> {
+    use flexspim::serve::{gesture_traffic, ArrivalProcess, LoadConfig};
+
+    let sessions = args.get_or("sessions", 16usize);
+    let seed = args.get_or("seed", 42u64);
+    let jitter_us = args.get_or("jitter-us", 8_000u64);
+    let rate = args.get_or("rate", 200.0f64);
+    let time_scale = args.get_or("time-scale", 10.0f64);
+
+    let spec = spec_from_args(args, presets::FLEET_DEMO)?;
+    let deployment = spec.deploy()?;
+    let mut fleet = deployment.fleet()?;
+    let fs = fleet.spec().clone();
+    log_info!(
+        "fleet-serving {} on {} nodes ({} placement, {} vnodes/node, \
+         {:.0} pJ/bit link{}): {sessions} sessions at {rate:.0}/s, \
+         {} workers/node, time scale {time_scale:.0}x",
+        deployment.network().name,
+        fs.nodes,
+        fs.placement.key(),
+        fs.vnodes,
+        fs.link_pj_per_bit,
+        if fs.max_nodes > 0 {
+            format!(
+                ", autoscale to {} over {} sessions/node",
+                fs.max_nodes, fs.scale_high_sessions
+            )
+        } else {
+            String::new()
+        },
+        fleet.node(0).config().workers,
+    );
+    let traffic = gesture_traffic(sessions, seed ^ 0x7EA4_11FC, jitter_us);
+    let cfg = LoadConfig {
+        arrivals: ArrivalProcess::Poisson { rate_per_sec: rate },
+        time_scale,
+        chunk: 64,
+        seed,
+    };
+    let r = fleet.drive_open_loop(&traffic, &cfg)?;
+    log_info!(
+        "offered {:8.2} w/s  goodput {:8.2} w/s  max lag {:6.1} ms",
+        r.offered_windows_per_sec,
+        r.goodput_windows_per_sec,
+        1e3 * r.max_lag_s,
+    );
+    log_info!("{}", r.fleet.report());
+    if args.flag("dump-telemetry") {
+        // The fleet registry (per-link traffic, per-node session gauges)
+        // plus each live node's own serve registry.
+        log_info!("{}", fleet.metrics().prometheus_text());
+        for node in fleet.live_nodes() {
+            log_info!("{}", fleet.node(node).metrics().prometheus_text());
+        }
+        log_info!("TELEMETRY_JSON {}", fleet.metrics().snapshot().to_json());
     }
     Ok(())
 }

@@ -118,12 +118,11 @@ pub trait StepBackend {
     /// membrane state across the switch by realigning it into the new
     /// accumulator range ([`StateSnapshot::rescaled`]) — a serve-time
     /// precision change must not silently reset a session mid-stream.
-    /// [`super::native::NativeScnn`] implements this exactly. The PJRT
-    /// runner diverges (the AOT artifact is requantized host-side and the
-    /// device state reset); that is safe in the serve tier because every
-    /// window restores a rescaled checkpoint immediately after
-    /// reconfiguration, but direct mid-inference switches on PJRT lose
-    /// state.
+    /// Both backends honor this: [`super::native::NativeScnn`] rescales
+    /// its accumulators in place, and [`super::scnn::ScnnRunner`]
+    /// requantizes the AOT artifact's weights host-side and rescales its
+    /// host-resident vmem copy through the same `StateSnapshot::rescaled`
+    /// shift, so mid-inference switches keep state on PJRT too.
     fn set_resolutions(&mut self, res: &[(u32, u32)]);
 
     /// Copy out the persistent membrane state (a session checkpoint).

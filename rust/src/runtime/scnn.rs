@@ -30,6 +30,10 @@ pub struct ScnnRunner {
     /// Membrane state per layer (persisted across timesteps — output
     /// stationarity at the runtime level).
     vmems: Vec<Vec<i32>>,
+    /// Per-layer `(w_bits, p_bits)` the runner currently holds — the
+    /// "from" side of the host-side vmem rescale when
+    /// [`Self::set_resolutions`] switches resolutions under live state.
+    res: Vec<(u32, u32)>,
     /// Float source weights (for requantization).
     weight_file: WeightFile,
 }
@@ -74,7 +78,8 @@ impl ScnnRunner {
         }
         let (weights, qparams) = weight_file.quantize_default();
         let vmems = net.layers.iter().map(|l| vec![0i32; l.num_neurons()]).collect();
-        Ok(ScnnRunner { exe, net, weights, qparams, vmems, weight_file })
+        let res = net.layers.iter().map(|l| (l.res.w_bits, l.res.p_bits)).collect();
+        Ok(ScnnRunner { exe, net, weights, qparams, vmems, res, weight_file })
     }
 
     /// The workload description this runner mirrors.
@@ -82,12 +87,24 @@ impl ScnnRunner {
         &self.net
     }
 
-    /// Requantize all layers at explicit resolutions and reset state.
+    /// Requantize all layers at explicit resolutions, *preserving* the
+    /// persistent membrane state by a host-side rescale into the new
+    /// accumulator range ([`super::backend::StateSnapshot::rescaled`]) —
+    /// the same contract the native backend honors, so the adaptive
+    /// precision controller can switch a live session's tier mid-window
+    /// on PJRT too.
     pub fn set_resolutions(&mut self, res: &[(u32, u32)]) {
         let (w, q) = self.weight_file.quantize_at(res);
         self.weights = w;
         self.qparams = q;
-        self.reset();
+        let rescaled = super::backend::StateSnapshot { vmems: self.vmems_i64() }
+            .rescaled(&self.res, res);
+        for (dst, src) in self.vmems.iter_mut().zip(&rescaled.vmems) {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = s as i32;
+            }
+        }
+        self.res = res.to_vec();
     }
 
     /// Zero all membrane potentials (new inference).

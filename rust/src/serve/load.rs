@@ -134,14 +134,15 @@ impl Default for LoadConfig {
 
 /// One timeline item; `order` breaks due-time ties so the merged
 /// schedule is a deterministic total order (open before first chunk
-/// before close within a session).
-struct Scheduled {
-    due_s: f64,
-    order: u64,
-    action: Action,
+/// before close within a session). Crate-visible so the fleet driver
+/// ([`crate::fleet`]) can replay the same timeline through its router.
+pub(crate) struct Scheduled {
+    pub(crate) due_s: f64,
+    pub(crate) order: u64,
+    pub(crate) action: Action,
 }
 
-enum Action {
+pub(crate) enum Action {
     Open(usize),
     Ingest { session: usize, lo: usize, hi: usize },
     Close(usize),
@@ -170,7 +171,7 @@ pub struct LoadReport {
 }
 
 /// Build the merged per-session schedule for `traffic` under `cfg`.
-fn build_schedule(
+pub(crate) fn build_schedule(
     traffic: &[SessionTraffic],
     starts: &[f64],
     time_scale: f64,

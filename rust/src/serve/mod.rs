@@ -64,8 +64,8 @@ pub use ingest::{IngestConfig, MicroWindow, ReorderBuffer};
 pub use load::{drive_open_loop, ArrivalProcess, LoadConfig, LoadReport};
 pub use precision::{tiers_for, PrecisionConfig};
 pub use service::{
-    gesture_traffic, AutoscaleConfig, ServeReport, ServiceConfig, SessionResult, SessionTraffic,
-    StreamingService,
+    gesture_traffic, AutoscaleConfig, ServeReport, ServiceConfig, SessionExport, SessionResult,
+    SessionTraffic, StreamingService,
 };
 pub use session::{
     encode_window, encode_window_into, window_frames, EncodeScratch, QueuedWindow,

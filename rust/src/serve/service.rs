@@ -59,7 +59,7 @@ use crate::telemetry::{
 use crate::util::rng::Rng;
 use crate::Result;
 
-use super::ingest::MicroWindow;
+use super::ingest::{MicroWindow, ReorderBuffer};
 use super::precision::{tiers_for, PrecisionConfig, TIER_LABELS};
 use super::session::{
     encode_window_into, window_frames, EncodeScratch, QueuedWindow, SessionConfig,
@@ -1103,6 +1103,162 @@ impl StreamingService {
         })
     }
 
+    /// Open sessions on this node right now (the fleet router's capacity
+    /// and rebalance signal).
+    pub fn session_count(&self) -> usize {
+        self.state.lock().unwrap().sessions.len()
+    }
+
+    /// All open session ids, ascending.
+    pub fn session_ids(&self) -> Vec<u64> {
+        self.state.lock().unwrap().sessions.ids()
+    }
+
+    /// Pack a live session for migration to another node: remove it from
+    /// this service and return its portable state. Returns `Ok(None)`
+    /// while a window of the session is executing — its checkpoint is in
+    /// a worker's hands, so the caller retries after the commit (the
+    /// fleet rebalancer treats in-flight sessions as momentarily
+    /// unmovable). The session's residency share is released *without* a
+    /// DRAM spill: the state leaves over the inter-node link instead, and
+    /// the fleet ledger prices that move.
+    ///
+    /// Queued-but-unexecuted windows travel inside the export and are
+    /// re-admitted by [`Self::import_session`] under the target's own
+    /// admission control; their seqs leave this node's dispatch order
+    /// here so deterministic admission never stalls on a departed
+    /// session.
+    pub fn try_export_session(&self, id: u64) -> Result<Option<SessionExport>> {
+        let mut st = self.state.lock().unwrap();
+        ensure!(!st.shutdown, "service is shut down");
+        let st_ref = &mut *st;
+        let seqs: Vec<u64> = {
+            let s = st_ref
+                .sessions
+                .get(id)
+                .ok_or_else(|| anyhow!("unknown session {id}"))?;
+            if s.running {
+                return Ok(None);
+            }
+            s.queue.iter().map(|qw| qw.seq).collect()
+        };
+        // Un-admit the queued windows: their seqs leave the dispatch
+        // order and their slots return to the global queue bound. The
+        // session leaves the ready ring with them.
+        if let Some(pos) = st_ref.ready.iter().position(|&x| x == id) {
+            let _ = st_ref.ready.remove(pos);
+        }
+        for seq in &seqs {
+            st_ref.outstanding.remove(seq);
+        }
+        st_ref.queued_windows -= seqs.len();
+        let s = st_ref.sessions.remove(id).expect("looked up above");
+        drop(st);
+        // A sibling worker may have been waiting on one of the departed
+        // seqs in deterministic-admission mode.
+        self.signal.notify_all();
+        Ok(Some(SessionExport {
+            id: s.id,
+            label: s.label,
+            ingest: s.ingest,
+            state: s.state,
+            queued: s.queue.into_iter().map(|qw| qw.window).collect(),
+            rate: s.rate,
+            smoothed: s.smoothed,
+            windows_done: s.windows_done,
+            windows_shed: s.windows_shed,
+            totals: s.totals,
+            latency: s.latency,
+            wallclock_s: s.wallclock_s,
+            closed: s.closed,
+            finished: s.finished,
+            early_exited: s.early_exited,
+            windows_saved: s.windows_saved,
+            frames_saved: s.frames_saved,
+            tier: s.tier,
+        }))
+    }
+
+    /// Install a migrated session on this node (the receive side of a
+    /// fleet move): open its id, restore the packed state, and re-admit
+    /// the in-transit windows under this node's own admission control
+    /// (fresh seqs; an overloaded target sheds them exactly like local
+    /// arrivals). Errors if the id is already in use here or the packed
+    /// tier does not fit this service's tier table.
+    pub fn import_session(&self, export: SessionExport) -> Result<()> {
+        ensure!(
+            export.tier < self.tiers.len(),
+            "imported session tier {} outside this service's {}-tier table",
+            export.tier,
+            self.tiers.len()
+        );
+        let mut st = self.state.lock().unwrap();
+        ensure!(!st.shutdown, "service is shut down");
+        let st_ref = &mut *st;
+        st_ref.sessions.open(export.id, &self.plan.net, export.label)?;
+        {
+            let s = st_ref.sessions.get_mut(export.id).expect("just opened");
+            s.ingest = export.ingest;
+            s.state = export.state;
+            s.rate = export.rate;
+            s.smoothed = export.smoothed;
+            s.windows_done = export.windows_done;
+            s.windows_shed = export.windows_shed;
+            s.totals = export.totals;
+            s.latency = export.latency;
+            s.wallclock_s = export.wallclock_s;
+            s.closed = export.closed;
+            s.finished = export.finished;
+            s.early_exited = export.early_exited;
+            s.windows_saved = export.windows_saved;
+            s.frames_saved = export.frames_saved;
+            s.tier = export.tier;
+            s.last_activity = Instant::now();
+        }
+        self.admit_windows(st_ref, export.id, export.queued);
+        drop(st);
+        self.signal.notify_all();
+        Ok(())
+    }
+
+    /// Administratively move a session to resolution tier `tier`,
+    /// rescaling its membrane checkpoint across the switch exactly as
+    /// the precision controller does (the next dispatch reconfigures a
+    /// worker backend to match). The fleet's bit-identity pins use this
+    /// to replay identical tier trajectories on different nodes. Errors
+    /// on an unknown session, an out-of-range tier, or a session with a
+    /// window in flight.
+    pub fn set_session_tier(&self, id: u64, tier: usize) -> Result<()> {
+        ensure!(
+            tier < self.tiers.len(),
+            "tier {tier} outside this service's {}-tier table",
+            self.tiers.len()
+        );
+        let mut st = self.state.lock().unwrap();
+        ensure!(!st.shutdown, "service is shut down");
+        let shifted = {
+            let s = st
+                .sessions
+                .get_mut(id)
+                .ok_or_else(|| anyhow!("unknown session {id}"))?;
+            ensure!(!s.running, "session {id} has a window in flight");
+            if s.tier == tier {
+                false
+            } else {
+                s.state = s.state.rescaled(&self.tiers[s.tier], &self.tiers[tier]);
+                s.tier = tier;
+                true
+            }
+        };
+        if shifted {
+            st.precision_shifts += 1;
+            if self.cfg.telemetry.enabled {
+                self.tel.precision_shifts.inc();
+            }
+        }
+        Ok(())
+    }
+
     /// Assemble the service-wide report: per-session metrics merged in id
     /// order plus service-level residency traffic priced at the DRAM
     /// energy of the plan's system model.
@@ -1202,6 +1358,67 @@ pub struct SessionResult {
     pub finished: bool,
     /// This session's model metrics.
     pub metrics: RunMetrics,
+}
+
+/// A live session packed for migration to another node: everything a
+/// freshly built replica needs to continue the stream bit-identically.
+/// Produced by [`StreamingService::try_export_session`], consumed by
+/// [`StreamingService::import_session`]; the fleet ledger prices
+/// [`Self::state_bits`] as unicast inter-node traffic.
+#[derive(Debug, Clone)]
+pub struct SessionExport {
+    /// Session id (preserved across the move).
+    pub id: u64,
+    /// Ground-truth label, when known.
+    pub label: Option<usize>,
+    /// The reorder/jitter buffer, drop counters included.
+    pub ingest: ReorderBuffer,
+    /// Membrane checkpoint at `tier`'s resolution — the payload a
+    /// migration actually moves over the wire.
+    pub state: StateSnapshot,
+    /// Admitted-but-unexecuted windows, in admission order.
+    pub queued: Vec<MicroWindow>,
+    /// Accumulated classifier spike counts.
+    pub rate: Vec<i64>,
+    /// Smoothed per-class window rates.
+    pub smoothed: Vec<f64>,
+    /// Windows executed so far.
+    pub windows_done: u64,
+    /// Windows shed so far.
+    pub windows_shed: u64,
+    /// Accumulated model totals.
+    pub totals: WindowTotals,
+    /// Per-window latency record.
+    pub latency: LatencyStats,
+    /// Summed host wall-clock of executed windows.
+    pub wallclock_s: f64,
+    /// The client closed the stream.
+    pub closed: bool,
+    /// The final window has executed.
+    pub finished: bool,
+    /// The rolling classification cleared the early-exit bound.
+    pub early_exited: bool,
+    /// Windows skipped after early exit.
+    pub windows_saved: u64,
+    /// Frames those skipped windows would have executed.
+    pub frames_saved: u64,
+    /// Resolution tier the checkpoint is aligned to.
+    pub tier: usize,
+}
+
+impl SessionExport {
+    /// Bits a migration moves over the wire for this session's vmem
+    /// checkpoint under per-layer `(w_bits, p_bits)` resolutions `res` —
+    /// each layer's neurons at its membrane width, the fleet analogue of
+    /// the serve tier's DRAM-spill pricing.
+    pub fn state_bits(&self, res: &[(u32, u32)]) -> u64 {
+        self.state
+            .vmems
+            .iter()
+            .zip(res)
+            .map(|(v, &(_, p_bits))| v.len() as u64 * p_bits as u64)
+            .sum()
+    }
 }
 
 /// Result of a traffic run through [`StreamingService::serve`].

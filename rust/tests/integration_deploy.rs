@@ -125,6 +125,7 @@ fn shipped_configs_match_their_presets() {
     for (file, preset) in [
         ("configs/scnn_dvs_gesture.toml", presets::SCNN_DVS_GESTURE),
         ("configs/serve_demo.toml", presets::SERVE_DEMO),
+        ("configs/fleet_demo.toml", presets::FLEET_DEMO),
     ] {
         let from_file = DeploymentSpec::load(Path::new(file))
             .unwrap_or_else(|e| panic!("{file}: {e}"));
@@ -243,6 +244,37 @@ fn toml_topology_serves_without_recompiling() {
         assert!(s.prediction < 10);
         assert!(s.finished);
     }
+}
+
+#[test]
+fn shipped_fleet_config_materializes_and_serves() {
+    // The fleet acceptance path as data: the shipped config boots a
+    // 4-node fleet, boot weight broadcasts land on the ledger, and a
+    // small drive finishes sessions across the replicas.
+    let dep = DeploymentSpec::load(Path::new("configs/fleet_demo.toml"))
+        .expect("shipped fleet config loads")
+        .deploy()
+        .expect("deploys");
+    assert_eq!(dep.spec().fleet.nodes, 4);
+    assert_eq!(dep.spec().fleet.max_nodes, 8);
+    let mut fleet = dep.fleet().expect("fleet materializes");
+    assert_eq!(fleet.live_nodes(), vec![0, 1, 2, 3]);
+    assert_eq!(fleet.nodes().len(), 8, "autoscale standbys are pre-spawned");
+    assert_eq!(
+        fleet.ledger().weight_push_bits,
+        4 * dep.network().total_weight_bits()
+    );
+    let traffic = flexspim::serve::gesture_traffic(6, 23, 0);
+    let cfg = flexspim::serve::LoadConfig {
+        arrivals: flexspim::serve::ArrivalProcess::Poisson { rate_per_sec: 300.0 },
+        time_scale: 40.0,
+        chunk: 512,
+        seed: 11,
+    };
+    let report = fleet.drive_open_loop(&traffic, &cfg).expect("fleet drive");
+    assert_eq!(report.fleet.sessions, 6);
+    assert_eq!(report.fleet.finished_sessions, 6);
+    assert!(report.fleet.windows_done > 0);
 }
 
 #[test]

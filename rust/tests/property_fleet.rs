@@ -1,0 +1,196 @@
+//! Property: migrating a live session between fleet nodes is invisible
+//! to the math.
+//!
+//! A session snapshotted mid-stream (and mid-window: the cut lands at an
+//! arbitrary event index, so a partially accumulated window travels in
+//! the reorder buffer), moved over the link, and restored on a freshly
+//! built replica must finish **bit-identical** to the same stream served
+//! on one node — accumulated class rates, membrane checkpoint, window
+//! counts, tier, and prediction all equal. This holds across input
+//! densities up to 100 % activity (every pixel, both polarities, every
+//! frame) and across an administrative precision-tier switch performed
+//! just before the move, and it is the correctness anchor the fleet
+//! rebalancer (join/leave/autoscale) stands on.
+//!
+//! The ledger side is pinned too: each move is priced at the *exported*
+//! tier's membrane widths, so a tier-1 checkpoint is cheaper on the link
+//! than the tier-0 image.
+
+use flexspim::dataflow::Policy;
+use flexspim::deploy::FleetSpec;
+use flexspim::events::DvsEvent;
+use flexspim::fleet::Fleet;
+use flexspim::serve::{tiers_for, ServiceConfig, SessionResult, SessionTraffic, StreamingService};
+use flexspim::snn::{LayerSpec, Network, Resolution};
+use flexspim::util::rng::Rng;
+
+const SEED: u64 = 0xF1EE7;
+const MACROS: usize = 2;
+const SESSION: u64 = 11;
+
+fn small_net() -> Network {
+    let r = Resolution::new(4, 9);
+    Network::new(
+        "fleet-prop",
+        vec![
+            LayerSpec::conv("C1", 2, 4, 3, 4, 1, 48, 48, r),
+            LayerSpec::fc("F1", 4 * 12 * 12, 10, Resolution::new(5, 10)),
+        ],
+        16,
+    )
+}
+
+/// One worker, deterministic admission, and an ingest bound sized for a
+/// 100 %-density stream — every run of the same action sequence executes
+/// the same windows in the same order.
+fn cfg() -> ServiceConfig {
+    let mut cfg = ServiceConfig::nominal(1);
+    cfg.deterministic_admission = true;
+    cfg.session.max_pending_events = 1 << 18;
+    cfg
+}
+
+/// A synthetic stream at `density` ∈ (0, 1]: per frame, each of the
+/// 48×48×2 pixel/polarity sites fires with probability `density`
+/// (deterministically from `seed`); at 1.0 every site fires every frame.
+fn dense_traffic(density: f64, seed: u64) -> SessionTraffic {
+    let session = ServiceConfig::nominal(1).session;
+    let (w, h) = (session.width, session.height);
+    let frames = 16u64;
+    let mut rng = Rng::new(seed);
+    let mut events = Vec::new();
+    for f in 0..frames {
+        let t_us = f * session.step_us;
+        for y in 0..h {
+            for x in 0..w {
+                for polarity in [false, true] {
+                    if density >= 1.0 || (rng.below(1_000_000) as f64) < density * 1e6 {
+                        events.push(DvsEvent { t_us, x, y, polarity });
+                    }
+                }
+            }
+        }
+    }
+    SessionTraffic { id: SESSION, label: Some(3), end_us: frames * session.step_us, events }
+}
+
+/// Serve the whole stream on a single node: open → first half → drain →
+/// (optional tier switch) → second half → close → drain.
+fn run_reference(traffic: &SessionTraffic, tier_switch: Option<usize>) -> SessionResult {
+    let svc = StreamingService::native(small_net(), SEED, MACROS, Policy::HsOpt, cfg());
+    let half = traffic.events.len() / 2;
+    svc.run_with(|s| {
+        s.open_session(traffic.id, traffic.label)?;
+        s.ingest(traffic.id, &traffic.events[..half])?;
+        s.drain()?;
+        if let Some(tier) = tier_switch {
+            s.set_session_tier(traffic.id, tier)?;
+        }
+        s.ingest(traffic.id, &traffic.events[half..])?;
+        s.close_session(traffic.id, traffic.end_us)?;
+        s.drain()
+    })
+    .expect("reference run");
+    svc.session_result(traffic.id).expect("session exists")
+}
+
+/// Same action sequence on a 2-node fleet, with the session migrated to
+/// the other node between the halves (after the optional tier switch, so
+/// the checkpoint crosses the link at the *new* resolution).
+fn run_migrated(
+    traffic: &SessionTraffic,
+    tier_switch: Option<usize>,
+) -> (SessionResult, u64, u64) {
+    let mut fleet = Fleet::native(
+        small_net(),
+        SEED,
+        MACROS,
+        Policy::HsOpt,
+        cfg(),
+        FleetSpec { nodes: 2, ..FleetSpec::default() },
+    )
+    .expect("fleet builds");
+    fleet
+        .run_with(|h| {
+            let from = h.open_session(traffic.id, traffic.label)?;
+            let half = traffic.events.len() / 2;
+            h.ingest(traffic.id, &traffic.events[..half])?;
+            h.drain()?;
+            if let Some(tier) = tier_switch {
+                h.set_session_tier(traffic.id, tier)?;
+            }
+            let to = h.live_nodes().into_iter().find(|&n| n != from).expect("two nodes");
+            assert!(
+                h.migrate_session(traffic.id, to)?,
+                "nothing is in flight after drain, so the export must succeed"
+            );
+            assert_eq!(h.session_node(traffic.id), Some(to));
+            h.ingest(traffic.id, &traffic.events[half..])?;
+            h.close_session(traffic.id, traffic.end_us)?;
+            h.drain()
+        })
+        .expect("fleet run");
+    let result = fleet.session_result(traffic.id).expect("session exists");
+    (result, fleet.ledger().migrations, fleet.ledger().vmem_move_bits)
+}
+
+fn assert_bit_identical(reference: &SessionResult, migrated: &SessionResult, what: &str) {
+    assert_eq!(migrated.rate, reference.rate, "{what}: accumulated class rates diverged");
+    assert_eq!(migrated.state, reference.state, "{what}: membrane checkpoints diverged");
+    assert_eq!(migrated.windows_done, reference.windows_done, "{what}: window counts diverged");
+    assert_eq!(migrated.windows_shed, reference.windows_shed, "{what}: shed counts diverged");
+    assert_eq!(migrated.tier, reference.tier, "{what}: resolution tiers diverged");
+    assert_eq!(migrated.prediction, reference.prediction, "{what}: predictions diverged");
+    assert_eq!(
+        migrated.rolling_prediction, reference.rolling_prediction,
+        "{what}: rolling predictions diverged"
+    );
+    assert_eq!(migrated.finished, reference.finished, "{what}: completion states diverged");
+    assert!(reference.finished, "{what}: the stream must run to completion");
+    assert!(reference.windows_done > 0, "{what}: the stream must execute windows");
+}
+
+#[test]
+fn migration_is_bit_identical_up_to_full_activity() {
+    for &density in &[0.25, 0.5, 1.0] {
+        let traffic = dense_traffic(density, 0xD05E + (density * 100.0) as u64);
+        let reference = run_reference(&traffic, None);
+        let (migrated, migrations, moved_bits) = run_migrated(&traffic, None);
+        assert_bit_identical(&reference, &migrated, &format!("density {density}"));
+        assert_eq!(migrations, 1);
+        // The checkpoint crossed at tier 0: every neuron at its layer's
+        // deployed membrane width.
+        let expected: u64 = small_net()
+            .layers
+            .iter()
+            .map(|l| l.num_neurons() as u64 * l.res.p_bits as u64)
+            .sum();
+        assert_eq!(moved_bits, expected, "density {density}: tier-0 checkpoint mispriced");
+    }
+}
+
+#[test]
+fn migration_across_a_tier_switch_is_bit_identical() {
+    let traffic = dense_traffic(1.0, 0x71E5);
+    let reference = run_reference(&traffic, Some(1));
+    let (migrated, migrations, moved_bits) = run_migrated(&traffic, Some(1));
+    assert_bit_identical(&reference, &migrated, "tier switch");
+    assert_eq!(reference.tier, 1, "the administrative retier must stick");
+    assert_eq!(migrations, 1);
+    // The move was priced at the *tier-1* membrane widths — migrating a
+    // down-tiered session is cheaper on the link.
+    let tiers = tiers_for(&small_net(), cfg().precision.max_delta);
+    let tier1: u64 = small_net()
+        .layers
+        .iter()
+        .zip(&tiers[1])
+        .map(|(l, &(_, p_bits))| l.num_neurons() as u64 * p_bits as u64)
+        .sum();
+    let tier0: u64 = small_net()
+        .layers
+        .iter()
+        .map(|l| l.num_neurons() as u64 * l.res.p_bits as u64)
+        .sum();
+    assert_eq!(moved_bits, tier1, "tier-1 checkpoint mispriced");
+    assert!(tier1 < tier0, "a lower tier must shrink the checkpoint");
+}

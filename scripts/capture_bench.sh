@@ -12,6 +12,7 @@ cd "$(dirname "$0")/.."
 bench="${1:-serve_saturation}"
 out="BENCH_${bench#serve_}.json"
 [ "$bench" = "serve_saturation" ] && out="BENCH_saturation.json"
+[ "$bench" = "fleet_scale" ] && out="BENCH_fleet.json"
 
 run_log=$(mktemp)
 trap 'rm -f "$run_log"' EXIT
